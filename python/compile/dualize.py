@@ -1,0 +1,163 @@
+"""Python mirror of the paper's 2x2 dualization (Section 4.1).
+
+The Rust crate (rust/src/duality/) is the production implementation; this
+module exists so the build-time tests can (a) validate the math against
+brute-force enumeration and (b) build dense operands (J, a, q, beta) for
+the L2 model without round-tripping through Rust.
+
+Given a strictly positive 2x2 table P (proportional to p(x1, x2)):
+
+  Lemma 3: D = diag(1/p12, 1/p21); D P is symmetric.
+  Lemma 4: if det(D P) < 0, pre-multiply by the swap matrix S; S D P has
+           det >= 0 (and stays symmetric for the rescaled table -- see
+           `factorize_positive` for the exact order of operations used).
+  Lemma 2: a symmetric PSD positive table M factors as M = B B^T with
+           B = [[sqrt(m11) cos phi, sqrt(m11) sin phi],
+                [sqrt(m22) sin phi, sqrt(m22) cos phi]],
+           phi = pi/4 - arccos(m12 / sqrt(m11 m22)) / 2.
+  Theorem 2: from P = B C^T read off
+           alpha1 = log B21/B11          alpha2 = log C21/C11
+           q      = log (B12 C12)/(B11 C11)
+           beta1  = log (B22 B11)/(B12 B21)
+           beta2  = log (C22 C11)/(C12 C21)
+  so that p(x1,x2) ∝ sum_theta exp(alpha1 x1 + alpha2 x2 + q theta
+                                   + theta (beta1 x1 + beta2 x2)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+SWAP = np.array([[0.0, 1.0], [1.0, 0.0]])
+
+
+@dataclasses.dataclass(frozen=True)
+class DualFactor:
+    """Theorem-2 dual parameters of one pairwise factor."""
+
+    alpha1: float
+    alpha2: float
+    q: float
+    beta1: float
+    beta2: float
+
+    def table(self) -> np.ndarray:
+        """Reconstruct the (unnormalized) 2x2 table by summing out theta."""
+        p = np.zeros((2, 2))
+        for x1 in (0, 1):
+            for x2 in (0, 1):
+                for th in (0, 1):
+                    p[x1, x2] += np.exp(
+                        self.alpha1 * x1
+                        + self.alpha2 * x2
+                        + self.q * th
+                        + th * (self.beta1 * x1 + self.beta2 * x2)
+                    )
+        return p
+
+
+def _symmetric_sqrt_factor(m: np.ndarray) -> np.ndarray:
+    """Lemma 2: B with B B^T = m, for symmetric m with det >= 0, all entries > 0."""
+    m11, m22, m12 = m[0, 0], m[1, 1], m[0, 1]
+    ratio = np.clip(m12 / np.sqrt(m11 * m22), -1.0, 1.0)
+    # Remark 1: stable evaluation of cos/sin of phi = pi/4 - arccos(ratio)/2.
+    cos_phi = 0.5 * (np.sqrt(1.0 + ratio) + np.sqrt(1.0 - ratio))
+    sin_phi = 0.5 * (np.sqrt(1.0 + ratio) - np.sqrt(1.0 - ratio))
+    return np.array(
+        [
+            [np.sqrt(m11) * cos_phi, np.sqrt(m11) * sin_phi],
+            [np.sqrt(m22) * sin_phi, np.sqrt(m22) * cos_phi],
+        ]
+    )
+
+
+def factorize_positive(p: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Factor a strictly positive 2x2 table as P = B C^T, B, C > 0.
+
+    Follows Lemmas 2-4: rescale rows to make the table symmetric, swap rows
+    first if the determinant is negative, take the trigonometric square
+    root, then push the rescaling/permutation into B.
+    """
+    p = np.asarray(p, dtype=np.float64)
+    if p.shape != (2, 2) or np.any(p <= 0):
+        raise ValueError(f"need strictly positive 2x2 table, got {p!r}")
+
+    swapped = np.linalg.det(p) < 0
+    ps = SWAP @ p if swapped else p
+
+    # Lemma 3: D = diag(1/ps12, 1/ps21) makes D @ ps symmetric...
+    d = np.array([1.0 / ps[0, 1], 1.0 / ps[1, 0]])
+    m = ps * d[:, None]
+    # ...up to float noise; enforce exactly for the sqrt step.
+    m[1, 0] = m[0, 1]
+    if np.linalg.det(m) < 0:
+        # det(D P) has the sign of det(P) >= 0 post-swap; tiny negative
+        # values can only arise from roundoff on near-singular tables.
+        m[0, 1] = m[1, 0] = np.sqrt(m[0, 0] * m[1, 1]) * (1.0 - 1e-12)
+
+    bsym = _symmetric_sqrt_factor(m)  # m = bsym bsym^T
+    b = bsym / d[:, None]  # ps = b bsym^T
+    if swapped:
+        b = SWAP @ b  # p = (S b) bsym^T
+    return b, bsym
+
+
+def dualize_table(p: np.ndarray) -> DualFactor:
+    """Theorem 2: dual parameters of a strictly positive 2x2 table."""
+    b, c = factorize_positive(p)
+    return DualFactor(
+        alpha1=float(np.log(b[1, 0] / b[0, 0])),
+        alpha2=float(np.log(c[1, 0] / c[0, 0])),
+        q=float(np.log(b[0, 1] * c[0, 1] / (b[0, 0] * c[0, 0]))),
+        beta1=float(np.log(b[1, 1] * b[0, 0] / (b[0, 1] * b[1, 0]))),
+        beta2=float(np.log(c[1, 1] * c[0, 0] / (c[0, 1] * c[1, 0]))),
+    )
+
+
+def ising_table(beta: float) -> np.ndarray:
+    """exp(beta) on agreement, exp(-beta) on disagreement."""
+    return np.array(
+        [[np.exp(beta), np.exp(-beta)], [np.exp(-beta), np.exp(beta)]]
+    )
+
+
+def dense_operands(
+    n: int,
+    edges: list[tuple[int, int]],
+    tables: list[np.ndarray],
+    unary_logodds: np.ndarray | None = None,
+    n_pad: int | None = None,
+    f_pad: int | None = None,
+):
+    """Build the dense L2/L1 operands (J, a, q, b1, b2, v1, v2) from factors.
+
+    Mirrors rust/src/duality/model.rs::DualModel::dense_operands. Padded
+    columns get a = -40 (so sigmoid ~ 0 and padded variables stay 0), padded
+    factors get q = -40 / beta = 0 / endpoints 0 (inert).
+    """
+    f = len(edges)
+    n_pad = n_pad or n
+    f_pad = f_pad or f
+    assert n_pad >= n and f_pad >= f
+
+    j = np.zeros((f_pad, n_pad), dtype=np.float32)
+    a = np.full((1, n_pad), -40.0, dtype=np.float32)
+    a[0, :n] = 0.0 if unary_logodds is None else unary_logodds
+    q = np.full((f_pad,), -40.0, dtype=np.float32)
+    b1 = np.zeros((f_pad,), dtype=np.float32)
+    b2 = np.zeros((f_pad,), dtype=np.float32)
+    v1 = np.zeros((f_pad,), dtype=np.int32)
+    v2 = np.zeros((f_pad,), dtype=np.int32)
+
+    for i, ((e1, e2), table) in enumerate(zip(edges, tables)):
+        dual = dualize_table(table)
+        a[0, e1] += dual.alpha1
+        a[0, e2] += dual.alpha2
+        q[i] = dual.q
+        b1[i], b2[i] = dual.beta1, dual.beta2
+        v1[i], v2[i] = e1, e2
+        j[i, e1] += dual.beta1
+        j[i, e2] += dual.beta2
+    return j, a, q, b1, b2, v1, v2

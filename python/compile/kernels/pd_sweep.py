@@ -1,0 +1,108 @@
+"""Layer-1 Pallas kernel: the primal-dual x-update hot spot.
+
+The x-update of the primal-dual Gibbs sweep is, for every chain c and
+variable v in parallel,
+
+    field[c, v] = a[v] + sum_i theta[c, i] * J[i, v]
+    x[c, v]     = 1{ u[c, v] < sigmoid(field[c, v]) }
+
+i.e. a (C x F) @ (F x N) matmul followed by a cheap elementwise epilogue.
+On a real TPU the matmul runs on the MXU and the epilogue on the VPU; the
+kernel tiles the output into (C, BN) blocks and loops over F in BK chunks,
+staging HBM -> VMEM via BlockSpec. This is the TPU re-think of the paper's
+"one GPU thread per variable" formulation (see DESIGN.md
+section Hardware-Adaptation).
+
+The kernel MUST be lowered with interpret=True in this environment: the CPU
+PJRT plugin cannot execute Mosaic custom-calls. Numerics are validated
+against the pure-jnp oracle in ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. BN is the output-column tile (lane dimension on TPU,
+# multiple of 128); BK the contraction tile. The chain dimension C is small
+# (4-16 in every artifact config) and is kept whole in each block: it plays
+# the role of the sublane dimension.
+DEFAULT_BN = 256
+DEFAULT_BK = 256
+
+
+def _field_sample_kernel(theta_ref, j_ref, a_ref, u_ref, x_ref, *, nk: int):
+    """One (n, k) grid step of the tiled matmul + Bernoulli epilogue.
+
+    Grid is (N/BN, F/BK) with k innermost, so for a fixed output block we
+    visit k = 0..nk-1 consecutively and may use x_ref as the accumulator
+    (output revisiting).
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        x_ref[...] = jnp.zeros_like(x_ref)
+
+    # MXU work: (C, BK) @ (BK, BN) accumulated in f32.
+    x_ref[...] += jnp.dot(
+        theta_ref[...], j_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        field = x_ref[...] + a_ref[...]  # a broadcasts over chains
+        x_ref[...] = (u_ref[...] < jax.nn.sigmoid(field)).astype(jnp.float32)
+
+
+def field_sample(
+    theta: jax.Array,
+    j: jax.Array,
+    a: jax.Array,
+    u: jax.Array,
+    *,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Sample x ~ prod_v Bernoulli(sigmoid(a_v + (theta @ J)_v)) elementwise.
+
+    Args:
+      theta: (C, F) f32 — dual states, one column per factor.
+      j:     (F, N) f32 — dual incidence, J[i, v] = beta contribution of
+             factor i to variable v (zero where factor i does not touch v).
+      a:     (1, N) f32 — per-variable unary field (alphas + unary log-odds).
+      u:     (C, N) f32 — iid U[0,1) variates.
+
+    Returns:
+      (C, N) f32 in {0., 1.}.
+
+    F and N must be divisible by bk and bn respectively (model.py pads).
+    """
+    c, f = theta.shape
+    f2, n = j.shape
+    assert f == f2, (theta.shape, j.shape)
+    assert a.shape == (1, n), a.shape
+    assert u.shape == (c, n), u.shape
+    bn = min(bn, n)
+    bk = min(bk, f)
+    assert n % bn == 0 and f % bk == 0, (n, bn, f, bk)
+    nn, nk = n // bn, f // bk
+
+    kernel = functools.partial(_field_sample_kernel, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(nn, nk),
+        in_specs=[
+            pl.BlockSpec((c, bk), lambda n_, k_: (0, k_)),   # theta
+            pl.BlockSpec((bk, bn), lambda n_, k_: (k_, n_)),  # J
+            pl.BlockSpec((1, bn), lambda n_, k_: (0, n_)),   # a
+            pl.BlockSpec((c, bn), lambda n_, k_: (0, n_)),   # u
+        ],
+        out_specs=pl.BlockSpec((c, bn), lambda n_, k_: (0, n_)),
+        out_shape=jax.ShapeDtypeStruct((c, n), jnp.float32),
+        interpret=interpret,
+    )(theta, j, a, u)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernel and the full primal-dual sweep.
+
+Everything here is the *specification*: tests assert the Pallas kernel and
+the scanned model reproduce these functions bit-for-bit (same uniforms, f32).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def field_sample_ref(theta, j, a, u):
+    """Reference for kernels.pd_sweep.field_sample (same signature)."""
+    field = jnp.dot(theta, j, preferred_element_type=jnp.float32) + a
+    return (u < jax.nn.sigmoid(field)).astype(jnp.float32)
+
+
+def theta_update_ref(x, q, b1, b2, v1, v2, u):
+    """Dual update: theta_i ~ Bernoulli(sigmoid(q_i + b1_i x_{v1} + b2_i x_{v2})).
+
+    Args:
+      x:  (C, Np) f32 primal states (padded; v1/v2 index real columns only).
+      q, b1, b2: (Fp,) f32 dual factor parameters.
+      v1, v2: (Fp,) i32 endpoint indices.
+      u:  (C, Fp) f32 uniforms.
+    Returns (C, Fp) f32 in {0., 1.}.
+    """
+    x1 = jnp.take(x, v1, axis=1)
+    x2 = jnp.take(x, v2, axis=1)
+    t = q + b1 * x1 + b2 * x2
+    return (u < jax.nn.sigmoid(t)).astype(jnp.float32)
+
+
+def pd_sweep_ref(x, theta, j, a, q, b1, b2, v1, v2, ux, ut):
+    """One full primal-dual sweep, given explicit uniforms: x|theta then theta|x."""
+    x = field_sample_ref(theta, j, a, ux)
+    theta = theta_update_ref(x, q, b1, b2, v1, v2, ut)
+    return x, theta
+
+
+def pd_chain_ref(x, theta, j, a, q, b1, b2, v1, v2, key, sweeps: int):
+    """Multi-sweep chain with the same PRNG discipline as model.pd_chain."""
+    c, n = x.shape
+    f = theta.shape[1]
+    for k in jax.random.split(key, sweeps):
+        kx, kt = jax.random.split(k)
+        ux = jax.random.uniform(kx, (c, n), dtype=jnp.float32)
+        ut = jax.random.uniform(kt, (c, f), dtype=jnp.float32)
+        x, theta = pd_sweep_ref(x, theta, j, a, q, b1, b2, v1, v2, ux, ut)
+    return x, theta

@@ -1,0 +1,132 @@
+"""Layer-2 JAX model: the multi-sweep primal-dual Gibbs chain.
+
+One artifact = `pd_chain` specialized to a static (chains, N, F, sweeps)
+configuration (see aot.py). The scan body is one full blocked-Gibbs sweep:
+
+    x     ~ p(x | theta)    -- the Pallas kernel (all variables parallel)
+    theta ~ p(theta | x)    -- vectorized gathers  (all factors parallel)
+
+Outputs are the final chain state plus the sufficient statistics the Rust
+coordinator accumulates across chunked calls (per-variable sample sums and
+a per-sweep magnetization trace); no (S, C, N) trace is ever materialized.
+
+Python/JAX runs only at build time: `make artifacts` lowers this module to
+HLO text and the Rust runtime replays it via PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import pd_sweep
+from compile.kernels import ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_dims(n: int, f: int, bn: int, bk: int) -> tuple[int, int]:
+    """Padded (N, F) so the kernel tiles divide evenly."""
+    return _round_up(n, min(bn, _round_up(n, 8))), _round_up(f, min(bk, _round_up(f, 8)))
+
+
+def pd_chain(
+    x,
+    theta,
+    j,
+    a,
+    q,
+    b1,
+    b2,
+    v1,
+    v2,
+    key_data,
+    *,
+    n: int,
+    sweeps: int,
+    bn: int = pd_sweep.DEFAULT_BN,
+    bk: int = pd_sweep.DEFAULT_BK,
+    use_pallas: bool = True,
+):
+    """Run `sweeps` full primal-dual sweeps over C chains.
+
+    Args:
+      x:        (C, Np) f32 in {0,1} — primal state (padded cols are inert).
+      theta:    (C, Fp) f32 in {0,1} — dual state.
+      j:        (Fp, Np) f32 — dual incidence matrix.
+      a:        (1, Np) f32 — unary fields (pads = -40).
+      q,b1,b2:  (Fp,) f32 — per-factor dual params (pad q = -40).
+      v1,v2:    (Fp,) i32 — factor endpoints (pads point at column 0).
+      key_data: (2,) u32 — raw threefry key supplied by the Rust caller.
+      n:        true (unpadded) variable count, static.
+      sweeps:   sweeps per call, static.
+
+    Returns:
+      x', theta', sum_x (C, Np) — sum of x over the `sweeps` samples,
+      mag (sweeps, C) — per-sweep mean of x over the first n columns.
+    """
+    c, n_pad = x.shape
+    f_pad = theta.shape[1]
+    key = jax.random.wrap_key_data(key_data, impl="threefry2x32")
+
+    x_update = (
+        functools.partial(pd_sweep.field_sample, bn=bn, bk=bk)
+        if use_pallas
+        else ref.field_sample_ref
+    )
+
+    def body(carry, k):
+        x, theta, sum_x = carry
+        kx, kt = jax.random.split(k)
+        ux = jax.random.uniform(kx, (c, n_pad), dtype=jnp.float32)
+        ut = jax.random.uniform(kt, (c, f_pad), dtype=jnp.float32)
+        x = x_update(theta, j, a, ux)
+        theta = ref.theta_update_ref(x, q, b1, b2, v1, v2, ut)
+        mag = jnp.mean(x[:, :n], axis=1)
+        return (x, theta, sum_x + x), mag
+
+    keys = jax.random.split(key, sweeps)
+    (x, theta, sum_x), mag = jax.lax.scan(
+        body, (x, theta, jnp.zeros_like(x)), keys
+    )
+    return x, theta, sum_x, mag
+
+
+def make_chain_fn(
+    *,
+    n: int,
+    f: int,
+    chains: int,
+    sweeps: int,
+    bn: int = pd_sweep.DEFAULT_BN,
+    bk: int = pd_sweep.DEFAULT_BK,
+    use_pallas: bool = True,
+):
+    """Bind the static configuration; returns (fn, example_arg_specs)."""
+    n_pad, f_pad = pad_dims(n, f, bn, bk)
+
+    def fn(x, theta, j, a, q, b1, b2, v1, v2, key_data):
+        return pd_chain(
+            x, theta, j, a, q, b1, b2, v1, v2, key_data,
+            n=n, sweeps=sweeps, bn=min(bn, n_pad), bk=min(bk, f_pad),
+            use_pallas=use_pallas,
+        )
+
+    spec = jax.ShapeDtypeStruct
+    specs = (
+        spec((chains, n_pad), jnp.float32),   # x
+        spec((chains, f_pad), jnp.float32),   # theta
+        spec((f_pad, n_pad), jnp.float32),    # J
+        spec((1, n_pad), jnp.float32),        # a
+        spec((f_pad,), jnp.float32),          # q
+        spec((f_pad,), jnp.float32),          # b1
+        spec((f_pad,), jnp.float32),          # b2
+        spec((f_pad,), jnp.int32),            # v1
+        spec((f_pad,), jnp.int32),            # v2
+        spec((2,), jnp.uint32),               # key
+    )
+    return fn, specs

@@ -1,0 +1,118 @@
+"""Section 4.1 math: positive factorization and Theorem-2 dual parameters."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from compile import dualize
+
+log_entry = st.floats(-6.0, 6.0, allow_nan=False, allow_infinity=False)
+
+
+def tables(draw):
+    vals = [draw(log_entry) for _ in range(4)]
+    return np.exp(np.array(vals)).reshape(2, 2)
+
+
+@st.composite
+def positive_tables(draw):
+    return tables(draw)
+
+
+@hypothesis.settings(max_examples=300, deadline=None)
+@hypothesis.given(positive_tables())
+def test_factorization_positive_and_exact(p):
+    """Lemmas 2-4: P = B C^T with strictly positive B, C."""
+    b, c = dualize.factorize_positive(p)
+    assert np.all(b > 0), b
+    assert np.all(c > 0), c
+    np.testing.assert_allclose(b @ c.T, p, rtol=1e-8, atol=1e-12)
+
+
+@hypothesis.settings(max_examples=300, deadline=None)
+@hypothesis.given(positive_tables())
+def test_theorem2_reconstructs_table(p):
+    """Summing theta out of the dual model recovers P up to one global scale."""
+    d = dualize.dualize_table(p)
+    t = d.table()
+    ratio = t / p
+    np.testing.assert_allclose(ratio, ratio[0, 0], rtol=1e-7)
+
+
+def test_symmetric_psd_table_identity_path():
+    """Symmetric det>=0 tables hit Lemma 2 directly: B == C."""
+    p = np.array([[2.0, 1.0], [1.0, 2.0]])
+    b, c = dualize.factorize_positive(p)
+    np.testing.assert_allclose(b @ c.T, p, rtol=1e-10)
+
+
+def test_negative_det_swap_path():
+    """Anti-ferromagnetic (det < 0) tables require the Lemma-4 swap."""
+    p = np.array([[0.5, 2.0], [2.0, 0.5]])
+    assert np.linalg.det(p) < 0
+    b, c = dualize.factorize_positive(p)
+    assert np.all(b > 0) and np.all(c > 0)
+    np.testing.assert_allclose(b @ c.T, p, rtol=1e-8)
+
+
+def test_near_singular_table():
+    p = np.array([[1.0, 1.0], [1.0, 1.0 + 1e-12]])
+    b, c = dualize.factorize_positive(p)
+    np.testing.assert_allclose(b @ c.T, p, rtol=1e-6)
+
+
+def test_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        dualize.factorize_positive(np.array([[1.0, 0.0], [1.0, 1.0]]))
+    with pytest.raises(ValueError):
+        dualize.factorize_positive(np.array([[1.0, -1.0], [1.0, 1.0]]))
+
+
+@hypothesis.settings(max_examples=100, deadline=None)
+@hypothesis.given(st.floats(0.01, 3.0))
+def test_ising_table_duality(beta):
+    d = dualize.dualize_table(dualize.ising_table(beta))
+    t = d.table()
+    ratio = t / dualize.ising_table(beta)
+    np.testing.assert_allclose(ratio, ratio[0, 0], rtol=1e-7)
+
+
+def test_dense_operands_tiny_chain():
+    """Exact marginal check: 2-variable chain, brute force over (x, theta)."""
+    beta = 0.7
+    p = dualize.ising_table(beta)
+    j, a, q, b1, b2, v1, v2 = dualize.dense_operands(2, [(0, 1)], [p])
+    assert j.shape == (1, 2)
+    # enumerate p(x1, x2) = sum_theta exp(a.x + q th + th (b1 x1 + b2 x2))
+    table = np.zeros((2, 2))
+    for x1 in (0, 1):
+        for x2 in (0, 1):
+            for th in (0, 1):
+                e = a[0, 0] * x1 + a[0, 1] * x2 + q[0] * th
+                e += th * (b1[0] * x1 + b2[0] * x2)
+                table[x1, x2] += np.exp(e)
+    ratio = table / p
+    np.testing.assert_allclose(ratio, ratio[0, 0], rtol=1e-5)
+
+
+def test_dense_operands_padding_inert():
+    """Padded rows/cols must not perturb the model (a_pad=-40, q_pad=-40)."""
+    p = dualize.ising_table(0.5)
+    j, a, q, b1, b2, v1, v2 = dualize.dense_operands(
+        2, [(0, 1)], [p], n_pad=8, f_pad=4
+    )
+    assert j.shape == (4, 8)
+    assert np.all(a[0, 2:] == -40.0)
+    assert np.all(q[1:] == -40.0)
+    assert np.all(j[1:, :] == 0) and np.all(j[:, 2:] == 0)
+
+
+def test_unary_logodds_folded():
+    p = dualize.ising_table(0.2)
+    unary = np.array([0.3, -0.4], dtype=np.float32)
+    j, a, *_ = dualize.dense_operands(2, [(0, 1)], [p], unary_logodds=unary)
+    d = dualize.dualize_table(p)
+    np.testing.assert_allclose(
+        a[0], [0.3 + d.alpha1, -0.4 + d.alpha2], rtol=1e-5
+    )

@@ -1,0 +1,116 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+The kernel must agree bit-for-bit with ref.field_sample_ref given identical
+uniforms (both compute an f32 field then compare), across shapes, tilings
+and input regimes. hypothesis sweeps the shape/tile space.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import pd_sweep, ref
+
+
+def _random_inputs(rng, c, f, n, coupling=0.5):
+    theta = (rng.random((c, f)) < 0.5).astype(np.float32)
+    j = (rng.normal(size=(f, n)) * coupling).astype(np.float32)
+    a = rng.normal(size=(1, n)).astype(np.float32)
+    u = rng.random((c, n)).astype(np.float32)
+    return jnp.array(theta), jnp.array(j), jnp.array(a), jnp.array(u)
+
+
+def _assert_kernel_matches(c, f, n, bn, bk, seed=0, coupling=0.5):
+    rng = np.random.default_rng(seed)
+    theta, j, a, u = _random_inputs(rng, c, f, n, coupling)
+    got = pd_sweep.field_sample(theta, j, a, u, bn=bn, bk=bk)
+    want = ref.field_sample_ref(theta, j, a, u)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.dtype == jnp.float32
+    vals = np.unique(np.asarray(got))
+    assert set(vals.tolist()) <= {0.0, 1.0}
+
+
+def test_kernel_basic():
+    _assert_kernel_matches(c=4, f=512, n=512, bn=256, bk=256)
+
+
+def test_kernel_single_tile():
+    _assert_kernel_matches(c=2, f=128, n=128, bn=128, bk=128)
+
+
+def test_kernel_many_k_tiles():
+    _assert_kernel_matches(c=3, f=1024, n=128, bn=128, bk=64)
+
+
+def test_kernel_many_n_tiles():
+    _assert_kernel_matches(c=3, f=64, n=1024, bn=128, bk=64)
+
+
+def test_kernel_single_chain():
+    _assert_kernel_matches(c=1, f=256, n=256, bn=128, bk=128)
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    c=st.integers(1, 8),
+    nn=st.integers(1, 4),
+    nk=st.integers(1, 4),
+    bn=st.sampled_from([64, 128, 256]),
+    bk=st.sampled_from([64, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_shape_sweep(c, nn, nk, bn, bk, seed):
+    """Property: kernel == oracle for every divisible (C, F, N, BN, BK)."""
+    _assert_kernel_matches(c=c, f=nk * bk, n=nn * bn, bn=bn, bk=bk, seed=seed)
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(
+    coupling=st.floats(0.0, 8.0, allow_nan=False),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_extreme_fields(coupling, seed):
+    """Strong couplings saturate sigmoid; kernel must still match exactly."""
+    _assert_kernel_matches(c=4, f=256, n=256, bn=128, bk=128, seed=seed,
+                           coupling=coupling)
+
+
+def test_kernel_zero_theta_reduces_to_unary():
+    """With theta = 0 the sample depends only on the unary field a."""
+    rng = np.random.default_rng(7)
+    c, f, n = 4, 128, 128
+    theta = jnp.zeros((c, f), jnp.float32)
+    j = jnp.array(rng.normal(size=(f, n)), jnp.float32)
+    a = jnp.array(rng.normal(size=(1, n)), jnp.float32)
+    u = jnp.array(rng.random((c, n)), jnp.float32)
+    got = pd_sweep.field_sample(theta, j, a, u, bn=128, bk=128)
+    want = (np.asarray(u) < jax.nn.sigmoid(np.asarray(a))).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_kernel_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        _assert_kernel_matches(c=2, f=100, n=128, bn=128, bk=64)  # f % bk != 0
+
+
+def test_kernel_marginal_statistics():
+    """Sampling frequencies track sigmoid(field) (statistical sanity)."""
+    rng = np.random.default_rng(3)
+    c, f, n, reps = 1, 128, 256, 400
+    theta = jnp.array((rng.random((c, f)) < 0.5), jnp.float32)
+    j = jnp.array(rng.normal(size=(f, n)) * 0.1, jnp.float32)
+    a = jnp.array(rng.normal(size=(1, n)), jnp.float32)
+    field = np.asarray(theta) @ np.asarray(j) + np.asarray(a)
+    p = 1.0 / (1.0 + np.exp(-field))
+    acc = np.zeros((c, n))
+    for r in range(reps):
+        u = jnp.array(rng.random((c, n)), jnp.float32)
+        acc += np.asarray(pd_sweep.field_sample(theta, j, a, u, bn=128, bk=128))
+    freq = acc / reps
+    # 400 Bernoulli reps: generous 5-sigma band.
+    sigma = np.sqrt(p * (1 - p) / reps)
+    assert np.all(np.abs(freq - p) < 5 * sigma + 1e-6)

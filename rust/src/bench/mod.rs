@@ -1,0 +1,228 @@
+//! Self-contained benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timed runs with summary statistics, and a
+//! fixed-width table printer whose rows mirror the paper's figures. Every
+//! binary in `benches/` is a `harness = false` cargo bench target built on
+//! this module, and writes a machine-readable JSON report next to its
+//! stdout table so EXPERIMENTS.md can be regenerated.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Time `f()` `reps` times after `warmup` unmeasured calls; returns
+/// per-call seconds.
+pub fn time_fn<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// One benchmark measurement with its label and metadata.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub label: String,
+    pub params: Vec<(String, String)>,
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl Record {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self {
+            label: label.into(),
+            params: Vec::new(),
+            metrics: Vec::new(),
+        }
+    }
+
+    pub fn param(mut self, key: &str, value: impl ToString) -> Self {
+        self.params.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn metric(mut self, key: &str, value: f64) -> Self {
+        self.metrics.push((key.to_string(), value));
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let mut obj = vec![("label", Json::from(self.label.as_str()))];
+        for (k, v) in &self.params {
+            obj.push((k.as_str(), Json::from(v.as_str())));
+        }
+        for (k, v) in &self.metrics {
+            obj.push((k.as_str(), Json::from(*v)));
+        }
+        Json::obj(obj)
+    }
+}
+
+/// Collects records, prints the table, writes the JSON report.
+pub struct Report {
+    pub name: String,
+    pub records: Vec<Record>,
+    started: Instant,
+}
+
+impl Report {
+    pub fn new(name: &str) -> Self {
+        println!("== bench: {name} ==");
+        Self {
+            name: name.to_string(),
+            records: Vec::new(),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn push(&mut self, r: Record) {
+        // stream rows as they complete (benches can run minutes)
+        let params = r
+            .params
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let metrics = r
+            .metrics
+            .iter()
+            .map(|(k, v)| format!("{k}={v:.6}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        println!("  {:<24} {params:<40} {metrics}", r.label);
+        self.records.push(r);
+    }
+
+    /// Render the collected records as an aligned table grouped by label.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        // header: union of param and metric keys in first-seen order
+        let mut pkeys: Vec<String> = Vec::new();
+        let mut mkeys: Vec<String> = Vec::new();
+        for r in &self.records {
+            for (k, _) in &r.params {
+                if !pkeys.contains(k) {
+                    pkeys.push(k.clone());
+                }
+            }
+            for (k, _) in &r.metrics {
+                if !mkeys.contains(k) {
+                    mkeys.push(k.clone());
+                }
+            }
+        }
+        out.push_str(&format!("{:<24}", "label"));
+        for k in pkeys.iter().chain(mkeys.iter()) {
+            out.push_str(&format!("{k:>16}"));
+        }
+        out.push('\n');
+        for r in &self.records {
+            out.push_str(&format!("{:<24}", r.label));
+            for k in &pkeys {
+                let v = r
+                    .params
+                    .iter()
+                    .find(|(pk, _)| pk == k)
+                    .map(|(_, v)| v.clone())
+                    .unwrap_or_default();
+                out.push_str(&format!("{v:>16}"));
+            }
+            for k in &mkeys {
+                let v = r
+                    .metrics
+                    .iter()
+                    .find(|(mk, _)| mk == k)
+                    .map(|(_, v)| format!("{v:.4}"))
+                    .unwrap_or_default();
+                out.push_str(&format!("{v:>16}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write `target/bench-reports/<name>.json` and print the table.
+    pub fn finish(self) {
+        let table = self.table();
+        println!("\n{table}");
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let doc = Json::obj(vec![
+            ("bench", Json::from(self.name.as_str())),
+            ("elapsed_s", Json::from(elapsed)),
+            (
+                "records",
+                Json::Arr(self.records.iter().map(Record::to_json).collect()),
+            ),
+        ]);
+        let dir = std::path::Path::new("target/bench-reports");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.json", self.name));
+        if let Err(e) = std::fs::write(&path, doc.dump()) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        } else {
+            println!("report: {}", path.display());
+        }
+        println!("total {elapsed:.1}s");
+    }
+}
+
+/// Format a latency sample as a compact human string.
+pub fn fmt_summary(xs: &[f64]) -> String {
+    let s = Summary::of(xs);
+    format!(
+        "mean {:.3}ms p50 {:.3}ms p95 {:.3}ms (n={})",
+        s.mean * 1e3,
+        s.p50 * 1e3,
+        s.p95 * 1e3,
+        s.n
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts_reps() {
+        let mut calls = 0;
+        let times = time_fn(2, 5, || calls += 1);
+        assert_eq!(times.len(), 5);
+        assert_eq!(calls, 7);
+        assert!(times.iter().all(|&t| t >= 0.0));
+    }
+
+    #[test]
+    fn record_builder() {
+        let r = Record::new("row")
+            .param("beta", 0.3)
+            .metric("sweeps", 120.0);
+        assert_eq!(r.params[0].1, "0.3");
+        assert_eq!(r.metrics[0].1, 120.0);
+        let j = r.to_json();
+        assert_eq!(j.get("label").and_then(Json::as_str), Some("row"));
+    }
+
+    #[test]
+    fn report_table_alignment() {
+        let mut rep = Report::new("test-table");
+        rep.push(Record::new("a").param("k", 1).metric("v", 0.5));
+        rep.push(Record::new("b").param("k", 2).metric("v", 1.5));
+        let t = rep.table();
+        assert!(t.contains("label"));
+        assert!(t.lines().count() >= 3);
+    }
+
+    #[test]
+    fn fmt_summary_contains_fields() {
+        let s = fmt_summary(&[0.001, 0.002, 0.003]);
+        assert!(s.contains("mean"));
+        assert!(s.contains("p95"));
+    }
+}

@@ -1,0 +1,241 @@
+//! Shared experiment drivers used by the CLI, the examples and every bench
+//! binary: multi-chain mixing runs (the paper's §6 protocol) and the
+//! end-to-end denoising pipeline over the XLA runtime.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::PdEnsemble;
+use crate::diagnostics::{mixing_time_multi, MixingResult};
+use crate::duality::DualModel;
+use crate::graph::FactorGraph;
+use crate::rng::{Pcg64, RngCore};
+use crate::runtime::Runtime;
+use crate::samplers::{
+    BlockedPd, ChromaticGibbs, PdSampler, Sampler, SequentialGibbs, SwendsenWang,
+};
+use crate::util::ThreadPool;
+use crate::workloads::{self, DenoiseConfig};
+
+/// Deterministic spread of `k` monitored variables over `0..n`.
+pub fn pick_monitors(n: usize, k: usize) -> Vec<usize> {
+    let k = k.min(n).max(1);
+    (0..k).map(|i| i * n / k).collect()
+}
+
+/// Build a sampler by CLI name. `'static` workloads only (borrows `g`).
+pub fn make_sampler<'g>(
+    g: &'g FactorGraph,
+    kind: &str,
+    pool: Option<Arc<ThreadPool>>,
+) -> Box<dyn Sampler + 'g> {
+    match kind {
+        "pd" => {
+            let s = PdSampler::new(g);
+            match pool {
+                Some(p) => Box::new(s.with_pool(p)),
+                None => Box::new(s),
+            }
+        }
+        "sequential" => Box::new(SequentialGibbs::new(g)),
+        "chromatic" => {
+            let s = ChromaticGibbs::new(g);
+            match pool {
+                Some(p) => Box::new(s.with_pool(p)),
+                None => Box::new(s),
+            }
+        }
+        "sw" => Box::new(SwendsenWang::new(g)),
+        "blocked" => Box::new(BlockedPd::new(g)),
+        other => panic!("unknown sampler kind '{other}'"),
+    }
+}
+
+/// The paper's §6 protocol: `chains` overdispersed chains of `kind`,
+/// `max_sweeps` sweeps each, PSRF over magnetization + `monitors`,
+/// mixing time at `threshold` (checkpoint stride = max_sweeps/100, min 10).
+pub fn mixing_run(
+    g: &FactorGraph,
+    kind: &str,
+    chains: usize,
+    max_sweeps: usize,
+    threshold: f64,
+    monitors: &[usize],
+    seed: u64,
+) -> MixingResult {
+    let base = Pcg64::seed(seed);
+    let n = g.num_vars();
+    // chains are independent — run them on their own OS threads
+    let chain_traces: Vec<Vec<Vec<f64>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..chains)
+            .map(|c| {
+                let base = base.clone();
+                scope.spawn(move || {
+                    let mut sampler = make_sampler(g, kind, None);
+                    // overdispersed start (same schedule as PdEnsemble)
+                    let mut rng = base.split(c as u64 + 1);
+                    let init: Vec<u8> = match c % 3 {
+                        0 => vec![0; n],
+                        1 => vec![1; n],
+                        _ => (0..n).map(|_| (rng.next_u64() & 1) as u8).collect(),
+                    };
+                    sampler.set_state(&init);
+                    // local[stat][sweep]; stat 0 = magnetization, then monitors
+                    let mut local = vec![Vec::with_capacity(max_sweeps); 1 + monitors.len()];
+                    for _ in 0..max_sweeps {
+                        sampler.sweep(&mut rng);
+                        let x = sampler.state();
+                        let mag = x.iter().map(|&b| b as f64).sum::<f64>() / n as f64;
+                        local[0].push(mag);
+                        for (k, &v) in monitors.iter().enumerate() {
+                            local[1 + k].push(x[v] as f64);
+                        }
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    // transpose to traces[stat][chain][sweep]
+    let mut traces = vec![vec![Vec::new(); chains]; 1 + monitors.len()];
+    for (c, per_chain) in chain_traces.into_iter().enumerate() {
+        for (stat, t) in per_chain.into_iter().enumerate() {
+            traces[stat][c] = t;
+        }
+    }
+    let stride = (max_sweeps / 100).max(10);
+    mixing_time_multi(&traces, threshold, stride)
+}
+
+/// Result of the end-to-end denoising run.
+#[derive(Clone, Copy, Debug)]
+pub struct DenoiseResult {
+    pub noisy_accuracy: f64,
+    pub denoised_accuracy: f64,
+    pub sweeps: usize,
+    pub seconds: f64,
+}
+
+/// End-to-end §E2E driver: 50×50 binary image → noise → posterior Ising
+/// MRF → dualize → sample (XLA `grid50` artifact or native) → threshold
+/// pooled marginals → accuracy. Exercises all three layers when
+/// `native == false`.
+pub fn denoise_e2e(
+    artifacts_dir: &str,
+    flip_prob: f64,
+    coupling: f64,
+    chunks: usize,
+    seed: u64,
+    native: bool,
+    verbose: bool,
+) -> Result<DenoiseResult> {
+    let cfg = DenoiseConfig {
+        rows: 50,
+        cols: 50,
+        coupling,
+        flip_prob,
+    };
+    let clean = workloads::synthetic_image(cfg.rows, cfg.cols);
+    let noisy = workloads::noisy_image(&clean, cfg.flip_prob, seed);
+    let g = workloads::denoise_mrf(&cfg, &noisy);
+    let model = DualModel::from_graph(&g);
+    let n = g.num_vars();
+    let t0 = std::time::Instant::now();
+    let (marginals, sweeps) = if native {
+        let mut ens = PdEnsemble::from_model(model, 10, seed ^ 0xD1CE);
+        ens.run(64); // burn-in
+        ens.reset_stats();
+        ens.run(chunks * 16);
+        (ens.marginals(), (chunks + 4) * 16)
+    } else {
+        let rt = Runtime::load(artifacts_dir).context("loading artifacts")?;
+        let meta = rt
+            .manifest()
+            .get("grid50")
+            .context("grid50 artifact missing")?
+            .clone();
+        let ops = model.dense_operands(meta.n_pad, meta.f_pad);
+        let exec = rt.chain_exec("grid50", &ops)?;
+        let mut state = exec.zero_state();
+        let mut rng = Pcg64::seed(seed ^ 0xA07);
+        let mut sum = vec![0.0f64; n];
+        let burn_chunks = 4usize;
+        for chunk in 0..burn_chunks + chunks {
+            let key = [rng.next_u64() as u32, rng.next_u64() as u32];
+            let out = exec.run(&state, key)?;
+            state = out.state;
+            if chunk >= burn_chunks {
+                for c in 0..meta.chains {
+                    for v in 0..n {
+                        sum[v] += out.sum_x[c * meta.n_pad + v] as f64;
+                    }
+                }
+            }
+        }
+        let total = (chunks * meta.sweeps * meta.chains) as f64;
+        let marginals: Vec<f64> = sum.into_iter().map(|s| s / total).collect();
+        (marginals, (burn_chunks + chunks) * meta.sweeps)
+    };
+    let seconds = t0.elapsed().as_secs_f64();
+    let denoised: Vec<bool> = marginals.iter().map(|&p| p > 0.5).collect();
+    let result = DenoiseResult {
+        noisy_accuracy: workloads::accuracy(&clean, &noisy),
+        denoised_accuracy: workloads::accuracy(&clean, &denoised),
+        sweeps,
+        seconds,
+    };
+    if verbose {
+        println!("clean:\n{}", workloads::render(&clean, cfg.rows, cfg.cols));
+        println!("noisy:\n{}", workloads::render(&noisy, cfg.rows, cfg.cols));
+        println!(
+            "denoised ({}):\n{}",
+            if native { "native" } else { "xla/grid50" },
+            workloads::render(&denoised, cfg.rows, cfg.cols)
+        );
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn monitors_spread() {
+        assert_eq!(pick_monitors(100, 4), vec![0, 25, 50, 75]);
+        assert_eq!(pick_monitors(3, 10), vec![0, 1, 2]);
+        assert_eq!(pick_monitors(5, 1), vec![0]);
+    }
+
+    #[test]
+    fn mixing_run_weak_coupling_mixes_fast() {
+        let g = workloads::ising_grid(6, 6, 0.1, 0.0);
+        let r = mixing_run(&g, "pd", 6, 1500, 1.05, &pick_monitors(36, 6), 3);
+        assert!(r.mixing_time.is_some(), "final psrf {}", r.final_psrf);
+    }
+
+    #[test]
+    fn mixing_sequential_not_slower_than_pd_on_grid() {
+        // the paper's qualitative claim: sequential mixes faster (in sweeps)
+        let g = workloads::ising_grid(8, 8, 0.35, 0.0);
+        let mons = pick_monitors(64, 8);
+        let seq = mixing_run(&g, "sequential", 8, 3000, 1.02, &mons, 5);
+        let pd = mixing_run(&g, "pd", 8, 3000, 1.02, &mons, 5);
+        if let (Some(ts), Some(tp)) = (seq.mixing_time, pd.mixing_time) {
+            assert!(
+                tp as f64 >= ts as f64 * 0.5,
+                "PD mixed implausibly faster: {tp} vs {ts}"
+            );
+        }
+    }
+
+    #[test]
+    fn denoise_native_improves_accuracy() {
+        let r = denoise_e2e("artifacts", 0.12, 0.35, 10, 1, true, false).unwrap();
+        assert!(r.denoised_accuracy > r.noisy_accuracy + 0.03);
+        assert!(r.denoised_accuracy > 0.95);
+    }
+}

@@ -1,0 +1,126 @@
+//! Dispatch policy: native sparse sampler vs. AOT/XLA artifact path.
+//!
+//! The XLA artifacts are shape-specialized (static `n_pad`/`f_pad`/chains)
+//! and amortize beautifully on *stable* topologies — the dense x-update is
+//! one MXU matmul per sweep. Under churn the native sparse sampler wins:
+//! it needs no recompilation and absorbs O(degree) mutations. The policy
+//! formalizes the crossover the coordinator uses:
+//!
+//! * graph fits an artifact (padding-wise), and
+//! * the topology has been stable for ≥ `stability_sweeps` sweeps
+//!
+//! → XLA; otherwise native. Hysteresis (`stability_sweeps`) prevents
+//! flapping when mutations arrive in bursts.
+
+use crate::runtime::Manifest;
+
+/// Which execution backend a sweep batch should use.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DispatchDecision {
+    /// Native sparse CPU sampler.
+    Native,
+    /// AOT artifact (by name).
+    Xla(String),
+}
+
+/// Tunable dispatch policy.
+#[derive(Clone, Debug)]
+pub struct DispatchPolicy {
+    /// Sweeps of unchanged topology required before switching to XLA.
+    pub stability_sweeps: usize,
+    /// Hard disable of the XLA path (e.g. artifacts not built).
+    pub allow_xla: bool,
+}
+
+impl Default for DispatchPolicy {
+    fn default() -> Self {
+        Self {
+            stability_sweeps: 64,
+            allow_xla: true,
+        }
+    }
+}
+
+impl DispatchPolicy {
+    /// Decide for a model of `n` vars / `f` live factors whose topology has
+    /// been unchanged for `stable_for` sweeps.
+    pub fn decide(
+        &self,
+        manifest: Option<&Manifest>,
+        n: usize,
+        f: usize,
+        stable_for: usize,
+    ) -> DispatchDecision {
+        if !self.allow_xla || stable_for < self.stability_sweeps {
+            return DispatchDecision::Native;
+        }
+        match manifest.and_then(|m| m.best_fit(n, f)) {
+            Some(meta) => DispatchDecision::Xla(meta.name.clone()),
+            None => DispatchDecision::Native,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{"artifacts": [
+                {"name": "grid16", "file": "x", "n": 256, "f": 480,
+                 "chains": 4, "sweeps": 8, "n_pad": 256, "f_pad": 512}
+            ]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn unstable_topology_stays_native() {
+        let p = DispatchPolicy::default();
+        let m = manifest();
+        assert_eq!(
+            p.decide(Some(&m), 100, 100, 3),
+            DispatchDecision::Native
+        );
+    }
+
+    #[test]
+    fn stable_and_fitting_goes_xla() {
+        let p = DispatchPolicy::default();
+        let m = manifest();
+        assert_eq!(
+            p.decide(Some(&m), 256, 480, 1000),
+            DispatchDecision::Xla("grid16".into())
+        );
+    }
+
+    #[test]
+    fn oversized_model_stays_native() {
+        let p = DispatchPolicy::default();
+        let m = manifest();
+        assert_eq!(
+            p.decide(Some(&m), 5000, 100, 1000),
+            DispatchDecision::Native
+        );
+    }
+
+    #[test]
+    fn xla_disabled() {
+        let p = DispatchPolicy {
+            allow_xla: false,
+            ..Default::default()
+        };
+        let m = manifest();
+        assert_eq!(
+            p.decide(Some(&m), 256, 480, 1000),
+            DispatchDecision::Native
+        );
+    }
+
+    #[test]
+    fn no_manifest_stays_native() {
+        let p = DispatchPolicy::default();
+        assert_eq!(p.decide(None, 10, 10, 1000), DispatchDecision::Native);
+    }
+}

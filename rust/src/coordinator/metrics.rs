@@ -1,0 +1,157 @@
+//! Lightweight metrics registry: counters, gauges, latency histograms.
+//!
+//! The server increments these on every request; `snapshot()` renders the
+//! registry as JSON for the CLI's `stats` subcommand and the benches.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Welford;
+
+/// Thread-safe metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    timers: Mutex<BTreeMap<String, Welford>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, delta: u64) {
+        *self
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += delta;
+    }
+
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        self.gauges
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), value);
+    }
+
+    /// Record a duration (seconds) under `name`.
+    pub fn observe(&self, name: &str, seconds: f64) {
+        self.timers
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .push(seconds);
+    }
+
+    /// Time a closure and record it.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.observe(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Render all metrics as a JSON object.
+    pub fn snapshot(&self) -> Json {
+        let counters = self.counters.lock().unwrap();
+        let gauges = self.gauges.lock().unwrap();
+        let timers = self.timers.lock().unwrap();
+        let mut obj: Vec<(String, Json)> = Vec::new();
+        for (k, v) in counters.iter() {
+            obj.push((format!("counter.{k}"), Json::from(*v as f64)));
+        }
+        for (k, v) in gauges.iter() {
+            obj.push((format!("gauge.{k}"), Json::from(*v)));
+        }
+        for (k, w) in timers.iter() {
+            obj.push((
+                format!("timer.{k}"),
+                Json::obj(vec![
+                    ("count", Json::from(w.count() as f64)),
+                    ("mean_s", Json::from(w.mean())),
+                    ("std_s", Json::from(w.std_dev())),
+                ]),
+            ));
+        }
+        Json::Obj(obj.into_iter().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.inc("ops");
+        m.add("ops", 4);
+        assert_eq!(m.counter("ops"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn timers_record() {
+        let m = Metrics::new();
+        let out = m.time("work", || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            42
+        });
+        assert_eq!(out, 42);
+        let snap = m.snapshot();
+        let timer = snap.get("timer.work").unwrap();
+        assert_eq!(timer.get("count").and_then(Json::as_usize), Some(1));
+        assert!(timer.get("mean_s").and_then(Json::as_f64).unwrap() > 0.001);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_as_json() {
+        let m = Metrics::new();
+        m.inc("a");
+        m.set_gauge("g", 1.5);
+        let text = m.snapshot().dump();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("counter.a").and_then(Json::as_usize),
+            Some(1)
+        );
+        assert_eq!(parsed.get("gauge.g").and_then(Json::as_f64), Some(1.5));
+    }
+
+    #[test]
+    fn concurrent_increments() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let m = std::sync::Arc::clone(&m);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.inc("hits");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("hits"), 8000);
+    }
+}

@@ -1,0 +1,27 @@
+//! Layer 3: the coordinator — the deployment story the paper motivates.
+//!
+//! A long-lived service holds a *dynamic* MRF: clients stream factor
+//! add/remove operations while simultaneously asking for posterior
+//! summaries. Because the primal–dual sampler needs no graph coloring,
+//! every mutation is O(degree) ([`crate::duality::DualModel`] update) and
+//! sampling never pauses — the contrast measured in `benches/dynamic.rs`
+//! against a chromatic baseline that must repair its coloring.
+//!
+//! * [`ensemble`] — [`PdEnsemble`]: N parallel chains over one shared dual
+//!   model, with magnetization + per-variable traces feeding the PSRF
+//!   convergence monitor.
+//! * [`server`] — [`Server`]: request-loop service (std::mpsc; the offline
+//!   environment has no tokio) with a typed client [`Handle`].
+//! * [`dispatch`] — policy choosing between the native sparse sampler
+//!   (mutating topologies) and the XLA artifact path (stable topologies).
+//! * [`metrics`] — counters/timers registry exported as JSON.
+
+pub mod dispatch;
+pub mod ensemble;
+pub mod metrics;
+pub mod server;
+
+pub use dispatch::{DispatchDecision, DispatchPolicy};
+pub use ensemble::PdEnsemble;
+pub use metrics::Metrics;
+pub use server::{Handle, Request, Server, ServerConfig, ServerStats};

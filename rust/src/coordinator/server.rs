@@ -1,0 +1,363 @@
+//! The request-loop server: dynamic MRF hosting as a service.
+//!
+//! One worker thread owns the graph + ensemble and drains a request
+//! channel; callers hold a cheap [`Handle`] (clonable sender + typed
+//! reply channels). Between requests the server keeps sweeping in
+//! `background_sweeps`-sized slices so inference continuously refines —
+//! the "sampling never stops while the topology churns" deployment the
+//! paper argues for. (std::mpsc everywhere: tokio is unavailable offline.)
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::diagnostics::MixingResult;
+use crate::graph::{FactorGraph, FactorId, PairFactor};
+use crate::util::ThreadPool;
+use crate::workloads::{ChurnOp, ChurnTrace};
+
+use super::ensemble::PdEnsemble;
+use super::metrics::Metrics;
+
+/// Server construction parameters.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub chains: usize,
+    pub seed: u64,
+    /// Sweeps executed per idle slice between request polls.
+    pub background_sweeps: usize,
+    /// Worker threads for chain-parallel sweeps (0 = no pool).
+    pub pool_threads: usize,
+    /// Variables to monitor for PSRF (empty = magnetization only).
+    pub monitor_vars: Vec<usize>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            chains: 10,
+            seed: 0xC0FFEE,
+            background_sweeps: 16,
+            pool_threads: 0,
+            monitor_vars: Vec::new(),
+        }
+    }
+}
+
+/// Requests accepted by the server.
+pub enum Request {
+    /// Apply topology mutations (resets statistics: the target changed).
+    Apply(Vec<ChurnOp>),
+    /// Run exactly `n` foreground sweeps before answering anything else.
+    Sweep(usize),
+    /// Drop accumulated statistics (e.g. after burn-in).
+    ResetStats,
+    /// Posterior marginal estimates.
+    Marginals(Sender<Vec<f64>>),
+    /// PSRF mixing diagnosis at `threshold` with checkpoint `stride`.
+    Mixing {
+        threshold: f64,
+        stride: usize,
+        reply: Sender<MixingResult>,
+    },
+    /// Server counters.
+    Stats(Sender<ServerStats>),
+    Shutdown,
+}
+
+/// Snapshot of server state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerStats {
+    pub num_vars: usize,
+    pub num_factors: usize,
+    pub sweeps_done: usize,
+    pub ops_applied: u64,
+    pub graph_version: u64,
+}
+
+/// Client handle to a running server.
+#[derive(Clone)]
+pub struct Handle {
+    tx: Sender<Request>,
+}
+
+impl Handle {
+    pub fn apply(&self, ops: Vec<ChurnOp>) {
+        let _ = self.tx.send(Request::Apply(ops));
+    }
+
+    pub fn sweep(&self, n: usize) {
+        let _ = self.tx.send(Request::Sweep(n));
+    }
+
+    pub fn reset_stats(&self) {
+        let _ = self.tx.send(Request::ResetStats);
+    }
+
+    pub fn marginals(&self) -> Vec<f64> {
+        let (tx, rx) = channel();
+        let _ = self.tx.send(Request::Marginals(tx));
+        rx.recv().expect("server dropped")
+    }
+
+    pub fn mixing(&self, threshold: f64, stride: usize) -> MixingResult {
+        let (tx, rx) = channel();
+        let _ = self.tx.send(Request::Mixing {
+            threshold,
+            stride,
+            reply: tx,
+        });
+        rx.recv().expect("server dropped")
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        let (tx, rx) = channel();
+        let _ = self.tx.send(Request::Stats(tx));
+        rx.recv().expect("server dropped")
+    }
+}
+
+/// A running dynamic-MRF server.
+pub struct Server {
+    handle: Handle,
+    join: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Server {
+    /// Spawn the worker thread owning `graph`.
+    pub fn spawn(graph: FactorGraph, config: ServerConfig) -> Server {
+        let (tx, rx) = channel();
+        let metrics = Arc::new(Metrics::new());
+        let m2 = Arc::clone(&metrics);
+        let join = std::thread::spawn(move || worker(graph, config, rx, m2));
+        Server {
+            handle: Handle { tx },
+            join: Some(join),
+            metrics,
+        }
+    }
+
+    pub fn handle(&self) -> Handle {
+        self.handle.clone()
+    }
+
+    /// Graceful shutdown (idempotent).
+    pub fn shutdown(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker(
+    mut graph: FactorGraph,
+    config: ServerConfig,
+    rx: Receiver<Request>,
+    metrics: Arc<Metrics>,
+) {
+    let mut ensemble = PdEnsemble::new(&graph, config.chains, config.seed);
+    if config.pool_threads > 0 {
+        ensemble = ensemble.with_pool(Arc::new(ThreadPool::new(config.pool_threads)));
+    }
+    if !config.monitor_vars.is_empty() {
+        ensemble.monitor_vars(config.monitor_vars.clone());
+    }
+    ensemble.init_overdispersed();
+    let mut live: Vec<FactorId> = graph.factors().map(|(id, _)| id).collect();
+    let mut ops_applied = 0u64;
+
+    loop {
+        // drain all pending requests, then do a background slice
+        let req = match rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => return,
+        };
+        match req {
+            Some(Request::Apply(ops)) => {
+                metrics.time("apply", || {
+                    for op in &ops {
+                        apply_op(&mut graph, &mut ensemble, &mut live, op);
+                        ops_applied += 1;
+                    }
+                });
+                metrics.add("ops", ops_applied);
+                // the target distribution changed; stale stats are biased
+                ensemble.reset_stats();
+            }
+            Some(Request::Sweep(n)) => {
+                metrics.time("sweep", || ensemble.run(n));
+            }
+            Some(Request::ResetStats) => ensemble.reset_stats(),
+            Some(Request::Marginals(reply)) => {
+                let _ = reply.send(ensemble.marginals());
+            }
+            Some(Request::Mixing {
+                threshold,
+                stride,
+                reply,
+            }) => {
+                let _ = reply.send(ensemble.mixing(threshold, stride));
+            }
+            Some(Request::Stats(reply)) => {
+                let _ = reply.send(ServerStats {
+                    num_vars: graph.num_vars(),
+                    num_factors: graph.num_factors(),
+                    sweeps_done: ensemble.sweeps_done(),
+                    ops_applied,
+                    graph_version: graph.version(),
+                });
+            }
+            Some(Request::Shutdown) => return,
+            None => {
+                // idle: keep sampling
+                metrics.time("background", || ensemble.run(config.background_sweeps));
+                metrics.add("background_sweeps", config.background_sweeps as u64);
+            }
+        }
+    }
+}
+
+fn apply_op(
+    graph: &mut FactorGraph,
+    ensemble: &mut PdEnsemble,
+    live: &mut Vec<FactorId>,
+    op: &ChurnOp,
+) {
+    match *op {
+        ChurnOp::Add { v1, v2, beta } => {
+            let f = PairFactor::ising(v1, v2, beta);
+            let id = graph.add_factor(f);
+            ensemble.add_factor(id, graph.factor(id).unwrap());
+            live.push(id);
+        }
+        ChurnOp::RemoveLive { index } => {
+            let id = live.swap_remove(index);
+            graph.remove_factor(id).expect("live desync");
+            ensemble.remove_factor(id);
+        }
+    }
+}
+
+/// Replay a churn trace against a server, sweeping between ops; returns
+/// final marginals (used by the dynamic example + bench).
+pub fn replay_trace(handle: &Handle, trace: &ChurnTrace, sweeps_per_op: usize) {
+    for op in &trace.ops {
+        handle.apply(vec![op.clone()]);
+        handle.sweep(sweeps_per_op);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::exact;
+    use crate::workloads;
+
+    #[test]
+    fn server_answers_marginals() {
+        let g = workloads::ising_grid(3, 3, 0.3, 0.1);
+        let mut server = Server::spawn(
+            g.clone(),
+            ServerConfig {
+                chains: 8,
+                background_sweeps: 64,
+                ..Default::default()
+            },
+        );
+        let h = server.handle();
+        h.sweep(300);
+        h.reset_stats();
+        h.sweep(12_000);
+        let got = h.marginals();
+        let want = exact::enumerate(&g).marginals;
+        for v in 0..9 {
+            assert!(
+                (got[v] - want[v]).abs() < 0.015,
+                "v={v}: {} vs {}",
+                got[v],
+                want[v]
+            );
+        }
+        let stats = h.stats();
+        assert!(stats.sweeps_done >= 12_300);
+        assert_eq!(stats.num_vars, 9);
+        server.shutdown();
+    }
+
+    #[test]
+    fn server_applies_churn_and_tracks_target() {
+        let mut g = FactorGraph::new(2);
+        g.set_unary(0, 1.5);
+        let mut server = Server::spawn(g, ServerConfig::default());
+        let h = server.handle();
+        h.apply(vec![ChurnOp::Add {
+            v1: 0,
+            v2: 1,
+            beta: 1.2,
+        }]);
+        h.sweep(200);
+        h.reset_stats();
+        h.sweep(10_000);
+        let got = h.marginals();
+        // compare to exact on the mutated graph
+        let mut g2 = FactorGraph::new(2);
+        g2.set_unary(0, 1.5);
+        g2.add_factor(PairFactor::ising(0, 1, 1.2));
+        let want = exact::enumerate(&g2).marginals;
+        for v in 0..2 {
+            assert!(
+                (got[v] - want[v]).abs() < 0.02,
+                "v={v}: {} vs {}",
+                got[v],
+                want[v]
+            );
+        }
+        let stats = h.stats();
+        assert_eq!(stats.num_factors, 1);
+        assert_eq!(stats.ops_applied, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn background_sweeping_progresses() {
+        let g = workloads::ising_grid(4, 4, 0.2, 0.0);
+        let mut server = Server::spawn(
+            g,
+            ServerConfig {
+                background_sweeps: 32,
+                ..Default::default()
+            },
+        );
+        let h = server.handle();
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let s1 = h.stats();
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let s2 = h.stats();
+        assert!(
+            s2.sweeps_done > s1.sweeps_done,
+            "background sweeps idle: {} -> {}",
+            s1.sweeps_done,
+            s2.sweeps_done
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        let g = workloads::ising_grid(2, 2, 0.1, 0.0);
+        let mut server = Server::spawn(g, ServerConfig::default());
+        server.shutdown();
+        server.shutdown();
+    }
+
+    use crate::graph::{FactorGraph, PairFactor};
+}

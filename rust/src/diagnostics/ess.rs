@@ -1,0 +1,101 @@
+//! Autocorrelation and effective sample size.
+//!
+//! ESS complements PSRF: PSRF certifies *between-chain* agreement, ESS
+//! quantifies *within-chain* information content. The benches report both
+//! (`sweeps-to-PSRF<1.01` for the paper's headline plot, ESS/sweep for the
+//! throughput-normalized comparison).
+
+/// Lag-`k` autocorrelations of one trace, up to `max_lag` (biased, FFT-free
+/// — traces in the benches are short enough for the O(n·k) loop).
+pub fn autocorrelation(trace: &[f64], max_lag: usize) -> Vec<f64> {
+    let n = trace.len();
+    assert!(n >= 2);
+    let mean = trace.iter().sum::<f64>() / n as f64;
+    let var: f64 = trace.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+    if var == 0.0 {
+        return vec![0.0; max_lag.min(n - 1) + 1];
+    }
+    (0..=max_lag.min(n - 1))
+        .map(|k| {
+            let mut acc = 0.0;
+            for t in 0..n - k {
+                acc += (trace[t] - mean) * (trace[t + k] - mean);
+            }
+            acc / (n as f64 * var)
+        })
+        .collect()
+}
+
+/// ESS via Geyer's initial positive sequence: sum consecutive-pair
+/// autocorrelations while the pair sums stay positive.
+pub fn effective_sample_size(trace: &[f64]) -> f64 {
+    let n = trace.len();
+    if n < 4 {
+        return n as f64;
+    }
+    let rho = autocorrelation(trace, n / 2);
+    let mut tau = 1.0; // integrated autocorrelation time ×1 (ρ₀ = 1)
+    let mut k = 1;
+    while k + 1 < rho.len() {
+        let pair = rho[k] + rho[k + 1];
+        if pair <= 0.0 {
+            break;
+        }
+        tau += 2.0 * pair;
+        k += 2;
+    }
+    (n as f64 / tau).min(n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, RngCore};
+
+    #[test]
+    fn iid_ess_near_n() {
+        let mut rng = Pcg64::seed(1);
+        let trace: Vec<f64> = (0..4000).map(|_| rng.normal()).collect();
+        let ess = effective_sample_size(&trace);
+        assert!(ess > 2500.0, "ess={ess}");
+    }
+
+    #[test]
+    fn ar1_ess_matches_theory() {
+        // AR(1) with coefficient φ: ESS/n ≈ (1−φ)/(1+φ)
+        let phi = 0.9;
+        let mut rng = Pcg64::seed(2);
+        let n = 60_000;
+        let mut x = 0.0;
+        let trace: Vec<f64> = (0..n)
+            .map(|_| {
+                x = phi * x + rng.normal();
+                x
+            })
+            .collect();
+        let ess = effective_sample_size(&trace);
+        let expect = n as f64 * (1.0 - phi) / (1.0 + phi);
+        assert!(
+            (ess / expect - 1.0).abs() < 0.25,
+            "ess={ess} expect≈{expect}"
+        );
+    }
+
+    #[test]
+    fn autocorrelation_lag0_is_one() {
+        let mut rng = Pcg64::seed(3);
+        let trace: Vec<f64> = (0..500).map(|_| rng.normal()).collect();
+        let rho = autocorrelation(&trace, 10);
+        assert!((rho[0] - 1.0).abs() < 1e-12);
+        assert!(rho[5].abs() < 0.15);
+    }
+
+    #[test]
+    fn constant_trace_degenerates_gracefully() {
+        let trace = vec![2.0; 100];
+        let rho = autocorrelation(&trace, 5);
+        assert!(rho.iter().all(|&r| r == 0.0));
+        let ess = effective_sample_size(&trace);
+        assert!(ess <= 100.0);
+    }
+}

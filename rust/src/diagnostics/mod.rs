@@ -1,0 +1,14 @@
+//! Convergence diagnostics: PSRF (Gelman–Rubin), ESS, mixing times.
+//!
+//! The paper's §6 metric is the *potential scale reduction factor* over 10
+//! parallel chains, and the mixing time is "the first index so that the
+//! PSRF remains below some specified threshold afterwards" (1.01 in
+//! Fig 2). [`mixing_time`] implements exactly that extraction; [`psrf`] /
+//! [`psrf_at`] the split-free multi-chain PSRF with the standard
+//! second-half-window convention.
+
+mod ess;
+mod psrf;
+
+pub use ess::{autocorrelation, effective_sample_size};
+pub use psrf::{mixing_time, mixing_time_multi, psrf, psrf_at, psrf_series, psrf_window, MixingResult};

@@ -1,0 +1,219 @@
+//! Gelman–Rubin potential scale reduction factor and mixing times.
+//!
+//! Conventions (matching the paper's setup): `m` chains, each a scalar
+//! trace; at checkpoint `t` the statistic uses the *second half* of each
+//! chain's prefix `[t/2, t)` (discarding the first half as burn-in):
+//!
+//!   `W` = mean within-chain variance, `B/n` = variance of chain means,
+//!   `V̂ = (n−1)/n · W + B/n`,  `PSRF = sqrt(V̂ / W)`.
+//!
+//! For binary traces (single Ising sites) `W` can be 0 when every chain is
+//! frozen; we return `INFINITY` when chains disagree with zero within-
+//! variance and `1.0` when they agree exactly — both are what the mixing-
+//! time extraction expects.
+
+/// PSRF of `chains` scalar traces using samples `[lo, hi)`.
+pub fn psrf_window(chains: &[Vec<f64>], lo: usize, hi: usize) -> f64 {
+    let m = chains.len();
+    assert!(m >= 2, "PSRF needs at least 2 chains");
+    let n = hi - lo;
+    if n < 2 {
+        return f64::INFINITY;
+    }
+    let mut means = Vec::with_capacity(m);
+    let mut vars = Vec::with_capacity(m);
+    for c in chains {
+        assert!(c.len() >= hi, "trace shorter than window");
+        let s = &c[lo..hi];
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64;
+        means.push(mean);
+        vars.push(var);
+    }
+    let w: f64 = vars.iter().sum::<f64>() / m as f64;
+    let grand = means.iter().sum::<f64>() / m as f64;
+    let b_over_n: f64 =
+        means.iter().map(|mu| (mu - grand).powi(2)).sum::<f64>() / (m - 1) as f64;
+    if w <= 0.0 {
+        return if b_over_n <= 0.0 { 1.0 } else { f64::INFINITY };
+    }
+    let v_hat = (n - 1) as f64 / n as f64 * w + b_over_n;
+    (v_hat / w).sqrt()
+}
+
+/// PSRF at prefix length `t` (second-half window `[t/2, t)`).
+pub fn psrf_at(chains: &[Vec<f64>], t: usize) -> f64 {
+    psrf_window(chains, t / 2, t)
+}
+
+/// PSRF of the full traces (second-half convention).
+pub fn psrf(chains: &[Vec<f64>]) -> f64 {
+    let t = chains.iter().map(Vec::len).min().unwrap_or(0);
+    psrf_at(chains, t)
+}
+
+/// PSRF evaluated at every multiple of `stride` (for plots).
+pub fn psrf_series(chains: &[Vec<f64>], stride: usize) -> Vec<(usize, f64)> {
+    let t_max = chains.iter().map(Vec::len).min().unwrap_or(0);
+    (1..=t_max / stride)
+        .map(|k| (k * stride, psrf_at(chains, k * stride)))
+        .collect()
+}
+
+/// Result of a mixing-time extraction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MixingResult {
+    /// First checkpoint index (in sweeps) after which PSRF stays < threshold,
+    /// or `None` if never within the trace.
+    pub mixing_time: Option<usize>,
+    /// PSRF at the final checkpoint.
+    pub final_psrf: f64,
+}
+
+/// The paper's §6 extraction: the first `t` (on a `stride` grid) such that
+/// `PSRF(t') < threshold` for every later checkpoint `t' ≥ t`.
+///
+/// When several scalar traces are monitored (e.g. many variables), take
+/// the max PSRF across them first — see [`mixing_time_multi`].
+pub fn mixing_time(chains: &[Vec<f64>], threshold: f64, stride: usize) -> MixingResult {
+    let series = psrf_series(chains, stride);
+    from_series(&series, threshold)
+}
+
+fn from_series(series: &[(usize, f64)], threshold: f64) -> MixingResult {
+    let final_psrf = series.last().map(|&(_, r)| r).unwrap_or(f64::INFINITY);
+    let mut mix = None;
+    for &(t, r) in series.iter().rev() {
+        if r < threshold {
+            mix = Some(t);
+        } else {
+            break;
+        }
+    }
+    MixingResult {
+        mixing_time: mix,
+        final_psrf,
+    }
+}
+
+/// Multi-statistic mixing time: PSRF at each checkpoint is the max over
+/// all monitored scalar traces (`traces[stat][chain][t]`).
+pub fn mixing_time_multi(
+    traces: &[Vec<Vec<f64>>],
+    threshold: f64,
+    stride: usize,
+) -> MixingResult {
+    assert!(!traces.is_empty());
+    let t_max = traces
+        .iter()
+        .flat_map(|chains| chains.iter().map(Vec::len))
+        .min()
+        .unwrap();
+    let series: Vec<(usize, f64)> = (1..=t_max / stride)
+        .map(|k| {
+            let t = k * stride;
+            let worst = traces
+                .iter()
+                .map(|chains| psrf_at(chains, t))
+                .fold(f64::NEG_INFINITY, f64::max);
+            (t, worst)
+        })
+        .collect();
+    from_series(&series, threshold)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, RngCore};
+
+    fn iid_chains(m: usize, n: usize, mean: f64, seed: u64) -> Vec<Vec<f64>> {
+        (0..m)
+            .map(|c| {
+                let mut rng = Pcg64::seed(seed + c as u64);
+                (0..n).map(|_| mean + rng.normal()).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn iid_chains_have_psrf_near_one() {
+        let chains = iid_chains(10, 4000, 0.0, 1);
+        let r = psrf(&chains);
+        assert!(r < 1.01, "psrf={r}");
+        assert!(r >= 1.0 - 1e-6);
+    }
+
+    #[test]
+    fn shifted_chains_have_large_psrf() {
+        let mut chains = iid_chains(4, 2000, 0.0, 2);
+        for x in &mut chains[0] {
+            *x += 5.0; // one chain stuck in a different mode
+        }
+        assert!(psrf(&chains) > 2.0);
+    }
+
+    #[test]
+    fn decaying_transient_mixing_time() {
+        // chains start far apart and converge: PSRF should cross 1.01 and stay
+        let m = 8;
+        let n = 6000;
+        let chains: Vec<Vec<f64>> = (0..m)
+            .map(|c| {
+                let mut rng = Pcg64::seed(100 + c as u64);
+                let offset = (c as f64 - 3.5) * 4.0;
+                (0..n)
+                    .map(|t| offset * (-(t as f64) / 150.0).exp() + rng.normal())
+                    .collect()
+            })
+            .collect();
+        let r = mixing_time(&chains, 1.01, 50);
+        let mt = r.mixing_time.expect("should mix");
+        assert!(mt > 100, "mixed suspiciously fast: {mt}");
+        assert!(mt < 5000, "mixed too slowly: {mt}");
+        assert!(r.final_psrf < 1.01);
+    }
+
+    #[test]
+    fn never_mixing_returns_none() {
+        let mut chains = iid_chains(4, 1000, 0.0, 3);
+        for x in &mut chains[1] {
+            *x += 10.0;
+        }
+        let r = mixing_time(&chains, 1.01, 100);
+        assert_eq!(r.mixing_time, None);
+        assert!(r.final_psrf > 1.01);
+    }
+
+    #[test]
+    fn frozen_identical_chains_psrf_one() {
+        let chains = vec![vec![1.0; 100], vec![1.0; 100]];
+        assert_eq!(psrf(&chains), 1.0);
+    }
+
+    #[test]
+    fn frozen_disagreeing_chains_psrf_inf() {
+        let chains = vec![vec![1.0; 100], vec![0.0; 100]];
+        assert_eq!(psrf(&chains), f64::INFINITY);
+    }
+
+    #[test]
+    fn multi_takes_worst_statistic() {
+        let good = iid_chains(4, 2000, 0.0, 5);
+        let mut bad = iid_chains(4, 2000, 0.0, 6);
+        for x in &mut bad[0] {
+            *x += 8.0;
+        }
+        let r = mixing_time_multi(&[good, bad], 1.01, 100);
+        assert_eq!(r.mixing_time, None);
+    }
+
+    #[test]
+    fn series_is_monotone_in_index() {
+        let chains = iid_chains(4, 1000, 0.0, 7);
+        let s = psrf_series(&chains, 100);
+        assert_eq!(s.len(), 10);
+        assert_eq!(s[0].0, 100);
+        assert_eq!(s[9].0, 1000);
+    }
+}

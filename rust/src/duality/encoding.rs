@@ -1,0 +1,248 @@
+//! §4.2: general discrete MRFs via 0–1 encoding and categorical duals.
+//!
+//! A `K`-state variable becomes `K` binary indicator variables constrained
+//! to one-hot. Rather than encode the constraint as (non-strictly-positive)
+//! hard factors — which would break Theorem 2 — we sample each one-hot
+//! block *jointly*: the primal conditional for a categorical variable given
+//! θ is a softmax over its states, which still factorizes across variables
+//! and therefore keeps the parallel structure.
+//!
+//! For a pairwise table `P ∈ R^{K×L}` the dual is a categorical `θ` over
+//! the components of a positive decomposition `P = Σ_t g_t · u_t v_tᵀ`:
+//!
+//! * [`CategoricalDual::outer_product`] — the always-available rank-`K·L`
+//!   decomposition (one component per table cell); degenerate mixing, used
+//!   as the correctness baseline (the paper's "nm auxiliary variables").
+//! * [`CategoricalDual::potts`] — the Potts short-cut: `P = e^{-w}·𝟙 +
+//!   (1 − e^{-w})·diag` needs only `K+1` components ("only n auxiliary
+//!   binary random variables per factor").
+
+/// A positive mixture decomposition of a K×L pairwise table:
+/// `P[a][b] = Σ_t g[t] · u[t][a] · v[t][b]`, all strictly positive except
+/// that `u`/`v` may contain zeros for degenerate (indicator) components.
+#[derive(Clone, Debug)]
+pub struct CategoricalDual {
+    pub g: Vec<f64>,
+    pub u: Vec<Vec<f64>>,
+    pub v: Vec<Vec<f64>>,
+    pub k: usize,
+    pub l: usize,
+}
+
+impl CategoricalDual {
+    /// Trivial decomposition: one component per cell, `u_t, v_t` indicator
+    /// vectors. Exact for any positive table; θ has `K·L` states.
+    pub fn outer_product(p: &[Vec<f64>]) -> Self {
+        let k = p.len();
+        let l = p[0].len();
+        assert!(p.iter().all(|r| r.len() == l));
+        assert!(
+            p.iter().flatten().all(|&x| x > 0.0),
+            "table must be strictly positive"
+        );
+        let mut g = Vec::with_capacity(k * l);
+        let mut u = Vec::with_capacity(k * l);
+        let mut v = Vec::with_capacity(k * l);
+        for a in 0..k {
+            for b in 0..l {
+                g.push(p[a][b]);
+                let mut ua = vec![0.0; k];
+                ua[a] = 1.0;
+                let mut vb = vec![0.0; l];
+                vb[b] = 1.0;
+                u.push(ua);
+                v.push(vb);
+            }
+        }
+        Self { g, u, v, k, l }
+    }
+
+    /// Potts factor `P[a][b] = e^{-w·𝟙[a≠b]}` (w ≥ 0): `K+1` components —
+    /// one flat "off" component plus one diagonal component per state.
+    pub fn potts(kstates: usize, w: f64) -> Self {
+        assert!(w >= 0.0, "potts requires w >= 0");
+        let off = (-w).exp();
+        let mut g = vec![off];
+        let mut u = vec![vec![1.0; kstates]];
+        let mut v = vec![vec![1.0; kstates]];
+        for s in 0..kstates {
+            g.push(1.0 - off);
+            let mut e = vec![0.0; kstates];
+            e[s] = 1.0;
+            u.push(e.clone());
+            v.push(e);
+        }
+        Self {
+            g,
+            u,
+            v,
+            k: kstates,
+            l: kstates,
+        }
+    }
+
+    /// Number of dual states.
+    pub fn components(&self) -> usize {
+        self.g.len()
+    }
+
+    /// Reconstruct the table (tests; Theorem-1 analogue).
+    pub fn table(&self) -> Vec<Vec<f64>> {
+        let mut p = vec![vec![0.0; self.l]; self.k];
+        for t in 0..self.components() {
+            for a in 0..self.k {
+                for b in 0..self.l {
+                    p[a][b] += self.g[t] * self.u[t][a] * self.v[t][b];
+                }
+            }
+        }
+        p
+    }
+
+    /// Unnormalized `P(θ = t | x₁ = a, x₂ = b)` weights.
+    pub fn theta_weights(&self, a: usize, b: usize) -> Vec<f64> {
+        (0..self.components())
+            .map(|t| self.g[t] * self.u[t][a] * self.v[t][b])
+            .collect()
+    }
+
+    /// Per-state multiplicative message this factor sends to endpoint 1
+    /// when its dual is in state `t` (the `u_t` column). The primal
+    /// conditional of a categorical variable multiplies these across its
+    /// incident factors and normalizes — a softmax, parallel across
+    /// variables.
+    pub fn message_to_v1(&self, t: usize) -> &[f64] {
+        &self.u[t]
+    }
+
+    pub fn message_to_v2(&self, t: usize) -> &[f64] {
+        &self.v[t]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, RngCore};
+    use crate::util::proptest::{check, Gen};
+
+    #[test]
+    fn outer_product_reconstructs() {
+        let p = vec![vec![1.0, 2.0, 0.5], vec![0.3, 4.0, 1.5]];
+        let d = CategoricalDual::outer_product(&p);
+        assert_eq!(d.components(), 6);
+        let t = d.table();
+        for a in 0..2 {
+            for b in 0..3 {
+                assert!((t[a][b] - p[a][b]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn potts_reconstructs_and_is_compact() {
+        let k = 5;
+        let w = 0.8;
+        let d = CategoricalDual::potts(k, w);
+        assert_eq!(d.components(), k + 1); // the paper's "only n auxiliaries"
+        let t = d.table();
+        for a in 0..k {
+            for b in 0..k {
+                let want = if a == b { 1.0 } else { (-w_val(w)).exp() };
+                assert!((t[a][b] - want).abs() < 1e-12, "{a},{b}");
+            }
+        }
+        fn w_val(w: f64) -> f64 {
+            w
+        }
+    }
+
+    #[test]
+    fn theta_weights_sum_to_cell() {
+        let p = vec![vec![1.2, 0.4], vec![0.9, 2.2]];
+        let d = CategoricalDual::outer_product(&p);
+        for a in 0..2 {
+            for b in 0..2 {
+                let s: f64 = d.theta_weights(a, b).iter().sum();
+                assert!((s - p[a][b]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_potts_weights_nonnegative_and_valid() {
+        check("potts dual conditional valid", 100, |g: &mut Gen| {
+            let k = g.usize_in(2..=6);
+            let w = g.f64_in(0.0, 3.0);
+            let d = CategoricalDual::potts(k, w);
+            for a in 0..k {
+                for b in 0..k {
+                    let wts = d.theta_weights(a, b);
+                    if wts.iter().any(|&x| x < 0.0) {
+                        return Err(format!("negative weight k={k} w={w}"));
+                    }
+                    if wts.iter().sum::<f64>() <= 0.0 {
+                        return Err(format!("zero mass at ({a},{b})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gibbs_on_potts_pair_matches_enumeration() {
+        // a single Potts factor + unary softmax fields over two 3-state
+        // variables: run categorical PD Gibbs by hand, compare marginals.
+        let k = 3;
+        let d = CategoricalDual::potts(k, 1.0);
+        let unary1 = [0.2f64, -0.1, 0.4];
+        let unary2 = [-0.3f64, 0.0, 0.25];
+        // exact marginal of x1
+        let mut exact = [0.0f64; 3];
+        let mut z = 0.0;
+        let table = d.table();
+        for a in 0..k {
+            for b in 0..k {
+                let w = (unary1[a] + unary2[b]).exp() * table[a][b];
+                exact[a] += w;
+                z += w;
+            }
+        }
+        for e in &mut exact {
+            *e /= z;
+        }
+        // PD Gibbs
+        let mut rng = Pcg64::seed(11);
+        let mut a = 0usize;
+        let mut b = 0usize;
+        let mut counts = [0u64; 3];
+        let sweeps = 400_000;
+        for it in 0..sweeps {
+            // θ | x
+            let wts = d.theta_weights(a, b);
+            let t = rng.categorical(&wts);
+            // x | θ: independent softmaxes
+            let wa: Vec<f64> = (0..k)
+                .map(|s| (unary1[s]).exp() * d.message_to_v1(t)[s])
+                .collect();
+            a = rng.categorical(&wa);
+            let wb: Vec<f64> = (0..k)
+                .map(|s| (unary2[s]).exp() * d.message_to_v2(t)[s])
+                .collect();
+            b = rng.categorical(&wb);
+            if it >= sweeps / 10 {
+                counts[a] += 1;
+            }
+        }
+        let total: u64 = counts.iter().sum();
+        for s in 0..k {
+            let freq = counts[s] as f64 / total as f64;
+            assert!(
+                (freq - exact[s]).abs() < 0.01,
+                "state {s}: {freq} vs {}",
+                exact[s]
+            );
+        }
+    }
+}

@@ -1,0 +1,280 @@
+//! §4.1: strictly positive factorization of 2×2 tables + Theorem 2.
+//!
+//! Pipeline (mirrored by `python/compile/dualize.py`, cross-checked in
+//! `rust/tests/parity.rs`):
+//!
+//! 1. Lemma 4 — if `det P < 0`, pre-multiply by the swap matrix `S`.
+//! 2. Lemma 3 — `D = diag(1/p₁₂, 1/p₂₁)` makes `D·P` symmetric.
+//! 3. Lemma 2 — a symmetric positive table `M` with `det M ≥ 0` factors as
+//!    `M = B Bᵀ` via the trigonometric square root, evaluated in the
+//!    cancellation-free form of Remark 1.
+//! 4. Undo `D` (and `S`) to obtain `P = B Cᵀ` with `B, C > 0`.
+//! 5. Theorem 2 — read off the dual parameters `(α₁, α₂, q, β₁, β₂)` so
+//!    `P(x₁,x₂) ∝ Σ_{θ∈{0,1}} exp(α₁x₁ + α₂x₂ + qθ + θ(β₁x₁ + β₂x₂))`.
+
+/// Theorem-2 dual parameters of one pairwise factor.
+///
+/// Semantics: introduce a binary `θ` with
+/// `p(x₁, x₂, θ) ∝ exp(α₁x₁) · exp(α₂x₂) · exp(qθ) · exp(θ(β₁x₁ + β₂x₂))`;
+/// marginalizing `θ` recovers the factor's table up to a global constant.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DualFactor {
+    pub alpha1: f64,
+    pub alpha2: f64,
+    pub q: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+}
+
+impl DualFactor {
+    /// Reconstruct the (unnormalized) 2×2 table by summing out θ.
+    pub fn table(&self) -> [[f64; 2]; 2] {
+        let mut t = [[0.0; 2]; 2];
+        for (x1, row) in t.iter_mut().enumerate() {
+            for (x2, cell) in row.iter_mut().enumerate() {
+                for th in 0..2 {
+                    let e = self.alpha1 * x1 as f64
+                        + self.alpha2 * x2 as f64
+                        + self.q * th as f64
+                        + th as f64 * (self.beta1 * x1 as f64 + self.beta2 * x2 as f64);
+                    *cell += e.exp();
+                }
+            }
+        }
+        t
+    }
+
+    /// `P(θ=1 | x₁, x₂)` — the factor's dual conditional.
+    #[inline]
+    pub fn theta_logodds(&self, x1: bool, x2: bool) -> f64 {
+        self.q + self.beta1 * (x1 as u8 as f64) + self.beta2 * (x2 as u8 as f64)
+    }
+}
+
+/// 2×2 matrix helpers on `[[f64; 2]; 2]`.
+#[inline]
+fn det(m: &[[f64; 2]; 2]) -> f64 {
+    m[0][0] * m[1][1] - m[0][1] * m[1][0]
+}
+
+#[cfg(test)]
+fn matmul(a: &[[f64; 2]; 2], b: &[[f64; 2]; 2]) -> [[f64; 2]; 2] {
+    let mut out = [[0.0; 2]; 2];
+    for i in 0..2 {
+        for j in 0..2 {
+            out[i][j] = a[i][0] * b[0][j] + a[i][1] * b[1][j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+fn transpose(m: &[[f64; 2]; 2]) -> [[f64; 2]; 2] {
+    [[m[0][0], m[1][0]], [m[0][1], m[1][1]]]
+}
+
+/// Lemma 2 (+ Remark 1): `B` with `B Bᵀ = M` for symmetric positive `M`,
+/// `det M ≥ 0`. All entries of `B` are strictly positive.
+fn symmetric_sqrt_factor(m: &[[f64; 2]; 2]) -> [[f64; 2]; 2] {
+    let (m11, m22, m12) = (m[0][0], m[1][1], m[0][1]);
+    let ratio = (m12 / (m11 * m22).sqrt()).clamp(-1.0, 1.0);
+    // Remark 1: cos/sin of φ = π/4 − arccos(ratio)/2 without trig calls.
+    let cos_phi = 0.5 * ((1.0 + ratio).sqrt() + (1.0 - ratio).sqrt());
+    let sin_phi = 0.5 * ((1.0 + ratio).sqrt() - (1.0 - ratio).sqrt());
+    [
+        [m11.sqrt() * cos_phi, m11.sqrt() * sin_phi],
+        [m22.sqrt() * sin_phi, m22.sqrt() * cos_phi],
+    ]
+}
+
+/// Factor a strictly positive table as `P = B Cᵀ`, both strictly positive.
+///
+/// Panics if any entry of `P` is non-positive or non-finite (the paper's
+/// method requires strictly positive factors).
+pub fn factorize_positive(p: &[[f64; 2]; 2]) -> ([[f64; 2]; 2], [[f64; 2]; 2]) {
+    assert!(
+        p.iter().flatten().all(|&v| v > 0.0 && v.is_finite()),
+        "factorize_positive requires a strictly positive finite table: {p:?}"
+    );
+
+    // Lemma 4: swap rows if the determinant is negative.
+    let swapped = det(p) < 0.0;
+    let ps = if swapped {
+        [[p[1][0], p[1][1]], [p[0][0], p[0][1]]]
+    } else {
+        *p
+    };
+
+    // Lemma 3: D = diag(1/ps12, 1/ps21) symmetrizes.
+    let d = [1.0 / ps[0][1], 1.0 / ps[1][0]];
+    let mut m = [
+        [ps[0][0] * d[0], ps[0][1] * d[0]],
+        [ps[1][0] * d[1], ps[1][1] * d[1]],
+    ];
+    // both off-diagonals equal 1 analytically; enforce bitwise
+    m[1][0] = m[0][1];
+    if det(&m) < 0.0 {
+        // Can only be float roundoff: det(D·ps) = det(ps)/(ps12·ps21) ≥ 0.
+        let safe = (m[0][0] * m[1][1]).sqrt() * (1.0 - 1e-12);
+        m[0][1] = safe;
+        m[1][0] = safe;
+    }
+
+    let bsym = symmetric_sqrt_factor(&m); // m = bsym bsymᵀ
+    // ps = D⁻¹ m = (D⁻¹ bsym) bsymᵀ
+    let mut b = [
+        [bsym[0][0] / d[0], bsym[0][1] / d[0]],
+        [bsym[1][0] / d[1], bsym[1][1] / d[1]],
+    ];
+    if swapped {
+        b = [[b[1][0], b[1][1]], [b[0][0], b[0][1]]];
+    }
+    (b, bsym)
+}
+
+/// Theorem 2: dual parameters of a strictly positive 2×2 table.
+pub fn dualize_table(p: &[[f64; 2]; 2]) -> DualFactor {
+    let (b, c) = factorize_positive(p);
+    DualFactor {
+        alpha1: (b[1][0] / b[0][0]).ln(),
+        alpha2: (c[1][0] / c[0][0]).ln(),
+        q: (b[0][1] * c[0][1] / (b[0][0] * c[0][0])).ln(),
+        beta1: (b[1][1] * b[0][0] / (b[0][1] * b[1][0])).ln(),
+        beta2: (c[1][1] * c[0][0] / (c[0][1] * c[1][0])).ln(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+
+    fn assert_reconstructs(p: &[[f64; 2]; 2], tol: f64) {
+        let d = dualize_table(p);
+        let t = d.table();
+        let scale = t[0][0] / p[0][0];
+        for i in 0..2 {
+            for j in 0..2 {
+                let rel = (t[i][j] / p[i][j] - scale).abs() / scale;
+                assert!(rel < tol, "p={p:?} t={t:?} rel={rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn factorization_exact_on_examples() {
+        let cases: [[[f64; 2]; 2]; 5] = [
+            [[2.0, 1.0], [1.0, 2.0]],        // symmetric PSD (ferromagnetic)
+            [[0.5, 2.0], [2.0, 0.5]],        // det < 0 (anti-ferromagnetic)
+            [[1.0, 1.0], [1.0, 1.0]],        // rank one
+            [[3.0, 0.1], [0.2, 5.0]],        // asymmetric
+            [[1e-3, 1e3], [1e3, 1e-3]],      // extreme dynamic range
+        ];
+        for p in &cases {
+            let (b, c) = factorize_positive(p);
+            assert!(b.iter().flatten().all(|&v| v > 0.0), "{b:?}");
+            assert!(c.iter().flatten().all(|&v| v > 0.0), "{c:?}");
+            let r = matmul(&b, &transpose(&c));
+            for i in 0..2 {
+                for j in 0..2 {
+                    assert!(
+                        (r[i][j] - p[i][j]).abs() / p[i][j] < 1e-9,
+                        "p={p:?} r={r:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn theorem2_reconstructs_examples() {
+        assert_reconstructs(&[[2.0, 1.0], [1.0, 2.0]], 1e-9);
+        assert_reconstructs(&[[0.5, 2.0], [2.0, 0.5]], 1e-9);
+        assert_reconstructs(&[[3.0, 0.1], [0.2, 5.0]], 1e-9);
+    }
+
+    #[test]
+    fn prop_factorization_positive_and_exact() {
+        check("P = B C^T strictly positive", 500, |g: &mut Gen| {
+            let p = g.positive_table(6.0);
+            let (b, c) = factorize_positive(&p);
+            if !b.iter().flatten().chain(c.iter().flatten()).all(|&v| v > 0.0) {
+                return Err(format!("non-positive factor for {p:?}"));
+            }
+            let r = matmul(&b, &transpose(&c));
+            for i in 0..2 {
+                for j in 0..2 {
+                    if (r[i][j] - p[i][j]).abs() / p[i][j] > 1e-8 {
+                        return Err(format!("p={p:?} r={r:?}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_theorem2_reconstructs() {
+        check("sum_theta dual == table", 500, |g: &mut Gen| {
+            let p = g.positive_table(5.0);
+            let d = dualize_table(&p);
+            let t = d.table();
+            let scale = t[0][0] / p[0][0];
+            for i in 0..2 {
+                for j in 0..2 {
+                    if (t[i][j] / p[i][j] - scale).abs() / scale > 1e-7 {
+                        return Err(format!("p={p:?} dual={d:?} t={t:?}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dual_params_finite() {
+        check("dual params finite", 300, |g: &mut Gen| {
+            let p = g.positive_table(8.0);
+            let d = dualize_table(&p);
+            for v in [d.alpha1, d.alpha2, d.q, d.beta1, d.beta2] {
+                if !v.is_finite() {
+                    return Err(format!("p={p:?} d={d:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ising_duality_symmetric_params() {
+        // symmetric table → B == C → α₁ == α₂ and β₁ == β₂
+        let d = dualize_table(&[[1.5, 0.5], [0.5, 1.5]]);
+        assert!((d.alpha1 - d.alpha2).abs() < 1e-12);
+        assert!((d.beta1 - d.beta2).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly positive")]
+    fn rejects_nonpositive_tables() {
+        factorize_positive(&[[1.0, -0.5], [1.0, 1.0]]);
+    }
+
+    #[test]
+    fn theta_logodds_consistent_with_joint() {
+        // P(θ=1|x) from the joint enumeration must equal sigmoid(theta_logodds)
+        let p = [[2.0, 0.7], [0.6, 3.0]];
+        let d = dualize_table(&p);
+        for (x1, x2) in [(false, false), (false, true), (true, false), (true, true)] {
+            let e = |th: f64| {
+                (d.alpha1 * x1 as u8 as f64
+                    + d.alpha2 * x2 as u8 as f64
+                    + d.q * th
+                    + th * (d.beta1 * x1 as u8 as f64 + d.beta2 * x2 as u8 as f64))
+                    .exp()
+            };
+            let want = e(1.0) / (e(0.0) + e(1.0));
+            let got = crate::rng::sigmoid(d.theta_logodds(x1, x2));
+            assert!((want - got).abs() < 1e-12);
+        }
+    }
+}

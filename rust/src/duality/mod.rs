@@ -1,0 +1,24 @@
+//! Probabilistic duality (§3–§4): the paper's mathematical core.
+//!
+//! A pair `(x, θ)` is *dual* via link functions `(s, r)` when
+//! `p(x, θ) = h(x) g(θ) exp⟨s(x), r(θ)⟩`. For a binary pairwise MRF the
+//! standard choice `s(x) = x` makes both conditionals factorize
+//! (Corollary 1), so one binary auxiliary per factor suffices — provided
+//! every 2×2 factor table admits a strictly positive factorization
+//! `P = B Cᵀ`, which §4.1 constructs for *any* strictly positive table.
+//!
+//! * [`factorization`] — Lemmas 2–4 + Theorem 2 (`P → (α, q, β)`).
+//! * [`model`] — [`DualModel`]: the dualized MRF in CSR form with O(degree)
+//!   incremental add/remove, shared by every sampler and the XLA runtime.
+//! * [`encoding`] — §4.2 multi-state variables via 0–1 encoding, Potts
+//!   short-cut (order-n factor → n+1 dual states).
+//! * [`sw`] — §4.3: Swendsen–Wang / Higdon partial-SW as degenerate
+//!   decompositions of the Ising factor.
+
+pub mod encoding;
+pub mod factorization;
+pub mod model;
+pub mod sw;
+
+pub use factorization::{dualize_table, factorize_positive, DualFactor};
+pub use model::DualModel;

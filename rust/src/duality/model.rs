@@ -1,0 +1,430 @@
+//! [`DualModel`]: the dualized MRF every sampler and the XLA runtime share.
+//!
+//! Maintains, incrementally under factor insertion/removal (Theorem 1):
+//!
+//! * `base_field[v]` — `unary_v + Σ_{i ∋ v} α_{i,slot(v)}`: the primal
+//!   conditional is `P(x_v=1 | θ) = σ(base_field[v] + Σ_{i ∋ v} θ_i β_{i,v})`.
+//! * per-factor dual parameters `(q_i, β_{i,1}, β_{i,2})`: the dual
+//!   conditional is `P(θ_i=1 | x) = σ(q_i + β_{i,1} x_{v₁} + β_{i,2} x_{v₂})`.
+//! * CSR-ish incidence (`var → [(factor, β)]`) for the native sampler, and
+//!   a dense export (`J`, `a`, `q`, `β`, endpoints) for the AOT artifacts.
+//!
+//! The *entire* preprocessing for a new factor is one 2×2 factorization and
+//! two adjacency pushes — this is the "almost no preprocessing" claim that
+//! the dynamic benchmark quantifies against graph-coloring repair.
+
+use super::factorization::{dualize_table, DualFactor};
+use crate::graph::{FactorGraph, FactorId, PairFactor, VarId};
+
+/// Dual parameters + endpoints of one live factor.
+#[derive(Clone, Copy, Debug)]
+pub struct DualEntry {
+    pub v1: VarId,
+    pub v2: VarId,
+    pub q: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub alpha1: f64,
+    pub alpha2: f64,
+}
+
+/// The dualized model (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct DualModel {
+    base_field: Vec<f64>,
+    entries: Vec<Option<DualEntry>>,
+    free: Vec<usize>,
+    /// `incidence[v]` = (factor slot, β contribution of that factor to v).
+    incidence: Vec<Vec<(u32, f64)>>,
+    active: usize,
+}
+
+impl DualModel {
+    /// Dualize every factor of a graph (one factorization per factor).
+    pub fn from_graph(g: &FactorGraph) -> Self {
+        let n = g.num_vars();
+        let mut m = Self {
+            base_field: (0..n).map(|v| g.unary(v)).collect(),
+            entries: Vec::new(),
+            free: Vec::new(),
+            incidence: vec![Vec::new(); n],
+            active: 0,
+        };
+        for (id, f) in g.factors() {
+            m.insert_at(id, f);
+        }
+        m
+    }
+
+    /// Empty model over `n` variables with the given unary log-odds.
+    pub fn new(unary: Vec<f64>) -> Self {
+        let n = unary.len();
+        Self {
+            base_field: unary,
+            entries: Vec::new(),
+            free: Vec::new(),
+            incidence: vec![Vec::new(); n],
+            active: 0,
+        }
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.base_field.len()
+    }
+
+    pub fn num_factors(&self) -> usize {
+        self.active
+    }
+
+    /// Capacity of the factor slot space (dense export width).
+    pub fn factor_slots(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn entry(&self, slot: usize) -> Option<&DualEntry> {
+        self.entries.get(slot).and_then(Option::as_ref)
+    }
+
+    /// Live `(slot, entry)` pairs in slot order.
+    pub fn entries(&self) -> impl Iterator<Item = (usize, &DualEntry)> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| e.as_ref().map(|e| (i, e)))
+    }
+
+    pub fn base_field(&self, v: VarId) -> f64 {
+        self.base_field[v]
+    }
+
+    pub fn incidence(&self, v: VarId) -> &[(u32, f64)] {
+        &self.incidence[v]
+    }
+
+    /// Dualize + insert one factor at a caller-chosen slot id.
+    ///
+    /// Used with the graph's own [`FactorId`] so graph and dual model share
+    /// the slot space — the coordinator relies on this 1:1 mapping.
+    pub fn insert_at(&mut self, slot: FactorId, f: &PairFactor) {
+        let DualFactor {
+            alpha1,
+            alpha2,
+            q,
+            beta1,
+            beta2,
+        } = dualize_table(&f.table);
+        if slot >= self.entries.len() {
+            self.entries.resize(slot + 1, None);
+        }
+        assert!(self.entries[slot].is_none(), "slot {slot} already live");
+        self.entries[slot] = Some(DualEntry {
+            v1: f.v1,
+            v2: f.v2,
+            q,
+            beta1,
+            beta2,
+            alpha1,
+            alpha2,
+        });
+        self.base_field[f.v1] += alpha1;
+        self.base_field[f.v2] += alpha2;
+        self.incidence[f.v1].push((slot as u32, beta1));
+        self.incidence[f.v2].push((slot as u32, beta2));
+        self.active += 1;
+    }
+
+    /// Remove the factor in `slot`, undoing its field contribution.
+    pub fn remove(&mut self, slot: FactorId) -> Option<DualEntry> {
+        let e = self.entries.get_mut(slot)?.take()?;
+        self.base_field[e.v1] -= e.alpha1;
+        self.base_field[e.v2] -= e.alpha2;
+        for v in [e.v1, e.v2] {
+            let list = &mut self.incidence[v];
+            let pos = list
+                .iter()
+                .position(|&(s, _)| s as usize == slot)
+                .expect("incidence desync");
+            list.swap_remove(pos);
+        }
+        self.free.push(slot);
+        self.active -= 1;
+        Some(e)
+    }
+
+    /// Add a variable (dynamic growth).
+    pub fn add_var(&mut self, unary: f64) -> VarId {
+        self.base_field.push(unary);
+        self.incidence.push(Vec::new());
+        self.base_field.len() - 1
+    }
+
+    // -- conditionals (the Markov kernel) ---------------------------------
+
+    /// Log-odds of `x_v = 1` given the dual state θ (Corollary 1).
+    #[inline]
+    pub fn x_logodds(&self, v: VarId, theta: &[u8]) -> f64 {
+        let mut z = self.base_field[v];
+        for &(slot, beta) in &self.incidence[v] {
+            // branch-free: θ ∈ {0,1}
+            z += theta[slot as usize] as f64 * beta;
+        }
+        z
+    }
+
+    /// Log-odds of `θ_i = 1` given the primal state x (Corollary 1).
+    #[inline]
+    pub fn theta_logodds(&self, e: &DualEntry, x: &[u8]) -> f64 {
+        e.q + e.beta1 * x[e.v1] as f64 + e.beta2 * x[e.v2] as f64
+    }
+
+    /// Unnormalized log p(x, θ) — for exactness tests and the §5.2
+    /// log-partition estimator.
+    pub fn log_joint_unnorm(&self, x: &[u8], theta: &[u8]) -> f64 {
+        let mut lp = 0.0;
+        for (v, &b) in self.base_field.iter().enumerate() {
+            lp += b * x[v] as f64;
+        }
+        for (slot, e) in self.entries() {
+            let th = theta[slot] as f64;
+            lp += e.q * th + th * (e.beta1 * x[e.v1] as f64 + e.beta2 * x[e.v2] as f64);
+        }
+        lp
+    }
+
+    // -- dense export for the XLA runtime ---------------------------------
+
+    /// Pack the model into the dense operands of an AOT artifact.
+    ///
+    /// Layout must match `python/compile/dualize.py::dense_operands`:
+    /// padded variables get `a = -40` (inert), padded factors `q = -40`,
+    /// zero β, endpoints 0. Live factors are packed densely in slot order
+    /// (slot gaps from removals are skipped), so `f_pad` only needs to
+    /// cover `num_factors()`.
+    pub fn dense_operands(&self, n_pad: usize, f_pad: usize) -> DenseOperands {
+        let n = self.num_vars();
+        assert!(n_pad >= n, "n_pad {n_pad} < n {n}");
+        assert!(
+            f_pad >= self.active,
+            "f_pad {f_pad} < live factors {}",
+            self.active
+        );
+        let mut ops = DenseOperands {
+            j: vec![0.0; f_pad * n_pad],
+            a: vec![-40.0; n_pad],
+            q: vec![-40.0; f_pad],
+            b1: vec![0.0; f_pad],
+            b2: vec![0.0; f_pad],
+            v1: vec![0; f_pad],
+            v2: vec![0; f_pad],
+            n_pad,
+            f_pad,
+        };
+        ops.a[..n].copy_from_slice(
+            &self.base_field.iter().map(|&x| x as f32).collect::<Vec<_>>(),
+        );
+        for (dense, (_, e)) in self.entries().enumerate() {
+            ops.q[dense] = e.q as f32;
+            ops.b1[dense] = e.beta1 as f32;
+            ops.b2[dense] = e.beta2 as f32;
+            ops.v1[dense] = e.v1 as i32;
+            ops.v2[dense] = e.v2 as i32;
+            ops.j[dense * n_pad + e.v1] += e.beta1 as f32;
+            ops.j[dense * n_pad + e.v2] += e.beta2 as f32;
+        }
+        ops
+    }
+}
+
+/// Dense row-major operands for the `pd_chain_*` artifacts.
+#[derive(Clone, Debug)]
+pub struct DenseOperands {
+    /// `(f_pad, n_pad)` row-major.
+    pub j: Vec<f32>,
+    /// `(n_pad,)` — reshaped to `(1, n_pad)` at the runtime boundary.
+    pub a: Vec<f32>,
+    pub q: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub b2: Vec<f32>,
+    pub v1: Vec<i32>,
+    pub v2: Vec<i32>,
+    pub n_pad: usize,
+    pub f_pad: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+    use crate::workloads;
+
+    /// Enumerate the dual joint and compare its x-marginal to the graph.
+    fn assert_marginal_matches(g: &FactorGraph) {
+        let m = DualModel::from_graph(g);
+        let n = g.num_vars();
+        let slots: Vec<usize> = m.entries().map(|(s, _)| s).collect();
+        let f = slots.len();
+        assert!(n <= 10 && f <= 10, "enumeration blow-up");
+        let mut table = vec![0.0f64; 1 << n];
+        for xm in 0..1usize << n {
+            let x: Vec<u8> = (0..n).map(|v| ((xm >> v) & 1) as u8).collect();
+            let mut theta = vec![0u8; m.factor_slots()];
+            for tm in 0..1usize << f {
+                for (bit, &slot) in slots.iter().enumerate() {
+                    theta[slot] = ((tm >> bit) & 1) as u8;
+                }
+                table[xm] += m.log_joint_unnorm(&x, &theta).exp();
+            }
+        }
+        // compare to graph's unnormalized p(x), up to one global scale
+        let mut scale = None;
+        for xm in 0..1usize << n {
+            let x: Vec<u8> = (0..n).map(|v| ((xm >> v) & 1) as u8).collect();
+            let want = g.log_prob_unnorm(&x).exp();
+            let r = table[xm] / want;
+            match scale {
+                None => scale = Some(r),
+                Some(s) => assert!(
+                    (r / s - 1.0).abs() < 1e-9,
+                    "marginal mismatch at {xm}: ratio {r} vs {s}"
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn theorem1_marginal_small_chain() {
+        let mut g = FactorGraph::new(3);
+        g.set_unary(0, 0.3);
+        g.set_unary(2, -0.2);
+        g.add_factor(PairFactor::ising(0, 1, 0.6));
+        g.add_factor(PairFactor::new(1, 2, [[2.0, 0.5], [0.7, 1.5]]));
+        assert_marginal_matches(&g);
+    }
+
+    #[test]
+    fn theorem1_marginal_with_cycle() {
+        let mut g = FactorGraph::new(4);
+        g.add_factor(PairFactor::ising(0, 1, 0.4));
+        g.add_factor(PairFactor::ising(1, 2, -0.3)); // negative β: det < 0 path
+        g.add_factor(PairFactor::ising(2, 3, 0.2));
+        g.add_factor(PairFactor::ising(3, 0, 0.5));
+        assert_marginal_matches(&g);
+    }
+
+    #[test]
+    fn prop_theorem1_random_graphs() {
+        check("dual joint marginalizes to p(x)", 25, |gn: &mut Gen| {
+            let n = gn.usize_in(2..=5);
+            let mut g = FactorGraph::new(n);
+            for v in 0..n {
+                g.set_unary(v, gn.f64_in(-1.0, 1.0));
+            }
+            for _ in 0..gn.usize_in(1..=6) {
+                let v1 = gn.usize_in(0..=n - 1);
+                let mut v2 = gn.usize_in(0..=n - 1);
+                if v1 == v2 {
+                    v2 = (v2 + 1) % n;
+                }
+                g.add_factor(PairFactor::new(v1, v2, gn.positive_table(2.0)));
+            }
+            assert_marginal_matches(&g);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn incremental_equals_batch() {
+        // build incrementally with removals, compare against from_graph
+        let mut g = FactorGraph::new(6);
+        let mut ids = Vec::new();
+        for k in 0..8 {
+            ids.push(g.add_factor(PairFactor::ising(k % 6, (k + 1) % 6, 0.1 * (k + 1) as f64)));
+        }
+        let mut m = DualModel::from_graph(&g);
+        // remove 3 factors from both
+        for &id in &ids[2..5] {
+            g.remove_factor(id);
+            m.remove(id);
+        }
+        let fresh = DualModel::from_graph(&g);
+        for v in 0..6 {
+            assert!(
+                (m.base_field(v) - fresh.base_field(v)).abs() < 1e-12,
+                "field desync at {v}"
+            );
+            let mut a: Vec<_> = m.incidence(v).to_vec();
+            let mut b: Vec<_> = fresh.incidence(v).to_vec();
+            a.sort_by_key(|x| x.0);
+            b.sort_by_key(|x| x.0);
+            assert_eq!(a, b);
+        }
+        assert_eq!(m.num_factors(), fresh.num_factors());
+    }
+
+    #[test]
+    fn x_logodds_matches_joint_difference() {
+        let g = workloads::random_graph(6, 2, 0.8, 3);
+        let m = DualModel::from_graph(&g);
+        let mut theta = vec![0u8; m.factor_slots()];
+        for (i, t) in theta.iter_mut().enumerate() {
+            *t = (i % 2) as u8;
+        }
+        let x0 = vec![0u8; 6];
+        for v in 0..6 {
+            let mut x1 = x0.clone();
+            x1[v] = 1;
+            let want = m.log_joint_unnorm(&x1, &theta) - m.log_joint_unnorm(&x0, &theta);
+            let got = m.x_logodds(v, &theta);
+            assert!((want - got).abs() < 1e-9, "v={v}");
+        }
+    }
+
+    #[test]
+    fn theta_logodds_matches_joint_difference() {
+        let g = workloads::random_graph(5, 2, 0.8, 4);
+        let m = DualModel::from_graph(&g);
+        let x: Vec<u8> = (0..5).map(|v| (v % 2) as u8).collect();
+        let theta0 = vec![0u8; m.factor_slots()];
+        for (slot, e) in m.entries() {
+            let mut theta1 = theta0.clone();
+            theta1[slot] = 1;
+            let want = m.log_joint_unnorm(&x, &theta1) - m.log_joint_unnorm(&x, &theta0);
+            let got = m.theta_logodds(e, &x);
+            assert!((want - got).abs() < 1e-9, "slot={slot}");
+        }
+    }
+
+    #[test]
+    fn dense_operands_layout() {
+        let g = workloads::ising_grid(2, 2, 0.5, 0.1);
+        let m = DualModel::from_graph(&g);
+        let ops = m.dense_operands(8, 8);
+        assert_eq!(ops.j.len(), 64);
+        // 4 live factors → rows 0..4 populated, rest zero
+        assert!(ops.q[..4].iter().all(|&q| q != -40.0));
+        assert!(ops.q[4..].iter().all(|&q| q == -40.0));
+        assert!(ops.a[..4].iter().all(|&a| a != -40.0));
+        assert!(ops.a[4..].iter().all(|&a| a == -40.0));
+        // each row has exactly two non-zeros (β₁, β₂)
+        for row in 0..4 {
+            let nz = ops.j[row * 8..(row + 1) * 8]
+                .iter()
+                .filter(|&&x| x != 0.0)
+                .count();
+            assert_eq!(nz, 2, "row {row}");
+        }
+    }
+
+    #[test]
+    fn dense_operands_skip_removed_slots() {
+        let mut g = workloads::ising_grid(2, 2, 0.5, 0.0);
+        let first = g.factors().next().unwrap().0;
+        let mut m = DualModel::from_graph(&g);
+        g.remove_factor(first);
+        m.remove(first);
+        let ops = m.dense_operands(4, 4);
+        // 3 live factors packed densely at rows 0..3
+        assert!(ops.q[..3].iter().all(|&q| q != -40.0));
+        assert_eq!(ops.q[3], -40.0);
+    }
+}

@@ -1,0 +1,174 @@
+//! §4.3: Swendsen–Wang and Higdon partial-SW as degenerate dualizations.
+//!
+//! For the Ising factor `P ∝ [[1, e^{-w}], [e^{-w}, 1]]` (w ≥ 0) the paper
+//! exhibits the additive decomposition
+//!
+//! `P = e^{-w}·𝟙 + (1 − e^{-w})·I`,
+//!
+//! i.e. a dual `θ_e ∈ {0, 1}` with `g(0) = e^{-w}` (free component) and
+//! `g(1) = 1 − e^{-w}` (bond: hard agreement constraint). Conditionals:
+//!
+//! * `p(θ_e = 1 | x) = (1 − e^{-w}) / 1 = 1 − e^{-w}` when `x_{e₁} = x_{e₂}`,
+//!   and 0 otherwise — the classic bond-percolation step;
+//! * `p(x | θ)` is uniform over cluster-consistent configurations — sampled
+//!   by flipping each connected component fairly.
+//!
+//! Higdon's partial SW keeps `α` of the diagonal mass unconstrained:
+//! `P = [[1−α, e^{-w}], [e^{-w}, 1−α]] + α·I`, giving a 3-state dual once
+//! the first (still positive, provided `α < 1 − e^{-w}`… see
+//! [`HigdonDual::new`]) term is itself dualized by Theorem 2 — this is how
+//! the paper circumvents Higdon's coarse-model sampling step.
+
+use super::factorization::{dualize_table, DualFactor};
+
+/// SW bond activation probability for an Ising factor of coupling `w ≥ 0`
+/// (table `[[1, e^{-w}], [e^{-w}, 1]]`, equivalently `β = w/2` in the
+/// symmetric parametrization used by [`crate::graph::PairFactor::ising`]).
+#[inline]
+pub fn bond_probability(w: f64) -> f64 {
+    assert!(w >= 0.0, "SW requires ferromagnetic couplings");
+    1.0 - (-w).exp()
+}
+
+/// Convert a symmetric Ising table `[[e^β, e^{-β}], [e^{-β}, e^β]]` to the
+/// SW normal form weight `w = 2β` (table scaled by `e^{-β}`).
+pub fn ising_w_from_table(table: &[[f64; 2]; 2]) -> Option<f64> {
+    let sym = (table[0][0] - table[1][1]).abs() < 1e-12 * table[0][0].abs()
+        && (table[0][1] - table[1][0]).abs() < 1e-12 * table[0][1].abs().max(1e-300);
+    if !sym {
+        return None;
+    }
+    let w = (table[0][0] / table[0][1]).ln();
+    if w >= 0.0 {
+        Some(w)
+    } else {
+        None // anti-ferromagnetic: SW does not apply
+    }
+}
+
+/// Higdon partial-SW dual of an Ising factor: a 3-state θ.
+///
+/// State 0/1 come from the Theorem-2 dualization of the *soft* part
+/// `[[1−α, e^{-w}], [e^{-w}, 1−α]]`; state 2 is the hard bond with mass α.
+#[derive(Clone, Debug)]
+pub struct HigdonDual {
+    /// Theorem-2 dual of the soft residual table.
+    pub soft: DualFactor,
+    /// Soft residual table (strictly positive by construction).
+    pub soft_table: [[f64; 2]; 2],
+    /// Mass of the hard-agreement component.
+    pub alpha: f64,
+    pub w: f64,
+}
+
+impl HigdonDual {
+    /// `alpha` must leave the residual strictly positive *and* PSD-able:
+    /// `0 ≤ α < 1 − e^{-w}`. `alpha = 0` degenerates to pure Theorem-2;
+    /// `alpha → 1 − e^{-w}` approaches classic SW.
+    pub fn new(w: f64, alpha: f64) -> Self {
+        assert!(w > 0.0);
+        let max_alpha = 1.0 - (-w).exp();
+        assert!(
+            (0.0..max_alpha).contains(&alpha),
+            "need 0 <= alpha < 1 - e^-w = {max_alpha}, got {alpha}"
+        );
+        let diag = 1.0 - alpha;
+        let off = (-w).exp();
+        let soft_table = [[diag, off], [off, diag]];
+        Self {
+            soft: dualize_table(&soft_table),
+            soft_table,
+            alpha,
+            w,
+        }
+    }
+
+    /// Unnormalized weights of the 3 dual states given endpoint values.
+    /// Order: [soft θ=0, soft θ=1, hard bond].
+    pub fn theta_weights(&self, x1: bool, x2: bool) -> [f64; 3] {
+        // soft part: recompute the two mixture components from Theorem 2
+        let e = |th: f64| {
+            (self.soft.alpha1 * x1 as u8 as f64
+                + self.soft.alpha2 * x2 as u8 as f64
+                + self.soft.q * th
+                + th * (self.soft.beta1 * x1 as u8 as f64
+                    + self.soft.beta2 * x2 as u8 as f64))
+                .exp()
+        };
+        // normalize the soft dual so its θ-sum equals the soft table entry
+        let soft_cell = self.soft_table[x1 as usize][x2 as usize];
+        let raw = [e(0.0), e(1.0)];
+        let scale = soft_cell / (raw[0] + raw[1]);
+        let hard = if x1 == x2 { self.alpha } else { 0.0 };
+        [raw[0] * scale, raw[1] * scale, hard]
+    }
+
+    /// Total mixture mass at `(x1, x2)` — must reproduce the Ising table.
+    pub fn cell(&self, x1: bool, x2: bool) -> f64 {
+        self.theta_weights(x1, x2).iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+
+    #[test]
+    fn bond_probability_limits() {
+        assert!(bond_probability(0.0).abs() < 1e-15);
+        assert!((bond_probability(1e9) - 1.0).abs() < 1e-12);
+        let w = 0.8f64;
+        assert!((bond_probability(w) - (1.0 - (-w).exp())).abs() < 1e-15);
+    }
+
+    #[test]
+    fn w_from_table_roundtrip() {
+        let beta = 0.35;
+        let t = crate::graph::PairFactor::ising(0, 1, beta).table;
+        let w = ising_w_from_table(&t).unwrap();
+        assert!((w - 2.0 * beta).abs() < 1e-12);
+        // anti-ferromagnetic rejected
+        let t = crate::graph::PairFactor::ising(0, 1, -0.2).table;
+        assert!(ising_w_from_table(&t).is_none());
+        // asymmetric rejected
+        assert!(ising_w_from_table(&[[1.0, 0.5], [0.4, 1.0]]).is_none());
+    }
+
+    #[test]
+    fn higdon_reproduces_ising_table() {
+        let w = 1.2;
+        let h = HigdonDual::new(w, 0.3);
+        assert!((h.cell(false, false) - 1.0).abs() < 1e-9);
+        assert!((h.cell(true, true) - 1.0).abs() < 1e-9);
+        assert!((h.cell(false, true) - (-w).exp()).abs() < 1e-9);
+        assert!((h.cell(true, false) - (-w).exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_higdon_valid_across_alpha() {
+        check("higdon mixture valid", 100, |g: &mut Gen| {
+            let w = g.f64_in(0.05, 3.0);
+            let alpha = g.f64_in(0.0, (1.0 - (-w).exp()) * 0.999);
+            let h = HigdonDual::new(w, alpha);
+            for (x1, x2) in [(false, false), (false, true), (true, false), (true, true)] {
+                let wts = h.theta_weights(x1, x2);
+                if wts.iter().any(|&x| x < -1e-15) {
+                    return Err(format!("negative weight w={w} a={alpha}"));
+                }
+                let want = if x1 == x2 { 1.0 } else { (-w).exp() };
+                let got: f64 = wts.iter().sum();
+                if (got - want).abs() > 1e-8 {
+                    return Err(format!("cell mismatch {got} vs {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn higdon_rejects_oversized_alpha() {
+        HigdonDual::new(0.5, 0.9);
+    }
+}

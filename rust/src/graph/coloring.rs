@@ -1,0 +1,235 @@
+//! Graph coloring — the *baseline* the paper argues against.
+//!
+//! Chromatic parallel Gibbs [Gonzalez et al., AISTATS 2011] colors the
+//! variable-adjacency graph and resamples each color class in parallel.
+//! Finding a minimal coloring is NP-hard [Garey–Johnson–Stockmeyer 1974];
+//! we implement the two standard heuristics (greedy-by-order and DSATUR)
+//! plus the *maintenance cost model* the dynamic benchmark measures: on
+//! factor insertion the coloring may become invalid and must be repaired.
+
+use super::{FactorGraph, VarId};
+
+/// A proper coloring: `color[v]` with `num_colors` classes.
+#[derive(Clone, Debug)]
+pub struct Coloring {
+    pub color: Vec<u32>,
+    pub num_colors: u32,
+    /// Topology version of the graph this coloring was computed for.
+    pub version: u64,
+}
+
+impl Coloring {
+    /// Variables grouped per color class (parallel-sweep schedule).
+    pub fn classes(&self) -> Vec<Vec<VarId>> {
+        let mut out = vec![Vec::new(); self.num_colors as usize];
+        for (v, &c) in self.color.iter().enumerate() {
+            out[c as usize].push(v);
+        }
+        out
+    }
+
+    /// Check properness against the current graph.
+    pub fn is_proper(&self, g: &FactorGraph) -> bool {
+        g.factors()
+            .all(|(_, f)| self.color[f.v1] != self.color[f.v2])
+    }
+}
+
+/// Greedy coloring in natural variable order. For a 2-colorable grid
+/// visited row-major this recovers the checkerboard 2-coloring.
+pub fn greedy(g: &FactorGraph) -> Coloring {
+    color_in_order(g, (0..g.num_vars()).collect())
+}
+
+/// DSATUR (saturation-degree) heuristic — usually fewer colors on
+/// irregular graphs at O((V+E) log V) cost.
+pub fn dsatur(g: &FactorGraph) -> Coloring {
+    let n = g.num_vars();
+    let mut color = vec![u32::MAX; n];
+    let mut saturation: Vec<std::collections::BTreeSet<u32>> =
+        vec![std::collections::BTreeSet::new(); n];
+    let mut num_colors = 0u32;
+
+    // heap keyed by (saturation, degree); BTreeSet as a priority structure
+    // with updatable keys.
+    let mut heap: std::collections::BTreeSet<(usize, usize, VarId)> = (0..n)
+        .map(|v| (0usize, g.degree(v), v))
+        .collect();
+
+    while let Some(&(sat, deg, v)) = heap.iter().next_back() {
+        heap.remove(&(sat, deg, v));
+        if color[v] != u32::MAX {
+            continue;
+        }
+        let c = smallest_free_color(&saturation[v]);
+        color[v] = c;
+        num_colors = num_colors.max(c + 1);
+        for u in g.neighbors(v) {
+            if color[u] == u32::MAX && saturation[u].insert(c) {
+                let old = (saturation[u].len() - 1, g.degree(u), u);
+                heap.remove(&old);
+                heap.insert((saturation[u].len(), g.degree(u), u));
+            }
+        }
+    }
+    Coloring {
+        color,
+        num_colors: num_colors.max(if n > 0 { 1 } else { 0 }),
+        version: g.version(),
+    }
+}
+
+fn color_in_order(g: &FactorGraph, order: Vec<VarId>) -> Coloring {
+    let n = g.num_vars();
+    let mut color = vec![u32::MAX; n];
+    let mut num_colors = 0u32;
+    let mut used = std::collections::BTreeSet::new();
+    for v in order {
+        used.clear();
+        for u in g.neighbors(v) {
+            if color[u] != u32::MAX {
+                used.insert(color[u]);
+            }
+        }
+        let c = smallest_free_color(&used);
+        color[v] = c;
+        num_colors = num_colors.max(c + 1);
+    }
+    Coloring {
+        color,
+        num_colors: num_colors.max(if n > 0 { 1 } else { 0 }),
+        version: g.version(),
+    }
+}
+
+fn smallest_free_color(used: &std::collections::BTreeSet<u32>) -> u32 {
+    let mut c = 0u32;
+    for &u in used {
+        if u == c {
+            c += 1;
+        } else if u > c {
+            break;
+        }
+    }
+    c
+}
+
+/// Incremental repair after topology mutations: recolor only conflicted
+/// variables (may add colors). Returns the number of variables touched —
+/// the *maintenance cost* reported by the dynamic benchmark.
+pub fn repair(g: &FactorGraph, coloring: &mut Coloring) -> usize {
+    let mut touched = 0;
+    // collect conflicted variables (one endpoint per conflicting factor)
+    let conflicted: Vec<VarId> = g
+        .factors()
+        .filter(|(_, f)| coloring.color[f.v1] == coloring.color[f.v2])
+        .map(|(_, f)| f.v2)
+        .collect();
+    let mut used = std::collections::BTreeSet::new();
+    for v in conflicted {
+        if coloring.color[v] == u32::MAX
+            || g.neighbors(v)
+                .iter()
+                .any(|&u| coloring.color[u] == coloring.color[v])
+        {
+            used.clear();
+            for u in g.neighbors(v) {
+                used.insert(coloring.color[u]);
+            }
+            let c = smallest_free_color(&used);
+            coloring.color[v] = c;
+            coloring.num_colors = coloring.num_colors.max(c + 1);
+            touched += 1;
+        }
+    }
+    // grown variables (add_var) default to color 0; extend vector if needed
+    while coloring.color.len() < g.num_vars() {
+        coloring.color.push(0);
+        touched += 1;
+    }
+    coloring.version = g.version();
+    touched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::PairFactor;
+    use crate::util::proptest::{check, Gen};
+    use crate::workloads;
+
+    #[test]
+    fn grid_is_two_colored_by_greedy() {
+        let g = workloads::ising_grid(6, 6, 0.3, 0.0);
+        let c = greedy(&g);
+        assert!(c.is_proper(&g));
+        assert_eq!(c.num_colors, 2);
+    }
+
+    #[test]
+    fn dsatur_on_grid() {
+        let g = workloads::ising_grid(5, 7, 0.3, 0.0);
+        let c = dsatur(&g);
+        assert!(c.is_proper(&g));
+        assert!(c.num_colors <= 3, "num_colors={}", c.num_colors);
+    }
+
+    #[test]
+    fn complete_graph_needs_n_colors() {
+        let g = workloads::fully_connected_ising(6, |_, _| 0.1);
+        for c in [greedy(&g), dsatur(&g)] {
+            assert!(c.is_proper(&g));
+            assert_eq!(c.num_colors, 6);
+        }
+    }
+
+    #[test]
+    fn classes_partition_vars() {
+        let g = workloads::ising_grid(4, 4, 0.2, 0.0);
+        let c = greedy(&g);
+        let total: usize = c.classes().iter().map(Vec::len).sum();
+        assert_eq!(total, g.num_vars());
+    }
+
+    #[test]
+    fn repair_fixes_inserted_conflict() {
+        let mut g = workloads::ising_grid(4, 4, 0.2, 0.0);
+        let mut c = greedy(&g);
+        assert!(c.is_proper(&g));
+        // diagonal edge creates a same-color conflict on the checkerboard
+        g.add_factor(PairFactor::ising(0, 5, 0.2));
+        assert!(!c.is_proper(&g));
+        let touched = repair(&g, &mut c);
+        assert!(touched >= 1);
+        assert!(c.is_proper(&g));
+    }
+
+    #[test]
+    fn prop_colorings_always_proper() {
+        check("greedy/dsatur proper on random graphs", 30, |g: &mut Gen| {
+            let n = g.usize_in(2..=30);
+            let mut fg = crate::graph::FactorGraph::new(n);
+            for _ in 0..g.usize_in(1..=80) {
+                let v1 = g.usize_in(0..=n - 1);
+                let mut v2 = g.usize_in(0..=n - 1);
+                if v1 == v2 {
+                    v2 = (v2 + 1) % n;
+                }
+                fg.add_factor(PairFactor::ising(v1, v2, 0.1));
+            }
+            for c in [greedy(&fg), dsatur(&fg)] {
+                if !c.is_proper(&fg) {
+                    return Err("improper coloring".into());
+                }
+                if c.num_colors as usize > fg.max_degree() + 1 {
+                    return Err(format!(
+                        "used {} colors, max_degree {}",
+                        c.num_colors,
+                        fg.max_degree()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,349 @@
+//! Dynamic pairwise factor graph over binary variables.
+//!
+//! The paper's motivating deployment is a *dynamic network*: factors are
+//! added and removed on a continuous basis, which makes maintaining a graph
+//! coloring (the standard route to parallel Gibbs) expensive. This module
+//! provides the mutable substrate: factors live in a slot map so
+//! [`FactorId`]s stay stable across removals, and per-variable adjacency is
+//! updated in O(degree).
+//!
+//! Potential convention: a factor stores the strictly positive 2×2 table
+//! `P[x1][x2] ∝ p(x_{v1}=x1, x_{v2}=x2)`; each variable additionally
+//! carries a unary log-odds `u_v` contributing `exp(u_v · x_v)`.
+
+pub mod coloring;
+
+/// Index of a variable (dense, `0..num_vars`).
+pub type VarId = usize;
+
+/// Stable handle of a factor (slot-map key; survives unrelated removals).
+pub type FactorId = usize;
+
+/// A pairwise factor: strictly positive 2×2 table over `(v1, v2)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PairFactor {
+    pub v1: VarId,
+    pub v2: VarId,
+    /// `table[x1][x2]`, strictly positive.
+    pub table: [[f64; 2]; 2],
+}
+
+impl PairFactor {
+    pub fn new(v1: VarId, v2: VarId, table: [[f64; 2]; 2]) -> Self {
+        assert!(
+            table.iter().flatten().all(|&p| p > 0.0 && p.is_finite()),
+            "factor tables must be strictly positive and finite: {table:?}"
+        );
+        Self { v1, v2, table }
+    }
+
+    /// Ising coupling: `exp(+β)` on agreement, `exp(−β)` on disagreement.
+    pub fn ising(v1: VarId, v2: VarId, beta: f64) -> Self {
+        let hi = beta.exp();
+        let lo = (-beta).exp();
+        Self::new(v1, v2, [[hi, lo], [lo, hi]])
+    }
+
+    /// Log-potential of a joint assignment of the two endpoints.
+    #[inline]
+    pub fn log_potential(&self, x1: u8, x2: u8) -> f64 {
+        self.table[x1 as usize][x2 as usize].ln()
+    }
+}
+
+/// Dynamic binary pairwise MRF.
+#[derive(Clone, Debug, Default)]
+pub struct FactorGraph {
+    unary: Vec<f64>,
+    slots: Vec<Option<PairFactor>>,
+    free: Vec<FactorId>,
+    /// Per-variable incident factor ids (including removed slots is NOT
+    /// allowed: removal cleans adjacency eagerly).
+    adj: Vec<Vec<FactorId>>,
+    active: usize,
+    /// Bumped on every topology mutation; consumers (compiled-artifact
+    /// caches, colorings) use it to detect staleness.
+    version: u64,
+}
+
+impl FactorGraph {
+    /// Graph with `n` binary variables, no factors, zero unary fields.
+    pub fn new(n: usize) -> Self {
+        Self {
+            unary: vec![0.0; n],
+            slots: Vec::new(),
+            free: Vec::new(),
+            adj: vec![Vec::new(); n],
+            active: 0,
+            version: 0,
+        }
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.unary.len()
+    }
+
+    /// Number of live factors.
+    pub fn num_factors(&self) -> usize {
+        self.active
+    }
+
+    /// Monotone topology version (see struct docs).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Append a new variable; returns its id.
+    pub fn add_var(&mut self, unary_logodds: f64) -> VarId {
+        self.unary.push(unary_logodds);
+        self.adj.push(Vec::new());
+        self.version += 1;
+        self.unary.len() - 1
+    }
+
+    pub fn unary(&self, v: VarId) -> f64 {
+        self.unary[v]
+    }
+
+    pub fn set_unary(&mut self, v: VarId, logodds: f64) {
+        self.unary[v] = logodds;
+        self.version += 1;
+    }
+
+    /// Insert a factor; O(1) amortized — the heart of the dynamic story.
+    pub fn add_factor(&mut self, f: PairFactor) -> FactorId {
+        assert!(f.v1 < self.num_vars() && f.v2 < self.num_vars());
+        assert_ne!(f.v1, f.v2, "self-loop factors are not pairwise");
+        let (v1, v2) = (f.v1, f.v2);
+        let id = match self.free.pop() {
+            Some(id) => {
+                self.slots[id] = Some(f);
+                id
+            }
+            None => {
+                self.slots.push(Some(f));
+                self.slots.len() - 1
+            }
+        };
+        self.adj[v1].push(id);
+        self.adj[v2].push(id);
+        self.active += 1;
+        self.version += 1;
+        id
+    }
+
+    /// Remove a factor by id; O(degree of endpoints).
+    pub fn remove_factor(&mut self, id: FactorId) -> Option<PairFactor> {
+        let f = self.slots.get_mut(id)?.take()?;
+        for v in [f.v1, f.v2] {
+            let list = &mut self.adj[v];
+            let pos = list.iter().position(|&x| x == id).expect("adjacency desync");
+            list.swap_remove(pos);
+        }
+        self.free.push(id);
+        self.active -= 1;
+        self.version += 1;
+        Some(f)
+    }
+
+    pub fn factor(&self, id: FactorId) -> Option<&PairFactor> {
+        self.slots.get(id).and_then(Option::as_ref)
+    }
+
+    /// Iterate live `(id, factor)` pairs in slot order (deterministic).
+    pub fn factors(&self) -> impl Iterator<Item = (FactorId, &PairFactor)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|f| (i, f)))
+    }
+
+    /// Ids of factors incident to `v`.
+    pub fn incident(&self, v: VarId) -> &[FactorId] {
+        &self.adj[v]
+    }
+
+    pub fn degree(&self, v: VarId) -> usize {
+        self.adj[v].len()
+    }
+
+    /// Distinct variable neighbors of `v` (allocates; not for hot loops).
+    pub fn neighbors(&self, v: VarId) -> Vec<VarId> {
+        let mut out: Vec<VarId> = self.adj[v]
+            .iter()
+            .map(|&id| {
+                let f = self.factor(id).unwrap();
+                if f.v1 == v {
+                    f.v2
+                } else {
+                    f.v1
+                }
+            })
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Unnormalized log-probability of a full assignment (`x[v] ∈ {0, 1}`).
+    pub fn log_prob_unnorm(&self, x: &[u8]) -> f64 {
+        assert_eq!(x.len(), self.num_vars());
+        let mut lp: f64 = x
+            .iter()
+            .zip(&self.unary)
+            .map(|(&xi, &u)| xi as f64 * u)
+            .sum();
+        for (_, f) in self.factors() {
+            lp += self.slots_log_potential(f, x);
+        }
+        lp
+    }
+
+    #[inline]
+    fn slots_log_potential(&self, f: &PairFactor, x: &[u8]) -> f64 {
+        f.table[x[f.v1] as usize][x[f.v2] as usize].ln()
+    }
+
+    /// Conditional log-odds of `x_v = 1` given the rest (sequential Gibbs core).
+    #[inline]
+    pub fn conditional_logodds(&self, v: VarId, x: &[u8]) -> f64 {
+        let mut z = self.unary[v];
+        for &id in &self.adj[v] {
+            let f = self.slots[id].as_ref().unwrap();
+            if f.v1 == v {
+                let other = x[f.v2] as usize;
+                z += (f.table[1][other] / f.table[0][other]).ln();
+            } else {
+                let other = x[f.v1] as usize;
+                z += (f.table[other][1] / f.table[other][0]).ln();
+            }
+        }
+        z
+    }
+
+    /// Maximum variable degree (drives coloring size).
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vars()).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+
+    fn tri() -> (FactorGraph, [FactorId; 3]) {
+        let mut g = FactorGraph::new(3);
+        let a = g.add_factor(PairFactor::ising(0, 1, 0.5));
+        let b = g.add_factor(PairFactor::ising(1, 2, 0.5));
+        let c = g.add_factor(PairFactor::ising(0, 2, 0.5));
+        (g, [a, b, c])
+    }
+
+    #[test]
+    fn add_remove_roundtrip() {
+        let (mut g, [a, b, c]) = tri();
+        assert_eq!(g.num_factors(), 3);
+        assert_eq!(g.degree(1), 2);
+        let f = g.remove_factor(b).unwrap();
+        assert_eq!((f.v1, f.v2), (1, 2));
+        assert_eq!(g.num_factors(), 2);
+        assert_eq!(g.degree(1), 1);
+        assert_eq!(g.remove_factor(b), None); // double remove
+        // slot reuse
+        let d = g.add_factor(PairFactor::ising(1, 2, 0.9));
+        assert_eq!(d, b);
+        let _ = (a, c);
+    }
+
+    #[test]
+    fn version_tracks_mutations() {
+        let (mut g, [a, ..]) = tri();
+        let v0 = g.version();
+        g.remove_factor(a);
+        assert!(g.version() > v0);
+        let v1 = g.version();
+        g.set_unary(0, 1.0);
+        assert!(g.version() > v1);
+    }
+
+    #[test]
+    fn neighbors_and_incident() {
+        let (g, _) = tri();
+        assert_eq!(g.neighbors(0), vec![1, 2]);
+        assert_eq!(g.incident(0).len(), 2);
+        assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    fn conditional_logodds_matches_definition() {
+        let (g, _) = tri();
+        // check by brute force: logodds = logP(x_v=1, rest) - logP(x_v=0, rest)
+        for pattern in 0..8usize {
+            let x: Vec<u8> = (0..3).map(|v| ((pattern >> v) & 1) as u8).collect();
+            for v in 0..3 {
+                let mut x1 = x.clone();
+                x1[v] = 1;
+                let mut x0 = x.clone();
+                x0[v] = 0;
+                let want = g.log_prob_unnorm(&x1) - g.log_prob_unnorm(&x0);
+                let got = g.conditional_logodds(v, &x);
+                assert!((want - got).abs() < 1e-12, "v={v} pattern={pattern}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly positive")]
+    fn rejects_zero_entries() {
+        PairFactor::new(0, 1, [[1.0, 0.0], [1.0, 1.0]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn rejects_self_loops() {
+        let mut g = FactorGraph::new(2);
+        g.add_factor(PairFactor::ising(1, 1, 0.1));
+    }
+
+    #[test]
+    fn prop_random_churn_keeps_adjacency_consistent() {
+        check("graph churn consistency", 50, |g: &mut Gen| {
+            let n = g.usize_in(2..=12);
+            let mut fg = FactorGraph::new(n);
+            let mut live: Vec<FactorId> = Vec::new();
+            for _ in 0..g.usize_in(1..=60) {
+                if live.is_empty() || g.bool() {
+                    let v1 = g.usize_in(0..=n - 1);
+                    let mut v2 = g.usize_in(0..=n - 1);
+                    if v1 == v2 {
+                        v2 = (v2 + 1) % n;
+                    }
+                    let t = g.positive_table(2.0);
+                    live.push(fg.add_factor(PairFactor::new(v1, v2, t)));
+                } else {
+                    let k = g.usize_in(0..=live.len() - 1);
+                    let id = live.swap_remove(k);
+                    if fg.remove_factor(id).is_none() {
+                        return Err(format!("live id {id} missing"));
+                    }
+                }
+            }
+            // invariants
+            if fg.num_factors() != live.len() {
+                return Err("active count desync".into());
+            }
+            let adj_total: usize = (0..n).map(|v| fg.degree(v)).sum();
+            if adj_total != 2 * live.len() {
+                return Err("adjacency total != 2F".into());
+            }
+            for &id in &live {
+                let f = fg.factor(id).ok_or("live factor missing")?;
+                if !fg.incident(f.v1).contains(&id) || !fg.incident(f.v2).contains(&id) {
+                    return Err("incidence lists desync".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,370 @@
+//! Belief propagation on forests (acyclic factor subsets).
+//!
+//! The §5.4 blocking machinery needs three exact tree primitives, all
+//! provided here over the *same* upward message pass:
+//!
+//! * [`Forest::sum_product`] — marginals + log Z (tree mean-field / logZ),
+//! * [`Forest::max_product`] — MAP with backtracking (blocked EM),
+//! * [`Forest::sample`] — forward-filter backward-sample: one exact joint
+//!   draw of all tree variables (blocked PD Gibbs).
+//!
+//! A [`Forest`] is built from a [`FactorGraph`] plus a subset of factor
+//! ids; construction fails if the subset contains a cycle. Unary fields
+//! are *inputs* to each call (not baked in) because the blocked sampler
+//! re-derives them each sweep from the off-tree dual state.
+
+use crate::graph::{FactorGraph, FactorId, VarId};
+use crate::rng::{Pcg64, RngCore};
+
+use super::exact::log_sum_exp;
+
+#[derive(Clone, Debug)]
+struct TreeEdge {
+    v1: VarId,
+    v2: VarId,
+    /// `log_table[x1][x2]`.
+    log_table: [[f64; 2]; 2],
+}
+
+/// An acyclic collection of pairwise factors over `n` variables.
+#[derive(Clone, Debug)]
+pub struct Forest {
+    n: usize,
+    edges: Vec<TreeEdge>,
+    /// BFS order: `(node, Some(edge index to parent))`, roots first with None.
+    order: Vec<(VarId, Option<usize>)>,
+    /// `parent[v]` = (parent var, edge index) for non-roots.
+    parent: Vec<Option<(VarId, usize)>>,
+}
+
+impl Forest {
+    /// Build from a subset of the graph's factors. Returns `Err` with the
+    /// offending factor if the subset is cyclic (a factor joins two
+    /// already-connected variables).
+    pub fn from_factors(g: &FactorGraph, ids: &[FactorId]) -> Result<Forest, FactorId> {
+        let n = g.num_vars();
+        let mut uf = crate::util::UnionFind::new(n);
+        let mut edges = Vec::with_capacity(ids.len());
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for &id in ids {
+            let f = g.factor(id).expect("dead factor id in forest");
+            if !uf.union(f.v1, f.v2) {
+                return Err(id);
+            }
+            let mut log_table = [[0.0; 2]; 2];
+            for (a, row) in log_table.iter_mut().enumerate() {
+                for (b, cell) in row.iter_mut().enumerate() {
+                    *cell = f.table[a][b].ln();
+                }
+            }
+            let e = edges.len();
+            edges.push(TreeEdge {
+                v1: f.v1,
+                v2: f.v2,
+                log_table,
+            });
+            adj[f.v1].push(e);
+            adj[f.v2].push(e);
+        }
+        // BFS forest
+        let mut order = Vec::with_capacity(n);
+        let mut parent = vec![None; n];
+        let mut seen = vec![false; n];
+        let mut queue = std::collections::VecDeque::new();
+        for root in 0..n {
+            if seen[root] {
+                continue;
+            }
+            seen[root] = true;
+            order.push((root, None));
+            queue.push_back(root);
+            while let Some(v) = queue.pop_front() {
+                for &e in &adj[v] {
+                    let other = if edges[e].v1 == v { edges[e].v2 } else { edges[e].v1 };
+                    if !seen[other] {
+                        seen[other] = true;
+                        parent[other] = Some((v, e));
+                        order.push((other, Some(e)));
+                        queue.push_back(other);
+                    }
+                }
+            }
+        }
+        Ok(Forest {
+            n,
+            edges,
+            order,
+            parent,
+        })
+    }
+
+    /// Spanning forest of the whole graph (greedy first-come edges);
+    /// returns the chosen factor ids — the default §5.4 blocking choice.
+    pub fn spanning_ids(g: &FactorGraph) -> Vec<FactorId> {
+        let mut uf = crate::util::UnionFind::new(g.num_vars());
+        g.factors()
+            .filter(|(_, f)| uf.union(f.v1, f.v2))
+            .map(|(id, _)| id)
+            .collect()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    #[inline]
+    fn edge_log(&self, e: usize, xv: usize, v: VarId, xo: usize) -> f64 {
+        let ed = &self.edges[e];
+        if ed.v1 == v {
+            ed.log_table[xv][xo]
+        } else {
+            ed.log_table[xo][xv]
+        }
+    }
+
+    /// Upward pass. `up[v][s]` = log message from `v`'s subtree to its
+    /// parent, as a function of the *parent's* state `s`; `local[v][s]` =
+    /// field(v, s) + Σ child messages (a function of `v`'s own state).
+    fn upward<const MAX: bool>(&self, fields: &[f64]) -> (Vec<[f64; 2]>, Vec<[f64; 2]>) {
+        assert_eq!(fields.len(), self.n);
+        let mut up = vec![[0.0f64; 2]; self.n];
+        let mut local = vec![[0.0f64; 2]; self.n];
+        for v in 0..self.n {
+            local[v] = [0.0, fields[v]];
+        }
+        // children precede parents in reverse BFS order
+        for &(v, pe) in self.order.iter().rev() {
+            if let Some(e) = pe {
+                let (p, _) = self.parent[v].unwrap();
+                debug_assert_eq!(self.parent[v].unwrap().1, e);
+                for s in 0..2 {
+                    let t0 = local[v][0] + self.edge_log(e, 0, v, s);
+                    let t1 = local[v][1] + self.edge_log(e, 1, v, s);
+                    up[v][s] = if MAX {
+                        t0.max(t1)
+                    } else {
+                        log_sum_exp(&[t0, t1])
+                    };
+                }
+                local[p][0] += up[v][0];
+                local[p][1] += up[v][1];
+            }
+        }
+        (up, local)
+    }
+
+    /// Exact marginals `P(x_v = 1)` and log Z, given per-variable fields
+    /// (log-odds: state 1 contributes `fields[v]`, state 0 contributes 0).
+    pub fn sum_product(&self, fields: &[f64]) -> (Vec<f64>, f64) {
+        let (up, local) = self.upward::<false>(fields);
+        // downward pass: dn[v][s] = log message arriving at v from above
+        let mut dn = vec![[0.0f64; 2]; self.n];
+        let mut log_z = 0.0;
+        for &(v, pe) in &self.order {
+            match pe {
+                None => {
+                    log_z += log_sum_exp(&[local[v][0], local[v][1]]);
+                }
+                Some(e) => {
+                    let (p, _) = self.parent[v].unwrap();
+                    // parent belief minus v's own upward contribution
+                    for s in 0..2 {
+                        let without = [
+                            local[p][0] - up[v][0] + dn[p][0] + self.edge_log(e, s, v, 0),
+                            local[p][1] - up[v][1] + dn[p][1] + self.edge_log(e, s, v, 1),
+                        ];
+                        dn[v][s] = log_sum_exp(&without);
+                    }
+                }
+            }
+        }
+        let marginals = (0..self.n)
+            .map(|v| {
+                let b = [local[v][0] + dn[v][0], local[v][1] + dn[v][1]];
+                let z = log_sum_exp(&b);
+                (b[1] - z).exp()
+            })
+            .collect();
+        (marginals, log_z)
+    }
+
+    /// Exact MAP assignment (max-product + backtracking).
+    pub fn max_product(&self, fields: &[f64]) -> Vec<u8> {
+        let (_, local) = self.upward::<true>(fields);
+        let mut x = vec![0u8; self.n];
+        for &(v, pe) in &self.order {
+            match pe {
+                None => {
+                    x[v] = (local[v][1] > local[v][0]) as u8;
+                }
+                Some(e) => {
+                    let (p, _) = self.parent[v].unwrap();
+                    let s = x[p] as usize;
+                    let t0 = local[v][0] + self.edge_log(e, 0, v, s);
+                    let t1 = local[v][1] + self.edge_log(e, 1, v, s);
+                    x[v] = (t1 > t0) as u8;
+                }
+            }
+        }
+        x
+    }
+
+    /// One exact joint sample (forward-filter backward-sample).
+    pub fn sample(&self, fields: &[f64], rng: &mut Pcg64) -> Vec<u8> {
+        let (_, local) = self.upward::<false>(fields);
+        let mut x = vec![0u8; self.n];
+        for &(v, pe) in &self.order {
+            let (b0, b1) = match pe {
+                None => (local[v][0], local[v][1]),
+                Some(e) => {
+                    let (p, _) = self.parent[v].unwrap();
+                    let s = x[p] as usize;
+                    (
+                        local[v][0] + self.edge_log(e, 0, v, s),
+                        local[v][1] + self.edge_log(e, 1, v, s),
+                    )
+                }
+            };
+            let p1 = crate::rng::sigmoid(b1 - b0);
+            x[v] = rng.bernoulli(p1) as u8;
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::exact;
+    use crate::util::proptest::{check, Gen};
+    use crate::workloads;
+
+    fn tree_fields(g: &FactorGraph) -> Vec<f64> {
+        (0..g.num_vars()).map(|v| g.unary(v)).collect()
+    }
+
+    #[test]
+    fn sum_product_matches_enumeration_on_random_trees() {
+        for seed in 0..5 {
+            let g = workloads::random_tree(8, 0.9, seed);
+            let ids: Vec<_> = g.factors().map(|(id, _)| id).collect();
+            let forest = Forest::from_factors(&g, &ids).unwrap();
+            let (marg, log_z) = forest.sum_product(&tree_fields(&g));
+            let want = exact::enumerate(&g);
+            assert!((log_z - want.log_z).abs() < 1e-9, "seed {seed}");
+            for v in 0..8 {
+                assert!(
+                    (marg[v] - want.marginals[v]).abs() < 1e-9,
+                    "seed {seed} v {v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn max_product_matches_enumeration() {
+        for seed in 5..10 {
+            let g = workloads::random_tree(7, 1.2, seed);
+            let ids: Vec<_> = g.factors().map(|(id, _)| id).collect();
+            let forest = Forest::from_factors(&g, &ids).unwrap();
+            let map = forest.max_product(&tree_fields(&g));
+            let want = exact::enumerate(&g);
+            let got_lp = g.log_prob_unnorm(&map);
+            assert!(
+                (got_lp - want.map_log_prob).abs() < 1e-9,
+                "seed {seed}: {got_lp} vs {}",
+                want.map_log_prob
+            );
+        }
+    }
+
+    #[test]
+    fn sampling_matches_marginals() {
+        let g = workloads::random_tree(6, 0.8, 21);
+        let ids: Vec<_> = g.factors().map(|(id, _)| id).collect();
+        let forest = Forest::from_factors(&g, &ids).unwrap();
+        let fields = tree_fields(&g);
+        let (marg, _) = forest.sum_product(&fields);
+        let mut rng = Pcg64::seed(3);
+        let mut counts = vec![0u64; 6];
+        let reps = 200_000;
+        for _ in 0..reps {
+            let x = forest.sample(&fields, &mut rng);
+            for (v, &xv) in x.iter().enumerate() {
+                counts[v] += xv as u64;
+            }
+        }
+        for v in 0..6 {
+            let freq = counts[v] as f64 / reps as f64;
+            assert!((freq - marg[v]).abs() < 0.005, "v={v}: {freq} vs {}", marg[v]);
+        }
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let g = workloads::ising_grid(2, 2, 0.3, 0.0);
+        let ids: Vec<_> = g.factors().map(|(id, _)| id).collect();
+        assert_eq!(ids.len(), 4); // the 4-cycle
+        assert!(Forest::from_factors(&g, &ids).is_err());
+        assert!(Forest::from_factors(&g, &ids[..3]).is_ok());
+    }
+
+    #[test]
+    fn spanning_ids_are_acyclic_and_maximal() {
+        let g = workloads::ising_grid(4, 5, 0.3, 0.0);
+        let ids = Forest::spanning_ids(&g);
+        assert_eq!(ids.len(), g.num_vars() - 1); // connected grid
+        assert!(Forest::from_factors(&g, &ids).is_ok());
+    }
+
+    #[test]
+    fn disconnected_forest_logz() {
+        // two disjoint edges + one isolated variable
+        let mut g = FactorGraph::new(5);
+        g.set_unary(4, 0.5);
+        g.add_factor(crate::graph::PairFactor::ising(0, 1, 0.4));
+        g.add_factor(crate::graph::PairFactor::ising(2, 3, -0.3));
+        let ids: Vec<_> = g.factors().map(|(id, _)| id).collect();
+        let forest = Forest::from_factors(&g, &ids).unwrap();
+        let (marg, log_z) = forest.sum_product(&tree_fields(&g));
+        let want = exact::enumerate(&g);
+        assert!((log_z - want.log_z).abs() < 1e-9);
+        for v in 0..5 {
+            assert!((marg[v] - want.marginals[v]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn prop_bp_exact_on_random_forests() {
+        check("bp == enumeration on forests", 30, |gn: &mut Gen| {
+            let n = gn.usize_in(2..=9);
+            let g = workloads::random_tree(n, 1.0, gn.u64());
+            // drop a random subset of edges to get a strict forest
+            let ids: Vec<_> = g
+                .factors()
+                .map(|(id, _)| id)
+                .filter(|_| gn.f64_in(0.0, 1.0) < 0.8)
+                .collect();
+            let forest = Forest::from_factors(&g, &ids).map_err(|e| format!("cycle {e}"))?;
+            // build the comparison graph containing only kept factors
+            let mut sub = FactorGraph::new(n);
+            for v in 0..n {
+                sub.set_unary(v, g.unary(v));
+            }
+            for &id in &ids {
+                sub.add_factor(g.factor(id).unwrap().clone());
+            }
+            let want = exact::enumerate(&sub);
+            let (marg, log_z) = forest.sum_product(&tree_fields(&g));
+            if (log_z - want.log_z).abs() > 1e-8 {
+                return Err(format!("logZ {log_z} vs {}", want.log_z));
+            }
+            for v in 0..n {
+                if (marg[v] - want.marginals[v]).abs() > 1e-8 {
+                    return Err(format!("marginal v={v}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

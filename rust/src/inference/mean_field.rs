@@ -1,0 +1,266 @@
+//! Mean-field inference: naive coordinate ascent and the paper's parallel
+//! primal–dual variant (§5.3).
+//!
+//! Naive mean-field iterates `μ_v ← σ(conditional field under μ)` one
+//! variable at a time (sequential, always convergent to a local optimum).
+//! The primal–dual variant alternates
+//!
+//!   `η ← E[s(x) | ξ]`   (all variables in parallel)
+//!   `ξ ← E[r(θ) | η]`   (all factors in parallel)
+//!
+//! and, per Lemma 6, minimizes an *upper bound* on the true mean-field
+//! objective `KL(p(x|ξ) ‖ p(x))` — so it can be worse at the optimum (the
+//! paper recommends fine-tuning with naive updates afterwards; the
+//! [`pd_then_naive`] helper implements exactly that pipeline).
+
+use crate::duality::DualModel;
+use crate::graph::FactorGraph;
+use crate::rng::sigmoid;
+
+/// Result of a mean-field run.
+#[derive(Clone, Debug)]
+pub struct MeanFieldResult {
+    /// Final `μ_v = q(x_v = 1)`.
+    pub mu: Vec<f64>,
+    /// Iterations executed.
+    pub iters: usize,
+    /// Mean-field free energy `E_q[log q − log p̃]` (lower is better; equals
+    /// `−log Z + KL(q ‖ p)`).
+    pub free_energy: f64,
+}
+
+fn entropy_term(mu: f64) -> f64 {
+    let h = |p: f64| if p > 0.0 { p * p.ln() } else { 0.0 };
+    h(mu) + h(1.0 - mu)
+}
+
+/// Free energy of a fully factorized `q` on the graph.
+pub fn free_energy(g: &FactorGraph, mu: &[f64]) -> f64 {
+    let mut e = 0.0;
+    // E_q[-log p̃] = -Σ unary_v μ_v − Σ_f Σ_{a,b} q(a)q(b) log ψ_f(a,b)
+    for v in 0..g.num_vars() {
+        e -= g.unary(v) * mu[v];
+    }
+    for (_, f) in g.factors() {
+        for a in 0..2 {
+            for b in 0..2 {
+                let qa = if a == 1 { mu[f.v1] } else { 1.0 - mu[f.v1] };
+                let qb = if b == 1 { mu[f.v2] } else { 1.0 - mu[f.v2] };
+                e -= qa * qb * f.table[a][b].ln();
+            }
+        }
+    }
+    // + E_q[log q]
+    for &m in mu {
+        e += entropy_term(m);
+    }
+    e
+}
+
+/// Naive sequential mean-field until `max_dx < tol` or `max_iters`.
+pub fn naive(g: &FactorGraph, max_iters: usize, tol: f64) -> MeanFieldResult {
+    let n = g.num_vars();
+    let mut mu = vec![0.5f64; n];
+    let mut iters = 0;
+    for it in 0..max_iters {
+        iters = it + 1;
+        let mut max_dx: f64 = 0.0;
+        for v in 0..n {
+            // E[conditional log-odds] under q: replace neighbors by their means
+            let mut z = g.unary(v);
+            for &id in g.incident(v) {
+                let f = g.factor(id).unwrap();
+                let (mu_o, orient_first) = if f.v1 == v {
+                    (mu[f.v2], true)
+                } else {
+                    (mu[f.v1], false)
+                };
+                for (o, w) in [(0usize, 1.0 - mu_o), (1usize, mu_o)] {
+                    let ratio = if orient_first {
+                        (f.table[1][o] / f.table[0][o]).ln()
+                    } else {
+                        (f.table[o][1] / f.table[o][0]).ln()
+                    };
+                    z += w * ratio;
+                }
+            }
+            let new = sigmoid(z);
+            max_dx = max_dx.max((new - mu[v]).abs());
+            mu[v] = new;
+        }
+        if max_dx < tol {
+            break;
+        }
+    }
+    let fe = free_energy(g, &mu);
+    MeanFieldResult {
+        mu,
+        iters,
+        free_energy: fe,
+    }
+}
+
+/// Primal–dual parallel mean-field (§5.3) on a dualized model.
+///
+/// State: `eta[v] = E[x_v]`, `xi_th[i] = E[θ_i]`. Both updates touch every
+/// coordinate simultaneously — embarrassingly parallel, matching the
+/// paper's GPU story (the XLA artifact reuses the same dense form).
+pub fn primal_dual(m: &DualModel, max_iters: usize, tol: f64) -> (Vec<f64>, Vec<f64>, usize) {
+    let n = m.num_vars();
+    let mut eta = vec![0.5f64; n];
+    let mut xi = vec![0.5f64; m.factor_slots()];
+    let mut iters = 0;
+    for it in 0..max_iters {
+        iters = it + 1;
+        let mut max_dx: f64 = 0.0;
+        // η ← E[s(x) | ξ]: field uses E[θ] in place of θ
+        for v in 0..n {
+            let mut z = m.base_field(v);
+            for &(slot, beta) in m.incidence(v) {
+                z += xi[slot as usize] * beta;
+            }
+            let new = sigmoid(z);
+            max_dx = max_dx.max((new - eta[v]).abs());
+            eta[v] = new;
+        }
+        // ξ ← E[r(θ) | η]
+        for (slot, e) in m.entries() {
+            let z = e.q + e.beta1 * eta[e.v1] + e.beta2 * eta[e.v2];
+            let new = sigmoid(z);
+            max_dx = max_dx.max((new - xi[slot]).abs());
+            xi[slot] = new;
+        }
+        if max_dx < tol {
+            break;
+        }
+    }
+    (eta, xi, iters)
+}
+
+/// The paper's recommended pipeline: fast parallel PD mean-field to get a
+/// good initialization, then naive mean-field fine-tuning.
+pub fn pd_then_naive(
+    g: &FactorGraph,
+    m: &DualModel,
+    pd_iters: usize,
+    naive_iters: usize,
+    tol: f64,
+) -> MeanFieldResult {
+    let (eta, _, pd_done) = primal_dual(m, pd_iters, tol);
+    // seed naive MF with the PD solution
+    let n = g.num_vars();
+    let mut mu = eta;
+    let mut iters = pd_done;
+    for it in 0..naive_iters {
+        iters += 1;
+        let mut max_dx: f64 = 0.0;
+        for v in 0..n {
+            let mut z = g.unary(v);
+            for &id in g.incident(v) {
+                let f = g.factor(id).unwrap();
+                let (mu_o, first) = if f.v1 == v { (mu[f.v2], true) } else { (mu[f.v1], false) };
+                for (o, w) in [(0usize, 1.0 - mu_o), (1usize, mu_o)] {
+                    let ratio = if first {
+                        (f.table[1][o] / f.table[0][o]).ln()
+                    } else {
+                        (f.table[o][1] / f.table[o][0]).ln()
+                    };
+                    z += w * ratio;
+                }
+            }
+            let new = sigmoid(z);
+            max_dx = max_dx.max((new - mu[v]).abs());
+            mu[v] = new;
+        }
+        if max_dx < tol {
+            let _ = it;
+            break;
+        }
+    }
+    let fe = free_energy(g, &mu);
+    MeanFieldResult {
+        mu,
+        iters,
+        free_energy: fe,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::exact;
+    use crate::workloads;
+
+    #[test]
+    fn naive_exact_on_independent_variables() {
+        let mut g = FactorGraph::new(4);
+        for v in 0..4 {
+            g.set_unary(v, 0.3 * (v as f64 + 1.0));
+        }
+        let r = naive(&g, 100, 1e-12);
+        let want = exact::enumerate(&g);
+        for v in 0..4 {
+            assert!((r.mu[v] - want.marginals[v]).abs() < 1e-10);
+        }
+        // free energy equals −log Z exactly when q == p
+        assert!((r.free_energy + want.log_z).abs() < 1e-9);
+    }
+
+    #[test]
+    fn naive_free_energy_upper_bounds_neg_logz() {
+        let g = workloads::random_graph(8, 2, 0.7, 3);
+        let r = naive(&g, 200, 1e-10);
+        let want = exact::enumerate(&g);
+        assert!(
+            r.free_energy >= -want.log_z - 1e-9,
+            "F={} < -logZ={}",
+            r.free_energy,
+            -want.log_z
+        );
+    }
+
+    #[test]
+    fn pd_mean_field_agrees_on_weak_coupling() {
+        // weakly coupled: PD-MF and exact marginals should be close
+        let g = workloads::ising_grid(4, 4, 0.05, 0.2);
+        let m = crate::duality::DualModel::from_graph(&g);
+        // Lemma 6: PD-MF optimizes an upper bound on the true MF
+        // objective, so allow a visible-but-small bias (the logz bench
+        // quantifies it precisely).
+        let (eta, _, _) = primal_dual(&m, 500, 1e-12);
+        let want = exact::enumerate(&g);
+        for v in 0..16 {
+            assert!(
+                (eta[v] - want.marginals[v]).abs() < 0.05,
+                "v={v}: {} vs {}",
+                eta[v],
+                want.marginals[v]
+            );
+        }
+    }
+
+    #[test]
+    fn pd_then_naive_no_worse_than_pd_alone() {
+        let g = workloads::random_graph(10, 3, 0.8, 9);
+        let m = crate::duality::DualModel::from_graph(&g);
+        let (eta, _, _) = primal_dual(&m, 300, 1e-10);
+        let fe_pd = free_energy(&g, &eta);
+        let r = pd_then_naive(&g, &m, 300, 300, 1e-10);
+        assert!(
+            r.free_energy <= fe_pd + 1e-6,
+            "fine-tune worsened: {} vs {}",
+            r.free_energy,
+            fe_pd
+        );
+    }
+
+    #[test]
+    fn pd_mean_field_converges() {
+        let g = workloads::ising_grid(6, 6, 0.3, 0.1);
+        let m = crate::duality::DualModel::from_graph(&g);
+        let (eta, xi, iters) = primal_dual(&m, 2000, 1e-10);
+        assert!(iters < 2000, "did not converge");
+        assert!(eta.iter().all(|&e| (0.0..=1.0).contains(&e)));
+        assert!(xi.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+}

@@ -1,0 +1,18 @@
+//! Inference algorithms (§5) and exact oracles used to validate them.
+//!
+//! * [`exact`] — brute-force enumeration (≤ ~20 vars) and a transfer-matrix
+//!   solver for grids: ground truth for every sampler/estimator test.
+//! * [`bp`] — belief propagation on forests: sum-product marginals + log Z,
+//!   max-product MAP, and forward-filter/backward-sample exact tree
+//!   sampling (the §5.4 blocking primitive).
+//! * [`mean_field`] — naive coordinate-ascent mean-field and the paper's
+//!   parallel primal–dual mean-field (§5.3, Lemma 6 upper bound).
+//! * [`em_map`] — ICM baseline and the paper's parallel EM MAP (§5.3).
+//! * [`partition`] — §5.2 log-partition estimators: unbiased `V(x, θ)` and
+//!   the `E[log V]` lower bound.
+
+pub mod bp;
+pub mod em_map;
+pub mod exact;
+pub mod mean_field;
+pub mod partition;

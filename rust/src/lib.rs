@@ -1,0 +1,49 @@
+//! # pdgibbs — parallel Gibbs sampling via probabilistic duality
+//!
+//! Production reproduction of *"Probabilistic Duality for Parallel Gibbs
+//! Sampling without Graph Coloring"* (Mescheder, Nowozin, Geiger, 2016).
+//!
+//! The paper augments a discrete pairwise MRF `p(x)` with one auxiliary
+//! ("dual") variable per factor so that the joint becomes an exponential
+//! family harmonium `p(x, θ) ∝ h(x) g(θ) exp⟨s(x), r(θ)⟩`. Blockwise Gibbs
+//! on `(x, θ)` then resamples *every* primal variable in parallel, and
+//! *every* dual variable in parallel — no graph coloring, no preprocessing,
+//! and factors can be added/removed at any time.
+//!
+//! ## Crate layout (three-layer architecture)
+//!
+//! * [`graph`] — dynamic pairwise factor graph + builders + coloring baseline.
+//! * [`duality`] — §4.1 positive 2×2 factorization, Theorem-2 dual
+//!   parameters, multi-state 0–1 encoding, Swendsen–Wang decompositions.
+//! * [`samplers`] — sequential Gibbs, chromatic Gibbs, the primal–dual
+//!   sampler (native parallel), Swendsen–Wang, and tree-blocked PD (§5.4).
+//! * [`inference`] — exact enumeration/transfer-matrix oracles, tree BP,
+//!   mean-field & EM-MAP (§5.3), log-partition estimators (§5.2).
+//! * [`diagnostics`] — PSRF (Gelman–Rubin), ESS, mixing-time extraction.
+//! * [`runtime`] — PJRT executor for the AOT-lowered JAX/Pallas artifacts
+//!   (Layer 1+2); Python never runs on the request path.
+//! * [`coordinator`] — Layer 3: the dynamic-model server, chain manager,
+//!   convergence monitor and dispatch policy.
+//! * [`workloads`] — the paper's three synthetic model families + churn
+//!   traces + the image-denoising demo MRF.
+//! * [`bench`] — self-contained bench harness (criterion is unavailable
+//!   offline) used by every `benches/` binary.
+//! * [`util`] — substrates built from scratch for the offline environment:
+//!   JSON, CLI parsing, thread pool, property testing, union-find.
+
+pub mod bench;
+pub mod bench_support;
+pub mod coordinator;
+pub mod diagnostics;
+pub mod duality;
+pub mod graph;
+pub mod inference;
+pub mod rng;
+pub mod runtime;
+pub mod samplers;
+pub mod util;
+pub mod workloads;
+
+pub use duality::{DualFactor, DualModel};
+pub use graph::{FactorGraph, FactorId, VarId};
+pub use samplers::Sampler;

@@ -1,0 +1,288 @@
+//! pdgibbs CLI — leader entrypoint for the coordinator and the samplers.
+//!
+//! Subcommands:
+//!   sample     run a sampler on a synthetic workload, print marginals/throughput
+//!   mixing     PSRF mixing-time comparison on one workload (one Fig-2 point)
+//!   serve      run the dynamic coordinator on a churn trace, print stats
+//!   denoise    end-to-end image denoising through the XLA runtime
+//!   artifacts  list + compile-check + smoke-run the AOT artifacts
+//!
+//! Examples:
+//!   pdgibbs sample --workload grid --size 16 --beta 0.3 --sweeps 2000
+//!   pdgibbs mixing --workload grid --size 50 --beta 0.2
+//!   pdgibbs serve --vars 200 --target-factors 400 --steps 500
+//!   pdgibbs denoise --artifacts artifacts
+//!   pdgibbs artifacts --artifacts artifacts
+
+use std::sync::Arc;
+
+use pdgibbs::bench_support;
+use pdgibbs::coordinator::{Server, ServerConfig};
+use pdgibbs::duality::DualModel;
+use pdgibbs::rng::Pcg64;
+use pdgibbs::runtime::Runtime;
+use pdgibbs::util::cli::Cli;
+use pdgibbs::util::ThreadPool;
+use pdgibbs::workloads;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        eprintln!("usage: pdgibbs <sample|mixing|serve|denoise|artifacts> [options]");
+        std::process::exit(2);
+    };
+    let rest = rest.to_vec();
+    match cmd.as_str() {
+        "sample" => cmd_sample(&rest),
+        "mixing" => cmd_mixing(&rest),
+        "serve" => cmd_serve(&rest),
+        "denoise" => cmd_denoise(&rest),
+        "artifacts" => cmd_artifacts(&rest),
+        other => {
+            eprintln!("unknown subcommand '{other}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn build_workload(cli: &Cli) -> pdgibbs::FactorGraph {
+    let size = cli.get_usize("size");
+    let beta = cli.get_f64("beta");
+    match cli.get("workload").unwrap_or("grid") {
+        "grid" => workloads::ising_grid(size, size, beta, cli.get_f64("field")),
+        "random" => workloads::random_graph(size, cli.get_usize("k"), 1.0, cli.get_u64("seed")),
+        "complete" => workloads::fully_connected_ising(size, |_, _| beta),
+        other => {
+            eprintln!("unknown workload '{other}' (grid|random|complete)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn common_opts(name: &'static str, about: &'static str) -> Cli {
+    Cli::new(name, about)
+        .opt("workload", Some("grid"), "grid | random | complete")
+        .opt("size", Some("16"), "grid side / variable count")
+        .opt("beta", Some("0.3"), "coupling strength")
+        .opt("field", Some("0.0"), "uniform unary log-odds")
+        .opt("k", Some("2"), "factors-per-variable (random workload)")
+        .opt("seed", Some("0"), "experiment seed")
+        .opt("threads", Some("0"), "worker threads (0 = sequential)")
+}
+
+fn parse_or_exit(cli: Cli, args: &[String]) -> Cli {
+    cli.parse(&args.to_vec()).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    })
+}
+
+fn cmd_sample(args: &[String]) {
+    let cli = parse_or_exit(
+        common_opts("pdgibbs sample", "run one sampler, report marginal summary")
+            .opt("sampler", Some("pd"), "pd | sequential | chromatic | sw | blocked")
+            .opt("sweeps", Some("2000"), "post-burn-in sweeps")
+            .opt("burn-in", Some("500"), "burn-in sweeps"),
+        args,
+    );
+    let g = build_workload(&cli);
+    let pool = match cli.get_usize("threads") {
+        0 => None,
+        t => Some(Arc::new(ThreadPool::new(t))),
+    };
+    let mut rng = Pcg64::seed(cli.get_u64("seed"));
+    let mut sampler = bench_support::make_sampler(&g, cli.get("sampler").unwrap(), pool);
+    println!(
+        "workload: {} vars, {} factors; sampler: {}",
+        g.num_vars(),
+        g.num_factors(),
+        sampler.name()
+    );
+    let t0 = std::time::Instant::now();
+    let marg = pdgibbs::samplers::empirical_marginals(
+        sampler.as_mut(),
+        &mut rng,
+        cli.get_usize("burn-in"),
+        cli.get_usize("sweeps"),
+    );
+    let dt = t0.elapsed().as_secs_f64();
+    let mean = marg.iter().sum::<f64>() / marg.len() as f64;
+    let sweeps = cli.get_usize("burn-in") + cli.get_usize("sweeps");
+    println!("mean marginal: {mean:.4}");
+    println!(
+        "throughput: {:.1} sweeps/s ({:.2} Msite-updates/s)",
+        sweeps as f64 / dt,
+        sweeps as f64 * g.num_vars() as f64 / dt / 1e6
+    );
+}
+
+fn cmd_mixing(args: &[String]) {
+    let cli = parse_or_exit(
+        common_opts("pdgibbs mixing", "PSRF mixing-time, PD vs sequential")
+            .opt("chains", Some("10"), "parallel chains")
+            .opt("max-sweeps", Some("4000"), "sweep budget per sampler")
+            .opt("threshold", Some("1.01"), "PSRF threshold")
+            .opt("monitors", Some("16"), "number of monitored variables"),
+        args,
+    );
+    let g = build_workload(&cli);
+    let chains = cli.get_usize("chains");
+    let max_sweeps = cli.get_usize("max-sweeps");
+    let threshold = cli.get_f64("threshold");
+    let monitors = bench_support::pick_monitors(g.num_vars(), cli.get_usize("monitors"));
+    println!(
+        "workload: {} vars, {} factors; {chains} chains, threshold {threshold}",
+        g.num_vars(),
+        g.num_factors(),
+    );
+    for kind in ["pd", "sequential"] {
+        let r = bench_support::mixing_run(
+            &g,
+            kind,
+            chains,
+            max_sweeps,
+            threshold,
+            &monitors,
+            cli.get_u64("seed"),
+        );
+        match r.mixing_time {
+            Some(t) => println!(
+                "{kind:>12}: mixed at sweep {t} (final PSRF {:.4})",
+                r.final_psrf
+            ),
+            None => println!(
+                "{kind:>12}: NOT mixed in {max_sweeps} (final PSRF {:.4})",
+                r.final_psrf
+            ),
+        }
+    }
+}
+
+fn cmd_serve(args: &[String]) {
+    let cli = parse_or_exit(
+        Cli::new("pdgibbs serve", "dynamic coordinator on a churn trace")
+            .opt("vars", Some("100"), "variable count")
+            .opt("target-factors", Some("200"), "steady-state live factors")
+            .opt("steps", Some("200"), "churn operations")
+            .opt("beta-max", Some("0.4"), "max coupling of churned factors")
+            .opt("sweeps-per-op", Some("8"), "foreground sweeps between ops")
+            .opt("chains", Some("10"), "parallel chains")
+            .opt("seed", Some("0"), "trace seed"),
+        args,
+    );
+    let vars = cli.get_usize("vars");
+    let trace = workloads::ChurnTrace::generate(
+        vars,
+        cli.get_usize("target-factors"),
+        cli.get_usize("steps"),
+        cli.get_f64("beta-max"),
+        cli.get_u64("seed"),
+    );
+    let g = pdgibbs::FactorGraph::new(vars);
+    let mut server = Server::spawn(
+        g,
+        ServerConfig {
+            chains: cli.get_usize("chains"),
+            ..Default::default()
+        },
+    );
+    let h = server.handle();
+    let t0 = std::time::Instant::now();
+    pdgibbs::coordinator::server::replay_trace(&h, &trace, cli.get_usize("sweeps-per-op"));
+    let stats = h.stats();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "applied {} ops in {dt:.2}s ({:.0} ops/s) — {} live factors, {} sweeps done",
+        stats.ops_applied,
+        stats.ops_applied as f64 / dt,
+        stats.num_factors,
+        stats.sweeps_done
+    );
+    println!("metrics: {}", server.metrics.snapshot().dump());
+    server.shutdown();
+}
+
+fn cmd_denoise(args: &[String]) {
+    let cli = parse_or_exit(
+        Cli::new("pdgibbs denoise", "E2E denoising via the XLA runtime")
+            .opt("artifacts", Some("artifacts"), "artifact directory")
+            .opt("flip-prob", Some("0.12"), "observation noise")
+            .opt("coupling", Some("0.35"), "smoothness coupling")
+            .opt("chunks", Some("40"), "artifact chunks to run")
+            .opt("seed", Some("0"), "noise seed")
+            .flag("native", "use the native sampler instead of XLA")
+            .flag("quiet", "suppress image rendering"),
+        args,
+    );
+    match bench_support::denoise_e2e(
+        cli.get("artifacts").unwrap(),
+        cli.get_f64("flip-prob"),
+        cli.get_f64("coupling"),
+        cli.get_usize("chunks"),
+        cli.get_u64("seed"),
+        cli.get_flag("native"),
+        !cli.get_flag("quiet"),
+    ) {
+        Ok(result) => {
+            println!(
+                "accuracy: noisy {:.4} -> denoised {:.4} ({} sweeps in {:.2}s, {:.1} sweeps/s)",
+                result.noisy_accuracy,
+                result.denoised_accuracy,
+                result.sweeps,
+                result.seconds,
+                result.sweeps as f64 / result.seconds
+            );
+        }
+        Err(e) => {
+            eprintln!("denoise failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_artifacts(args: &[String]) {
+    let cli = parse_or_exit(
+        Cli::new("pdgibbs artifacts", "list and compile-check artifacts")
+            .opt("artifacts", Some("artifacts"), "artifact directory"),
+        args,
+    );
+    let rt = match Runtime::load(cli.get("artifacts").unwrap()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("failed to load artifacts (run `make artifacts`): {e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!("platform: {}", rt.platform());
+    for meta in &rt.manifest().artifacts {
+        let t0 = std::time::Instant::now();
+        match rt.executable(&meta.name) {
+            Ok(_) => println!(
+                "  {:<16} n={:<6} f={:<6} chains={:<3} sweeps/call={:<3} compiled in {:.2}s",
+                meta.name,
+                meta.n,
+                meta.f,
+                meta.chains,
+                meta.sweeps,
+                t0.elapsed().as_secs_f64()
+            ),
+            Err(e) => println!("  {:<16} FAILED: {e:#}", meta.name),
+        }
+    }
+    // smoke-run grid16 end to end
+    if let Some(meta) = rt.manifest().get("grid16").cloned() {
+        let g = workloads::ising_grid(16, 16, 0.25, 0.0);
+        let m = DualModel::from_graph(&g);
+        let ops = m.dense_operands(meta.n_pad, meta.f_pad);
+        match rt.chain_exec(&meta.name, &ops) {
+            Ok(exec) => match exec.run(&exec.zero_state(), [1, 2]) {
+                Ok(out) => println!(
+                    "smoke run ok: mag[last sweep] = {:?}",
+                    &out.mag[out.mag.len() - meta.chains..]
+                ),
+                Err(e) => println!("smoke run failed: {e:#}"),
+            },
+            Err(e) => println!("smoke bind failed: {e:#}"),
+        }
+    }
+}

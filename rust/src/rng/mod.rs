@@ -1,0 +1,198 @@
+//! Deterministic, splittable pseudo-random number generation.
+//!
+//! The offline environment has no `rand` crate, so the crate ships its own
+//! generators: [`Pcg64`] (the PCG-XSL-RR 128/64 member, the workhorse) and
+//! [`SplitMix64`] (seeding / stream derivation). Both are tiny, fast, and
+//! reproducible across platforms, which the experiment harness relies on:
+//! every benchmark records its seed and can be replayed bit-for-bit.
+
+mod pcg;
+mod splitmix;
+
+pub use pcg::Pcg64;
+pub use splitmix::SplitMix64;
+
+/// Minimal RNG interface used across the crate.
+///
+/// Implementors only supply [`RngCore::next_u64`]; the provided methods
+/// derive uniforms, Bernoulli draws and categorical draws from it.
+pub trait RngCore {
+    /// Next 64 uniformly distributed bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform in `[0, 1)` with 53 bits of mantissa.
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        // Take the top 53 bits — unbiased and exactly representable.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)` (24 bits of mantissa).
+    #[inline]
+    fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's unbiased multiply-shift.
+    #[inline]
+    fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Bernoulli draw with success probability `p`.
+    #[inline]
+    fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Draw an index from unnormalized non-negative weights.
+    ///
+    /// Panics in debug builds if all weights are zero or any is negative.
+    fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0, "categorical weights must sum > 0");
+        let mut t = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            debug_assert!(w >= 0.0);
+            t -= w;
+            if t < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1 // float roundoff fallthrough
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Standard normal via Box–Muller (cached second value is *not* kept to
+    /// stay allocation- and state-free; fine for non-hot-path use).
+    fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+}
+
+/// Logistic sigmoid; numerically stable on both tails.
+#[inline]
+pub fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut rng = Pcg64::seed(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.next_f64();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn next_below_unbiased_small_range() {
+        let mut rng = Pcg64::seed(2);
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[rng.next_below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            let expected = n / 7;
+            assert!(
+                (c as i64 - expected as i64).unsigned_abs() < 600,
+                "counts={counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn bernoulli_frequency() {
+        let mut rng = Pcg64::seed(3);
+        let hits = (0..50_000).filter(|_| rng.bernoulli(0.3)).count();
+        let freq = hits as f64 / 50_000.0;
+        assert!((freq - 0.3).abs() < 0.01, "freq={freq}");
+    }
+
+    #[test]
+    fn categorical_tracks_weights() {
+        let mut rng = Pcg64::seed(4);
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let mut counts = [0usize; 4];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[rng.categorical(&w)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let p = w[i] / 10.0;
+            assert!((c as f64 / n as f64 - p).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seed(5);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            s += z;
+            s2 += z * z;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seed(6);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sigmoid_stability() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+        assert!(sigmoid(-800.0) >= 0.0);
+        assert!(sigmoid(800.0) <= 1.0);
+        assert!((sigmoid(2.0) + sigmoid(-2.0) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,135 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+//!
+//! Written by `python/compile/aot.py`; describes every artifact's static
+//! configuration so the runtime can marshal literals without re-deriving
+//! the python-side padding rules.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Static configuration of one AOT artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// Real (unpadded) variable count.
+    pub n: usize,
+    /// Real (unpadded) factor capacity.
+    pub f: usize,
+    pub chains: usize,
+    /// Sweeps executed per call.
+    pub sweeps: usize,
+    pub n_pad: usize,
+    pub f_pad: usize,
+}
+
+/// All artifacts produced by one `make artifacts` run.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let doc = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let arr = doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for item in arr {
+            artifacts.push(ArtifactMeta {
+                name: field_str(item, "name")?,
+                file: field_str(item, "file")?,
+                n: field_usize(item, "n")?,
+                f: field_usize(item, "f")?,
+                chains: field_usize(item, "chains")?,
+                sweeps: field_usize(item, "sweeps")?,
+                n_pad: field_usize(item, "n_pad")?,
+                f_pad: field_usize(item, "f_pad")?,
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+
+    /// Smallest artifact that fits a model with `n` vars and `f` factors.
+    pub fn best_fit(&self, n: usize, f: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.n_pad >= n && a.f_pad >= f)
+            .min_by_key(|a| a.n_pad * a.f_pad)
+    }
+}
+
+fn field_str(j: &Json, key: &str) -> Result<String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("manifest entry missing string '{key}'"))
+}
+
+fn field_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("manifest entry missing integer '{key}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {"name": "grid16", "file": "pd_chain_grid16.hlo.txt",
+         "n": 256, "f": 480, "chains": 4, "sweeps": 8,
+         "n_pad": 256, "f_pad": 512,
+         "operands": [], "outputs": []},
+        {"name": "fc100", "file": "pd_chain_fc100.hlo.txt",
+         "n": 100, "f": 4950, "chains": 10, "sweeps": 32,
+         "n_pad": 104, "f_pad": 5120,
+         "operands": [], "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let g = m.get("grid16").unwrap();
+        assert_eq!(g.n, 256);
+        assert_eq!(g.f_pad, 512);
+        assert_eq!(m.names(), vec!["grid16", "fc100"]);
+    }
+
+    #[test]
+    fn best_fit_picks_smallest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.best_fit(100, 400).unwrap().name, "grid16");
+        assert_eq!(m.best_fit(100, 4000).unwrap().name, "fc100");
+        assert!(m.best_fit(10_000, 1).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": [{"name": 3}]}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,217 @@
+//! §5.4: blocked primal–dual Gibbs over *arbitrary* subgraphs.
+//!
+//! Split the duals into `θ₀` (tree factors — dropped from the state and
+//! kept primal) and `θ₁` (off-tree factors — kept dual). Because
+//!
+//!   `p(x, θ₀ | θ₁) = p(θ₀ | x) · p(x | θ₁)`,
+//!
+//! it suffices to alternate `x ~ p(x | θ₁)` — an *exact joint draw* over
+//! all tree variables via forward-filter backward-sample — and
+//! `θ₁ ~ p(θ₁ | x)`. Unlike splash sampling [Gonzalez et al. 2011] the
+//! conditioning set is *not* restricted to induced subgraphs: any acyclic
+//! factor subset works, including spanning trees touching every variable.
+//!
+//! The tree can be re-drawn between sweeps ([`BlockedPd::refresh_tree`]),
+//! the "vary the decomposition in each step" variant from the paper.
+
+use super::Sampler;
+use crate::duality::DualModel;
+use crate::graph::{FactorGraph, FactorId};
+use crate::inference::bp::Forest;
+use crate::rng::{sigmoid, Pcg64, RngCore};
+
+/// Tree-blocked primal–dual sampler over a borrowed graph.
+pub struct BlockedPd<'g> {
+    graph: &'g FactorGraph,
+    model: DualModel,
+    forest: Forest,
+    /// Slots participating in the tree (their duals are marginalized out).
+    tree_mask: Vec<bool>,
+    /// `Σ_{tree i ∋ v} α_{i,v}` — subtracted from the dual base field when
+    /// building tree vertex potentials (tree factors enter as full edge
+    /// potentials instead).
+    tree_alpha: Vec<f64>,
+    x: Vec<u8>,
+    theta: Vec<u8>,
+}
+
+impl<'g> BlockedPd<'g> {
+    /// Block over a greedy spanning forest of the current graph.
+    pub fn new(graph: &'g FactorGraph) -> Self {
+        let ids = Forest::spanning_ids(graph);
+        Self::with_tree(graph, &ids)
+    }
+
+    /// Block over an explicit acyclic factor subset.
+    pub fn with_tree(graph: &'g FactorGraph, tree_ids: &[FactorId]) -> Self {
+        let model = DualModel::from_graph(graph);
+        let forest = Forest::from_factors(graph, tree_ids)
+            .unwrap_or_else(|id| panic!("tree subset contains a cycle at factor {id}"));
+        let mut tree_mask = vec![false; model.factor_slots()];
+        let mut tree_alpha = vec![0.0; graph.num_vars()];
+        for &id in tree_ids {
+            tree_mask[id] = true;
+            let e = model.entry(id).expect("tree id not in model");
+            tree_alpha[e.v1] += e.alpha1;
+            tree_alpha[e.v2] += e.alpha2;
+        }
+        let x = vec![0; graph.num_vars()];
+        let theta = vec![0; model.factor_slots()];
+        Self {
+            graph,
+            model,
+            forest,
+            tree_mask,
+            tree_alpha,
+            x,
+            theta,
+        }
+    }
+
+    /// Redraw the blocking tree (randomized spanning forest): shuffles the
+    /// live factors and keeps the first acyclic subset.
+    pub fn refresh_tree(&mut self, rng: &mut Pcg64) {
+        let mut ids: Vec<FactorId> = self.graph.factors().map(|(id, _)| id).collect();
+        rng.shuffle(&mut ids);
+        let mut uf = crate::util::UnionFind::new(self.graph.num_vars());
+        let tree_ids: Vec<FactorId> = ids
+            .into_iter()
+            .filter(|&id| {
+                let f = self.graph.factor(id).unwrap();
+                uf.union(f.v1, f.v2)
+            })
+            .collect();
+        self.forest = Forest::from_factors(self.graph, &tree_ids).expect("forest is acyclic");
+        self.tree_mask.iter_mut().for_each(|m| *m = false);
+        self.tree_alpha.iter_mut().for_each(|a| *a = 0.0);
+        for &id in &tree_ids {
+            self.tree_mask[id] = true;
+            let e = self.model.entry(id).unwrap();
+            self.tree_alpha[e.v1] += e.alpha1;
+            self.tree_alpha[e.v2] += e.alpha2;
+        }
+    }
+
+    /// Number of factors currently blocked into the tree.
+    pub fn tree_size(&self) -> usize {
+        self.tree_mask.iter().filter(|&&m| m).count()
+    }
+
+    fn fields(&self) -> Vec<f64> {
+        (0..self.x.len())
+            .map(|v| {
+                let mut z = self.model.base_field(v) - self.tree_alpha[v];
+                for &(slot, beta) in self.model.incidence(v) {
+                    if !self.tree_mask[slot as usize] {
+                        z += self.theta[slot as usize] as f64 * beta;
+                    }
+                }
+                z
+            })
+            .collect()
+    }
+}
+
+impl Sampler for BlockedPd<'_> {
+    fn name(&self) -> &'static str {
+        "blocked-pd"
+    }
+
+    fn state(&self) -> &[u8] {
+        &self.x
+    }
+
+    fn set_state(&mut self, x: &[u8]) {
+        assert_eq!(x.len(), self.x.len());
+        self.x.copy_from_slice(x);
+    }
+
+    fn sweep(&mut self, rng: &mut Pcg64) {
+        // θ₁ | x : off-tree duals, all in parallel
+        for slot in 0..self.model.factor_slots() {
+            if self.tree_mask[slot] {
+                continue;
+            }
+            if let Some(e) = self.model.entry(slot) {
+                let z = self.model.theta_logodds(e, &self.x);
+                self.theta[slot] = rng.bernoulli(sigmoid(z)) as u8;
+            }
+        }
+        // x | θ₁ : exact joint draw over the tree
+        let fields = self.fields();
+        self.x = self.forest.sample(&fields, rng);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::samplers::test_support::assert_matches_exact;
+    use crate::workloads;
+
+    #[test]
+    fn exact_on_cyclic_grid() {
+        // 3x3 grid has cycles; spanning tree blocks 8 of 12 factors
+        let g = workloads::ising_grid(3, 3, 0.4, 0.1);
+        let mut s = BlockedPd::new(&g);
+        assert_eq!(s.tree_size(), 8);
+        assert_matches_exact(&g, &mut s, 31, 300, 60_000, 0.012);
+    }
+
+    #[test]
+    fn exact_on_tree_degenerates_to_exact_sampling() {
+        // every factor blocked ⇒ independent exact draws each sweep
+        let g = workloads::random_tree(8, 0.9, 5);
+        let mut s = BlockedPd::new(&g);
+        assert_eq!(s.tree_size(), 7);
+        assert_matches_exact(&g, &mut s, 32, 0, 40_000, 0.012);
+    }
+
+    #[test]
+    fn exact_with_refreshed_trees() {
+        let g = workloads::ising_grid(3, 3, 0.35, -0.1);
+        let mut s = BlockedPd::new(&g);
+        let mut rng = Pcg64::seed(33);
+        // interleave tree refreshes with sampling
+        let mut acc = vec![0.0f64; 9];
+        let (burn, keep) = (300usize, 60_000usize);
+        for _ in 0..burn {
+            s.sweep(&mut rng);
+        }
+        for it in 0..keep {
+            if it % 64 == 0 {
+                s.refresh_tree(&mut rng);
+            }
+            s.sweep(&mut rng);
+            for (a, &x) in acc.iter_mut().zip(s.state()) {
+                *a += x as f64;
+            }
+        }
+        let want = crate::inference::exact::enumerate(&g);
+        for v in 0..9 {
+            let got = acc[v] / keep as f64;
+            assert!(
+                (got - want.marginals[v]).abs() < 0.012,
+                "v={v}: {got} vs {}",
+                want.marginals[v]
+            );
+        }
+    }
+
+    #[test]
+    fn exact_on_fully_connected() {
+        // dense graph: tree blocks n-1 of n(n-1)/2 factors
+        let g = workloads::fully_connected_ising(6, |i, j| 0.05 * ((i + j) % 3 + 1) as f64);
+        let mut s = BlockedPd::new(&g);
+        assert_eq!(s.tree_size(), 5);
+        assert_matches_exact(&g, &mut s, 34, 300, 60_000, 0.012);
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn rejects_cyclic_tree_subset() {
+        let g = workloads::ising_grid(2, 2, 0.3, 0.0);
+        let ids: Vec<_> = g.factors().map(|(id, _)| id).collect();
+        BlockedPd::with_tree(&g, &ids); // all 4 factors = the 4-cycle
+    }
+}

@@ -1,0 +1,178 @@
+//! Chromatic parallel Gibbs [Gonzalez et al. 2011] — the coloring baseline.
+//!
+//! Variables of one color class are conditionally independent, so each
+//! class is resampled in parallel; sweeping all classes gives a valid
+//! Gibbs sweep with the *same* per-sweep Markov kernel quality as the
+//! sequential sampler (per class-order). Its weakness — the one the paper
+//! attacks — is the coloring itself: NP-hard to minimize, needs repair on
+//! every topology change ([`ChromaticGibbs::refresh_coloring`], whose cost
+//! the dynamic bench reports), and useless on dense graphs where the
+//! chromatic number approaches `n` (Fig 2b's fully connected model).
+
+use std::sync::Arc;
+
+use super::Sampler;
+use crate::graph::coloring::{self, Coloring};
+use crate::graph::FactorGraph;
+use crate::rng::{sigmoid, Pcg64, RngCore};
+use crate::util::ThreadPool;
+
+/// Color-blocked parallel Gibbs over a borrowed graph.
+pub struct ChromaticGibbs<'g> {
+    graph: &'g FactorGraph,
+    coloring: Coloring,
+    classes: Vec<Vec<usize>>,
+    x: Vec<u8>,
+    pool: Option<Arc<ThreadPool>>,
+    sweep_count: u64,
+    /// Cumulative variables recolored by repair (maintenance cost metric).
+    pub repair_touched: usize,
+}
+
+impl<'g> ChromaticGibbs<'g> {
+    pub fn new(graph: &'g FactorGraph) -> Self {
+        let coloring = coloring::greedy(graph);
+        let classes = coloring.classes();
+        Self {
+            graph,
+            coloring,
+            classes,
+            x: vec![0; graph.num_vars()],
+            pool: None,
+            sweep_count: 0,
+            repair_touched: 0,
+        }
+    }
+
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    pub fn num_colors(&self) -> u32 {
+        self.coloring.num_colors
+    }
+
+    /// Repair the coloring after graph mutations; returns variables touched.
+    /// Must be called before `sweep` whenever the topology changed — the
+    /// dynamic benchmark charges this to the chromatic baseline.
+    pub fn refresh_coloring(&mut self) -> usize {
+        if self.coloring.version == self.graph.version() {
+            return 0;
+        }
+        let touched = coloring::repair(self.graph, &mut self.coloring);
+        self.classes = self.coloring.classes();
+        self.repair_touched += touched;
+        touched
+    }
+
+    fn sweep_class_parallel(&mut self, class_idx: usize, rng: &mut Pcg64, pool: &ThreadPool) {
+        let class = &self.classes[class_idx];
+        let graph = self.graph;
+        let sweep = self.sweep_count;
+        let x_ptr = SendPtr(self.x.as_mut_ptr());
+        let x_ref = &self.x;
+        pool.scope_chunks(class.len(), |chunk, start, end| {
+            let mut r = rng.split(
+                sweep.wrapping_mul(1 << 20) + (class_idx as u64) * 4096 + chunk as u64,
+            );
+            let x_ptr = &x_ptr;
+            for &v in &class[start..end] {
+                // SAFETY: same-color variables are never neighbors, so the
+                // cells written here are disjoint from every cell read.
+                let z = graph.conditional_logodds(v, x_ref);
+                unsafe { *x_ptr.0.add(v) = r.bernoulli(sigmoid(z)) as u8 };
+            }
+        });
+    }
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+impl Sampler for ChromaticGibbs<'_> {
+    fn name(&self) -> &'static str {
+        "chromatic-gibbs"
+    }
+
+    fn state(&self) -> &[u8] {
+        &self.x
+    }
+
+    fn set_state(&mut self, x: &[u8]) {
+        assert_eq!(x.len(), self.x.len());
+        self.x.copy_from_slice(x);
+    }
+
+    fn sweep(&mut self, rng: &mut Pcg64) {
+        debug_assert!(
+            self.coloring.version == self.graph.version(),
+            "stale coloring: call refresh_coloring() after mutating the graph"
+        );
+        self.sweep_count += 1;
+        match self.pool.clone() {
+            Some(pool) => {
+                for ci in 0..self.classes.len() {
+                    self.sweep_class_parallel(ci, rng, &pool);
+                }
+            }
+            None => {
+                for class in &self.classes {
+                    for &v in class {
+                        let z = self.graph.conditional_logodds(v, &self.x);
+                        self.x[v] = rng.bernoulli(sigmoid(z)) as u8;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::PairFactor;
+    use crate::samplers::test_support::assert_matches_exact;
+    use crate::workloads;
+
+    #[test]
+    fn exact_on_small_grid() {
+        let g = workloads::ising_grid(3, 3, 0.35, 0.1);
+        let mut s = ChromaticGibbs::new(&g);
+        assert_eq!(s.num_colors(), 2);
+        assert_matches_exact(&g, &mut s, 11, 500, 80_000, 0.012);
+    }
+
+    #[test]
+    fn exact_with_pool() {
+        let g = workloads::ising_grid(3, 3, 0.3, -0.1);
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut s = ChromaticGibbs::new(&g).with_pool(pool);
+        // pooled dispatch is per color class per sweep: keep the budget
+        // small (single-core CI) and the tolerance correspondingly wide
+        assert_matches_exact(&g, &mut s, 12, 300, 12_000, 0.035);
+    }
+
+    #[test]
+    fn refresh_after_mutation() {
+        let mut g = workloads::ising_grid(3, 3, 0.2, 0.0);
+        {
+            let mut s = ChromaticGibbs::new(&g);
+            assert_eq!(s.refresh_coloring(), 0); // up to date
+        }
+        // mutate: a diagonal edge breaks the checkerboard 2-coloring
+        g.add_factor(PairFactor::ising(0, 4, 0.2));
+        let s2 = ChromaticGibbs::new(&g);
+        assert!(s2.coloring.is_proper(&g));
+        assert!(s2.num_colors() >= 3);
+    }
+
+    #[test]
+    fn fully_connected_uses_n_colors() {
+        let g = workloads::fully_connected_ising(8, |_, _| 0.05);
+        let s = ChromaticGibbs::new(&g);
+        // n colors ⇒ zero within-sweep parallelism: the Fig-2b pathology
+        assert_eq!(s.num_colors(), 8);
+    }
+}

@@ -1,0 +1,124 @@
+//! Samplers: the paper's primal–dual method and every baseline it is
+//! evaluated against.
+//!
+//! | sampler | parallel unit | preprocessing | dynamic graphs |
+//! |---|---|---|---|
+//! | [`SequentialGibbs`] | none (one site at a time) | none | trivial |
+//! | [`ChromaticGibbs`]  | color class | graph coloring (NP-hard to minimize, must be *maintained*) | expensive |
+//! | [`PdSampler`]       | **all variables / all factors** | one 2×2 factorization per factor | O(1) per mutation |
+//! | [`SwendsenWang`]    | clusters | none (ferromagnetic Ising only) | trivial |
+//! | [`BlockedPd`]       | tree + off-tree duals | spanning forest | cheap refresh |
+//!
+//! All samplers implement [`Sampler`]: a state vector in `{0,1}^n` advanced
+//! by full sweeps. RNGs are passed per sweep so multi-chain drivers control
+//! reproducibility and stream independence.
+
+mod blocked;
+mod chromatic;
+mod primal_dual;
+mod sequential;
+mod swendsen_wang;
+
+pub use blocked::BlockedPd;
+pub use chromatic::ChromaticGibbs;
+pub use primal_dual::PdSampler;
+pub use sequential::SequentialGibbs;
+pub use swendsen_wang::SwendsenWang;
+
+use crate::rng::Pcg64;
+
+/// A Markov-chain sampler over binary states.
+pub trait Sampler {
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Current primal state (`x[v] ∈ {0, 1}`).
+    fn state(&self) -> &[u8];
+
+    /// Overwrite the primal state (chain initialization).
+    fn set_state(&mut self, x: &[u8]);
+
+    /// Advance one full sweep (every variable updated once, by whatever
+    /// schedule the sampler defines).
+    fn sweep(&mut self, rng: &mut Pcg64);
+
+    /// Single-site-equivalent updates per sweep (Fig 2b normalizes the
+    /// sequential sampler by this).
+    fn updates_per_sweep(&self) -> usize {
+        self.state().len()
+    }
+}
+
+/// Run `sweeps` sweeps and collect the per-sweep trace of monitored
+/// variables (diagnostics helper shared by benches and tests).
+pub fn run_traced(
+    sampler: &mut dyn Sampler,
+    rng: &mut Pcg64,
+    sweeps: usize,
+    monitor: &[usize],
+) -> Vec<Vec<f64>> {
+    let mut traces = vec![Vec::with_capacity(sweeps); monitor.len()];
+    for _ in 0..sweeps {
+        sampler.sweep(rng);
+        let x = sampler.state();
+        for (ti, &v) in monitor.iter().enumerate() {
+            traces[ti].push(x[v] as f64);
+        }
+    }
+    traces
+}
+
+/// Empirical `P(x_v = 1)` from `sweeps` post-burn-in sweeps.
+pub fn empirical_marginals(
+    sampler: &mut dyn Sampler,
+    rng: &mut Pcg64,
+    burn_in: usize,
+    sweeps: usize,
+) -> Vec<f64> {
+    for _ in 0..burn_in {
+        sampler.sweep(rng);
+    }
+    let n = sampler.state().len();
+    let mut acc = vec![0.0f64; n];
+    for _ in 0..sweeps {
+        sampler.sweep(rng);
+        for (a, &x) in acc.iter_mut().zip(sampler.state()) {
+            *a += x as f64;
+        }
+    }
+    for a in &mut acc {
+        *a /= sweeps as f64;
+    }
+    acc
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    //! Shared correctness harness: every sampler must reproduce exact
+    //! marginals on small models (the definitive Markov-kernel test).
+    use super::*;
+    use crate::graph::FactorGraph;
+    use crate::inference::exact;
+
+    pub fn assert_matches_exact(
+        g: &FactorGraph,
+        sampler: &mut dyn Sampler,
+        seed: u64,
+        burn_in: usize,
+        sweeps: usize,
+        tol: f64,
+    ) {
+        let mut rng = Pcg64::seed(seed);
+        let marg = empirical_marginals(sampler, &mut rng, burn_in, sweeps);
+        let want = exact::enumerate(g);
+        for v in 0..g.num_vars() {
+            assert!(
+                (marg[v] - want.marginals[v]).abs() < tol,
+                "{}: var {v}: {} vs exact {} (tol {tol})",
+                sampler.name(),
+                marg[v],
+                want.marginals[v]
+            );
+        }
+    }
+}

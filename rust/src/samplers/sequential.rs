@@ -1,0 +1,88 @@
+//! Sequential single-site Gibbs — the classic Geman–Geman sampler and the
+//! paper's main mixing-time baseline (the "between 2 and 7×" of Fig 2a).
+
+use super::Sampler;
+use crate::graph::FactorGraph;
+use crate::rng::{sigmoid, Pcg64, RngCore};
+
+/// Single-site Gibbs over a borrowed graph (always up to date with
+/// topology mutations — but inherently serial).
+pub struct SequentialGibbs<'g> {
+    graph: &'g FactorGraph,
+    x: Vec<u8>,
+}
+
+impl<'g> SequentialGibbs<'g> {
+    pub fn new(graph: &'g FactorGraph) -> Self {
+        Self {
+            graph,
+            x: vec![0; graph.num_vars()],
+        }
+    }
+}
+
+impl Sampler for SequentialGibbs<'_> {
+    fn name(&self) -> &'static str {
+        "sequential-gibbs"
+    }
+
+    fn state(&self) -> &[u8] {
+        &self.x
+    }
+
+    fn set_state(&mut self, x: &[u8]) {
+        assert_eq!(x.len(), self.x.len());
+        self.x.copy_from_slice(x);
+    }
+
+    fn sweep(&mut self, rng: &mut Pcg64) {
+        for v in 0..self.x.len() {
+            let z = self.graph.conditional_logodds(v, &self.x);
+            self.x[v] = rng.bernoulli(sigmoid(z)) as u8;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::samplers::test_support::assert_matches_exact;
+    use crate::workloads;
+
+    #[test]
+    fn exact_on_small_grid() {
+        let g = workloads::ising_grid(3, 3, 0.4, 0.15);
+        let mut s = SequentialGibbs::new(&g);
+        assert_matches_exact(&g, &mut s, 1, 500, 60_000, 0.012);
+    }
+
+    #[test]
+    fn exact_on_random_graph() {
+        let g = workloads::random_graph(7, 2, 0.8, 23);
+        let mut s = SequentialGibbs::new(&g);
+        assert_matches_exact(&g, &mut s, 2, 500, 80_000, 0.012);
+    }
+
+    #[test]
+    fn respects_strong_field() {
+        let mut g = workloads::ising_grid(2, 2, 0.1, 0.0);
+        for v in 0..4 {
+            g.set_unary(v, 6.0);
+        }
+        let mut s = SequentialGibbs::new(&g);
+        let mut rng = Pcg64::seed(7);
+        for _ in 0..50 {
+            s.sweep(&mut rng);
+        }
+        assert_eq!(s.state(), &[1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn set_state_roundtrip() {
+        let g = workloads::ising_grid(2, 3, 0.2, 0.0);
+        let mut s = SequentialGibbs::new(&g);
+        s.set_state(&[1, 0, 1, 0, 1, 0]);
+        assert_eq!(s.state(), &[1, 0, 1, 0, 1, 0]);
+        assert_eq!(s.updates_per_sweep(), 6);
+    }
+}

@@ -1,0 +1,146 @@
+//! Swendsen–Wang cluster sampler — the §4.3 degenerate special case.
+//!
+//! Applies to ferromagnetic Ising factors (`w ≥ 0` in the normal form
+//! `[[1, e^{-w}], [e^{-w}, 1]]`). One sweep:
+//!
+//! 1. bond step: for each factor with agreeing endpoints, activate with
+//!    probability `1 − e^{-w}` (the paper's `g(1)`),
+//! 2. cluster step: connected components of active bonds flip jointly;
+//!    with unary fields `u_v` a cluster `C` is set to 1 with probability
+//!    `σ(Σ_{v∈C} u_v)`.
+//!
+//! Implemented with union-find; serves as the mixing reference on the
+//! low-field Ising workloads and validates the §4.3 equivalence claim.
+
+use super::Sampler;
+use crate::duality::sw;
+use crate::graph::FactorGraph;
+use crate::rng::{sigmoid, Pcg64, RngCore};
+use crate::util::UnionFind;
+
+/// Cluster sampler over a borrowed ferromagnetic-Ising graph.
+pub struct SwendsenWang<'g> {
+    graph: &'g FactorGraph,
+    /// `(v1, v2, bond probability)` per applicable factor.
+    bonds: Vec<(usize, usize, f64)>,
+    x: Vec<u8>,
+    /// Cluster count of the last sweep (`C(θ)` in Example 1, used by the
+    /// §5.2 SW log-partition estimator).
+    pub last_cluster_count: usize,
+}
+
+impl<'g> SwendsenWang<'g> {
+    /// Panics if any factor is not a symmetric ferromagnetic Ising table.
+    pub fn new(graph: &'g FactorGraph) -> Self {
+        let bonds = graph
+            .factors()
+            .map(|(_, f)| {
+                let w = sw::ising_w_from_table(&f.table).unwrap_or_else(|| {
+                    panic!("SW requires ferromagnetic Ising factors, got {:?}", f.table)
+                });
+                (f.v1, f.v2, sw::bond_probability(w))
+            })
+            .collect();
+        Self {
+            graph,
+            bonds,
+            x: vec![0; graph.num_vars()],
+            last_cluster_count: 0,
+        }
+    }
+}
+
+impl Sampler for SwendsenWang<'_> {
+    fn name(&self) -> &'static str {
+        "swendsen-wang"
+    }
+
+    fn state(&self) -> &[u8] {
+        &self.x
+    }
+
+    fn set_state(&mut self, x: &[u8]) {
+        assert_eq!(x.len(), self.x.len());
+        self.x.copy_from_slice(x);
+    }
+
+    fn sweep(&mut self, rng: &mut Pcg64) {
+        let n = self.x.len();
+        // bond step (θ | x)
+        let mut uf = UnionFind::new(n);
+        for &(v1, v2, p) in &self.bonds {
+            if self.x[v1] == self.x[v2] && rng.bernoulli(p) {
+                uf.union(v1, v2);
+            }
+        }
+        self.last_cluster_count = uf.components();
+        // cluster step (x | θ): field-weighted fair flips per component
+        let mut cluster_field = std::collections::BTreeMap::new();
+        for v in 0..n {
+            *cluster_field.entry(uf.find(v)).or_insert(0.0) += self.graph.unary(v);
+        }
+        let assignment: std::collections::BTreeMap<usize, u8> = cluster_field
+            .into_iter()
+            .map(|(root, field)| (root, rng.bernoulli(sigmoid(field)) as u8))
+            .collect();
+        for v in 0..n {
+            self.x[v] = assignment[&uf.find(v)];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::samplers::test_support::assert_matches_exact;
+    use crate::workloads;
+
+    #[test]
+    fn exact_on_small_grid_no_field() {
+        let g = workloads::ising_grid(3, 3, 0.4, 0.0);
+        let mut s = SwendsenWang::new(&g);
+        assert_matches_exact(&g, &mut s, 21, 200, 60_000, 0.012);
+    }
+
+    #[test]
+    fn exact_with_fields() {
+        let g = workloads::ising_grid(3, 3, 0.3, 0.4);
+        let mut s = SwendsenWang::new(&g);
+        assert_matches_exact(&g, &mut s, 22, 200, 60_000, 0.012);
+    }
+
+    #[test]
+    fn mixes_at_strong_coupling() {
+        // β = 1.0 grid: single-site Gibbs freezes; SW still flips global
+        // magnetization. Check both magnetization signs are visited.
+        let g = workloads::ising_grid(5, 5, 1.0, 0.0);
+        let mut s = SwendsenWang::new(&g);
+        let mut rng = Pcg64::seed(23);
+        let mut saw_low = false;
+        let mut saw_high = false;
+        for _ in 0..2000 {
+            s.sweep(&mut rng);
+            let m: f64 = s.state().iter().map(|&b| b as f64).sum::<f64>() / 25.0;
+            saw_low |= m < 0.2;
+            saw_high |= m > 0.8;
+        }
+        assert!(saw_low && saw_high, "SW failed to tunnel between modes");
+    }
+
+    #[test]
+    fn cluster_count_reasonable() {
+        let g = workloads::ising_grid(4, 4, 0.05, 0.0);
+        let mut s = SwendsenWang::new(&g);
+        let mut rng = Pcg64::seed(24);
+        s.sweep(&mut rng);
+        // weak coupling ⇒ few bonds ⇒ many clusters
+        assert!(s.last_cluster_count > 8, "{}", s.last_cluster_count);
+    }
+
+    #[test]
+    #[should_panic(expected = "ferromagnetic")]
+    fn rejects_antiferromagnetic() {
+        let g = workloads::ising_grid(2, 2, -0.3, 0.0);
+        SwendsenWang::new(&g);
+    }
+}

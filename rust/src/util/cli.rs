@@ -1,0 +1,264 @@
+//! Declarative command-line parsing (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! typed accessors with defaults, and an auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Specification of one option/flag.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Command-line parser and parsed-value store.
+pub struct Cli {
+    program: String,
+    about: &'static str,
+    specs: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+/// Error with a rendered usage string.
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Cli {
+    pub fn new(program: &str, about: &'static str) -> Self {
+        Self {
+            program: program.to_string(),
+            about,
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Register `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&str>, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: default.map(str::to_string),
+        });
+        self
+    }
+
+    /// Register a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Parse an argument list (without argv[0]).
+    pub fn parse(mut self, args: &[String]) -> Result<Cli, CliError> {
+        for spec in &self.specs {
+            if let Some(d) = &spec.default {
+                self.values.insert(spec.name.to_string(), d.clone());
+            }
+            if !spec.takes_value {
+                self.flags.insert(spec.name.to_string(), false);
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError(self.usage()));
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}\n{}", self.usage())))?
+                    .clone();
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                        }
+                    };
+                    self.values.insert(name.to_string(), value);
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{name} takes no value")));
+                    }
+                    self.flags.insert(name.to_string(), true);
+                }
+            } else {
+                self.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    /// Parse from the process environment, printing usage and exiting on error.
+    pub fn parse_env(self) -> Cli {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&args) {
+            Ok(cli) => cli,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let head = if spec.takes_value {
+                format!("  --{} <v>", spec.name)
+            } else {
+                format!("  --{}", spec.name)
+            };
+            let default = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{head:<24}{}{default}\n", spec.help));
+        }
+        s
+    }
+
+    // -- accessors --------------------------------------------------------
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.parse_typed(name)
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.parse_typed(name)
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.parse_typed(name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    fn parse_typed<T: std::str::FromStr>(&self, name: &str) -> T {
+        let raw = self
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} missing and has no default"));
+        raw.parse().unwrap_or_else(|_| {
+            eprintln!("invalid value for --{name}: {raw}");
+            std::process::exit(2);
+        })
+    }
+
+    /// Parse a comma-separated list of f64 (e.g. `--betas 0.1,0.2,0.3`).
+    pub fn get_f64_list(&self, name: &str) -> Vec<f64> {
+        self.get(name)
+            .map(|s| {
+                s.split(',')
+                    .filter(|t| !t.is_empty())
+                    .map(|t| t.trim().parse().expect("bad float in list"))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn demo() -> Cli {
+        Cli::new("demo", "test tool")
+            .opt("size", Some("10"), "problem size")
+            .opt("beta", None, "coupling")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let c = demo().parse(&args(&["--beta", "0.5"])).unwrap();
+        assert_eq!(c.get_usize("size"), 10);
+        assert_eq!(c.get_f64("beta"), 0.5);
+        assert!(!c.get_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let c = demo()
+            .parse(&args(&["--size=42", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(c.get_usize("size"), 42);
+        assert!(c.get_flag("verbose"));
+        assert_eq!(c.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(demo().parse(&args(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(demo().parse(&args(&["--beta"])).is_err());
+    }
+
+    #[test]
+    fn float_lists() {
+        let c = Cli::new("x", "y")
+            .opt("betas", Some("0.1,0.2"), "list")
+            .parse(&args(&[]))
+            .unwrap();
+        assert_eq!(c.get_f64_list("betas"), vec![0.1, 0.2]);
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let Err(e) = demo().parse(&args(&["--help"])) else {
+            panic!("--help must short-circuit");
+        };
+        assert!(e.0.contains("--size"));
+        assert!(e.0.contains("problem size"));
+    }
+}

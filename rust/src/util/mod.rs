@@ -1,0 +1,28 @@
+//! Infrastructure substrates built from scratch for the offline environment.
+//!
+//! The vendored crate set has no serde/clap/tokio/rayon/proptest, so the
+//! crate ships minimal, well-tested replacements:
+//!
+//! * [`json`] — recursive-descent JSON parser + serializer (artifact
+//!   manifests, coordinator requests, bench reports).
+//! * [`cli`] — declarative flag/option parser for `main.rs` and the bench
+//!   binaries.
+//! * [`threadpool`] — fixed-size scoped worker pool with a parallel-for
+//!   primitive; powers the native parallel samplers and the coordinator.
+//! * [`proptest`] — mini property-testing harness (random case generation,
+//!   failure reporting with the reproducing seed).
+//! * [`union_find`] — path-halving union-find (Swendsen–Wang clusters,
+//!   spanning forests).
+//! * [`stats`] — Welford moments and simple descriptive statistics shared
+//!   by diagnostics and the bench harness.
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod stats;
+pub mod threadpool;
+pub mod union_find;
+
+pub use json::Json;
+pub use threadpool::ThreadPool;
+pub use union_find::UnionFind;

@@ -1,0 +1,182 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! A property is a closure from a seeded [`Gen`] to `Result<(), String>`;
+//! the harness runs it for `cases` random seeds and reports the first
+//! failing seed so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! # // no_run: doctest binaries lack the xla rpath in this offline image
+//! use pdgibbs::util::proptest::{check, Gen};
+//! check("addition commutes", 100, |g: &mut Gen| {
+//!     let (a, b) = (g.i64_in(-10..=10), g.i64_in(-10..=10));
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use crate::rng::{Pcg64, RngCore};
+use std::ops::RangeInclusive;
+
+/// Random-input generator handed to each property case.
+pub struct Gen {
+    rng: Pcg64,
+    /// Seed of this case, for failure reports.
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Pcg64::seed(seed),
+            seed,
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, range: RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, range: RangeInclusive<i64>) -> i64 {
+        let (lo, hi) = (*range.start(), *range.end());
+        lo + self.rng.next_below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Pick a random element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0..=xs.len() - 1)]
+    }
+
+    /// A strictly positive 2×2 table with log-entries in ±`scale`.
+    pub fn positive_table(&mut self, scale: f64) -> [[f64; 2]; 2] {
+        let mut t = [[0.0; 2]; 2];
+        for row in &mut t {
+            for v in row.iter_mut() {
+                *v = self.f64_in(-scale, scale).exp();
+            }
+        }
+        t
+    }
+
+    /// Access the underlying RNG (e.g. to seed a sampler).
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random instances of `prop`; panic with the failing seed.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    // Derive per-case seeds from the property name so adding properties
+    // elsewhere does not shift this one's cases.
+    let base = name
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+        });
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let mut gen = Gen::new(seed);
+        if let Err(msg) = prop(&mut gen) {
+            panic!(
+                "property '{name}' failed on case {case} (replay seed {seed}):\n{msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing seed (used while debugging).
+pub fn replay<F>(seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let mut gen = Gen::new(seed);
+    if let Err(msg) = prop(&mut gen) {
+        panic!("replay of seed {seed} failed:\n{msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let count = AtomicU64::new(0);
+        check("counting", 50, |_g| {
+            count.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check("always fails", 10, |g: &mut Gen| {
+            Err(format!("value {}", g.u64()))
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check("ranges", 200, |g: &mut Gen| {
+            let x = g.usize_in(3..=9);
+            if !(3..=9).contains(&x) {
+                return Err(format!("usize {x}"));
+            }
+            let y = g.i64_in(-5..=5);
+            if !(-5..=5).contains(&y) {
+                return Err(format!("i64 {y}"));
+            }
+            let z = g.f64_in(1.0, 2.0);
+            if !(1.0..2.0).contains(&z) {
+                return Err(format!("f64 {z}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn positive_tables_are_positive() {
+        check("tables", 100, |g: &mut Gen| {
+            let t = g.positive_table(4.0);
+            if t.iter().flatten().all(|&v| v > 0.0) {
+                Ok(())
+            } else {
+                Err(format!("{t:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_given_name() {
+        use std::sync::Mutex;
+        let first: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        check("det", 5, |g: &mut Gen| {
+            first.lock().unwrap().push(g.seed);
+            Ok(())
+        });
+        let second: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        check("det", 5, |g: &mut Gen| {
+            second.lock().unwrap().push(g.seed);
+            Ok(())
+        });
+        assert_eq!(*first.lock().unwrap(), *second.lock().unwrap());
+    }
+}

@@ -1,0 +1,238 @@
+//! Fixed-size worker pool with scoped parallel-for (tokio/rayon-free).
+//!
+//! The native primal–dual sampler resamples all variables (then all
+//! factors) in parallel each sweep; this pool provides the `scope_chunks`
+//! primitive it needs: split an index range into contiguous chunks, run a
+//! closure per chunk on the workers, and join. Closures borrow from the
+//! caller's stack via `std::thread::scope`-style lifetimes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+struct Shared {
+    queue: Mutex<std::collections::VecDeque<Message>>,
+    available: Condvar,
+}
+
+/// A fixed pool of worker threads executing submitted closures.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (`size == 0` is clamped to 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            available: Condvar::new(),
+        });
+        let workers = (0..size)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || loop {
+                    let msg = {
+                        let mut q = shared.queue.lock().unwrap();
+                        loop {
+                            if let Some(m) = q.pop_front() {
+                                break m;
+                            }
+                            q = shared.available.wait(q).unwrap();
+                        }
+                    };
+                    match msg {
+                        Message::Run(job) => job(),
+                        Message::Shutdown => return,
+                    }
+                })
+            })
+            .collect();
+        Self {
+            shared,
+            workers,
+            size,
+        }
+    }
+
+    /// Pool sized to the machine (logical cores, capped at 16).
+    pub fn default_size() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get().min(16))
+            .unwrap_or(4)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    fn submit(&self, job: Job) {
+        self.shared
+            .queue
+            .lock()
+            .unwrap()
+            .push_back(Message::Run(job));
+        self.shared.available.notify_one();
+    }
+
+    /// Run `f(chunk_index, start, end)` over `[0, len)` split into
+    /// `self.size()` contiguous chunks, blocking until all complete.
+    ///
+    /// `f` may borrow non-`'static` data: internally the borrow is erased
+    /// and re-guarded by joining before return (the closure cannot outlive
+    /// this call).
+    pub fn scope_chunks<F>(&self, len: usize, f: F)
+    where
+        F: Fn(usize, usize, usize) + Sync,
+    {
+        if len == 0 {
+            return;
+        }
+        let chunks = self.size.min(len);
+        let chunk_len = len.div_ceil(chunks);
+        let pending = Arc::new((Mutex::new(chunks), Condvar::new()));
+
+        // SAFETY: we block on `pending` until every submitted job has run,
+        // so the erased borrow of `f` never outlives this stack frame.
+        let f_ptr: &(dyn Fn(usize, usize, usize) + Sync) = &f;
+        let f_static: &'static (dyn Fn(usize, usize, usize) + Sync) =
+            unsafe { std::mem::transmute(f_ptr) };
+
+        for c in 0..chunks {
+            let start = c * chunk_len;
+            let end = ((c + 1) * chunk_len).min(len);
+            let pending = Arc::clone(&pending);
+            self.submit(Box::new(move || {
+                f_static(c, start, end);
+                let (lock, cv) = &*pending;
+                let mut left = lock.lock().unwrap();
+                *left -= 1;
+                if *left == 0 {
+                    cv.notify_all();
+                }
+            }));
+        }
+        let (lock, cv) = &*pending;
+        let mut left = lock.lock().unwrap();
+        while *left > 0 {
+            left = cv.wait(left).unwrap();
+        }
+    }
+
+    /// Map `f` over `0..n` in parallel, collecting results in order.
+    pub fn par_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + Default + Clone,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut out = vec![T::default(); n];
+        {
+            let out_ptr = SendPtr(out.as_mut_ptr());
+            self.scope_chunks(n, |_, start, end| {
+                let out_ptr = &out_ptr;
+                for i in start..end {
+                    // SAFETY: chunks are disjoint index ranges.
+                    unsafe { *out_ptr.0.add(i) = f(i) };
+                }
+            });
+        }
+        out
+    }
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..self.workers.len() {
+                q.push_back(Message::Shutdown);
+            }
+        }
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Global counter handy for tests asserting work distribution.
+pub static TASKS_EXECUTED: AtomicUsize = AtomicUsize::new(0);
+
+#[allow(dead_code)]
+pub(crate) fn bump_task_counter() {
+    TASKS_EXECUTED.fetch_add(1, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        pool.scope_chunks(1000, |_, s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn par_map_ordering() {
+        let pool = ThreadPool::new(3);
+        let out = pool.par_map(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_range_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.scope_chunks(0, |_, _, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn single_item() {
+        let pool = ThreadPool::new(8);
+        let out = pool.par_map(1, |i| i + 41);
+        assert_eq!(out, vec![41]);
+    }
+
+    #[test]
+    fn reuse_across_many_scopes() {
+        let pool = ThreadPool::new(4);
+        let total = AtomicU64::new(0);
+        for _ in 0..50 {
+            pool.scope_chunks(64, |_, s, e| {
+                total.fetch_add((e - s) as u64, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 50 * 64);
+    }
+
+    #[test]
+    fn borrows_stack_data() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<u64> = (0..256).collect();
+        let sum = AtomicU64::new(0);
+        pool.scope_chunks(data.len(), |_, s, e| {
+            let local: u64 = data[s..e].iter().sum();
+            sum.fetch_add(local, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), (0..256).sum::<u64>());
+    }
+}

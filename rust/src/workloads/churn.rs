@@ -1,0 +1,138 @@
+//! Dynamic-topology churn traces.
+//!
+//! The paper motivates the primal–dual sampler with "large dynamic
+//! networks, where factors are added and removed on a continuous basis".
+//! No public trace of such a workload exists, so we synthesize one (see
+//! DESIGN.md §Substitutions): a seeded sequence of add/remove operations
+//! interleaved with sampling, with a configurable target factor count so
+//! the graph stays near a steady-state density.
+
+use crate::graph::{FactorGraph, FactorId, PairFactor};
+use crate::rng::{Pcg64, RngCore};
+
+/// One topology mutation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChurnOp {
+    /// Insert an Ising factor with the given coupling.
+    Add { v1: usize, v2: usize, beta: f64 },
+    /// Remove the i-th *currently live* churned factor (index into the
+    /// trace player's live list, so traces replay deterministically).
+    RemoveLive { index: usize },
+}
+
+/// A replayable churn trace over a fixed variable set.
+#[derive(Clone, Debug)]
+pub struct ChurnTrace {
+    pub num_vars: usize,
+    pub ops: Vec<ChurnOp>,
+}
+
+impl ChurnTrace {
+    /// Generate `steps` operations keeping roughly `target_factors` live.
+    ///
+    /// Each step adds with probability `p_add(live)` (1 when empty,
+    /// decreasing past the target) and removes a uniform live factor
+    /// otherwise. Couplings are uniform in `[0, beta_max]`.
+    pub fn generate(
+        num_vars: usize,
+        target_factors: usize,
+        steps: usize,
+        beta_max: f64,
+        seed: u64,
+    ) -> ChurnTrace {
+        assert!(num_vars >= 2);
+        let mut rng = Pcg64::seed(seed);
+        let mut live = 0usize;
+        let mut ops = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let p_add = if live == 0 {
+                1.0
+            } else {
+                (1.0 - live as f64 / (2.0 * target_factors as f64)).clamp(0.05, 0.95)
+            };
+            if rng.bernoulli(p_add) {
+                let v1 = rng.next_below(num_vars as u64) as usize;
+                let v2 = loop {
+                    let v = rng.next_below(num_vars as u64) as usize;
+                    if v != v1 {
+                        break v;
+                    }
+                };
+                ops.push(ChurnOp::Add {
+                    v1,
+                    v2,
+                    beta: beta_max * rng.next_f64(),
+                });
+                live += 1;
+            } else {
+                ops.push(ChurnOp::RemoveLive {
+                    index: rng.next_below(live as u64) as usize,
+                });
+                live -= 1;
+            }
+        }
+        ChurnTrace { num_vars, ops }
+    }
+
+    /// Apply the whole trace to a fresh graph, returning it plus the ids of
+    /// factors still live (useful for tests; the coordinator replays ops
+    /// one at a time instead).
+    pub fn materialize(&self) -> (FactorGraph, Vec<FactorId>) {
+        let mut g = FactorGraph::new(self.num_vars);
+        let mut live: Vec<FactorId> = Vec::new();
+        for op in &self.ops {
+            Self::apply(&mut g, &mut live, op);
+        }
+        (g, live)
+    }
+
+    /// Apply one op to `(graph, live-list)`.
+    pub fn apply(g: &mut FactorGraph, live: &mut Vec<FactorId>, op: &ChurnOp) {
+        match *op {
+            ChurnOp::Add { v1, v2, beta } => {
+                live.push(g.add_factor(PairFactor::ising(v1, v2, beta)));
+            }
+            ChurnOp::RemoveLive { index } => {
+                let id = live.swap_remove(index);
+                g.remove_factor(id).expect("trace removes only live factors");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic() {
+        let a = ChurnTrace::generate(20, 30, 200, 0.5, 42);
+        let b = ChurnTrace::generate(20, 30, 200, 0.5, 42);
+        assert_eq!(a.ops, b.ops);
+    }
+
+    #[test]
+    fn removals_reference_live_factors() {
+        let t = ChurnTrace::generate(10, 15, 500, 0.5, 7);
+        let (g, live) = t.materialize(); // panics internally if invalid
+        assert_eq!(g.num_factors(), live.len());
+    }
+
+    #[test]
+    fn hovers_near_target() {
+        let t = ChurnTrace::generate(50, 100, 4000, 0.5, 3);
+        let (g, _) = t.materialize();
+        let live = g.num_factors() as f64;
+        assert!(live > 30.0 && live < 250.0, "live={live}");
+    }
+
+    #[test]
+    fn couplings_in_band() {
+        let t = ChurnTrace::generate(10, 10, 100, 0.25, 5);
+        for op in &t.ops {
+            if let ChurnOp::Add { beta, .. } = op {
+                assert!((0.0..=0.25).contains(beta));
+            }
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Workload generators: the paper's three synthetic model families (§6),
+//! the dynamic-churn traces motivating the method (§1), and the
+//! image-denoising MRF used by the end-to-end example.
+
+mod churn;
+mod denoise;
+
+pub use churn::{ChurnOp, ChurnTrace};
+pub use denoise::{accuracy, denoise_mrf, noisy_image, render, synthetic_image, DenoiseConfig};
+
+use crate::graph::{FactorGraph, PairFactor};
+use crate::rng::{Pcg64, RngCore};
+
+/// §6 model 1: `rows × cols` Ising grid with uniform coupling `beta` and
+/// uniform unary field `h` (log-odds).
+pub fn ising_grid(rows: usize, cols: usize, beta: f64, h: f64) -> FactorGraph {
+    let mut g = FactorGraph::new(rows * cols);
+    for v in 0..rows * cols {
+        g.set_unary(v, h);
+    }
+    let idx = |r: usize, c: usize| r * cols + c;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                g.add_factor(PairFactor::ising(idx(r, c), idx(r, c + 1), beta));
+            }
+            if r + 1 < rows {
+                g.add_factor(PairFactor::ising(idx(r, c), idx(r + 1, c), beta));
+            }
+        }
+    }
+    g
+}
+
+/// §6 model 2: random graph with `n` variables and `k·n` factors; unary and
+/// pairwise log-potentials drawn `N(0, σ²)` with `σ = 1` in the paper.
+///
+/// Each factor's 2×2 table is `exp` of iid normal log-potentials; endpoints
+/// are a uniform random (distinct) pair. Matches "both the unitary and
+/// pairwise log-potentials were sampled from a normal distribution with
+/// mean 0 and standard deviation of 1".
+pub fn random_graph(n: usize, k: usize, sigma: f64, seed: u64) -> FactorGraph {
+    let mut rng = Pcg64::seed(seed);
+    let mut g = FactorGraph::new(n);
+    for v in 0..n {
+        g.set_unary(v, sigma * rng.normal());
+    }
+    for _ in 0..k * n {
+        let v1 = rng.next_below(n as u64) as usize;
+        let v2 = loop {
+            let v = rng.next_below(n as u64) as usize;
+            if v != v1 {
+                break v;
+            }
+        };
+        let t = [
+            [(sigma * rng.normal()).exp(), (sigma * rng.normal()).exp()],
+            [(sigma * rng.normal()).exp(), (sigma * rng.normal()).exp()],
+        ];
+        g.add_factor(PairFactor::new(v1, v2, t));
+    }
+    g
+}
+
+/// §6 model 3: fully connected Ising over `n` variables. `beta(i, j)` gives
+/// the coupling of each pair; the paper uses uniform β ∈ [0.01, 0.015] and
+/// notes that *varying* couplings break the poly-time special case of
+/// Flach (2013), so the bench also exercises a jittered variant.
+pub fn fully_connected_ising(n: usize, beta: impl Fn(usize, usize) -> f64) -> FactorGraph {
+    let mut g = FactorGraph::new(n);
+    for i in 0..n {
+        for j in i + 1..n {
+            g.add_factor(PairFactor::ising(i, j, beta(i, j)));
+        }
+    }
+    g
+}
+
+/// Fully connected Ising with couplings jittered uniformly in
+/// `[beta·(1−jitter), beta·(1+jitter)]` (seeded).
+pub fn fully_connected_jittered(n: usize, beta: f64, jitter: f64, seed: u64) -> FactorGraph {
+    let mut rng = Pcg64::seed(seed);
+    let mut couplings = Vec::with_capacity(n * (n - 1) / 2);
+    for _ in 0..n * (n - 1) / 2 {
+        couplings.push(beta * (1.0 + jitter * (2.0 * rng.next_f64() - 1.0)));
+    }
+    let mut it = couplings.into_iter();
+    let mut g = FactorGraph::new(n);
+    for i in 0..n {
+        for j in i + 1..n {
+            g.add_factor(PairFactor::ising(i, j, it.next().unwrap()));
+        }
+    }
+    g
+}
+
+/// A random chain/tree-structured MRF (exactly solvable; used to validate
+/// samplers and BP against enumeration on larger `n`).
+pub fn random_tree(n: usize, sigma: f64, seed: u64) -> FactorGraph {
+    let mut rng = Pcg64::seed(seed);
+    let mut g = FactorGraph::new(n);
+    for v in 0..n {
+        g.set_unary(v, sigma * rng.normal());
+    }
+    for v in 1..n {
+        let parent = rng.next_below(v as u64) as usize;
+        let t = [
+            [(sigma * rng.normal()).exp(), (sigma * rng.normal()).exp()],
+            [(sigma * rng.normal()).exp(), (sigma * rng.normal()).exp()],
+        ];
+        g.add_factor(PairFactor::new(parent, v, t));
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_counts() {
+        let g = ising_grid(50, 50, 0.3, 0.0);
+        assert_eq!(g.num_vars(), 2500);
+        assert_eq!(g.num_factors(), 2 * 50 * 49); // 4900
+        assert_eq!(g.max_degree(), 4);
+    }
+
+    #[test]
+    fn random_graph_counts() {
+        let g = random_graph(1000, 2, 1.0, 7);
+        assert_eq!(g.num_vars(), 1000);
+        assert_eq!(g.num_factors(), 2000);
+    }
+
+    #[test]
+    fn random_graph_deterministic_by_seed() {
+        let a = random_graph(50, 3, 1.0, 9);
+        let b = random_graph(50, 3, 1.0, 9);
+        for ((_, fa), (_, fb)) in a.factors().zip(b.factors()) {
+            assert_eq!(fa, fb);
+        }
+        assert_ne!(
+            random_graph(50, 3, 1.0, 9).factors().next().map(|(_, f)| f.table),
+            random_graph(50, 3, 1.0, 10).factors().next().map(|(_, f)| f.table)
+        );
+    }
+
+    #[test]
+    fn fully_connected_counts() {
+        let g = fully_connected_ising(100, |_, _| 0.012);
+        assert_eq!(g.num_factors(), 100 * 99 / 2);
+        assert_eq!(g.max_degree(), 99);
+    }
+
+    #[test]
+    fn jittered_in_band() {
+        let g = fully_connected_jittered(20, 0.012, 0.2, 3);
+        for (_, f) in g.factors() {
+            let beta = f.table[0][0].ln();
+            assert!(beta >= 0.012 * 0.8 - 1e-12 && beta <= 0.012 * 1.2 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn tree_is_acyclic() {
+        let g = random_tree(40, 1.0, 11);
+        assert_eq!(g.num_factors(), 39);
+        // acyclic <=> union-find never joins an already-connected pair
+        let mut uf = crate::util::UnionFind::new(40);
+        for (_, f) in g.factors() {
+            assert!(uf.union(f.v1, f.v2), "cycle at {:?}", (f.v1, f.v2));
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! End-to-end integration over the XLA runtime: the AOT artifacts (L1
+//! Pallas kernel + L2 JAX scan) executed from Rust via PJRT.
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+//! The decisive test is `xla_chain_matches_exact_marginals`: the artifact
+//! chain must converge to the same distribution as brute-force
+//! enumeration of the Rust-side graph — validating python dualization ==
+//! rust dualization == HLO semantics == PJRT execution in one shot.
+
+use pdgibbs::duality::DualModel;
+use pdgibbs::graph::{FactorGraph, PairFactor};
+use pdgibbs::inference::exact;
+use pdgibbs::rng::{Pcg64, RngCore};
+use pdgibbs::runtime::Runtime;
+use pdgibbs::workloads;
+
+fn runtime() -> Runtime {
+    Runtime::load("artifacts").expect("run `make artifacts` before `cargo test`")
+}
+
+#[test]
+fn manifest_lists_all_configs() {
+    let rt = runtime();
+    for name in ["grid16", "grid50", "fc100", "rand1000_k2"] {
+        assert!(rt.manifest().get(name).is_some(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn grid16_compiles_and_runs() {
+    let rt = runtime();
+    let meta = rt.manifest().get("grid16").unwrap().clone();
+    let g = workloads::ising_grid(16, 16, 0.25, 0.0);
+    let m = DualModel::from_graph(&g);
+    let ops = m.dense_operands(meta.n_pad, meta.f_pad);
+    let exec = rt.chain_exec("grid16", &ops).expect("bind");
+    let out = exec.run(&exec.zero_state(), [7, 9]).expect("run");
+    // shapes
+    assert_eq!(out.state.x.len(), meta.chains * meta.n_pad);
+    assert_eq!(out.sum_x.len(), meta.chains * meta.n_pad);
+    assert_eq!(out.mag.len(), meta.sweeps * meta.chains);
+    // x is binary, sums bounded by sweep count
+    assert!(out.state.x.iter().all(|&v| v == 0.0 || v == 1.0));
+    assert!(out.sum_x.iter().all(|&s| (0.0..=meta.sweeps as f32).contains(&s)));
+    // magnetization of a zero-field Ising grid stays in (0, 1) and moves
+    let m0 = out.mag[0];
+    let m_last = out.mag[out.mag.len() - 1];
+    assert!(m0 > 0.0 && m0 < 1.0, "mag {m0}");
+    assert!(m_last > 0.0 && m_last < 1.0);
+}
+
+#[test]
+fn chunked_execution_continues_the_chain() {
+    let rt = runtime();
+    let meta = rt.manifest().get("grid16").unwrap().clone();
+    let g = workloads::ising_grid(16, 16, 0.3, 0.1);
+    let m = DualModel::from_graph(&g);
+    let ops = m.dense_operands(meta.n_pad, meta.f_pad);
+    let exec = rt.chain_exec("grid16", &ops).unwrap();
+    // same key, same start => identical outputs (deterministic replay)
+    let a = exec.run(&exec.zero_state(), [1, 2]).unwrap();
+    let b = exec.run(&exec.zero_state(), [1, 2]).unwrap();
+    assert_eq!(a.state.x, b.state.x);
+    assert_eq!(a.mag, b.mag);
+    // different key => different trajectory
+    let c = exec.run(&exec.zero_state(), [3, 4]).unwrap();
+    assert_ne!(a.state.x, c.state.x);
+    // chaining: second chunk starts from first chunk's state
+    let d = exec.run(&a.state, [5, 6]).unwrap();
+    assert_ne!(d.state.x, a.state.x);
+}
+
+#[test]
+fn padding_stays_inert_across_chunks() {
+    let rt = runtime();
+    let meta = rt.manifest().get("grid16").unwrap().clone();
+    // a graph smaller than the artifact: 10x10 grid in a 256-var artifact
+    let g = workloads::ising_grid(10, 10, 0.3, 0.2);
+    let m = DualModel::from_graph(&g);
+    let ops = m.dense_operands(meta.n_pad, meta.f_pad);
+    let exec = rt.chain_exec("grid16", &ops).unwrap();
+    let mut state = exec.zero_state();
+    let mut rng = Pcg64::seed(5);
+    for _ in 0..4 {
+        let out = exec.run(&state, [rng.next_u64() as u32, rng.next_u64() as u32]).unwrap();
+        state = out.state;
+        for c in 0..meta.chains {
+            let row = &state.x[c * meta.n_pad..(c + 1) * meta.n_pad];
+            assert!(
+                row[100..].iter().all(|&v| v == 0.0),
+                "padded variables flipped on"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_chain_matches_exact_marginals() {
+    // THE cross-stack test: python-lowered chain == rust exact enumeration.
+    // Small model (3x3 grid) embedded in the grid16 artifact.
+    let rt = runtime();
+    let meta = rt.manifest().get("grid16").unwrap().clone();
+    let mut g = workloads::ising_grid(3, 3, 0.4, 0.15);
+    // add an anti-ferromagnetic edge to exercise the Lemma-4 swap path
+    g.add_factor(PairFactor::ising(0, 8, -0.3));
+    let m = DualModel::from_graph(&g);
+    let ops = m.dense_operands(meta.n_pad, meta.f_pad);
+    let exec = rt.chain_exec("grid16", &ops).unwrap();
+
+    let mut state = exec.zero_state();
+    let mut rng = Pcg64::seed(11);
+    let mut sum = vec![0.0f64; 9];
+    let burn_chunks = 12; // 12 * 8 = 96 burn-in sweeps
+    let keep_chunks = 1500; // 1500 * 8 * 4 chains = 48k samples
+    for chunk in 0..burn_chunks + keep_chunks {
+        let out = exec
+            .run(&state, [rng.next_u64() as u32, rng.next_u64() as u32])
+            .unwrap();
+        state = out.state;
+        if chunk >= burn_chunks {
+            for c in 0..meta.chains {
+                for v in 0..9 {
+                    sum[v] += out.sum_x[c * meta.n_pad + v] as f64;
+                }
+            }
+        }
+    }
+    let total = (keep_chunks * meta.sweeps * meta.chains) as f64;
+    let want = exact::enumerate(&g).marginals;
+    for v in 0..9 {
+        let got = sum[v] / total;
+        assert!(
+            (got - want[v]).abs() < 0.015,
+            "v={v}: xla {got:.4} vs exact {:.4}",
+            want[v]
+        );
+    }
+}
+
+#[test]
+fn operand_padding_mismatch_is_rejected() {
+    let rt = runtime();
+    let g = FactorGraph::new(4);
+    let m = DualModel::from_graph(&g);
+    let ops = m.dense_operands(8, 8); // wrong padding for grid16
+    assert!(rt.chain_exec("grid16", &ops).is_err());
+}
+
+#[test]
+fn unknown_artifact_is_rejected() {
+    let rt = runtime();
+    let g = FactorGraph::new(4);
+    let m = DualModel::from_graph(&g);
+    let ops = m.dense_operands(256, 512);
+    assert!(rt.chain_exec("nope", &ops).is_err());
+}

@@ -1,0 +1,132 @@
+//! Cross-sampler integration: every sampler targets the same distribution.
+//!
+//! On models with exact oracles, all five samplers (sequential, chromatic,
+//! primal–dual, blocked-PD, and — where applicable — Swendsen–Wang) must
+//! produce marginals that agree with enumeration AND with each other.
+//! This is the strongest whole-crate invariant: it couples graph,
+//! dualization, blocking, BP, coloring and the samplers in one assertion.
+
+use pdgibbs::graph::{FactorGraph, PairFactor};
+use pdgibbs::inference::exact;
+use pdgibbs::rng::Pcg64;
+use pdgibbs::samplers::{
+    empirical_marginals, BlockedPd, ChromaticGibbs, PdSampler, Sampler, SequentialGibbs,
+    SwendsenWang,
+};
+use pdgibbs::util::proptest::{check, Gen};
+use pdgibbs::workloads;
+
+fn marginals_of(sampler: &mut dyn Sampler, seed: u64, burn: usize, keep: usize) -> Vec<f64> {
+    let mut rng = Pcg64::seed(seed);
+    empirical_marginals(sampler, &mut rng, burn, keep)
+}
+
+#[test]
+fn all_samplers_agree_on_ferromagnetic_grid() {
+    let g = workloads::ising_grid(3, 3, 0.45, 0.2);
+    let want = exact::enumerate(&g).marginals;
+    let tol = 0.015;
+    let runs: Vec<(&str, Vec<f64>)> = vec![
+        ("sequential", marginals_of(&mut SequentialGibbs::new(&g), 1, 500, 60_000)),
+        ("chromatic", marginals_of(&mut ChromaticGibbs::new(&g), 2, 500, 60_000)),
+        ("pd", marginals_of(&mut PdSampler::new(&g), 3, 1000, 90_000)),
+        ("blocked", marginals_of(&mut BlockedPd::new(&g), 4, 300, 50_000)),
+        ("sw", marginals_of(&mut SwendsenWang::new(&g), 5, 300, 50_000)),
+    ];
+    for (name, marg) in &runs {
+        for v in 0..9 {
+            assert!(
+                (marg[v] - want[v]).abs() < tol,
+                "{name} v={v}: {} vs exact {}",
+                marg[v],
+                want[v]
+            );
+        }
+    }
+}
+
+#[test]
+fn non_sw_samplers_agree_on_frustrated_model() {
+    // mixed-sign couplings + fields: SW does not apply, others must agree
+    let mut g = FactorGraph::new(8);
+    for v in 0..8 {
+        g.set_unary(v, 0.3 * ((v % 3) as f64 - 1.0));
+    }
+    for (i, &(a, b, beta)) in [
+        (0usize, 1usize, 0.5f64),
+        (1, 2, -0.4),
+        (2, 3, 0.6),
+        (3, 0, -0.5),
+        (4, 5, 0.3),
+        (5, 6, -0.6),
+        (6, 7, 0.4),
+        (7, 4, 0.2),
+        (0, 4, -0.3),
+        (2, 6, 0.35),
+    ]
+    .iter()
+    .enumerate()
+    {
+        g.add_factor(PairFactor::ising(a, b, beta));
+        let _ = i;
+    }
+    let want = exact::enumerate(&g).marginals;
+    let tol = 0.015;
+    let runs: Vec<(&str, Vec<f64>)> = vec![
+        ("sequential", marginals_of(&mut SequentialGibbs::new(&g), 6, 500, 80_000)),
+        ("chromatic", marginals_of(&mut ChromaticGibbs::new(&g), 7, 500, 80_000)),
+        ("pd", marginals_of(&mut PdSampler::new(&g), 8, 1000, 120_000)),
+        ("blocked", marginals_of(&mut BlockedPd::new(&g), 9, 300, 60_000)),
+    ];
+    for (name, marg) in &runs {
+        for v in 0..8 {
+            assert!(
+                (marg[v] - want[v]).abs() < tol,
+                "{name} v={v}: {} vs {}",
+                marg[v],
+                want[v]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_pd_matches_sequential_on_random_models() {
+    // randomized cross-check without enumeration: PD and sequential land
+    // on the same marginals (they target the same p(x))
+    check("pd == sequential marginals", 6, |gn: &mut Gen| {
+        let n = gn.usize_in(4..=8);
+        let mut g = FactorGraph::new(n);
+        for v in 0..n {
+            g.set_unary(v, gn.f64_in(-0.8, 0.8));
+        }
+        for _ in 0..gn.usize_in(n..=2 * n) {
+            let v1 = gn.usize_in(0..=n - 1);
+            let mut v2 = gn.usize_in(0..=n - 1);
+            if v1 == v2 {
+                v2 = (v2 + 1) % n;
+            }
+            g.add_factor(PairFactor::new(v1, v2, gn.positive_table(1.2)));
+        }
+        let seq = marginals_of(&mut SequentialGibbs::new(&g), gn.u64(), 500, 60_000);
+        let pd = marginals_of(&mut PdSampler::new(&g), gn.u64(), 1000, 90_000);
+        for v in 0..n {
+            if (seq[v] - pd[v]).abs() > 0.025 {
+                return Err(format!(
+                    "v={v}: sequential {} vs pd {}",
+                    seq[v], pd[v]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn updates_per_sweep_normalization() {
+    // fig2b normalization contract: sequential counts n site updates per
+    // sweep; PD counts n parallel updates (1 parallel step)
+    let g = workloads::fully_connected_ising(10, |_, _| 0.01);
+    assert_eq!(SequentialGibbs::new(&g).updates_per_sweep(), 10);
+    assert_eq!(PdSampler::new(&g).updates_per_sweep(), 10);
+}
