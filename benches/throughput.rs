@@ -1,19 +1,26 @@
 //! Performance bench: sweep throughput per backend + thread scaling.
 //!
 //! Not a paper figure per se — this is deliverable (e): the hot-path
-//! numbers behind EXPERIMENTS.md §Perf. Measures, on the Fig-2a grid50
-//! and Fig-2b fc100 workloads:
+//! numbers behind EXPERIMENTS.md §Perf.
+//!
+//! `--mode full` (default) measures, on the Fig-2a grid50 and Fig-2b fc100
+//! workloads:
 //!
 //!   * native PD sweeps/s at 1..T threads (site-updates/s),
 //!   * sequential and chromatic baselines,
 //!   * the XLA artifact path (L1 Pallas + L2 scan under PJRT), amortized
 //!     per sweep, when `artifacts/` is built,
-//!   * coordinator request overhead (background slice vs direct ensemble).
+//!
+//! `--mode lanes` measures the lane-batched multi-chain engine against the
+//! same chain count served by scalar `PdSampler` loops on a 64×64 Ising
+//! grid — the batched-serving hot path. Acceptance (ISSUE 1): ≥ 3× sweep
+//! throughput for 64 lane-batched chains vs 64 scalar chains.
 
 use std::sync::Arc;
 
 use pdgibbs::bench::{time_fn, Record, Report};
 use pdgibbs::duality::DualModel;
+use pdgibbs::engine::LanePdSampler;
 use pdgibbs::rng::{Pcg64, RngCore};
 use pdgibbs::runtime::Runtime;
 use pdgibbs::samplers::{ChromaticGibbs, PdSampler, Sampler, SequentialGibbs};
@@ -21,6 +28,129 @@ use pdgibbs::util::ThreadPool;
 use pdgibbs::workloads;
 
 fn main() {
+    match parse_mode().as_str() {
+        "full" => bench_full(),
+        "lanes" => bench_lanes(),
+        other => {
+            eprintln!("unknown mode '{other}' (usage: throughput [--mode full|lanes])");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// `--mode <full|lanes>`; unknown arguments (e.g. cargo's own flags) are
+/// ignored so both `cargo bench` and direct invocation work.
+fn parse_mode() -> String {
+    let args: Vec<String> = std::env::args().collect();
+    for (i, a) in args.iter().enumerate() {
+        if a == "--mode" {
+            if let Some(v) = args.get(i + 1) {
+                return v.clone();
+            }
+        }
+    }
+    "full".to_string()
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+// -- lanes mode -------------------------------------------------------------
+
+fn bench_lanes() {
+    let mut report = Report::new("throughput-lanes");
+    let lanes = 64usize;
+    let g = workloads::ising_grid(64, 64, 0.3, 0.0);
+    let n = g.num_vars() as f64;
+    let sweeps_per_rep = 5usize;
+
+    // baseline: 64 independent scalar chains, swept back-to-back on one
+    // thread (the pre-engine ensemble execution model)
+    let base = Pcg64::seed(0xBEEF);
+    let mut chains: Vec<(PdSampler, Pcg64)> = (0..lanes)
+        .map(|c| (PdSampler::new(&g), base.split(c as u64 + 1)))
+        .collect();
+    let times = time_fn(1, 8, || {
+        for _ in 0..sweeps_per_rep {
+            for (s, rng) in chains.iter_mut() {
+                s.sweep(rng);
+            }
+        }
+    });
+    let scalar_s = mean(&times) / sweeps_per_rep as f64; // s per all-chain sweep
+    push_lane_metrics(&mut report, "pd-scalar-x64", lanes, n, scalar_s, 0);
+
+    // lane engine, single-threaded
+    let mut eng = LanePdSampler::new(&g, lanes, 0xBEEF);
+    let times = time_fn(1, 8, || {
+        for _ in 0..sweeps_per_rep {
+            eng.sweep();
+        }
+    });
+    let lane_s = mean(&times) / sweeps_per_rep as f64;
+    push_lane_metrics(&mut report, "pd-lanes", lanes, n, lane_s, 0);
+
+    // lane engine on the pool (splits over variables, not chains)
+    let mut pooled_best = lane_s;
+    let max_threads = ThreadPool::default_size();
+    let mut thread_counts = vec![2usize, 4];
+    if max_threads > 4 {
+        thread_counts.push(max_threads);
+    }
+    for &t in &thread_counts {
+        let mut eng =
+            LanePdSampler::new(&g, lanes, 0xBEEF).with_pool(Arc::new(ThreadPool::new(t)));
+        let times = time_fn(1, 8, || {
+            for _ in 0..sweeps_per_rep {
+                eng.sweep();
+            }
+        });
+        let s = mean(&times) / sweeps_per_rep as f64;
+        pooled_best = pooled_best.min(s);
+        push_lane_metrics(&mut report, "pd-lanes-pooled", lanes, n, s, t);
+    }
+
+    let speedup = scalar_s / lane_s;
+    let speedup_pooled = scalar_s / pooled_best;
+    report.push(
+        Record::new("lanes-vs-scalar")
+            .param("workload", "grid64")
+            .metric("speedup_1t", speedup)
+            .metric("speedup_best", speedup_pooled),
+    );
+    println!(
+        "lane engine speedup vs 64 scalar chains: {speedup:.2}x single-thread, \
+         {speedup_pooled:.2}x best-pooled (target >= 3x)"
+    );
+    if speedup < 3.0 {
+        println!("WARNING: single-thread lane speedup below the 3x acceptance target");
+    }
+    report.finish();
+}
+
+fn push_lane_metrics(
+    report: &mut Report,
+    label: &str,
+    lanes: usize,
+    n: f64,
+    per_sweep_s: f64,
+    threads: usize,
+) {
+    report.push(
+        Record::new(label)
+            .param("workload", "grid64")
+            .param("lanes", lanes)
+            .param("threads", threads)
+            .metric("sweep_ms", per_sweep_s * 1e3)
+            .metric("chain_sweeps_per_s", lanes as f64 / per_sweep_s)
+            .metric("Msite_updates_per_s", lanes as f64 * n / per_sweep_s / 1e6),
+    );
+}
+
+// -- full mode --------------------------------------------------------------
+
+fn bench_full() {
     let mut report = Report::new("throughput");
     let sweeps_per_rep = 20usize;
 
@@ -68,7 +198,7 @@ fn main() {
         }
     }
 
-    // XLA artifact path (needs `make artifacts`)
+    // XLA artifact path (needs `make artifacts` + `--features xla`)
     match Runtime::load("artifacts") {
         Ok(rt) => {
             for name in ["grid50", "fc100"] {

@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::coordinator::PdEnsemble;
 use crate::diagnostics::{mixing_time_multi, MixingResult};

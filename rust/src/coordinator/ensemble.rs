@@ -1,32 +1,27 @@
 //! Multi-chain primal–dual ensemble with convergence monitoring.
 //!
 //! The paper's experiments run 10 chains and diagnose mixing via PSRF;
-//! [`PdEnsemble`] is that harness as a first-class runtime object: chains
-//! share one [`DualModel`] (updated incrementally under churn), sweeps run
-//! chain-parallel on the pool, and per-sweep traces (magnetization plus a
-//! monitored variable subset) feed [`crate::diagnostics`].
+//! [`PdEnsemble`] is that harness as a first-class runtime object. The
+//! chains execute on the lane-batched engine
+//! ([`crate::engine::LanePdSampler`]): one shared [`DualModel`] (updated
+//! incrementally under churn), bit-packed variable-major state, and one
+//! incidence traversal per variable per sweep regardless of the chain
+//! count — thread parallelism splits over variables, so it scales with
+//! model size rather than chain count. The PSRF/trace API is unchanged:
+//! per-sweep traces (magnetization plus a monitored variable subset) feed
+//! [`crate::diagnostics`].
 
 use std::sync::Arc;
 
 use crate::diagnostics::{mixing_time_multi, MixingResult};
 use crate::duality::DualModel;
+use crate::engine::LanePdSampler;
 use crate::graph::{FactorGraph, FactorId, PairFactor};
-use crate::rng::{sigmoid, Pcg64, RngCore};
 use crate::util::ThreadPool;
 
-/// One chain's state.
-#[derive(Clone, Debug)]
-struct Chain {
-    x: Vec<u8>,
-    theta: Vec<u8>,
-    rng: Pcg64,
-}
-
-/// N primal–dual chains over one shared dual model.
+/// N primal–dual chains over one shared dual model, one lane per chain.
 pub struct PdEnsemble {
-    model: DualModel,
-    chains: Vec<Chain>,
-    pool: Option<Arc<ThreadPool>>,
+    engine: LanePdSampler,
     /// Variables whose per-sweep traces are recorded for PSRF.
     monitor: Vec<usize>,
     /// `traces[0]` = magnetization; `traces[1 + k]` = monitor var k.
@@ -46,60 +41,45 @@ impl PdEnsemble {
 
     pub fn from_model(model: DualModel, chains: usize, seed: u64) -> Self {
         assert!(chains >= 1);
-        let base = Pcg64::seed(seed);
         let n = model.num_vars();
-        let chains: Vec<Chain> = (0..chains)
-            .map(|c| Chain {
-                x: vec![0; n],
-                theta: vec![0; model.factor_slots()],
-                rng: base.split(c as u64 + 1),
-            })
-            .collect();
-        let m = chains.len();
+        let engine = LanePdSampler::from_model(model, chains, seed);
         Self {
-            model,
-            chains,
-            pool: None,
+            engine,
             monitor: Vec::new(),
-            traces: vec![vec![Vec::new(); m]],
-            sums: vec![vec![0.0; n]; m],
+            traces: vec![vec![Vec::new(); chains]],
+            sums: vec![vec![0.0; n]; chains],
             sweeps_done: 0,
             stat_sweeps: 0,
         }
     }
 
-    /// Enable chain-parallel sweeps.
+    /// Enable pooled sweeps (the engine splits work over variables).
     pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
-        self.pool = Some(pool);
+        self.engine = self.engine.with_pool(pool);
         self
     }
 
     /// Record per-sweep traces for these variables (PSRF monitors).
     pub fn monitor_vars(&mut self, vars: Vec<usize>) {
         self.monitor = vars;
-        let m = self.chains.len();
+        let m = self.num_chains();
         self.traces = vec![vec![Vec::new(); m]; 1 + self.monitor.len()];
     }
 
     /// Overdispersed initialization: chain c starts all-0 / all-1 / random.
     pub fn init_overdispersed(&mut self) {
-        let n = self.model.num_vars();
-        for (c, chain) in self.chains.iter_mut().enumerate() {
+        for c in 0..self.num_chains() {
             match c % 3 {
-                0 => chain.x.fill(0),
-                1 => chain.x.fill(1),
-                _ => {
-                    for v in 0..n {
-                        chain.x[v] = (chain.rng.next_u64() & 1) as u8;
-                    }
-                }
+                0 => self.engine.fill_lane(c, false),
+                1 => self.engine.fill_lane(c, true),
+                _ => self.engine.randomize_lane(c),
             }
-            chain.theta.fill(0);
+            self.engine.clear_theta_lane(c);
         }
     }
 
     pub fn num_chains(&self) -> usize {
-        self.chains.len()
+        self.engine.lanes()
     }
 
     pub fn sweeps_done(&self) -> usize {
@@ -107,77 +87,32 @@ impl PdEnsemble {
     }
 
     pub fn model(&self) -> &DualModel {
-        &self.model
+        self.engine.model()
     }
 
-    pub fn chain_state(&self, c: usize) -> &[u8] {
-        &self.chains[c].x
+    /// One chain's primal state, unpacked to bytes.
+    pub fn chain_state(&self, c: usize) -> Vec<u8> {
+        self.engine.lane_state(c)
     }
 
     // -- dynamic topology --------------------------------------------------
 
     /// O(degree) factor insertion shared by all chains (no recoloring).
     pub fn add_factor(&mut self, id: FactorId, f: &PairFactor) {
-        self.model.insert_at(id, f);
-        let slots = self.model.factor_slots();
-        for chain in &mut self.chains {
-            if chain.theta.len() < slots {
-                chain.theta.resize(slots, 0);
-            }
-            chain.theta[id] = 0;
-        }
+        self.engine.add_factor(id, f);
     }
 
     /// O(degree) factor removal shared by all chains.
     pub fn remove_factor(&mut self, id: FactorId) {
-        self.model.remove(id);
-        for chain in &mut self.chains {
-            if id < chain.theta.len() {
-                chain.theta[id] = 0;
-            }
-        }
+        self.engine.remove_factor(id);
     }
 
     // -- sampling -----------------------------------------------------------
 
-    fn sweep_chain(model: &DualModel, chain: &mut Chain) {
-        let n = model.num_vars();
-        for v in 0..n {
-            let z = model.x_logodds(v, &chain.theta);
-            chain.x[v] = chain.rng.bernoulli(sigmoid(z)) as u8;
-        }
-        for slot in 0..model.factor_slots() {
-            if let Some(e) = model.entry(slot) {
-                let z = model.theta_logodds(e, &chain.x);
-                chain.theta[slot] = chain.rng.bernoulli(sigmoid(z)) as u8;
-            }
-        }
-    }
-
     /// Advance every chain by `sweeps` sweeps, recording traces.
     pub fn run(&mut self, sweeps: usize) {
         for _ in 0..sweeps {
-            match &self.pool {
-                Some(pool) => {
-                    let pool = Arc::clone(pool);
-                    let model = &self.model;
-                    let chains_ptr = SendPtr(self.chains.as_mut_ptr());
-                    let m = self.chains.len();
-                    pool.scope_chunks(m, |_, start, end| {
-                        let chains_ptr = &chains_ptr;
-                        for c in start..end {
-                            // SAFETY: disjoint chain indices per chunk.
-                            let chain = unsafe { &mut *chains_ptr.0.add(c) };
-                            Self::sweep_chain(model, chain);
-                        }
-                    });
-                }
-                None => {
-                    for chain in &mut self.chains {
-                        Self::sweep_chain(&self.model, chain);
-                    }
-                }
-            }
+            self.engine.sweep();
             self.record();
         }
     }
@@ -185,15 +120,33 @@ impl PdEnsemble {
     fn record(&mut self) {
         self.sweeps_done += 1;
         self.stat_sweeps += 1;
-        let n = self.model.num_vars() as f64;
-        for (c, chain) in self.chains.iter().enumerate() {
-            let mag = chain.x.iter().map(|&b| b as f64).sum::<f64>() / n;
-            self.traces[0][c].push(mag);
-            for (k, &v) in self.monitor.iter().enumerate() {
-                self.traces[1 + k][c].push(chain.x[v] as f64);
+        let n = self.engine.num_vars();
+        let m = self.num_chains();
+        let words = self.engine.words_per_site();
+        // one pass over the packed state updates both the per-chain sums
+        // and the magnetization counts (bit-sparse iteration per word)
+        let mut mag = vec![0u32; m];
+        {
+            let state = self.engine.state_words();
+            for v in 0..n {
+                for w in 0..words {
+                    let mut bits = state[v * words + w];
+                    while bits != 0 {
+                        let c = w * 64 + bits.trailing_zeros() as usize;
+                        mag[c] += 1;
+                        self.sums[c][v] += 1.0;
+                        bits &= bits - 1;
+                    }
+                }
             }
-            for (s, &x) in self.sums[c].iter_mut().zip(&chain.x) {
-                *s += x as f64;
+        }
+        let nf = n as f64;
+        for (c, &ones) in mag.iter().enumerate() {
+            self.traces[0][c].push(ones as f64 / nf);
+        }
+        for (k, &v) in self.monitor.iter().enumerate() {
+            for c in 0..m {
+                self.traces[1 + k][c].push(self.engine.lane_bit(v, c) as f64);
             }
         }
     }
@@ -220,8 +173,8 @@ impl PdEnsemble {
     /// Posterior marginal estimates pooled across chains since the last
     /// `reset_stats`.
     pub fn marginals(&self) -> Vec<f64> {
-        let n = self.model.num_vars();
-        let denom = (self.stat_sweeps * self.chains.len()) as f64;
+        let n = self.engine.num_vars();
+        let denom = (self.stat_sweeps * self.num_chains()) as f64;
         let mut out = vec![0.0; n];
         if denom == 0.0 {
             return out;
@@ -242,10 +195,6 @@ impl PdEnsemble {
         &self.traces[0]
     }
 }
-
-struct SendPtr<T>(*mut T);
-unsafe impl<T> Sync for SendPtr<T> {}
-unsafe impl<T> Send for SendPtr<T> {}
 
 #[cfg(test)]
 mod tests {
@@ -285,6 +234,24 @@ mod tests {
         for v in 0..9 {
             assert!((got[v] - want[v]).abs() < 0.02, "v={v}");
         }
+    }
+
+    #[test]
+    fn pool_does_not_change_the_trajectory() {
+        // engine streams are keyed (sweep, site): pooled and serial runs
+        // of the same seed are bit-identical, so ensemble statistics are
+        // reproducible however the host machine is sized
+        let g = workloads::ising_grid(4, 4, 0.3, 0.05);
+        let mut a = PdEnsemble::new(&g, 6, 47);
+        let mut b = PdEnsemble::new(&g, 6, 47).with_pool(Arc::new(ThreadPool::new(3)));
+        a.init_overdispersed();
+        b.init_overdispersed();
+        a.run(40);
+        b.run(40);
+        for c in 0..6 {
+            assert_eq!(a.chain_state(c), b.chain_state(c), "chain {c}");
+        }
+        assert_eq!(a.magnetization_traces(), b.magnetization_traces());
     }
 
     #[test]
@@ -343,7 +310,7 @@ mod tests {
         let g = workloads::ising_grid(2, 2, 0.1, 0.0);
         let mut e = PdEnsemble::new(&g, 3, 46);
         e.init_overdispersed();
-        assert_eq!(e.chain_state(0), &[0, 0, 0, 0]);
-        assert_eq!(e.chain_state(1), &[1, 1, 1, 1]);
+        assert_eq!(e.chain_state(0), vec![0, 0, 0, 0]);
+        assert_eq!(e.chain_state(1), vec![1, 1, 1, 1]);
     }
 }

@@ -115,6 +115,10 @@ impl DualModel {
         } = dualize_table(&f.table);
         if slot >= self.entries.len() {
             self.entries.resize(slot + 1, None);
+        } else if let Some(pos) = self.free.iter().position(|&s| s == slot) {
+            // slot reuse (the graph pops its own free list and hands the id
+            // back to us): keep our free list consistent under churn
+            self.free.swap_remove(pos);
         }
         assert!(self.entries[slot].is_none(), "slot {slot} already live");
         self.entries[slot] = Some(DualEntry {
@@ -149,6 +153,12 @@ impl DualModel {
         self.free.push(slot);
         self.active -= 1;
         Some(e)
+    }
+
+    /// Currently-free (removed, reusable) factor slots, in removal order.
+    /// Emptied again as the slots are reused via [`DualModel::insert_at`].
+    pub fn free_slots(&self) -> &[usize] {
+        &self.free
     }
 
     /// Add a variable (dynamic growth).
@@ -359,6 +369,24 @@ mod tests {
             assert_eq!(a, b);
         }
         assert_eq!(m.num_factors(), fresh.num_factors());
+    }
+
+    #[test]
+    fn free_list_tracks_slot_reuse() {
+        let mut g = FactorGraph::new(4);
+        let a = g.add_factor(PairFactor::ising(0, 1, 0.3));
+        let b = g.add_factor(PairFactor::ising(1, 2, 0.4));
+        let mut m = DualModel::from_graph(&g);
+        assert!(m.free_slots().is_empty());
+        m.remove(a);
+        m.remove(b);
+        assert_eq!(m.free_slots(), &[a, b]);
+        // re-inserting into a freed slot must drop it from the free list
+        m.insert_at(b, &PairFactor::ising(2, 3, 0.5));
+        assert_eq!(m.free_slots(), &[a]);
+        m.insert_at(a, &PairFactor::ising(0, 1, 0.3));
+        assert!(m.free_slots().is_empty());
+        assert_eq!(m.num_factors(), 2);
     }
 
     #[test]

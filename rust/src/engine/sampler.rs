@@ -1,0 +1,534 @@
+//! [`LanePdSampler`]: the bit-packed multi-chain primal–dual sampler.
+//!
+//! State layout (variable-major, `words = lanes.div_ceil(64)`):
+//!
+//! ```text
+//! x[v * words + w]      bit l  =  x_v of chain (w·64 + l)
+//! theta[i * words + w]  bit l  =  θ_i of chain (w·64 + l)
+//! ```
+//!
+//! One sweep is the usual two half-steps, but vectorized over lanes:
+//!
+//! * x: per variable, ONE traversal of the incidence list accumulates the
+//!   per-lane log-odds (`base_field[v] + Σ θ_i β_{i,v}` with θ read as
+//!   packed bits), then 64 Bernoulli draws pack the result word.
+//! * θ: per live factor, the conditional depends only on the two endpoint
+//!   bits, so four precomputed sigmoids serve every lane.
+//!
+//! Unused high lanes of the last word are kept zero (`lanes % 64` tail).
+
+use std::sync::Arc;
+
+use crate::duality::DualModel;
+use crate::graph::{FactorGraph, FactorId, PairFactor};
+use crate::rng::{bernoulli_sigmoid, sigmoid_fast, Pcg64, RngCore};
+use crate::util::ThreadPool;
+
+/// Lane-batched primal–dual Gibbs sampler (up to any number of chains;
+/// 64 per machine word).
+pub struct LanePdSampler {
+    model: DualModel,
+    lanes: usize,
+    words: usize,
+    x: Vec<u64>,
+    theta: Vec<u64>,
+    pool: Option<Arc<ThreadPool>>,
+    /// Stream root: every site's draws are keyed `split2(sweep, site)`.
+    base: Pcg64,
+    sweep_count: u64,
+}
+
+/// Number of live lanes in word `w` of a site's lane row.
+#[inline]
+fn lanes_in_word(lanes: usize, w: usize) -> usize {
+    (lanes - w * 64).min(64)
+}
+
+/// All-ones mask over the low `k` bits (`k ∈ 1..=64`).
+#[inline]
+fn lane_mask(k: usize) -> u64 {
+    if k == 64 {
+        u64::MAX
+    } else {
+        (1u64 << k) - 1
+    }
+}
+
+impl LanePdSampler {
+    /// Dualize `graph` and start all lanes from the all-zeros state.
+    pub fn new(graph: &FactorGraph, lanes: usize, seed: u64) -> Self {
+        Self::from_model(DualModel::from_graph(graph), lanes, seed)
+    }
+
+    /// Wrap an existing dual model (shared slot space with the graph).
+    pub fn from_model(model: DualModel, lanes: usize, seed: u64) -> Self {
+        assert!(lanes >= 1, "at least one lane");
+        let words = lanes.div_ceil(64);
+        let x = vec![0u64; model.num_vars() * words];
+        let theta = vec![0u64; model.factor_slots() * words];
+        Self {
+            model,
+            lanes,
+            words,
+            x,
+            theta,
+            pool: None,
+            base: Pcg64::seed(seed),
+            sweep_count: 0,
+        }
+    }
+
+    /// Enable variable-parallel sweeps on the given pool. Does not change
+    /// the sampled trajectory: streams are keyed per `(sweep, site)`.
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    pub fn model(&self) -> &DualModel {
+        &self.model
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Words of packed state per site (`lanes.div_ceil(64)`).
+    pub fn words_per_site(&self) -> usize {
+        self.words
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.model.num_vars()
+    }
+
+    pub fn sweeps_done(&self) -> u64 {
+        self.sweep_count
+    }
+
+    /// Packed primal state, `x[v * words_per_site() + w]`.
+    pub fn state_words(&self) -> &[u64] {
+        &self.x
+    }
+
+    /// Packed dual state, `theta[slot * words_per_site() + w]`.
+    pub fn theta_words(&self) -> &[u64] {
+        &self.theta
+    }
+
+    /// Chain `lane`'s value of variable `v`.
+    #[inline]
+    pub fn lane_bit(&self, v: usize, lane: usize) -> u8 {
+        ((self.x[v * self.words + lane / 64] >> (lane % 64)) & 1) as u8
+    }
+
+    /// Number of lanes with `x_v = 1` (marginal accumulation).
+    #[inline]
+    pub fn popcount_var(&self, v: usize) -> u32 {
+        self.x[v * self.words..(v + 1) * self.words]
+            .iter()
+            .map(|w| w.count_ones())
+            .sum()
+    }
+
+    /// One chain's primal state, unpacked to bytes.
+    pub fn lane_state(&self, lane: usize) -> Vec<u8> {
+        assert!(lane < self.lanes);
+        (0..self.num_vars()).map(|v| self.lane_bit(v, lane)).collect()
+    }
+
+    /// Overwrite one chain's primal state (chain initialization).
+    pub fn set_lane_state(&mut self, lane: usize, xs: &[u8]) {
+        assert!(lane < self.lanes);
+        assert_eq!(xs.len(), self.num_vars());
+        let (w, mask) = (lane / 64, 1u64 << (lane % 64));
+        for (v, &b) in xs.iter().enumerate() {
+            let word = &mut self.x[v * self.words + w];
+            if b != 0 {
+                *word |= mask;
+            } else {
+                *word &= !mask;
+            }
+        }
+    }
+
+    /// Set one chain's primal state to a constant (all-0 / all-1 start).
+    pub fn fill_lane(&mut self, lane: usize, value: bool) {
+        assert!(lane < self.lanes);
+        let (w, mask) = (lane / 64, 1u64 << (lane % 64));
+        for v in 0..self.num_vars() {
+            let word = &mut self.x[v * self.words + w];
+            if value {
+                *word |= mask;
+            } else {
+                *word &= !mask;
+            }
+        }
+    }
+
+    /// Randomize one chain's primal state from the lane-indexed init
+    /// stream (`split2(0, lane)`; sweeps use sweep indices ≥ 1).
+    pub fn randomize_lane(&mut self, lane: usize) {
+        assert!(lane < self.lanes);
+        let mut rng = self.base.split2(0, lane as u64);
+        let (w, mask) = (lane / 64, 1u64 << (lane % 64));
+        for v in 0..self.num_vars() {
+            let word = &mut self.x[v * self.words + w];
+            if rng.next_u64() & 1 == 1 {
+                *word |= mask;
+            } else {
+                *word &= !mask;
+            }
+        }
+    }
+
+    /// Zero one chain's dual state (pairs with the init helpers above).
+    pub fn clear_theta_lane(&mut self, lane: usize) {
+        assert!(lane < self.lanes);
+        let (w, mask) = (lane / 64, 1u64 << (lane % 64));
+        for slot in 0..self.model.factor_slots() {
+            self.theta[slot * self.words + w] &= !mask;
+        }
+    }
+
+    // -- dynamic topology --------------------------------------------------
+
+    /// Dynamic update for ALL lanes at once: one O(degree) model mutation,
+    /// no recoloring, no per-chain work beyond zeroing the new θ word.
+    pub fn add_factor(&mut self, id: FactorId, f: &PairFactor) {
+        self.model.insert_at(id, f);
+        let need = self.model.factor_slots() * self.words;
+        if self.theta.len() < need {
+            self.theta.resize(need, 0);
+        }
+        for w in 0..self.words {
+            self.theta[id * self.words + w] = 0;
+        }
+    }
+
+    /// Dynamic update: unwire a factor for all lanes. O(degree).
+    pub fn remove_factor(&mut self, id: FactorId) {
+        self.model.remove(id);
+        if (id + 1) * self.words <= self.theta.len() {
+            for w in 0..self.words {
+                self.theta[id * self.words + w] = 0;
+            }
+        }
+    }
+
+    // -- sampling ----------------------------------------------------------
+
+    /// One full sweep of every lane: x half-step, then θ half-step. The
+    /// trajectory depends only on the seed and the sweep index — not on
+    /// whether/how a pool is attached.
+    pub fn sweep(&mut self) {
+        self.sweep_count += 1;
+        match self.pool.clone() {
+            Some(pool) => self.sweep_pooled(&pool),
+            None => self.sweep_serial(),
+        }
+    }
+
+    fn sweep_serial(&mut self) {
+        let words = self.words;
+        let n = self.model.num_vars();
+        {
+            let ctx = XCtx {
+                model: &self.model,
+                theta: &self.theta,
+                words,
+                lanes: self.lanes,
+                base: &self.base,
+                sweep: self.sweep_count,
+            };
+            for v in 0..n {
+                ctx.site(v, &mut self.x[v * words..(v + 1) * words]);
+            }
+        }
+        let slots = self.model.factor_slots();
+        {
+            let ctx = ThetaCtx {
+                model: &self.model,
+                x: &self.x,
+                words,
+                lanes: self.lanes,
+                base: &self.base,
+                sweep: self.sweep_count,
+            };
+            for slot in 0..slots {
+                ctx.site(slot, &mut self.theta[slot * words..(slot + 1) * words]);
+            }
+        }
+    }
+
+    fn sweep_pooled(&mut self, pool: &ThreadPool) {
+        let words = self.words;
+        let n = self.model.num_vars();
+        let slots = self.model.factor_slots();
+        // x | θ : chunks over variables write x, read frozen θ
+        {
+            let ctx = XCtx {
+                model: &self.model,
+                theta: &self.theta,
+                words,
+                lanes: self.lanes,
+                base: &self.base,
+                sweep: self.sweep_count,
+            };
+            let x_ptr = SendPtr(self.x.as_mut_ptr());
+            pool.scope_chunks(n, |_, start, end| {
+                let x_ptr = &x_ptr;
+                for v in start..end {
+                    // SAFETY: chunks own disjoint variable ranges, hence
+                    // disjoint `words`-sized word rows of x.
+                    let out = unsafe {
+                        std::slice::from_raw_parts_mut(x_ptr.0.add(v * words), words)
+                    };
+                    ctx.site(v, out);
+                }
+            });
+        }
+        // θ | x : chunks over factor slots write θ, read the fresh x
+        {
+            let ctx = ThetaCtx {
+                model: &self.model,
+                x: &self.x,
+                words,
+                lanes: self.lanes,
+                base: &self.base,
+                sweep: self.sweep_count,
+            };
+            let t_ptr = SendPtr(self.theta.as_mut_ptr());
+            pool.scope_chunks(slots, |_, start, end| {
+                let t_ptr = &t_ptr;
+                for slot in start..end {
+                    // SAFETY: chunks own disjoint slot ranges.
+                    let out = unsafe {
+                        std::slice::from_raw_parts_mut(t_ptr.0.add(slot * words), words)
+                    };
+                    ctx.site(slot, out);
+                }
+            });
+        }
+    }
+}
+
+/// Shared read-only context of the x half-step.
+struct XCtx<'a> {
+    model: &'a DualModel,
+    theta: &'a [u64],
+    words: usize,
+    lanes: usize,
+    base: &'a Pcg64,
+    sweep: u64,
+}
+
+impl XCtx<'_> {
+    /// Resample `x_v` in every lane: one incidence traversal total.
+    fn site(&self, v: usize, out: &mut [u64]) {
+        let field = self.model.base_field(v);
+        let inc = self.model.incidence(v);
+        // even site codes are x-variables, odd are θ-slots
+        let mut rng = self.base.split2(self.sweep, (v as u64) << 1);
+        let mut acc = [0.0f64; 64];
+        for (w, out_word) in out.iter_mut().enumerate() {
+            let k = lanes_in_word(self.lanes, w);
+            let accs = &mut acc[..k];
+            accs.fill(field);
+            for &(slot, beta) in inc {
+                let tw = self.theta[slot as usize * self.words + w];
+                if tw == 0 {
+                    continue; // θ = 0 in every lane: no contribution
+                }
+                if tw == lane_mask(k) {
+                    for a in accs.iter_mut() {
+                        *a += beta; // θ = 1 in every lane
+                    }
+                } else {
+                    for (l, a) in accs.iter_mut().enumerate() {
+                        *a += ((tw >> l) & 1) as f64 * beta;
+                    }
+                }
+            }
+            let mut word = 0u64;
+            for (l, &z) in accs.iter().enumerate() {
+                word |= (bernoulli_sigmoid(&mut rng, z) as u64) << l;
+            }
+            *out_word = word;
+        }
+    }
+}
+
+/// Shared read-only context of the θ half-step.
+struct ThetaCtx<'a> {
+    model: &'a DualModel,
+    x: &'a [u64],
+    words: usize,
+    lanes: usize,
+    base: &'a Pcg64,
+    sweep: u64,
+}
+
+impl ThetaCtx<'_> {
+    /// Resample `θ_slot` in every lane: the conditional takes one of four
+    /// values per factor, so four sigmoids cover all lanes.
+    fn site(&self, slot: usize, out: &mut [u64]) {
+        let Some(e) = self.model.entry(slot) else {
+            out.fill(0); // dead slot: keep θ = 0 in every lane
+            return;
+        };
+        let p = [
+            sigmoid_fast(e.q),
+            sigmoid_fast(e.q + e.beta1),
+            sigmoid_fast(e.q + e.beta2),
+            sigmoid_fast(e.q + e.beta1 + e.beta2),
+        ];
+        let mut rng = self.base.split2(self.sweep, ((slot as u64) << 1) | 1);
+        for (w, out_word) in out.iter_mut().enumerate() {
+            let k = lanes_in_word(self.lanes, w);
+            let x1 = self.x[e.v1 * self.words + w];
+            let x2 = self.x[e.v2 * self.words + w];
+            let mut word = 0u64;
+            for l in 0..k {
+                let idx = (((x1 >> l) & 1) | (((x2 >> l) & 1) << 1)) as usize;
+                word |= (rng.bernoulli(p[idx]) as u64) << l;
+            }
+            *out_word = word;
+        }
+    }
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::exact;
+    use crate::workloads;
+
+    fn lane_marginals(eng: &mut LanePdSampler, burn: usize, sweeps: usize) -> Vec<f64> {
+        for _ in 0..burn {
+            eng.sweep();
+        }
+        let n = eng.num_vars();
+        let mut acc = vec![0.0f64; n];
+        for _ in 0..sweeps {
+            eng.sweep();
+            for (v, a) in acc.iter_mut().enumerate() {
+                *a += eng.popcount_var(v) as f64;
+            }
+        }
+        let denom = (sweeps * eng.lanes()) as f64;
+        acc.into_iter().map(|a| a / denom).collect()
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_with_tail_lanes() {
+        let g = workloads::ising_grid(3, 3, 0.2, 0.0);
+        // 70 lanes: two words per site, 6-bit tail
+        let mut eng = LanePdSampler::new(&g, 70, 1);
+        let pattern: Vec<u8> = (0..9).map(|v| (v % 2) as u8).collect();
+        eng.set_lane_state(3, &pattern);
+        eng.set_lane_state(69, &pattern);
+        assert_eq!(eng.lane_state(3), pattern);
+        assert_eq!(eng.lane_state(69), pattern);
+        assert_eq!(eng.lane_state(4), vec![0u8; 9]);
+        assert_eq!(eng.popcount_var(1), 2); // lanes 3 and 69 set
+    }
+
+    #[test]
+    fn fill_and_randomize_lane() {
+        let g = workloads::ising_grid(2, 2, 0.1, 0.0);
+        let mut eng = LanePdSampler::new(&g, 5, 2);
+        eng.fill_lane(1, true);
+        assert_eq!(eng.lane_state(1), vec![1, 1, 1, 1]);
+        assert_eq!(eng.lane_state(0), vec![0, 0, 0, 0]);
+        eng.fill_lane(1, false);
+        assert_eq!(eng.lane_state(1), vec![0, 0, 0, 0]);
+        // deterministic randomization
+        let mut eng2 = LanePdSampler::new(&g, 5, 2);
+        eng.randomize_lane(2);
+        eng2.randomize_lane(2);
+        assert_eq!(eng.lane_state(2), eng2.lane_state(2));
+    }
+
+    #[test]
+    fn tail_lanes_stay_zero_under_sweeps() {
+        let g = workloads::ising_grid(3, 3, 0.4, 0.2);
+        let mut eng = LanePdSampler::new(&g, 5, 3);
+        for _ in 0..50 {
+            eng.sweep();
+        }
+        for &w in eng.state_words().iter().chain(eng.theta_words()) {
+            assert_eq!(w & !lane_mask(5), 0, "ghost lanes were written");
+        }
+    }
+
+    #[test]
+    fn exact_on_small_grid() {
+        let g = workloads::ising_grid(3, 3, 0.3, 0.1);
+        let mut eng = LanePdSampler::new(&g, 64, 4);
+        let got = lane_marginals(&mut eng, 500, 2500);
+        let want = exact::enumerate(&g).marginals;
+        for v in 0..9 {
+            assert!(
+                (got[v] - want[v]).abs() < 0.012,
+                "v={v}: {} vs exact {}",
+                got[v],
+                want[v]
+            );
+        }
+    }
+
+    #[test]
+    fn exact_with_negative_couplings() {
+        // anti-ferromagnetic couplings exercise the Lemma-4 swap path
+        let mut g = FactorGraph::new(5);
+        g.set_unary(0, 0.4);
+        g.add_factor(PairFactor::ising(0, 1, -0.5));
+        g.add_factor(PairFactor::ising(1, 2, 0.6));
+        g.add_factor(PairFactor::ising(2, 3, -0.4));
+        g.add_factor(PairFactor::ising(3, 4, 0.3));
+        g.add_factor(PairFactor::ising(4, 0, -0.2));
+        let mut eng = LanePdSampler::new(&g, 64, 5);
+        let got = lane_marginals(&mut eng, 500, 2500);
+        let want = exact::enumerate(&g).marginals;
+        for v in 0..5 {
+            assert!(
+                (got[v] - want[v]).abs() < 0.012,
+                "v={v}: {} vs exact {}",
+                got[v],
+                want[v]
+            );
+        }
+    }
+
+    #[test]
+    fn dynamic_add_remove_keeps_correctness() {
+        // mutate the shared model mid-run, applied once for all lanes
+        let mut g = workloads::ising_grid(2, 3, 0.3, 0.1);
+        let mut eng = LanePdSampler::new(&g, 64, 6);
+        for _ in 0..100 {
+            eng.sweep();
+        }
+        let added = g.add_factor(PairFactor::ising(0, 4, 0.5));
+        eng.add_factor(added, g.factor(added).unwrap());
+        let victim = g.factors().next().unwrap().0;
+        g.remove_factor(victim).unwrap();
+        eng.remove_factor(victim);
+        let got = lane_marginals(&mut eng, 300, 2000);
+        let want = exact::enumerate(&g).marginals;
+        for v in 0..6 {
+            assert!(
+                (got[v] - want[v]).abs() < 0.012,
+                "v={v}: {} vs exact {}",
+                got[v],
+                want[v]
+            );
+        }
+    }
+
+    use crate::graph::FactorGraph;
+}

@@ -17,6 +17,9 @@
 //!   parameters, multi-state 0–1 encoding, Swendsen–Wang decompositions.
 //! * [`samplers`] — sequential Gibbs, chromatic Gibbs, the primal–dual
 //!   sampler (native parallel), Swendsen–Wang, and tree-blocked PD (§5.4).
+//! * [`engine`] — lane-batched multi-chain execution: 64 chains per `u64`
+//!   word, variable-major state, one incidence traversal per variable per
+//!   sweep ([`engine::LanePdSampler`]); the substrate under the ensemble.
 //! * [`inference`] — exact enumeration/transfer-matrix oracles, tree BP,
 //!   mean-field & EM-MAP (§5.3), log-partition estimators (§5.2).
 //! * [`diagnostics`] — PSRF (Gelman–Rubin), ESS, mixing-time extraction.
@@ -29,13 +32,15 @@
 //! * [`bench`] — self-contained bench harness (criterion is unavailable
 //!   offline) used by every `benches/` binary.
 //! * [`util`] — substrates built from scratch for the offline environment:
-//!   JSON, CLI parsing, thread pool, property testing, union-find.
+//!   JSON, CLI parsing, thread pool, property testing, union-find, error
+//!   context ([`util::error`], replacing `anyhow`).
 
 pub mod bench;
 pub mod bench_support;
 pub mod coordinator;
 pub mod diagnostics;
 pub mod duality;
+pub mod engine;
 pub mod graph;
 pub mod inference;
 pub mod rng;
@@ -45,5 +50,6 @@ pub mod util;
 pub mod workloads;
 
 pub use duality::{DualFactor, DualModel};
+pub use engine::LanePdSampler;
 pub use graph::{FactorGraph, FactorId, VarId};
 pub use samplers::Sampler;

@@ -103,6 +103,60 @@ pub fn sigmoid(z: f64) -> f64 {
     }
 }
 
+/// `e^{-|z|}` with `|z|` clamped to 40, accurate to ~5e-9 relative — the
+/// shared core of [`sigmoid_fast`] and [`bernoulli_sigmoid`].
+///
+/// Range-reduces to `2^k · e^u` with `|u| ≤ ln(2)/2` (so `2^k` is always a
+/// normal f64 assembled from bits) and evaluates `e^u` as a degree-7
+/// Taylor polynomial — no libm call.
+#[inline]
+fn exp_neg_abs(z: f64) -> f64 {
+    // t = -|z|·log2(e) ∈ [-57.8, 0]
+    let t = -z.abs().min(40.0) * std::f64::consts::LOG2_E;
+    let k = t.round(); // k ∈ {-58, ..., 0}
+    let u = (t - k) * std::f64::consts::LN_2; // |u| ≤ ln(2)/2 ≈ 0.347
+    let mut e = 1.0 / 5040.0; // Taylor e^u, Horner
+    e = e * u + 1.0 / 720.0;
+    e = e * u + 1.0 / 120.0;
+    e = e * u + 1.0 / 24.0;
+    e = e * u + 1.0 / 6.0;
+    e = e * u + 0.5;
+    e = e * u + 1.0;
+    e = e * u + 1.0;
+    e * f64::from_bits(((k as i64 + 1023) as u64) << 52)
+}
+
+/// Fast logistic sigmoid for hot loops; absolute error < 1e-8 vs
+/// [`sigmoid`]. `|z|` is clamped to 40 (σ saturates to within 4e-18 of
+/// {0, 1} there). The scalar samplers keep the exact [`sigmoid`]; the lane
+/// engine ([`crate::engine`]) uses this for its precomputed θ-conditional
+/// tables.
+#[inline]
+pub fn sigmoid_fast(z: f64) -> f64 {
+    let p = exp_neg_abs(z); // e^{-|z|} ∈ (0, 1]
+    if z >= 0.0 {
+        1.0 / (1.0 + p)
+    } else {
+        p / (1.0 + p)
+    }
+}
+
+/// Draw `Bernoulli(sigmoid(z))` without any division: with
+/// `p = e^{-|z|}`, the acceptance `u < 1/(1+p)` (for `z ≥ 0`) is
+/// `u·(1+p) < 1`, and `u < p/(1+p)` (for `z < 0`) is `u·(1+p) < p`.
+/// Same distribution as `rng.bernoulli(sigmoid_fast(z))` up to one ulp of
+/// the comparison; this is the lane engine's per-lane hot path.
+#[inline]
+pub fn bernoulli_sigmoid<R: RngCore>(rng: &mut R, z: f64) -> bool {
+    let p = exp_neg_abs(z);
+    let scaled = rng.next_f64() * (1.0 + p);
+    if z >= 0.0 {
+        scaled < 1.0
+    } else {
+        scaled < p
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -194,5 +248,39 @@ mod tests {
         assert!(sigmoid(-800.0) >= 0.0);
         assert!(sigmoid(800.0) <= 1.0);
         assert!((sigmoid(2.0) + sigmoid(-2.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sigmoid_fast_tracks_exact() {
+        // dense grid over the interesting range plus the clamp region
+        let mut z = -50.0;
+        while z <= 50.0 {
+            let (fast, exact) = (sigmoid_fast(z), sigmoid(z));
+            assert!(
+                (fast - exact).abs() < 1e-8,
+                "z={z}: fast {fast} vs exact {exact}"
+            );
+            z += 0.0137;
+        }
+        assert!((sigmoid_fast(0.0) - 0.5).abs() < 1e-12);
+        assert!(sigmoid_fast(1e6) <= 1.0 && sigmoid_fast(1e6) > 0.999);
+        assert!(sigmoid_fast(-1e6) >= 0.0 && sigmoid_fast(-1e6) < 1e-3);
+        // complementarity, like the exact version
+        assert!((sigmoid_fast(1.7) + sigmoid_fast(-1.7) - 1.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn bernoulli_sigmoid_frequency() {
+        let mut rng = Pcg64::seed(13);
+        for &z in &[-2.0, -0.4, 0.0, 0.7, 1.9] {
+            let n = 60_000;
+            let hits = (0..n).filter(|_| bernoulli_sigmoid(&mut rng, z)).count();
+            let freq = hits as f64 / n as f64;
+            let want = sigmoid(z);
+            assert!(
+                (freq - want).abs() < 0.01,
+                "z={z}: freq {freq} vs sigmoid {want}"
+            );
+        }
     }
 }

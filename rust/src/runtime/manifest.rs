@@ -6,8 +6,8 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::err;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 /// Static configuration of one AOT artifact.
@@ -40,11 +40,11 @@ impl Manifest {
     }
 
     pub fn parse(text: &str) -> Result<Manifest> {
-        let doc = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let doc = Json::parse(text).map_err(|e| err!("manifest: {e}"))?;
         let arr = doc
             .get("artifacts")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?;
+            .ok_or_else(|| err!("manifest missing 'artifacts' array"))?;
         let mut artifacts = Vec::with_capacity(arr.len());
         for item in arr {
             artifacts.push(ArtifactMeta {
@@ -82,13 +82,13 @@ fn field_str(j: &Json, key: &str) -> Result<String> {
     j.get(key)
         .and_then(Json::as_str)
         .map(str::to_string)
-        .ok_or_else(|| anyhow!("manifest entry missing string '{key}'"))
+        .ok_or_else(|| err!("manifest entry missing string '{key}'"))
 }
 
 fn field_usize(j: &Json, key: &str) -> Result<usize> {
     j.get(key)
         .and_then(Json::as_usize)
-        .ok_or_else(|| anyhow!("manifest entry missing integer '{key}'"))
+        .ok_or_else(|| err!("manifest entry missing integer '{key}'"))
 }
 
 #[cfg(test)]

@@ -1,0 +1,200 @@
+//! The real PJRT-backed runtime (`--features xla` only; see module docs in
+//! [`super`]). Compiles HLO-text artifacts on a CPU PJRT client and runs
+//! multi-sweep chain chunks.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::duality::model::DenseOperands;
+use crate::util::error::{Context, Result};
+use crate::{ensure, err};
+
+use super::{ArtifactMeta, ChainState, ChunkOutput, Manifest};
+
+/// Lazily-compiled registry of artifacts on one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// CPU-backed runtime over an artifact directory produced by
+    /// `python -m compile.aot`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("pjrt cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) the executable for an artifact.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(exe));
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| err!("unknown artifact '{name}'"))?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| err!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| err!("compile {name}: {e:?}"))?,
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Bind an artifact + dense operands into a runnable chain executor.
+    pub fn chain_exec(&self, name: &str, ops: &DenseOperands) -> Result<PdChainExec> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| err!("unknown artifact '{name}'"))?
+            .clone();
+        ensure!(
+            ops.n_pad == meta.n_pad && ops.f_pad == meta.f_pad,
+            "operand padding ({}, {}) does not match artifact '{name}' ({}, {})",
+            ops.n_pad,
+            ops.f_pad,
+            meta.n_pad,
+            meta.f_pad
+        );
+        let exe = self.executable(name)?;
+        Ok(PdChainExec {
+            exe,
+            meta,
+            j: lit2(&ops.j, ops.f_pad, ops.n_pad)?,
+            a: lit2(&ops.a, 1, ops.n_pad)?,
+            q: lit1(&ops.q),
+            b1: lit1(&ops.b1),
+            b2: lit1(&ops.b2),
+            v1: lit1(&ops.v1),
+            v2: lit1(&ops.v2),
+        })
+    }
+}
+
+fn lit1<T: xla::NativeType>(v: &[T]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+fn lit2<T: xla::NativeType>(v: &[T], rows: usize, cols: usize) -> Result<xla::Literal> {
+    ensure!(v.len() == rows * cols, "shape mismatch");
+    xla::Literal::vec1(v)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| err!("reshape: {e:?}"))
+}
+
+/// One artifact bound to one model's operands: runs multi-sweep chunks.
+pub struct PdChainExec {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    meta: ArtifactMeta,
+    j: xla::Literal,
+    a: xla::Literal,
+    q: xla::Literal,
+    b1: xla::Literal,
+    b2: xla::Literal,
+    v1: xla::Literal,
+    v2: xla::Literal,
+}
+
+impl PdChainExec {
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Fresh all-zeros chain state.
+    pub fn zero_state(&self) -> ChainState {
+        ChainState {
+            x: vec![0.0; self.meta.chains * self.meta.n_pad],
+            theta: vec![0.0; self.meta.chains * self.meta.f_pad],
+        }
+    }
+
+    /// Execute one chunk of `meta.sweeps` sweeps for all chains.
+    ///
+    /// `key` seeds the artifact's internal threefry stream — pass a fresh
+    /// pair per call (the coordinator derives them from its PCG).
+    pub fn run(&self, state: &ChainState, key: [u32; 2]) -> Result<ChunkOutput> {
+        let m = &self.meta;
+        ensure!(state.x.len() == m.chains * m.n_pad, "bad x len");
+        ensure!(state.theta.len() == m.chains * m.f_pad, "bad theta len");
+        let x = lit2(&state.x, m.chains, m.n_pad)?;
+        let theta = lit2(&state.theta, m.chains, m.f_pad)?;
+        let key_lit = lit1(&key[..]);
+        // execute takes Borrow<Literal>: pass references so the static
+        // operands (J is ~50 MB at grid50 scale) are never re-cloned on
+        // the hot path (§Perf L3 iteration 2).
+        let args: [&xla::Literal; 10] = [
+            &x, &theta, &self.j, &self.a, &self.q, &self.b1, &self.b2, &self.v1, &self.v2,
+            &key_lit,
+        ];
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| err!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| err!("fetch: {e:?}"))?;
+        // jax lowered with return_tuple=True: a 4-tuple
+        let parts = result.to_tuple().map_err(|e| err!("untuple: {e:?}"))?;
+        ensure!(parts.len() == 4, "expected 4 outputs, got {}", parts.len());
+        let get = |lit: &xla::Literal| -> Result<Vec<f32>> {
+            lit.to_vec::<f32>().map_err(|e| err!("to_vec: {e:?}"))
+        };
+        Ok(ChunkOutput {
+            state: ChainState {
+                x: get(&parts[0])?,
+                theta: get(&parts[1])?,
+            },
+            sum_x: get(&parts[2])?,
+            mag: get(&parts[3])?,
+        })
+    }
+
+    /// Mean of x over real (unpadded) variables for one chain row.
+    pub fn magnetization(&self, x: &[f32], chain: usize) -> f32 {
+        let m = &self.meta;
+        let row = &x[chain * m.n_pad..chain * m.n_pad + m.n];
+        row.iter().sum::<f32>() / m.n as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need artifacts live in rust/tests/runtime_e2e.rs
+    // (they require `make artifacts` to have run). Here: manifest-free units.
+
+    #[test]
+    fn lit2_rejects_bad_shape() {
+        assert!(lit2(&[1.0f32, 2.0, 3.0], 2, 2).is_err());
+        assert!(lit2(&[1.0f32, 2.0, 3.0, 4.0], 2, 2).is_ok());
+    }
+}

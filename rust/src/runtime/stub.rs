@@ -1,0 +1,90 @@
+//! Offline stand-in for the PJRT runtime (default build; see [`super`]).
+//!
+//! Presents the same API as the real `pjrt.rs` so every caller — CLI,
+//! benches, the dispatch policy — compiles unchanged, and fails only at
+//! [`Runtime::load`] with an actionable message. Nothing here can execute
+//! an artifact; the coordinator's native sparse path is the fallback.
+
+use std::path::Path;
+
+use crate::duality::model::DenseOperands;
+use crate::err;
+use crate::util::error::Result;
+
+use super::{ArtifactMeta, ChainState, ChunkOutput, Manifest};
+
+const UNAVAILABLE: &str = "pdgibbs was built without the `xla` feature; the PJRT \
+     artifact runtime is unavailable (rebuild with `--features xla` in an \
+     environment that provides the vendored `xla` crate)";
+
+/// Stub registry: construction always fails, so the remaining methods are
+/// unreachable in practice but keep call sites type-checking.
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Always errors in the default (offline) build.
+    pub fn load(_dir: impl AsRef<Path>) -> Result<Self> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without `xla`)".to_string()
+    }
+
+    /// Mirrors the real runtime's compile entry point; always errors.
+    pub fn executable(&self, name: &str) -> Result<()> {
+        Err(err!("cannot compile artifact '{name}': {UNAVAILABLE}"))
+    }
+
+    /// Mirrors the real runtime's bind entry point; always errors.
+    pub fn chain_exec(&self, name: &str, _ops: &DenseOperands) -> Result<PdChainExec> {
+        Err(err!("cannot bind artifact '{name}': {UNAVAILABLE}"))
+    }
+}
+
+/// Stub executor (never constructed: [`Runtime::chain_exec`] always errors).
+pub struct PdChainExec {
+    meta: ArtifactMeta,
+}
+
+impl PdChainExec {
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Fresh all-zeros chain state (same layout contract as the real path).
+    pub fn zero_state(&self) -> ChainState {
+        ChainState {
+            x: vec![0.0; self.meta.chains * self.meta.n_pad],
+            theta: vec![0.0; self.meta.chains * self.meta.f_pad],
+        }
+    }
+
+    pub fn run(&self, _state: &ChainState, _key: [u32; 2]) -> Result<ChunkOutput> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    /// Mean of x over real (unpadded) variables for one chain row.
+    pub fn magnetization(&self, x: &[f32], chain: usize) -> f32 {
+        let m = &self.meta;
+        let row = &x[chain * m.n_pad..chain * m.n_pad + m.n];
+        row.iter().sum::<f32>() / m.n as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let e = Runtime::load("artifacts").unwrap_err();
+        assert!(format!("{e}").contains("xla"), "unhelpful error: {e}");
+    }
+}

@@ -12,6 +12,10 @@
 //! All samplers implement [`Sampler`]: a state vector in `{0,1}^n` advanced
 //! by full sweeps. RNGs are passed per sweep so multi-chain drivers control
 //! reproducibility and stream independence.
+//!
+//! Running *many chains* of the primal–dual sampler is better served by
+//! [`crate::engine::LanePdSampler`], which bit-packs 64 chains per word
+//! over one shared dual model instead of looping scalar samplers.
 
 mod blocked;
 mod chromatic;

@@ -103,6 +103,18 @@ impl PdSampler {
     }
 
     fn sweep_parallel(&mut self, rng: &mut Pcg64, pool: &ThreadPool) {
+        // Stream-domain soundness: x-chunks draw from sweep·8192 + chunk
+        // and θ-chunks from sweep·8192 + 4096 + chunk, so the two domains
+        // stay disjoint iff the chunk count is ≤ 4096. `ThreadPool::new`
+        // clamps to MAX_POOL_SIZE (= 4096) and `scope_chunks` never makes
+        // more chunks than workers; assert the invariant anyway so any
+        // future pool implementation cannot silently alias streams.
+        assert!(
+            pool.size() <= crate::util::threadpool::MAX_POOL_SIZE,
+            "pool size {} exceeds the PD RNG stream domain (max {})",
+            pool.size(),
+            crate::util::threadpool::MAX_POOL_SIZE
+        );
         let sweep = self.sweep_count;
         let n = self.x.len();
         let slots = self.model.factor_slots();
@@ -128,7 +140,8 @@ impl PdSampler {
             let x = &self.x;
             let t_ptr = SendPtr(self.theta.as_mut_ptr());
             pool.scope_chunks(slots, |chunk, start, end| {
-                // θ-chunks at sweep·8192 + 4096 + chunk (never collides: pool ≤ 16)
+                // θ-chunks at sweep·8192 + 4096 + chunk (never collides:
+                // chunk count ≤ MAX_POOL_SIZE = 4096, asserted above)
                 let mut r = rng.split(sweep.wrapping_mul(8192) + 4096 + chunk as u64);
                 let t_ptr = &t_ptr;
                 for slot in start..end {

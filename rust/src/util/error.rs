@@ -1,0 +1,150 @@
+//! Minimal error type with context chaining (anyhow is unavailable in the
+//! offline build image).
+//!
+//! Mirrors the slice of `anyhow` the crate actually uses: a string-backed
+//! error with layered context, a [`Result`] alias whose error defaults to
+//! [`Error`], a [`Context`] extension trait for `Result`/`Option`, and the
+//! [`err!`](crate::err)/[`ensure!`](crate::ensure) macros. `Display` shows
+//! the outermost message; alternate formatting (`{:#}`) shows the whole
+//! chain, outermost first, colon-separated — matching how `main.rs`
+//! reports failures.
+
+use std::fmt;
+
+/// Error carrying an ordered chain of context messages (outermost first).
+#[derive(Debug)]
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Build from a single message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self {
+            frames: vec![msg.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn wrap(mut self, msg: impl fmt::Display) -> Self {
+        self.frames.insert(0, msg.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.frames
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.frames.join(": "))
+        } else {
+            f.write_str(&self.frames[0])
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-wide result alias; the error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension adding `.context(..)` / `.with_context(..)` to `Result` and
+/// `Option`, converting into [`Error`] with the message as outer frame.
+pub trait Context<T> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T>;
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T> {
+        // `{:#}` keeps the full chain when E is already `Error`.
+        self.map_err(|e| Error::msg(format!("{e:#}")).wrap(msg))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string, `anyhow!`-style.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`err!`](crate::err) when the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::err!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_plain_vs_alternate() {
+        let e = Error::msg("inner").wrap("middle").wrap("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: inner");
+        assert_eq!(e.chain(), &["outer", "middle", "inner"]);
+    }
+
+    #[test]
+    fn context_on_result_keeps_chain() {
+        let base: Result<()> = Err(Error::msg("root"));
+        let wrapped = base.context("loading");
+        let e = wrapped.unwrap_err();
+        assert_eq!(format!("{e:#}"), "loading: root");
+    }
+
+    #[test]
+    fn context_on_foreign_error() {
+        let io: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "missing file",
+        ));
+        let e = io.with_context(|| "reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert!(format!("{e:#}").contains("missing file"));
+    }
+
+    #[test]
+    fn context_on_option() {
+        let none: Option<u32> = None;
+        assert_eq!(format!("{}", none.context("absent").unwrap_err()), "absent");
+        assert_eq!(Some(7u32).context("absent").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn check(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            Ok(1)
+        }
+        assert_eq!(check(true).unwrap(), 1);
+        assert_eq!(format!("{}", check(false).unwrap_err()), "flag was false");
+        let e = err!("code {}", 42);
+        assert_eq!(format!("{e}"), "code 42");
+    }
+}

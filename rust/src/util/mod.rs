@@ -7,6 +7,8 @@
 //!   manifests, coordinator requests, bench reports).
 //! * [`cli`] — declarative flag/option parser for `main.rs` and the bench
 //!   binaries.
+//! * [`error`] — anyhow-style error context chaining ([`error::Result`],
+//!   [`error::Context`], the `err!`/`ensure!` macros).
 //! * [`threadpool`] — fixed-size scoped worker pool with a parallel-for
 //!   primitive; powers the native parallel samplers and the coordinator.
 //! * [`proptest`] — mini property-testing harness (random case generation,
@@ -17,6 +19,7 @@
 //!   by diagnostics and the bench harness.
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod proptest;
 pub mod stats;

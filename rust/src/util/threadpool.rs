@@ -21,6 +21,16 @@ struct Shared {
     available: Condvar,
 }
 
+/// Hard cap on pool size, enforced by [`ThreadPool::new`].
+///
+/// The primal–dual sampler derives one RNG stream per chunk per half-step
+/// from the domain `sweep·8192 + {0, 4096} + chunk` (see
+/// `samplers/primal_dual.rs`); 4096 is the largest chunk count that keeps
+/// the x- and θ-domains disjoint. Clamping here means the split scheme
+/// cannot silently collide however large a pool is requested — and
+/// `scope_chunks` never produces more chunks than workers.
+pub const MAX_POOL_SIZE: usize = 4096;
+
 /// A fixed pool of worker threads executing submitted closures.
 pub struct ThreadPool {
     shared: Arc<Shared>,
@@ -29,9 +39,9 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
-    /// Spawn `size` workers (`size == 0` is clamped to 1).
+    /// Spawn `size` workers, clamped to `1..=`[`MAX_POOL_SIZE`].
     pub fn new(size: usize) -> Self {
-        let size = size.max(1);
+        let size = Self::clamped_size(size);
         let shared = Arc::new(Shared {
             queue: Mutex::new(std::collections::VecDeque::new()),
             available: Condvar::new(),
@@ -61,6 +71,12 @@ impl ThreadPool {
             workers,
             size,
         }
+    }
+
+    /// The worker count `new(size)` will actually spawn: at least 1, at
+    /// most [`MAX_POOL_SIZE`] (the RNG stream-domain bound).
+    pub fn clamped_size(size: usize) -> usize {
+        size.clamp(1, MAX_POOL_SIZE)
     }
 
     /// Pool sized to the machine (logical cores, capped at 16).
@@ -179,6 +195,19 @@ pub(crate) fn bump_task_counter() {
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_size_is_capped_for_rng_stream_safety() {
+        // regression for the primal–dual stream-domain assumption: a pool
+        // larger than MAX_POOL_SIZE would alias x- and θ-chunk streams.
+        // (Tested via the size computation — spawning 4096 threads in a
+        // unit test would be wasteful; `new` feeds `clamped_size` directly.)
+        assert_eq!(ThreadPool::clamped_size(0), 1);
+        assert_eq!(ThreadPool::clamped_size(16), 16);
+        assert_eq!(ThreadPool::clamped_size(MAX_POOL_SIZE), MAX_POOL_SIZE);
+        assert_eq!(ThreadPool::clamped_size(MAX_POOL_SIZE + 1), MAX_POOL_SIZE);
+        assert_eq!(ThreadPool::clamped_size(usize::MAX), MAX_POOL_SIZE);
+    }
 
     #[test]
     fn chunks_cover_range_exactly_once() {

@@ -1,0 +1,178 @@
+//! Integration: the lane-batched engine vs the scalar sampler and exact
+//! oracles — determinism contracts and marginal agreement at the same
+//! tolerances as `sampler_agreement.rs`.
+//!
+//! Determinism contracts under test:
+//!
+//! * `PdSampler::sweep_parallel`: same seed + same pool SIZE ⇒
+//!   bit-identical `state()` traces (chunk streams depend on the chunk
+//!   count only); different pool sizes change the streams but must leave
+//!   the stationary distribution intact.
+//! * `LanePdSampler`: stronger — streams are keyed `(sweep, site)`, so the
+//!   trajectory is bit-identical for EVERY pool size, including none.
+
+use std::sync::Arc;
+
+use pdgibbs::engine::LanePdSampler;
+use pdgibbs::graph::{FactorGraph, PairFactor};
+use pdgibbs::inference::exact;
+use pdgibbs::rng::Pcg64;
+use pdgibbs::samplers::{empirical_marginals, PdSampler, Sampler};
+use pdgibbs::util::ThreadPool;
+use pdgibbs::workloads;
+
+fn lane_marginals(eng: &mut LanePdSampler, burn: usize, sweeps: usize) -> Vec<f64> {
+    for _ in 0..burn {
+        eng.sweep();
+    }
+    let n = eng.num_vars();
+    let mut acc = vec![0.0f64; n];
+    for _ in 0..sweeps {
+        eng.sweep();
+        for (v, a) in acc.iter_mut().enumerate() {
+            *a += eng.popcount_var(v) as f64;
+        }
+    }
+    let denom = (sweeps * eng.lanes()) as f64;
+    acc.into_iter().map(|a| a / denom).collect()
+}
+
+#[test]
+fn lane_engine_matches_exact_on_ferromagnetic_grid() {
+    // same oracle + tolerance as sampler_agreement.rs
+    let g = workloads::ising_grid(3, 3, 0.45, 0.2);
+    let want = exact::enumerate(&g).marginals;
+    let mut eng = LanePdSampler::new(&g, 64, 31);
+    let got = lane_marginals(&mut eng, 500, 2500);
+    for v in 0..9 {
+        assert!(
+            (got[v] - want[v]).abs() < 0.015,
+            "v={v}: {} vs exact {}",
+            got[v],
+            want[v]
+        );
+    }
+}
+
+#[test]
+fn lane_engine_matches_exact_on_frustrated_model() {
+    // the mixed-sign model from sampler_agreement.rs
+    let mut g = FactorGraph::new(8);
+    for v in 0..8 {
+        g.set_unary(v, 0.3 * ((v % 3) as f64 - 1.0));
+    }
+    for &(a, b, beta) in &[
+        (0usize, 1usize, 0.5f64),
+        (1, 2, -0.4),
+        (2, 3, 0.6),
+        (3, 0, -0.5),
+        (4, 5, 0.3),
+        (5, 6, -0.6),
+        (6, 7, 0.4),
+        (7, 4, 0.2),
+        (0, 4, -0.3),
+        (2, 6, 0.35),
+    ] {
+        g.add_factor(PairFactor::ising(a, b, beta));
+    }
+    let want = exact::enumerate(&g).marginals;
+    let mut eng = LanePdSampler::new(&g, 64, 32);
+    let got = lane_marginals(&mut eng, 500, 3000);
+    for v in 0..8 {
+        assert!(
+            (got[v] - want[v]).abs() < 0.015,
+            "v={v}: {} vs exact {}",
+            got[v],
+            want[v]
+        );
+    }
+}
+
+#[test]
+fn lane_engine_bit_identical_across_pool_sizes() {
+    let g = workloads::ising_grid(4, 4, 0.3, 0.1);
+    let mut serial = LanePdSampler::new(&g, 70, 9);
+    let mut pooled2 = LanePdSampler::new(&g, 70, 9).with_pool(Arc::new(ThreadPool::new(2)));
+    let mut pooled5 = LanePdSampler::new(&g, 70, 9).with_pool(Arc::new(ThreadPool::new(5)));
+    for sweep in 0..40 {
+        serial.sweep();
+        pooled2.sweep();
+        pooled5.sweep();
+        assert_eq!(
+            serial.state_words(),
+            pooled2.state_words(),
+            "x diverged at sweep {sweep} (pool 2)"
+        );
+        assert_eq!(
+            serial.state_words(),
+            pooled5.state_words(),
+            "x diverged at sweep {sweep} (pool 5)"
+        );
+        assert_eq!(
+            serial.theta_words(),
+            pooled5.theta_words(),
+            "theta diverged at sweep {sweep}"
+        );
+    }
+}
+
+#[test]
+fn pd_sampler_bit_identical_for_same_pool_size() {
+    let g = workloads::ising_grid(4, 4, 0.35, 0.05);
+    let mut a = PdSampler::new(&g).with_pool(Arc::new(ThreadPool::new(2)));
+    let mut b = PdSampler::new(&g).with_pool(Arc::new(ThreadPool::new(2)));
+    let mut rng_a = Pcg64::seed(17);
+    let mut rng_b = Pcg64::seed(17);
+    for sweep in 0..60 {
+        a.sweep(&mut rng_a);
+        b.sweep(&mut rng_b);
+        assert_eq!(a.state(), b.state(), "state diverged at sweep {sweep}");
+        assert_eq!(a.theta(), b.theta(), "theta diverged at sweep {sweep}");
+    }
+}
+
+#[test]
+fn pd_sampler_pool_size_does_not_bias_marginals() {
+    // different pool sizes select different chunk streams — trajectories
+    // differ, but the sampled distribution must not
+    let g = workloads::ising_grid(3, 3, 0.25, 0.05);
+    let want = exact::enumerate(&g).marginals;
+    for pool_size in [2usize, 4] {
+        let mut s = PdSampler::new(&g).with_pool(Arc::new(ThreadPool::new(pool_size)));
+        let mut rng = Pcg64::seed(23);
+        let marg = empirical_marginals(&mut s, &mut rng, 500, 15_000);
+        for v in 0..9 {
+            assert!(
+                (marg[v] - want[v]).abs() < 0.035,
+                "pool {pool_size} v={v}: {} vs exact {}",
+                marg[v],
+                want[v]
+            );
+        }
+    }
+}
+
+#[test]
+fn lane_engine_churn_mid_run_matches_exact() {
+    // add_factor/remove_factor apply once to the shared model for all lanes
+    let mut g = workloads::ising_grid(2, 3, 0.3, 0.1);
+    let mut eng = LanePdSampler::new(&g, 64, 12).with_pool(Arc::new(ThreadPool::new(2)));
+    for _ in 0..100 {
+        eng.sweep();
+    }
+    let added = g.add_factor(PairFactor::ising(0, 4, 0.5));
+    eng.add_factor(added, g.factor(added).unwrap());
+    let victim = g.factors().next().unwrap().0;
+    g.remove_factor(victim).unwrap();
+    eng.remove_factor(victim);
+    let got = lane_marginals(&mut eng, 300, 2000);
+    let want = exact::enumerate(&g).marginals;
+    for v in 0..6 {
+        assert!(
+            (got[v] - want[v]).abs() < 0.015,
+            "v={v}: {} vs exact {}",
+            got[v],
+            want[v]
+        );
+    }
+}

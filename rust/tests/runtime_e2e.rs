@@ -7,6 +7,12 @@
 //! enumeration of the Rust-side graph — validating python dualization ==
 //! rust dualization == HLO semantics == PJRT execution in one shot.
 
+// The PJRT runtime only exists under `--features xla` (the offline image
+// has no `xla` crate; the default build substitutes a stub whose `load`
+// always errors). Without the feature these tests cannot even bind
+// artifacts, so the whole file is compiled out.
+#![cfg(feature = "xla")]
+
 use pdgibbs::duality::DualModel;
 use pdgibbs::graph::{FactorGraph, PairFactor};
 use pdgibbs::inference::exact;
