@@ -148,19 +148,37 @@ impl Report {
         out
     }
 
+    fn doc(&self, mode: Option<&str>) -> Json {
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let mut obj = vec![("bench", Json::from(self.name.as_str()))];
+        if let Some(m) = mode {
+            obj.push(("mode", Json::from(m)));
+        }
+        obj.push(("elapsed_s", Json::from(elapsed)));
+        let rows = Json::Arr(self.records.iter().map(Record::to_json).collect());
+        obj.push(("records", rows));
+        Json::obj(obj)
+    }
+
     /// Write `target/bench-reports/<name>.json` and print the table.
     pub fn finish(self) {
+        self.finish_inner(None);
+    }
+
+    /// Like [`Report::finish`], but additionally write the report as
+    /// `BENCH_<tracked>.json` at the repository root (tagged with `mode`)
+    /// — the machine-readable perf-trajectory file CI and later PRs diff
+    /// against, which must not be buried in `target/`.
+    pub fn finish_tracked(self, tracked: &str, mode: &str) {
+        self.finish_inner(Some((tracked.to_string(), mode.to_string())));
+    }
+
+    fn finish_inner(self, tracked: Option<(String, String)>) {
         let table = self.table();
         println!("\n{table}");
         let elapsed = self.started.elapsed().as_secs_f64();
-        let doc = Json::obj(vec![
-            ("bench", Json::from(self.name.as_str())),
-            ("elapsed_s", Json::from(elapsed)),
-            (
-                "records",
-                Json::Arr(self.records.iter().map(Record::to_json).collect()),
-            ),
-        ]);
+        let mode = tracked.as_ref().map(|(_, m)| m.as_str());
+        let doc = self.doc(mode);
         let dir = std::path::Path::new("target/bench-reports");
         let _ = std::fs::create_dir_all(dir);
         let path = dir.join(format!("{}.json", self.name));
@@ -169,8 +187,26 @@ impl Report {
         } else {
             println!("report: {}", path.display());
         }
+        if let Some((name, _)) = tracked {
+            let path = repo_root().join(format!("BENCH_{name}.json"));
+            if let Err(e) = std::fs::write(&path, doc.dump()) {
+                eprintln!("warning: could not write {}: {e}", path.display());
+            } else {
+                println!("tracked report: {}", path.display());
+            }
+        }
         println!("total {elapsed:.1}s");
     }
+}
+
+/// Repository root (parent of the cargo package directory): benches run
+/// with varying working directories depending on how they are invoked, so
+/// tracked `BENCH_*.json` files anchor on the compile-time manifest path.
+pub fn repo_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(std::path::Path::to_path_buf)
+        .unwrap_or_else(|| std::path::PathBuf::from("."))
 }
 
 /// Format a latency sample as a compact human string.
@@ -224,5 +260,23 @@ mod tests {
         let s = fmt_summary(&[0.001, 0.002, 0.003]);
         assert!(s.contains("mean"));
         assert!(s.contains("p95"));
+    }
+
+    #[test]
+    fn repo_root_is_the_workspace_root() {
+        // the tracked BENCH_*.json files land next to the top-level
+        // Cargo.toml, not inside rust/ or target/
+        assert!(repo_root().join("Cargo.toml").exists());
+        assert!(repo_root().join("rust").is_dir());
+    }
+
+    #[test]
+    fn doc_carries_the_mode_tag() {
+        let mut rep = Report::new("tagged");
+        rep.push(Record::new("a").metric("v", 1.0));
+        let d = rep.doc(Some("lanes"));
+        assert_eq!(d.get("bench").and_then(Json::as_str), Some("tagged"));
+        assert_eq!(d.get("mode").and_then(Json::as_str), Some("lanes"));
+        assert!(rep.doc(None).get("mode").is_none());
     }
 }

@@ -102,9 +102,11 @@ impl PdEnsemble {
         self.engine.add_factor(id, f);
     }
 
-    /// O(degree) factor removal shared by all chains.
-    pub fn remove_factor(&mut self, id: FactorId) {
-        self.engine.remove_factor(id);
+    /// O(degree) factor removal shared by all chains. Returns whether the
+    /// slot was live (a dead/unknown id is a reported no-op, mirroring
+    /// [`crate::engine::LanePdSampler::remove_factor`]).
+    pub fn remove_factor(&mut self, id: FactorId) -> bool {
+        self.engine.remove_factor(id)
     }
 
     // -- sampling -----------------------------------------------------------

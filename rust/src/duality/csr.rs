@@ -1,0 +1,313 @@
+//! [`CsrIncidence`]: the flat incidence arena behind the sampler hot path.
+//!
+//! [`super::DualModel`] keeps its nested `Vec<Vec<(slot, β)>>` incidence as
+//! the *reference* structure — easy to mutate, easy to reason about — and
+//! mirrors it here as contiguous arrays (`off` / `slot` / `beta`, classic
+//! CSR) so a sweep walks one cache-friendly arena instead of
+//! pointer-chasing one heap allocation per variable.
+//!
+//! Dynamic churn must stay O(degree) amortized (the paper's "almost no
+//! preprocessing" claim), so mutations never rewrite the arena globally:
+//!
+//! * **insert** appends to a small per-variable *delta overlay* (base
+//!   segments cannot grow in place);
+//! * **remove** swap-compacts *within* the variable's base segment — the
+//!   removed entry swaps with the segment's last live entry and the
+//!   per-variable live length shrinks, exactly the `swap_remove` the
+//!   nested reference performs — or drops the entry from the overlay.
+//!   Views therefore never contain dead entries; freed cells are only
+//!   *slack* (unused tail capacity) awaiting compaction;
+//! * once slack + overlay outgrow a fraction of the arena, the owner
+//!   triggers a **compaction**: one O(E) rebuild from the reference
+//!   incidence, bumping [`CsrIncidence::epoch`]. Between compactions every
+//!   read is the live base slice plus the (usually empty) overlay slice.
+//!
+//! Churned variables are tracked with a per-variable dirty flag (deduped,
+//! so the bookkeeping stays O(vars) however long a steady churn run gets);
+//! compaction reorders exactly those views, and owners refresh derived
+//! caches for them alone.
+
+/// Flat CSR incidence with a delta overlay (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct CsrIncidence {
+    /// `off[v]` is the start of base variable `v`'s segment; the segment's
+    /// *capacity* runs to `off[v + 1]`, its live prefix to
+    /// `off[v] + base_live[v]`. Variables added after the last rebuild
+    /// have no base segment.
+    off: Vec<u32>,
+    /// Live prefix length of each base segment (shrinks on remove).
+    base_live: Vec<u32>,
+    slot: Vec<u32>,
+    beta: Vec<f64>,
+    /// Per-variable entries inserted since the last rebuild.
+    overlay: Vec<Vec<(u32, f64)>>,
+    /// Per-variable churn flag since the last rebuild (dedups
+    /// `dirty_vars`).
+    dirty: Vec<bool>,
+    /// Variables touched by insert/remove since the last rebuild, each at
+    /// most once — compaction reorders exactly these views, so owners
+    /// only need to refresh derived caches for them.
+    dirty_vars: Vec<u32>,
+    /// Dead base cells (swap-compacted out of every view) awaiting
+    /// compaction.
+    slack: usize,
+    overlay_len: usize,
+    epoch: u64,
+}
+
+impl CsrIncidence {
+    /// Empty arena over `n` variables.
+    pub fn new(n: usize) -> Self {
+        Self {
+            off: vec![0; n + 1],
+            base_live: vec![0; n],
+            overlay: vec![Vec::new(); n],
+            dirty: vec![false; n],
+            ..Self::default()
+        }
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.overlay.len()
+    }
+
+    /// Rebuild generation — bumped by every [`CsrIncidence::rebuild`].
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Dead base cells awaiting compaction.
+    pub fn slack(&self) -> usize {
+        self.slack
+    }
+
+    /// Entries living in the overlay (inserted since the last rebuild).
+    pub fn overlay_len(&self) -> usize {
+        self.overlay_len
+    }
+
+    /// Register a variable appended after the last rebuild (no base
+    /// segment until then — reads come from its overlay only).
+    pub fn add_var(&mut self) {
+        self.overlay.push(Vec::new());
+        self.dirty.push(false);
+    }
+
+    #[inline]
+    fn base_range(&self, v: usize) -> (usize, usize) {
+        if v < self.base_live.len() {
+            let s = self.off[v] as usize;
+            (s, s + self.base_live[v] as usize)
+        } else {
+            (0, 0)
+        }
+    }
+
+    /// Hot-path view of variable `v`: `(base slots, base βs, overlay)`.
+    ///
+    /// The two base slices are parallel, contiguous, and contain only
+    /// *live* entries (removal swap-compacts within the segment). The
+    /// overlay holds entries inserted since the last compaction, iterated
+    /// after the base entries.
+    #[inline]
+    pub fn view(&self, v: usize) -> (&[u32], &[f64], &[(u32, f64)]) {
+        let (s, e) = self.base_range(v);
+        (&self.slot[s..e], &self.beta[s..e], &self.overlay[v])
+    }
+
+    /// Total live entry count of the view — the width of the per-lane
+    /// gather for variable `v`, always equal to its live degree.
+    #[inline]
+    pub fn view_len(&self, v: usize) -> usize {
+        let (s, e) = self.base_range(v);
+        (e - s) + self.overlay[v].len()
+    }
+
+    /// The live incidence of `v` as one list (base then overlay) — the
+    /// logical content the nested reference incidence must equal, up to
+    /// order.
+    pub fn logical(&self, v: usize) -> Vec<(u32, f64)> {
+        let (s, e) = self.base_range(v);
+        let mut out: Vec<(u32, f64)> = (s..e).map(|i| (self.slot[i], self.beta[i])).collect();
+        out.extend_from_slice(&self.overlay[v]);
+        out
+    }
+
+    /// Variables whose view changed since the last rebuild, each listed
+    /// once: the set compaction will reorder.
+    pub fn dirty_vars(&self) -> &[u32] {
+        &self.dirty_vars
+    }
+
+    fn mark_dirty(&mut self, v: usize) {
+        if !self.dirty[v] {
+            self.dirty[v] = true;
+            self.dirty_vars.push(v as u32);
+        }
+    }
+
+    /// O(1): append `(slot, β)` to `v`'s overlay.
+    pub fn insert(&mut self, v: usize, slot: u32, beta: f64) {
+        self.overlay[v].push((slot, beta));
+        self.overlay_len += 1;
+        self.mark_dirty(v);
+    }
+
+    /// O(degree): drop `slot` from `v` — from the overlay if it was
+    /// inserted since the last rebuild, else by swap-compacting it out of
+    /// the base segment's live prefix. Returns whether the entry was
+    /// found.
+    pub fn remove(&mut self, v: usize, slot: u32) -> bool {
+        if let Some(pos) = self.overlay[v].iter().position(|&(s, _)| s == slot) {
+            self.overlay[v].swap_remove(pos);
+            self.overlay_len -= 1;
+            self.mark_dirty(v);
+            return true;
+        }
+        let (s, e) = self.base_range(v);
+        for i in s..e {
+            if self.slot[i] == slot {
+                self.slot.swap(i, e - 1);
+                self.beta.swap(i, e - 1);
+                self.base_live[v] -= 1;
+                self.slack += 1;
+                self.mark_dirty(v);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Whether enough churn has accumulated that the owner should rebuild:
+    /// slack wastes arena memory, overlays cost a second (non-contiguous)
+    /// loop per site. The threshold (a quarter of arena + variable count,
+    /// floor 16) keeps rebuild cost amortized O(1) per mutation and avoids
+    /// rebuild storms during bulk construction.
+    pub fn needs_compaction(&self) -> bool {
+        let dirty = self.slack + self.overlay_len;
+        dirty > 16 && dirty * 4 > self.slot.len() + self.num_vars()
+    }
+
+    /// O(E) rebuild from the nested reference incidence; bumps the epoch,
+    /// clears slack, overlays, and dirty flags.
+    pub fn rebuild(&mut self, incidence: &[Vec<(u32, f64)>]) {
+        let n = incidence.len();
+        let total: usize = incidence.iter().map(Vec::len).sum();
+        assert!(total < u32::MAX as usize, "incidence arena overflows u32");
+        self.off.clear();
+        self.off.reserve(n + 1);
+        self.base_live.clear();
+        self.base_live.reserve(n);
+        self.slot.clear();
+        self.slot.reserve(total);
+        self.beta.clear();
+        self.beta.reserve(total);
+        self.off.push(0);
+        for list in incidence {
+            for &(slot, beta) in list {
+                self.slot.push(slot);
+                self.beta.push(beta);
+            }
+            self.off.push(self.slot.len() as u32);
+            self.base_live.push(list.len() as u32);
+        }
+        self.overlay.clear();
+        self.overlay.resize(n, Vec::new());
+        self.dirty.clear();
+        self.dirty.resize(n, false);
+        self.dirty_vars.clear();
+        self.slack = 0;
+        self.overlay_len = 0;
+        self.epoch += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sorted(mut xs: Vec<(u32, f64)>) -> Vec<(u32, f64)> {
+        xs.sort_by_key(|e| e.0);
+        xs
+    }
+
+    #[test]
+    fn rebuild_mirrors_nested_lists() {
+        let nested = vec![vec![(0u32, 0.5), (2, -0.25)], vec![], vec![(1u32, 1.5)]];
+        let mut csr = CsrIncidence::new(3);
+        csr.rebuild(&nested);
+        assert_eq!(csr.epoch(), 1);
+        for v in 0..3 {
+            assert_eq!(csr.logical(v), nested[v]);
+            let (slots, betas, overlay) = csr.view(v);
+            assert_eq!(slots.len(), nested[v].len());
+            assert_eq!(betas.len(), nested[v].len());
+            assert!(overlay.is_empty());
+        }
+    }
+
+    #[test]
+    fn overlay_and_slack_track_churn() {
+        let nested = vec![vec![(0u32, 0.5), (1, 0.75), (2, -1.0)], vec![(1u32, -0.5)]];
+        let mut csr = CsrIncidence::new(2);
+        csr.rebuild(&nested);
+        // removing a base entry swap-compacts it out of the live view
+        assert!(csr.remove(0, 1));
+        assert_eq!(csr.slack(), 1);
+        let (slots, betas, _) = csr.view(0);
+        assert_eq!(slots, &[0, 2], "last live entry swapped into the hole");
+        assert_eq!(betas, &[0.5, -1.0]);
+        assert_eq!(sorted(csr.logical(0)), vec![(0, 0.5), (2, -1.0)]);
+        // overlay insert, then overlay remove round-trips without touching
+        // the base arena
+        csr.insert(0, 7, 2.0);
+        assert_eq!(csr.overlay_len(), 1);
+        assert_eq!(sorted(csr.logical(0)), vec![(0, 0.5), (2, -1.0), (7, 2.0)]);
+        assert!(csr.remove(0, 7));
+        assert_eq!(csr.overlay_len(), 0);
+        // removing something absent reports false
+        assert!(!csr.remove(0, 9));
+        assert!(!csr.remove(0, 1)); // already removed
+        assert_eq!(csr.view_len(0), 2);
+    }
+
+    #[test]
+    fn dirty_vars_stay_deduped_under_steady_churn() {
+        // regression: a long remove→insert cycle through one variable must
+        // not grow the dirty bookkeeping beyond one entry per variable
+        let mut csr = CsrIncidence::new(2);
+        csr.rebuild(&[vec![(0u32, 1.0)], vec![]]);
+        for round in 0..200u32 {
+            assert!(csr.remove(0, round));
+            csr.insert(0, round + 1, 1.0);
+        }
+        assert_eq!(csr.dirty_vars(), &[0], "dirty list must stay deduped");
+        assert_eq!(csr.view_len(0), 1);
+    }
+
+    #[test]
+    fn vars_added_after_rebuild_live_in_overlay() {
+        let mut csr = CsrIncidence::new(1);
+        csr.rebuild(&[vec![(0u32, 1.0)]]);
+        csr.add_var();
+        assert_eq!(csr.num_vars(), 2);
+        assert_eq!(csr.view_len(1), 0);
+        csr.insert(1, 3, -1.0);
+        assert_eq!(csr.logical(1), vec![(3, -1.0)]);
+        let (slots, _, overlay) = csr.view(1);
+        assert!(slots.is_empty());
+        assert_eq!(overlay, &[(3, -1.0)]);
+    }
+
+    #[test]
+    fn compaction_threshold_scales_with_arena() {
+        let mut csr = CsrIncidence::new(2);
+        csr.rebuild(&[vec![(0u32, 1.0)], vec![(0u32, 1.0)]]);
+        for i in 0..16 {
+            csr.insert(0, 10 + i, 0.1);
+        }
+        assert!(!csr.needs_compaction(), "16 dirty entries: below threshold");
+        csr.insert(0, 99, 0.1);
+        assert!(csr.needs_compaction(), "17 dirty on a 2-entry base");
+    }
+}

@@ -8,17 +8,22 @@
 //! `P = B Cᵀ`, which §4.1 constructs for *any* strictly positive table.
 //!
 //! * [`factorization`] — Lemmas 2–4 + Theorem 2 (`P → (α, q, β)`).
-//! * [`model`] — [`DualModel`]: the dualized MRF in CSR form with O(degree)
+//! * [`model`] — [`DualModel`]: the dualized MRF with O(degree)
 //!   incremental add/remove, shared by every sampler and the XLA runtime.
+//! * [`csr`] — [`CsrIncidence`]: the flat incidence arena (CSR base +
+//!   delta overlay + epoch compaction) mirroring the model's nested
+//!   reference incidence for the sweep hot path.
 //! * [`encoding`] — §4.2 multi-state variables via 0–1 encoding, Potts
 //!   short-cut (order-n factor → n+1 dual states).
 //! * [`sw`] — §4.3: Swendsen–Wang / Higdon partial-SW as degenerate
 //!   decompositions of the Ising factor.
 
+pub mod csr;
 pub mod encoding;
 pub mod factorization;
 pub mod model;
 pub mod sw;
 
+pub use csr::CsrIncidence;
 pub use factorization::{dualize_table, factorize_positive, DualFactor};
-pub use model::DualModel;
+pub use model::{DualEntry, DualModel};

@@ -6,15 +6,29 @@
 //!   conditional is `P(x_v=1 | θ) = σ(base_field[v] + Σ_{i ∋ v} θ_i β_{i,v})`.
 //! * per-factor dual parameters `(q_i, β_{i,1}, β_{i,2})`: the dual
 //!   conditional is `P(θ_i=1 | x) = σ(q_i + β_{i,1} x_{v₁} + β_{i,2} x_{v₂})`.
-//! * CSR-ish incidence (`var → [(factor, β)]`) for the native sampler, and
-//!   a dense export (`J`, `a`, `q`, `β`, endpoints) for the AOT artifacts.
+//! * nested incidence (`var → [(factor, β)]`) — the *reference*
+//!   implementation used by the scalar samplers and tests — mirrored by a
+//!   flat [`CsrIncidence`] arena (+ delta overlay, epoch compaction) that
+//!   the lane engine's hot kernels read instead, and a dense export
+//!   (`J`, `a`, `q`, `β`, endpoints) for the AOT artifacts.
+//! * derived per-site conditional caches, invalidated only on churn: the
+//!   four-sigmoid θ table per live factor slot ([`DualModel::theta_table`])
+//!   and, for low-degree variables, the full `2^deg` table of Bernoulli
+//!   acceptance parts over θ-bit patterns ([`DualModel::x_table`]).
 //!
-//! The *entire* preprocessing for a new factor is one 2×2 factorization and
-//! two adjacency pushes — this is the "almost no preprocessing" claim that
-//! the dynamic benchmark quantifies against graph-coloring repair.
+//! The *entire* preprocessing for a new factor is one 2×2 factorization,
+//! two adjacency pushes, and an O(degree)-bounded cache refresh — this is
+//! the "almost no preprocessing" claim that the dynamic benchmark
+//! quantifies against graph-coloring repair.
 
+use super::csr::CsrIncidence;
 use super::factorization::{dualize_table, DualFactor};
 use crate::graph::{FactorGraph, FactorId, PairFactor, VarId};
+use crate::rng::{bernoulli_sigmoid_parts, sigmoid_fast};
+
+/// Largest view length for which [`DualModel::x_table`] is materialized:
+/// `2^6 = 64` cached entries at most, indexable by a `u8` gather.
+const X_TABLE_MAX_DEG: usize = 6;
 
 /// Dual parameters + endpoints of one live factor.
 #[derive(Clone, Copy, Debug)]
@@ -35,7 +49,21 @@ pub struct DualModel {
     entries: Vec<Option<DualEntry>>,
     free: Vec<usize>,
     /// `incidence[v]` = (factor slot, β contribution of that factor to v).
+    /// Reference structure; `csr` is its flat hot-path mirror.
     incidence: Vec<Vec<(u32, f64)>>,
+    /// Flat CSR arena + delta overlay mirroring `incidence`.
+    csr: CsrIncidence,
+    /// `σ_fast(q + β·pattern)` per factor slot, indexed by the two
+    /// endpoint bits; recomputed only on insert (dead slots stay inert).
+    theta_tables: Vec<[f64; 4]>,
+    /// Flat factor endpoints (`u32::MAX` = dead slot) so the θ half-step
+    /// reads 8 contiguous bytes instead of an 80-byte `Option<DualEntry>`.
+    slot_v1: Vec<u32>,
+    slot_v2: Vec<u32>,
+    /// Per-variable Bernoulli acceptance parts over θ-bit patterns, in the
+    /// exact iteration order of `csr.view(v)`; empty when the view is
+    /// longer than [`X_TABLE_MAX_DEG`]. Rebuilt on churn at the endpoints.
+    x_tables: Vec<Vec<(f64, f64)>>,
     active: usize,
 }
 
@@ -43,29 +71,37 @@ impl DualModel {
     /// Dualize every factor of a graph (one factorization per factor).
     pub fn from_graph(g: &FactorGraph) -> Self {
         let n = g.num_vars();
-        let mut m = Self {
-            base_field: (0..n).map(|v| g.unary(v)).collect(),
-            entries: Vec::new(),
-            free: Vec::new(),
-            incidence: vec![Vec::new(); n],
-            active: 0,
-        };
+        let mut m = Self::new((0..n).map(|v| g.unary(v)).collect());
         for (id, f) in g.factors() {
-            m.insert_at(id, f);
+            // bulk build: defer x-table refreshes and compaction — the
+            // single compaction below builds each churned table once
+            m.insert_at_inner(id, f, false);
         }
+        // leave a clean arena: every incidence read is one contiguous
+        // slice, no overlay, until the first post-build mutation
+        m.compact_incidence();
         m
     }
 
     /// Empty model over `n` variables with the given unary log-odds.
     pub fn new(unary: Vec<f64>) -> Self {
         let n = unary.len();
-        Self {
+        let mut m = Self {
             base_field: unary,
             entries: Vec::new(),
             free: Vec::new(),
             incidence: vec![Vec::new(); n],
+            csr: CsrIncidence::new(n),
+            theta_tables: Vec::new(),
+            slot_v1: Vec::new(),
+            slot_v2: Vec::new(),
+            x_tables: vec![Vec::new(); n],
             active: 0,
+        };
+        for v in 0..n {
+            m.rebuild_x_table(v);
         }
+        m
     }
 
     pub fn num_vars(&self) -> usize {
@@ -97,8 +133,116 @@ impl DualModel {
         self.base_field[v]
     }
 
+    /// Reference (nested) incidence list of `v`.
     pub fn incidence(&self, v: VarId) -> &[(u32, f64)] {
         &self.incidence[v]
+    }
+
+    /// Live degree of `v` (length of its reference incidence list) — the
+    /// weight degree-aware sweep chunking balances on.
+    #[inline]
+    pub fn degree(&self, v: VarId) -> usize {
+        self.incidence[v].len()
+    }
+
+    /// Hot-path incidence view of `v` from the flat arena:
+    /// `(base slots, base βs, overlay)`. Both base slices contain only
+    /// live entries (removal swap-compacts within the segment), so the
+    /// view width always equals the live degree; see
+    /// [`CsrIncidence::view`].
+    #[inline]
+    pub fn incidence_csr(&self, v: VarId) -> (&[u32], &[f64], &[(u32, f64)]) {
+        self.csr.view(v)
+    }
+
+    /// Live CSR-overlay incidence of `v` as one list — must equal
+    /// [`DualModel::incidence`] as a multiset; tested under churn.
+    pub fn incidence_csr_logical(&self, v: VarId) -> Vec<(u32, f64)> {
+        self.csr.logical(v)
+    }
+
+    /// Compaction generation of the incidence arena.
+    pub fn csr_epoch(&self) -> u64 {
+        self.csr.epoch()
+    }
+
+    /// Cached `σ_fast(q + β·bits)` table of a factor slot, indexed by the
+    /// two endpoint bits (`x_{v1} | x_{v2} << 1`). Valid only while the
+    /// slot is live; dead slots hold an inert all-zeros table.
+    #[inline]
+    pub fn theta_table(&self, slot: usize) -> &[f64; 4] {
+        &self.theta_tables[slot]
+    }
+
+    /// Endpoints of a live factor slot, or `None` for a dead slot — the
+    /// flat-array fast path the θ half-step uses instead of
+    /// [`DualModel::entry`].
+    #[inline]
+    pub fn slot_endpoints(&self, slot: usize) -> Option<(u32, u32)> {
+        let v1 = self.slot_v1[slot];
+        if v1 == u32::MAX {
+            None
+        } else {
+            Some((v1, self.slot_v2[slot]))
+        }
+    }
+
+    /// Cached Bernoulli acceptance parts for `x_v`'s conditional, one
+    /// `(mult, thresh)` entry per θ-bit pattern of the CSR view (pattern
+    /// bit `i` = entry `i` in `incidence_csr(v)` order, base then
+    /// overlay; the view width is always the live degree). `None` when
+    /// the degree exceeds [`X_TABLE_MAX_DEG`] and the caller must
+    /// accumulate per lane instead.
+    #[inline]
+    pub fn x_table(&self, v: VarId) -> Option<&[(f64, f64)]> {
+        let t = &self.x_tables[v];
+        if t.is_empty() {
+            None
+        } else {
+            Some(t.as_slice())
+        }
+    }
+
+    /// Rebuild `v`'s cached x-conditional table from the current CSR view.
+    ///
+    /// Pattern `m`'s log-odds is `base_field[v]` plus the view's βs folded
+    /// in order over the set bits of `m` — the same fold order (and hence
+    /// bit-identical draws) as the per-lane accumulate fallback.
+    fn rebuild_x_table(&mut self, v: VarId) {
+        let parts = {
+            let (_, betas, overlay) = self.csr.view(v);
+            let d = betas.len() + overlay.len();
+            if d > X_TABLE_MAX_DEG {
+                Vec::new()
+            } else {
+                let mut z = vec![0.0f64; 1usize << d];
+                z[0] = self.base_field[v];
+                for (i, b) in betas
+                    .iter()
+                    .copied()
+                    .chain(overlay.iter().map(|&(_, b)| b))
+                    .enumerate()
+                {
+                    for m in 0..(1usize << i) {
+                        z[m | (1usize << i)] = z[m] + b;
+                    }
+                }
+                z.into_iter().map(bernoulli_sigmoid_parts).collect()
+            }
+        };
+        self.x_tables[v] = parts;
+    }
+
+    /// Force a compaction of the incidence arena (normally triggered
+    /// automatically once churn outgrows [`CsrIncidence::needs_compaction`])
+    /// and refresh the x-tables whose view it changed
+    /// (`dirty_vars` is already deduplicated by the arena).
+    pub fn compact_incidence(&mut self) {
+        let dirty: Vec<u32> = self.csr.dirty_vars().to_vec();
+        self.csr.rebuild(&self.incidence);
+        for v in dirty {
+            self.rebuild_x_table(v as usize);
+        }
     }
 
     /// Dualize + insert one factor at a caller-chosen slot id.
@@ -106,6 +250,13 @@ impl DualModel {
     /// Used with the graph's own [`FactorId`] so graph and dual model share
     /// the slot space — the coordinator relies on this 1:1 mapping.
     pub fn insert_at(&mut self, slot: FactorId, f: &PairFactor) {
+        self.insert_at_inner(slot, f, true);
+    }
+
+    /// Shared insert body; `maintain_caches: false` is the bulk-build path
+    /// ([`DualModel::from_graph`]) where the final compaction refreshes
+    /// every churned x-table once instead of twice per insert.
+    fn insert_at_inner(&mut self, slot: FactorId, f: &PairFactor, maintain_caches: bool) {
         let DualFactor {
             alpha1,
             alpha2,
@@ -134,7 +285,33 @@ impl DualModel {
         self.base_field[f.v2] += alpha2;
         self.incidence[f.v1].push((slot as u32, beta1));
         self.incidence[f.v2].push((slot as u32, beta2));
+        self.csr.insert(f.v1, slot as u32, beta1);
+        self.csr.insert(f.v2, slot as u32, beta2);
+        if self.theta_tables.len() < self.entries.len() {
+            self.theta_tables.resize(self.entries.len(), [0.0; 4]);
+            self.slot_v1.resize(self.entries.len(), u32::MAX);
+            self.slot_v2.resize(self.entries.len(), u32::MAX);
+        }
+        self.theta_tables[slot] = [
+            sigmoid_fast(q),
+            sigmoid_fast(q + beta1),
+            sigmoid_fast(q + beta2),
+            sigmoid_fast(q + beta1 + beta2),
+        ];
+        self.slot_v1[slot] = f.v1 as u32;
+        self.slot_v2[slot] = f.v2 as u32;
         self.active += 1;
+        if maintain_caches {
+            // base_field / incidence changed at both endpoints; when a
+            // compaction is due it refreshes them itself (they are in the
+            // arena's dirty set), so rebuild directly only otherwise
+            if self.csr.needs_compaction() {
+                self.compact_incidence();
+            } else {
+                self.rebuild_x_table(f.v1);
+                self.rebuild_x_table(f.v2);
+            }
+        }
     }
 
     /// Remove the factor in `slot`, undoing its field contribution.
@@ -149,9 +326,24 @@ impl DualModel {
                 .position(|&(s, _)| s as usize == slot)
                 .expect("incidence desync");
             list.swap_remove(pos);
+            assert!(
+                self.csr.remove(v, slot as u32),
+                "csr/incidence desync at var {v} slot {slot}"
+            );
         }
+        self.theta_tables[slot] = [0.0; 4];
+        self.slot_v1[slot] = u32::MAX;
+        self.slot_v2[slot] = u32::MAX;
         self.free.push(slot);
         self.active -= 1;
+        // as in insert: a due compaction refreshes the endpoint tables
+        // itself via the dirty set
+        if self.csr.needs_compaction() {
+            self.compact_incidence();
+        } else {
+            self.rebuild_x_table(e.v1);
+            self.rebuild_x_table(e.v2);
+        }
         Some(e)
     }
 
@@ -165,7 +357,11 @@ impl DualModel {
     pub fn add_var(&mut self, unary: f64) -> VarId {
         self.base_field.push(unary);
         self.incidence.push(Vec::new());
-        self.base_field.len() - 1
+        self.csr.add_var();
+        self.x_tables.push(Vec::new());
+        let v = self.base_field.len() - 1;
+        self.rebuild_x_table(v);
+        v
     }
 
     // -- conditionals (the Markov kernel) ---------------------------------
@@ -441,6 +637,124 @@ mod tests {
                 .count();
             assert_eq!(nz, 2, "row {row}");
         }
+    }
+
+    #[test]
+    fn csr_view_matches_nested_incidence_after_build() {
+        let g = workloads::ising_grid(3, 3, 0.4, 0.1);
+        let m = DualModel::from_graph(&g);
+        for v in 0..9 {
+            assert_eq!(
+                m.incidence_csr_logical(v),
+                m.incidence(v).to_vec(),
+                "CSR/nested mismatch at {v}"
+            );
+            // freshly built: pure arena, no overlay
+            let (slots, betas, overlay) = m.incidence_csr(v);
+            assert!(overlay.is_empty());
+            assert_eq!(slots.len(), m.degree(v));
+            assert_eq!(betas.len(), m.degree(v));
+        }
+    }
+
+    #[test]
+    fn csr_tracks_churn_and_compaction() {
+        let mut g = workloads::ising_grid(3, 3, 0.3, 0.0);
+        let mut m = DualModel::from_graph(&g);
+        let epoch0 = m.csr_epoch();
+        let victim = g.factors().next().unwrap().0;
+        g.remove_factor(victim).unwrap();
+        m.remove(victim);
+        let sorted_eq = |m: &DualModel| {
+            for v in 0..m.num_vars() {
+                let mut a = m.incidence_csr_logical(v);
+                let mut b = m.incidence(v).to_vec();
+                a.sort_by_key(|e| e.0);
+                b.sort_by_key(|e| e.0);
+                assert_eq!(a, b, "CSR drift at var {v}");
+            }
+        };
+        sorted_eq(&m);
+        m.insert_at(victim, &PairFactor::ising(0, 8, 0.7));
+        sorted_eq(&m);
+        // forced compaction keeps the logical view and bumps the epoch
+        m.compact_incidence();
+        assert!(m.csr_epoch() > epoch0);
+        sorted_eq(&m);
+    }
+
+    #[test]
+    fn theta_table_caches_the_four_sigmoids() {
+        use crate::rng::sigmoid_fast;
+        let g = workloads::ising_grid(2, 2, 0.5, 0.1);
+        let mut m = DualModel::from_graph(&g);
+        for (slot, e) in m.entries().map(|(s, e)| (s, *e)).collect::<Vec<_>>() {
+            let t = *m.theta_table(slot);
+            assert_eq!(t[0], sigmoid_fast(e.q));
+            assert_eq!(t[1], sigmoid_fast(e.q + e.beta1));
+            assert_eq!(t[2], sigmoid_fast(e.q + e.beta2));
+            assert_eq!(t[3], sigmoid_fast(e.q + e.beta1 + e.beta2));
+            assert_eq!(m.slot_endpoints(slot), Some((e.v1 as u32, e.v2 as u32)));
+        }
+        // removal leaves the slot inert; reinsert refreshes the cache
+        let (slot, e) = {
+            let (s, e) = m.entries().next().unwrap();
+            (s, *e)
+        };
+        m.remove(slot);
+        assert_eq!(m.slot_endpoints(slot), None);
+        assert_eq!(*m.theta_table(slot), [0.0; 4]);
+        m.insert_at(slot, &PairFactor::ising(e.v1, e.v2, 0.9));
+        assert!(m.slot_endpoints(slot).is_some());
+        assert_ne!(*m.theta_table(slot), [0.0; 4]);
+    }
+
+    #[test]
+    fn x_table_matches_fold_over_patterns() {
+        use crate::rng::bernoulli_sigmoid_parts;
+        let g = workloads::ising_grid(2, 2, 0.4, 0.2);
+        let m = DualModel::from_graph(&g);
+        for v in 0..4 {
+            let (_, betas, overlay) = m.incidence_csr(v);
+            assert!(overlay.is_empty());
+            let d = betas.len();
+            let parts = m.x_table(v).expect("grid degree ≤ 2 must be cached");
+            assert_eq!(parts.len(), 1 << d);
+            for mask in 0..(1usize << d) {
+                let mut z = m.base_field(v);
+                for (i, &b) in betas.iter().enumerate() {
+                    z += ((mask >> i) & 1) as f64 * b;
+                }
+                let want = bernoulli_sigmoid_parts(z);
+                let got = parts[mask];
+                assert!(
+                    (got.0 - want.0).abs() < 1e-15 && (got.1 - want.1).abs() < 1e-15,
+                    "v={v} mask={mask}: {got:?} vs {want:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn x_table_disabled_beyond_degree_cap() {
+        // a 7-star hub exceeds X_TABLE_MAX_DEG = 6
+        let mut g = FactorGraph::new(8);
+        for leaf in 1..8 {
+            g.add_factor(PairFactor::ising(0, leaf, 0.1));
+        }
+        let mut m = DualModel::from_graph(&g);
+        assert!(m.x_table(0).is_none());
+        assert!(m.x_table(1).is_some());
+        // dropping one edge brings the hub under the cap — immediately,
+        // with no compaction required (the view tracks live degree)
+        let id = g.factors().next().unwrap().0;
+        m.remove(id);
+        assert!(m.x_table(0).is_some());
+        assert_eq!(m.x_table(0).unwrap().len(), 1 << 6);
+        // and compaction keeps it intact
+        m.compact_incidence();
+        assert!(m.x_table(0).is_some());
+        assert_eq!(m.x_table(0).unwrap().len(), 1 << 6);
     }
 
     #[test]

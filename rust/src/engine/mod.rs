@@ -17,11 +17,22 @@
 //! `Vec<u8>` states. `benches/throughput.rs --mode lanes` measures the
 //! gap (acceptance: ≥ 3× for 64 chains on a 64×64 grid).
 //!
+//! The sweep hot path runs on flat arenas, not the model's nested
+//! reference structures: the CSR incidence view
+//! ([`crate::duality::DualModel::incidence_csr`]), the per-slot cached
+//! four-sigmoid θ tables, and — for low-degree variables — cached
+//! per-pattern Bernoulli acceptance parts that remove the exponential
+//! from the per-lane draw entirely. All three caches are invalidated by
+//! churn only, never by sweeping.
+//!
 //! Thread parallelism splits over *variables* (then factor slots), not
-//! chains, so it scales with model size rather than chain count. RNG
-//! streams are keyed per `(sweep, site)` via [`crate::rng::Pcg64::split2`],
-//! which makes a lane sweep bit-identical for every pool size, including
-//! none — see `tests/lane_engine.rs`.
+//! chains, so it scales with model size rather than chain count; chunk
+//! boundaries are degree-aware ([`crate::util::balanced_ranges`] over an
+//! incidence-length prefix sum) so hubs in skewed graphs don't pile into
+//! one worker. RNG streams are keyed per `(sweep, site)` via
+//! [`crate::rng::Pcg64::split2`], which makes a lane sweep bit-identical
+//! for every pool size and chunking, including none — see
+//! `tests/lane_engine.rs`.
 //!
 //! Churn keeps working mid-run: [`LanePdSampler::add_factor`] /
 //! [`LanePdSampler::remove_factor`] apply one O(degree) update to the

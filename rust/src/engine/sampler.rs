@@ -9,11 +9,28 @@
 //!
 //! One sweep is the usual two half-steps, but vectorized over lanes:
 //!
-//! * x: per variable, ONE traversal of the incidence list accumulates the
-//!   per-lane log-odds (`base_field[v] + Σ θ_i β_{i,v}` with θ read as
-//!   packed bits), then 64 Bernoulli draws pack the result word.
+//! * x: per variable, ONE pass over the flat CSR incidence view
+//!   ([`DualModel::incidence_csr`]: contiguous slot/β arrays + delta
+//!   overlay — no nested-`Vec` pointer chasing) resamples the variable in
+//!   all lanes. Low-degree variables skip the per-lane log-odds
+//!   accumulation entirely: the model caches the Bernoulli acceptance
+//!   parts for every θ-bit pattern ([`DualModel::x_table`], invalidated
+//!   only on churn), so each lane gathers its pattern index and draws —
+//!   no exponential on the sweep path. High-degree variables fall back to
+//!   the per-lane `f64` accumulate, which is split into a branch-free
+//!   full-word body over all 64 lanes (autovectorizer-friendly fixed-size
+//!   loops) and a separate masked tail word.
 //! * θ: per live factor, the conditional depends only on the two endpoint
-//!   bits, so four precomputed sigmoids serve every lane.
+//!   bits, so the four sigmoids cached per slot in the model
+//!   ([`DualModel::theta_table`], recomputed only on insert/remove — not
+//!   4× per slot per sweep) serve every lane; endpoints come from flat
+//!   arrays ([`DualModel::slot_endpoints`]), not `Option<DualEntry>`.
+//!
+//! Pooled sweeps split sites into *degree-aware* chunks: chunk boundaries
+//! come from [`balanced_ranges`] over a prefix sum of incidence lengths
+//! (recomputed lazily after churn), so dense or skewed graphs load-balance
+//! across the pool instead of one worker owning all the hubs. Chunking
+//! never affects the trajectory: RNG streams are keyed per `(sweep, site)`.
 //!
 //! Unused high lanes of the last word are kept zero (`lanes % 64` tail).
 
@@ -21,7 +38,8 @@ use std::sync::Arc;
 
 use crate::duality::DualModel;
 use crate::graph::{FactorGraph, FactorId, PairFactor};
-use crate::rng::{bernoulli_sigmoid, sigmoid_fast, Pcg64, RngCore};
+use crate::rng::{bernoulli_from_parts, bernoulli_sigmoid, Pcg64, RngCore};
+use crate::util::threadpool::balanced_ranges;
 use crate::util::ThreadPool;
 
 /// Lane-batched primal–dual Gibbs sampler (up to any number of chains;
@@ -36,6 +54,12 @@ pub struct LanePdSampler {
     /// Stream root: every site's draws are keyed `split2(sweep, site)`.
     base: Pcg64,
     sweep_count: u64,
+    /// Degree-aware chunk bounds for pooled sweeps (x over variables,
+    /// θ over factor slots), valid for a pool of `chunk_plan_for` workers;
+    /// 0 = stale (rebuilt lazily on the next pooled sweep).
+    x_bounds: Vec<usize>,
+    theta_bounds: Vec<usize>,
+    chunk_plan_for: usize,
 }
 
 /// Number of live lanes in word `w` of a site's lane row.
@@ -44,8 +68,10 @@ fn lanes_in_word(lanes: usize, w: usize) -> usize {
     (lanes - w * 64).min(64)
 }
 
-/// All-ones mask over the low `k` bits (`k ∈ 1..=64`).
-#[inline]
+/// All-ones mask over the low `k` bits (`k ∈ 1..=64`). The sweep kernels
+/// no longer need it (full words compare against `u64::MAX` directly and
+/// tail lanes are masked at the draw), but the ghost-lane tests still do.
+#[cfg(test)]
 fn lane_mask(k: usize) -> u64 {
     if k == 64 {
         u64::MAX
@@ -75,6 +101,9 @@ impl LanePdSampler {
             pool: None,
             base: Pcg64::seed(seed),
             sweep_count: 0,
+            x_bounds: Vec::new(),
+            theta_bounds: Vec::new(),
+            chunk_plan_for: 0,
         }
     }
 
@@ -82,6 +111,7 @@ impl LanePdSampler {
     /// the sampled trajectory: streams are keyed per `(sweep, site)`.
     pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
         self.pool = Some(pool);
+        self.chunk_plan_for = 0;
         self
     }
 
@@ -204,16 +234,29 @@ impl LanePdSampler {
         for w in 0..self.words {
             self.theta[id * self.words + w] = 0;
         }
+        self.chunk_plan_for = 0; // degrees changed: re-plan chunks lazily
     }
 
     /// Dynamic update: unwire a factor for all lanes. O(degree).
-    pub fn remove_factor(&mut self, id: FactorId) {
-        self.model.remove(id);
-        if (id + 1) * self.words <= self.theta.len() {
-            for w in 0..self.words {
-                self.theta[id * self.words + w] = 0;
-            }
+    ///
+    /// Returns whether the slot was live — a dead/unknown `id` is a no-op
+    /// reporting `false`, exactly mirroring [`DualModel::remove`]; for a
+    /// live slot the θ words are always zeroed (the θ state can never be
+    /// shorter than the model's slot space, asserted here rather than
+    /// silently skipped).
+    pub fn remove_factor(&mut self, id: FactorId) -> bool {
+        if self.model.remove(id).is_none() {
+            return false;
         }
+        assert!(
+            (id + 1) * self.words <= self.theta.len(),
+            "theta state shorter than the model's slot space (slot {id})"
+        );
+        for w in 0..self.words {
+            self.theta[id * self.words + w] = 0;
+        }
+        self.chunk_plan_for = 0; // degrees changed: re-plan chunks lazily
+        true
     }
 
     // -- sampling ----------------------------------------------------------
@@ -261,10 +304,42 @@ impl LanePdSampler {
         }
     }
 
-    fn sweep_pooled(&mut self, pool: &ThreadPool) {
-        let words = self.words;
+    /// Rebuild the degree-aware chunk plan for a pool of `chunks` workers:
+    /// x chunks balance `1 + degree(v)` (one RNG stream + one incidence
+    /// traversal per variable), θ chunks weight live slots over dead ones
+    /// (a dead slot is a plain memset of its lane row).
+    fn rebuild_chunk_plan(&mut self, chunks: usize) {
         let n = self.model.num_vars();
+        let mut prefix = Vec::with_capacity(n + 1);
+        prefix.push(0u64);
+        let mut acc = 0u64;
+        for v in 0..n {
+            acc += 1 + self.model.degree(v) as u64;
+            prefix.push(acc);
+        }
+        self.x_bounds = balanced_ranges(&prefix, chunks);
+
         let slots = self.model.factor_slots();
+        let mut tprefix = Vec::with_capacity(slots + 1);
+        tprefix.push(0u64);
+        let mut tacc = 0u64;
+        for slot in 0..slots {
+            tacc += if self.model.slot_endpoints(slot).is_some() {
+                8
+            } else {
+                1
+            };
+            tprefix.push(tacc);
+        }
+        self.theta_bounds = balanced_ranges(&tprefix, chunks);
+        self.chunk_plan_for = chunks;
+    }
+
+    fn sweep_pooled(&mut self, pool: &ThreadPool) {
+        if self.chunk_plan_for != pool.size() {
+            self.rebuild_chunk_plan(pool.size());
+        }
+        let words = self.words;
         // x | θ : chunks over variables write x, read frozen θ
         {
             let ctx = XCtx {
@@ -276,7 +351,7 @@ impl LanePdSampler {
                 sweep: self.sweep_count,
             };
             let x_ptr = SendPtr(self.x.as_mut_ptr());
-            pool.scope_chunks(n, |_, start, end| {
+            pool.scope_ranges(&self.x_bounds, |_, start, end| {
                 let x_ptr = &x_ptr;
                 for v in start..end {
                     // SAFETY: chunks own disjoint variable ranges, hence
@@ -299,7 +374,7 @@ impl LanePdSampler {
                 sweep: self.sweep_count,
             };
             let t_ptr = SendPtr(self.theta.as_mut_ptr());
-            pool.scope_chunks(slots, |_, start, end| {
+            pool.scope_ranges(&self.theta_bounds, |_, start, end| {
                 let t_ptr = &t_ptr;
                 for slot in start..end {
                     // SAFETY: chunks own disjoint slot ranges.
@@ -309,6 +384,48 @@ impl LanePdSampler {
                     ctx.site(slot, out);
                 }
             });
+        }
+    }
+}
+
+/// Fold one packed θ word into the 64 per-lane log-odds accumulators.
+///
+/// Branch-free over all 64 lanes (fixed-size loops the autovectorizer
+/// likes); ghost lanes accumulate garbage that the caller never draws
+/// from. The `tw == 0` / `tw == ones` word-level shortcuts change no
+/// values — adding `0·β` to every lane, or `β` to every lane, is exactly
+/// what the general body computes.
+#[inline(always)]
+fn lane_accumulate(acc: &mut [f64; 64], tw: u64, beta: f64) {
+    if tw == 0 {
+        return;
+    }
+    if tw == u64::MAX {
+        for a in acc.iter_mut() {
+            *a += beta;
+        }
+    } else {
+        for (l, a) in acc.iter_mut().enumerate() {
+            *a += ((tw >> l) & 1) as f64 * beta;
+        }
+    }
+}
+
+/// Scatter one packed θ word into the 64 per-lane pattern indices
+/// (pattern bit `bit` = this entry's θ value in that lane).
+#[inline(always)]
+fn lane_gather(idx: &mut [u8; 64], tw: u64, bit: u32) {
+    if tw == 0 {
+        return;
+    }
+    let b = 1u8 << bit;
+    if tw == u64::MAX {
+        for i in idx.iter_mut() {
+            *i |= b;
+        }
+    } else {
+        for (l, i) in idx.iter_mut().enumerate() {
+            *i |= (((tw >> l) & 1) as u8) << bit;
         }
     }
 }
@@ -324,37 +441,61 @@ struct XCtx<'a> {
 }
 
 impl XCtx<'_> {
-    /// Resample `x_v` in every lane: one incidence traversal total.
+    /// Resample `x_v` in every lane: one flat incidence traversal total.
     fn site(&self, v: usize, out: &mut [u64]) {
-        let field = self.model.base_field(v);
-        let inc = self.model.incidence(v);
         // even site codes are x-variables, odd are θ-slots
         let mut rng = self.base.split2(self.sweep, (v as u64) << 1);
-        let mut acc = [0.0f64; 64];
-        for (w, out_word) in out.iter_mut().enumerate() {
-            let k = lanes_in_word(self.lanes, w);
-            let accs = &mut acc[..k];
-            accs.fill(field);
-            for &(slot, beta) in inc {
-                let tw = self.theta[slot as usize * self.words + w];
-                if tw == 0 {
-                    continue; // θ = 0 in every lane: no contribution
-                }
-                if tw == lane_mask(k) {
-                    for a in accs.iter_mut() {
-                        *a += beta; // θ = 1 in every lane
+        let (slots, betas, overlay) = self.model.incidence_csr(v);
+        match self.model.x_table(v) {
+            Some(parts) => {
+                // cached-table path: gather each lane's θ-bit pattern and
+                // draw from the precomputed acceptance parts — the draws
+                // are bit-identical to the accumulate path below
+                for (w, out_word) in out.iter_mut().enumerate() {
+                    let k = lanes_in_word(self.lanes, w);
+                    let mut idx = [0u8; 64];
+                    let mut bit = 0u32;
+                    for &slot in slots {
+                        let tw = self.theta[slot as usize * self.words + w];
+                        lane_gather(&mut idx, tw, bit);
+                        bit += 1;
                     }
-                } else {
-                    for (l, a) in accs.iter_mut().enumerate() {
-                        *a += ((tw >> l) & 1) as f64 * beta;
+                    for &(slot, _) in overlay {
+                        let tw = self.theta[slot as usize * self.words + w];
+                        lane_gather(&mut idx, tw, bit);
+                        bit += 1;
                     }
+                    let mut word = 0u64;
+                    for (l, &i) in idx[..k].iter().enumerate() {
+                        let (mult, thresh) = parts[i as usize];
+                        word |= (bernoulli_from_parts(&mut rng, mult, thresh) as u64) << l;
+                    }
+                    *out_word = word;
                 }
             }
-            let mut word = 0u64;
-            for (l, &z) in accs.iter().enumerate() {
-                word |= (bernoulli_sigmoid(&mut rng, z) as u64) << l;
+            None => {
+                // high-degree fallback: per-lane log-odds accumulate over
+                // the same flat view, full 64-lane body per word (tail
+                // lanes masked only at the draw)
+                let field = self.model.base_field(v);
+                for (w, out_word) in out.iter_mut().enumerate() {
+                    let k = lanes_in_word(self.lanes, w);
+                    let mut acc = [field; 64];
+                    for (&slot, &beta) in slots.iter().zip(betas.iter()) {
+                        let tw = self.theta[slot as usize * self.words + w];
+                        lane_accumulate(&mut acc, tw, beta);
+                    }
+                    for &(slot, beta) in overlay {
+                        let tw = self.theta[slot as usize * self.words + w];
+                        lane_accumulate(&mut acc, tw, beta);
+                    }
+                    let mut word = 0u64;
+                    for (l, &z) in acc[..k].iter().enumerate() {
+                        word |= (bernoulli_sigmoid(&mut rng, z) as u64) << l;
+                    }
+                    *out_word = word;
+                }
             }
-            *out_word = word;
         }
     }
 }
@@ -371,23 +512,20 @@ struct ThetaCtx<'a> {
 
 impl ThetaCtx<'_> {
     /// Resample `θ_slot` in every lane: the conditional takes one of four
-    /// values per factor, so four sigmoids cover all lanes.
+    /// values per factor, so the model's cached four-sigmoid table serves
+    /// all lanes (recomputed on churn, not per sweep).
     fn site(&self, slot: usize, out: &mut [u64]) {
-        let Some(e) = self.model.entry(slot) else {
+        let Some((v1, v2)) = self.model.slot_endpoints(slot) else {
             out.fill(0); // dead slot: keep θ = 0 in every lane
             return;
         };
-        let p = [
-            sigmoid_fast(e.q),
-            sigmoid_fast(e.q + e.beta1),
-            sigmoid_fast(e.q + e.beta2),
-            sigmoid_fast(e.q + e.beta1 + e.beta2),
-        ];
+        let p = self.model.theta_table(slot);
+        let (v1, v2) = (v1 as usize, v2 as usize);
         let mut rng = self.base.split2(self.sweep, ((slot as u64) << 1) | 1);
         for (w, out_word) in out.iter_mut().enumerate() {
             let k = lanes_in_word(self.lanes, w);
-            let x1 = self.x[e.v1 * self.words + w];
-            let x2 = self.x[e.v2 * self.words + w];
+            let x1 = self.x[v1 * self.words + w];
+            let x2 = self.x[v2 * self.words + w];
             let mut word = 0u64;
             for l in 0..k {
                 let idx = (((x1 >> l) & 1) | (((x2 >> l) & 1) << 1)) as usize;
@@ -506,6 +644,33 @@ mod tests {
     }
 
     #[test]
+    fn table_and_accumulate_paths_mix_correctly() {
+        // a star graph: the hub's degree 7 exceeds X_TABLE_MAX_DEG so it
+        // takes the per-lane accumulate fallback, while every leaf (degree
+        // 1) draws from its cached x-table — the mixed-path chain must
+        // still match the exact oracle
+        let mut g = FactorGraph::new(8);
+        g.set_unary(0, 0.2);
+        for leaf in 1..8 {
+            let sign = if leaf % 2 == 0 { -0.3 } else { 0.4 };
+            g.add_factor(PairFactor::ising(0, leaf, sign));
+        }
+        let mut eng = LanePdSampler::new(&g, 64, 11);
+        assert!(eng.model().x_table(0).is_none(), "hub must fall back");
+        assert!(eng.model().x_table(1).is_some(), "leaf must use the table");
+        let got = lane_marginals(&mut eng, 600, 3000);
+        let want = exact::enumerate(&g).marginals;
+        for v in 0..8 {
+            assert!(
+                (got[v] - want[v]).abs() < 0.015,
+                "v={v}: {} vs exact {}",
+                got[v],
+                want[v]
+            );
+        }
+    }
+
+    #[test]
     fn dynamic_add_remove_keeps_correctness() {
         // mutate the shared model mid-run, applied once for all lanes
         let mut g = workloads::ising_grid(2, 3, 0.3, 0.1);
@@ -517,7 +682,7 @@ mod tests {
         eng.add_factor(added, g.factor(added).unwrap());
         let victim = g.factors().next().unwrap().0;
         g.remove_factor(victim).unwrap();
-        eng.remove_factor(victim);
+        assert!(eng.remove_factor(victim));
         let got = lane_marginals(&mut eng, 300, 2000);
         let want = exact::enumerate(&g).marginals;
         for v in 0..6 {
@@ -528,6 +693,29 @@ mod tests {
                 want[v]
             );
         }
+    }
+
+    #[test]
+    fn remove_factor_of_dead_slot_is_a_reported_noop() {
+        // regression: removing an unknown/already-removed slot must not
+        // touch any θ state and must say so, consistently with
+        // DualModel::remove returning None
+        let mut g = workloads::ising_grid(2, 2, 0.3, 0.0);
+        let victim = g.factors().next().unwrap().0;
+        let mut eng = LanePdSampler::new(&g, 70, 7);
+        for _ in 0..20 {
+            eng.sweep();
+        }
+        let live = eng.model().num_factors();
+        assert!(eng.remove_factor(victim), "first removal hits a live slot");
+        assert_eq!(eng.model().num_factors(), live - 1);
+        let theta_before = eng.theta_words().to_vec();
+        let x_before = eng.state_words().to_vec();
+        assert!(!eng.remove_factor(victim), "double remove must report false");
+        assert!(!eng.remove_factor(victim + 1000), "unknown slot must report false");
+        assert_eq!(eng.theta_words(), &theta_before[..], "θ state touched");
+        assert_eq!(eng.state_words(), &x_before[..], "x state touched");
+        assert_eq!(eng.model().num_factors(), live - 1);
     }
 
     use crate::graph::FactorGraph;

@@ -14,12 +14,19 @@
 //!
 //! * [`graph`] — dynamic pairwise factor graph + builders + coloring baseline.
 //! * [`duality`] — §4.1 positive 2×2 factorization, Theorem-2 dual
-//!   parameters, multi-state 0–1 encoding, Swendsen–Wang decompositions.
+//!   parameters, multi-state 0–1 encoding, Swendsen–Wang decompositions;
+//!   [`duality::DualModel`] keeps a nested reference incidence mirrored by
+//!   a flat CSR arena ([`duality::CsrIncidence`]: contiguous slot/β
+//!   arrays + delta overlay + epoch compaction) and churn-invalidated
+//!   conditional caches (per-slot four-sigmoid θ tables, per-variable
+//!   Bernoulli acceptance tables over θ-bit patterns).
 //! * [`samplers`] — sequential Gibbs, chromatic Gibbs, the primal–dual
-//!   sampler (native parallel), Swendsen–Wang, and tree-blocked PD (§5.4).
+//!   sampler (native parallel, the readable nested-incidence reference),
+//!   Swendsen–Wang, and tree-blocked PD (§5.4).
 //! * [`engine`] — lane-batched multi-chain execution: 64 chains per `u64`
-//!   word, variable-major state, one incidence traversal per variable per
-//!   sweep ([`engine::LanePdSampler`]); the substrate under the ensemble.
+//!   word, variable-major state, one *flat-arena* incidence traversal per
+//!   variable per sweep, cached-table draws, degree-aware pooled chunking
+//!   ([`engine::LanePdSampler`]); the substrate under the ensemble.
 //! * [`inference`] — exact enumeration/transfer-matrix oracles, tree BP,
 //!   mean-field & EM-MAP (§5.3), log-partition estimators (§5.2).
 //! * [`diagnostics`] — PSRF (Gelman–Rubin), ESS, mixing-time extraction.
@@ -32,8 +39,9 @@
 //! * [`bench`] — self-contained bench harness (criterion is unavailable
 //!   offline) used by every `benches/` binary.
 //! * [`util`] — substrates built from scratch for the offline environment:
-//!   JSON, CLI parsing, thread pool, property testing, union-find, error
-//!   context ([`util::error`], replacing `anyhow`).
+//!   JSON, CLI parsing, thread pool (uniform and weighted scoped
+//!   parallel-for, [`util::balanced_ranges`]), property testing,
+//!   union-find, error context ([`util::error`], replacing `anyhow`).
 
 pub mod bench;
 pub mod bench_support;

@@ -141,20 +141,37 @@ pub fn sigmoid_fast(z: f64) -> f64 {
     }
 }
 
-/// Draw `Bernoulli(sigmoid(z))` without any division: with
+/// The `(mult, thresh)` pair behind [`bernoulli_sigmoid`]: with
 /// `p = e^{-|z|}`, the acceptance `u < 1/(1+p)` (for `z ≥ 0`) is
-/// `u·(1+p) < 1`, and `u < p/(1+p)` (for `z < 0`) is `u·(1+p) < p`.
-/// Same distribution as `rng.bernoulli(sigmoid_fast(z))` up to one ulp of
+/// `u·(1+p) < 1`, and `u < p/(1+p)` (for `z < 0`) is `u·(1+p) < p` — so
+/// `mult = 1 + p` and `thresh = 1` or `p` by the sign of `z`.
+///
+/// The pair depends only on `z`, so callers whose `z` ranges over a small
+/// set (the lane engine's per-site conditional tables) precompute it once
+/// and draw via [`bernoulli_from_parts`] — bit-identical to calling
+/// [`bernoulli_sigmoid`] with the same `z` and RNG state, because both go
+/// through exactly this comparison.
+#[inline]
+pub fn bernoulli_sigmoid_parts(z: f64) -> (f64, f64) {
+    let p = exp_neg_abs(z);
+    (1.0 + p, if z >= 0.0 { 1.0 } else { p })
+}
+
+/// Draw from precomputed [`bernoulli_sigmoid_parts`]. One uniform, one
+/// multiply, one compare — no exponential on the draw path.
+#[inline]
+pub fn bernoulli_from_parts<R: RngCore>(rng: &mut R, mult: f64, thresh: f64) -> bool {
+    rng.next_f64() * mult < thresh
+}
+
+/// Draw `Bernoulli(sigmoid(z))` without any division (see
+/// [`bernoulli_sigmoid_parts`] for the acceptance identity). Same
+/// distribution as `rng.bernoulli(sigmoid_fast(z))` up to one ulp of
 /// the comparison; this is the lane engine's per-lane hot path.
 #[inline]
 pub fn bernoulli_sigmoid<R: RngCore>(rng: &mut R, z: f64) -> bool {
-    let p = exp_neg_abs(z);
-    let scaled = rng.next_f64() * (1.0 + p);
-    if z >= 0.0 {
-        scaled < 1.0
-    } else {
-        scaled < p
-    }
+    let (mult, thresh) = bernoulli_sigmoid_parts(z);
+    bernoulli_from_parts(rng, mult, thresh)
 }
 
 #[cfg(test)]
@@ -281,6 +298,25 @@ mod tests {
                 (freq - want).abs() < 0.01,
                 "z={z}: freq {freq} vs sigmoid {want}"
             );
+        }
+    }
+
+    #[test]
+    fn parts_draws_are_bit_identical_to_bernoulli_sigmoid() {
+        // the lane engine's cached tables go through bernoulli_from_parts;
+        // the fallback path through bernoulli_sigmoid — the two must agree
+        // draw-for-draw from the same RNG state for every z
+        for &z in &[-5.0, -1.3, -0.0, 0.0, 0.25, 2.0, 41.0] {
+            let mut a = Pcg64::seed(99);
+            let mut b = Pcg64::seed(99);
+            let (mult, thresh) = bernoulli_sigmoid_parts(z);
+            for _ in 0..500 {
+                assert_eq!(
+                    bernoulli_sigmoid(&mut a, z),
+                    bernoulli_from_parts(&mut b, mult, thresh),
+                    "z={z}"
+                );
+            }
         }
     }
 }

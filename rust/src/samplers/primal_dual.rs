@@ -14,6 +14,12 @@
 //! [`ThreadPool`] attached ([`PdSampler::with_pool`]) both half-steps run
 //! chunk-parallel, which is the CPU stand-in for the paper's GPU claim
 //! (the TPU/XLA story lives in [`crate::runtime`]).
+//!
+//! This sampler deliberately stays on the model's *nested* reference
+//! incidence (`DualModel::x_logodds` / `DualModel::entry`) and the exact
+//! [`sigmoid`]: it is the readable baseline that the lane engine's flat
+//! CSR arena, cached conditional tables, and fast-sigmoid draws
+//! ([`crate::engine::LanePdSampler`]) are validated against.
 
 use std::sync::Arc;
 
@@ -76,12 +82,21 @@ impl PdSampler {
         self.theta[id] = 0;
     }
 
-    /// Dynamic update: unwire a factor. O(degree of endpoints).
-    pub fn remove_factor(&mut self, id: FactorId) {
-        self.model.remove(id);
-        if id < self.theta.len() {
-            self.theta[id] = 0;
+    /// Dynamic update: unwire a factor. O(degree of endpoints). Returns
+    /// whether the slot was live (a dead/unknown id is a reported no-op,
+    /// consistent with [`DualModel::remove`]); for a live slot the θ
+    /// entry is always reset — the θ state can never be shorter than the
+    /// model's slot space.
+    pub fn remove_factor(&mut self, id: FactorId) -> bool {
+        if self.model.remove(id).is_none() {
+            return false;
         }
+        assert!(
+            id < self.theta.len(),
+            "theta state shorter than the model's slot space (slot {id})"
+        );
+        self.theta[id] = 0;
+        true
     }
 
     #[inline]

@@ -27,5 +27,5 @@ pub mod threadpool;
 pub mod union_find;
 
 pub use json::Json;
-pub use threadpool::ThreadPool;
+pub use threadpool::{balanced_ranges, ThreadPool};
 pub use union_find::UnionFind;

@@ -1,9 +1,12 @@
 //! Fixed-size worker pool with scoped parallel-for (tokio/rayon-free).
 //!
 //! The native primal–dual sampler resamples all variables (then all
-//! factors) in parallel each sweep; this pool provides the `scope_chunks`
-//! primitive it needs: split an index range into contiguous chunks, run a
-//! closure per chunk on the workers, and join. Closures borrow from the
+//! factors) in parallel each sweep; this pool provides two scoped
+//! primitives for it: `scope_chunks` (split an index range into uniform
+//! contiguous chunks) and `scope_ranges` (run caller-chosen contiguous
+//! ranges — the lane engine feeds it degree-aware boundaries from
+//! [`balanced_ranges`] so dense/skewed graphs load-balance). Both run a
+//! closure per chunk on the workers and join; closures borrow from the
 //! caller's stack via `std::thread::scope`-style lifetimes.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -100,7 +103,8 @@ impl ThreadPool {
     }
 
     /// Run `f(chunk_index, start, end)` over `[0, len)` split into
-    /// `self.size()` contiguous chunks, blocking until all complete.
+    /// `self.size()` uniform contiguous chunks, blocking until all
+    /// complete.
     ///
     /// `f` may borrow non-`'static` data: internally the borrow is erased
     /// and re-guarded by joining before return (the closure cannot outlive
@@ -114,6 +118,30 @@ impl ThreadPool {
         }
         let chunks = self.size.min(len);
         let chunk_len = len.div_ceil(chunks);
+        let mut bounds = Vec::with_capacity(chunks + 1);
+        for c in 0..=chunks {
+            bounds.push((c * chunk_len).min(len));
+        }
+        self.scope_ranges(&bounds, f);
+    }
+
+    /// Run `f(chunk_index, bounds[c], bounds[c + 1])` for each consecutive
+    /// pair of `bounds` (which must be non-decreasing), blocking until all
+    /// complete. Empty ranges still invoke `f` (with `start == end`) so
+    /// chunk-indexed callers see a stable chunk count.
+    ///
+    /// This is the degree-aware counterpart of [`ThreadPool::scope_chunks`]:
+    /// pair it with [`balanced_ranges`] to split work by per-site cost
+    /// instead of site count.
+    pub fn scope_ranges<F>(&self, bounds: &[usize], f: F)
+    where
+        F: Fn(usize, usize, usize) + Sync,
+    {
+        if bounds.len() < 2 {
+            return;
+        }
+        debug_assert!(bounds.windows(2).all(|w| w[0] <= w[1]), "bounds must be non-decreasing");
+        let chunks = bounds.len() - 1;
         let pending = Arc::new((Mutex::new(chunks), Condvar::new()));
 
         // SAFETY: we block on `pending` until every submitted job has run,
@@ -123,8 +151,7 @@ impl ThreadPool {
             unsafe { std::mem::transmute(f_ptr) };
 
         for c in 0..chunks {
-            let start = c * chunk_len;
-            let end = ((c + 1) * chunk_len).min(len);
+            let (start, end) = (bounds[c], bounds[c + 1]);
             let pending = Arc::clone(&pending);
             self.submit(Box::new(move || {
                 f_static(c, start, end);
@@ -167,6 +194,35 @@ impl ThreadPool {
 struct SendPtr<T>(*mut T);
 unsafe impl<T> Sync for SendPtr<T> {}
 unsafe impl<T> Send for SendPtr<T> {}
+
+/// Split `[0, n)` into at most `chunks` contiguous ranges of roughly equal
+/// *weight*, where `prefix` is the weight prefix sum (`prefix[0] = 0`,
+/// `prefix[i]` = total weight of sites `0..i`, so `n = prefix.len() - 1`).
+///
+/// Returns chunk bounds suitable for [`ThreadPool::scope_ranges`]:
+/// non-decreasing, starting at 0, ending at `n`. Each bound is placed
+/// where the running weight reaches an equal share of the weight *still
+/// remaining* (not of the original total), so a single very heavy site
+/// (dense/skewed incidence) takes one chunk while the rest of the sites
+/// still spread evenly over the remaining chunks.
+pub fn balanced_ranges(prefix: &[u64], chunks: usize) -> Vec<usize> {
+    let n = prefix.len().saturating_sub(1);
+    let chunks = chunks.clamp(1, MAX_POOL_SIZE).min(n.max(1));
+    let total = prefix.last().copied().unwrap_or(0);
+    let mut bounds = Vec::with_capacity(chunks + 1);
+    bounds.push(0usize);
+    let mut prev = 0usize;
+    for c in 0..chunks.saturating_sub(1) {
+        let remaining = total - prefix[prev];
+        let target = prefix[prev] + remaining / (chunks - c) as u64;
+        // first index whose cumulative weight reaches the target
+        let idx = prefix.partition_point(|&p| p < target).clamp(prev, n);
+        bounds.push(idx);
+        prev = idx;
+    }
+    bounds.push(n);
+    bounds
+}
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
@@ -251,6 +307,50 @@ mod tests {
             });
         }
         assert_eq!(total.load(Ordering::SeqCst), 50 * 64);
+    }
+
+    #[test]
+    fn scope_ranges_covers_custom_bounds_once() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        // skewed bounds, including an empty chunk
+        pool.scope_ranges(&[0, 90, 90, 95, 100], |_, s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn balanced_ranges_equalizes_weight() {
+        // one very heavy site at the front: uniform chunking would put it
+        // with a quarter of everything else; weighted chunking isolates it
+        let mut weights = vec![1u64; 100];
+        weights[0] = 1000;
+        let mut prefix = vec![0u64];
+        for &w in &weights {
+            prefix.push(prefix.last().unwrap() + w);
+        }
+        let bounds = balanced_ranges(&prefix, 4);
+        assert!(bounds.windows(2).all(|w| w[0] <= w[1]));
+        // the heavy site is isolated AND the light tail still spreads
+        // evenly over the remaining chunks
+        assert_eq!(bounds, vec![0, 1, 34, 67, 100], "got {bounds:?}");
+    }
+
+    #[test]
+    fn balanced_ranges_uniform_weights_match_even_split() {
+        let prefix: Vec<u64> = (0..=100).collect();
+        let bounds = balanced_ranges(&prefix, 4);
+        assert_eq!(bounds, vec![0, 25, 50, 75, 100]);
+    }
+
+    #[test]
+    fn balanced_ranges_degenerate_inputs() {
+        assert_eq!(balanced_ranges(&[0], 4), vec![0, 0]);
+        assert_eq!(balanced_ranges(&[0, 0, 0], 2), vec![0, 0, 2]);
+        assert_eq!(balanced_ranges(&[0, 5], 8), vec![0, 1]);
     }
 
     #[test]

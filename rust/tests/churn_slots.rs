@@ -1,7 +1,12 @@
-//! Property: cycling `remove_factor` → `add_factor` through the dual
-//! model's free slots mid-run restores the incidence lists and
-//! `base_field` to their pre-churn values — the invariant the coordinator
-//! relies on when a churn trace adds back a factor it previously dropped.
+//! Properties of the dual model under slot churn:
+//!
+//! * cycling `remove_factor` → `add_factor` through the free slots
+//!   mid-run restores the incidence lists and `base_field` to their
+//!   pre-churn values — the invariant the coordinator relies on when a
+//!   churn trace adds back a factor it previously dropped;
+//! * the flat CSR-overlay incidence arena stays equal (as a multiset) to
+//!   the nested reference incidence across arbitrary add/remove
+//!   sequences, including across compaction boundaries.
 
 use pdgibbs::duality::DualModel;
 use pdgibbs::graph::{FactorGraph, PairFactor};
@@ -96,6 +101,81 @@ fn prop_churn_slot_reuse_restores_model() {
             if (a - b).abs() > 1e-12 * (1.0 + a.abs()) {
                 return Err(format!("base_field drift at {v}: {a} vs {b}"));
             }
+        }
+        Ok(())
+    });
+}
+
+/// Order-insensitive equality of the CSR-overlay view and the nested
+/// reference incidence, over every variable.
+fn assert_csr_matches_reference(m: &DualModel, ctx: &str) -> Result<(), String> {
+    for v in 0..m.num_vars() {
+        let mut csr = m.incidence_csr_logical(v);
+        let mut nested = m.incidence(v).to_vec();
+        csr.sort_by(|a, b| (a.0, a.1.to_bits()).cmp(&(b.0, b.1.to_bits())));
+        nested.sort_by(|a, b| (a.0, a.1.to_bits()).cmp(&(b.0, b.1.to_bits())));
+        if csr != nested {
+            return Err(format!(
+                "{ctx}: CSR/nested incidence mismatch at var {v}:\n{csr:?}\nvs\n{nested:?}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_csr_overlay_matches_nested_reference_under_churn() {
+    check("CSR overlay equals nested incidence under churn", 15, |gn: &mut Gen| {
+        let n = gn.usize_in(3..=7);
+        let mut g = FactorGraph::new(n);
+        for v in 0..n {
+            g.set_unary(v, gn.f64_in(-1.0, 1.0));
+        }
+        let mut live: Vec<usize> = Vec::new();
+        for _ in 0..gn.usize_in(n..=2 * n) {
+            let v1 = gn.usize_in(0..=n - 1);
+            let mut v2 = gn.usize_in(0..=n - 1);
+            if v1 == v2 {
+                v2 = (v2 + 1) % n;
+            }
+            live.push(g.add_factor(PairFactor::new(v1, v2, gn.positive_table(1.5))));
+        }
+        let mut m = DualModel::from_graph(&g);
+        let epoch0 = m.csr_epoch();
+        assert_csr_matches_reference(&m, "after build")?;
+
+        for step in 0..60 {
+            let do_remove = !live.is_empty() && gn.u64() & 1 == 0;
+            if do_remove {
+                let id = live.swap_remove(gn.usize_in(0..=live.len() - 1));
+                g.remove_factor(id);
+                m.remove(id);
+            } else {
+                let v1 = gn.usize_in(0..=n - 1);
+                let mut v2 = gn.usize_in(0..=n - 1);
+                if v1 == v2 {
+                    v2 = (v2 + 1) % n;
+                }
+                // the graph allocates the slot (reusing its free list);
+                // the model mirrors it — the coordinator's exact flow
+                let id = g.add_factor(PairFactor::new(v1, v2, gn.positive_table(1.5)));
+                m.insert_at(id, g.factor(id).unwrap());
+                live.push(id);
+            }
+            assert_csr_matches_reference(&m, &format!("after step {step}"))?;
+            // hit a compaction boundary deterministically mid-churn
+            // (on top of any automatic threshold-triggered rebuilds)
+            if step == 20 || step == 40 {
+                m.compact_incidence();
+                assert_csr_matches_reference(&m, &format!("after compaction at {step}"))?;
+            }
+        }
+        if m.csr_epoch() < epoch0 + 2 {
+            return Err(format!(
+                "compaction boundaries not exercised: epoch {} -> {}",
+                epoch0,
+                m.csr_epoch()
+            ));
         }
         Ok(())
     });
