@@ -99,7 +99,7 @@ fn main() {
     for op in &trace.ops {
         h.apply(vec![op.clone()]);
     }
-    let stats = h.stats(); // barrier: all ops processed
+    let stats = h.stats().expect("server alive"); // barrier: all ops processed
     let dt = t0.elapsed().as_secs_f64();
     report.push(
         Record::new("coordinator-serving")

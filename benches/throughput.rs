@@ -19,14 +19,23 @@
 //! configuration; the per-chain speedup vs scalar chains (ISSUE 1's ≥ 3×)
 //! is still reported.
 //!
-//! Both modes write the usual `target/bench-reports/throughput*.json` AND
+//! `--mode server` measures the sharded multi-tenant coordinator
+//! (ISSUE 3): 64 tenants × 64 lanes spread over 4 shards, background
+//! fair-share sweeping on, a paced foreground query load on top.
+//! Reported: aggregate background sweeps/s across all tenants and the
+//! request latency distribution (p50/p99).
+//!
+//! All modes write the usual `target/bench-reports/throughput*.json` AND
 //! a tracked file at the repository root so the perf trajectory is
 //! diffable PR over PR: lanes mode owns `BENCH_throughput.json` (the
-//! acceptance record), full mode writes `BENCH_throughput_full.json`.
+//! acceptance record), full mode writes `BENCH_throughput_full.json`,
+//! server mode writes `BENCH_server.json`.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use pdgibbs::bench::{time_fn, Record, Report};
+use pdgibbs::coordinator::{Coordinator, CoordinatorConfig, TenantConfig};
 use pdgibbs::duality::DualModel;
 use pdgibbs::engine::LanePdSampler;
 use pdgibbs::rng::{Pcg64, RngCore};
@@ -39,15 +48,16 @@ fn main() {
     match parse_mode().as_str() {
         "full" => bench_full(),
         "lanes" => bench_lanes(),
+        "server" => bench_server(),
         other => {
-            eprintln!("unknown mode '{other}' (usage: throughput [--mode full|lanes])");
+            eprintln!("unknown mode '{other}' (usage: throughput [--mode full|lanes|server])");
             std::process::exit(2);
         }
     }
 }
 
-/// `--mode <full|lanes>`; unknown arguments (e.g. cargo's own flags) are
-/// ignored so both `cargo bench` and direct invocation work.
+/// `--mode <full|lanes|server>`; unknown arguments (e.g. cargo's own
+/// flags) are ignored so both `cargo bench` and direct invocation work.
 fn parse_mode() -> String {
     let args: Vec<String> = std::env::args().collect();
     for (i, a) in args.iter().enumerate() {
@@ -166,6 +176,101 @@ fn push_lane_metrics(
             .metric("chain_sweeps_per_s", lanes as f64 / per_sweep_s)
             .metric("Msite_updates_per_s", lanes as f64 * n / per_sweep_s / 1e6),
     );
+}
+
+// -- server mode ------------------------------------------------------------
+
+const SERVER_TENANTS: u64 = 64;
+const SERVER_LANES: usize = 64;
+const SERVER_SHARDS: usize = 4;
+
+/// Sorted-sample percentile (nearest-rank).
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((sorted.len() as f64 * p).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+fn bench_server() {
+    let mut report = Report::new("throughput-server");
+    let mut coord = Coordinator::spawn(CoordinatorConfig {
+        shards: SERVER_SHARDS,
+        pool_threads: 0,
+        quantum: 16 * 1024,
+        ..Default::default()
+    });
+    let client = coord.client();
+    // 64 tenants × 64 lanes, each an 8×8 Ising grid (64 vars, 112 factors)
+    for t in 0..SERVER_TENANTS {
+        client
+            .create_tenant(
+                t,
+                workloads::ising_grid(8, 8, 0.3, 0.0),
+                TenantConfig {
+                    chains: SERVER_LANES,
+                    seed: 0xBEEF ^ t,
+                    monitor_vars: Vec::new(),
+                },
+            )
+            .expect("create tenant");
+    }
+    // warm up the background scheduler before measuring
+    std::thread::sleep(Duration::from_millis(200));
+    let sweeps_at = |client: &pdgibbs::coordinator::Client| -> u64 {
+        (0..SERVER_TENANTS)
+            .map(|t| client.stats(t).expect("stats").sweeps_done as u64)
+            .sum()
+    };
+    let before = sweeps_at(&client);
+    let t0 = Instant::now();
+    // paced foreground query load: one marginals query per millisecond,
+    // round-robin over tenants, while the background sweeper runs hot
+    let mut latencies = Vec::new();
+    let mut i = 0u64;
+    while t0.elapsed() < Duration::from_secs(2) {
+        let tenant = i % SERVER_TENANTS;
+        let q0 = Instant::now();
+        let m = client.marginals(tenant).expect("marginals");
+        latencies.push(q0.elapsed().as_secs_f64());
+        assert_eq!(m.len(), 64);
+        i += 1;
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let sweeps = sweeps_at(&client) - before;
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = percentile(&latencies, 0.50);
+    let p99 = percentile(&latencies, 0.99);
+    let agg_sweeps_per_s = sweeps as f64 / elapsed;
+    report.push(
+        Record::new("coordinator-serving")
+            .param("tenants", SERVER_TENANTS)
+            .param("lanes", SERVER_LANES)
+            .param("shards", SERVER_SHARDS)
+            .param("grid", "8x8")
+            .metric("agg_sweeps_per_s", agg_sweeps_per_s)
+            .metric(
+                "agg_chain_sweeps_per_s",
+                agg_sweeps_per_s * SERVER_LANES as f64,
+            )
+            .metric("requests", latencies.len() as f64)
+            .metric("request_p50_ms", p50 * 1e3)
+            .metric("request_p99_ms", p99 * 1e3),
+    );
+    println!(
+        "server mode: {} tenants x {} lanes on {} shards — {agg_sweeps_per_s:.0} aggregate \
+         sweeps/s, request p50 {:.3} ms / p99 {:.3} ms over {} requests",
+        SERVER_TENANTS,
+        SERVER_LANES,
+        SERVER_SHARDS,
+        p50 * 1e3,
+        p99 * 1e3,
+        latencies.len()
+    );
+    coord.shutdown();
+    report.finish_tracked("server", "server");
 }
 
 // -- full mode --------------------------------------------------------------

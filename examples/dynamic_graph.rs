@@ -95,7 +95,7 @@ fn main() {
         h.apply(vec![op.clone()]);
         h.sweep(8);
         if (i + 1) % 100 == 0 {
-            let stats = h.stats();
+            let stats = h.stats().expect("server alive");
             println!(
                 "  after {:>3} ops: {} live factors, {} sweeps served",
                 i + 1,
@@ -108,7 +108,7 @@ fn main() {
     h.sweep(500);
     h.reset_stats();
     h.sweep(30_000);
-    let got = h.marginals();
+    let got = h.marginals().expect("server alive");
     let serve_time = t0.elapsed();
 
     // validate against exact enumeration of the final graph

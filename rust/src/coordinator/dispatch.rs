@@ -11,6 +11,12 @@
 //!
 //! → XLA; otherwise native. Hysteresis (`stability_sweeps`) prevents
 //! flapping when mutations arrive in bursts.
+//!
+//! The policy is wired into the multi-tenant coordinator: every
+//! [`super::tenant::Tenant`] tracks `stable_for` (sweeps since its last
+//! topology mutation, reset by every `Apply`), each shard holds the
+//! policy plus the optional artifact manifest, and the per-tenant
+//! decision is surfaced in [`super::TenantStats::dispatch`].
 
 use crate::runtime::Manifest;
 

@@ -90,6 +90,28 @@ impl PdEnsemble {
         self.engine.model()
     }
 
+    /// Per-sweep cost in site-visits (the scheduler's fair-share unit) —
+    /// delegates to the engine's accounting hook, so it tracks churn.
+    pub fn cost(&self) -> u64 {
+        self.engine.cost()
+    }
+
+    /// Park the ensemble: a suspended tenant keeps its sampler state
+    /// (x/θ words — resuming is free) *and* its marginal sums (so
+    /// [`PdEnsemble::marginals`] keeps answering with the pre-suspension
+    /// estimate instead of silently degrading to all-zeros), but releases
+    /// the per-sweep PSRF trace buffers — the O(sweeps·chains) memory
+    /// that actually grows while a tenant idles. Traces restart empty on
+    /// resume, exactly as after a `reset_stats`.
+    pub fn park(&mut self) {
+        for stat in &mut self.traces {
+            for t in stat.iter_mut() {
+                t.clear();
+                t.shrink_to_fit();
+            }
+        }
+    }
+
     /// One chain's primal state, unpacked to bytes.
     pub fn chain_state(&self, c: usize) -> Vec<u8> {
         self.engine.lane_state(c)

@@ -1,27 +1,678 @@
-//! Layer 3: the coordinator — the deployment story the paper motivates.
+//! Layer 3: the multi-tenant sharded coordinator — the deployment story
+//! the paper motivates, at serving scale.
 //!
-//! A long-lived service holds a *dynamic* MRF: clients stream factor
-//! add/remove operations while simultaneously asking for posterior
-//! summaries. Because the primal–dual sampler needs no graph coloring,
-//! every mutation is O(degree) ([`crate::duality::DualModel`] update) and
-//! sampling never pauses — the contrast measured in `benches/dynamic.rs`
-//! against a chromatic baseline that must repair its coloring.
+//! The paper's dynamic-network argument ("factors are added and removed
+//! on a continuous basis") is strongest in the many-small-models regime:
+//! one server hosting thousands of per-user/per-session MRFs, where
+//! per-tenant coloring maintenance is unmaintainable and the primal–dual
+//! sampler's O(degree) churn shines. This module is that server.
 //!
-//! * [`ensemble`] — [`PdEnsemble`]: N parallel chains over one shared dual
-//!   model, with magnetization + per-variable traces feeding the PSRF
-//!   convergence monitor.
-//! * [`server`] — [`Server`]: request-loop service (std::mpsc; the offline
-//!   environment has no tokio) with a typed client [`Handle`].
-//! * [`dispatch`] — policy choosing between the native sparse sampler
-//!   (mutating topologies) and the XLA artifact path (stable topologies).
-//! * [`metrics`] — counters/timers registry exported as JSON.
+//! ## Architecture
+//!
+//! ```text
+//!                      Coordinator (front-end)
+//!                      │  route(tenant) = splitmix64(id) % S   (pure hash)
+//!        ┌─────────────┼─────────────────┐
+//!        ▼             ▼                 ▼
+//!   Shard 0        Shard 1   …      Shard S-1      (one thread each)
+//!   ┌─────────┐    ┌─────────┐      ┌─────────┐
+//!   │ tenants │    │ tenants │      │ tenants │    registry: TenantId →
+//!   │  A C F  │    │  B D    │      │  E G H  │    FactorGraph+PdEnsemble
+//!   │ DRR sched│   │ DRR sched│     │ DRR sched│   deficit-round-robin
+//!   └────┬────┘    └────┬────┘      └────┬────┘    background sweeping
+//!        └──────────────┴───────┬────────┘
+//!                               ▼
+//!                     shared ThreadPool (lent to whichever
+//!                     tenant sweep is running; no per-shard pools)
+//! ```
+//!
+//! * [`tenant`] — [`Tenant`]: one hosted model (graph + lane-batched
+//!   [`PdEnsemble`] + live-factor list + serving counters). Per-tenant
+//!   RNG streams stay `(sweep, site)`-keyed under the tenant's own seed,
+//!   so trajectories are bit-identical at every shard count and pool
+//!   size.
+//! * [`shard`] — the worker loop: drains one FIFO request queue,
+//!   interleaving foreground requests with background grants from…
+//! * [`schedule`] — [`DrrScheduler`]: deficit round robin weighted by
+//!   per-tenant sweep cost (site-visits, from the CSR incidence totals),
+//!   so a 100k-factor tenant cannot starve a 100-factor one: over full
+//!   ring passes every tenant receives the same cost budget.
+//! * [`dispatch`] — policy choosing native sparse sweeps vs the XLA
+//!   artifact path; fed each tenant's `stable_for` counter and surfaced
+//!   in [`TenantStats::dispatch`].
+//! * [`metrics`] — one shared registry with label-scoped views
+//!   ([`Metrics::scoped`]): per-shard and per-tenant counters in one
+//!   snapshot.
+//! * [`ensemble`] — [`PdEnsemble`]: N chains over one shared dual model
+//!   on the lane engine, with PSRF traces, churn hooks, a `cost()`
+//!   accounting hook and cheap park/suspend.
+//! * [`server`] — the single-tenant compat façade ([`Server`]) over a
+//!   1-shard coordinator, preserving the PR-2 API.
+//!
+//! Tenant lifecycle: `create` / `apply` / `sweep` / `marginals` /
+//! `mixing` / `stats` / `suspend` / `resume` / `drop`. Requests to one
+//! tenant are FIFO (one queue per shard, one consumer); queries return
+//! [`Result`] so a dead shard or unknown tenant degrades into an error
+//! the caller can route around.
 
 pub mod dispatch;
 pub mod ensemble;
 pub mod metrics;
+pub mod schedule;
 pub mod server;
+pub mod shard;
+pub mod tenant;
 
 pub use dispatch::{DispatchDecision, DispatchPolicy};
 pub use ensemble::PdEnsemble;
-pub use metrics::Metrics;
-pub use server::{Handle, Request, Server, ServerConfig, ServerStats};
+pub use metrics::{Metrics, MetricsView};
+pub use schedule::DrrScheduler;
+pub use server::{Handle, Server, ServerConfig, ServerStats};
+pub use shard::ShardStats;
+pub use tenant::{Tenant, TenantConfig, TenantId, TenantStats};
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::diagnostics::MixingResult;
+use crate::graph::FactorGraph;
+use crate::rng::{RngCore, SplitMix64};
+use crate::runtime::Manifest;
+use crate::util::error::Result;
+use crate::util::ThreadPool;
+use crate::workloads::ChurnOp;
+
+use shard::{shard_worker, ShardConfig, ShardRequest};
+
+/// Route a tenant id to its shard: a pure splitmix64 hash of the id.
+/// Stable across processes and independent of tenant creation order, so
+/// a trace replays onto the same placement every time; changing `shards`
+/// changes placement but never per-tenant behavior (each tenant's
+/// trajectory depends only on its own seed).
+pub fn route(tenant: TenantId, shards: usize) -> usize {
+    debug_assert!(shards >= 1);
+    (SplitMix64::new(tenant).next_u64() % shards as u64) as usize
+}
+
+/// Coordinator construction parameters.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Shard worker threads (each owns a disjoint set of tenants).
+    pub shards: usize,
+    /// Workers of the one shared sweep pool lent across all shards
+    /// (0 = sweeps run on the shard threads themselves).
+    pub pool_threads: usize,
+    /// Deficit-round-robin quantum: site-visits granted to each tenant
+    /// per scheduler ring pass. Larger = longer uninterrupted background
+    /// slices (throughput) at the price of request latency. 0 disables
+    /// background sweeping entirely (deterministic request-driven mode).
+    pub quantum: u64,
+    /// Native-vs-XLA dispatch policy (surfaced per tenant in
+    /// [`TenantStats::dispatch`]).
+    pub dispatch: DispatchPolicy,
+    /// Artifact manifest for the dispatch policy (None = native only).
+    pub manifest: Option<Manifest>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            shards: 4,
+            pool_threads: 0,
+            quantum: 8192,
+            dispatch: DispatchPolicy::default(),
+            manifest: None,
+        }
+    }
+}
+
+/// A running multi-tenant coordinator: `S` shard threads behind a pure
+/// hash router, one shared sweep pool, one metrics registry.
+pub struct Coordinator {
+    txs: Vec<Sender<ShardRequest>>,
+    joins: Vec<JoinHandle<()>>,
+    metrics: Metrics,
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl Coordinator {
+    /// Spawn the shard workers (and the shared pool, if configured).
+    pub fn spawn(config: CoordinatorConfig) -> Coordinator {
+        assert!(config.shards >= 1, "at least one shard");
+        let metrics = Metrics::new();
+        let pool = (config.pool_threads > 0).then(|| ThreadPool::shared(config.pool_threads));
+        let mut txs = Vec::with_capacity(config.shards);
+        let mut joins = Vec::with_capacity(config.shards);
+        for shard_id in 0..config.shards {
+            let (tx, rx) = channel();
+            let scfg = ShardConfig {
+                shard_id,
+                quantum: config.quantum,
+                dispatch: config.dispatch.clone(),
+                manifest: config.manifest.clone(),
+            };
+            let m = metrics.clone();
+            let p = pool.clone();
+            joins.push(std::thread::spawn(move || shard_worker(scfg, rx, m, p)));
+            txs.push(tx);
+        }
+        Coordinator {
+            txs,
+            joins,
+            metrics,
+            pool,
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// The shared metrics registry (per-shard and per-tenant scoped keys;
+    /// [`Metrics`] is a cheap-clone handle onto one registry).
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// The shared sweep pool, if one was configured.
+    pub fn pool(&self) -> Option<&Arc<ThreadPool>> {
+        self.pool.as_ref()
+    }
+
+    /// A cheap clonable client handle.
+    pub fn client(&self) -> Client {
+        Client {
+            txs: self.txs.clone(),
+        }
+    }
+
+    /// Graceful shutdown (idempotent): every shard drains its queue up to
+    /// the shutdown marker, then exits.
+    pub fn shutdown(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(ShardRequest::Shutdown);
+        }
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Client handle to a coordinator: routes every call to the owning shard.
+/// Queries return [`Result`]: an unknown tenant or a dead shard is an
+/// error, never a panic.
+#[derive(Clone)]
+pub struct Client {
+    txs: Vec<Sender<ShardRequest>>,
+}
+
+impl Client {
+    fn shard_of(&self, tenant: TenantId) -> usize {
+        route(tenant, self.txs.len())
+    }
+
+    fn send(&self, shard: usize, req: ShardRequest) -> Result<()> {
+        let tx = self
+            .txs
+            .get(shard)
+            .ok_or_else(|| crate::err!("no shard {shard} (coordinator has {})", self.txs.len()))?;
+        tx.send(req)
+            .map_err(|_| crate::err!("shard {shard} is down"))
+    }
+
+    /// Send a query carrying a `Result` reply channel and await it.
+    fn ask<T>(
+        &self,
+        shard: usize,
+        build: impl FnOnce(Sender<Result<T>>) -> ShardRequest,
+    ) -> Result<T> {
+        let (tx, rx) = channel();
+        self.send(shard, build(tx))?;
+        rx.recv()
+            .map_err(|_| crate::err!("shard {shard} dropped before replying"))?
+    }
+
+    /// Host a new tenant; fails if the id is already hosted.
+    pub fn create_tenant(
+        &self,
+        tenant: TenantId,
+        graph: FactorGraph,
+        config: TenantConfig,
+    ) -> Result<()> {
+        self.ask(self.shard_of(tenant), |reply| ShardRequest::Create {
+            tenant,
+            graph,
+            config,
+            reply,
+        })
+    }
+
+    /// Drop a tenant; returns whether it was hosted.
+    pub fn drop_tenant(&self, tenant: TenantId) -> Result<bool> {
+        self.ask(self.shard_of(tenant), |reply| ShardRequest::Drop {
+            tenant,
+            reply,
+        })
+    }
+
+    /// Apply topology mutations (fire-and-forget; FIFO per tenant).
+    pub fn apply(&self, tenant: TenantId, ops: Vec<ChurnOp>) -> Result<()> {
+        self.send(self.shard_of(tenant), ShardRequest::Apply { tenant, ops })
+    }
+
+    /// Run `n` foreground sweeps before later requests are answered.
+    pub fn sweep(&self, tenant: TenantId, n: usize) -> Result<()> {
+        self.send(self.shard_of(tenant), ShardRequest::Sweep { tenant, n })
+    }
+
+    /// Drop accumulated statistics (e.g. after burn-in).
+    pub fn reset_stats(&self, tenant: TenantId) -> Result<()> {
+        self.send(self.shard_of(tenant), ShardRequest::ResetStats { tenant })
+    }
+
+    /// Exclude a tenant from background sweeping (state is kept).
+    pub fn suspend(&self, tenant: TenantId) -> Result<()> {
+        self.send(self.shard_of(tenant), ShardRequest::Suspend { tenant })
+    }
+
+    /// Re-enroll a suspended tenant in background sweeping.
+    pub fn resume(&self, tenant: TenantId) -> Result<()> {
+        self.send(self.shard_of(tenant), ShardRequest::Resume { tenant })
+    }
+
+    /// Posterior marginal estimates.
+    pub fn marginals(&self, tenant: TenantId) -> Result<Vec<f64>> {
+        self.ask(self.shard_of(tenant), |reply| ShardRequest::Marginals {
+            tenant,
+            reply,
+        })
+    }
+
+    /// PSRF mixing diagnosis at `threshold` with checkpoint `stride`.
+    pub fn mixing(&self, tenant: TenantId, threshold: f64, stride: usize) -> Result<MixingResult> {
+        self.ask(self.shard_of(tenant), |reply| ShardRequest::Mixing {
+            tenant,
+            threshold,
+            stride,
+            reply,
+        })
+    }
+
+    /// Tenant serving snapshot (counters + dispatch decision).
+    pub fn stats(&self, tenant: TenantId) -> Result<TenantStats> {
+        self.ask(self.shard_of(tenant), |reply| ShardRequest::Stats {
+            tenant,
+            reply,
+        })
+    }
+
+    /// Aggregate snapshot of one shard (`0..num_shards`).
+    pub fn shard_stats(&self, shard: usize) -> Result<ShardStats> {
+        let (tx, rx) = channel();
+        self.send(shard, ShardRequest::ShardStats { reply: tx })?;
+        rx.recv()
+            .map_err(|_| crate::err!("shard {shard} dropped before replying"))
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.txs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::exact;
+    use crate::workloads::{self, ChurnTrace, TenantTrace, TenantTraceConfig};
+
+    fn tcfg(seed: u64, chains: usize) -> TenantConfig {
+        TenantConfig {
+            chains,
+            seed,
+            monitor_vars: Vec::new(),
+        }
+    }
+
+    /// Drive 16 tenants with interleaved churn on a coordinator of the
+    /// given shape; background sweeping is off so the trajectory is a
+    /// pure function of the request stream. Returns per-tenant marginals.
+    fn run_configuration(shards: usize, pool_threads: usize) -> Vec<Vec<f64>> {
+        const TENANTS: u64 = 16;
+        let mut coord = Coordinator::spawn(CoordinatorConfig {
+            shards,
+            pool_threads,
+            quantum: 0,
+            ..Default::default()
+        });
+        let client = coord.client();
+        let traces: Vec<ChurnTrace> = (0..TENANTS)
+            .map(|t| ChurnTrace::generate(6, 7, 24, 0.6, 100 + t))
+            .collect();
+        for t in 0..TENANTS {
+            client
+                .create_tenant(t, FactorGraph::new(6), tcfg(1000 + t, 8))
+                .unwrap();
+        }
+        // interleaved churn: every tenant alternates apply/sweep rounds
+        for round in 0..3 {
+            for t in 0..TENANTS {
+                let ops = traces[t as usize].ops[round * 8..(round + 1) * 8].to_vec();
+                client.apply(t, ops).unwrap();
+                client.sweep(t, 50).unwrap();
+            }
+        }
+        // settle: burn in, reset, accumulate statistics
+        for t in 0..TENANTS {
+            client.sweep(t, 300).unwrap();
+            client.reset_stats(t).unwrap();
+            client.sweep(t, 5000).unwrap();
+        }
+        let out = (0..TENANTS)
+            .map(|t| client.marginals(t).unwrap())
+            .collect();
+        coord.shutdown();
+        out
+    }
+
+    #[test]
+    fn multi_tenant_deterministic_across_shards_and_pools() {
+        // acceptance: 16 tenants with interleaved churn produce marginals
+        // (a) within 0.02 of exact enumeration per tenant and (b)
+        // bit-identical across shard counts {1, 4} and pool sizes {0, 4}
+        let reference = run_configuration(1, 0);
+        for &(shards, pool) in &[(4usize, 0usize), (1, 4), (4, 4)] {
+            let got = run_configuration(shards, pool);
+            assert_eq!(
+                got, reference,
+                "trajectories diverged at shards={shards} pool={pool}"
+            );
+        }
+        for (t, marginals) in reference.iter().enumerate() {
+            let trace = ChurnTrace::generate(6, 7, 24, 0.6, 100 + t as u64);
+            let (g, _) = trace.materialize();
+            let want = exact::enumerate(&g).marginals;
+            for v in 0..6 {
+                assert!(
+                    (marginals[v] - want[v]).abs() < 0.02,
+                    "tenant {t} v={v}: {} vs exact {}",
+                    marginals[v],
+                    want[v]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fair_share_background_sweeping_under_50x_size_skew() {
+        // acceptance: with a ~60x-larger neighbor running hot, the small
+        // tenant's background sweep count stays within 2x of its fair
+        // share (equal cost budget per tenant per DRR ring pass)
+        let mut coord = Coordinator::spawn(CoordinatorConfig {
+            shards: 1,
+            pool_threads: 0,
+            quantum: 8192,
+            ..Default::default()
+        });
+        let client = coord.client();
+        client
+            .create_tenant(1, workloads::ising_grid(3, 3, 0.25, 0.0), tcfg(11, 4))
+            .unwrap();
+        client
+            .create_tenant(2, workloads::ising_grid(20, 20, 0.25, 0.0), tcfg(22, 4))
+            .unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        let s1 = client.stats(1).unwrap();
+        let s2 = client.stats(2).unwrap();
+        coord.shutdown();
+        assert!(s2.cost > 50 * s1.cost, "size skew: {} vs {}", s2.cost, s1.cost);
+        assert!(s1.background_sweeps > 0, "small tenant starved");
+        assert!(s2.background_sweeps > 0, "big tenant starved");
+        let work1 = s1.background_sweeps * s1.cost;
+        let work2 = s2.background_sweeps * s2.cost;
+        let ratio = work1 as f64 / work2 as f64;
+        assert!(
+            (0.5..=2.0).contains(&ratio),
+            "fair share violated: small {} sweeps x {} = {work1}, \
+             big {} sweeps x {} = {work2} (ratio {ratio:.2})",
+            s1.background_sweeps,
+            s1.cost,
+            s2.background_sweeps,
+            s2.cost
+        );
+        // in sweep counts, the small tenant must far out-sweep the big one
+        assert!(s1.background_sweeps > 10 * s2.background_sweeps);
+    }
+
+    #[test]
+    fn routing_is_pure_and_covers_all_shards() {
+        for id in 0..64u64 {
+            assert_eq!(route(id, 4), route(id, 4));
+            assert!(route(id, 4) < 4);
+        }
+        let mut seen = [false; 4];
+        for id in 0..64u64 {
+            seen[route(id, 4)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "64 tenants must hit all 4 shards");
+        // and shard registries agree with the router
+        let mut coord = Coordinator::spawn(CoordinatorConfig {
+            shards: 4,
+            quantum: 0,
+            ..Default::default()
+        });
+        let client = coord.client();
+        for id in 0..32u64 {
+            client
+                .create_tenant(id, FactorGraph::new(2), tcfg(id, 2))
+                .unwrap();
+        }
+        let mut per_shard = [0usize; 4];
+        for id in 0..32u64 {
+            per_shard[route(id, 4)] += 1;
+        }
+        for shard in 0..4 {
+            let stats = client.shard_stats(shard).unwrap();
+            assert_eq!(stats.tenants, per_shard[shard], "shard {shard}");
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn unknown_tenant_and_dead_shard_degrade_to_errors() {
+        let mut coord = Coordinator::spawn(CoordinatorConfig {
+            shards: 2,
+            quantum: 0,
+            ..Default::default()
+        });
+        let client = coord.client();
+        client
+            .create_tenant(3, FactorGraph::new(2), tcfg(3, 2))
+            .unwrap();
+        // duplicate create fails, unknown tenant queries fail
+        assert!(client.create_tenant(3, FactorGraph::new(2), tcfg(3, 2)).is_err());
+        assert!(client.marginals(999).is_err());
+        assert!(client.stats(999).is_err());
+        // an out-of-range shard index is an error, not an index panic
+        assert!(client.shard_stats(99).is_err());
+        // a zero PSRF stride is clamped, not a shard-killing div-by-zero
+        client.sweep(3, 10).unwrap();
+        let _ = client.mixing(3, 1.05, 0).unwrap();
+        assert!(client.stats(3).is_ok(), "shard survived the zero stride");
+        assert!(!client.drop_tenant(998).unwrap());
+        assert!(client.drop_tenant(3).unwrap());
+        // after shutdown every call degrades into an error, never a panic
+        coord.shutdown();
+        assert!(client.marginals(3).is_err());
+        assert!(client.stats(3).is_err());
+        assert!(client.apply(3, Vec::new()).is_err());
+        assert!(client.sweep(3, 1).is_err());
+        assert!(client.shard_stats(0).is_err());
+    }
+
+    #[test]
+    fn malformed_ops_do_not_kill_the_shard_and_drop_reclaims_metrics() {
+        let mut coord = Coordinator::spawn(CoordinatorConfig {
+            shards: 1,
+            quantum: 0,
+            ..Default::default()
+        });
+        let client = coord.client();
+        client
+            .create_tenant(1, FactorGraph::new(3), tcfg(1, 2))
+            .unwrap();
+        // an out-of-bounds RemoveLive must degrade, not panic the shard
+        client
+            .apply(1, vec![ChurnOp::RemoveLive { index: 42 }])
+            .unwrap();
+        let s = client.stats(1).unwrap();
+        assert_eq!(s.ops_applied, 0, "invalid op must be skipped");
+        assert_eq!(coord.metrics().counter("tenant1.invalid_ops"), 1);
+        // dropping the tenant reclaims its scoped metrics keys
+        assert!(client.drop_tenant(1).unwrap());
+        let snap = coord.metrics().snapshot().dump();
+        assert!(!snap.contains("tenant1."), "scope leaked: {snap}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn dispatch_decision_surfaces_in_tenant_stats() {
+        // satellite: DispatchPolicy is finally wired in — stable_for is
+        // tracked per tenant and the decision is visible in stats
+        let manifest = Manifest::parse(
+            r#"{"artifacts": [
+                {"name": "g9", "file": "x", "n": 9, "f": 12,
+                 "chains": 8, "sweeps": 8, "n_pad": 16, "f_pad": 32}
+            ]}"#,
+        )
+        .unwrap();
+        let mut coord = Coordinator::spawn(CoordinatorConfig {
+            shards: 1,
+            quantum: 0,
+            manifest: Some(manifest),
+            ..Default::default()
+        });
+        let client = coord.client();
+        client
+            .create_tenant(0, workloads::ising_grid(3, 3, 0.2, 0.0), tcfg(5, 4))
+            .unwrap();
+        let s = client.stats(0).unwrap();
+        assert_eq!(s.stable_for, 0);
+        assert_eq!(s.dispatch, DispatchDecision::Native, "unstable: native");
+        client.sweep(0, 100).unwrap();
+        let s = client.stats(0).unwrap();
+        assert_eq!(s.stable_for, 100);
+        assert_eq!(
+            s.dispatch,
+            DispatchDecision::Xla("g9".into()),
+            "stable + fitting: artifact path"
+        );
+        client
+            .apply(0, vec![ChurnOp::Add { v1: 0, v2: 4, beta: 0.2 }])
+            .unwrap();
+        let s = client.stats(0).unwrap();
+        assert_eq!(s.stable_for, 0, "churn resets stability");
+        assert_eq!(s.dispatch, DispatchDecision::Native);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn suspend_resume_and_drop_lifecycle() {
+        let mut coord = Coordinator::spawn(CoordinatorConfig {
+            shards: 2,
+            quantum: 4096,
+            ..Default::default()
+        });
+        let client = coord.client();
+        client
+            .create_tenant(0, workloads::ising_grid(2, 2, 0.2, 0.0), tcfg(1, 2))
+            .unwrap();
+        client.suspend(0).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let s = client.stats(0).unwrap();
+        assert!(s.suspended);
+        let frozen = s.background_sweeps;
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let s = client.stats(0).unwrap();
+        assert_eq!(
+            s.background_sweeps, frozen,
+            "suspended tenant must not be background-swept"
+        );
+        client.resume(0).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        let s = client.stats(0).unwrap();
+        assert!(s.background_sweeps > frozen, "resume re-enrolls in DRR");
+        assert!(client.drop_tenant(0).unwrap());
+        assert!(client.marginals(0).is_err(), "dropped tenant is gone");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn multi_tenant_soak_churn_on_threaded_pool() {
+        // soak: replay a seeded arrival/departure trace with per-tenant
+        // churn on 4 shards sharing one 4-worker pool, background on.
+        // Exercises create/drop/apply/sweep/marginals/stats concurrency;
+        // asserts the coordinator stays consistent and every surviving
+        // tenant still answers.
+        let mut coord = Coordinator::spawn(CoordinatorConfig {
+            shards: 4,
+            pool_threads: 4,
+            quantum: 2048,
+            ..Default::default()
+        });
+        let client = coord.client();
+        let trace = TenantTrace::generate(
+            TenantTraceConfig {
+                max_tenants: 12,
+                steps: 160,
+                vars: (4, 9),
+                target_factors: 8,
+                ops_per_apply: 3,
+                sweeps_per_step: 4,
+                beta_max: 0.5,
+            },
+            0xD15EA5E,
+        );
+        let mut live = Vec::new();
+        for event in &trace.events {
+            use workloads::TenantEvent::*;
+            match event {
+                Create { tenant, vars, seed } => {
+                    client
+                        .create_tenant(*tenant, FactorGraph::new(*vars), tcfg(*seed, 4))
+                        .unwrap();
+                    live.push(*tenant);
+                }
+                Apply { tenant, ops } => client.apply(*tenant, ops.clone()).unwrap(),
+                Sweep { tenant, n } => client.sweep(*tenant, *n).unwrap(),
+                Drop { tenant } => {
+                    assert!(client.drop_tenant(*tenant).unwrap());
+                    live.retain(|t| t != tenant);
+                }
+            }
+        }
+        assert!(!live.is_empty(), "trace must leave survivors");
+        let mut total_tenants = 0;
+        for shard in 0..4 {
+            total_tenants += client.shard_stats(shard).unwrap().tenants;
+        }
+        assert_eq!(total_tenants, live.len());
+        for &t in &live {
+            let stats = client.stats(t).unwrap();
+            let m = client.marginals(t).unwrap();
+            assert_eq!(m.len(), stats.num_vars);
+            assert!(m.iter().all(|p| (0.0..=1.0).contains(p)), "tenant {t}");
+        }
+        // metrics landed under scoped keys for shards and tenants
+        let snap = coord.metrics().snapshot().dump();
+        assert!(snap.contains("shard0."), "per-shard scope missing: {snap}");
+        assert!(snap.contains("tenant"), "per-tenant scope missing");
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,225 @@
+//! Deficit-round-robin background scheduler for multi-tenant shards.
+//!
+//! Between foreground requests a shard keeps sweeping its tenants — the
+//! "sampling never stops" serving story — but tenants differ in size by
+//! orders of magnitude, and one sweep of a 100k-factor tenant costs what
+//! thousands of sweeps of a 100-factor tenant cost. Round-robin over
+//! *sweeps* would hand the big tenant almost all the CPU; round-robin
+//! over *tenants* with one sweep each would starve it instead. Classic
+//! deficit round robin solves both: each tenant accrues `quantum` cost
+//! credit per ring pass, a sweep debits the tenant's current per-sweep
+//! cost ([`crate::duality::DualModel::sweep_cost`] site-visits), and
+//! unspent credit carries as a *deficit* so even a tenant whose single
+//! sweep exceeds the quantum makes progress every few passes.
+//!
+//! Over any window of full ring passes every enrolled tenant therefore
+//! receives the same total cost budget (±1 sweep), which is the
+//! fair-share guarantee the acceptance test asserts: a small tenant's
+//! background sweep *count* is `cost_big / cost_small` times the big
+//! tenant's, never starved below its share because a neighbor is huge.
+//!
+//! The scheduler is deliberately not wall-clock based: it is driven by
+//! the shard loop calling [`DrrScheduler::next_slice`] whenever the
+//! request queue is empty, so its decisions are a pure function of the
+//! enroll/withdraw/cost history — deterministic and unit-testable.
+
+use std::collections::{HashMap, VecDeque};
+
+use super::tenant::TenantId;
+
+/// One background grant: run `sweeps` sweeps of `tenant`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Slice {
+    pub tenant: TenantId,
+    pub sweeps: usize,
+}
+
+/// Deficit-round-robin scheduler over enrolled tenants (see module docs).
+pub struct DrrScheduler {
+    /// Cost credit granted to each tenant per full ring pass.
+    quantum: u64,
+    /// Ring of enrolled tenants; front = next to serve.
+    ring: VecDeque<TenantId>,
+    /// Unspent credit per enrolled tenant.
+    deficit: HashMap<TenantId, u64>,
+}
+
+impl DrrScheduler {
+    /// `quantum` is the per-tenant cost budget per ring pass, in the same
+    /// site-visit units as the cost callback. Larger quanta mean longer
+    /// uninterrupted slices (better throughput, worse request latency).
+    pub fn new(quantum: u64) -> Self {
+        Self {
+            quantum: quantum.max(1),
+            ring: VecDeque::new(),
+            deficit: HashMap::new(),
+        }
+    }
+
+    pub fn quantum(&self) -> u64 {
+        self.quantum
+    }
+
+    /// Number of enrolled tenants.
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Add a tenant to the ring (no-op if already enrolled). New tenants
+    /// start with zero deficit: they receive their first credit when the
+    /// ring reaches them, so a join/leave cycle cannot farm credit.
+    pub fn enroll(&mut self, id: TenantId) {
+        if !self.deficit.contains_key(&id) {
+            self.deficit.insert(id, 0);
+            self.ring.push_back(id);
+        }
+    }
+
+    /// Remove a tenant (dropped or suspended); its unspent deficit is
+    /// forfeited. No-op if not enrolled.
+    pub fn withdraw(&mut self, id: TenantId) {
+        if self.deficit.remove(&id).is_some() {
+            self.ring.retain(|&t| t != id);
+        }
+    }
+
+    /// Grant the next background slice. `cost` maps a tenant to its
+    /// current per-sweep cost (≥ 1 enforced here).
+    ///
+    /// Visits tenants in ring order, crediting each `quantum` as it comes
+    /// to the front; the first tenant whose deficit covers at least one
+    /// sweep is granted `deficit / cost` sweeps and debited. At most one
+    /// full ring pass is scanned per call, so a call is O(tenants) worst
+    /// case and usually O(1); `None` means every tenant is still
+    /// accumulating credit toward a sweep more expensive than the quantum
+    /// — calling again continues to accrue, so progress is guaranteed
+    /// within `ceil(max_cost / quantum)` calls.
+    pub fn next_slice(&mut self, mut cost: impl FnMut(TenantId) -> u64) -> Option<Slice> {
+        for _ in 0..self.ring.len() {
+            let id = self.ring.pop_front().expect("ring non-empty in loop");
+            self.ring.push_back(id);
+            let d = self.deficit.get_mut(&id).expect("enrolled tenant has deficit");
+            *d += self.quantum;
+            let c = cost(id).max(1);
+            let sweeps = (*d / c) as usize;
+            if sweeps > 0 {
+                *d -= sweeps as u64 * c;
+                return Some(Slice { tenant: id, sweeps });
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Run `calls` grant attempts against fixed per-tenant costs,
+    /// returning total sweeps granted per tenant.
+    fn run(
+        sched: &mut DrrScheduler,
+        costs: &HashMap<TenantId, u64>,
+        calls: usize,
+    ) -> HashMap<TenantId, u64> {
+        let mut sweeps: HashMap<TenantId, u64> = HashMap::new();
+        for _ in 0..calls {
+            if let Some(s) = sched.next_slice(|id| costs[&id]) {
+                *sweeps.entry(s.tenant).or_insert(0) += s.sweeps as u64;
+            }
+        }
+        sweeps
+    }
+
+    #[test]
+    fn equal_costs_get_equal_sweeps() {
+        let mut sched = DrrScheduler::new(100);
+        let costs: HashMap<TenantId, u64> = (0..4).map(|t| (t, 10)).collect();
+        for t in 0..4 {
+            sched.enroll(t);
+        }
+        let sweeps = run(&mut sched, &costs, 40);
+        for t in 0..4 {
+            assert_eq!(sweeps[&t], 100, "tenant {t}: {sweeps:?}");
+        }
+    }
+
+    #[test]
+    fn fair_share_by_cost_with_50x_size_ratio() {
+        // the acceptance scenario in miniature: tenant 0 is tiny (cost 45),
+        // tenant 1 is ~50x larger (cost 2250). Over full rounds both must
+        // receive the same *cost* budget, so the small tenant's sweep
+        // count must sit near (cost_big / cost_small) x the big one's.
+        let mut sched = DrrScheduler::new(4500);
+        let costs: HashMap<TenantId, u64> = [(0, 45u64), (1, 2250u64)].into();
+        sched.enroll(0);
+        sched.enroll(1);
+        let sweeps = run(&mut sched, &costs, 200);
+        let (small, big) = (sweeps[&0], sweeps[&1]);
+        let small_work = small * 45;
+        let big_work = big * 2250;
+        let ratio = small_work as f64 / big_work as f64;
+        assert!(
+            (0.9..=1.1).contains(&ratio),
+            "cost budgets diverged: small {small} sweeps ({small_work}), \
+             big {big} sweeps ({big_work})"
+        );
+        // and in sweep counts the small tenant gets ~50x more
+        assert!(small > 40 * big, "small={small} big={big}");
+    }
+
+    #[test]
+    fn expensive_tenant_accumulates_across_passes() {
+        // cost 250 with quantum 100: a sweep is granted every 3rd credit
+        let mut sched = DrrScheduler::new(100);
+        sched.enroll(7);
+        let mut granted = Vec::new();
+        for _ in 0..9 {
+            if let Some(s) = sched.next_slice(|_| 250) {
+                granted.push(s.sweeps);
+            }
+        }
+        // 9 credits of 100 = 900 cost units = 3 sweeps of 250, in bursts
+        assert_eq!(granted.iter().sum::<usize>(), 3, "granted={granted:?}");
+    }
+
+    #[test]
+    fn withdraw_forfeits_deficit_and_enroll_is_idempotent() {
+        let mut sched = DrrScheduler::new(10);
+        sched.enroll(1);
+        sched.enroll(1);
+        assert_eq!(sched.len(), 1);
+        // accumulate some credit without spending (cost > quantum)
+        assert_eq!(sched.next_slice(|_| 1000), None);
+        sched.withdraw(1);
+        assert!(sched.is_empty());
+        sched.withdraw(1); // no-op
+        sched.enroll(1);
+        // deficit restarted from zero: still can't afford a 1000-sweep
+        assert_eq!(sched.next_slice(|_| 1000), None);
+    }
+
+    #[test]
+    fn churned_cost_is_recharged_at_grant_time() {
+        // the cost callback is consulted on every grant, so a tenant that
+        // grew mid-run is charged its new price immediately
+        let mut sched = DrrScheduler::new(100);
+        sched.enroll(0);
+        let s = sched.next_slice(|_| 10).unwrap();
+        assert_eq!(s.sweeps, 10);
+        let s = sched.next_slice(|_| 50).unwrap();
+        assert_eq!(s.sweeps, 2);
+    }
+
+    #[test]
+    fn zero_cost_is_clamped() {
+        let mut sched = DrrScheduler::new(5);
+        sched.enroll(0);
+        let s = sched.next_slice(|_| 0).unwrap();
+        assert_eq!(s.sweeps, 5, "cost clamps to 1, not a division by zero");
+    }
+}

@@ -1,32 +1,46 @@
-//! The request-loop server: dynamic MRF hosting as a service.
+//! Single-tenant compat façade over the sharded coordinator.
 //!
-//! One worker thread owns the graph + ensemble and drains a request
-//! channel; callers hold a cheap [`Handle`] (clonable sender + typed
-//! reply channels). Between requests the server keeps sweeping in
-//! `background_sweeps`-sized slices so inference continuously refines —
-//! the "sampling never stops while the topology churns" deployment the
-//! paper argues for. (std::mpsc everywhere: tokio is unavailable offline.)
-
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
-use std::thread::JoinHandle;
+//! [`Server`] is the PR-2 API — one dynamic MRF behind a request loop —
+//! now implemented as a 1-shard [`Coordinator`] hosting exactly one
+//! tenant (id 0). Existing callers keep their `spawn/handle/shutdown`
+//! shape; new code should talk to [`Coordinator`]/[`Client`] directly
+//! and host many tenants per process.
+//!
+//! Differences from the pre-refactor server, on purpose:
+//!
+//! * [`Handle::marginals`]/[`Handle::mixing`]/[`Handle::stats`] return
+//!   [`Result`] instead of panicking with `expect("server dropped")` —
+//!   a dead shard degrades into an error the caller can route around.
+//! * [`replay_trace`] returns the final marginals, as its doc always
+//!   claimed.
+//! * The `ops` metrics counter increments by the batch size per `Apply`
+//!   (it used to re-add the cumulative total every batch, inflating the
+//!   counter quadratically).
 
 use crate::diagnostics::MixingResult;
-use crate::graph::{FactorGraph, FactorId, PairFactor};
-use crate::util::ThreadPool;
+use crate::graph::FactorGraph;
+use crate::util::error::Result;
 use crate::workloads::{ChurnOp, ChurnTrace};
 
-use super::ensemble::PdEnsemble;
+use super::dispatch::DispatchPolicy;
 use super::metrics::Metrics;
+use super::tenant::TenantConfig;
+use super::{Client, Coordinator, CoordinatorConfig};
 
-/// Server construction parameters.
+/// The façade's single tenant id (scope key `tenant0` in the metrics).
+const TENANT: u64 = 0;
+
+/// Server construction parameters (compat shape).
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub chains: usize,
     pub seed: u64,
-    /// Sweeps executed per idle slice between request polls.
+    /// Target sweeps per idle background slice (0 disables background
+    /// sweeping). Internally mapped to a DRR quantum at the spawn-time
+    /// model cost, so a heavily churned tenant's slices shrink in sweep
+    /// count but stay constant in work.
     pub background_sweeps: usize,
-    /// Worker threads for chain-parallel sweeps (0 = no pool).
+    /// Worker threads for sweep parallelism (0 = no pool).
     pub pool_threads: usize,
     /// Variables to monitor for PSRF (empty = magnetization only).
     pub monitor_vars: Vec<usize>,
@@ -44,28 +58,8 @@ impl Default for ServerConfig {
     }
 }
 
-/// Requests accepted by the server.
-pub enum Request {
-    /// Apply topology mutations (resets statistics: the target changed).
-    Apply(Vec<ChurnOp>),
-    /// Run exactly `n` foreground sweeps before answering anything else.
-    Sweep(usize),
-    /// Drop accumulated statistics (e.g. after burn-in).
-    ResetStats,
-    /// Posterior marginal estimates.
-    Marginals(Sender<Vec<f64>>),
-    /// PSRF mixing diagnosis at `threshold` with checkpoint `stride`.
-    Mixing {
-        threshold: f64,
-        stride: usize,
-        reply: Sender<MixingResult>,
-    },
-    /// Server counters.
-    Stats(Sender<ServerStats>),
-    Shutdown,
-}
-
-/// Snapshot of server state.
+/// Snapshot of server state (compat shape; see
+/// [`super::TenantStats`] for the richer multi-tenant form).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServerStats {
     pub num_vars: usize,
@@ -78,62 +72,91 @@ pub struct ServerStats {
 /// Client handle to a running server.
 #[derive(Clone)]
 pub struct Handle {
-    tx: Sender<Request>,
+    client: Client,
 }
 
 impl Handle {
+    /// Apply topology mutations (fire-and-forget, FIFO with later calls).
     pub fn apply(&self, ops: Vec<ChurnOp>) {
-        let _ = self.tx.send(Request::Apply(ops));
+        let _ = self.client.apply(TENANT, ops);
     }
 
+    /// Run exactly `n` foreground sweeps before answering anything else.
     pub fn sweep(&self, n: usize) {
-        let _ = self.tx.send(Request::Sweep(n));
+        let _ = self.client.sweep(TENANT, n);
     }
 
+    /// Drop accumulated statistics (e.g. after burn-in).
     pub fn reset_stats(&self) {
-        let _ = self.tx.send(Request::ResetStats);
+        let _ = self.client.reset_stats(TENANT);
     }
 
-    pub fn marginals(&self) -> Vec<f64> {
-        let (tx, rx) = channel();
-        let _ = self.tx.send(Request::Marginals(tx));
-        rx.recv().expect("server dropped")
+    /// Posterior marginal estimates; `Err` if the server is gone.
+    pub fn marginals(&self) -> Result<Vec<f64>> {
+        self.client.marginals(TENANT)
     }
 
-    pub fn mixing(&self, threshold: f64, stride: usize) -> MixingResult {
-        let (tx, rx) = channel();
-        let _ = self.tx.send(Request::Mixing {
-            threshold,
-            stride,
-            reply: tx,
-        });
-        rx.recv().expect("server dropped")
+    /// PSRF mixing diagnosis; `Err` if the server is gone.
+    pub fn mixing(&self, threshold: f64, stride: usize) -> Result<MixingResult> {
+        self.client.mixing(TENANT, threshold, stride)
     }
 
-    pub fn stats(&self) -> ServerStats {
-        let (tx, rx) = channel();
-        let _ = self.tx.send(Request::Stats(tx));
-        rx.recv().expect("server dropped")
+    /// Server counters; `Err` if the server is gone.
+    pub fn stats(&self) -> Result<ServerStats> {
+        let t = self.client.stats(TENANT)?;
+        Ok(ServerStats {
+            num_vars: t.num_vars,
+            num_factors: t.num_factors,
+            sweeps_done: t.sweeps_done,
+            ops_applied: t.ops_applied,
+            graph_version: t.graph_version,
+        })
     }
 }
 
-/// A running dynamic-MRF server.
+/// A running single-model server (compat façade; see module docs).
 pub struct Server {
+    coord: Coordinator,
     handle: Handle,
-    join: Option<JoinHandle<()>>,
-    pub metrics: Arc<Metrics>,
+    /// Cheap-clone handle onto the coordinator's metrics registry.
+    pub metrics: Metrics,
 }
 
 impl Server {
-    /// Spawn the worker thread owning `graph`.
+    /// Spawn a 1-shard coordinator hosting `graph` as its only tenant.
     pub fn spawn(graph: FactorGraph, config: ServerConfig) -> Server {
-        let (tx, rx) = channel();
-        let metrics = Arc::new(Metrics::new());
-        let m2 = Arc::clone(&metrics);
-        let join = std::thread::spawn(move || worker(graph, config, rx, m2));
+        let quantum = if config.background_sweeps == 0 {
+            0
+        } else {
+            // background_sweeps sweeps per slice at the spawn-time cost —
+            // priced by the same accounting the scheduler debits, so the
+            // mapping cannot drift from DualModel::sweep_cost
+            let per_sweep = crate::duality::DualModel::from_graph(&graph).sweep_cost().max(1);
+            config.background_sweeps as u64 * per_sweep
+        };
+        let coord = Coordinator::spawn(CoordinatorConfig {
+            shards: 1,
+            pool_threads: config.pool_threads,
+            quantum,
+            dispatch: DispatchPolicy::default(),
+            manifest: None,
+        });
+        let client = coord.client();
+        let metrics = coord.metrics().clone();
+        client
+            .create_tenant(
+                TENANT,
+                graph,
+                TenantConfig {
+                    chains: config.chains,
+                    seed: config.seed,
+                    monitor_vars: config.monitor_vars.clone(),
+                },
+            )
+            .expect("freshly spawned shard hosts the façade tenant");
         Server {
-            handle: Handle { tx },
-            join: Some(join),
+            coord,
+            handle: Handle { client },
             metrics,
         }
     }
@@ -142,123 +165,28 @@ impl Server {
         self.handle.clone()
     }
 
-    /// Graceful shutdown (idempotent).
+    /// Graceful shutdown (idempotent; also runs on drop).
     pub fn shutdown(&mut self) {
-        let _ = self.handle.tx.send(Request::Shutdown);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-    }
-}
-
-impl Drop for Server {
-    fn drop(&mut self) {
-        self.shutdown();
-    }
-}
-
-fn worker(
-    mut graph: FactorGraph,
-    config: ServerConfig,
-    rx: Receiver<Request>,
-    metrics: Arc<Metrics>,
-) {
-    let mut ensemble = PdEnsemble::new(&graph, config.chains, config.seed);
-    if config.pool_threads > 0 {
-        ensemble = ensemble.with_pool(Arc::new(ThreadPool::new(config.pool_threads)));
-    }
-    if !config.monitor_vars.is_empty() {
-        ensemble.monitor_vars(config.monitor_vars.clone());
-    }
-    ensemble.init_overdispersed();
-    let mut live: Vec<FactorId> = graph.factors().map(|(id, _)| id).collect();
-    let mut ops_applied = 0u64;
-
-    loop {
-        // drain all pending requests, then do a background slice
-        let req = match rx.try_recv() {
-            Ok(r) => Some(r),
-            Err(std::sync::mpsc::TryRecvError::Empty) => None,
-            Err(std::sync::mpsc::TryRecvError::Disconnected) => return,
-        };
-        match req {
-            Some(Request::Apply(ops)) => {
-                metrics.time("apply", || {
-                    for op in &ops {
-                        apply_op(&mut graph, &mut ensemble, &mut live, op);
-                        ops_applied += 1;
-                    }
-                });
-                metrics.add("ops", ops_applied);
-                // the target distribution changed; stale stats are biased
-                ensemble.reset_stats();
-            }
-            Some(Request::Sweep(n)) => {
-                metrics.time("sweep", || ensemble.run(n));
-            }
-            Some(Request::ResetStats) => ensemble.reset_stats(),
-            Some(Request::Marginals(reply)) => {
-                let _ = reply.send(ensemble.marginals());
-            }
-            Some(Request::Mixing {
-                threshold,
-                stride,
-                reply,
-            }) => {
-                let _ = reply.send(ensemble.mixing(threshold, stride));
-            }
-            Some(Request::Stats(reply)) => {
-                let _ = reply.send(ServerStats {
-                    num_vars: graph.num_vars(),
-                    num_factors: graph.num_factors(),
-                    sweeps_done: ensemble.sweeps_done(),
-                    ops_applied,
-                    graph_version: graph.version(),
-                });
-            }
-            Some(Request::Shutdown) => return,
-            None => {
-                // idle: keep sampling
-                metrics.time("background", || ensemble.run(config.background_sweeps));
-                metrics.add("background_sweeps", config.background_sweeps as u64);
-            }
-        }
-    }
-}
-
-fn apply_op(
-    graph: &mut FactorGraph,
-    ensemble: &mut PdEnsemble,
-    live: &mut Vec<FactorId>,
-    op: &ChurnOp,
-) {
-    match *op {
-        ChurnOp::Add { v1, v2, beta } => {
-            let f = PairFactor::ising(v1, v2, beta);
-            let id = graph.add_factor(f);
-            ensemble.add_factor(id, graph.factor(id).unwrap());
-            live.push(id);
-        }
-        ChurnOp::RemoveLive { index } => {
-            let id = live.swap_remove(index);
-            graph.remove_factor(id).expect("live desync");
-            ensemble.remove_factor(id);
-        }
+        self.coord.shutdown();
     }
 }
 
 /// Replay a churn trace against a server, sweeping between ops; returns
-/// final marginals (used by the dynamic example + bench).
-pub fn replay_trace(handle: &Handle, trace: &ChurnTrace, sweeps_per_op: usize) {
+/// the final marginals (used by the dynamic example + bench). If the
+/// server dies mid-replay the result is empty — query [`Handle::stats`]
+/// for the error.
+pub fn replay_trace(handle: &Handle, trace: &ChurnTrace, sweeps_per_op: usize) -> Vec<f64> {
     for op in &trace.ops {
         handle.apply(vec![op.clone()]);
         handle.sweep(sweeps_per_op);
     }
+    handle.marginals().unwrap_or_default()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::PairFactor;
     use crate::inference::exact;
     use crate::workloads;
 
@@ -277,7 +205,7 @@ mod tests {
         h.sweep(300);
         h.reset_stats();
         h.sweep(12_000);
-        let got = h.marginals();
+        let got = h.marginals().unwrap();
         let want = exact::enumerate(&g).marginals;
         for v in 0..9 {
             assert!(
@@ -287,7 +215,7 @@ mod tests {
                 want[v]
             );
         }
-        let stats = h.stats();
+        let stats = h.stats().unwrap();
         assert!(stats.sweeps_done >= 12_300);
         assert_eq!(stats.num_vars, 9);
         server.shutdown();
@@ -307,7 +235,7 @@ mod tests {
         h.sweep(200);
         h.reset_stats();
         h.sweep(10_000);
-        let got = h.marginals();
+        let got = h.marginals().unwrap();
         // compare to exact on the mutated graph
         let mut g2 = FactorGraph::new(2);
         g2.set_unary(0, 1.5);
@@ -321,10 +249,65 @@ mod tests {
                 want[v]
             );
         }
-        let stats = h.stats();
+        let stats = h.stats().unwrap();
         assert_eq!(stats.num_factors, 1);
         assert_eq!(stats.ops_applied, 1);
         server.shutdown();
+    }
+
+    #[test]
+    fn ops_counter_increments_by_batch_size() {
+        // regression for the quadratic ops counter: the old worker did
+        // `metrics.add("ops", ops_applied)` with the *cumulative* total,
+        // so two batches of 3 + 2 ops recorded 3 + 5 = 8. It must be 5.
+        let mut server = Server::spawn(FactorGraph::new(4), ServerConfig::default());
+        let h = server.handle();
+        h.apply(vec![
+            ChurnOp::Add { v1: 0, v2: 1, beta: 0.2 },
+            ChurnOp::Add { v1: 1, v2: 2, beta: 0.2 },
+            ChurnOp::Add { v1: 2, v2: 3, beta: 0.2 },
+        ]);
+        h.apply(vec![
+            ChurnOp::Add { v1: 0, v2: 3, beta: 0.1 },
+            ChurnOp::RemoveLive { index: 0 },
+        ]);
+        let stats = h.stats().unwrap(); // barrier: both batches processed
+        assert_eq!(stats.ops_applied, 5);
+        assert_eq!(
+            server.metrics.counter("tenant0.ops"),
+            5,
+            "metrics counter must match ops applied, not grow quadratically"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn replay_trace_returns_final_marginals() {
+        let trace = ChurnTrace::generate(6, 6, 20, 0.4, 9);
+        let mut server = Server::spawn(
+            FactorGraph::new(6),
+            ServerConfig {
+                chains: 6,
+                background_sweeps: 0,
+                ..Default::default()
+            },
+        );
+        let h = server.handle();
+        let got = replay_trace(&h, &trace, 4);
+        assert_eq!(got.len(), 6, "one marginal per variable");
+        assert!(got.iter().all(|p| (0.0..=1.0).contains(p)));
+        server.shutdown();
+    }
+
+    #[test]
+    fn dead_server_yields_errors_not_panics() {
+        // regression for the expect("server dropped") panics
+        let mut server = Server::spawn(FactorGraph::new(2), ServerConfig::default());
+        let h = server.handle();
+        server.shutdown();
+        assert!(h.marginals().is_err());
+        assert!(h.mixing(1.1, 10).is_err());
+        assert!(h.stats().is_err());
     }
 
     #[test]
@@ -339,9 +322,9 @@ mod tests {
         );
         let h = server.handle();
         std::thread::sleep(std::time::Duration::from_millis(100));
-        let s1 = h.stats();
+        let s1 = h.stats().unwrap();
         std::thread::sleep(std::time::Duration::from_millis(100));
-        let s2 = h.stats();
+        let s2 = h.stats().unwrap();
         assert!(
             s2.sweeps_done > s1.sweeps_done,
             "background sweeps idle: {} -> {}",
@@ -358,6 +341,4 @@ mod tests {
         server.shutdown();
         server.shutdown();
     }
-
-    use crate::graph::{FactorGraph, PairFactor};
 }

@@ -1,0 +1,256 @@
+//! A shard worker: one thread owning a registry of tenants.
+//!
+//! The coordinator front-end routes every tenant id to exactly one shard
+//! ([`super::route`]); the shard thread owns its tenants outright — no
+//! locks on the request path — and drains one request queue. When the
+//! queue is empty it asks its deficit-round-robin scheduler
+//! ([`super::schedule::DrrScheduler`]) for the next background grant, so
+//! foreground requests interleave with fair-share background sweeping at
+//! slice granularity (bounded by the DRR quantum, the latency/throughput
+//! knob).
+//!
+//! Heavy sweeps do not get a private thread pool per shard: all shards
+//! *lend* one shared [`ThreadPool`] (passed in at spawn), so the machine
+//! runs `shards` request loops plus one fixed set of workers instead of
+//! `shards × pool` threads fighting each other.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+
+use crate::diagnostics::MixingResult;
+use crate::graph::FactorGraph;
+use crate::runtime::Manifest;
+use crate::util::error::Result;
+use crate::util::ThreadPool;
+use crate::workloads::ChurnOp;
+
+use super::dispatch::DispatchPolicy;
+use super::metrics::Metrics;
+use super::schedule::DrrScheduler;
+use super::tenant::{Tenant, TenantConfig, TenantId, TenantStats};
+
+/// Requests a shard worker accepts. `Apply`/`Sweep`/`ResetStats` are
+/// fire-and-forget (ordering per tenant is still FIFO — one queue, one
+/// consumer); queries carry a typed reply channel whose payload is a
+/// [`Result`] so an unknown tenant degrades into an error the caller can
+/// route around instead of a panic.
+pub(super) enum ShardRequest {
+    Create {
+        tenant: TenantId,
+        graph: FactorGraph,
+        config: TenantConfig,
+        reply: Sender<Result<()>>,
+    },
+    Drop {
+        tenant: TenantId,
+        reply: Sender<Result<bool>>,
+    },
+    Apply {
+        tenant: TenantId,
+        ops: Vec<ChurnOp>,
+    },
+    Sweep {
+        tenant: TenantId,
+        n: usize,
+    },
+    ResetStats {
+        tenant: TenantId,
+    },
+    Suspend {
+        tenant: TenantId,
+    },
+    Resume {
+        tenant: TenantId,
+    },
+    Marginals {
+        tenant: TenantId,
+        reply: Sender<Result<Vec<f64>>>,
+    },
+    Mixing {
+        tenant: TenantId,
+        threshold: f64,
+        stride: usize,
+        reply: Sender<Result<MixingResult>>,
+    },
+    Stats {
+        tenant: TenantId,
+        reply: Sender<Result<TenantStats>>,
+    },
+    ShardStats {
+        reply: Sender<ShardStats>,
+    },
+    Shutdown,
+}
+
+/// Aggregate snapshot of one shard.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Hosted tenants (including suspended ones).
+    pub tenants: usize,
+    pub suspended: usize,
+    /// Requests handled since spawn (all kinds).
+    pub requests: u64,
+    /// Background sweeps granted by the DRR scheduler, summed over
+    /// tenants.
+    pub background_sweeps: u64,
+}
+
+/// Per-shard fixed parameters.
+pub(super) struct ShardConfig {
+    pub shard_id: usize,
+    /// DRR quantum in site-visits; 0 disables background sweeping.
+    pub quantum: u64,
+    pub dispatch: DispatchPolicy,
+    /// Artifact manifest consulted by the dispatch policy (None: the
+    /// offline default — every decision is `Native`, but `stable_for`
+    /// hysteresis is still tracked and surfaced).
+    pub manifest: Option<Manifest>,
+}
+
+pub(super) fn shard_worker(
+    config: ShardConfig,
+    rx: Receiver<ShardRequest>,
+    metrics: Metrics,
+    pool: Option<Arc<ThreadPool>>,
+) {
+    let shard_metrics = metrics.scoped(format!("shard{}", config.shard_id));
+    let mut tenants: HashMap<TenantId, Tenant> = HashMap::new();
+    let mut sched = DrrScheduler::new(config.quantum.max(1));
+    let background = config.quantum > 0;
+    let mut requests = 0u64;
+    let mut background_total = 0u64;
+
+    loop {
+        // With background work pending, poll; otherwise block — an idle
+        // shard must not spin.
+        let req = if background && !sched.is_empty() {
+            match rx.try_recv() {
+                Ok(r) => Some(r),
+                Err(TryRecvError::Empty) => None,
+                Err(TryRecvError::Disconnected) => return,
+            }
+        } else {
+            match rx.recv() {
+                Ok(r) => Some(r),
+                Err(_) => return,
+            }
+        };
+
+        let Some(req) = req else {
+            // idle: next fair-share background grant
+            if let Some(slice) = sched.next_slice(|id| tenants[&id].cost()) {
+                let t = tenants.get_mut(&slice.tenant).expect("scheduled tenant exists");
+                t.background_sweep(slice.sweeps);
+                background_total += slice.sweeps as u64;
+            }
+            continue;
+        };
+
+        requests += 1;
+        shard_metrics.inc("requests");
+        match req {
+            ShardRequest::Create {
+                tenant,
+                graph,
+                config: tcfg,
+                reply,
+            } => {
+                let out = if tenants.contains_key(&tenant) {
+                    Err(crate::err!(
+                        "tenant {tenant} already hosted on shard {}",
+                        config.shard_id
+                    ))
+                } else {
+                    let view = metrics.scoped(format!("tenant{tenant}"));
+                    tenants.insert(tenant, Tenant::new(graph, &tcfg, pool.clone(), view));
+                    if background {
+                        sched.enroll(tenant);
+                    }
+                    shard_metrics.inc("tenants_created");
+                    Ok(())
+                };
+                let _ = reply.send(out);
+            }
+            ShardRequest::Drop { tenant, reply } => {
+                let existed = tenants.remove(&tenant).is_some();
+                sched.withdraw(tenant);
+                if existed {
+                    // reclaim the tenant's scoped keys: ids are never
+                    // reused, so leaked scopes would grow forever
+                    metrics.remove_scope(&format!("tenant{tenant}"));
+                    shard_metrics.inc("tenants_dropped");
+                }
+                let _ = reply.send(Ok(existed));
+            }
+            ShardRequest::Apply { tenant, ops } => match tenants.get_mut(&tenant) {
+                Some(t) => {
+                    t.apply(&ops);
+                }
+                None => shard_metrics.inc("unknown_tenant"),
+            },
+            ShardRequest::Sweep { tenant, n } => match tenants.get_mut(&tenant) {
+                Some(t) => t.sweep(n),
+                None => shard_metrics.inc("unknown_tenant"),
+            },
+            ShardRequest::ResetStats { tenant } => match tenants.get_mut(&tenant) {
+                Some(t) => t.reset_stats(),
+                None => shard_metrics.inc("unknown_tenant"),
+            },
+            ShardRequest::Suspend { tenant } => {
+                if let Some(t) = tenants.get_mut(&tenant) {
+                    t.suspend();
+                    sched.withdraw(tenant);
+                } else {
+                    shard_metrics.inc("unknown_tenant");
+                }
+            }
+            ShardRequest::Resume { tenant } => {
+                if let Some(t) = tenants.get_mut(&tenant) {
+                    t.resume();
+                    if background {
+                        sched.enroll(tenant);
+                    }
+                } else {
+                    shard_metrics.inc("unknown_tenant");
+                }
+            }
+            ShardRequest::Marginals { tenant, reply } => {
+                let out = lookup(&tenants, tenant, config.shard_id).map(Tenant::marginals);
+                let _ = reply.send(out);
+            }
+            ShardRequest::Mixing {
+                tenant,
+                threshold,
+                stride,
+                reply,
+            } => {
+                let out = lookup(&tenants, tenant, config.shard_id)
+                    .map(|t| t.mixing(threshold, stride));
+                let _ = reply.send(out);
+            }
+            ShardRequest::Stats { tenant, reply } => {
+                let out = lookup(&tenants, tenant, config.shard_id)
+                    .map(|t| t.stats(&config.dispatch, config.manifest.as_ref()));
+                let _ = reply.send(out);
+            }
+            ShardRequest::ShardStats { reply } => {
+                let _ = reply.send(ShardStats {
+                    shard: config.shard_id,
+                    tenants: tenants.len(),
+                    suspended: tenants.values().filter(|t| t.is_suspended()).count(),
+                    requests,
+                    background_sweeps: background_total,
+                });
+            }
+            ShardRequest::Shutdown => return,
+        }
+    }
+}
+
+fn lookup(tenants: &HashMap<TenantId, Tenant>, id: TenantId, shard: usize) -> Result<&Tenant> {
+    tenants
+        .get(&id)
+        .ok_or_else(|| crate::err!("tenant {id} not hosted on shard {shard}"))
+}

@@ -1,0 +1,339 @@
+//! One tenant of a shard: a dynamic MRF plus its lane-batched ensemble.
+//!
+//! A tenant is the unit the multi-tenant coordinator hosts many of: its
+//! own [`FactorGraph`], its own [`PdEnsemble`] (per-tenant seed, so its
+//! trajectory is a pure function of that seed — independent of shard
+//! placement, shard count, pool size, and of every other tenant), the
+//! live-factor list its churn ops index into, and the serving counters
+//! ([`TenantStats`]) the dispatch policy reads. All request handling is
+//! synchronous single-owner code; the shard worker thread is the only
+//! caller.
+
+use std::sync::Arc;
+
+use crate::diagnostics::MixingResult;
+use crate::graph::{FactorGraph, FactorId, PairFactor};
+use crate::runtime::Manifest;
+use crate::util::ThreadPool;
+use crate::workloads::ChurnOp;
+
+use super::dispatch::{DispatchDecision, DispatchPolicy};
+use super::ensemble::PdEnsemble;
+use super::metrics::MetricsView;
+
+/// Tenant identifier. Routing to shards is a pure hash of this id
+/// ([`super::route`]), so placement is stable across restarts and shard
+/// counts.
+pub type TenantId = u64;
+
+/// Per-tenant construction parameters.
+#[derive(Clone, Debug)]
+pub struct TenantConfig {
+    /// Parallel chains (lanes) of the tenant's ensemble.
+    pub chains: usize,
+    /// Per-tenant RNG root; trajectories are `(sweep, site)`-keyed under
+    /// it, hence identical for every shard count and pool size.
+    pub seed: u64,
+    /// Variables monitored for PSRF (empty = magnetization only).
+    pub monitor_vars: Vec<usize>,
+}
+
+impl Default for TenantConfig {
+    fn default() -> Self {
+        Self {
+            chains: 10,
+            seed: 0xC0FFEE,
+            monitor_vars: Vec::new(),
+        }
+    }
+}
+
+/// Snapshot of one tenant's serving state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantStats {
+    pub num_vars: usize,
+    pub num_factors: usize,
+    /// Total sweeps (foreground + background).
+    pub sweeps_done: usize,
+    /// Background sweeps granted by the fair-share scheduler.
+    pub background_sweeps: u64,
+    pub ops_applied: u64,
+    pub graph_version: u64,
+    /// Sweeps since the last topology mutation — the dispatch policy's
+    /// stability input.
+    pub stable_for: usize,
+    /// Current per-sweep cost in site-visits (the scheduler's unit).
+    pub cost: u64,
+    pub suspended: bool,
+    /// What the dispatch policy would run the next sweep batch on, given
+    /// the shard's artifact manifest and this tenant's stability.
+    pub dispatch: DispatchDecision,
+}
+
+/// A hosted tenant (see module docs). Owned and driven by one shard.
+pub struct Tenant {
+    graph: FactorGraph,
+    ensemble: PdEnsemble,
+    /// Live churned factors, indexed by `ChurnOp::RemoveLive`.
+    live: Vec<FactorId>,
+    metrics: MetricsView,
+    ops_applied: u64,
+    background_sweeps: u64,
+    /// Sweeps since the last topology mutation.
+    stable_for: usize,
+    suspended: bool,
+}
+
+impl Tenant {
+    /// Build a tenant over `graph`; `pool` is the shard's *lent* shared
+    /// worker pool (one pool serves every shard — no per-tenant threads).
+    pub fn new(
+        graph: FactorGraph,
+        config: &TenantConfig,
+        pool: Option<Arc<ThreadPool>>,
+        metrics: MetricsView,
+    ) -> Self {
+        let mut ensemble = PdEnsemble::new(&graph, config.chains, config.seed);
+        if let Some(pool) = pool {
+            ensemble = ensemble.with_pool(pool);
+        }
+        if !config.monitor_vars.is_empty() {
+            ensemble.monitor_vars(config.monitor_vars.clone());
+        }
+        ensemble.init_overdispersed();
+        let live = graph.factors().map(|(id, _)| id).collect();
+        Self {
+            graph,
+            ensemble,
+            live,
+            metrics,
+            ops_applied: 0,
+            background_sweeps: 0,
+            stable_for: 0,
+            suspended: false,
+        }
+    }
+
+    /// Apply topology mutations; if anything landed, resets statistics
+    /// (the target changed) and the dispatch stability clock. Returns
+    /// how many ops were actually applied: malformed ops (an
+    /// out-of-range variable or `RemoveLive` index) are *skipped*,
+    /// counted under the tenant's `invalid_ops` metric — one tenant's
+    /// bad input must degrade that tenant's request, never panic the
+    /// shard thread its neighbors share.
+    pub fn apply(&mut self, ops: &[ChurnOp]) -> usize {
+        let metrics = self.metrics.clone();
+        let applied = metrics.time("apply", || {
+            ops.iter().filter(|&op| self.apply_op(op)).count()
+        });
+        self.ops_applied += applied as u64;
+        self.metrics.add("ops", applied as u64);
+        let invalid = ops.len() - applied;
+        if invalid > 0 {
+            self.metrics.add("invalid_ops", invalid as u64);
+        }
+        if applied > 0 {
+            self.stable_for = 0;
+            // the target distribution changed; stale stats are biased
+            self.ensemble.reset_stats();
+        }
+        applied
+    }
+
+    /// Apply one op; returns whether it was valid (see [`Tenant::apply`]).
+    fn apply_op(&mut self, op: &ChurnOp) -> bool {
+        match *op {
+            ChurnOp::Add { v1, v2, beta } => {
+                let n = self.graph.num_vars();
+                if v1 >= n || v2 >= n || v1 == v2 {
+                    return false;
+                }
+                let f = PairFactor::ising(v1, v2, beta);
+                let id = self.graph.add_factor(f);
+                self.ensemble
+                    .add_factor(id, self.graph.factor(id).expect("just added"));
+                self.live.push(id);
+                true
+            }
+            ChurnOp::RemoveLive { index } => {
+                if index >= self.live.len() {
+                    return false;
+                }
+                let id = self.live.swap_remove(index);
+                self.graph.remove_factor(id).expect("live desync");
+                self.ensemble.remove_factor(id);
+                true
+            }
+        }
+    }
+
+    /// Foreground sweeps (an explicit `Sweep` request).
+    pub fn sweep(&mut self, n: usize) {
+        let metrics = self.metrics.clone();
+        metrics.time("sweep", || self.ensemble.run(n));
+        self.stable_for += n;
+    }
+
+    /// Background sweeps granted by the shard's fair-share scheduler.
+    pub fn background_sweep(&mut self, n: usize) {
+        self.ensemble.run(n);
+        self.background_sweeps += n as u64;
+        self.metrics.add("background_sweeps", n as u64);
+        self.stable_for += n;
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.ensemble.reset_stats();
+    }
+
+    /// Exclude from background scheduling and release the PSRF trace
+    /// buffers; sampler state and marginal sums are kept, so resuming is
+    /// free and marginal queries keep answering the pre-suspension
+    /// estimate.
+    pub fn suspend(&mut self) {
+        self.suspended = true;
+        self.ensemble.park();
+    }
+
+    pub fn resume(&mut self) {
+        self.suspended = false;
+    }
+
+    pub fn is_suspended(&self) -> bool {
+        self.suspended
+    }
+
+    /// Current per-sweep cost in site-visits — what one scheduler grant
+    /// debits. Tracks churn.
+    pub fn cost(&self) -> u64 {
+        self.ensemble.cost()
+    }
+
+    pub fn marginals(&self) -> Vec<f64> {
+        self.ensemble.marginals()
+    }
+
+    /// PSRF mixing diagnosis. `stride` is clamped to ≥ 1: a zero stride
+    /// is a caller error that must degrade, not divide-by-zero the shard
+    /// thread shared with other tenants.
+    pub fn mixing(&self, threshold: f64, stride: usize) -> MixingResult {
+        self.ensemble.mixing(threshold, stride.max(1))
+    }
+
+    /// Serving snapshot, including the dispatch decision the policy makes
+    /// for this tenant's current size and stability.
+    pub fn stats(&self, policy: &DispatchPolicy, manifest: Option<&Manifest>) -> TenantStats {
+        TenantStats {
+            num_vars: self.graph.num_vars(),
+            num_factors: self.graph.num_factors(),
+            sweeps_done: self.ensemble.sweeps_done(),
+            background_sweeps: self.background_sweeps,
+            ops_applied: self.ops_applied,
+            graph_version: self.graph.version(),
+            stable_for: self.stable_for,
+            cost: self.cost(),
+            suspended: self.suspended,
+            dispatch: policy.decide(
+                manifest,
+                self.graph.num_vars(),
+                self.graph.num_factors(),
+                self.stable_for,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+    use crate::workloads;
+
+    fn tenant(graph: FactorGraph) -> (Tenant, Metrics) {
+        let registry = Metrics::new();
+        let view = registry.scoped("tenant0");
+        let cfg = TenantConfig {
+            chains: 4,
+            seed: 7,
+            monitor_vars: Vec::new(),
+        };
+        (Tenant::new(graph, &cfg, None, view), registry)
+    }
+
+    #[test]
+    fn apply_resets_stability_and_counts_ops_linearly() {
+        let (mut t, registry) = tenant(workloads::ising_grid(3, 3, 0.2, 0.0));
+        t.sweep(10);
+        assert_eq!(t.stats(&DispatchPolicy::default(), None).stable_for, 10);
+        t.apply(&[
+            ChurnOp::Add { v1: 0, v2: 4, beta: 0.3 },
+            ChurnOp::Add { v1: 1, v2: 5, beta: 0.2 },
+        ]);
+        t.apply(&[ChurnOp::RemoveLive { index: 0 }]);
+        let stats = t.stats(&DispatchPolicy::default(), None);
+        assert_eq!(stats.stable_for, 0, "churn must reset the stability clock");
+        assert_eq!(stats.ops_applied, 3);
+        // regression (quadratic ops counter): two batches of 2 + 1 ops
+        // must land 3 in the metrics counter, not 2 + (2 + 1) = 5
+        assert_eq!(registry.counter("tenant0.ops"), 3);
+    }
+
+    #[test]
+    fn cost_tracks_churn() {
+        let (mut t, _) = tenant(workloads::ising_grid(2, 2, 0.2, 0.0));
+        let before = t.cost();
+        t.apply(&[ChurnOp::Add { v1: 0, v2: 3, beta: 0.3 }]);
+        assert!(t.cost() > before, "{} vs {before}", t.cost());
+    }
+
+    #[test]
+    fn suspend_keeps_sampler_state_and_marginals() {
+        let (mut t, _) = tenant(workloads::ising_grid(2, 2, 0.3, 0.1));
+        t.sweep(50);
+        let before = t.marginals();
+        assert!(before.iter().any(|&p| p > 0.0), "sums accumulated");
+        t.suspend();
+        assert!(t.is_suspended());
+        let stats = t.stats(&DispatchPolicy::default(), None);
+        assert!(stats.suspended);
+        assert_eq!(stats.sweeps_done, 50, "suspension must not lose sweeps");
+        assert_eq!(
+            t.marginals(),
+            before,
+            "suspended tenant must keep answering the last estimate, \
+             not degrade to all-zeros"
+        );
+        t.resume();
+        t.sweep(10);
+        assert_eq!(t.stats(&DispatchPolicy::default(), None).sweeps_done, 60);
+    }
+
+    #[test]
+    fn malformed_ops_are_skipped_not_fatal() {
+        // one tenant's bad input must not panic the shard thread its
+        // neighbors share: invalid ops are skipped and counted
+        let (mut t, registry) = tenant(workloads::ising_grid(2, 2, 0.2, 0.0));
+        let applied = t.apply(&[
+            ChurnOp::Add { v1: 0, v2: 3, beta: 0.2 },
+            ChurnOp::RemoveLive { index: 999 },
+            ChurnOp::Add { v1: 0, v2: 99, beta: 0.2 },
+            ChurnOp::Add { v1: 1, v2: 1, beta: 0.2 },
+        ]);
+        assert_eq!(applied, 1, "only the well-formed op lands");
+        let stats = t.stats(&DispatchPolicy::default(), None);
+        assert_eq!(stats.ops_applied, 1);
+        assert_eq!(registry.counter("tenant0.ops"), 1);
+        assert_eq!(registry.counter("tenant0.invalid_ops"), 3);
+    }
+
+    #[test]
+    fn background_sweeps_counted_separately() {
+        let (mut t, registry) = tenant(workloads::ising_grid(2, 2, 0.2, 0.0));
+        t.sweep(5);
+        t.background_sweep(12);
+        let stats = t.stats(&DispatchPolicy::default(), None);
+        assert_eq!(stats.sweeps_done, 17);
+        assert_eq!(stats.background_sweeps, 12);
+        assert_eq!(registry.counter("tenant0.background_sweeps"), 12);
+    }
+}

@@ -117,6 +117,17 @@ impl DualModel {
         self.entries.len()
     }
 
+    /// Per-sweep work of this model in site-visits, the unit the
+    /// coordinator's fair-share scheduler charges tenants in: the x
+    /// half-step walks every variable plus its live incidence (the CSR
+    /// arena's live prefix-sum total, `2 · num_factors`), and the θ
+    /// half-step visits every slot. O(1): all three totals are maintained
+    /// counters.
+    #[inline]
+    pub fn sweep_cost(&self) -> u64 {
+        (self.num_vars() + 2 * self.num_factors() + self.factor_slots()) as u64
+    }
+
     pub fn entry(&self, slot: usize) -> Option<&DualEntry> {
         self.entries.get(slot).and_then(Option::as_ref)
     }

@@ -136,6 +136,15 @@ impl LanePdSampler {
         self.sweep_count
     }
 
+    /// Accounting hook for the multi-tenant scheduler: the cost of one
+    /// sweep of this engine in site-visits ([`DualModel::sweep_cost`]).
+    /// Tracks churn — inserting/removing factors changes the next sweep's
+    /// charge.
+    #[inline]
+    pub fn cost(&self) -> u64 {
+        self.model.sweep_cost()
+    }
+
     /// Packed primal state, `x[v * words_per_site() + w]`.
     pub fn state_words(&self) -> &[u64] {
         &self.x

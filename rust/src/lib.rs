@@ -32,10 +32,15 @@
 //! * [`diagnostics`] — PSRF (Gelman–Rubin), ESS, mixing-time extraction.
 //! * [`runtime`] — PJRT executor for the AOT-lowered JAX/Pallas artifacts
 //!   (Layer 1+2); Python never runs on the request path.
-//! * [`coordinator`] — Layer 3: the dynamic-model server, chain manager,
-//!   convergence monitor and dispatch policy.
+//! * [`coordinator`] — Layer 3: the **multi-tenant sharded coordinator**:
+//!   a hash router over `S` shard workers, each owning a registry of
+//!   tenants (graph + lane-batched ensemble) and interleaving foreground
+//!   requests with deficit-round-robin background sweeping weighted by
+//!   per-tenant sweep cost; label-scoped metrics, dispatch policy, and a
+//!   single-tenant compat façade ([`coordinator::Server`]).
 //! * [`workloads`] — the paper's three synthetic model families + churn
-//!   traces + the image-denoising demo MRF.
+//!   traces + multi-tenant arrival/departure traffic traces + the
+//!   image-denoising demo MRF.
 //! * [`bench`] — self-contained bench harness (criterion is unavailable
 //!   offline) used by every `benches/` binary.
 //! * [`util`] — substrates built from scratch for the offline environment:

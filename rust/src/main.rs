@@ -188,8 +188,9 @@ fn cmd_serve(args: &[String]) {
     );
     let h = server.handle();
     let t0 = std::time::Instant::now();
-    pdgibbs::coordinator::server::replay_trace(&h, &trace, cli.get_usize("sweeps-per-op"));
-    let stats = h.stats();
+    let marginals =
+        pdgibbs::coordinator::server::replay_trace(&h, &trace, cli.get_usize("sweeps-per-op"));
+    let stats = h.stats().expect("server alive after replay");
     let dt = t0.elapsed().as_secs_f64();
     println!(
         "applied {} ops in {dt:.2}s ({:.0} ops/s) — {} live factors, {} sweeps done",
@@ -197,6 +198,11 @@ fn cmd_serve(args: &[String]) {
         stats.ops_applied as f64 / dt,
         stats.num_factors,
         stats.sweeps_done
+    );
+    let mean_marginal = marginals.iter().sum::<f64>() / marginals.len().max(1) as f64;
+    println!(
+        "final marginals: {} vars, mean {mean_marginal:.4}",
+        marginals.len()
     );
     println!("metrics: {}", server.metrics.snapshot().dump());
     server.shutdown();

@@ -8,6 +8,15 @@
 //! [`balanced_ranges`] so dense/skewed graphs load-balance). Both run a
 //! closure per chunk on the workers and join; closures borrow from the
 //! caller's stack via `std::thread::scope`-style lifetimes.
+//!
+//! One pool may be *lent* to several owner threads at once (the
+//! multi-tenant coordinator shares a single pool across all of its
+//! shards instead of spawning per-shard pools): scopes submitted from
+//! different threads interleave in the shared job queue, each scope
+//! blocks only on its own completion counter, and no worker ever waits
+//! on another scope — so concurrent scoped calls are safe and
+//! deadlock-free by construction ([`ThreadPool::shared`] +
+//! `scopes_are_safe_concurrently_across_owner_threads` below).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -80,6 +89,13 @@ impl ThreadPool {
     /// most [`MAX_POOL_SIZE`] (the RNG stream-domain bound).
     pub fn clamped_size(size: usize) -> usize {
         size.clamp(1, MAX_POOL_SIZE)
+    }
+
+    /// A pool behind an `Arc`, ready to lend to several owner threads
+    /// (e.g. every shard of a coordinator). Scoped calls from different
+    /// owners interleave safely — see the module docs.
+    pub fn shared(size: usize) -> Arc<Self> {
+        Arc::new(Self::new(size))
     }
 
     /// Pool sized to the machine (logical cores, capped at 16).
@@ -351,6 +367,35 @@ mod tests {
         assert_eq!(balanced_ranges(&[0], 4), vec![0, 0]);
         assert_eq!(balanced_ranges(&[0, 0, 0], 2), vec![0, 0, 2]);
         assert_eq!(balanced_ranges(&[0, 5], 8), vec![0, 1]);
+    }
+
+    #[test]
+    fn scopes_are_safe_concurrently_across_owner_threads() {
+        // the multi-tenant coordinator lends ONE pool to all shards: many
+        // owner threads issue scoped calls concurrently. Each scope must
+        // see exactly its own chunks, complete, and never deadlock.
+        let pool = ThreadPool::shared(3);
+        let owners: Vec<_> = (0..4)
+            .map(|o| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    let mut total = 0u64;
+                    for round in 0..30 {
+                        let len = 64 + o * 17 + round;
+                        let sum = AtomicU64::new(0);
+                        pool.scope_chunks(len, |_, s, e| {
+                            sum.fetch_add((e - s) as u64, Ordering::SeqCst);
+                        });
+                        assert_eq!(sum.load(Ordering::SeqCst), len as u64);
+                        total += len as u64;
+                    }
+                    total
+                })
+            })
+            .collect();
+        for h in owners {
+            assert!(h.join().unwrap() > 0);
+        }
     }
 
     #[test]

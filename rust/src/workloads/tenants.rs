@@ -1,0 +1,250 @@
+//! Multi-tenant traffic traces: seeded arrival/departure of tenants with
+//! per-tenant churn.
+//!
+//! The sharded coordinator's workload is not one big model but a churning
+//! *population* of small ones — per-user/per-session MRFs arriving,
+//! mutating, being queried and departing. No public trace of such a
+//! workload exists (same situation as the single-model churn traces, see
+//! DESIGN.md §Substitutions), so we synthesize one: a seeded event
+//! sequence that the soak tests and the `--mode server` bench replay
+//! against a [`crate::coordinator::Coordinator`]. All randomness comes
+//! from one [`Pcg64`] stream, so a `(config, seed)` pair always produces
+//! the identical trace.
+
+use crate::rng::{Pcg64, RngCore};
+
+use super::ChurnOp;
+
+/// Arrival probability per step while below `max_tenants`.
+const P_ARRIVE: f64 = 0.12;
+/// Departure probability per step while more than one tenant is live.
+const P_DEPART: f64 = 0.04;
+
+/// One event of a multi-tenant trace. Tenant ids are unique per trace
+/// (never reused after a `Drop`), and every `Apply`/`Sweep`/`Drop`
+/// references a tenant created earlier and not yet dropped.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TenantEvent {
+    /// A tenant arrives: host a fresh `vars`-variable model under `seed`.
+    Create { tenant: u64, vars: usize, seed: u64 },
+    /// Topology churn on one tenant (valid against its live-factor list).
+    Apply { tenant: u64, ops: Vec<ChurnOp> },
+    /// Foreground sweeps on one tenant.
+    Sweep { tenant: u64, n: usize },
+    /// The tenant departs.
+    Drop { tenant: u64 },
+}
+
+/// Generation parameters for [`TenantTrace::generate`].
+#[derive(Clone, Debug)]
+pub struct TenantTraceConfig {
+    /// Population cap; arrivals pause while at the cap.
+    pub max_tenants: usize,
+    /// Number of trace steps (each emits one or two events).
+    pub steps: usize,
+    /// Inclusive range of per-tenant variable counts.
+    pub vars: (usize, usize),
+    /// Per-tenant steady-state live factor target (same control law as
+    /// [`super::ChurnTrace::generate`]).
+    pub target_factors: usize,
+    /// Churn ops per `Apply` event.
+    pub ops_per_apply: usize,
+    /// Sweeps per `Sweep` event.
+    pub sweeps_per_step: usize,
+    /// Couplings are uniform in `[0, beta_max]`.
+    pub beta_max: f64,
+}
+
+impl Default for TenantTraceConfig {
+    fn default() -> Self {
+        Self {
+            max_tenants: 16,
+            steps: 400,
+            vars: (4, 12),
+            target_factors: 12,
+            ops_per_apply: 4,
+            sweeps_per_step: 8,
+            beta_max: 0.5,
+        }
+    }
+}
+
+/// A replayable multi-tenant traffic trace (see module docs).
+#[derive(Clone, Debug)]
+pub struct TenantTrace {
+    pub events: Vec<TenantEvent>,
+}
+
+struct LiveTenant {
+    id: u64,
+    vars: usize,
+    live_factors: usize,
+}
+
+impl TenantTrace {
+    /// Generate a trace: each step is an arrival (probability
+    /// [`P_ARRIVE`], forced while the population is empty), a departure
+    /// ([`P_DEPART`], only while ≥ 2 tenants are live — the trace always
+    /// leaves survivors), or a churn burst plus sweeps on one uniformly
+    /// chosen tenant.
+    pub fn generate(config: TenantTraceConfig, seed: u64) -> TenantTrace {
+        assert!(config.vars.0 >= 2 && config.vars.0 <= config.vars.1);
+        assert!(config.max_tenants >= 1);
+        let mut rng = Pcg64::seed(seed);
+        let mut events = Vec::with_capacity(2 * config.steps);
+        let mut live: Vec<LiveTenant> = Vec::new();
+        let mut next_id = 1u64;
+        for _ in 0..config.steps {
+            let roll = rng.next_f64();
+            if live.is_empty() || (roll < P_ARRIVE && live.len() < config.max_tenants) {
+                let span = (config.vars.1 - config.vars.0 + 1) as u64;
+                let vars = config.vars.0 + rng.next_below(span) as usize;
+                events.push(TenantEvent::Create {
+                    tenant: next_id,
+                    vars,
+                    seed: seed ^ next_id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                });
+                live.push(LiveTenant {
+                    id: next_id,
+                    vars,
+                    live_factors: 0,
+                });
+                next_id += 1;
+            } else if roll > 1.0 - P_DEPART && live.len() > 1 {
+                let i = rng.next_below(live.len() as u64) as usize;
+                events.push(TenantEvent::Drop {
+                    tenant: live.swap_remove(i).id,
+                });
+            } else {
+                let i = rng.next_below(live.len() as u64) as usize;
+                let t = &mut live[i];
+                let mut ops = Vec::with_capacity(config.ops_per_apply);
+                for _ in 0..config.ops_per_apply {
+                    let p_add = if t.live_factors == 0 {
+                        1.0
+                    } else {
+                        (1.0 - t.live_factors as f64 / (2.0 * config.target_factors as f64))
+                            .clamp(0.05, 0.95)
+                    };
+                    if rng.bernoulli(p_add) {
+                        let v1 = rng.next_below(t.vars as u64) as usize;
+                        let v2 = loop {
+                            let v = rng.next_below(t.vars as u64) as usize;
+                            if v != v1 {
+                                break v;
+                            }
+                        };
+                        ops.push(ChurnOp::Add {
+                            v1,
+                            v2,
+                            beta: config.beta_max * rng.next_f64(),
+                        });
+                        t.live_factors += 1;
+                    } else {
+                        ops.push(ChurnOp::RemoveLive {
+                            index: rng.next_below(t.live_factors as u64) as usize,
+                        });
+                        t.live_factors -= 1;
+                    }
+                }
+                let id = t.id;
+                events.push(TenantEvent::Apply { tenant: id, ops });
+                events.push(TenantEvent::Sweep {
+                    tenant: id,
+                    n: config.sweeps_per_step,
+                });
+            }
+        }
+        TenantTrace { events }
+    }
+
+    /// Tenants still live at the end of the trace.
+    pub fn survivors(&self) -> Vec<u64> {
+        let mut live = Vec::new();
+        for e in &self.events {
+            match e {
+                TenantEvent::Create { tenant, .. } => live.push(*tenant),
+                TenantEvent::Drop { tenant } => live.retain(|t| t != tenant),
+                _ => {}
+            }
+        }
+        live
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{FactorGraph, FactorId};
+    use crate::workloads::ChurnTrace;
+    use std::collections::HashMap;
+
+    #[test]
+    fn trace_is_deterministic() {
+        let a = TenantTrace::generate(TenantTraceConfig::default(), 42);
+        let b = TenantTrace::generate(TenantTraceConfig::default(), 42);
+        assert_eq!(a.events, b.events);
+        let c = TenantTrace::generate(TenantTraceConfig::default(), 43);
+        assert_ne!(a.events, c.events);
+    }
+
+    #[test]
+    fn events_replay_validly_and_respect_the_population_cap() {
+        let cfg = TenantTraceConfig {
+            max_tenants: 6,
+            steps: 500,
+            ..Default::default()
+        };
+        let trace = TenantTrace::generate(cfg, 7);
+        // replay every event against local per-tenant graphs; panics on
+        // any invalid op (unknown tenant, bad RemoveLive index)
+        let mut graphs: HashMap<u64, (FactorGraph, Vec<FactorId>)> = HashMap::new();
+        let mut peak = 0usize;
+        for e in &trace.events {
+            match e {
+                TenantEvent::Create { tenant, vars, .. } => {
+                    assert!(*vars >= 2);
+                    let prev = graphs.insert(*tenant, (FactorGraph::new(*vars), Vec::new()));
+                    assert!(prev.is_none(), "tenant id reused");
+                    peak = peak.max(graphs.len());
+                }
+                TenantEvent::Apply { tenant, ops } => {
+                    let (g, live) = graphs.get_mut(tenant).expect("apply to live tenant");
+                    for op in ops {
+                        ChurnTrace::apply(g, live, op);
+                    }
+                }
+                TenantEvent::Sweep { tenant, n } => {
+                    assert!(graphs.contains_key(tenant), "sweep of live tenant");
+                    assert!(*n > 0);
+                }
+                TenantEvent::Drop { tenant } => {
+                    assert!(graphs.remove(tenant).is_some(), "drop of live tenant");
+                }
+            }
+        }
+        assert!(peak <= 6, "population cap violated: {peak}");
+        assert!(!graphs.is_empty(), "trace must leave survivors");
+        let mut survivors: Vec<u64> = graphs.keys().copied().collect();
+        survivors.sort_unstable();
+        let mut want = trace.survivors();
+        want.sort_unstable();
+        assert_eq!(survivors, want);
+    }
+
+    #[test]
+    fn per_tenant_seeds_differ() {
+        let trace = TenantTrace::generate(TenantTraceConfig::default(), 3);
+        let mut seeds = Vec::new();
+        for e in &trace.events {
+            if let TenantEvent::Create { seed, .. } = e {
+                seeds.push(*seed);
+            }
+        }
+        assert!(seeds.len() > 1, "expected several arrivals");
+        let n = seeds.len();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), n, "per-tenant seeds must be distinct");
+    }
+}

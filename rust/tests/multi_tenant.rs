@@ -1,0 +1,143 @@
+//! End-to-end multi-tenant coordinator tests over the public API:
+//! a seeded arrival/departure traffic trace replayed against a sharded
+//! coordinator, with per-tenant correctness checked against exact
+//! enumeration and shard-count invariance of the final answers.
+
+use pdgibbs::coordinator::{Coordinator, CoordinatorConfig, TenantConfig};
+use pdgibbs::graph::FactorGraph;
+use pdgibbs::inference::exact;
+use pdgibbs::workloads::{ChurnTrace, TenantEvent, TenantTrace, TenantTraceConfig};
+
+fn tenant_config(seed: u64) -> TenantConfig {
+    TenantConfig {
+        chains: 8,
+        seed,
+        monitor_vars: Vec::new(),
+    }
+}
+
+/// Replay a traffic trace (request-driven, background off) and return
+/// `(tenant, marginals, reference graph)` for every survivor.
+fn replay(shards: usize, trace: &TenantTrace) -> Vec<(u64, Vec<f64>, FactorGraph)> {
+    let mut coord = Coordinator::spawn(CoordinatorConfig {
+        shards,
+        quantum: 0,
+        ..Default::default()
+    });
+    let client = coord.client();
+    // local mirror of every tenant's expected graph
+    let mut mirror: std::collections::HashMap<u64, (FactorGraph, Vec<usize>)> =
+        std::collections::HashMap::new();
+    for event in &trace.events {
+        match event {
+            TenantEvent::Create { tenant, vars, seed } => {
+                client
+                    .create_tenant(*tenant, FactorGraph::new(*vars), tenant_config(*seed))
+                    .unwrap();
+                mirror.insert(*tenant, (FactorGraph::new(*vars), Vec::new()));
+            }
+            TenantEvent::Apply { tenant, ops } => {
+                client.apply(*tenant, ops.clone()).unwrap();
+                let (g, live) = mirror.get_mut(tenant).unwrap();
+                for op in ops {
+                    ChurnTrace::apply(g, live, op);
+                }
+            }
+            TenantEvent::Sweep { tenant, n } => client.sweep(*tenant, *n).unwrap(),
+            TenantEvent::Drop { tenant } => {
+                assert!(client.drop_tenant(*tenant).unwrap());
+                mirror.remove(tenant);
+            }
+        }
+    }
+    // settle every survivor, then read marginals
+    let mut survivors: Vec<u64> = mirror.keys().copied().collect();
+    survivors.sort_unstable();
+    for &t in &survivors {
+        client.sweep(t, 300).unwrap();
+        client.reset_stats(t).unwrap();
+        client.sweep(t, 5000).unwrap();
+    }
+    let out = survivors
+        .into_iter()
+        .map(|t| {
+            let m = client.marginals(t).unwrap();
+            let (g, _) = mirror.remove(&t).unwrap();
+            (t, m, g)
+        })
+        .collect();
+    coord.shutdown();
+    out
+}
+
+#[test]
+fn traffic_trace_marginals_match_exact_and_shard_count_is_irrelevant() {
+    let trace = TenantTrace::generate(
+        TenantTraceConfig {
+            max_tenants: 8,
+            steps: 120,
+            vars: (4, 8),
+            target_factors: 7,
+            ops_per_apply: 3,
+            sweeps_per_step: 4,
+            beta_max: 0.5,
+        },
+        0xFACADE,
+    );
+    let on_one = replay(1, &trace);
+    let on_three = replay(3, &trace);
+    assert!(!on_one.is_empty(), "trace must leave survivors");
+    assert_eq!(on_one.len(), on_three.len());
+    for ((t1, m1, g), (t3, m3, _)) in on_one.iter().zip(&on_three) {
+        assert_eq!(t1, t3);
+        assert_eq!(m1, m3, "tenant {t1}: shard count changed the trajectory");
+        let want = exact::enumerate(g).marginals;
+        for v in 0..g.num_vars() {
+            assert!(
+                (m1[v] - want[v]).abs() < 0.02,
+                "tenant {t1} v={v}: {} vs exact {}",
+                m1[v],
+                want[v]
+            );
+        }
+    }
+}
+
+#[test]
+fn suspended_tenants_survive_heavy_neighbors() {
+    // a suspended tenant keeps its graph and answers stats while a big
+    // neighbor churns and sweeps on the same coordinator
+    let mut coord = Coordinator::spawn(CoordinatorConfig {
+        shards: 2,
+        quantum: 4096,
+        ..Default::default()
+    });
+    let client = coord.client();
+    client
+        .create_tenant(
+            10,
+            pdgibbs::workloads::ising_grid(2, 2, 0.2, 0.0),
+            tenant_config(1),
+        )
+        .unwrap();
+    client
+        .create_tenant(
+            11,
+            pdgibbs::workloads::ising_grid(12, 12, 0.25, 0.0),
+            tenant_config(2),
+        )
+        .unwrap();
+    client.suspend(10).unwrap();
+    client.sweep(11, 500).unwrap();
+    let s10 = client.stats(10).unwrap();
+    assert!(s10.suspended);
+    assert_eq!(s10.num_vars, 4);
+    client.resume(10).unwrap();
+    client.sweep(10, 200).unwrap();
+    client.reset_stats(10).unwrap();
+    client.sweep(10, 2000).unwrap();
+    let m = client.marginals(10).unwrap();
+    assert_eq!(m.len(), 4);
+    assert!(m.iter().all(|p| (0.05..=0.95).contains(p)));
+    coord.shutdown();
+}
