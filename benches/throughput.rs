@@ -14,10 +14,15 @@
 //! `--mode lanes` measures the lane-batched multi-chain engine on a 64×64
 //! Ising grid at 256 lanes — the batched-serving hot path (CSR arena,
 //! cached conditional tables, degree-aware pooled chunking) — against
-//! scalar `PdSampler` chains at the same per-chain work. Acceptance
-//! (ISSUE 2): ≥ 1.5× engine sweeps/s vs the PR 1 engine on this exact
-//! configuration; the per-chain speedup vs scalar chains (ISSUE 1's ≥ 3×)
-//! is still reported.
+//! scalar `PdSampler` chains at the same per-chain work. The `--kernel`
+//! flag selects which sweep-kernel implementation runs: `scalar` (per-lane
+//! reference loops), `tiled` (SIMD-tiled 8-lane bodies + jump-ahead RNG,
+//! the default engine kernel), `nightly-simd` (with that feature), or
+//! `both` (default: scalar AND tiled, reporting the `tiled_vs_scalar`
+//! ratio and asserting the two kernels' trajectories are bit-identical).
+//! Acceptance (ISSUE 4): tiled ≥ 1.5× scalar-kernel sweeps/s on this
+//! configuration with bit-identical marginals; the per-chain speedup vs
+//! scalar `PdSampler` chains (ISSUE 1's ≥ 3×) is still reported.
 //!
 //! `--mode server` measures the sharded multi-tenant coordinator
 //! (ISSUE 3): 64 tenants × 64 lanes spread over 4 shards, background
@@ -37,7 +42,7 @@ use std::time::{Duration, Instant};
 use pdgibbs::bench::{time_fn, Record, Report};
 use pdgibbs::coordinator::{Coordinator, CoordinatorConfig, TenantConfig};
 use pdgibbs::duality::DualModel;
-use pdgibbs::engine::LanePdSampler;
+use pdgibbs::engine::{KernelKind, LanePdSampler};
 use pdgibbs::rng::{Pcg64, RngCore};
 use pdgibbs::runtime::Runtime;
 use pdgibbs::samplers::{ChromaticGibbs, PdSampler, Sampler, SequentialGibbs};
@@ -56,18 +61,38 @@ fn main() {
     }
 }
 
-/// `--mode <full|lanes|server>`; unknown arguments (e.g. cargo's own
+/// Value of `--<name> <value>`; unknown arguments (e.g. cargo's own
 /// flags) are ignored so both `cargo bench` and direct invocation work.
-fn parse_mode() -> String {
+fn parse_arg(name: &str) -> Option<String> {
     let args: Vec<String> = std::env::args().collect();
-    for (i, a) in args.iter().enumerate() {
-        if a == "--mode" {
-            if let Some(v) = args.get(i + 1) {
-                return v.clone();
-            }
+    let flag = format!("--{name}");
+    args.iter()
+        .position(|a| *a == flag)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+/// `--mode <full|lanes|server>`, default `full`.
+fn parse_mode() -> String {
+    parse_arg("mode").unwrap_or_else(|| "full".to_string())
+}
+
+/// `--kernel <scalar|tiled|nightly-simd|both>` (lanes mode), default
+/// `both`.
+fn parse_kernels() -> Vec<KernelKind> {
+    let arg = parse_arg("kernel").unwrap_or_else(|| "both".to_string());
+    if arg == "both" {
+        return vec![KernelKind::Scalar, KernelKind::Tiled];
+    }
+    match KernelKind::parse(&arg) {
+        Some(k) => vec![k],
+        None => {
+            eprintln!(
+                "unknown kernel '{arg}' (usage: throughput --mode lanes \
+                 [--kernel scalar|tiled|nightly-simd|both])"
+            );
+            std::process::exit(2);
         }
     }
-    "full".to_string()
 }
 
 fn mean(xs: &[f64]) -> f64 {
@@ -80,7 +105,44 @@ const LANES: usize = 256;
 const SCALAR_CHAINS: usize = 64;
 const GRID: &str = "64x64";
 
+/// Assert that every compiled-in kernel under test samples the exact same
+/// trajectory (packed x and θ words equal after every sweep) — the bench
+/// refuses to report a speedup bought with a different chain.
+fn assert_kernels_bit_identical(
+    g: &pdgibbs::graph::FactorGraph,
+    kernels: &[KernelKind],
+    sweeps: usize,
+) {
+    let mut engines: Vec<LanePdSampler> = kernels
+        .iter()
+        .map(|&k| LanePdSampler::new(g, LANES, 0xBEEF).with_kernel(k))
+        .collect();
+    for sweep in 0..sweeps {
+        for eng in engines.iter_mut() {
+            eng.sweep();
+        }
+        let (first, rest) = engines.split_first().unwrap();
+        for eng in rest {
+            assert_eq!(
+                first.state_words(),
+                eng.state_words(),
+                "x diverged: {} vs {} at sweep {sweep}",
+                first.kernel().name(),
+                eng.kernel().name()
+            );
+            assert_eq!(
+                first.theta_words(),
+                eng.theta_words(),
+                "theta diverged: {} vs {} at sweep {sweep}",
+                first.kernel().name(),
+                eng.kernel().name()
+            );
+        }
+    }
+}
+
 fn bench_lanes() {
+    let kernels = parse_kernels();
     let mut report = Report::new("throughput-lanes");
     let g = workloads::ising_grid(64, 64, 0.3, 0.0);
     let n = g.num_vars() as f64;
@@ -102,54 +164,98 @@ fn bench_lanes() {
     });
     let scalar_s = mean(&times) / sweeps_per_rep as f64; // s per all-chain sweep
     let scalar_chain_rate = SCALAR_CHAINS as f64 / scalar_s;
-    push_lane_metrics(&mut report, "pd-scalar", SCALAR_CHAINS, n, scalar_s, 0);
+    push_lane_metrics(&mut report, "pd-scalar", "none", SCALAR_CHAINS, n, scalar_s, 0);
 
-    // lane engine, single-threaded — the tracked PR-over-PR number
-    let mut eng = LanePdSampler::new(&g, LANES, 0xBEEF);
-    let times = time_fn(1, 8, || {
-        for _ in 0..sweeps_per_rep {
-            eng.sweep();
-        }
-    });
-    let lane_s = mean(&times) / sweeps_per_rep as f64;
-    let lane_chain_rate = LANES as f64 / lane_s;
-    push_lane_metrics(&mut report, "pd-lanes", LANES, n, lane_s, 0);
+    // the determinism contract before any timing: same trajectory from
+    // every kernel under test
+    if kernels.len() > 1 {
+        assert_kernels_bit_identical(&g, &kernels, 50);
+        println!(
+            "kernels {:?} bit-identical over 50 sweeps at {} lanes",
+            kernels.iter().map(|k| k.name()).collect::<Vec<_>>(),
+            LANES
+        );
+    }
 
-    // lane engine on the pool (degree-aware chunks over variables)
-    let mut pooled_best = lane_s;
+    // lane engine per kernel, single-threaded — the tracked PR-over-PR
+    // numbers — then pooled (degree-aware cache-line-aligned chunks)
     let max_threads = ThreadPool::default_size();
     let mut thread_counts = vec![2usize, 4];
     if max_threads > 4 {
         thread_counts.push(max_threads);
     }
-    for &t in &thread_counts {
-        let mut eng =
-            LanePdSampler::new(&g, LANES, 0xBEEF).with_pool(Arc::new(ThreadPool::new(t)));
+    // per kernel: (kernel, single-thread s/sweep, best s/sweep incl. pools)
+    let mut kernel_runs: Vec<(KernelKind, f64, f64)> = Vec::new();
+    for &kernel in &kernels {
+        let mut eng = LanePdSampler::new(&g, LANES, 0xBEEF).with_kernel(kernel);
         let times = time_fn(1, 8, || {
             for _ in 0..sweeps_per_rep {
                 eng.sweep();
             }
         });
-        let s = mean(&times) / sweeps_per_rep as f64;
-        pooled_best = pooled_best.min(s);
-        push_lane_metrics(&mut report, "pd-lanes-pooled", LANES, n, s, t);
+        let lane_s = mean(&times) / sweeps_per_rep as f64;
+        push_lane_metrics(&mut report, "pd-lanes", kernel.name(), LANES, n, lane_s, 0);
+        let mut best_s = lane_s;
+
+        for &t in &thread_counts {
+            let mut eng = LanePdSampler::new(&g, LANES, 0xBEEF)
+                .with_kernel(kernel)
+                .with_pool(Arc::new(ThreadPool::new(t)));
+            let times = time_fn(1, 8, || {
+                for _ in 0..sweeps_per_rep {
+                    eng.sweep();
+                }
+            });
+            let s = mean(&times) / sweeps_per_rep as f64;
+            best_s = best_s.min(s);
+            push_lane_metrics(&mut report, "pd-lanes-pooled", kernel.name(), LANES, n, s, t);
+        }
+        kernel_runs.push((kernel, lane_s, best_s));
     }
 
+    // headline engine number: the default (tiled) kernel if measured,
+    // else whatever single kernel was requested — speedups below are
+    // the HEADLINE kernel's own runs, never another kernel's
+    let (headline_kernel, headline_s, headline_best) = kernel_runs
+        .iter()
+        .find(|(k, _, _)| *k == KernelKind::default())
+        .copied()
+        .unwrap_or(kernel_runs[0]);
+
     // per-chain-sweep throughput ratio (chain counts differ, rates don't)
-    let speedup = lane_chain_rate / scalar_chain_rate;
-    let speedup_pooled = (LANES as f64 / pooled_best) / scalar_chain_rate;
-    report.push(
-        Record::new("lanes-vs-scalar")
-            .param("workload", "grid64")
-            .param("grid", GRID)
-            .metric("speedup_1t", speedup)
-            .metric("speedup_best", speedup_pooled),
-    );
+    let speedup = (LANES as f64 / headline_s) / scalar_chain_rate;
+    let speedup_pooled = (LANES as f64 / headline_best) / scalar_chain_rate;
+    let mut cmp = Record::new("lanes-vs-scalar")
+        .param("workload", "grid64")
+        .param("grid", GRID)
+        .param("kernel", headline_kernel.name())
+        .metric("speedup_1t", speedup)
+        .metric("speedup_best", speedup_pooled);
+    // the ISSUE-4 acceptance ratio: tiled vs scalar KERNEL, single thread
+    let find = |k: KernelKind| {
+        kernel_runs
+            .iter()
+            .find(|(kk, _, _)| *kk == k)
+            .map(|&(_, s, _)| s)
+    };
+    if let (Some(sc), Some(ti)) = (find(KernelKind::Scalar), find(KernelKind::Tiled)) {
+        let ratio = sc / ti;
+        cmp = cmp.metric("tiled_vs_scalar_1t", ratio);
+        println!(
+            "tiled kernel vs scalar kernel (1 thread): {ratio:.2}x \
+             (target >= 1.5x, bit-identical trajectories)"
+        );
+        if ratio < 1.5 {
+            println!("WARNING: tiled kernel below the 1.5x acceptance target");
+        }
+    }
+    report.push(cmp);
     println!(
-        "lane engine per-chain speedup vs scalar chains: {speedup:.2}x single-thread, \
+        "lane engine ({}) per-chain speedup vs scalar chains: {speedup:.2}x single-thread, \
          {speedup_pooled:.2}x best-pooled (target >= 3x); \
          engine sweeps/s 1t: {:.2}",
-        1.0 / lane_s
+        headline_kernel.name(),
+        1.0 / headline_s
     );
     if speedup < 3.0 {
         println!("WARNING: single-thread lane speedup below the 3x acceptance target");
@@ -157,9 +263,11 @@ fn bench_lanes() {
     report.finish_tracked("throughput", "lanes");
 }
 
+#[allow(clippy::too_many_arguments)]
 fn push_lane_metrics(
     report: &mut Report,
     label: &str,
+    kernel: &str,
     lanes: usize,
     n: f64,
     per_sweep_s: f64,
@@ -169,6 +277,7 @@ fn push_lane_metrics(
         Record::new(label)
             .param("workload", "grid64")
             .param("grid", GRID)
+            .param("kernel", kernel)
             .param("lanes", lanes)
             .param("threads", threads)
             .metric("sweep_ms", per_sweep_s * 1e3)

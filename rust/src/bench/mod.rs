@@ -29,12 +29,16 @@ pub fn time_fn<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Vec<f64> {
 /// One benchmark measurement with its label and metadata.
 #[derive(Clone, Debug)]
 pub struct Record {
+    /// Row label (sampler/backend name).
     pub label: String,
+    /// Ordered `(key, value)` parameters of the measurement.
     pub params: Vec<(String, String)>,
+    /// Ordered `(key, value)` measured metrics.
     pub metrics: Vec<(String, f64)>,
 }
 
 impl Record {
+    /// Empty record with a label.
     pub fn new(label: impl Into<String>) -> Self {
         Self {
             label: label.into(),
@@ -43,11 +47,13 @@ impl Record {
         }
     }
 
+    /// Append one parameter (builder style).
     pub fn param(mut self, key: &str, value: impl ToString) -> Self {
         self.params.push((key.to_string(), value.to_string()));
         self
     }
 
+    /// Append one metric (builder style).
     pub fn metric(mut self, key: &str, value: f64) -> Self {
         self.metrics.push((key.to_string(), value));
         self
@@ -67,12 +73,15 @@ impl Record {
 
 /// Collects records, prints the table, writes the JSON report.
 pub struct Report {
+    /// Report (and JSON file) name.
     pub name: String,
+    /// Collected rows in push order.
     pub records: Vec<Record>,
     started: Instant,
 }
 
 impl Report {
+    /// Start a report (prints the bench banner).
     pub fn new(name: &str) -> Self {
         println!("== bench: {name} ==");
         Self {
@@ -82,6 +91,7 @@ impl Report {
         }
     }
 
+    /// Add one record, streaming it to stdout.
     pub fn push(&mut self, r: Record) {
         // stream rows as they complete (benches can run minutes)
         let params = r

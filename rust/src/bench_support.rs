@@ -112,9 +112,13 @@ pub fn mixing_run(
 /// Result of the end-to-end denoising run.
 #[derive(Clone, Copy, Debug)]
 pub struct DenoiseResult {
+    /// Pixel accuracy of the noisy observation vs ground truth.
     pub noisy_accuracy: f64,
+    /// Pixel accuracy after thresholding the sampled marginals.
     pub denoised_accuracy: f64,
+    /// Sweeps executed by the sampler.
     pub sweeps: usize,
+    /// Wall-clock sampling time in seconds.
     pub seconds: f64,
 }
 

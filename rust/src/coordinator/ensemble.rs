@@ -39,6 +39,7 @@ impl PdEnsemble {
         Self::from_model(DualModel::from_graph(graph), chains, seed)
     }
 
+    /// Wrap an existing dual model (shared slot space with the graph).
     pub fn from_model(model: DualModel, chains: usize, seed: u64) -> Self {
         assert!(chains >= 1);
         let n = model.num_vars();
@@ -78,14 +79,17 @@ impl PdEnsemble {
         }
     }
 
+    /// Number of chains (engine lanes).
     pub fn num_chains(&self) -> usize {
         self.engine.lanes()
     }
 
+    /// Total sweeps performed since construction.
     pub fn sweeps_done(&self) -> usize {
         self.sweeps_done
     }
 
+    /// The shared dual model.
     pub fn model(&self) -> &DualModel {
         self.engine.model()
     }

@@ -36,6 +36,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Fresh empty registry.
     pub fn new() -> Self {
         Self::default()
     }
@@ -53,10 +54,12 @@ impl Metrics {
         }
     }
 
+    /// Increment a counter by 1.
     pub fn inc(&self, name: &str) {
         self.add(name, 1);
     }
 
+    /// Increment a counter by `delta`.
     pub fn add(&self, name: &str, delta: u64) {
         *self
             .inner
@@ -67,6 +70,7 @@ impl Metrics {
             .or_insert(0) += delta;
     }
 
+    /// Set a gauge to an absolute value.
     pub fn set_gauge(&self, name: &str, value: f64) {
         self.inner
             .gauges
@@ -94,6 +98,7 @@ impl Metrics {
         out
     }
 
+    /// A counter's current value (0 if never touched).
     pub fn counter(&self, name: &str) -> u64 {
         self.inner
             .counters
@@ -183,26 +188,32 @@ impl MetricsView {
         k
     }
 
+    /// Increment a scoped counter by 1.
     pub fn inc(&self, name: &str) {
         self.add(name, 1);
     }
 
+    /// Increment a scoped counter by `delta`.
     pub fn add(&self, name: &str, delta: u64) {
         self.registry.add(&self.key(name), delta);
     }
 
+    /// Set a scoped gauge to an absolute value.
     pub fn set_gauge(&self, name: &str, value: f64) {
         self.registry.set_gauge(&self.key(name), value);
     }
 
+    /// Record one scoped duration observation.
     pub fn observe(&self, name: &str, seconds: f64) {
         self.registry.observe(&self.key(name), seconds);
     }
 
+    /// Time `f` and record it under the scoped name.
     pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
         self.registry.time(&self.key(name), f)
     }
 
+    /// A scoped counter's current value.
     pub fn counter(&self, name: &str) -> u64 {
         self.registry.counter(&self.key(name))
     }

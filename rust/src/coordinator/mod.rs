@@ -165,6 +165,7 @@ impl Coordinator {
         }
     }
 
+    /// Number of shard workers.
     pub fn num_shards(&self) -> usize {
         self.txs.len()
     }
@@ -321,6 +322,7 @@ impl Client {
             .map_err(|_| crate::err!("shard {shard} dropped before replying"))
     }
 
+    /// Number of shard workers this client can address.
     pub fn num_shards(&self) -> usize {
         self.txs.len()
     }

@@ -30,7 +30,9 @@ use super::tenant::TenantId;
 /// One background grant: run `sweeps` sweeps of `tenant`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Slice {
+    /// Tenant to sweep.
     pub tenant: TenantId,
+    /// Granted sweep count (≥ 1).
     pub sweeps: usize,
 }
 
@@ -56,6 +58,7 @@ impl DrrScheduler {
         }
     }
 
+    /// Per-tenant cost budget per ring pass.
     pub fn quantum(&self) -> u64 {
         self.quantum
     }
@@ -65,6 +68,7 @@ impl DrrScheduler {
         self.ring.len()
     }
 
+    /// Whether no tenants are enrolled.
     pub fn is_empty(&self) -> bool {
         self.ring.is_empty()
     }

@@ -33,7 +33,9 @@ const TENANT: u64 = 0;
 /// Server construction parameters (compat shape).
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
+    /// Chains (engine lanes) of the single tenant.
     pub chains: usize,
+    /// Root RNG seed of the tenant ensemble.
     pub seed: u64,
     /// Target sweeps per idle background slice (0 disables background
     /// sweeping). Internally mapped to a DRR quantum at the spawn-time
@@ -62,10 +64,15 @@ impl Default for ServerConfig {
 /// [`super::TenantStats`] for the richer multi-tenant form).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServerStats {
+    /// Variables in the served model.
     pub num_vars: usize,
+    /// Live factors in the served model.
     pub num_factors: usize,
+    /// Total sweeps (foreground + background).
     pub sweeps_done: usize,
+    /// Churn operations applied so far.
     pub ops_applied: u64,
+    /// The graph's monotone topology version.
     pub graph_version: u64,
 }
 
@@ -161,6 +168,7 @@ impl Server {
         }
     }
 
+    /// A cloneable client handle to this server.
     pub fn handle(&self) -> Handle {
         self.handle.clone()
     }

@@ -86,9 +86,11 @@ pub(super) enum ShardRequest {
 /// Aggregate snapshot of one shard.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardStats {
+    /// Shard index.
     pub shard: usize,
     /// Hosted tenants (including suspended ones).
     pub tenants: usize,
+    /// Currently suspended tenants.
     pub suspended: usize,
     /// Requests handled since spawn (all kinds).
     pub requests: u64,
@@ -99,9 +101,11 @@ pub struct ShardStats {
 
 /// Per-shard fixed parameters.
 pub(super) struct ShardConfig {
+    /// Index of this shard within the coordinator.
     pub shard_id: usize,
     /// DRR quantum in site-visits; 0 disables background sweeping.
     pub quantum: u64,
+    /// Native-vs-XLA dispatch policy evaluated per tenant.
     pub dispatch: DispatchPolicy,
     /// Artifact manifest consulted by the dispatch policy (None: the
     /// offline default — every decision is `Native`, but `stable_for`

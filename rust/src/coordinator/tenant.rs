@@ -51,19 +51,24 @@ impl Default for TenantConfig {
 /// Snapshot of one tenant's serving state.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TenantStats {
+    /// Variables in the tenant's model.
     pub num_vars: usize,
+    /// Live factors in the tenant's model.
     pub num_factors: usize,
     /// Total sweeps (foreground + background).
     pub sweeps_done: usize,
     /// Background sweeps granted by the fair-share scheduler.
     pub background_sweeps: u64,
+    /// Churn operations applied so far.
     pub ops_applied: u64,
+    /// The tenant graph's monotone topology version.
     pub graph_version: u64,
     /// Sweeps since the last topology mutation — the dispatch policy's
     /// stability input.
     pub stable_for: usize,
     /// Current per-sweep cost in site-visits (the scheduler's unit).
     pub cost: u64,
+    /// Whether the tenant is excluded from background sweeping.
     pub suspended: bool,
     /// What the dispatch policy would run the next sweep batch on, given
     /// the shard's artifact manifest and this tenant's stability.
@@ -182,6 +187,7 @@ impl Tenant {
         self.stable_for += n;
     }
 
+    /// Clear the marginal accumulation window.
     pub fn reset_stats(&mut self) {
         self.ensemble.reset_stats();
     }
@@ -195,10 +201,12 @@ impl Tenant {
         self.ensemble.park();
     }
 
+    /// Re-enroll a suspended tenant for background sweeping.
     pub fn resume(&mut self) {
         self.suspended = false;
     }
 
+    /// Whether the tenant is currently suspended.
     pub fn is_suspended(&self) -> bool {
         self.suspended
     }
@@ -209,6 +217,7 @@ impl Tenant {
         self.ensemble.cost()
     }
 
+    /// Current per-variable marginal estimates.
     pub fn marginals(&self) -> Vec<f64> {
         self.ensemble.marginals()
     }

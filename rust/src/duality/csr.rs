@@ -26,6 +26,162 @@
 //! so the bookkeeping stays O(vars) however long a steady churn run gets);
 //! compaction reorders exactly those views, and owners refresh derived
 //! caches for them alone.
+//!
+//! The same arena discipline backs the cached x-conditional tables: see
+//! [`XTableArena`] for the tile-aligned structure-of-arrays layout the
+//! SIMD-tiled lane kernels gather from.
+
+use crate::util::aligned::{AlignedF64s, F64S_PER_CACHE_LINE};
+
+/// Tile-aligned arena of per-variable cached x-conditional tables.
+///
+/// [`super::DualModel`] caches, for every variable of degree ≤ 6, the
+/// Bernoulli acceptance parts `(mult, thresh)` of its conditional for
+/// every θ-bit pattern — `2^deg` entries. This arena stores those tables
+/// the way the SIMD-tiled kernels want to read them:
+///
+/// * **structure-of-arrays**: one flat `mult` array and one flat
+///   `thresh` array (not `Vec<(f64, f64)>` per variable), so the
+///   per-lane gather walks two homogeneous streams;
+/// * **tile-aligned**: storage is 64-byte-aligned ([`AlignedF64s`]) and
+///   every table starts at a multiple of [`F64S_PER_CACHE_LINE`]
+///   entries, so a table never straddles a cache line it doesn't own;
+/// * **churn-friendly**: a table that shrinks (or keeps its size) under
+///   churn is rewritten in place; one that grows abandons its block for
+///   a fresh one at the arena end, and once abandoned *slack* outgrows a
+///   quarter of the arena the whole thing is compacted in one O(total)
+///   pass — the same epoch-compaction idiom as [`CsrIncidence`].
+#[derive(Clone, Debug, Default)]
+pub struct XTableArena {
+    /// Per-variable block start (in entries); `u32::MAX` = no block.
+    off: Vec<u32>,
+    /// Per-variable live entries (`2^deg`); 0 = no cached table.
+    len: Vec<u32>,
+    /// Per-variable block capacity, a multiple of the tile width.
+    cap: Vec<u32>,
+    mult: AlignedF64s,
+    thresh: AlignedF64s,
+    /// Entries in abandoned blocks, reclaimed by compaction.
+    slack: usize,
+}
+
+impl XTableArena {
+    /// Empty arena over `n` variables.
+    pub fn new(n: usize) -> Self {
+        Self {
+            off: vec![u32::MAX; n],
+            len: vec![0; n],
+            cap: vec![0; n],
+            mult: AlignedF64s::new(),
+            thresh: AlignedF64s::new(),
+            slack: 0,
+        }
+    }
+
+    /// Register one more variable (no table until the first `set`).
+    pub fn add_var(&mut self) {
+        self.off.push(u32::MAX);
+        self.len.push(0);
+        self.cap.push(0);
+    }
+
+    /// Entries in abandoned blocks awaiting compaction.
+    pub fn slack(&self) -> usize {
+        self.slack
+    }
+
+    /// `v`'s cached table as parallel `(mult, thresh)` slices, or `None`
+    /// when the variable has no cached table.
+    #[inline]
+    pub fn get(&self, v: usize) -> Option<(&[f64], &[f64])> {
+        let len = self.len[v] as usize;
+        if len == 0 {
+            return None;
+        }
+        let off = self.off[v] as usize;
+        Some((
+            &self.mult.as_slice()[off..off + len],
+            &self.thresh.as_slice()[off..off + len],
+        ))
+    }
+
+    /// Install `v`'s table (parallel `mult`/`thresh` values, non-empty).
+    /// Rewrites in place when the current block is large enough, else
+    /// relocates to the arena end; may trigger a compaction.
+    pub fn set(&mut self, v: usize, mult: &[f64], thresh: &[f64]) {
+        assert_eq!(mult.len(), thresh.len());
+        assert!(!mult.is_empty(), "use clear() to drop a table");
+        let n = mult.len();
+        if n <= self.cap[v] as usize {
+            let off = self.off[v] as usize;
+            self.mult.as_mut_slice()[off..off + n].copy_from_slice(mult);
+            self.thresh.as_mut_slice()[off..off + n].copy_from_slice(thresh);
+            self.len[v] = n as u32;
+            return;
+        }
+        // grow: abandon the old block (if any) and append a padded one
+        self.slack += self.cap[v] as usize;
+        let off = self.mult.len();
+        debug_assert_eq!(off % F64S_PER_CACHE_LINE, 0, "arena lost tile alignment");
+        let cap = n.div_ceil(F64S_PER_CACHE_LINE) * F64S_PER_CACHE_LINE;
+        self.mult.extend_from_slice(mult);
+        self.thresh.extend_from_slice(thresh);
+        for _ in n..cap {
+            self.mult.push(0.0);
+            self.thresh.push(0.0);
+        }
+        self.off[v] = off as u32;
+        self.len[v] = n as u32;
+        self.cap[v] = cap as u32;
+        self.maybe_compact();
+    }
+
+    /// Drop `v`'s table (degree rose above the cache cap).
+    pub fn clear(&mut self, v: usize) {
+        self.slack += self.cap[v] as usize;
+        self.off[v] = u32::MAX;
+        self.len[v] = 0;
+        self.cap[v] = 0;
+        self.maybe_compact();
+    }
+
+    /// Compact once abandoned slack outgrows a quarter of the arena
+    /// (floor 16 — mirrors [`CsrIncidence::needs_compaction`]).
+    fn maybe_compact(&mut self) {
+        if self.slack > 16 && self.slack * 4 > self.mult.len() {
+            self.compact();
+        }
+    }
+
+    /// Repack every live block contiguously (shrinking caps to the padded
+    /// table size) and reset slack to zero.
+    fn compact(&mut self) {
+        let mut mult = AlignedF64s::new();
+        let mut thresh = AlignedF64s::new();
+        for v in 0..self.off.len() {
+            let n = self.len[v] as usize;
+            if n == 0 {
+                self.off[v] = u32::MAX;
+                self.cap[v] = 0;
+                continue;
+            }
+            let old = self.off[v] as usize;
+            let off = mult.len();
+            let cap = n.div_ceil(F64S_PER_CACHE_LINE) * F64S_PER_CACHE_LINE;
+            mult.extend_from_slice(&self.mult.as_slice()[old..old + n]);
+            thresh.extend_from_slice(&self.thresh.as_slice()[old..old + n]);
+            for _ in n..cap {
+                mult.push(0.0);
+                thresh.push(0.0);
+            }
+            self.off[v] = off as u32;
+            self.cap[v] = cap as u32;
+        }
+        self.mult = mult;
+        self.thresh = thresh;
+        self.slack = 0;
+    }
+}
 
 /// Flat CSR incidence with a delta overlay (see module docs).
 #[derive(Clone, Debug, Default)]
@@ -67,6 +223,7 @@ impl CsrIncidence {
         }
     }
 
+    /// Number of variables the arena covers.
     pub fn num_vars(&self) -> usize {
         self.overlay.len()
     }
@@ -297,6 +454,74 @@ mod tests {
         let (slots, _, overlay) = csr.view(1);
         assert!(slots.is_empty());
         assert_eq!(overlay, &[(3, -1.0)]);
+    }
+
+    #[test]
+    fn xtable_arena_roundtrips_and_stays_tile_aligned() {
+        let mut xt = XTableArena::new(3);
+        assert!(xt.get(0).is_none());
+        xt.set(0, &[1.0, 2.0], &[3.0, 4.0]);
+        xt.set(2, &[5.0; 16], &[6.0; 16]);
+        let (m, t) = xt.get(0).unwrap();
+        assert_eq!((m, t), (&[1.0, 2.0][..], &[3.0, 4.0][..]));
+        let (m, t) = xt.get(2).unwrap();
+        assert_eq!(m, &[5.0; 16][..]);
+        assert_eq!(t, &[6.0; 16][..]);
+        // every block starts on a 64-byte boundary
+        for v in [0usize, 2] {
+            let (m, t) = xt.get(v).unwrap();
+            assert_eq!(m.as_ptr() as usize % 64, 0, "mult block of {v}");
+            assert_eq!(t.as_ptr() as usize % 64, 0, "thresh block of {v}");
+        }
+    }
+
+    #[test]
+    fn xtable_arena_shrink_in_place_grow_relocates() {
+        let mut xt = XTableArena::new(2);
+        xt.set(0, &[1.0; 8], &[1.0; 8]);
+        assert_eq!(xt.slack(), 0);
+        // shrink: same block, no slack
+        xt.set(0, &[2.0; 4], &[2.5; 4]);
+        assert_eq!(xt.slack(), 0);
+        assert_eq!(xt.get(0).unwrap().0, &[2.0; 4][..]);
+        // regrow within capacity: still in place
+        xt.set(0, &[3.0; 8], &[3.5; 8]);
+        assert_eq!(xt.slack(), 0);
+        // grow past capacity: relocate, old block becomes slack
+        xt.set(0, &[4.0; 16], &[4.5; 16]);
+        assert_eq!(xt.slack(), 8);
+        assert_eq!(xt.get(0).unwrap().0, &[4.0; 16][..]);
+        // clear frees the block
+        xt.clear(0);
+        assert!(xt.get(0).is_none());
+    }
+
+    #[test]
+    fn xtable_arena_compacts_under_churn() {
+        let mut xt = XTableArena::new(4);
+        // keep growing var 0's table so it abandons blocks repeatedly,
+        // while var 1 holds a stable table that must survive compaction
+        xt.set(1, &[9.0, 8.0, 7.0], &[0.9, 0.8, 0.7]);
+        for round in 0..50usize {
+            let n = 8 << (round % 3); // 8, 16, 32, 8, ... grow + shrink
+            xt.set(0, &vec![round as f64; n], &vec![0.5; n]);
+            // maybe_compact's post-condition must hold after EVERY
+            // mutation: slack small in absolute terms OR at most a
+            // quarter of the arena — this fails if compaction is broken
+            assert!(
+                xt.slack() <= 16 || xt.slack() * 4 <= xt.mult.len(),
+                "round {round}: slack {} vs arena {}",
+                xt.slack(),
+                xt.mult.len()
+            );
+        }
+        let (m, t) = xt.get(1).unwrap();
+        assert_eq!(m, &[9.0, 8.0, 7.0][..]);
+        assert_eq!(t, &[0.9, 0.8, 0.7][..]);
+        let (m, _) = xt.get(0).unwrap();
+        assert_eq!(m[0], 49.0);
+        // compaction keeps tile alignment
+        assert_eq!(m.as_ptr() as usize % 64, 0);
     }
 
     #[test]

@@ -22,10 +22,15 @@
 /// that `u`/`v` may contain zeros for degenerate (indicator) components.
 #[derive(Clone, Debug)]
 pub struct CategoricalDual {
+    /// Mixture weights, one per component.
     pub g: Vec<f64>,
+    /// `u[t][a]`: component `t` factor over the first variable.
     pub u: Vec<Vec<f64>>,
+    /// `v[t][b]`: component `t` factor over the second variable.
     pub v: Vec<Vec<f64>>,
+    /// States of the first variable.
     pub k: usize,
+    /// States of the second variable.
     pub l: usize,
 }
 
@@ -115,6 +120,7 @@ impl CategoricalDual {
         &self.u[t]
     }
 
+    /// Component `t`'s factor over the second variable (see [`CategoricalDual::message_to_v1`]).
     pub fn message_to_v2(&self, t: usize) -> &[f64] {
         &self.v[t]
     }

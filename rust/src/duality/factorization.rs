@@ -19,10 +19,15 @@
 /// marginalizing `θ` recovers the factor's table up to a global constant.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DualFactor {
+    /// Base-field contribution to the first endpoint.
     pub alpha1: f64,
+    /// Base-field contribution to the second endpoint.
     pub alpha2: f64,
+    /// The dual's prior log-odds.
     pub q: f64,
+    /// Coupling of the dual to the first endpoint.
     pub beta1: f64,
+    /// Coupling of the dual to the second endpoint.
     pub beta2: f64,
 }
 

@@ -12,7 +12,9 @@
 //!   incremental add/remove, shared by every sampler and the XLA runtime.
 //! * [`csr`] — [`CsrIncidence`]: the flat incidence arena (CSR base +
 //!   delta overlay + epoch compaction) mirroring the model's nested
-//!   reference incidence for the sweep hot path.
+//!   reference incidence for the sweep hot path; [`XTableArena`]: the
+//!   tile-aligned structure-of-arrays arena of cached x-conditional
+//!   tables the SIMD-tiled lane kernels gather from.
 //! * [`encoding`] — §4.2 multi-state variables via 0–1 encoding, Potts
 //!   short-cut (order-n factor → n+1 dual states).
 //! * [`sw`] — §4.3: Swendsen–Wang / Higdon partial-SW as degenerate
@@ -24,6 +26,6 @@ pub mod factorization;
 pub mod model;
 pub mod sw;
 
-pub use csr::CsrIncidence;
+pub use csr::{CsrIncidence, XTableArena};
 pub use factorization::{dualize_table, factorize_positive, DualFactor};
 pub use model::{DualEntry, DualModel};

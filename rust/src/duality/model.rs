@@ -21,7 +21,7 @@
 //! the "almost no preprocessing" claim that the dynamic benchmark
 //! quantifies against graph-coloring repair.
 
-use super::csr::CsrIncidence;
+use super::csr::{CsrIncidence, XTableArena};
 use super::factorization::{dualize_table, DualFactor};
 use crate::graph::{FactorGraph, FactorId, PairFactor, VarId};
 use crate::rng::{bernoulli_sigmoid_parts, sigmoid_fast};
@@ -33,12 +33,19 @@ const X_TABLE_MAX_DEG: usize = 6;
 /// Dual parameters + endpoints of one live factor.
 #[derive(Clone, Copy, Debug)]
 pub struct DualEntry {
+    /// First endpoint variable.
     pub v1: VarId,
+    /// Second endpoint variable.
     pub v2: VarId,
+    /// The dual's prior log-odds (Theorem 2).
     pub q: f64,
+    /// Coupling of θ to `x_{v1}`.
     pub beta1: f64,
+    /// Coupling of θ to `x_{v2}`.
     pub beta2: f64,
+    /// Base-field contribution absorbed into `v1`'s field.
     pub alpha1: f64,
+    /// Base-field contribution absorbed into `v2`'s field.
     pub alpha2: f64,
 }
 
@@ -61,9 +68,13 @@ pub struct DualModel {
     slot_v1: Vec<u32>,
     slot_v2: Vec<u32>,
     /// Per-variable Bernoulli acceptance parts over θ-bit patterns, in the
-    /// exact iteration order of `csr.view(v)`; empty when the view is
-    /// longer than [`X_TABLE_MAX_DEG`]. Rebuilt on churn at the endpoints.
-    x_tables: Vec<Vec<(f64, f64)>>,
+    /// exact iteration order of `csr.view(v)`, stored as a tile-aligned
+    /// structure-of-arrays arena ([`XTableArena`]: flat `mult`/`thresh`
+    /// streams, every table on a cache-line boundary) so the lane
+    /// kernels' gather reads two homogeneous arrays. No table when the
+    /// view is longer than [`X_TABLE_MAX_DEG`]. Rebuilt on churn at the
+    /// endpoints.
+    x_tables: XTableArena,
     active: usize,
 }
 
@@ -95,7 +106,7 @@ impl DualModel {
             theta_tables: Vec::new(),
             slot_v1: Vec::new(),
             slot_v2: Vec::new(),
-            x_tables: vec![Vec::new(); n],
+            x_tables: XTableArena::new(n),
             active: 0,
         };
         for v in 0..n {
@@ -104,10 +115,12 @@ impl DualModel {
         m
     }
 
+    /// Number of primal variables.
     pub fn num_vars(&self) -> usize {
         self.base_field.len()
     }
 
+    /// Number of live factors.
     pub fn num_factors(&self) -> usize {
         self.active
     }
@@ -128,6 +141,7 @@ impl DualModel {
         (self.num_vars() + 2 * self.num_factors() + self.factor_slots()) as u64
     }
 
+    /// The live dual entry in `slot`, or `None` for dead/unknown slots.
     pub fn entry(&self, slot: usize) -> Option<&DualEntry> {
         self.entries.get(slot).and_then(Option::as_ref)
     }
@@ -140,6 +154,7 @@ impl DualModel {
             .filter_map(|(i, e)| e.as_ref().map(|e| (i, e)))
     }
 
+    /// `v`'s effective unary log-odds (unary + absorbed α's).
     pub fn base_field(&self, v: VarId) -> f64 {
         self.base_field[v]
     }
@@ -198,20 +213,17 @@ impl DualModel {
         }
     }
 
-    /// Cached Bernoulli acceptance parts for `x_v`'s conditional, one
-    /// `(mult, thresh)` entry per θ-bit pattern of the CSR view (pattern
-    /// bit `i` = entry `i` in `incidence_csr(v)` order, base then
-    /// overlay; the view width is always the live degree). `None` when
-    /// the degree exceeds [`X_TABLE_MAX_DEG`] and the caller must
-    /// accumulate per lane instead.
+    /// Cached Bernoulli acceptance parts for `x_v`'s conditional, as
+    /// parallel `(mult, thresh)` slices with one entry per θ-bit pattern
+    /// of the CSR view (pattern bit `i` = entry `i` in `incidence_csr(v)`
+    /// order, base then overlay; the view width is always the live
+    /// degree). The slices come from the tile-aligned [`XTableArena`],
+    /// so both start on a cache-line boundary. `None` when the degree
+    /// exceeds [`X_TABLE_MAX_DEG`] and the caller must accumulate per
+    /// lane instead.
     #[inline]
-    pub fn x_table(&self, v: VarId) -> Option<&[(f64, f64)]> {
-        let t = &self.x_tables[v];
-        if t.is_empty() {
-            None
-        } else {
-            Some(t.as_slice())
-        }
+    pub fn x_table(&self, v: VarId) -> Option<(&[f64], &[f64])> {
+        self.x_tables.get(v)
     }
 
     /// Rebuild `v`'s cached x-conditional table from the current CSR view.
@@ -220,11 +232,11 @@ impl DualModel {
     /// in order over the set bits of `m` — the same fold order (and hence
     /// bit-identical draws) as the per-lane accumulate fallback.
     fn rebuild_x_table(&mut self, v: VarId) {
-        let parts = {
+        let z = {
             let (_, betas, overlay) = self.csr.view(v);
             let d = betas.len() + overlay.len();
             if d > X_TABLE_MAX_DEG {
-                Vec::new()
+                None
             } else {
                 let mut z = vec![0.0f64; 1usize << d];
                 z[0] = self.base_field[v];
@@ -238,10 +250,22 @@ impl DualModel {
                         z[m | (1usize << i)] = z[m] + b;
                     }
                 }
-                z.into_iter().map(bernoulli_sigmoid_parts).collect()
+                Some(z)
             }
         };
-        self.x_tables[v] = parts;
+        match z {
+            None => self.x_tables.clear(v),
+            Some(z) => {
+                let mut mult = Vec::with_capacity(z.len());
+                let mut thresh = Vec::with_capacity(z.len());
+                for zi in z {
+                    let (m, t) = bernoulli_sigmoid_parts(zi);
+                    mult.push(m);
+                    thresh.push(t);
+                }
+                self.x_tables.set(v, &mult, &thresh);
+            }
+        }
     }
 
     /// Force a compaction of the incidence arena (normally triggered
@@ -369,7 +393,7 @@ impl DualModel {
         self.base_field.push(unary);
         self.incidence.push(Vec::new());
         self.csr.add_var();
-        self.x_tables.push(Vec::new());
+        self.x_tables.add_var();
         let v = self.base_field.len() - 1;
         self.rebuild_x_table(v);
         v
@@ -459,12 +483,19 @@ pub struct DenseOperands {
     pub j: Vec<f32>,
     /// `(n_pad,)` — reshaped to `(1, n_pad)` at the runtime boundary.
     pub a: Vec<f32>,
+    /// Per-factor dual prior log-odds.
     pub q: Vec<f32>,
+    /// Per-factor first-endpoint coupling β₁.
     pub b1: Vec<f32>,
+    /// Per-factor second-endpoint coupling β₂.
     pub b2: Vec<f32>,
+    /// Per-factor first endpoint index.
     pub v1: Vec<i32>,
+    /// Per-factor second endpoint index.
     pub v2: Vec<i32>,
+    /// Padded variable count.
     pub n_pad: usize,
+    /// Padded factor count.
     pub f_pad: usize,
 }
 
@@ -729,15 +760,19 @@ mod tests {
             let (_, betas, overlay) = m.incidence_csr(v);
             assert!(overlay.is_empty());
             let d = betas.len();
-            let parts = m.x_table(v).expect("grid degree ≤ 2 must be cached");
-            assert_eq!(parts.len(), 1 << d);
+            let (mult, thresh) = m.x_table(v).expect("grid degree ≤ 2 must be cached");
+            assert_eq!(mult.len(), 1 << d);
+            assert_eq!(thresh.len(), 1 << d);
+            // tile-aligned arena: both streams start on a cache line
+            assert_eq!(mult.as_ptr() as usize % 64, 0);
+            assert_eq!(thresh.as_ptr() as usize % 64, 0);
             for mask in 0..(1usize << d) {
                 let mut z = m.base_field(v);
                 for (i, &b) in betas.iter().enumerate() {
                     z += ((mask >> i) & 1) as f64 * b;
                 }
                 let want = bernoulli_sigmoid_parts(z);
-                let got = parts[mask];
+                let got = (mult[mask], thresh[mask]);
                 assert!(
                     (got.0 - want.0).abs() < 1e-15 && (got.1 - want.1).abs() < 1e-15,
                     "v={v} mask={mask}: {got:?} vs {want:?}"
@@ -761,11 +796,11 @@ mod tests {
         let id = g.factors().next().unwrap().0;
         m.remove(id);
         assert!(m.x_table(0).is_some());
-        assert_eq!(m.x_table(0).unwrap().len(), 1 << 6);
+        assert_eq!(m.x_table(0).unwrap().0.len(), 1 << 6);
         // and compaction keeps it intact
         m.compact_incidence();
         assert!(m.x_table(0).is_some());
-        assert_eq!(m.x_table(0).unwrap().len(), 1 << 6);
+        assert_eq!(m.x_table(0).unwrap().0.len(), 1 << 6);
     }
 
     #[test]

@@ -58,6 +58,7 @@ pub struct HigdonDual {
     pub soft_table: [[f64; 2]; 2],
     /// Mass of the hard-agreement component.
     pub alpha: f64,
+    /// Total mass `w` of the decomposed Ising factor.
     pub w: f64,
 }
 

@@ -1,0 +1,788 @@
+//! SIMD-tiled lane kernels: the innermost bodies of the lane sweep.
+//!
+//! The lane engine ([`super::LanePdSampler`]) processes chains in packed
+//! 64-lane words; everything it does per `(site, word)` decomposes into
+//! five primitive operations, collected here behind the [`LaneKernel`]
+//! trait:
+//!
+//! * [`LaneKernel::accumulate`] — fold one packed θ word into 64 per-lane
+//!   log-odds accumulators (`acc[l] += bit·β`),
+//! * [`LaneKernel::gather`] — scatter one packed θ word into 64 per-lane
+//!   conditional-table pattern indices,
+//! * [`LaneKernel::draw_table_word`] — assemble an x draw word from the
+//!   model's cached Bernoulli acceptance parts,
+//! * [`LaneKernel::draw_logodds_word`] — assemble an x draw word from
+//!   accumulated per-lane log-odds (the high-degree fallback),
+//! * [`LaneKernel::draw_theta_word`] — assemble a θ draw word from a
+//!   slot's four-sigmoid table broadcast over the endpoint bits.
+//!
+//! Three interchangeable implementations exist, selected at runtime via
+//! [`KernelKind`] (surfaced through [`super::EngineConfig`] and the bench
+//! CLI's `--kernel` flag):
+//!
+//! * [`ScalarKernel`] — straight per-lane loops; the readable reference,
+//!   byte-for-byte the pre-tiling hot path.
+//! * [`TiledKernel`] — explicit [`TILE`]-wide (8-lane) tiles over
+//!   64-byte-aligned buffers ([`F64Lanes`] / [`U8Lanes`]), with the
+//!   uniform draws refilled through [`Pcg64::fill_f64`]'s jump-ahead
+//!   chains so the LCG's serial dependency no longer gates the draw
+//!   loop. Stable Rust; the tile bodies are fixed-size loops the
+//!   backend lowers to vector instructions.
+//! * `SimdKernel` (feature `nightly-simd`) — the same tile schedule
+//!   written against `core::simd` (`f64x8` + mask selects) for toolchains
+//!   that have `portable_simd`.
+//!
+//! **Determinism contract:** all kernels produce bit-identical draw words
+//! from identical inputs and RNG state. Per lane, the accumulate order
+//! over incidence entries, the acceptance-part arithmetic, and the
+//! uniform consumed are exactly those of [`ScalarKernel`]; tiles only
+//! change *which lanes compute concurrently*, never what any lane
+//! computes. `tests/kernel_equivalence.rs` asserts this for whole
+//! trajectories across lane counts, pool sizes, and churn.
+
+use crate::rng::{bernoulli_from_parts, bernoulli_sigmoid, bernoulli_sigmoid_parts};
+use crate::rng::{Pcg64, RngCore};
+
+/// Lane-tile width: 8 × f64 = one 64-byte cache line
+/// ([`crate::util::aligned::F64S_PER_CACHE_LINE`], the single source of
+/// this constant), one AVX-512 vector, two NEON/SSE pairs — and the
+/// number of jump-ahead RNG chains behind [`Pcg64::fill_f64`] (equality
+/// asserted at compile time below). A packed lane word is
+/// [`LANES_PER_WORD`] / [`TILE`] = 8 tiles.
+pub const TILE: usize = crate::util::aligned::F64S_PER_CACHE_LINE;
+
+// Retuning any one of the three tile-shaped constants silently breaks
+// the others' layout/ILP assumptions — fail the build instead.
+const _: () = assert!(
+    TILE == crate::rng::FILL_CHAINS,
+    "tile width must match fill_f64's jump-ahead chain count"
+);
+const _: () = assert!(
+    LANES_PER_WORD % TILE == 0,
+    "a packed lane word must hold a whole number of tiles"
+);
+
+/// Lanes per packed state word (`u64` bits).
+pub const LANES_PER_WORD: usize = 64;
+
+/// All-ones mask over the low `k` lanes of a packed word (`k ∈ 0..=64`).
+#[inline]
+pub fn lane_mask(k: usize) -> u64 {
+    debug_assert!(k <= LANES_PER_WORD);
+    if k >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << k) - 1
+    }
+}
+
+/// 64-byte-aligned buffer of one `f64` per lane of a packed word
+/// (8 [`TILE`]s); alignment makes every tile a single aligned vector
+/// load/store.
+#[repr(C, align(64))]
+#[derive(Clone, Debug)]
+pub struct F64Lanes(pub [f64; LANES_PER_WORD]);
+
+impl Default for F64Lanes {
+    fn default() -> Self {
+        Self([0.0; LANES_PER_WORD])
+    }
+}
+
+/// 64-byte-aligned buffer of one pattern index per lane of a packed word.
+#[repr(C, align(64))]
+#[derive(Clone, Debug)]
+pub struct U8Lanes(pub [u8; LANES_PER_WORD]);
+
+impl Default for U8Lanes {
+    fn default() -> Self {
+        Self([0; LANES_PER_WORD])
+    }
+}
+
+/// Reusable per-draw scratch: the uniform buffer and two gathered operand
+/// buffers (mult/thresh, or the broadcast θ probabilities). Owned by
+/// [`SweepBuf`]; filled fresh for the live lanes of every word, so stale
+/// ghost-lane contents are never observable (draw words are masked to the
+/// live lane count).
+#[derive(Clone, Debug, Default)]
+pub struct DrawScratch {
+    /// Per-lane uniforms, consumed in lane order (the determinism key).
+    pub u: F64Lanes,
+    /// First gathered operand (acceptance `mult`, or θ probability).
+    pub a: F64Lanes,
+    /// Second gathered operand (acceptance `thresh`).
+    pub b: F64Lanes,
+}
+
+/// All per-worker sweep state: tile-major, 64-byte-aligned, allocated
+/// once per sweep chunk and reused across every site in it — the sweep
+/// hot path performs no per-site allocation.
+#[derive(Clone, Debug, Default)]
+pub struct SweepBuf {
+    /// Per-lane log-odds accumulators (high-degree x fallback).
+    pub acc: F64Lanes,
+    /// Per-lane conditional-table pattern indices (cached-table x path).
+    pub idx: U8Lanes,
+    /// Draw-word assembly scratch.
+    pub draw: DrawScratch,
+}
+
+impl SweepBuf {
+    /// Fresh zeroed buffers.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Runtime-selectable lane-kernel implementation (see module docs).
+///
+/// Every variant samples the *same trajectory*; the choice is purely a
+/// performance knob, so it can be flipped per engine without touching
+/// reproducibility. Parsed from the bench CLI via [`KernelKind::parse`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelKind {
+    /// Per-lane reference loops ([`ScalarKernel`]).
+    Scalar,
+    /// Explicitly 8-lane-tiled stable-Rust kernels ([`TiledKernel`]).
+    #[default]
+    Tiled,
+    /// `core::simd` kernels; only with the `nightly-simd` feature.
+    #[cfg(feature = "nightly-simd")]
+    Simd,
+}
+
+impl KernelKind {
+    /// Parse a CLI name (`scalar` / `tiled` / `nightly-simd`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "scalar" => Some(Self::Scalar),
+            "tiled" => Some(Self::Tiled),
+            #[cfg(feature = "nightly-simd")]
+            "nightly-simd" | "simd" => Some(Self::Simd),
+            _ => None,
+        }
+    }
+
+    /// The CLI/report name of this kernel.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Scalar => "scalar",
+            Self::Tiled => "tiled",
+            #[cfg(feature = "nightly-simd")]
+            Self::Simd => "nightly-simd",
+        }
+    }
+
+    /// Every kernel compiled into this build.
+    pub fn all() -> &'static [KernelKind] {
+        const ALL: &[KernelKind] = &[
+            KernelKind::Scalar,
+            KernelKind::Tiled,
+            #[cfg(feature = "nightly-simd")]
+            KernelKind::Simd,
+        ];
+        ALL
+    }
+}
+
+/// The five primitive lane operations a sweep is built from (see module
+/// docs). Implementations are zero-sized types; the engine monomorphizes
+/// one sweep body per kernel and dispatches once per sweep.
+pub trait LaneKernel {
+    /// Report/bench label of this implementation.
+    const NAME: &'static str;
+
+    /// `acc[l] += θ_l · β` for all 64 lanes of packed θ word `tw`.
+    ///
+    /// Ghost lanes accumulate garbage the caller never draws from. The
+    /// arithmetic per lane must be exactly `((tw >> l) & 1) as f64 * β`
+    /// added in incidence order — the fold order the cached x-tables
+    /// replicate.
+    fn accumulate(acc: &mut F64Lanes, tw: u64, beta: f64);
+
+    /// Set bit `bit` of each lane's pattern index to that lane's θ bit.
+    fn gather(idx: &mut U8Lanes, tw: u64, bit: u32);
+
+    /// Assemble the x draw word for one packed word from the model's
+    /// cached acceptance parts (`mult`/`thresh`, indexed by each lane's
+    /// gathered pattern): lane `l` of the result is
+    /// `u_l · mult[idx_l] < thresh[idx_l]`, with `u_l` the `l`-th next
+    /// uniform of `rng`. Exactly `k` uniforms are consumed; bits `k..`
+    /// are zero.
+    fn draw_table_word(
+        rng: &mut Pcg64,
+        mult: &[f64],
+        thresh: &[f64],
+        idx: &U8Lanes,
+        k: usize,
+        scratch: &mut DrawScratch,
+    ) -> u64;
+
+    /// Assemble the x draw word from accumulated per-lane log-odds: lane
+    /// `l` draws `Bernoulli(σ(acc_l))` via the same acceptance-part
+    /// comparison as the cached path. Exactly `k` uniforms are consumed;
+    /// bits `k..` are zero.
+    fn draw_logodds_word(
+        rng: &mut Pcg64,
+        acc: &F64Lanes,
+        k: usize,
+        scratch: &mut DrawScratch,
+    ) -> u64;
+
+    /// Assemble the θ draw word for one factor slot: lane `l` draws
+    /// `Bernoulli(p[x1_l | x2_l·2])` from the slot's cached four-sigmoid
+    /// table. Exactly `k` uniforms are consumed; bits `k..` are zero.
+    fn draw_theta_word(
+        rng: &mut Pcg64,
+        p: &[f64; 4],
+        x1: u64,
+        x2: u64,
+        k: usize,
+        scratch: &mut DrawScratch,
+    ) -> u64;
+}
+
+// -- scalar reference -------------------------------------------------------
+
+/// Per-lane reference kernels — the pre-tiling hot path, kept verbatim as
+/// the readable baseline every other kernel must match bit-for-bit.
+pub struct ScalarKernel;
+
+impl LaneKernel for ScalarKernel {
+    const NAME: &'static str = "scalar";
+
+    #[inline(always)]
+    fn accumulate(acc: &mut F64Lanes, tw: u64, beta: f64) {
+        if tw == 0 {
+            return;
+        }
+        if tw == u64::MAX {
+            // word-level shortcut: adds β to every lane, exactly what the
+            // general body computes for all-ones
+            for a in acc.0.iter_mut() {
+                *a += beta;
+            }
+        } else {
+            for (l, a) in acc.0.iter_mut().enumerate() {
+                *a += ((tw >> l) & 1) as f64 * beta;
+            }
+        }
+    }
+
+    #[inline(always)]
+    fn gather(idx: &mut U8Lanes, tw: u64, bit: u32) {
+        if tw == 0 {
+            return;
+        }
+        let b = 1u8 << bit;
+        if tw == u64::MAX {
+            for i in idx.0.iter_mut() {
+                *i |= b;
+            }
+        } else {
+            for (l, i) in idx.0.iter_mut().enumerate() {
+                *i |= (((tw >> l) & 1) as u8) << bit;
+            }
+        }
+    }
+
+    #[inline(always)]
+    fn draw_table_word(
+        rng: &mut Pcg64,
+        mult: &[f64],
+        thresh: &[f64],
+        idx: &U8Lanes,
+        k: usize,
+        _scratch: &mut DrawScratch,
+    ) -> u64 {
+        let mut word = 0u64;
+        for (l, &i) in idx.0[..k].iter().enumerate() {
+            let hit = bernoulli_from_parts(rng, mult[i as usize], thresh[i as usize]);
+            word |= (hit as u64) << l;
+        }
+        word
+    }
+
+    #[inline(always)]
+    fn draw_logodds_word(
+        rng: &mut Pcg64,
+        acc: &F64Lanes,
+        k: usize,
+        _scratch: &mut DrawScratch,
+    ) -> u64 {
+        let mut word = 0u64;
+        for (l, &z) in acc.0[..k].iter().enumerate() {
+            word |= (bernoulli_sigmoid(rng, z) as u64) << l;
+        }
+        word
+    }
+
+    #[inline(always)]
+    fn draw_theta_word(
+        rng: &mut Pcg64,
+        p: &[f64; 4],
+        x1: u64,
+        x2: u64,
+        k: usize,
+        _scratch: &mut DrawScratch,
+    ) -> u64 {
+        let mut word = 0u64;
+        for l in 0..k {
+            let idx = (((x1 >> l) & 1) | (((x2 >> l) & 1) << 1)) as usize;
+            word |= (rng.bernoulli(p[idx]) as u64) << l;
+        }
+        word
+    }
+}
+
+// -- stable tiled -----------------------------------------------------------
+
+/// Explicitly 8-lane-tiled kernels on stable Rust (see module docs):
+/// fixed-width tile bodies over the 64-byte-aligned [`SweepBuf`] buffers,
+/// uniforms refilled through [`Pcg64::fill_f64`]'s eight jump-ahead
+/// chains, and the per-lane shift-or draw assembly replaced by per-tile
+/// bitmask reduction.
+pub struct TiledKernel;
+
+/// Compare `u·a < b` across all live tiles and pack the results into a
+/// lane word, masked to the low `k` lanes. Tail-tile lanes ≥ `k` compare
+/// stale scratch — finite garbage whose bits the mask then discards.
+#[inline(always)]
+fn compare_tiles_mul(u: &F64Lanes, a: &F64Lanes, b: &F64Lanes, k: usize) -> u64 {
+    let mut word = 0u64;
+    for (t, ((ut, at), bt)) in u
+        .0
+        .chunks_exact(TILE)
+        .zip(a.0.chunks_exact(TILE))
+        .zip(b.0.chunks_exact(TILE))
+        .enumerate()
+    {
+        if t * TILE >= k {
+            break;
+        }
+        let mut bits = 0u64;
+        for (j, ((&uj, &aj), &bj)) in ut.iter().zip(at.iter()).zip(bt.iter()).enumerate() {
+            bits |= ((uj * aj < bj) as u64) << j;
+        }
+        word |= bits << (t * TILE);
+    }
+    word & lane_mask(k)
+}
+
+/// Compare `u < a` across all live tiles, packed and masked as in
+/// [`compare_tiles_mul`].
+#[inline(always)]
+fn compare_tiles_lt(u: &F64Lanes, a: &F64Lanes, k: usize) -> u64 {
+    let mut word = 0u64;
+    for (t, (ut, at)) in u
+        .0
+        .chunks_exact(TILE)
+        .zip(a.0.chunks_exact(TILE))
+        .enumerate()
+    {
+        if t * TILE >= k {
+            break;
+        }
+        let mut bits = 0u64;
+        for (j, (&uj, &aj)) in ut.iter().zip(at.iter()).enumerate() {
+            bits |= ((uj < aj) as u64) << j;
+        }
+        word |= bits << (t * TILE);
+    }
+    word & lane_mask(k)
+}
+
+impl LaneKernel for TiledKernel {
+    const NAME: &'static str = "tiled";
+
+    #[inline(always)]
+    fn accumulate(acc: &mut F64Lanes, tw: u64, beta: f64) {
+        if tw == 0 {
+            return;
+        }
+        if tw == u64::MAX {
+            for tile in acc.0.chunks_exact_mut(TILE) {
+                for a in tile.iter_mut() {
+                    *a += beta;
+                }
+            }
+            return;
+        }
+        for (t, tile) in acc.0.chunks_exact_mut(TILE).enumerate() {
+            let bits = tw >> (t * TILE);
+            // same per-lane arithmetic as ScalarKernel (±0.0 included),
+            // in a fixed 8-wide select+add the backend vectorizes
+            let mut add = [0.0f64; TILE];
+            for (j, v) in add.iter_mut().enumerate() {
+                *v = ((bits >> j) & 1) as f64 * beta;
+            }
+            for (a, &v) in tile.iter_mut().zip(add.iter()) {
+                *a += v;
+            }
+        }
+    }
+
+    #[inline(always)]
+    fn gather(idx: &mut U8Lanes, tw: u64, bit: u32) {
+        if tw == 0 {
+            return;
+        }
+        let b = 1u8 << bit;
+        if tw == u64::MAX {
+            for tile in idx.0.chunks_exact_mut(TILE) {
+                for i in tile.iter_mut() {
+                    *i |= b;
+                }
+            }
+            return;
+        }
+        for (t, tile) in idx.0.chunks_exact_mut(TILE).enumerate() {
+            let bits = tw >> (t * TILE);
+            for (j, i) in tile.iter_mut().enumerate() {
+                *i |= (((bits >> j) & 1) as u8) << bit;
+            }
+        }
+    }
+
+    #[inline(always)]
+    fn draw_table_word(
+        rng: &mut Pcg64,
+        mult: &[f64],
+        thresh: &[f64],
+        idx: &U8Lanes,
+        k: usize,
+        scratch: &mut DrawScratch,
+    ) -> u64 {
+        rng.fill_f64(&mut scratch.u.0, k);
+        for ((a, b), &i) in scratch
+            .a
+            .0
+            .iter_mut()
+            .zip(scratch.b.0.iter_mut())
+            .zip(idx.0[..k].iter())
+        {
+            *a = mult[i as usize];
+            *b = thresh[i as usize];
+        }
+        compare_tiles_mul(&scratch.u, &scratch.a, &scratch.b, k)
+    }
+
+    #[inline(always)]
+    fn draw_logodds_word(
+        rng: &mut Pcg64,
+        acc: &F64Lanes,
+        k: usize,
+        scratch: &mut DrawScratch,
+    ) -> u64 {
+        rng.fill_f64(&mut scratch.u.0, k);
+        for ((a, b), &z) in scratch
+            .a
+            .0
+            .iter_mut()
+            .zip(scratch.b.0.iter_mut())
+            .zip(acc.0[..k].iter())
+        {
+            let (m, t) = bernoulli_sigmoid_parts(z);
+            *a = m;
+            *b = t;
+        }
+        compare_tiles_mul(&scratch.u, &scratch.a, &scratch.b, k)
+    }
+
+    #[inline(always)]
+    fn draw_theta_word(
+        rng: &mut Pcg64,
+        p: &[f64; 4],
+        x1: u64,
+        x2: u64,
+        k: usize,
+        scratch: &mut DrawScratch,
+    ) -> u64 {
+        rng.fill_f64(&mut scratch.u.0, k);
+        for (l, a) in scratch.a.0[..k].iter_mut().enumerate() {
+            let idx = (((x1 >> l) & 1) | (((x2 >> l) & 1) << 1)) as usize;
+            *a = p[idx];
+        }
+        compare_tiles_lt(&scratch.u, &scratch.a, k)
+    }
+}
+
+// -- nightly core::simd -----------------------------------------------------
+
+#[cfg(feature = "nightly-simd")]
+pub use nightly::SimdKernel;
+
+#[cfg(feature = "nightly-simd")]
+mod nightly {
+    //! `core::simd` kernels (`portable_simd`, nightly only). Same tile
+    //! schedule and per-lane arithmetic as [`TiledKernel`], written as
+    //! explicit `f64x8` vectors + mask bit-ops instead of relying on the
+    //! autovectorizer.
+
+    use core::simd::prelude::*;
+
+    use super::*;
+
+    type F8 = Simd<f64, TILE>;
+    type M8 = Mask<i64, TILE>;
+
+    /// `core::simd` implementation of [`LaneKernel`] (see module docs).
+    pub struct SimdKernel;
+
+    #[inline(always)]
+    fn compare_mul(u: &F64Lanes, a: &F64Lanes, b: &F64Lanes, k: usize) -> u64 {
+        let mut word = 0u64;
+        for (t, ((ut, at), bt)) in u
+            .0
+            .chunks_exact(TILE)
+            .zip(a.0.chunks_exact(TILE))
+            .zip(b.0.chunks_exact(TILE))
+            .enumerate()
+        {
+            if t * TILE >= k {
+                break;
+            }
+            let prod = F8::from_slice(ut) * F8::from_slice(at);
+            let bits = prod.simd_lt(F8::from_slice(bt)).to_bitmask();
+            word |= bits << (t * TILE);
+        }
+        word & lane_mask(k)
+    }
+
+    impl LaneKernel for SimdKernel {
+        const NAME: &'static str = "nightly-simd";
+
+        #[inline(always)]
+        fn accumulate(acc: &mut F64Lanes, tw: u64, beta: f64) {
+            if tw == 0 {
+                return;
+            }
+            let beta_v = F8::splat(beta);
+            if tw == u64::MAX {
+                for tile in acc.0.chunks_exact_mut(TILE) {
+                    (F8::from_slice(tile) + beta_v).copy_to_slice(tile);
+                }
+                return;
+            }
+            let (one, zero) = (F8::splat(1.0), F8::splat(0.0));
+            for (t, tile) in acc.0.chunks_exact_mut(TILE).enumerate() {
+                let mask = M8::from_bitmask(tw >> (t * TILE));
+                // select 1.0/0.0 then multiply: keeps the exact scalar
+                // arithmetic `bit as f64 * β` (±0.0 sign included)
+                let add = mask.select(one, zero) * beta_v;
+                (F8::from_slice(tile) + add).copy_to_slice(tile);
+            }
+        }
+
+        #[inline(always)]
+        fn gather(idx: &mut U8Lanes, tw: u64, bit: u32) {
+            // byte scatter: same body as TiledKernel (no f64 lanes here)
+            TiledKernel::gather(idx, tw, bit);
+        }
+
+        #[inline(always)]
+        fn draw_table_word(
+            rng: &mut Pcg64,
+            mult: &[f64],
+            thresh: &[f64],
+            idx: &U8Lanes,
+            k: usize,
+            scratch: &mut DrawScratch,
+        ) -> u64 {
+            rng.fill_f64(&mut scratch.u.0, k);
+            for ((a, b), &i) in scratch
+                .a
+                .0
+                .iter_mut()
+                .zip(scratch.b.0.iter_mut())
+                .zip(idx.0[..k].iter())
+            {
+                *a = mult[i as usize];
+                *b = thresh[i as usize];
+            }
+            compare_mul(&scratch.u, &scratch.a, &scratch.b, k)
+        }
+
+        #[inline(always)]
+        fn draw_logodds_word(
+            rng: &mut Pcg64,
+            acc: &F64Lanes,
+            k: usize,
+            scratch: &mut DrawScratch,
+        ) -> u64 {
+            rng.fill_f64(&mut scratch.u.0, k);
+            for ((a, b), &z) in scratch
+                .a
+                .0
+                .iter_mut()
+                .zip(scratch.b.0.iter_mut())
+                .zip(acc.0[..k].iter())
+            {
+                let (m, t) = bernoulli_sigmoid_parts(z);
+                *a = m;
+                *b = t;
+            }
+            compare_mul(&scratch.u, &scratch.a, &scratch.b, k)
+        }
+
+        #[inline(always)]
+        fn draw_theta_word(
+            rng: &mut Pcg64,
+            p: &[f64; 4],
+            x1: u64,
+            x2: u64,
+            k: usize,
+            scratch: &mut DrawScratch,
+        ) -> u64 {
+            rng.fill_f64(&mut scratch.u.0, k);
+            for (l, a) in scratch.a.0[..k].iter_mut().enumerate() {
+                let idx = (((x1 >> l) & 1) | (((x2 >> l) & 1) << 1)) as usize;
+                *a = p[idx];
+            }
+            let mut word = 0u64;
+            for (t, (ut, at)) in scratch
+                .u
+                .0
+                .chunks_exact(TILE)
+                .zip(scratch.a.0.chunks_exact(TILE))
+                .enumerate()
+            {
+                if t * TILE >= k {
+                    break;
+                }
+                let bits = F8::from_slice(ut).simd_lt(F8::from_slice(at)).to_bitmask();
+                word |= bits << (t * TILE);
+            }
+            word & lane_mask(k)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_word(rng: &mut Pcg64) -> u64 {
+        rng.next_u64()
+    }
+
+    #[test]
+    fn lane_mask_boundaries() {
+        assert_eq!(lane_mask(0), 0);
+        assert_eq!(lane_mask(1), 1);
+        assert_eq!(lane_mask(63), u64::MAX >> 1);
+        assert_eq!(lane_mask(64), u64::MAX);
+    }
+
+    #[test]
+    fn kernel_kind_parse_roundtrip() {
+        for &k in KernelKind::all() {
+            assert_eq!(KernelKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(KernelKind::parse("warp"), None);
+        assert_eq!(KernelKind::default(), KernelKind::Tiled);
+    }
+
+    #[test]
+    fn tiled_accumulate_matches_scalar_bitwise() {
+        let mut rng = Pcg64::seed(21);
+        for case in 0..200 {
+            let tw = match case % 4 {
+                0 => 0,
+                1 => u64::MAX,
+                _ => rand_word(&mut rng),
+            };
+            let beta = (rng.next_f64() - 0.5) * 4.0;
+            let field = (rng.next_f64() - 0.5) * 2.0;
+            let mut a = F64Lanes([field; LANES_PER_WORD]);
+            let mut b = a.clone();
+            ScalarKernel::accumulate(&mut a, tw, beta);
+            TiledKernel::accumulate(&mut b, tw, beta);
+            for l in 0..LANES_PER_WORD {
+                assert_eq!(a.0[l].to_bits(), b.0[l].to_bits(), "case {case} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_gather_matches_scalar() {
+        let mut rng = Pcg64::seed(22);
+        for case in 0..100 {
+            let mut a = U8Lanes::default();
+            let mut b = U8Lanes::default();
+            for bit in 0..6 {
+                let tw = rand_word(&mut rng);
+                ScalarKernel::gather(&mut a, tw, bit);
+                TiledKernel::gather(&mut b, tw, bit);
+            }
+            assert_eq!(a.0, b.0, "case {case}");
+        }
+    }
+
+    #[test]
+    fn tiled_draw_words_match_scalar_and_consume_equal_rng() {
+        let base = Pcg64::seed(23);
+        let mut gen = Pcg64::seed(24);
+        for case in 0..120u64 {
+            let k = 1 + (gen.next_u64() % 64) as usize;
+            // cached-table path operands
+            let table_bits = 3usize;
+            let (mut mult, mut thresh) = (Vec::new(), Vec::new());
+            for m in 0..(1 << table_bits) {
+                let (a, b) = bernoulli_sigmoid_parts((m as f64 - 4.0) * 0.37);
+                mult.push(a);
+                thresh.push(b);
+            }
+            let mut idx = U8Lanes::default();
+            for i in idx.0.iter_mut() {
+                *i = (gen.next_u64() % (1 << table_bits)) as u8;
+            }
+            let mut scratch = DrawScratch::default();
+            let mut r1 = base.split2(case, 0);
+            let mut r2 = r1.clone();
+            let w1 = ScalarKernel::draw_table_word(&mut r1, &mult, &thresh, &idx, k, &mut scratch);
+            let w2 = TiledKernel::draw_table_word(&mut r2, &mult, &thresh, &idx, k, &mut scratch);
+            assert_eq!(w1, w2, "table word diverged, case {case} k {k}");
+            assert_eq!(r1.next_u64(), r2.next_u64(), "rng desync (table), case {case}");
+
+            // log-odds fallback path
+            let mut acc = F64Lanes::default();
+            for a in acc.0.iter_mut() {
+                *a = (gen.next_f64() - 0.5) * 6.0;
+            }
+            let mut r1 = base.split2(case, 1);
+            let mut r2 = r1.clone();
+            let w1 = ScalarKernel::draw_logodds_word(&mut r1, &acc, k, &mut scratch);
+            let w2 = TiledKernel::draw_logodds_word(&mut r2, &acc, k, &mut scratch);
+            assert_eq!(w1, w2, "logodds word diverged, case {case} k {k}");
+            assert_eq!(r1.next_u64(), r2.next_u64(), "rng desync (logodds), case {case}");
+
+            // θ four-sigmoid broadcast path
+            let p = [0.12, 0.48, 0.73, 0.97];
+            let (x1, x2) = (gen.next_u64(), gen.next_u64());
+            let mut r1 = base.split2(case, 2);
+            let mut r2 = r1.clone();
+            let w1 = ScalarKernel::draw_theta_word(&mut r1, &p, x1, x2, k, &mut scratch);
+            let w2 = TiledKernel::draw_theta_word(&mut r2, &p, x1, x2, k, &mut scratch);
+            assert_eq!(w1, w2, "theta word diverged, case {case} k {k}");
+            assert_eq!(r1.next_u64(), r2.next_u64(), "rng desync (theta), case {case}");
+        }
+    }
+
+    #[test]
+    fn draw_words_mask_ghost_lanes() {
+        // stale scratch from a previous full word must never leak into
+        // the bits above k
+        let mut scratch = DrawScratch::default();
+        let mut acc = F64Lanes([40.0; LANES_PER_WORD]); // σ ≈ 1: draws all-ones
+        let mut rng = Pcg64::seed(31);
+        let full = TiledKernel::draw_logodds_word(&mut rng, &acc, 64, &mut scratch);
+        assert_eq!(full, u64::MAX);
+        acc = F64Lanes([40.0; LANES_PER_WORD]);
+        let mut rng = Pcg64::seed(31);
+        let tail = TiledKernel::draw_logodds_word(&mut rng, &acc, 5, &mut scratch);
+        assert_eq!(tail & !lane_mask(5), 0, "ghost lanes set: {tail:#x}");
+        assert_eq!(tail, lane_mask(5));
+    }
+}

@@ -20,24 +20,40 @@
 //! The sweep hot path runs on flat arenas, not the model's nested
 //! reference structures: the CSR incidence view
 //! ([`crate::duality::DualModel::incidence_csr`]), the per-slot cached
-//! four-sigmoid θ tables, and — for low-degree variables — cached
-//! per-pattern Bernoulli acceptance parts that remove the exponential
+//! four-sigmoid θ tables, and — for low-degree variables — a tile-aligned
+//! arena of cached per-pattern Bernoulli acceptance parts
+//! ([`crate::duality::DualModel::x_table`]) that removes the exponential
 //! from the per-lane draw entirely. All three caches are invalidated by
 //! churn only, never by sweeping.
 //!
+//! The innermost `(site, word)` bodies live in [`kernels`] behind the
+//! [`kernels::LaneKernel`] trait and are selected at runtime via
+//! [`EngineConfig`] / [`KernelKind`]: `scalar` per-lane reference loops,
+//! explicitly `tiled` 8-lane bodies over 64-byte-aligned per-worker
+//! buffers with jump-ahead RNG refill ([`crate::rng::Pcg64::fill_f64`]),
+//! or `core::simd` kernels under the `nightly-simd` feature. All kernels
+//! sample bit-identical trajectories — the choice is purely a throughput
+//! knob (`benches/throughput.rs --mode lanes --kernel <name>`).
+//!
 //! Thread parallelism splits over *variables* (then factor slots), not
 //! chains, so it scales with model size rather than chain count; chunk
-//! boundaries are degree-aware ([`crate::util::balanced_ranges`] over an
-//! incidence-length prefix sum) so hubs in skewed graphs don't pile into
-//! one worker. RNG streams are keyed per `(sweep, site)` via
-//! [`crate::rng::Pcg64::split2`], which makes a lane sweep bit-identical
-//! for every pool size and chunking, including none — see
-//! `tests/lane_engine.rs`.
+//! boundaries are degree-aware
+//! ([`crate::util::threadpool::balanced_ranges_aligned`] over an
+//! incidence-length prefix sum, rounded so seams fall on cache-line
+//! multiples of the state rows) so hubs in skewed graphs don't pile into
+//! one worker and false sharing at chunk seams is minimized (exact
+//! guarantee documented at the sampler's `row_align`). RNG streams are
+//! keyed per
+//! `(sweep, site)` via [`crate::rng::Pcg64::split2`], which makes a lane
+//! sweep bit-identical for every pool size and chunking, including none —
+//! see `tests/lane_engine.rs` and `tests/kernel_equivalence.rs`.
 //!
 //! Churn keeps working mid-run: [`LanePdSampler::add_factor`] /
 //! [`LanePdSampler::remove_factor`] apply one O(degree) update to the
 //! shared [`crate::duality::DualModel`] for all lanes at once.
 
+pub mod kernels;
 mod sampler;
 
-pub use sampler::LanePdSampler;
+pub use kernels::KernelKind;
+pub use sampler::{EngineConfig, LanePdSampler};

@@ -14,33 +14,73 @@
 //!   overlay — no nested-`Vec` pointer chasing) resamples the variable in
 //!   all lanes. Low-degree variables skip the per-lane log-odds
 //!   accumulation entirely: the model caches the Bernoulli acceptance
-//!   parts for every θ-bit pattern ([`DualModel::x_table`], invalidated
-//!   only on churn), so each lane gathers its pattern index and draws —
-//!   no exponential on the sweep path. High-degree variables fall back to
-//!   the per-lane `f64` accumulate, which is split into a branch-free
-//!   full-word body over all 64 lanes (autovectorizer-friendly fixed-size
-//!   loops) and a separate masked tail word.
+//!   parts for every θ-bit pattern ([`DualModel::x_table`], a tile-aligned
+//!   mult/thresh arena invalidated only on churn), so each lane gathers
+//!   its pattern index and draws — no exponential on the sweep path.
+//!   High-degree variables fall back to the per-lane `f64` accumulate.
 //! * θ: per live factor, the conditional depends only on the two endpoint
 //!   bits, so the four sigmoids cached per slot in the model
 //!   ([`DualModel::theta_table`], recomputed only on insert/remove — not
 //!   4× per slot per sweep) serve every lane; endpoints come from flat
 //!   arrays ([`DualModel::slot_endpoints`]), not `Option<DualEntry>`.
 //!
+//! The innermost `(site, word)` bodies — accumulate, table gather, draw
+//! word assembly, four-sigmoid broadcast — are the [`LaneKernel`]
+//! primitives of [`super::kernels`], selected at runtime through
+//! [`EngineConfig::kernel`] / [`LanePdSampler::with_kernel`]: `scalar`
+//! per-lane loops, explicitly `tiled` 8-lane bodies over 64-byte-aligned
+//! reused buffers ([`SweepBuf`], one per worker — no per-site
+//! allocation), or `core::simd` under the `nightly-simd` feature. Every
+//! kernel samples the same trajectory bit-for-bit; see the determinism
+//! contract in [`super::kernels`].
+//!
 //! Pooled sweeps split sites into *degree-aware* chunks: chunk boundaries
-//! come from [`balanced_ranges`] over a prefix sum of incidence lengths
-//! (recomputed lazily after churn), so dense or skewed graphs load-balance
-//! across the pool instead of one worker owning all the hubs. Chunking
-//! never affects the trajectory: RNG streams are keyed per `(sweep, site)`.
+//! come from [`balanced_ranges_aligned`] over a prefix sum of incidence
+//! lengths (recomputed lazily after churn), rounded so each chunk's first
+//! state row starts a fresh cache line relative to the state base —
+//! minimizing false sharing at chunk seams (see `row_align` for the
+//! exact guarantee). Chunking never affects the trajectory: RNG streams
+//! are keyed per `(sweep, site)`.
 //!
 //! Unused high lanes of the last word are kept zero (`lanes % 64` tail).
 
 use std::sync::Arc;
 
+use super::kernels::{KernelKind, LaneKernel, ScalarKernel, SweepBuf, TiledKernel};
 use crate::duality::DualModel;
 use crate::graph::{FactorGraph, FactorId, PairFactor};
-use crate::rng::{bernoulli_from_parts, bernoulli_sigmoid, Pcg64, RngCore};
-use crate::util::threadpool::balanced_ranges;
+use crate::rng::Pcg64;
+use crate::util::threadpool::balanced_ranges_aligned;
 use crate::util::ThreadPool;
+
+#[cfg(feature = "nightly-simd")]
+use super::kernels::SimdKernel;
+
+/// Construction-time knobs of a [`LanePdSampler`] (lane count, stream
+/// seed, and which [`LaneKernel`] implementation runs the sweep bodies).
+///
+/// The kernel choice is a pure performance knob — every kernel samples
+/// the same trajectory bit-for-bit — so configs differing only in
+/// `kernel` are interchangeable mid-experiment.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Number of chains (any positive count; 64 are packed per word).
+    pub lanes: usize,
+    /// Root seed of the `(sweep, site)`-keyed RNG streams.
+    pub seed: u64,
+    /// Sweep-kernel implementation (default: [`KernelKind::Tiled`]).
+    pub kernel: KernelKind,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            lanes: 64,
+            seed: 0,
+            kernel: KernelKind::default(),
+        }
+    }
+}
 
 /// Lane-batched primal–dual Gibbs sampler (up to any number of chains;
 /// 64 per machine word).
@@ -48,6 +88,7 @@ pub struct LanePdSampler {
     model: DualModel,
     lanes: usize,
     words: usize,
+    kernel: KernelKind,
     x: Vec<u64>,
     theta: Vec<u64>,
     pool: Option<Arc<ThreadPool>>,
@@ -68,38 +109,52 @@ fn lanes_in_word(lanes: usize, w: usize) -> usize {
     (lanes - w * 64).min(64)
 }
 
-/// All-ones mask over the low `k` bits (`k ∈ 1..=64`). The sweep kernels
-/// no longer need it (full words compare against `u64::MAX` directly and
-/// tail lanes are masked at the draw), but the ghost-lane tests still do.
-#[cfg(test)]
-fn lane_mask(k: usize) -> u64 {
-    if k == 64 {
-        u64::MAX
-    } else {
-        (1u64 << k) - 1
-    }
-}
-
 impl LanePdSampler {
-    /// Dualize `graph` and start all lanes from the all-zeros state.
+    /// Dualize `graph` and start all lanes from the all-zeros state
+    /// (default kernel; see [`LanePdSampler::with_config`] to choose).
     pub fn new(graph: &FactorGraph, lanes: usize, seed: u64) -> Self {
-        Self::from_model(DualModel::from_graph(graph), lanes, seed)
+        Self::with_config(
+            graph,
+            EngineConfig {
+                lanes,
+                seed,
+                ..EngineConfig::default()
+            },
+        )
+    }
+
+    /// Dualize `graph` with explicit [`EngineConfig`] knobs.
+    pub fn with_config(graph: &FactorGraph, cfg: EngineConfig) -> Self {
+        Self::from_model_config(DualModel::from_graph(graph), cfg)
     }
 
     /// Wrap an existing dual model (shared slot space with the graph).
     pub fn from_model(model: DualModel, lanes: usize, seed: u64) -> Self {
-        assert!(lanes >= 1, "at least one lane");
-        let words = lanes.div_ceil(64);
+        Self::from_model_config(
+            model,
+            EngineConfig {
+                lanes,
+                seed,
+                ..EngineConfig::default()
+            },
+        )
+    }
+
+    /// Wrap an existing dual model with explicit [`EngineConfig`] knobs.
+    pub fn from_model_config(model: DualModel, cfg: EngineConfig) -> Self {
+        assert!(cfg.lanes >= 1, "at least one lane");
+        let words = cfg.lanes.div_ceil(64);
         let x = vec![0u64; model.num_vars() * words];
         let theta = vec![0u64; model.factor_slots() * words];
         Self {
             model,
-            lanes,
+            lanes: cfg.lanes,
             words,
+            kernel: cfg.kernel,
             x,
             theta,
             pool: None,
-            base: Pcg64::seed(seed),
+            base: Pcg64::seed(cfg.seed),
             sweep_count: 0,
             x_bounds: Vec::new(),
             theta_bounds: Vec::new(),
@@ -115,10 +170,24 @@ impl LanePdSampler {
         self
     }
 
+    /// Switch the sweep-kernel implementation. Pure performance knob:
+    /// the trajectory is unchanged (see [`super::kernels`]).
+    pub fn with_kernel(mut self, kernel: KernelKind) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// The kernel currently running the sweep bodies.
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
+    }
+
+    /// The dualized model all lanes share.
     pub fn model(&self) -> &DualModel {
         &self.model
     }
 
+    /// Number of chains.
     pub fn lanes(&self) -> usize {
         self.lanes
     }
@@ -128,10 +197,12 @@ impl LanePdSampler {
         self.words
     }
 
+    /// Number of primal variables.
     pub fn num_vars(&self) -> usize {
         self.model.num_vars()
     }
 
+    /// Total sweeps performed since construction.
     pub fn sweeps_done(&self) -> u64 {
         self.sweep_count
     }
@@ -208,6 +279,7 @@ impl LanePdSampler {
     /// Randomize one chain's primal state from the lane-indexed init
     /// stream (`split2(0, lane)`; sweeps use sweep indices ≥ 1).
     pub fn randomize_lane(&mut self, lane: usize) {
+        use crate::rng::RngCore;
         assert!(lane < self.lanes);
         let mut rng = self.base.split2(0, lane as u64);
         let (w, mask) = (lane / 64, 1u64 << (lane % 64));
@@ -272,18 +344,29 @@ impl LanePdSampler {
 
     /// One full sweep of every lane: x half-step, then θ half-step. The
     /// trajectory depends only on the seed and the sweep index — not on
-    /// whether/how a pool is attached.
+    /// whether/how a pool is attached, nor on the selected kernel.
     pub fn sweep(&mut self) {
         self.sweep_count += 1;
-        match self.pool.clone() {
-            Some(pool) => self.sweep_pooled(&pool),
-            None => self.sweep_serial(),
+        match self.kernel {
+            KernelKind::Scalar => self.sweep_kernel::<ScalarKernel>(),
+            KernelKind::Tiled => self.sweep_kernel::<TiledKernel>(),
+            #[cfg(feature = "nightly-simd")]
+            KernelKind::Simd => self.sweep_kernel::<SimdKernel>(),
         }
     }
 
-    fn sweep_serial(&mut self) {
+    fn sweep_kernel<K: LaneKernel>(&mut self) {
+        match self.pool.clone() {
+            Some(pool) => self.sweep_pooled::<K>(&pool),
+            None => self.sweep_serial::<K>(),
+        }
+    }
+
+    fn sweep_serial<K: LaneKernel>(&mut self) {
         let words = self.words;
         let n = self.model.num_vars();
+        // one set of tile-major buffers reused across every site
+        let mut buf = SweepBuf::new();
         {
             let ctx = XCtx {
                 model: &self.model,
@@ -294,7 +377,7 @@ impl LanePdSampler {
                 sweep: self.sweep_count,
             };
             for v in 0..n {
-                ctx.site(v, &mut self.x[v * words..(v + 1) * words]);
+                ctx.site::<K>(v, &mut self.x[v * words..(v + 1) * words], &mut buf);
             }
         }
         let slots = self.model.factor_slots();
@@ -308,15 +391,43 @@ impl LanePdSampler {
                 sweep: self.sweep_count,
             };
             for slot in 0..slots {
-                ctx.site(slot, &mut self.theta[slot * words..(slot + 1) * words]);
+                ctx.site::<K>(
+                    slot,
+                    &mut self.theta[slot * words..(slot + 1) * words],
+                    &mut buf,
+                );
             }
         }
+    }
+
+    /// Alignment unit of pooled chunk bounds, in sites: the smallest
+    /// site count whose packed rows span a whole number of 64-byte cache
+    /// lines (`8 / gcd(words, 8)` — e.g. 8 sites at 1 word/site, 8 sites
+    /// at 3 words/site, 2 at 4, 1 at 8). Seams on this grid start a new
+    /// line *relative to the state base*, so adjacent workers only ever
+    /// false-share when the allocation itself straddles line boundaries
+    /// (a `Vec<u64>` base is 8/16-byte aligned, so at most one straddled
+    /// line per seam remains — versus every seam row without alignment).
+    #[inline]
+    fn row_align(&self) -> usize {
+        fn gcd(a: usize, b: usize) -> usize {
+            if b == 0 {
+                a
+            } else {
+                gcd(b, a % b)
+            }
+        }
+        // u64 state words and f64 lanes are both 8 bytes, so "u64s per
+        // cache line" is the same shared constant as the tile width
+        const WORDS_PER_LINE: usize = crate::util::aligned::F64S_PER_CACHE_LINE;
+        WORDS_PER_LINE / gcd(self.words, WORDS_PER_LINE)
     }
 
     /// Rebuild the degree-aware chunk plan for a pool of `chunks` workers:
     /// x chunks balance `1 + degree(v)` (one RNG stream + one incidence
     /// traversal per variable), θ chunks weight live slots over dead ones
-    /// (a dead slot is a plain memset of its lane row).
+    /// (a dead slot is a plain memset of its lane row). Bounds are rounded
+    /// to cache-line-aligned state rows ([`LanePdSampler::row_align`]).
     fn rebuild_chunk_plan(&mut self, chunks: usize) {
         let n = self.model.num_vars();
         let mut prefix = Vec::with_capacity(n + 1);
@@ -326,7 +437,7 @@ impl LanePdSampler {
             acc += 1 + self.model.degree(v) as u64;
             prefix.push(acc);
         }
-        self.x_bounds = balanced_ranges(&prefix, chunks);
+        self.x_bounds = balanced_ranges_aligned(&prefix, chunks, self.row_align());
 
         let slots = self.model.factor_slots();
         let mut tprefix = Vec::with_capacity(slots + 1);
@@ -340,11 +451,11 @@ impl LanePdSampler {
             };
             tprefix.push(tacc);
         }
-        self.theta_bounds = balanced_ranges(&tprefix, chunks);
+        self.theta_bounds = balanced_ranges_aligned(&tprefix, chunks, self.row_align());
         self.chunk_plan_for = chunks;
     }
 
-    fn sweep_pooled(&mut self, pool: &ThreadPool) {
+    fn sweep_pooled<K: LaneKernel>(&mut self, pool: &ThreadPool) {
         if self.chunk_plan_for != pool.size() {
             self.rebuild_chunk_plan(pool.size());
         }
@@ -362,13 +473,15 @@ impl LanePdSampler {
             let x_ptr = SendPtr(self.x.as_mut_ptr());
             pool.scope_ranges(&self.x_bounds, |_, start, end| {
                 let x_ptr = &x_ptr;
+                // per-worker tile-major buffers, reused across the chunk
+                let mut buf = SweepBuf::new();
                 for v in start..end {
                     // SAFETY: chunks own disjoint variable ranges, hence
                     // disjoint `words`-sized word rows of x.
                     let out = unsafe {
                         std::slice::from_raw_parts_mut(x_ptr.0.add(v * words), words)
                     };
-                    ctx.site(v, out);
+                    ctx.site::<K>(v, out, &mut buf);
                 }
             });
         }
@@ -385,56 +498,15 @@ impl LanePdSampler {
             let t_ptr = SendPtr(self.theta.as_mut_ptr());
             pool.scope_ranges(&self.theta_bounds, |_, start, end| {
                 let t_ptr = &t_ptr;
+                let mut buf = SweepBuf::new();
                 for slot in start..end {
                     // SAFETY: chunks own disjoint slot ranges.
                     let out = unsafe {
                         std::slice::from_raw_parts_mut(t_ptr.0.add(slot * words), words)
                     };
-                    ctx.site(slot, out);
+                    ctx.site::<K>(slot, out, &mut buf);
                 }
             });
-        }
-    }
-}
-
-/// Fold one packed θ word into the 64 per-lane log-odds accumulators.
-///
-/// Branch-free over all 64 lanes (fixed-size loops the autovectorizer
-/// likes); ghost lanes accumulate garbage that the caller never draws
-/// from. The `tw == 0` / `tw == ones` word-level shortcuts change no
-/// values — adding `0·β` to every lane, or `β` to every lane, is exactly
-/// what the general body computes.
-#[inline(always)]
-fn lane_accumulate(acc: &mut [f64; 64], tw: u64, beta: f64) {
-    if tw == 0 {
-        return;
-    }
-    if tw == u64::MAX {
-        for a in acc.iter_mut() {
-            *a += beta;
-        }
-    } else {
-        for (l, a) in acc.iter_mut().enumerate() {
-            *a += ((tw >> l) & 1) as f64 * beta;
-        }
-    }
-}
-
-/// Scatter one packed θ word into the 64 per-lane pattern indices
-/// (pattern bit `bit` = this entry's θ value in that lane).
-#[inline(always)]
-fn lane_gather(idx: &mut [u8; 64], tw: u64, bit: u32) {
-    if tw == 0 {
-        return;
-    }
-    let b = 1u8 << bit;
-    if tw == u64::MAX {
-        for i in idx.iter_mut() {
-            *i |= b;
-        }
-    } else {
-        for (l, i) in idx.iter_mut().enumerate() {
-            *i |= (((tw >> l) & 1) as u8) << bit;
         }
     }
 }
@@ -450,59 +522,51 @@ struct XCtx<'a> {
 }
 
 impl XCtx<'_> {
-    /// Resample `x_v` in every lane: one flat incidence traversal total.
-    fn site(&self, v: usize, out: &mut [u64]) {
+    /// Resample `x_v` in every lane: one flat incidence traversal total,
+    /// kernel bodies from `K`.
+    fn site<K: LaneKernel>(&self, v: usize, out: &mut [u64], buf: &mut SweepBuf) {
         // even site codes are x-variables, odd are θ-slots
         let mut rng = self.base.split2(self.sweep, (v as u64) << 1);
         let (slots, betas, overlay) = self.model.incidence_csr(v);
         match self.model.x_table(v) {
-            Some(parts) => {
+            Some((mult, thresh)) => {
                 // cached-table path: gather each lane's θ-bit pattern and
                 // draw from the precomputed acceptance parts — the draws
                 // are bit-identical to the accumulate path below
                 for (w, out_word) in out.iter_mut().enumerate() {
                     let k = lanes_in_word(self.lanes, w);
-                    let mut idx = [0u8; 64];
+                    buf.idx.0.fill(0);
                     let mut bit = 0u32;
                     for &slot in slots {
                         let tw = self.theta[slot as usize * self.words + w];
-                        lane_gather(&mut idx, tw, bit);
+                        K::gather(&mut buf.idx, tw, bit);
                         bit += 1;
                     }
                     for &(slot, _) in overlay {
                         let tw = self.theta[slot as usize * self.words + w];
-                        lane_gather(&mut idx, tw, bit);
+                        K::gather(&mut buf.idx, tw, bit);
                         bit += 1;
                     }
-                    let mut word = 0u64;
-                    for (l, &i) in idx[..k].iter().enumerate() {
-                        let (mult, thresh) = parts[i as usize];
-                        word |= (bernoulli_from_parts(&mut rng, mult, thresh) as u64) << l;
-                    }
-                    *out_word = word;
+                    *out_word =
+                        K::draw_table_word(&mut rng, mult, thresh, &buf.idx, k, &mut buf.draw);
                 }
             }
             None => {
                 // high-degree fallback: per-lane log-odds accumulate over
-                // the same flat view, full 64-lane body per word (tail
-                // lanes masked only at the draw)
+                // the same flat view (tail lanes masked only at the draw)
                 let field = self.model.base_field(v);
                 for (w, out_word) in out.iter_mut().enumerate() {
                     let k = lanes_in_word(self.lanes, w);
-                    let mut acc = [field; 64];
+                    buf.acc.0.fill(field);
                     for (&slot, &beta) in slots.iter().zip(betas.iter()) {
                         let tw = self.theta[slot as usize * self.words + w];
-                        lane_accumulate(&mut acc, tw, beta);
+                        K::accumulate(&mut buf.acc, tw, beta);
                     }
                     for &(slot, beta) in overlay {
                         let tw = self.theta[slot as usize * self.words + w];
-                        lane_accumulate(&mut acc, tw, beta);
+                        K::accumulate(&mut buf.acc, tw, beta);
                     }
-                    let mut word = 0u64;
-                    for (l, &z) in acc[..k].iter().enumerate() {
-                        word |= (bernoulli_sigmoid(&mut rng, z) as u64) << l;
-                    }
-                    *out_word = word;
+                    *out_word = K::draw_logodds_word(&mut rng, &buf.acc, k, &mut buf.draw);
                 }
             }
         }
@@ -523,7 +587,7 @@ impl ThetaCtx<'_> {
     /// Resample `θ_slot` in every lane: the conditional takes one of four
     /// values per factor, so the model's cached four-sigmoid table serves
     /// all lanes (recomputed on churn, not per sweep).
-    fn site(&self, slot: usize, out: &mut [u64]) {
+    fn site<K: LaneKernel>(&self, slot: usize, out: &mut [u64], buf: &mut SweepBuf) {
         let Some((v1, v2)) = self.model.slot_endpoints(slot) else {
             out.fill(0); // dead slot: keep θ = 0 in every lane
             return;
@@ -535,12 +599,7 @@ impl ThetaCtx<'_> {
             let k = lanes_in_word(self.lanes, w);
             let x1 = self.x[v1 * self.words + w];
             let x2 = self.x[v2 * self.words + w];
-            let mut word = 0u64;
-            for l in 0..k {
-                let idx = (((x1 >> l) & 1) | (((x2 >> l) & 1) << 1)) as usize;
-                word |= (rng.bernoulli(p[idx]) as u64) << l;
-            }
-            *out_word = word;
+            *out_word = K::draw_theta_word(&mut rng, p, x1, x2, k, &mut buf.draw);
         }
     }
 }
@@ -552,6 +611,7 @@ unsafe impl<T> Send for SendPtr<T> {}
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::kernels::lane_mask;
     use crate::inference::exact;
     use crate::workloads;
 
@@ -604,12 +664,19 @@ mod tests {
     #[test]
     fn tail_lanes_stay_zero_under_sweeps() {
         let g = workloads::ising_grid(3, 3, 0.4, 0.2);
-        let mut eng = LanePdSampler::new(&g, 5, 3);
-        for _ in 0..50 {
-            eng.sweep();
-        }
-        for &w in eng.state_words().iter().chain(eng.theta_words()) {
-            assert_eq!(w & !lane_mask(5), 0, "ghost lanes were written");
+        for &kernel in KernelKind::all() {
+            let mut eng = LanePdSampler::new(&g, 5, 3).with_kernel(kernel);
+            for _ in 0..50 {
+                eng.sweep();
+            }
+            for &w in eng.state_words().iter().chain(eng.theta_words()) {
+                assert_eq!(
+                    w & !lane_mask(5),
+                    0,
+                    "ghost lanes written by {}",
+                    kernel.name()
+                );
+            }
         }
     }
 
@@ -725,6 +792,25 @@ mod tests {
         assert_eq!(eng.theta_words(), &theta_before[..], "θ state touched");
         assert_eq!(eng.state_words(), &x_before[..], "x state touched");
         assert_eq!(eng.model().num_factors(), live - 1);
+    }
+
+    #[test]
+    fn config_constructor_carries_the_kernel() {
+        let g = workloads::ising_grid(2, 2, 0.2, 0.0);
+        let eng = LanePdSampler::with_config(
+            &g,
+            EngineConfig {
+                lanes: 3,
+                seed: 9,
+                kernel: KernelKind::Scalar,
+            },
+        );
+        assert_eq!(eng.kernel(), KernelKind::Scalar);
+        assert_eq!(eng.lanes(), 3);
+        let eng = eng.with_kernel(KernelKind::Tiled);
+        assert_eq!(eng.kernel(), KernelKind::Tiled);
+        // default config: tiled
+        assert_eq!(LanePdSampler::new(&g, 2, 0).kernel(), KernelKind::Tiled);
     }
 
     use crate::graph::FactorGraph;

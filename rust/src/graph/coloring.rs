@@ -12,7 +12,9 @@ use super::{FactorGraph, VarId};
 /// A proper coloring: `color[v]` with `num_colors` classes.
 #[derive(Clone, Debug)]
 pub struct Coloring {
+    /// Color class of each variable.
     pub color: Vec<u32>,
+    /// Number of distinct classes used.
     pub num_colors: u32,
     /// Topology version of the graph this coloring was computed for.
     pub version: u64,

@@ -22,13 +22,16 @@ pub type FactorId = usize;
 /// A pairwise factor: strictly positive 2×2 table over `(v1, v2)`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PairFactor {
+    /// First endpoint.
     pub v1: VarId,
+    /// Second endpoint.
     pub v2: VarId,
     /// `table[x1][x2]`, strictly positive.
     pub table: [[f64; 2]; 2],
 }
 
 impl PairFactor {
+    /// Build a factor, asserting the table is strictly positive and finite.
     pub fn new(v1: VarId, v2: VarId, table: [[f64; 2]; 2]) -> Self {
         assert!(
             table.iter().flatten().all(|&p| p > 0.0 && p.is_finite()),
@@ -79,6 +82,7 @@ impl FactorGraph {
         }
     }
 
+    /// Number of variables.
     pub fn num_vars(&self) -> usize {
         self.unary.len()
     }
@@ -101,10 +105,12 @@ impl FactorGraph {
         self.unary.len() - 1
     }
 
+    /// `v`'s unary log-odds.
     pub fn unary(&self, v: VarId) -> f64 {
         self.unary[v]
     }
 
+    /// Overwrite `v`'s unary log-odds (bumps the topology version).
     pub fn set_unary(&mut self, v: VarId, logodds: f64) {
         self.unary[v] = logodds;
         self.version += 1;
@@ -146,6 +152,7 @@ impl FactorGraph {
         Some(f)
     }
 
+    /// The live factor in slot `id`, or `None` for dead/unknown slots.
     pub fn factor(&self, id: FactorId) -> Option<&PairFactor> {
         self.slots.get(id).and_then(Option::as_ref)
     }
@@ -163,6 +170,7 @@ impl FactorGraph {
         &self.adj[v]
     }
 
+    /// Number of factors incident to `v`.
     pub fn degree(&self, v: VarId) -> usize {
         self.adj[v].len()
     }

@@ -108,6 +108,7 @@ impl Forest {
             .collect()
     }
 
+    /// Number of tree edges in the forest.
     pub fn num_edges(&self) -> usize {
         self.edges.len()
     }

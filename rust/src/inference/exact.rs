@@ -19,6 +19,7 @@ pub struct ExactResult {
     pub log_z: f64,
     /// MAP assignment (ties broken toward lower binary code).
     pub map: Vec<u8>,
+    /// Unnormalized log-probability of the MAP assignment.
     pub map_log_prob: f64,
 }
 

@@ -69,10 +69,12 @@ pub fn dualization_log_scale(g: &FactorGraph, m: &DualModel) -> f64 {
 pub struct LogZEstimate {
     /// Mean of `log V` (lower bound on the dual log Z).
     pub lower_bound: f64,
+    /// Standard error of the `lower_bound` mean.
     pub std_err: f64,
     /// Unbiased (but high-variance) estimate `log mean(V)`, computed
     /// stably in the log domain.
     pub log_mean_v: f64,
+    /// Number of post-burn-in sweeps averaged.
     pub samples: usize,
 }
 

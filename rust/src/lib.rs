@@ -10,23 +10,56 @@
 //! *every* dual variable in parallel — no graph coloring, no preprocessing,
 //! and factors can be added/removed at any time.
 //!
-//! ## Crate layout (three-layer architecture)
+//! A guided tour lives in the repository: `README.md` for the quickstart,
+//! `docs/ARCHITECTURE.md` for the layer diagram and the paper→code map,
+//! `docs/BENCHMARKS.md` for every bench mode/flag and the tracked
+//! `BENCH_*.json` trajectory files.
+//!
+//! ## Architecture at a glance (PRs 1–4)
+//!
+//! The crate grew bottom-up, one serving layer per PR:
+//!
+//! 1. **Lane engine** (PR 1) — [`engine::LanePdSampler`] packs 64 chains
+//!    per `u64` word, variable-major, one incidence traversal per
+//!    variable per sweep; RNG streams keyed `(sweep, site)` via
+//!    [`rng::Pcg64::split2`] make trajectories invariant to pooling and
+//!    chunking.
+//! 2. **Flat sweep kernels** (PR 2) — [`duality::DualModel`] mirrors its
+//!    nested incidence as a CSR arena ([`duality::CsrIncidence`]) and
+//!    caches churn-invalidated conditionals (per-slot four-sigmoid θ
+//!    tables; per-variable Bernoulli acceptance tables), so steady-state
+//!    sweeps draw without evaluating any exponential.
+//! 3. **Multi-tenant coordinator** (PR 3) — [`coordinator::Coordinator`]
+//!    routes tenants to shard workers that interleave foreground queries
+//!    with deficit-round-robin background sweeping, all sharing one
+//!    [`util::ThreadPool`].
+//! 4. **SIMD-tiled kernels** (PR 4, this one) — the innermost sweep
+//!    bodies are runtime-selectable [`engine::kernels::LaneKernel`]
+//!    implementations ([`engine::KernelKind`]): per-lane `scalar`
+//!    reference loops, stable-Rust `tiled` 8-lane bodies over 64-byte
+//!    aligned buffers with jump-ahead RNG refill
+//!    ([`rng::Pcg64::fill_f64`]), or `core::simd` under the
+//!    `nightly-simd` feature — all bit-identical in trajectory.
+//!
+//! ## Crate layout
 //!
 //! * [`graph`] — dynamic pairwise factor graph + builders + coloring baseline.
 //! * [`duality`] — §4.1 positive 2×2 factorization, Theorem-2 dual
 //!   parameters, multi-state 0–1 encoding, Swendsen–Wang decompositions;
 //!   [`duality::DualModel`] keeps a nested reference incidence mirrored by
-//!   a flat CSR arena ([`duality::CsrIncidence`]: contiguous slot/β
-//!   arrays + delta overlay + epoch compaction) and churn-invalidated
+//!   a flat CSR arena ([`duality::CsrIncidence`]) and churn-invalidated
 //!   conditional caches (per-slot four-sigmoid θ tables, per-variable
-//!   Bernoulli acceptance tables over θ-bit patterns).
+//!   Bernoulli acceptance tables in the tile-aligned
+//!   [`duality::XTableArena`]).
 //! * [`samplers`] — sequential Gibbs, chromatic Gibbs, the primal–dual
 //!   sampler (native parallel, the readable nested-incidence reference),
 //!   Swendsen–Wang, and tree-blocked PD (§5.4).
 //! * [`engine`] — lane-batched multi-chain execution: 64 chains per `u64`
 //!   word, variable-major state, one *flat-arena* incidence traversal per
-//!   variable per sweep, cached-table draws, degree-aware pooled chunking
-//!   ([`engine::LanePdSampler`]); the substrate under the ensemble.
+//!   variable per sweep, cached-table draws, SIMD-tiled runtime-selected
+//!   kernels ([`engine::kernels`]), degree-aware cache-line-aligned
+//!   pooled chunking ([`engine::LanePdSampler`]); the substrate under the
+//!   ensemble.
 //! * [`inference`] — exact enumeration/transfer-matrix oracles, tree BP,
 //!   mean-field & EM-MAP (§5.3), log-partition estimators (§5.2).
 //! * [`diagnostics`] — PSRF (Gelman–Rubin), ESS, mixing-time extraction.
@@ -44,9 +77,14 @@
 //! * [`bench`] — self-contained bench harness (criterion is unavailable
 //!   offline) used by every `benches/` binary.
 //! * [`util`] — substrates built from scratch for the offline environment:
-//!   JSON, CLI parsing, thread pool (uniform and weighted scoped
-//!   parallel-for, [`util::balanced_ranges`]), property testing,
-//!   union-find, error context ([`util::error`], replacing `anyhow`).
+//!   JSON, CLI parsing, thread pool (uniform, weighted, and
+//!   alignment-aware scoped parallel-for, [`util::balanced_ranges`]),
+//!   cache-line-aligned storage ([`util::AlignedF64s`]), property
+//!   testing, union-find, error context ([`util::error`], replacing
+//!   `anyhow`).
+
+#![warn(missing_docs)]
+#![cfg_attr(feature = "nightly-simd", feature(portable_simd))]
 
 pub mod bench;
 pub mod bench_support;

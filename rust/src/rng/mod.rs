@@ -9,6 +9,7 @@
 mod pcg;
 mod splitmix;
 
+pub(crate) use pcg::FILL_CHAINS;
 pub use pcg::Pcg64;
 pub use splitmix::SplitMix64;
 

@@ -8,6 +8,34 @@ use super::{RngCore, SplitMix64};
 
 const MULTIPLIER: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
 
+/// `(A, S)` jump tables for the underlying LCG: advancing the state `i`
+/// steps is the affine map `s ↦ A[i]·s + S[i]·increment (mod 2^128)`,
+/// because `advance(s) = M·s + inc` composes to
+/// `advance^i(s) = M^i·s + (M^{i-1} + … + M + 1)·inc`. Indices cover
+/// `0..=64` — one machine word of lanes, the most
+/// [`Pcg64::fill_f64`] ever needs.
+const fn lcg_jump_tables() -> ([u128; 65], [u128; 65]) {
+    let mut a = [0u128; 65];
+    let mut s = [0u128; 65];
+    a[0] = 1;
+    let mut i = 1;
+    while i <= 64 {
+        a[i] = a[i - 1].wrapping_mul(MULTIPLIER);
+        s[i] = s[i - 1].wrapping_mul(MULTIPLIER).wrapping_add(1);
+        i += 1;
+    }
+    (a, s)
+}
+
+/// See [`lcg_jump_tables`].
+const JUMP: ([u128; 65], [u128; 65]) = lcg_jump_tables();
+
+/// Number of independent jump-ahead chains [`Pcg64::fill_f64`] runs: one
+/// per lane tile (the engine's tile width asserts equality at compile
+/// time), so eight 128-bit multiply chains are in flight instead of one
+/// serial dependency chain.
+pub(crate) const FILL_CHAINS: usize = 8;
+
 /// PCG-XSL-RR 128/64 generator.
 #[derive(Clone, Debug)]
 pub struct Pcg64 {
@@ -80,16 +108,88 @@ impl Pcg64 {
             .wrapping_mul(MULTIPLIER)
             .wrapping_add(self.increment);
     }
+
+    /// XSL-RR output function: xor-fold the state halves, rotate by the
+    /// top bits. Shared by [`RngCore::next_u64`] and [`Pcg64::fill_f64`]
+    /// so both produce identical draws from identical states.
+    #[inline]
+    fn output(state: u128) -> u64 {
+        let rot = (state >> 122) as u32;
+        let xored = ((state >> 64) as u64) ^ (state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// `next_f64`'s mantissa mapping, applied to a raw output word.
+    #[inline]
+    fn to_f64(x: u64) -> f64 {
+        (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Fill `out[..k]` with the next `k` uniform draws — **bit-identical**
+    /// to `k` successive [`RngCore::next_f64`] calls (same values, same
+    /// final generator state), but computed on eight independent
+    /// jump-ahead chains.
+    ///
+    /// A single LCG is a serial dependency chain: draw `i + 1` cannot
+    /// start its 128-bit multiply before draw `i` finishes. Chain `j`
+    /// here starts at `advance^{j+1}(s₀)` (one constant affine map from
+    /// precomputed jump tables, no serial warm-up) and then advances by
+    /// `advance^8` per round, so it produces exactly draws
+    /// `j, j+8, j+16, …` of the sequential sequence while the other
+    /// seven chains run concurrently in the CPU's multiply pipeline.
+    /// This is the SIMD-tiled lane kernels' uniform source: the per-lane
+    /// draw order (and hence the sampled trajectory) is untouched, only
+    /// the instruction-level parallelism changes.
+    ///
+    /// `k` is capped at 64 (one packed lane word, the tables' range).
+    pub fn fill_f64(&mut self, out: &mut [f64; 64], k: usize) {
+        assert!(k <= 64, "fill_f64 serves at most one 64-lane word");
+        if k < FILL_CHAINS {
+            // short tail word (e.g. 65 lanes → k = 1): chain setup would
+            // cost more multiplies than it saves — step sequentially,
+            // which is the definition the chains reproduce anyway
+            for o in out[..k].iter_mut() {
+                self.step();
+                *o = Self::to_f64(Self::output(self.state));
+            }
+            return;
+        }
+        let (jump_a, jump_s) = (&JUMP.0, &JUMP.1);
+        let (s0, inc) = (self.state, self.increment);
+        // chain j ↦ state after j+1 steps (the state draw j is output from)
+        let mut chain = [0u128; FILL_CHAINS];
+        for (j, c) in chain.iter_mut().enumerate() {
+            *c = jump_a[j + 1]
+                .wrapping_mul(s0)
+                .wrapping_add(jump_s[j + 1].wrapping_mul(inc));
+        }
+        let a8 = jump_a[FILL_CHAINS];
+        let c8 = jump_s[FILL_CHAINS].wrapping_mul(inc);
+        let mut i = 0;
+        while i + FILL_CHAINS <= k {
+            // full round: 8 independent output+advance chains
+            for (o, c) in out[i..i + FILL_CHAINS].iter_mut().zip(chain.iter_mut()) {
+                *o = Self::to_f64(Self::output(*c));
+                *c = a8.wrapping_mul(*c).wrapping_add(c8);
+            }
+            i += FILL_CHAINS;
+        }
+        // tail round: the first k - i chains already hold the right states
+        for (o, c) in out[i..k].iter_mut().zip(chain.iter()) {
+            *o = Self::to_f64(Self::output(*c));
+        }
+        // land exactly where k sequential steps would have
+        self.state = jump_a[k]
+            .wrapping_mul(s0)
+            .wrapping_add(jump_s[k].wrapping_mul(inc));
+    }
 }
 
 impl RngCore for Pcg64 {
     #[inline]
     fn next_u64(&mut self) -> u64 {
         self.step();
-        // XSL-RR output function: xor-fold the halves, rotate by the top bits.
-        let rot = (self.state >> 122) as u32;
-        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
-        xored.rotate_right(rot)
+        Self::output(self.state)
     }
 }
 
@@ -149,6 +249,45 @@ mod tests {
         assert_eq!(sorted.len(), seen.len(), "split2 stream collision");
         // and differs from the 1-D split on the same leading index
         assert_ne!(base.split2(5, 0).next_u64(), base.split(5).next_u64());
+    }
+
+    #[test]
+    fn fill_f64_is_bit_identical_to_sequential_draws() {
+        // the tiled kernels' whole determinism story rests on this: the
+        // jump-ahead fill must reproduce next_f64 draw-for-draw AND leave
+        // the generator in the exact same state, for every k 0..=64
+        // (tails of every length) and across derived streams
+        for seed in [0u64, 1, 42, 0xDEAD_BEEF] {
+            for k in 0..=64usize {
+                let mut seq = Pcg64::seed(seed).split2(3, k as u64);
+                let mut jmp = seq.clone();
+                let want: Vec<f64> = (0..k).map(|_| seq.next_f64()).collect();
+                let mut out = [0.0f64; 64];
+                jmp.fill_f64(&mut out, k);
+                for (l, w) in want.iter().enumerate() {
+                    assert!(
+                        out[l].to_bits() == w.to_bits(),
+                        "seed {seed} k {k} draw {l}: {} vs {}",
+                        out[l],
+                        w
+                    );
+                }
+                // post-state equality: the next draws must also agree
+                for i in 0..8 {
+                    assert_eq!(seq.next_u64(), jmp.next_u64(), "seed {seed} k {k} post {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fill_f64_zero_draws_is_a_noop() {
+        let mut a = Pcg64::seed(5);
+        let mut b = a.clone();
+        let mut out = [0.5f64; 64];
+        a.fill_f64(&mut out, 0);
+        assert_eq!(out, [0.5f64; 64], "no lanes may be written");
+        assert_eq!(a.next_u64(), b.next_u64(), "state must be untouched");
     }
 
     #[test]

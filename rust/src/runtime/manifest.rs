@@ -13,32 +13,40 @@ use crate::util::json::Json;
 /// Static configuration of one AOT artifact.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactMeta {
+    /// Workload name (manifest key, e.g. `grid50`).
     pub name: String,
+    /// Artifact file name relative to the artifact directory.
     pub file: String,
     /// Real (unpadded) variable count.
     pub n: usize,
     /// Real (unpadded) factor capacity.
     pub f: usize,
+    /// Chains advanced per executable call.
     pub chains: usize,
     /// Sweeps executed per call.
     pub sweeps: usize,
+    /// Padded variable count (XLA static shape).
     pub n_pad: usize,
+    /// Padded factor count (XLA static shape).
     pub f_pad: usize,
 }
 
 /// All artifacts produced by one `make artifacts` run.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// Artifact entries in manifest order.
     pub artifacts: Vec<ArtifactMeta>,
 }
 
 impl Manifest {
+    /// Read and parse a `manifest.json` file.
     pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading {}", path.as_ref().display()))?;
         Self::parse(&text)
     }
 
+    /// Parse manifest JSON text.
     pub fn parse(text: &str) -> Result<Manifest> {
         let doc = Json::parse(text).map_err(|e| err!("manifest: {e}"))?;
         let arr = doc
@@ -61,10 +69,12 @@ impl Manifest {
         Ok(Manifest { artifacts })
     }
 
+    /// Look up an artifact by workload name.
     pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
         self.artifacts.iter().find(|a| a.name == name)
     }
 
+    /// All workload names, in manifest order.
     pub fn names(&self) -> Vec<&str> {
         self.artifacts.iter().map(|a| a.name.as_str()).collect()
     }

@@ -37,6 +37,7 @@ pub struct ChainState {
 /// Outputs of one multi-sweep chunk.
 #[derive(Clone, Debug)]
 pub struct ChunkOutput {
+    /// Final packed chain state after the chunk.
     pub state: ChainState,
     /// `(chains, n_pad)`: Σ over the chunk's sweeps of x.
     pub sum_x: Vec<f32>,

@@ -35,10 +35,12 @@ impl Runtime {
         })
     }
 
+    /// The artifact manifest this runtime was loaded with.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// PJRT platform name (e.g. `cpu`, `tpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -125,6 +127,7 @@ pub struct PdChainExec {
 }
 
 impl PdChainExec {
+    /// The bound artifact's static configuration.
     pub fn meta(&self) -> &ArtifactMeta {
         &self.meta
     }

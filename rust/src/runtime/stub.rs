@@ -29,10 +29,12 @@ impl Runtime {
         Err(err!("{UNAVAILABLE}"))
     }
 
+    /// Empty manifest (the stub never loads artifacts).
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Placeholder platform string for reports.
     pub fn platform(&self) -> String {
         "unavailable (built without `xla`)".to_string()
     }
@@ -54,6 +56,7 @@ pub struct PdChainExec {
 }
 
 impl PdChainExec {
+    /// The bound artifact's static configuration.
     pub fn meta(&self) -> &ArtifactMeta {
         &self.meta
     }
@@ -66,6 +69,7 @@ impl PdChainExec {
         }
     }
 
+    /// Mirrors the real executor's run entry point; always errors.
     pub fn run(&self, _state: &ChainState, _key: [u32; 2]) -> Result<ChunkOutput> {
         Err(err!("{UNAVAILABLE}"))
     }

@@ -30,6 +30,7 @@ pub struct ChromaticGibbs<'g> {
 }
 
 impl<'g> ChromaticGibbs<'g> {
+    /// Greedily color `graph` and start from the all-zeros state.
     pub fn new(graph: &'g FactorGraph) -> Self {
         let coloring = coloring::greedy(graph);
         let classes = coloring.classes();
@@ -44,11 +45,13 @@ impl<'g> ChromaticGibbs<'g> {
         }
     }
 
+    /// Enable color-class-parallel sweeps on the given pool.
     pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
         self.pool = Some(pool);
         self
     }
 
+    /// Number of color classes in the current coloring.
     pub fn num_colors(&self) -> u32 {
         self.coloring.num_colors
     }

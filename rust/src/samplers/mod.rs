@@ -104,6 +104,7 @@ pub(crate) mod test_support {
     use crate::graph::FactorGraph;
     use crate::inference::exact;
 
+    /// Burn in, sample, and assert empirical marginals match the exact oracle within `tol`.
     pub fn assert_matches_exact(
         g: &FactorGraph,
         sampler: &mut dyn Sampler,

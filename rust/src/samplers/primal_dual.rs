@@ -63,6 +63,7 @@ impl PdSampler {
         self
     }
 
+    /// The dualized model.
     pub fn model(&self) -> &DualModel {
         &self.model
     }

@@ -13,6 +13,7 @@ pub struct SequentialGibbs<'g> {
 }
 
 impl<'g> SequentialGibbs<'g> {
+    /// Start from the all-zeros state.
     pub fn new(graph: &'g FactorGraph) -> Self {
         Self {
             graph,

@@ -1,0 +1,139 @@
+//! Cache-line-aligned `f64` storage for the SIMD-tiled kernels.
+//!
+//! Stable Rust cannot put an alignment attribute on a `Vec`'s heap
+//! buffer directly, so [`AlignedF64s`] stores its elements inside a
+//! `Vec` of 64-byte-aligned cache-line blocks and exposes them as plain
+//! `&[f64]` slices. Consumers get two guarantees the tiled kernels
+//! depend on:
+//!
+//! * the base pointer is 64-byte aligned (one full cache line, and wide
+//!   enough for any aligned load up to AVX-512), and
+//! * any offset that is a multiple of [`F64S_PER_CACHE_LINE`] is also
+//!   64-byte aligned — which is why the x-table arena
+//!   ([`crate::duality::CsrIncidence`]'s sibling `XTableArena`) pads
+//!   every table to a multiple of that width.
+//!
+//! The container is append/overwrite-only (`push` / `clear` / mutable
+//! slices); it never exposes uninitialized memory because whole blocks
+//! are zero-filled on allocation.
+
+/// Number of `f64` lanes in one 64-byte cache line — the unit all
+/// tile-aligned layouts pad to (and the widest tile the kernels use).
+pub const F64S_PER_CACHE_LINE: usize = 8;
+
+/// One 64-byte-aligned block of eight `f64`s.
+#[repr(C, align(64))]
+#[derive(Clone, Copy, Debug, Default)]
+struct CacheLine([f64; F64S_PER_CACHE_LINE]);
+
+/// Growable `f64` buffer whose heap storage is 64-byte aligned (see
+/// module docs).
+#[derive(Clone, Debug, Default)]
+pub struct AlignedF64s {
+    lines: Vec<CacheLine>,
+    len: usize,
+}
+
+impl AlignedF64s {
+    /// Empty buffer (no allocation until the first push).
+    pub const fn new() -> Self {
+        Self {
+            lines: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Number of live elements.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the buffer holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Drop all elements, keeping the allocation.
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// The live elements as one contiguous, 64-byte-aligned slice.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        // SAFETY: `CacheLine` is `#[repr(C, align(64))]` around
+        // `[f64; 8]` (size 64, no padding), so `lines` is a contiguous
+        // run of `lines.len() * 8` initialized f64s and `len` never
+        // exceeds that (invariant kept by `push`).
+        unsafe { std::slice::from_raw_parts(self.lines.as_ptr() as *const f64, self.len) }
+    }
+
+    /// The live elements as one mutable contiguous slice.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        // SAFETY: as in `as_slice`; `&mut self` gives exclusive access.
+        unsafe { std::slice::from_raw_parts_mut(self.lines.as_mut_ptr() as *mut f64, self.len) }
+    }
+
+    /// Append one element (amortized O(1); new blocks are zero-filled).
+    pub fn push(&mut self, x: f64) {
+        if self.len == self.lines.len() * F64S_PER_CACHE_LINE {
+            self.lines.push(CacheLine::default());
+        }
+        let i = self.len;
+        self.len += 1;
+        self.as_mut_slice()[i] = x;
+    }
+
+    /// Append every element of `xs` (one capacity reservation + one bulk
+    /// copy — the x-table arena funnels every table rebuild and every
+    /// compaction pass through here).
+    pub fn extend_from_slice(&mut self, xs: &[f64]) {
+        let start = self.len;
+        let new_len = start + xs.len();
+        let lines = new_len.div_ceil(F64S_PER_CACHE_LINE);
+        if lines > self.lines.len() {
+            self.lines.resize(lines, CacheLine::default());
+        }
+        self.len = new_len;
+        self.as_mut_slice()[start..].copy_from_slice(xs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_pointer_is_cache_line_aligned() {
+        let mut b = AlignedF64s::new();
+        for i in 0..100 {
+            b.push(i as f64);
+        }
+        assert_eq!(b.as_slice().as_ptr() as usize % 64, 0);
+        assert_eq!(b.len(), 100);
+        assert_eq!(b.as_slice()[17], 17.0);
+    }
+
+    #[test]
+    fn aligned_offsets_stay_aligned() {
+        let mut b = AlignedF64s::new();
+        b.extend_from_slice(&vec![1.5; 64]);
+        let p = b.as_slice();
+        for off in (0..64).step_by(F64S_PER_CACHE_LINE) {
+            assert_eq!(p[off..].as_ptr() as usize % 64, 0, "offset {off}");
+        }
+    }
+
+    #[test]
+    fn clear_keeps_allocation_and_roundtrips() {
+        let mut b = AlignedF64s::new();
+        b.extend_from_slice(&[1.0, 2.0, 3.0]);
+        b.clear();
+        assert!(b.is_empty());
+        b.extend_from_slice(&[4.0, 5.0]);
+        assert_eq!(b.as_slice(), &[4.0, 5.0]);
+        b.as_mut_slice()[0] = 9.0;
+        assert_eq!(b.as_slice(), &[9.0, 5.0]);
+    }
+}

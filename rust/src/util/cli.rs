@@ -37,6 +37,7 @@ impl fmt::Display for CliError {
 impl std::error::Error for CliError {}
 
 impl Cli {
+    /// Start a parser for `program` with a one-line description.
     pub fn new(program: &str, about: &'static str) -> Self {
         Self {
             program: program.to_string(),
@@ -134,6 +135,7 @@ impl Cli {
         }
     }
 
+    /// Render the auto-generated usage/help text.
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
         for spec in &self.specs {
@@ -154,26 +156,32 @@ impl Cli {
 
     // -- accessors --------------------------------------------------------
 
+    /// Raw value of `--name`, if present (or defaulted).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(String::as_str)
     }
 
+    /// Whether the boolean `--name` flag was passed.
     pub fn get_flag(&self, name: &str) -> bool {
         self.flags.get(name).copied().unwrap_or(false)
     }
 
+    /// Typed accessor; exits with a message on parse failure.
     pub fn get_usize(&self, name: &str) -> usize {
         self.parse_typed(name)
     }
 
+    /// Typed accessor; exits with a message on parse failure.
     pub fn get_u64(&self, name: &str) -> u64 {
         self.parse_typed(name)
     }
 
+    /// Typed accessor; exits with a message on parse failure.
     pub fn get_f64(&self, name: &str) -> f64 {
         self.parse_typed(name)
     }
 
+    /// Positional (non-flag) arguments in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

@@ -55,7 +55,9 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 /// Extension adding `.context(..)` / `.with_context(..)` to `Result` and
 /// `Option`, converting into [`Error`] with the message as outer frame.
 pub trait Context<T> {
+    /// Wrap the error/`None` with a fixed outer message.
     fn context<D: fmt::Display>(self, msg: D) -> Result<T>;
+    /// Like `context`, but the message is built lazily.
     fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T>;
 }
 

@@ -11,18 +11,26 @@ use std::fmt;
 /// A parsed JSON value. Objects use `BTreeMap` for deterministic ordering.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array of values.
     Arr(Vec<Json>),
+    /// An object (deterministically ordered).
     Obj(BTreeMap<String, Json>),
 }
 
 /// Parse error with byte offset and message.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
+    /// Byte offset of the error in the input.
     pub pos: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 
@@ -52,6 +60,7 @@ impl Json {
 
     // -- typed accessors -------------------------------------------------
 
+    /// The number value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -59,6 +68,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer, if exactly representable.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|x| {
             if x >= 0.0 && x.fract() == 0.0 {
@@ -69,6 +79,7 @@ impl Json {
         })
     }
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -76,6 +87,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -83,6 +95,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -90,6 +103,7 @@ impl Json {
         }
     }
 
+    /// A field of an `Obj`, or `None` for non-objects/missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),

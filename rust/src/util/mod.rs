@@ -9,8 +9,13 @@
 //!   binaries.
 //! * [`error`] — anyhow-style error context chaining ([`error::Result`],
 //!   [`error::Context`], the `err!`/`ensure!` macros).
-//! * [`threadpool`] — fixed-size scoped worker pool with a parallel-for
-//!   primitive; powers the native parallel samplers and the coordinator.
+//! * [`threadpool`] — fixed-size scoped worker pool with uniform,
+//!   weighted, and alignment-aware parallel-for primitives
+//!   ([`balanced_ranges`], [`threadpool::balanced_ranges_aligned`]);
+//!   powers the native parallel samplers and the coordinator.
+//! * [`aligned`] — cache-line-aligned `f64` storage underneath the
+//!   SIMD-tiled kernel buffers and the tile-aligned conditional-table
+//!   arena.
 //! * [`proptest`] — mini property-testing harness (random case generation,
 //!   failure reporting with the reproducing seed).
 //! * [`union_find`] — path-halving union-find (Swendsen–Wang clusters,
@@ -18,6 +23,7 @@
 //! * [`stats`] — Welford moments and simple descriptive statistics shared
 //!   by diagnostics and the bench harness.
 
+pub mod aligned;
 pub mod cli;
 pub mod error;
 pub mod json;
@@ -26,6 +32,7 @@ pub mod stats;
 pub mod threadpool;
 pub mod union_find;
 
+pub use aligned::AlignedF64s;
 pub use json::Json;
 pub use threadpool::{balanced_ranges, ThreadPool};
 pub use union_find::UnionFind;

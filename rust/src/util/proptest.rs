@@ -24,6 +24,7 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// Generator for one case seed.
     pub fn new(seed: u64) -> Self {
         Self {
             rng: Pcg64::seed(seed),
@@ -31,15 +32,18 @@ impl Gen {
         }
     }
 
+    /// Next raw 64-bit draw.
     pub fn u64(&mut self) -> u64 {
         self.rng.next_u64()
     }
 
+    /// Uniform integer in the inclusive range.
     pub fn usize_in(&mut self, range: RangeInclusive<usize>) -> usize {
         let (lo, hi) = (*range.start(), *range.end());
         lo + self.rng.next_below((hi - lo + 1) as u64) as usize
     }
 
+    /// Uniform signed integer in the inclusive range.
     pub fn i64_in(&mut self, range: RangeInclusive<i64>) -> i64 {
         let (lo, hi) = (*range.start(), *range.end());
         lo + self.rng.next_below((hi - lo + 1) as u64) as i64
@@ -50,6 +54,7 @@ impl Gen {
         lo + self.rng.next_f64() * (hi - lo)
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }

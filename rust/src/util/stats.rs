@@ -13,11 +13,13 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }
 
     #[inline]
+    /// Fold in one observation.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let delta = x - self.mean;
@@ -25,10 +27,12 @@ impl Welford {
         self.m2 += delta * (x - self.mean);
     }
 
+    /// Number of observations so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (0 when empty).
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -42,6 +46,7 @@ impl Welford {
         }
     }
 
+    /// Unbiased sample standard deviation.
     pub fn std_dev(&self) -> f64 {
         self.variance().sqrt()
     }
@@ -67,12 +72,19 @@ impl Welford {
 /// Summary of a sample: mean/std/min/max/percentiles.
 #[derive(Clone, Debug)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Unbiased sample standard deviation.
     pub std_dev: f64,
+    /// Smallest observation.
     pub min: f64,
+    /// Median (nearest-rank).
     pub p50: f64,
+    /// 95th percentile (nearest-rank).
     pub p95: f64,
+    /// Largest observation.
     pub max: f64,
 }
 

@@ -105,6 +105,7 @@ impl ThreadPool {
             .unwrap_or(4)
     }
 
+    /// Number of worker threads.
     pub fn size(&self) -> usize {
         self.size
     }
@@ -222,6 +223,25 @@ unsafe impl<T> Send for SendPtr<T> {}
 /// (dense/skewed incidence) takes one chunk while the rest of the sites
 /// still spread evenly over the remaining chunks.
 pub fn balanced_ranges(prefix: &[u64], chunks: usize) -> Vec<usize> {
+    balanced_ranges_aligned(prefix, chunks, 1)
+}
+
+/// [`balanced_ranges`] with every *interior* chunk bound rounded to the
+/// nearest multiple of `align` (the final bound always stays `n`).
+///
+/// The lane engine passes the number of sites whose packed state rows
+/// span a whole number of 64-byte cache lines: aligned bounds put every
+/// chunk seam on a line multiple relative to the state base, minimizing
+/// false sharing between pool workers (eliminated outright when the
+/// allocation is line-aligned), at the cost of at most `align / 2` sites
+/// of imbalance per bound (nearest-multiple rounding; down-only rounding
+/// would cascade the whole deficit into the last chunk on small inputs).
+/// `align = 1` is plain weighted chunking. Rounding and end-clamping can
+/// still make an interior chunk empty (bounds are kept non-decreasing,
+/// never reordered) — [`ThreadPool::scope_ranges`] handles empty chunks
+/// by design.
+pub fn balanced_ranges_aligned(prefix: &[u64], chunks: usize, align: usize) -> Vec<usize> {
+    let align = align.max(1);
     let n = prefix.len().saturating_sub(1);
     let chunks = chunks.clamp(1, MAX_POOL_SIZE).min(n.max(1));
     let total = prefix.last().copied().unwrap_or(0);
@@ -231,8 +251,10 @@ pub fn balanced_ranges(prefix: &[u64], chunks: usize) -> Vec<usize> {
     for c in 0..chunks.saturating_sub(1) {
         let remaining = total - prefix[prev];
         let target = prefix[prev] + remaining / (chunks - c) as u64;
-        // first index whose cumulative weight reaches the target
+        // first index whose cumulative weight reaches the target, rounded
+        // to the nearest grid point (monotonicity via the clamp below)
         let idx = prefix.partition_point(|&p| p < target).clamp(prev, n);
+        let idx = ((idx + align / 2) / align * align).clamp(prev, n);
         bounds.push(idx);
         prev = idx;
     }
@@ -367,6 +389,62 @@ mod tests {
         assert_eq!(balanced_ranges(&[0], 4), vec![0, 0]);
         assert_eq!(balanced_ranges(&[0, 0, 0], 2), vec![0, 0, 2]);
         assert_eq!(balanced_ranges(&[0, 5], 8), vec![0, 1]);
+    }
+
+    #[test]
+    fn aligned_ranges_round_interior_bounds_only() {
+        let prefix: Vec<u64> = (0..=100).collect();
+        // uniform weights, align 8: 25/50/75 round down to the grid
+        assert_eq!(
+            balanced_ranges_aligned(&prefix, 4, 8),
+            vec![0, 24, 48, 72, 100]
+        );
+        // align 1 is exactly the unaligned split
+        assert_eq!(
+            balanced_ranges_aligned(&prefix, 4, 1),
+            balanced_ranges(&prefix, 4)
+        );
+        // the final bound is never rounded
+        let b = balanced_ranges_aligned(&prefix, 3, 64);
+        assert_eq!(*b.last().unwrap(), 100);
+        assert!(b.windows(2).all(|w| w[0] <= w[1]), "got {b:?}");
+        assert!(
+            b[1..b.len() - 1].iter().all(|&x| x % 64 == 0),
+            "interior bounds off-grid: {b:?}"
+        );
+    }
+
+    #[test]
+    fn aligned_ranges_do_not_cascade_on_small_inputs() {
+        // regression: down-only rounding turned n=20 / 4 chunks / align 8
+        // into [0, 0, 8, 8, 20] (two empty chunks, one worker owning 12
+        // of 20 sites); nearest rounding spreads the grid points out
+        let prefix: Vec<u64> = (0..=20).collect();
+        assert_eq!(
+            balanced_ranges_aligned(&prefix, 4, 8),
+            vec![0, 8, 16, 16, 20]
+        );
+        // a model smaller than one grid step degenerates to a single
+        // chunk — acceptable (7 sites don't amortize 4 workers), but the
+        // bounds must stay well-formed
+        let prefix: Vec<u64> = (0..=7).collect();
+        let b = balanced_ranges_aligned(&prefix, 4, 8);
+        assert_eq!(*b.last().unwrap(), 7);
+        assert!(b.windows(2).all(|w| w[0] <= w[1]), "got {b:?}");
+    }
+
+    #[test]
+    fn aligned_ranges_cover_exactly_once_under_scope() {
+        let pool = ThreadPool::new(4);
+        let prefix: Vec<u64> = (0..=37).collect();
+        let bounds = balanced_ranges_aligned(&prefix, 4, 8);
+        let hits: Vec<AtomicU64> = (0..37).map(|_| AtomicU64::new(0)).collect();
+        pool.scope_ranges(&bounds, |_, s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
     }
 
     #[test]

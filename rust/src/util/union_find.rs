@@ -12,6 +12,7 @@ pub struct UnionFind {
 }
 
 impl UnionFind {
+    /// `n` singleton components.
     pub fn new(n: usize) -> Self {
         Self {
             parent: (0..n as u32).collect(),
@@ -20,10 +21,12 @@ impl UnionFind {
         }
     }
 
+    /// Number of elements (not components).
     pub fn len(&self) -> usize {
         self.parent.len()
     }
 
+    /// Whether the structure holds no elements.
     pub fn is_empty(&self) -> bool {
         self.parent.is_empty()
     }
@@ -62,6 +65,7 @@ impl UnionFind {
         true
     }
 
+    /// Whether `a` and `b` share a component.
     pub fn connected(&mut self, a: usize, b: usize) -> bool {
         self.find(a) == self.find(b)
     }

@@ -23,7 +23,9 @@ pub enum ChurnOp {
 /// A replayable churn trace over a fixed variable set.
 #[derive(Clone, Debug)]
 pub struct ChurnTrace {
+    /// Fixed variable count of the churned graph.
     pub num_vars: usize,
+    /// Operations in replay order.
     pub ops: Vec<ChurnOp>,
 }
 

@@ -15,7 +15,9 @@ use super::ising_grid;
 /// Parameters of the denoising posterior.
 #[derive(Clone, Copy, Debug)]
 pub struct DenoiseConfig {
+    /// Image height in pixels.
     pub rows: usize,
+    /// Image width in pixels.
     pub cols: usize,
     /// Ising smoothness coupling β.
     pub coupling: f64,

@@ -72,6 +72,7 @@ impl Default for TenantTraceConfig {
 /// A replayable multi-tenant traffic trace (see module docs).
 #[derive(Clone, Debug)]
 pub struct TenantTrace {
+    /// Arrival/departure/churn events in replay order.
     pub events: Vec<TenantEvent>,
 }
 

@@ -1,0 +1,238 @@
+//! Kernel equivalence: every [`KernelKind`] must sample the exact same
+//! trajectory — packed x and θ words bit-equal after every sweep — for
+//! every lane count (especially counts that are *not* multiples of the
+//! 8-lane tile width or of the 64-lane word, exercising tail masking),
+//! with and without a thread pool, and across mid-run churn.
+//!
+//! This is the contract that makes the kernel choice a pure performance
+//! knob: `scalar` is the readable reference, `tiled` (and `nightly-simd`
+//! when compiled in) must be indistinguishable from it except in wall
+//! clock. CI runs this file in release mode, where the tiled bodies
+//! actually vectorize.
+
+use std::sync::Arc;
+
+use pdgibbs::engine::{EngineConfig, KernelKind, LanePdSampler};
+use pdgibbs::graph::{FactorGraph, PairFactor};
+use pdgibbs::util::proptest::{check, Gen};
+use pdgibbs::util::ThreadPool;
+use pdgibbs::workloads;
+
+/// A graph that exercises BOTH x-half-step paths at once: grid variables
+/// (degree ≤ 4) draw from cached tables, the appended hub (degree 9 > the
+/// degree-6 cache cap) takes the per-lane log-odds accumulate fallback.
+/// Mixed-sign couplings cover the Lemma-4 β < 0 branch.
+fn mixed_path_graph() -> FactorGraph {
+    let mut g = workloads::ising_grid(3, 3, 0.35, 0.1);
+    let hub = g.add_var(0.2);
+    for (i, v) in (0..9).enumerate() {
+        let beta = if i % 2 == 0 { 0.3 } else { -0.25 };
+        g.add_factor(PairFactor::ising(hub, v, beta));
+    }
+    g
+}
+
+/// Run `sweeps` sweeps on one engine per kernel and assert the packed
+/// states never diverge. `pool_sizes[i]` attaches a pool to engine `i`
+/// (0 = serial), proving pooling × kernel choice is also trajectory-free.
+fn assert_equivalent(
+    g: &FactorGraph,
+    lanes: usize,
+    sweeps: usize,
+    kernels: &[(KernelKind, usize)],
+) {
+    let mut engines: Vec<LanePdSampler> = kernels
+        .iter()
+        .map(|&(kernel, pool)| {
+            let eng = LanePdSampler::with_config(
+                g,
+                EngineConfig {
+                    lanes,
+                    seed: 0xA5A5,
+                    kernel,
+                },
+            );
+            if pool > 0 {
+                eng.with_pool(Arc::new(ThreadPool::new(pool)))
+            } else {
+                eng
+            }
+        })
+        .collect();
+    for sweep in 0..sweeps {
+        for eng in engines.iter_mut() {
+            eng.sweep();
+        }
+        let (first, rest) = engines.split_first().unwrap();
+        for eng in rest {
+            assert_eq!(
+                first.state_words(),
+                eng.state_words(),
+                "x diverged at sweep {sweep}, lanes {lanes}: {} vs {}",
+                first.kernel().name(),
+                eng.kernel().name()
+            );
+            assert_eq!(
+                first.theta_words(),
+                eng.theta_words(),
+                "theta diverged at sweep {sweep}, lanes {lanes}: {} vs {}",
+                first.kernel().name(),
+                eng.kernel().name()
+            );
+        }
+    }
+}
+
+/// Every compiled-in kernel, serial.
+fn all_serial() -> Vec<(KernelKind, usize)> {
+    KernelKind::all().iter().map(|&k| (k, 0)).collect()
+}
+
+#[test]
+fn kernels_bit_identical_across_awkward_lane_counts() {
+    // deliberately not multiples of the tile width (8) or the word (64):
+    // every tail-masking edge case from a single partial tile to a full
+    // word plus one lane
+    let g = mixed_path_graph();
+    for &lanes in &[1usize, 3, 7, 9, 13, 63, 65, 70, 100, 127, 129] {
+        assert_equivalent(&g, lanes, 15, &all_serial());
+    }
+}
+
+#[test]
+fn kernels_bit_identical_at_word_multiples() {
+    let g = mixed_path_graph();
+    for &lanes in &[8usize, 64, 128, 192] {
+        assert_equivalent(&g, lanes, 15, &all_serial());
+    }
+}
+
+#[test]
+fn tiled_pooled_matches_scalar_serial() {
+    // kernel choice x pool size: all four combinations, one trajectory
+    let g = mixed_path_graph();
+    let combos = [
+        (KernelKind::Scalar, 0usize),
+        (KernelKind::Scalar, 3),
+        (KernelKind::Tiled, 0),
+        (KernelKind::Tiled, 5),
+    ];
+    assert_equivalent(&g, 70, 30, &combos);
+}
+
+#[test]
+fn kernels_bit_identical_under_churn() {
+    // add/remove factors mid-run on every engine in lockstep: the cached
+    // x-tables relocate inside the tile-aligned arena, the CSR overlay
+    // fills, slots die and are reused — trajectories must stay equal;
+    // 90 lanes = one full word + a 26-lane tail
+    let mut g = workloads::ising_grid(3, 4, 0.3, 0.05);
+    let mut engines: Vec<LanePdSampler> = KernelKind::all()
+        .iter()
+        .map(|&k| LanePdSampler::new(&g, 90, 77).with_kernel(k))
+        .collect();
+    let compare = |engines: &[LanePdSampler], stage: &str| {
+        let (first, rest) = engines.split_first().unwrap();
+        for eng in rest {
+            assert_eq!(first.state_words(), eng.state_words(), "x diverged {stage}");
+            assert_eq!(first.theta_words(), eng.theta_words(), "θ diverged {stage}");
+        }
+    };
+    for _ in 0..10 {
+        engines.iter_mut().for_each(LanePdSampler::sweep);
+    }
+    compare(&engines, "before churn");
+    // grow a grid variable past the degree-6 cache cap (table → fallback)
+    let mut added = Vec::new();
+    for v in [5usize, 7, 8, 9, 10] {
+        let id = g.add_factor(PairFactor::ising(0, v, -0.2));
+        added.push(id);
+        for eng in engines.iter_mut() {
+            eng.add_factor(id, g.factor(id).unwrap());
+        }
+    }
+    for _ in 0..10 {
+        engines.iter_mut().for_each(LanePdSampler::sweep);
+    }
+    compare(&engines, "after inserts");
+    // shrink it back under the cap (fallback → freshly rebuilt table)
+    for id in added {
+        g.remove_factor(id).unwrap();
+        for eng in engines.iter_mut() {
+            assert!(eng.remove_factor(id));
+        }
+    }
+    for _ in 0..10 {
+        engines.iter_mut().for_each(LanePdSampler::sweep);
+    }
+    compare(&engines, "after removals");
+}
+
+#[test]
+fn tiled_keeps_ghost_lanes_zero() {
+    // 69 lanes: 5-lane tail in word 1 — stale tiled scratch must never
+    // leak past the mask into the packed state
+    let g = mixed_path_graph();
+    for &kernel in KernelKind::all() {
+        let mut eng = LanePdSampler::new(&g, 69, 12).with_kernel(kernel);
+        for _ in 0..40 {
+            eng.sweep();
+        }
+        let ghost = !((1u64 << 5) - 1); // lanes 5..64 of the tail word
+        for (i, &w) in eng.state_words().iter().chain(eng.theta_words()).enumerate() {
+            if i % 2 == 1 {
+                assert_eq!(w & ghost, 0, "{}: ghost lanes in word {i}", kernel.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_kernel_equivalence_random_graphs_lanes_and_churn() {
+    check("scalar ≡ tiled on random models", 12, |gn: &mut Gen| {
+        let n = gn.usize_in(2..=7);
+        let mut g = FactorGraph::new(n);
+        for v in 0..n {
+            g.set_unary(v, gn.f64_in(-0.8, 0.8));
+        }
+        let factors = gn.usize_in(1..=9);
+        for _ in 0..factors {
+            let v1 = gn.usize_in(0..=n - 1);
+            let mut v2 = gn.usize_in(0..=n - 1);
+            if v1 == v2 {
+                v2 = (v2 + 1) % n;
+            }
+            g.add_factor(PairFactor::new(v1, v2, gn.positive_table(1.5)));
+        }
+        // lane count biased toward awkward tails
+        let lanes = match gn.usize_in(0..=3) {
+            0 => gn.usize_in(1..=7),
+            1 => gn.usize_in(60..=68),
+            2 => 64,
+            _ => gn.usize_in(120..=140),
+        };
+        let seed = gn.u64();
+        let mut scalar = LanePdSampler::new(&g, lanes, seed).with_kernel(KernelKind::Scalar);
+        let mut tiled = LanePdSampler::new(&g, lanes, seed).with_kernel(KernelKind::Tiled);
+        for sweep in 0..8 {
+            // occasional lockstep churn
+            if sweep == 4 {
+                let v1 = gn.usize_in(0..=n - 1);
+                let v2 = (v1 + 1) % n;
+                let id = g.add_factor(PairFactor::new(v1, v2, gn.positive_table(1.0)));
+                let f = g.factor(id).unwrap().clone();
+                scalar.add_factor(id, &f);
+                tiled.add_factor(id, &f);
+            }
+            scalar.sweep();
+            tiled.sweep();
+            if scalar.state_words() != tiled.state_words() {
+                return Err(format!("x diverged at sweep {sweep} (lanes {lanes})"));
+            }
+            if scalar.theta_words() != tiled.theta_words() {
+                return Err(format!("θ diverged at sweep {sweep} (lanes {lanes})"));
+            }
+        }
+        Ok(())
+    });
+}
