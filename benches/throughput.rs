@@ -30,11 +30,21 @@
 //! Reported: aggregate background sweeps/s across all tenants and the
 //! request latency distribution (p50/p99).
 //!
+//! `--mode validate` runs the statistical exactness gates (ISSUE 5) on a
+//! fixed subset of the validation matrix — ground-truth forward draws,
+//! scalar PD, lane engine under both stable kernels (incl. the dense
+//! no-coloring K₁₀), and the live coordinator serving path — and records
+//! the gate statistics (max marginal z, joint TV, chi-square, thresholds,
+//! pass/fail). The full matrix lives in
+//! `rust/tests/statistical_validation.rs`; this mode makes the gate
+//! margins diffable PR over PR. Exits nonzero if any gate fails.
+//!
 //! All modes write the usual `target/bench-reports/throughput*.json` AND
 //! a tracked file at the repository root so the perf trajectory is
 //! diffable PR over PR: lanes mode owns `BENCH_throughput.json` (the
 //! acceptance record), full mode writes `BENCH_throughput_full.json`,
-//! server mode writes `BENCH_server.json`.
+//! server mode writes `BENCH_server.json`, validate mode writes
+//! `BENCH_validate.json`.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -54,8 +64,11 @@ fn main() {
         "full" => bench_full(),
         "lanes" => bench_lanes(),
         "server" => bench_server(),
+        "validate" => bench_validate(),
         other => {
-            eprintln!("unknown mode '{other}' (usage: throughput [--mode full|lanes|server])");
+            eprintln!(
+                "unknown mode '{other}' (usage: throughput [--mode full|lanes|server|validate])"
+            );
             std::process::exit(2);
         }
     }
@@ -71,7 +84,7 @@ fn parse_arg(name: &str) -> Option<String> {
         .and_then(|i| args.get(i + 1).cloned())
 }
 
-/// `--mode <full|lanes|server>`, default `full`.
+/// `--mode <full|lanes|server|validate>`, default `full`.
 fn parse_mode() -> String {
     parse_arg("mode").unwrap_or_else(|| "full".to_string())
 }
@@ -380,6 +393,103 @@ fn bench_server() {
     );
     coord.shutdown();
     report.finish_tracked("server", "server");
+}
+
+// -- validate mode ----------------------------------------------------------
+
+/// Statistical exactness gates as a tracked bench artifact: a fixed
+/// subset of the `tests/statistical_validation.rs` matrix (one row per
+/// path × scenario), so the gate statistics themselves are diffable PR
+/// over PR in `BENCH_validate.json`. The full matrix runs in the test
+/// suite; this mode is the serving-stack sanity snapshot.
+fn bench_validate() {
+    use pdgibbs::validation::{
+        validate, ClassicalPath, CoordinatorPath, ExactForward, GateConfig, LanePath,
+        ValidationReport,
+    };
+    use pdgibbs::workloads::scenarios;
+
+    let mut report = Report::new("validate");
+    let mut all_passed = true;
+    let push = |report: &mut Report, r: &ValidationReport, elapsed_s: f64| {
+        println!("{}", r.summary());
+        let mut rec = Record::new("validate")
+            .param("path", r.path.clone())
+            .param("scenario", r.scenario.clone())
+            .metric("samples", r.samples as f64)
+            .metric("max_z", r.max_z.stat)
+            .metric("z_threshold", r.max_z.threshold)
+            .metric("passed", if r.passed() { 1.0 } else { 0.0 })
+            .metric("elapsed_s", elapsed_s);
+        if let Some(tv) = &r.tv {
+            rec = rec.metric("tv", tv.stat).metric("tv_threshold", tv.threshold);
+        }
+        if let Some((chi2, df)) = &r.chi2 {
+            rec = rec
+                .metric("chi2", chi2.stat)
+                .metric("chi2_threshold", chi2.threshold)
+                .metric("chi2_df", *df as f64);
+        }
+        report.push(rec);
+    };
+
+    // calibration row: iid ground-truth draws through the same gates
+    {
+        let s = scenarios::by_name("grid3x3-below");
+        let mut fwd = ExactForward::new(&s.graph, 0xB001);
+        let cfg = GateConfig { burn_in: 0, samples: 8192, tau: 1, ..GateConfig::default() };
+        let t0 = Instant::now();
+        let r = validate(&mut fwd, &s.graph, s.name, &cfg);
+        all_passed &= r.passed();
+        push(&mut report, &r, t0.elapsed().as_secs_f64());
+    }
+    // classical scalar PD
+    {
+        let s = scenarios::by_name("chain8-below");
+        let mut p = ClassicalPath::new(Box::new(PdSampler::new(&s.graph)), 0xB002);
+        let t0 = Instant::now();
+        let r = validate(&mut p, &s.graph, s.name, &GateConfig::with_budget(4096, s.tau));
+        all_passed &= r.passed();
+        push(&mut report, &r, t0.elapsed().as_secs_f64());
+    }
+    // lane engine, both stable kernels, incl. the dense no-coloring case
+    for (scenario, kernel) in [
+        ("grid3x3-below", KernelKind::Scalar),
+        ("grid3x3-below", KernelKind::Tiled),
+        ("kn10-dense", KernelKind::Tiled),
+    ] {
+        let s = scenarios::by_name(scenario);
+        let mut p = LanePath::new(
+            s.graph.clone(),
+            pdgibbs::engine::EngineConfig { lanes: 64, seed: 0xB003, kernel },
+            None,
+        );
+        let t0 = Instant::now();
+        let r = validate(&mut p, &s.graph, s.name, &GateConfig::with_budget(8192, s.tau));
+        all_passed &= r.passed();
+        push(&mut report, &r, t0.elapsed().as_secs_f64());
+    }
+    // the live coordinator serving path (marginal gate)
+    {
+        let s = scenarios::by_name("grid3x3-below");
+        let mut p = CoordinatorPath::new(s.graph.clone(), 2, 0, 8, 0xB004);
+        let t0 = Instant::now();
+        let r = validate(&mut p, &s.graph, s.name, &GateConfig::with_budget(4096, s.tau));
+        all_passed &= r.passed();
+        push(&mut report, &r, t0.elapsed().as_secs_f64());
+    }
+
+    report.push(Record::new("validate-summary").metric(
+        "all_passed",
+        if all_passed { 1.0 } else { 0.0 },
+    ));
+    if !all_passed {
+        println!("WARNING: statistical validation gates FAILED — see rows above");
+    }
+    report.finish_tracked("validate", "validate");
+    if !all_passed {
+        std::process::exit(1);
+    }
 }
 
 // -- full mode --------------------------------------------------------------

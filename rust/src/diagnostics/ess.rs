@@ -7,9 +7,17 @@
 
 /// Lag-`k` autocorrelations of one trace, up to `max_lag` (biased, FFT-free
 /// — traces in the benches are short enough for the O(n·k) loop).
+///
+/// Degenerate traces (length < 2 — e.g. a freshly-created tenant whose
+/// PSRF monitors have recorded at most one sweep) return `vec![1.0]`:
+/// ρ₀ = 1 by convention and no lag carries information, instead of
+/// panicking the caller (which on the coordinator would be a shared
+/// shard thread).
 pub fn autocorrelation(trace: &[f64], max_lag: usize) -> Vec<f64> {
     let n = trace.len();
-    assert!(n >= 2);
+    if n < 2 {
+        return vec![1.0];
+    }
     let mean = trace.iter().sum::<f64>() / n as f64;
     let var: f64 = trace.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
     if var == 0.0 {
@@ -97,5 +105,18 @@ mod tests {
         assert!(rho.iter().all(|&r| r == 0.0));
         let ess = effective_sample_size(&trace);
         assert!(ess <= 100.0);
+    }
+
+    #[test]
+    fn tiny_traces_do_not_panic() {
+        // regression: traces of length < 2 (fresh tenants) used to hit
+        // `assert!(n >= 2)`; they now return the degenerate [1.0]
+        assert_eq!(autocorrelation(&[], 8), vec![1.0]);
+        assert_eq!(autocorrelation(&[3.5], 8), vec![1.0]);
+        assert_eq!(autocorrelation(&[3.5], 0), vec![1.0]);
+        // and the ESS guards keep composing with it
+        assert_eq!(effective_sample_size(&[]), 0.0);
+        assert_eq!(effective_sample_size(&[1.0]), 1.0);
+        assert_eq!(effective_sample_size(&[1.0, 0.0, 1.0]), 3.0);
     }
 }

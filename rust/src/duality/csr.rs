@@ -525,6 +525,73 @@ mod tests {
     }
 
     #[test]
+    fn prop_xtable_arena_preserves_contents_and_alignment() {
+        // PR-4 code with no property coverage until now: random
+        // grow / shrink-in-place / relocate-on-grow / clear sequences
+        // (with the slack-threshold compactions they trigger) must
+        // preserve every live table's (mult, thresh) contents bit-for-bit
+        // and keep every table start 64-byte aligned.
+        use crate::util::proptest::{check, Gen};
+        check("xtable arena churn", 60, |g: &mut Gen| {
+            let nvars = g.usize_in(1..=8);
+            let mut xt = XTableArena::new(nvars);
+            let mut reference: Vec<Option<(Vec<f64>, Vec<f64>)>> = vec![None; nvars];
+            let steps = g.usize_in(20..=120);
+            for step in 0..steps {
+                let v = g.usize_in(0..=nvars - 1);
+                if reference[v].is_none() || g.bool() {
+                    // table sizes are the real 2^deg shapes, deg 0..=6
+                    let len = 1usize << g.usize_in(0..=6);
+                    let mult: Vec<f64> = (0..len).map(|_| g.f64_in(-8.0, 8.0)).collect();
+                    let thresh: Vec<f64> = (0..len).map(|_| g.f64_in(0.0, 1.0)).collect();
+                    xt.set(v, &mult, &thresh);
+                    reference[v] = Some((mult, thresh));
+                } else {
+                    xt.clear(v);
+                    reference[v] = None;
+                }
+                // the compaction invariant must hold after EVERY mutation
+                if !(xt.slack() <= 16 || xt.slack() * 4 <= xt.mult.len()) {
+                    return Err(format!(
+                        "step {step}: slack {} vs arena {}",
+                        xt.slack(),
+                        xt.mult.len()
+                    ));
+                }
+                // every live table: exact contents + 64B-aligned start
+                for (u, want) in reference.iter().enumerate() {
+                    match (want, xt.get(u)) {
+                        (None, None) => {}
+                        (Some((m, t)), Some((am, at))) => {
+                            if am != &m[..] || at != &t[..] {
+                                return Err(format!(
+                                    "step {step}: var {u} contents corrupted"
+                                ));
+                            }
+                            if am.as_ptr() as usize % 64 != 0
+                                || at.as_ptr() as usize % 64 != 0
+                            {
+                                return Err(format!(
+                                    "step {step}: var {u} table start misaligned"
+                                ));
+                            }
+                        }
+                        (want, got) => {
+                            return Err(format!(
+                                "step {step}: var {u} presence mismatch \
+                                 (want {:?}, got {:?})",
+                                want.is_some(),
+                                got.is_some()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn compaction_threshold_scales_with_arena() {
         let mut csr = CsrIncidence::new(2);
         csr.rebuild(&[vec![(0u32, 1.0)], vec![(0u32, 1.0)]]);

@@ -33,13 +33,20 @@
 //!    routes tenants to shard workers that interleave foreground queries
 //!    with deficit-round-robin background sweeping, all sharing one
 //!    [`util::ThreadPool`].
-//! 4. **SIMD-tiled kernels** (PR 4, this one) — the innermost sweep
-//!    bodies are runtime-selectable [`engine::kernels::LaneKernel`]
+//! 4. **SIMD-tiled kernels** (PR 4) — the innermost sweep bodies are
+//!    runtime-selectable [`engine::kernels::LaneKernel`]
 //!    implementations ([`engine::KernelKind`]): per-lane `scalar`
 //!    reference loops, stable-Rust `tiled` 8-lane bodies over 64-byte
 //!    aligned buffers with jump-ahead RNG refill
 //!    ([`rng::Pcg64::fill_f64`]), or `core::simd` under the
 //!    `nightly-simd` feature — all bit-identical in trajectory.
+//! 5. **Statistical validation** (PR 5, this one) — bit-identity only
+//!    proves every path samples the *same* trajectory; [`validation`]
+//!    proves that trajectory targets the *right* distribution: one
+//!    [`validation::SamplingPath`] trait over every sampler, kernel,
+//!    pool, and the live coordinator, gated against exact enumeration
+//!    with deterministic z/TV/chi-square thresholds over the scenario
+//!    zoo ([`workloads::scenarios`]).
 //!
 //! ## Crate layout
 //!
@@ -71,9 +78,15 @@
 //!   requests with deficit-round-robin background sweeping weighted by
 //!   per-tenant sweep cost; label-scoped metrics, dispatch policy, and a
 //!   single-tenant compat façade ([`coordinator::Server`]).
+//! * [`validation`] — the statistical correctness subsystem: one
+//!   [`validation::SamplingPath`] trait over every sampler/engine/serving
+//!   path, an exact forward sampler, and deterministic exactness gates
+//!   (marginal z-tests, joint TV + chi-square against enumeration) run by
+//!   `tests/statistical_validation.rs` over the scenario zoo
+//!   ([`workloads::scenarios`]); see `docs/TESTING.md`.
 //! * [`workloads`] — the paper's three synthetic model families + churn
 //!   traces + multi-tenant arrival/departure traffic traces + the
-//!   image-denoising demo MRF.
+//!   statistical-validation scenario zoo + the image-denoising demo MRF.
 //! * [`bench`] — self-contained bench harness (criterion is unavailable
 //!   offline) used by every `benches/` binary.
 //! * [`util`] — substrates built from scratch for the offline environment:
@@ -98,6 +111,7 @@ pub mod rng;
 pub mod runtime;
 pub mod samplers;
 pub mod util;
+pub mod validation;
 pub mod workloads;
 
 pub use duality::{DualFactor, DualModel};

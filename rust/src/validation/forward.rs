@@ -1,0 +1,262 @@
+//! Exact forward sampling by joint-CDF inversion — the harness's ground
+//! truth *sampler* (as opposed to its ground truth *distribution*, which
+//! is exact enumeration).
+//!
+//! For models of ≤ [`MAX_JOINT_VARS`] variables the full joint is small
+//! enough to tabulate: [`joint_probs`] enumerates the normalized
+//! probability of every state code, and [`ExactForward`] draws iid states
+//! by inverting the cumulative distribution. Two jobs:
+//!
+//! 1. **Calibration** — the gates of [`super::harness`] must *pass* on
+//!    iid draws from the true joint. If they don't, the thresholds are
+//!    mis-derived, independent of any sampler bug.
+//! 2. **Power** — a deliberately perturbed joint
+//!    ([`ExactForward::tilted`] shifts every marginal,
+//!    [`ExactForward::parity_tilted`] reshapes the joint while barely
+//!    moving marginals) must *fail* the gates. If it doesn't, the gates
+//!    are too loose to certify anything.
+
+use crate::graph::FactorGraph;
+use crate::inference::exact::log_sum_exp;
+use crate::rng::{Pcg64, RngCore};
+use crate::workloads::ChurnOp;
+
+use super::path::SamplingPath;
+
+/// Joint tabulation cap: `2^14` states keeps enumeration, histogramming,
+/// and chi-square pooling comfortably in cache for every zoo scenario.
+pub const MAX_JOINT_VARS: usize = 14;
+
+/// Normalized probability of every state code (bit `v` of the code is
+/// `x_v`). Panics above [`MAX_JOINT_VARS`] variables.
+pub fn joint_probs(g: &FactorGraph) -> Vec<f64> {
+    let n = g.num_vars();
+    assert!(
+        n <= MAX_JOINT_VARS,
+        "joint tabulation limited to {MAX_JOINT_VARS} variables, got {n}"
+    );
+    let mut x = vec![0u8; n];
+    let mut lps = Vec::with_capacity(1 << n);
+    for code in 0..1usize << n {
+        for (v, xv) in x.iter_mut().enumerate() {
+            *xv = ((code >> v) & 1) as u8;
+        }
+        lps.push(g.log_prob_unnorm(&x));
+    }
+    let lz = log_sum_exp(&lps);
+    lps.iter().map(|lp| (lp - lz).exp()).collect()
+}
+
+/// Per-variable marginals `P(x_v = 1)` of a tabulated joint.
+pub fn marginals_from_joint(probs: &[f64]) -> Vec<f64> {
+    assert!(probs.len().is_power_of_two());
+    let n = probs.len().trailing_zeros() as usize;
+    let mut out = vec![0.0; n];
+    for (code, &p) in probs.iter().enumerate() {
+        for (v, m) in out.iter_mut().enumerate() {
+            if (code >> v) & 1 == 1 {
+                *m += p;
+            }
+        }
+    }
+    out
+}
+
+/// Iid sampler of a tabulated joint via CDF inversion; implements
+/// [`SamplingPath`] (one chain, one fresh state per "sweep", τ = 1).
+pub struct ExactForward {
+    label: String,
+    n: usize,
+    cdf: Vec<f64>,
+    rng: Pcg64,
+    state: Vec<u8>,
+}
+
+impl ExactForward {
+    /// Forward sampler of the model's true joint.
+    pub fn new(g: &FactorGraph, seed: u64) -> Self {
+        Self::perturbed(g, seed, "exact-forward", |_| 0.0)
+    }
+
+    /// Forward sampler of the *biased* joint `p'(x) ∝ p(x)·e^{eps·Σ_v x_v}`
+    /// — every marginal's log-odds shifts by `eps`, so the marginal
+    /// z-gates must reject it (power check).
+    pub fn tilted(g: &FactorGraph, seed: u64, eps: f64) -> Self {
+        Self::perturbed(g, seed, "exact-forward-tilted", move |code| {
+            eps * (code.count_ones() as f64)
+        })
+    }
+
+    /// Forward sampler of `p'(x) ∝ p(x)·e^{±eps}` (sign = parity of
+    /// `Σ x_v`) — a joint reshaping that leaves marginals almost exactly
+    /// in place, so only the joint TV/chi-square gates can catch it
+    /// (power check for the state-distribution gates).
+    pub fn parity_tilted(g: &FactorGraph, seed: u64, eps: f64) -> Self {
+        Self::perturbed(g, seed, "exact-forward-parity", move |code| {
+            if code.count_ones() % 2 == 0 {
+                eps
+            } else {
+                -eps
+            }
+        })
+    }
+
+    /// Forward sampler of `p'(x) ∝ p(x)·e^{logw(code)}` for an arbitrary
+    /// log-weight over state codes.
+    pub fn perturbed(
+        g: &FactorGraph,
+        seed: u64,
+        label: &str,
+        logw: impl Fn(usize) -> f64,
+    ) -> Self {
+        let probs = joint_probs(g);
+        let weighted: Vec<f64> = probs
+            .iter()
+            .enumerate()
+            .map(|(code, &p)| p.ln() + logw(code))
+            .collect();
+        let lz = log_sum_exp(&weighted);
+        let mut acc = 0.0;
+        let cdf: Vec<f64> = weighted
+            .iter()
+            .map(|&lp| {
+                acc += (lp - lz).exp();
+                acc
+            })
+            .collect();
+        let n = g.num_vars();
+        Self {
+            label: label.to_string(),
+            n,
+            cdf,
+            rng: Pcg64::seed(seed),
+            state: vec![0; n],
+        }
+    }
+
+    fn draw_code(&mut self) -> usize {
+        let u = self.rng.next_f64();
+        self.cdf
+            .partition_point(|&c| c <= u)
+            .min(self.cdf.len() - 1)
+    }
+}
+
+impl SamplingPath for ExactForward {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn num_vars(&self) -> usize {
+        self.n
+    }
+
+    fn sweep(&mut self) {
+        let code = self.draw_code();
+        for (v, xv) in self.state.iter_mut().enumerate() {
+            *xv = ((code >> v) & 1) as u8;
+        }
+    }
+
+    fn visit_states(&self, f: &mut dyn FnMut(&[u8])) -> bool {
+        f(&self.state);
+        true
+    }
+
+    fn apply_churn(&mut self, _ops: &[ChurnOp]) -> bool {
+        false // the tabulated joint is frozen at construction
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::PairFactor;
+    use crate::inference::exact;
+    use crate::workloads;
+
+    #[test]
+    fn joint_probs_match_enumeration() {
+        let g = workloads::ising_grid(2, 3, 0.3, 0.1);
+        let probs = joint_probs(&g);
+        assert_eq!(probs.len(), 64);
+        assert!((probs.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        let want = exact::enumerate(&g).marginals;
+        let got = marginals_from_joint(&probs);
+        for v in 0..6 {
+            assert!((got[v] - want[v]).abs() < 1e-12, "v={v}");
+        }
+    }
+
+    #[test]
+    fn forward_sampler_frequencies_match_joint() {
+        let mut g = FactorGraph::new(3);
+        g.set_unary(0, 0.8);
+        g.add_factor(PairFactor::ising(0, 1, 0.5));
+        g.add_factor(PairFactor::ising(1, 2, -0.4));
+        let probs = joint_probs(&g);
+        let mut fwd = ExactForward::new(&g, 9);
+        let n = 200_000usize;
+        let mut hist = vec![0u64; 8];
+        for _ in 0..n {
+            fwd.sweep();
+            fwd.visit_states(&mut |x| {
+                let code = x.iter().enumerate().fold(0usize, |c, (v, &b)| {
+                    c | ((b as usize) << v)
+                });
+                hist[code] += 1;
+            });
+        }
+        for (code, &p) in probs.iter().enumerate() {
+            let emp = hist[code] as f64 / n as f64;
+            // iid binomial: 5σ band
+            let se = (p * (1.0 - p) / n as f64).sqrt();
+            assert!(
+                (emp - p).abs() < 5.0 * se + 1e-9,
+                "code {code}: {emp} vs {p} (se {se})"
+            );
+        }
+    }
+
+    #[test]
+    fn tilt_shifts_marginals_parity_tilt_does_not() {
+        let g = workloads::ising_grid(2, 2, 0.2, 0.0);
+        let base = marginals_from_joint(&joint_probs(&g));
+        // reconstruct each perturbed joint through the sampler's own CDF
+        let tilt = ExactForward::tilted(&g, 1, 0.4);
+        let parity = ExactForward::parity_tilted(&g, 1, 0.6);
+        let probs_of = |fwd: &ExactForward| -> Vec<f64> {
+            let mut prev = 0.0;
+            fwd.cdf
+                .iter()
+                .map(|&c| {
+                    let p = c - prev;
+                    prev = c;
+                    p
+                })
+                .collect()
+        };
+        let tilted_m = marginals_from_joint(&probs_of(&tilt));
+        let parity_m = marginals_from_joint(&probs_of(&parity));
+        for v in 0..4 {
+            assert!(
+                (tilted_m[v] - base[v]).abs() > 0.05,
+                "tilt must move marginal {v}: {} vs {}",
+                tilted_m[v],
+                base[v]
+            );
+            assert!(
+                (parity_m[v] - base[v]).abs() < 0.02,
+                "parity tilt must keep marginal {v}: {} vs {}",
+                parity_m[v],
+                base[v]
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "limited to 14")]
+    fn joint_tabulation_caps_at_14_vars() {
+        joint_probs(&FactorGraph::new(15));
+    }
+}

@@ -1,0 +1,349 @@
+//! The exactness gates: drive any [`SamplingPath`] long enough, compare
+//! its empirical distribution against exact inference, and pass or fail
+//! deterministic thresholds.
+//!
+//! ## Gate design (how the thresholds were precomputed)
+//!
+//! Every run is seed-fixed, so a gate is a *deterministic* property of
+//! the build — there are no CI flakes, only passes and regressions. The
+//! thresholds come from iid large-sample theory made applicable by
+//! **thinning**: the harness observes states only every `tau` sweeps,
+//! where `tau` is the scenario's documented autocorrelation-time bound,
+//! so consecutive observations are approximately independent and the
+//! classical test distributions hold. On top of that every threshold is
+//! multiplied by a `safety` factor (default 1.5) absorbing residual
+//! autocorrelation and approximation error in the quantile functions.
+//! Three gates run per path × scenario:
+//!
+//! 1. **Marginal z-gate** — per variable,
+//!    `z_v = |p̂_v − p_v| / √(p_v(1−p_v)/N)` must stay below the
+//!    two-sided normal critical value at level `alpha/(n+2)` (Bonferroni
+//!    across the n marginal tests plus the two joint tests) times
+//!    `safety`. This is the only gate serving paths support (the
+//!    coordinator exposes pooled marginals, not states); there the
+//!    effective sample count divides by `tau` instead of thinning.
+//! 2. **Total-variation gate** — `TV(p̂, p)` over the full 2ⁿ-state joint
+//!    must stay below `E[TV] + dev`, where `E[TV] ≤ ½Σ_s √(p_s(1−p_s)/N)`
+//!    (Jensen, conservative by the missing √(2/π) ≈ 0.8 factor) and
+//!    `dev = √(ln(1/α)/2N)` is the McDiarmid bounded-difference tail
+//!    (each observation moves TV by at most 1/N).
+//! 3. **Chi-square gate** — Pearson's X² on the joint histogram with
+//!    small-expected buckets pooled ([`crate::validation::pooled_chi2`],
+//!    floor 8), against the Wilson–Hilferty quantile at `1 − alpha/(n+2)`.
+//!
+//! A correct sampler sits ~10+ standard errors inside these thresholds at
+//! the committed seeds; the classic bug classes (wrong cached
+//! conditional, stale table after churn, biased tail-lane draw, swapped
+//! endpoint) land far outside them — see the power tests in
+//! `tests/statistical_validation.rs`, which verify that deliberately
+//! perturbed distributions *fail*.
+
+use crate::graph::FactorGraph;
+
+use super::forward::{joint_probs, marginals_from_joint, MAX_JOINT_VARS};
+use super::path::SamplingPath;
+use super::stats::{chi2_quantile, pooled_chi2, total_variation, z_critical};
+
+/// Budget and threshold parameters of one validation run.
+#[derive(Clone, Copy, Debug)]
+pub struct GateConfig {
+    /// Sweeps discarded before any observation (all chains).
+    pub burn_in: usize,
+    /// Target observation count pooled over chains (the harness rounds
+    /// sweeps up so every chain is observed equally often).
+    pub samples: usize,
+    /// Thinning stride in sweeps — the scenario's documented integrated
+    /// autocorrelation-time bound. States are observed every `tau`-th
+    /// sweep; marginal-only paths observe every sweep and divide the
+    /// sample count by `tau` instead.
+    pub tau: usize,
+    /// Overall test level, Bonferroni-split across the `n + 2` tests.
+    pub alpha: f64,
+    /// Multiplier on every threshold (residual-autocorrelation slack).
+    pub safety: f64,
+}
+
+impl Default for GateConfig {
+    fn default() -> Self {
+        Self {
+            burn_in: 1500,
+            samples: 8192,
+            tau: 6,
+            alpha: 1e-9,
+            safety: 1.5,
+        }
+    }
+}
+
+impl GateConfig {
+    /// Default gates with an explicit sample budget and thinning stride.
+    pub fn with_budget(samples: usize, tau: usize) -> Self {
+        Self {
+            samples,
+            tau: tau.max(1),
+            ..Self::default()
+        }
+    }
+}
+
+/// One gate's observed statistic against its precomputed threshold.
+#[derive(Clone, Copy, Debug)]
+pub struct Gate {
+    /// Observed test statistic.
+    pub stat: f64,
+    /// Deterministic pass/fail threshold.
+    pub threshold: f64,
+}
+
+impl Gate {
+    /// Whether the statistic clears the threshold.
+    pub fn passed(&self) -> bool {
+        self.stat <= self.threshold
+    }
+}
+
+/// Outcome of one path × scenario validation run.
+#[derive(Clone, Debug)]
+pub struct ValidationReport {
+    /// Path label ([`SamplingPath::name`]).
+    pub path: String,
+    /// Scenario (or ad-hoc context) label supplied by the caller.
+    pub scenario: String,
+    /// Observations actually pooled (chains × observed sweeps); for
+    /// marginal-only paths, the tau-discounted effective count.
+    pub samples: u64,
+    /// Worst marginal z-statistic vs its critical value.
+    pub max_z: Gate,
+    /// Variable attaining `max_z`.
+    pub worst_var: usize,
+    /// Joint total-variation gate (`None` for marginal-only paths).
+    pub tv: Option<Gate>,
+    /// Joint chi-square gate and its degrees of freedom (`None` for
+    /// marginal-only paths or untestably concentrated joints).
+    pub chi2: Option<(Gate, usize)>,
+    /// Human-readable description of every failed gate (empty = pass).
+    pub failures: Vec<String>,
+}
+
+impl ValidationReport {
+    /// Whether every applicable gate passed.
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// Panic with full context if any gate failed (test-suite hook).
+    pub fn assert_passed(&self) {
+        assert!(
+            self.passed(),
+            "{} on {} failed {} gate(s) at {} samples:\n  {}",
+            self.path,
+            self.scenario,
+            self.failures.len(),
+            self.samples,
+            self.failures.join("\n  ")
+        );
+    }
+
+    /// One summary line for bench output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} on {}: max_z {:.2}/{:.2}{}{} [{}]",
+            self.path,
+            self.scenario,
+            self.max_z.stat,
+            self.max_z.threshold,
+            self.tv
+                .as_ref()
+                .map(|g| format!(" tv {:.4}/{:.4}", g.stat, g.threshold))
+                .unwrap_or_default(),
+            self.chi2
+                .as_ref()
+                .map(|(g, df)| format!(" chi2 {:.1}/{:.1} (df {df})", g.stat, g.threshold))
+                .unwrap_or_default(),
+            if self.passed() { "PASS" } else { "FAIL" }
+        )
+    }
+}
+
+/// Drive `path` against the exact joint of `target` and gate the result
+/// (see module docs for the statistics). `target` must be the graph the
+/// path is *currently* sampling — for churn scenarios, the materialized
+/// final graph.
+pub fn validate(
+    path: &mut dyn SamplingPath,
+    target: &FactorGraph,
+    scenario: &str,
+    cfg: &GateConfig,
+) -> ValidationReport {
+    let n = target.num_vars();
+    assert!(n >= 1 && n <= MAX_JOINT_VARS, "validate needs 1..={MAX_JOINT_VARS} vars");
+    assert_eq!(path.num_vars(), n, "path and target graph disagree on size");
+    let probs = joint_probs(target);
+    let exact_marg = marginals_from_joint(&probs);
+    let tau = cfg.tau.max(1);
+
+    path.advance(cfg.burn_in);
+
+    let chains = path.chains().max(1);
+    let obs_sweeps = cfg.samples.div_ceil(chains);
+    let observable = path.visit_states(&mut |_| {});
+
+    let tests = (n + 2) as f64;
+    let a = cfg.alpha / tests;
+    let z_crit = z_critical(a) * cfg.safety;
+    let mut failures = Vec::new();
+
+    let (emp_marg, total, hist) = if observable {
+        // state mode: thin by tau, histogram the joint
+        let mut hist = vec![0u64; 1 << n];
+        let mut total = 0u64;
+        for _ in 0..obs_sweeps {
+            path.advance(tau);
+            path.visit_states(&mut |x| {
+                let mut code = 0usize;
+                for (v, &b) in x.iter().enumerate() {
+                    code |= ((b & 1) as usize) << v;
+                }
+                hist[code] += 1;
+                total += 1;
+            });
+        }
+        let emp = marginals_from_joint(
+            &hist
+                .iter()
+                .map(|&c| c as f64 / total as f64)
+                .collect::<Vec<_>>(),
+        );
+        (emp, total, Some(hist))
+    } else {
+        // marginal mode: observe every sweep, discount the count by tau
+        let emp = path.estimate_marginals(obs_sweeps * tau);
+        (emp, (obs_sweeps * chains) as u64, None)
+    };
+
+    // 1. marginal z-gate
+    let nf = total as f64;
+    let mut max_z = 0.0f64;
+    let mut worst_var = 0usize;
+    for (v, (&p_hat, &p)) in emp_marg.iter().zip(&exact_marg).enumerate() {
+        let se = (p * (1.0 - p) / nf).sqrt();
+        let z = if se > 0.0 { (p_hat - p).abs() / se } else { 0.0 };
+        if z > max_z {
+            max_z = z;
+            worst_var = v;
+        }
+    }
+    let z_gate = Gate {
+        stat: max_z,
+        threshold: z_crit,
+    };
+    if !z_gate.passed() {
+        failures.push(format!(
+            "marginal z-gate: var {worst_var} z={max_z:.2} > {z_crit:.2} \
+             (empirical {:.4} vs exact {:.4}, N={total})",
+            emp_marg[worst_var], exact_marg[worst_var]
+        ));
+    }
+
+    // 2 + 3. joint gates (state mode only)
+    let (tv_gate, chi2_gate) = match &hist {
+        Some(hist) => {
+            let emp_joint: Vec<f64> = hist.iter().map(|&c| c as f64 / nf).collect();
+            let tv = total_variation(&emp_joint, &probs);
+            let mean_bound: f64 = 0.5
+                * probs
+                    .iter()
+                    .map(|&p| (p * (1.0 - p) / nf).sqrt())
+                    .sum::<f64>();
+            let dev = ((1.0 / a).ln() / (2.0 * nf)).sqrt();
+            let tv_gate = Gate {
+                stat: tv,
+                threshold: cfg.safety * (mean_bound + dev),
+            };
+            if !tv_gate.passed() {
+                failures.push(format!(
+                    "joint TV gate: {tv:.4} > {:.4} (N={total})",
+                    tv_gate.threshold
+                ));
+            }
+            let chi2_gate = pooled_chi2(hist, &probs, nf, 8.0).map(|(stat, df)| {
+                let gate = Gate {
+                    stat,
+                    threshold: chi2_quantile(df, 1.0 - a) * cfg.safety,
+                };
+                (gate, df)
+            });
+            if let Some((g, df)) = &chi2_gate {
+                if !g.passed() {
+                    failures.push(format!(
+                        "joint chi-square gate: X²={:.1} > {:.1} (df {df}, N={total})",
+                        g.stat, g.threshold
+                    ));
+                }
+            }
+            (Some(tv_gate), chi2_gate)
+        }
+        None => (None, None),
+    };
+
+    ValidationReport {
+        path: path.name(),
+        scenario: scenario.to_string(),
+        samples: total,
+        max_z: z_gate,
+        worst_var,
+        tv: tv_gate,
+        chi2: chi2_gate,
+        failures,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::validation::ExactForward;
+    use crate::workloads;
+
+    #[test]
+    fn iid_forward_draws_pass_every_gate() {
+        // the calibration property: gates must pass on ground-truth draws
+        let g = workloads::ising_grid(2, 2, 0.3, 0.1);
+        let mut fwd = ExactForward::new(&g, 42);
+        let cfg = GateConfig { burn_in: 0, samples: 20_000, tau: 1, ..GateConfig::default() };
+        let r = validate(&mut fwd, &g, "grid2x2", &cfg);
+        r.assert_passed();
+        assert!(r.tv.is_some() && r.chi2.is_some(), "joint gates must run");
+        assert_eq!(r.samples, 20_000);
+    }
+
+    #[test]
+    fn tilted_forward_draws_fail_the_marginal_gate() {
+        // the power property: a marginal-shifting bias must be caught
+        let g = workloads::ising_grid(2, 2, 0.3, 0.1);
+        let mut fwd = ExactForward::tilted(&g, 42, 0.5);
+        let cfg = GateConfig { burn_in: 0, samples: 20_000, tau: 1, ..GateConfig::default() };
+        let r = validate(&mut fwd, &g, "grid2x2-tilted", &cfg);
+        assert!(!r.passed(), "biased sampler slipped through: {}", r.summary());
+        assert!(!r.max_z.passed(), "the z-gate specifically must fire");
+    }
+
+    #[test]
+    fn report_summary_formats() {
+        let g = workloads::ising_grid(2, 2, 0.2, 0.0);
+        let mut fwd = ExactForward::new(&g, 7);
+        let cfg = GateConfig::with_budget(4096, 1);
+        let r = validate(&mut fwd, &g, "fmt", &cfg);
+        let s = r.summary();
+        assert!(s.contains("exact-forward"));
+        assert!(s.contains("PASS") || s.contains("FAIL"));
+    }
+
+    #[test]
+    #[should_panic(expected = "disagree on size")]
+    fn mismatched_target_is_rejected() {
+        let g = workloads::ising_grid(2, 2, 0.2, 0.0);
+        let other = workloads::ising_grid(2, 3, 0.2, 0.0);
+        let mut fwd = ExactForward::new(&g, 7);
+        validate(&mut fwd, &other, "mismatch", &GateConfig::default());
+    }
+}

@@ -1,0 +1,41 @@
+//! Statistical correctness subsystem: exactness gates for every sampling
+//! path the crate ships.
+//!
+//! PRs 2–4 guaranteed *bit-identity* — every kernel, pool size, shard
+//! count, and chunking samples the same trajectory. Bit-identity says
+//! nothing about whether that shared trajectory targets the right
+//! distribution: a wrong cached conditional in `DualModel` would pass
+//! every equivalence test while biasing every path identically. This
+//! module is the correctness floor under all of it (the paper's central
+//! claim is exactness — the PD chain targets the true stationary
+//! distribution even on densely coupled graphs with no small coloring,
+//! unlike Hogwild-style approximate samplers):
+//!
+//! * [`path`] — [`SamplingPath`], one dyn-safe trait unifying the five
+//!   classical `samplers::` baselines, the lane engine (every kernel ×
+//!   pool), [`crate::coordinator::PdEnsemble`], and the live coordinator
+//!   tenant path, so one harness drives them all.
+//! * [`forward`] — [`ExactForward`], iid ground-truth draws by joint-CDF
+//!   inversion (≤ 14 variables) plus deliberately biased variants that
+//!   calibrate the gates' power.
+//! * [`stats`] — quantile functions, total variation, pooled chi-square.
+//! * [`harness`] — [`validate`]: burn in, thin by the scenario's
+//!   autocorrelation bound, and gate empirical marginals (z-tests,
+//!   Bonferroni-corrected) and the empirical joint (TV + chi-square)
+//!   against exact enumeration. Deterministic: fixed seeds, precomputed
+//!   thresholds, no flakes.
+//!
+//! The scenario zoo the suite runs over lives in
+//! [`crate::workloads::scenarios`]; the suite itself is
+//! `rust/tests/statistical_validation.rs`, and `docs/TESTING.md`
+//! describes the test tiers and how to extend them.
+
+pub mod forward;
+pub mod harness;
+pub mod path;
+pub mod stats;
+
+pub use forward::{joint_probs, marginals_from_joint, ExactForward, MAX_JOINT_VARS};
+pub use harness::{validate, Gate, GateConfig, ValidationReport};
+pub use path::{ClassicalPath, CoordinatorPath, EnsemblePath, LanePath, SamplingPath};
+pub use stats::{chi2_quantile, inv_norm_cdf, pooled_chi2, total_variation, z_critical};

@@ -1,0 +1,495 @@
+//! [`SamplingPath`]: one uniform handle over every way this crate can
+//! sample — the trait-unification half of the validation subsystem.
+//!
+//! The crate grew four execution layers with four shapes: the classical
+//! [`Sampler`] baselines (single chain, caller-supplied RNG, borrowed
+//! graph), the bit-packed [`LanePdSampler`] engine (64 chains per word,
+//! internal `(sweep, site)` streams), the [`PdEnsemble`] monitor wrapper,
+//! and the multi-tenant coordinator (chains behind a request queue that
+//! only surfaces pooled marginals). A correctness harness that drove each
+//! shape with bespoke code would itself be four times as likely to be
+//! wrong, so every shape is adapted onto this one trait:
+//!
+//! * [`ClassicalPath`] — any `samplers::` baseline (sequential,
+//!   chromatic, blocked, Swendsen–Wang, scalar primal–dual).
+//! * [`LanePath`] — the lane engine under any [`KernelKind`] and any
+//!   pool size, with churn support.
+//! * [`EnsemblePath`] — [`PdEnsemble`] (what the coordinator hosts per
+//!   tenant), with churn support.
+//! * [`CoordinatorPath`] — a real sharded coordinator serving one
+//!   tenant; states are unobservable through the serving API, so it
+//!   reports `visit_states → false` and the harness falls back to the
+//!   marginal gate via [`SamplingPath::estimate_marginals`].
+//! * [`super::ExactForward`] — iid ground-truth draws (calibration).
+//!
+//! Churn semantics are shared with [`crate::coordinator::Tenant`]: the
+//! live list indexed by [`ChurnOp::RemoveLive`] starts as the base
+//! graph's factors in iteration order, and every `Add` appends. Scenario
+//! materialization ([`crate::workloads::Scenario::final_graph`]) uses the
+//! same convention, so a path and its reference graph never drift.
+
+use std::sync::Arc;
+
+use crate::coordinator::{Client, Coordinator, CoordinatorConfig, PdEnsemble, TenantConfig};
+use crate::engine::{EngineConfig, KernelKind, LanePdSampler};
+use crate::graph::{FactorGraph, FactorId};
+use crate::rng::Pcg64;
+use crate::samplers::Sampler;
+use crate::util::ThreadPool;
+use crate::workloads::{ChurnOp, ChurnTrace};
+
+/// A uniform, dyn-safe handle over one sampling execution path: some
+/// number of chains advanced in lockstep, with (where the path permits)
+/// per-chain state observation and dynamic churn.
+pub trait SamplingPath {
+    /// Path label for reports (`"sequential-gibbs"`, `"lane-tiled-pool4"`…).
+    fn name(&self) -> String;
+
+    /// Number of primal variables of the current model.
+    fn num_vars(&self) -> usize;
+
+    /// Independent chains advanced per [`SamplingPath::sweep`] call.
+    fn chains(&self) -> usize {
+        1
+    }
+
+    /// Advance every chain by one full sweep.
+    fn sweep(&mut self);
+
+    /// Advance every chain by `sweeps` sweeps (burn-in / thinning bulk
+    /// hook; the coordinator adapter batches this into one request).
+    fn advance(&mut self, sweeps: usize) {
+        for _ in 0..sweeps {
+            self.sweep();
+        }
+    }
+
+    /// Visit every chain's current primal state. Returns `false` when the
+    /// path cannot observe raw states (serving paths expose only pooled
+    /// marginals) — callers must then fall back to
+    /// [`SamplingPath::estimate_marginals`].
+    fn visit_states(&self, f: &mut dyn FnMut(&[u8])) -> bool;
+
+    /// Pooled `P(x_v = 1)` estimate over `sweeps` further sweeps of all
+    /// chains (every sweep observed, no thinning). Default accumulates
+    /// through [`SamplingPath::visit_states`]; marginal-only paths
+    /// override it with their serving query.
+    fn estimate_marginals(&mut self, sweeps: usize) -> Vec<f64> {
+        let n = self.num_vars();
+        let mut acc = vec![0.0f64; n];
+        let mut count = 0u64;
+        for _ in 0..sweeps {
+            self.sweep();
+            self.visit_states(&mut |x| {
+                count += 1;
+                for (a, &b) in acc.iter_mut().zip(x) {
+                    *a += b as f64;
+                }
+            });
+        }
+        let denom = count.max(1) as f64;
+        for a in &mut acc {
+            *a /= denom;
+        }
+        acc
+    }
+
+    /// Apply topology churn to the live model. Returns `false` when the
+    /// path cannot mutate its model (baselines borrowing an immutable
+    /// graph); the ops use the shared live-list convention (module docs).
+    fn apply_churn(&mut self, ops: &[ChurnOp]) -> bool {
+        let _ = ops;
+        false
+    }
+}
+
+/// What one churn op did to `(graph, live)` — callers mirror it into
+/// their sampler state.
+enum Applied {
+    Added(FactorId),
+    Removed(FactorId),
+}
+
+/// Apply one op via the one canonical live-list implementation
+/// ([`ChurnTrace::apply`]), tagging which kind of mutation happened.
+fn apply_op(graph: &mut FactorGraph, live: &mut Vec<FactorId>, op: &ChurnOp) -> Applied {
+    let id = ChurnTrace::apply(graph, live, op);
+    match op {
+        ChurnOp::Add { .. } => Applied::Added(id),
+        ChurnOp::RemoveLive { .. } => Applied::Removed(id),
+    }
+}
+
+// -- classical baselines ----------------------------------------------------
+
+/// One chain of any classical [`Sampler`] baseline plus its RNG stream.
+pub struct ClassicalPath<'g> {
+    sampler: Box<dyn Sampler + 'g>,
+    rng: Pcg64,
+}
+
+impl<'g> ClassicalPath<'g> {
+    /// Wrap a boxed baseline sampler with a seeded sweep stream.
+    pub fn new(sampler: Box<dyn Sampler + 'g>, seed: u64) -> Self {
+        Self {
+            sampler,
+            rng: Pcg64::seed(seed),
+        }
+    }
+}
+
+impl SamplingPath for ClassicalPath<'_> {
+    fn name(&self) -> String {
+        self.sampler.name().to_string()
+    }
+
+    fn num_vars(&self) -> usize {
+        self.sampler.state().len()
+    }
+
+    fn sweep(&mut self) {
+        self.sampler.sweep(&mut self.rng);
+    }
+
+    fn visit_states(&self, f: &mut dyn FnMut(&[u8])) -> bool {
+        f(self.sampler.state());
+        true
+    }
+}
+
+// -- lane engine ------------------------------------------------------------
+
+/// The lane-batched engine as a sampling path: any lane count, kernel,
+/// and pool size; owns its graph so churn scenarios can mutate it.
+pub struct LanePath {
+    graph: FactorGraph,
+    engine: LanePdSampler,
+    live: Vec<FactorId>,
+    label: String,
+}
+
+impl LanePath {
+    /// Build over an owned copy of `graph` with explicit engine knobs.
+    pub fn new(
+        graph: FactorGraph,
+        cfg: EngineConfig,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Self {
+        let pool_size = pool.as_ref().map_or(0, |p| p.size());
+        let mut engine = LanePdSampler::with_config(&graph, cfg);
+        if let Some(pool) = pool {
+            engine = engine.with_pool(pool);
+        }
+        let live = graph.factors().map(|(id, _)| id).collect();
+        Self {
+            label: format!("lane-{}-pool{pool_size}", cfg.kernel.name()),
+            graph,
+            engine,
+            live,
+        }
+    }
+
+    /// Convenience constructor with the default (tiled) kernel, no pool.
+    pub fn with_lanes(graph: FactorGraph, lanes: usize, seed: u64) -> Self {
+        Self::new(
+            graph,
+            EngineConfig {
+                lanes,
+                seed,
+                kernel: KernelKind::default(),
+            },
+            None,
+        )
+    }
+
+    /// The engine under validation (e.g. to inspect its model's caches).
+    pub fn engine(&self) -> &LanePdSampler {
+        &self.engine
+    }
+}
+
+impl SamplingPath for LanePath {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn num_vars(&self) -> usize {
+        self.engine.num_vars()
+    }
+
+    fn chains(&self) -> usize {
+        self.engine.lanes()
+    }
+
+    fn sweep(&mut self) {
+        self.engine.sweep();
+    }
+
+    fn visit_states(&self, f: &mut dyn FnMut(&[u8])) -> bool {
+        for lane in 0..self.engine.lanes() {
+            f(&self.engine.lane_state(lane));
+        }
+        true
+    }
+
+    fn apply_churn(&mut self, ops: &[ChurnOp]) -> bool {
+        for op in ops {
+            match apply_op(&mut self.graph, &mut self.live, op) {
+                Applied::Added(id) => {
+                    let f = self.graph.factor(id).expect("just added");
+                    self.engine.add_factor(id, f);
+                }
+                Applied::Removed(id) => {
+                    assert!(self.engine.remove_factor(id), "engine/live desync");
+                }
+            }
+        }
+        true
+    }
+}
+
+// -- ensemble ---------------------------------------------------------------
+
+/// [`PdEnsemble`] (the per-tenant execution object) as a sampling path.
+pub struct EnsemblePath {
+    graph: FactorGraph,
+    ensemble: PdEnsemble,
+    live: Vec<FactorId>,
+}
+
+impl EnsemblePath {
+    /// Build over an owned copy of `graph` with overdispersed chain
+    /// initialization (exactly what a coordinator tenant does).
+    pub fn new(
+        graph: FactorGraph,
+        chains: usize,
+        seed: u64,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Self {
+        let mut ensemble = PdEnsemble::new(&graph, chains, seed);
+        if let Some(pool) = pool {
+            ensemble = ensemble.with_pool(pool);
+        }
+        ensemble.init_overdispersed();
+        let live = graph.factors().map(|(id, _)| id).collect();
+        Self {
+            graph,
+            ensemble,
+            live,
+        }
+    }
+}
+
+impl SamplingPath for EnsemblePath {
+    fn name(&self) -> String {
+        "pd-ensemble".to_string()
+    }
+
+    fn num_vars(&self) -> usize {
+        self.graph.num_vars()
+    }
+
+    fn chains(&self) -> usize {
+        self.ensemble.num_chains()
+    }
+
+    fn sweep(&mut self) {
+        self.ensemble.run(1);
+    }
+
+    fn visit_states(&self, f: &mut dyn FnMut(&[u8])) -> bool {
+        for c in 0..self.ensemble.num_chains() {
+            f(&self.ensemble.chain_state(c));
+        }
+        true
+    }
+
+    fn apply_churn(&mut self, ops: &[ChurnOp]) -> bool {
+        for op in ops {
+            match apply_op(&mut self.graph, &mut self.live, op) {
+                Applied::Added(id) => {
+                    let f = self.graph.factor(id).expect("just added");
+                    self.ensemble.add_factor(id, f);
+                }
+                Applied::Removed(id) => {
+                    assert!(self.ensemble.remove_factor(id), "ensemble/live desync");
+                }
+            }
+        }
+        true
+    }
+}
+
+// -- coordinator ------------------------------------------------------------
+
+/// A real sharded coordinator serving one tenant, driven through the
+/// public client API. Background sweeping is disabled (`quantum: 0`) so
+/// the trajectory is a pure function of the request stream — the
+/// deterministic-CI requirement. Raw states are not observable through
+/// the serving API, so the harness uses the marginal gate.
+pub struct CoordinatorPath {
+    _coord: Coordinator,
+    client: Client,
+    tenant: u64,
+    chains: usize,
+    vars: usize,
+    label: String,
+}
+
+impl CoordinatorPath {
+    /// Spawn a coordinator of `shards` shards (sharing one pool of
+    /// `pool_threads` workers if nonzero) hosting `graph` as one tenant.
+    pub fn new(
+        graph: FactorGraph,
+        shards: usize,
+        pool_threads: usize,
+        chains: usize,
+        seed: u64,
+    ) -> Self {
+        let coord = Coordinator::spawn(CoordinatorConfig {
+            shards,
+            pool_threads,
+            quantum: 0,
+            ..Default::default()
+        });
+        let client = coord.client();
+        let tenant = 1u64;
+        let vars = graph.num_vars();
+        client
+            .create_tenant(
+                tenant,
+                graph,
+                TenantConfig {
+                    chains,
+                    seed,
+                    monitor_vars: Vec::new(),
+                },
+            )
+            .expect("create validation tenant");
+        Self {
+            label: format!("coordinator-s{shards}-pool{pool_threads}"),
+            _coord: coord,
+            client,
+            tenant,
+            chains,
+            vars,
+        }
+    }
+}
+
+impl SamplingPath for CoordinatorPath {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn num_vars(&self) -> usize {
+        self.vars
+    }
+
+    fn chains(&self) -> usize {
+        self.chains
+    }
+
+    fn sweep(&mut self) {
+        self.client.sweep(self.tenant, 1).expect("shard alive");
+    }
+
+    fn advance(&mut self, sweeps: usize) {
+        if sweeps > 0 {
+            self.client.sweep(self.tenant, sweeps).expect("shard alive");
+        }
+    }
+
+    fn visit_states(&self, _f: &mut dyn FnMut(&[u8])) -> bool {
+        false // the serving API pools over chains and sweeps
+    }
+
+    fn estimate_marginals(&mut self, sweeps: usize) -> Vec<f64> {
+        self.client.reset_stats(self.tenant).expect("shard alive");
+        self.advance(sweeps);
+        self.client.marginals(self.tenant).expect("shard alive")
+    }
+
+    fn apply_churn(&mut self, ops: &[ChurnOp]) -> bool {
+        self.client
+            .apply(self.tenant, ops.to_vec())
+            .expect("shard alive");
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::samplers::SequentialGibbs;
+    use crate::workloads;
+
+    #[test]
+    fn classical_path_observes_its_single_chain() {
+        let g = workloads::ising_grid(2, 2, 0.2, 0.0);
+        let mut p = ClassicalPath::new(Box::new(SequentialGibbs::new(&g)), 3);
+        assert_eq!(p.chains(), 1);
+        assert_eq!(p.num_vars(), 4);
+        p.advance(5);
+        let mut visits = 0;
+        assert!(p.visit_states(&mut |x| {
+            visits += 1;
+            assert_eq!(x.len(), 4);
+        }));
+        assert_eq!(visits, 1);
+        assert!(!p.apply_churn(&[]), "borrowed graph cannot churn");
+    }
+
+    #[test]
+    fn lane_path_visits_every_lane_and_churns() {
+        let g = workloads::ising_grid(2, 2, 0.2, 0.1);
+        let mut p = LanePath::with_lanes(g, 7, 5);
+        p.advance(3);
+        let mut visits = 0;
+        assert!(p.visit_states(&mut |x| {
+            visits += 1;
+            assert_eq!(x.len(), 4);
+        }));
+        assert_eq!(visits, 7);
+        // add a diagonal factor, then remove a base factor (live index 0)
+        assert!(p.apply_churn(&[
+            ChurnOp::Add { v1: 0, v2: 3, beta: 0.3 },
+            ChurnOp::RemoveLive { index: 0 },
+        ]));
+        assert_eq!(p.engine().model().num_factors(), 4);
+        p.advance(3);
+    }
+
+    #[test]
+    fn ensemble_and_lane_agree_on_churned_topology() {
+        // same ops through both adapters must leave the same live factors
+        let g = workloads::ising_grid(2, 3, 0.25, 0.0);
+        let ops = vec![
+            ChurnOp::Add { v1: 0, v2: 4, beta: 0.2 },
+            ChurnOp::RemoveLive { index: 2 },
+            ChurnOp::Add { v1: 1, v2: 5, beta: -0.1 },
+        ];
+        let mut lane = LanePath::with_lanes(g.clone(), 4, 1);
+        let mut ens = EnsemblePath::new(g, 4, 1, None);
+        assert!(lane.apply_churn(&ops));
+        assert!(ens.apply_churn(&ops));
+        assert_eq!(
+            lane.graph.factors().map(|(id, _)| id).collect::<Vec<_>>(),
+            ens.graph.factors().map(|(id, _)| id).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn coordinator_path_serves_marginals_only() {
+        let g = workloads::ising_grid(2, 2, 0.3, 0.2);
+        let mut p = CoordinatorPath::new(g, 2, 0, 4, 11);
+        assert_eq!(p.num_vars(), 4);
+        assert_eq!(p.chains(), 4);
+        assert!(!p.visit_states(&mut |_| {}), "states must be unobservable");
+        p.advance(50);
+        let m = p.estimate_marginals(200);
+        assert_eq!(m.len(), 4);
+        assert!(m.iter().all(|x| (0.0..=1.0).contains(x)));
+        assert!(p.apply_churn(&[ChurnOp::Add { v1: 0, v2: 3, beta: 0.2 }]));
+    }
+}

@@ -1,0 +1,225 @@
+//! Statistical machinery behind the exactness gates: distribution
+//! distances, test statistics, and the quantile functions their
+//! thresholds come from.
+//!
+//! Everything here is classical frequentist testing, specialized to the
+//! deterministic-CI setting of [`super::harness`]: all runs are
+//! seed-fixed, so a gate either always passes or always fails for a given
+//! build — the `alpha` levels below size the thresholds so that a
+//! *correct* sampler passes with overwhelming margin at the committed
+//! seeds while real distributional bugs (a wrong conditional table, a
+//! missed cache invalidation, a biased draw) still land far outside them.
+//!
+//! * [`inv_norm_cdf`] — Acklam's rational approximation of the standard
+//!   normal quantile (|relative error| < 1.2e-9), the source of every
+//!   z-threshold.
+//! * [`chi2_quantile`] — Wilson–Hilferty cube approximation of the
+//!   chi-square quantile (within ~2% over the df range the harness uses).
+//! * [`total_variation`] — ½·L1 between two distributions on the same
+//!   support.
+//! * [`pooled_chi2`] — Pearson's X² with small-expected-count buckets
+//!   pooled into a tail bucket, the standard validity fix.
+
+/// Standard normal quantile `Φ⁻¹(p)` (Acklam's algorithm, |rel err| ≤
+/// 1.2e-9 on (0, 1)). Panics outside the open unit interval.
+pub fn inv_norm_cdf(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "quantile of p={p} outside (0, 1)");
+    // rational approximations per region; coefficients from Acklam (2003)
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    let tail = |p_tail: f64| -> f64 {
+        let q = (-2.0 * p_tail.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    if p < P_LOW {
+        tail(p)
+    } else if p > 1.0 - P_LOW {
+        -tail(1.0 - p)
+    } else {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    }
+}
+
+/// Two-sided z critical value at level `alpha`: `Φ⁻¹(1 − alpha/2)`.
+pub fn z_critical(alpha: f64) -> f64 {
+    inv_norm_cdf(1.0 - alpha / 2.0)
+}
+
+/// Chi-square quantile at probability `p` with `df` degrees of freedom
+/// (Wilson–Hilferty: `df·(1 − 2/(9df) + z_p·√(2/(9df)))³`, accurate to a
+/// few percent for df ≥ 2 — the harness multiplies a safety factor on
+/// top, so the approximation error is immaterial).
+pub fn chi2_quantile(df: usize, p: f64) -> f64 {
+    assert!(df >= 1, "chi-square needs at least 1 degree of freedom");
+    let k = df as f64;
+    let z = inv_norm_cdf(p);
+    let h = 2.0 / (9.0 * k);
+    k * (1.0 - h + z * h.sqrt()).powi(3)
+}
+
+/// Total-variation distance `½ Σ_s |p(s) − q(s)|` between two
+/// distributions on the same support.
+pub fn total_variation(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    0.5 * p.iter().zip(q).map(|(a, b)| (a - b).abs()).sum::<f64>()
+}
+
+/// Pearson's X² of observed counts against expected probabilities, with
+/// every bucket whose expected count falls below `min_expected` pooled
+/// into one tail bucket (the classical validity condition). Returns
+/// `(statistic, degrees of freedom)`; df is `buckets − 1`, and `None`
+/// when fewer than 2 buckets survive pooling (no testable shape).
+pub fn pooled_chi2(
+    observed: &[u64],
+    expected_probs: &[f64],
+    total: f64,
+    min_expected: f64,
+) -> Option<(f64, usize)> {
+    assert_eq!(observed.len(), expected_probs.len());
+    let mut stat = 0.0;
+    let mut buckets = 0usize;
+    let mut tail_obs = 0.0;
+    let mut tail_exp = 0.0;
+    for (&o, &p) in observed.iter().zip(expected_probs) {
+        let e = p * total;
+        if e >= min_expected {
+            let d = o as f64 - e;
+            stat += d * d / e;
+            buckets += 1;
+        } else {
+            tail_obs += o as f64;
+            tail_exp += e;
+        }
+    }
+    if tail_exp >= min_expected {
+        let d = tail_obs - tail_exp;
+        stat += d * d / tail_exp;
+        buckets += 1;
+    } else if tail_exp > 0.0 && buckets > 0 && tail_obs > 0.0 {
+        // tail too thin for its own bucket but observations landed
+        // there: fold the residual in conservatively (denominator
+        // floored at min_expected so a near-impossible state cannot
+        // dominate by itself)
+        let d = tail_obs - tail_exp;
+        stat += d * d / tail_exp.max(min_expected);
+    }
+    if buckets >= 2 {
+        Some((stat, buckets - 1))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_quantile_known_values() {
+        assert!(inv_norm_cdf(0.5).abs() < 1e-9);
+        assert!((inv_norm_cdf(0.975) - 1.959964).abs() < 1e-5);
+        assert!((inv_norm_cdf(0.9986501019683699) - 3.0).abs() < 1e-6);
+        assert!((inv_norm_cdf(0.0013498980316301) + 3.0).abs() < 1e-6);
+        // deep tail (the Bonferroni-corrected gate regime)
+        assert!((inv_norm_cdf(1.0 - 1e-9) - 5.9978).abs() < 1e-3);
+        // antisymmetry
+        for p in [0.001, 0.01, 0.2, 0.4] {
+            assert!((inv_norm_cdf(p) + inv_norm_cdf(1.0 - p)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn normal_quantile_rejects_boundary() {
+        inv_norm_cdf(1.0);
+    }
+
+    #[test]
+    fn chi2_quantile_matches_tables() {
+        // (df, p, table value)
+        for &(df, p, want) in &[
+            (2usize, 0.95, 5.991),
+            (10, 0.95, 18.307),
+            (10, 0.999, 29.588),
+            (100, 0.95, 124.342),
+            (255, 0.999, 330.9),
+        ] {
+            let got = chi2_quantile(df, p);
+            assert!(
+                (got / want - 1.0).abs() < 0.02,
+                "df={df} p={p}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn tv_basics() {
+        assert_eq!(total_variation(&[0.5, 0.5], &[0.5, 0.5]), 0.0);
+        assert!((total_variation(&[1.0, 0.0], &[0.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert!((total_variation(&[0.6, 0.4], &[0.4, 0.6]) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chi2_pooling_respects_min_expected() {
+        // uniform on 4 states, N=40: all expected = 10 ≥ 8 → 4 buckets
+        let probs = [0.25; 4];
+        let obs = [10u64, 10, 10, 10];
+        let (stat, df) = pooled_chi2(&obs, &probs, 40.0, 8.0).unwrap();
+        assert_eq!(df, 3);
+        assert!(stat.abs() < 1e-12);
+        // skewed: two tiny states pool into one tail bucket
+        let probs = [0.90, 0.08, 0.01, 0.01];
+        let obs = [90u64, 8, 1, 1];
+        let (stat, df) = pooled_chi2(&obs, &probs, 100.0, 8.0).unwrap();
+        assert_eq!(df, 1, "tail expected 2 < 8 folds away, 90/8 survive");
+        assert!(stat < 0.5, "near-perfect agreement: {stat}");
+    }
+
+    #[test]
+    fn chi2_detects_wrong_distribution() {
+        let probs = [0.25; 4];
+        let obs = [70u64, 10, 10, 10];
+        let (stat, df) = pooled_chi2(&obs, &probs, 100.0, 8.0).unwrap();
+        assert_eq!(df, 3);
+        assert!(stat > chi2_quantile(df, 0.999), "stat={stat}");
+    }
+
+    #[test]
+    fn chi2_degenerate_support_is_untestable() {
+        assert!(pooled_chi2(&[100], &[1.0], 100.0, 8.0).is_none());
+        // everything pools into one tail bucket → still untestable
+        assert!(pooled_chi2(&[1, 1], &[0.5, 0.5], 2.0, 8.0).is_none());
+    }
+}

@@ -88,15 +88,21 @@ impl ChurnTrace {
         (g, live)
     }
 
-    /// Apply one op to `(graph, live-list)`.
-    pub fn apply(g: &mut FactorGraph, live: &mut Vec<FactorId>, op: &ChurnOp) {
+    /// Apply one op to `(graph, live-list)`. Returns the id of the factor
+    /// added or removed, so samplers mirroring the graph (the validation
+    /// path adapters) can apply the same mutation without re-implementing
+    /// the live-list convention.
+    pub fn apply(g: &mut FactorGraph, live: &mut Vec<FactorId>, op: &ChurnOp) -> FactorId {
         match *op {
             ChurnOp::Add { v1, v2, beta } => {
-                live.push(g.add_factor(PairFactor::ising(v1, v2, beta)));
+                let id = g.add_factor(PairFactor::ising(v1, v2, beta));
+                live.push(id);
+                id
             }
             ChurnOp::RemoveLive { index } => {
                 let id = live.swap_remove(index);
                 g.remove_factor(id).expect("trace removes only live factors");
+                id
             }
         }
     }

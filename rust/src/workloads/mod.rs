@@ -1,14 +1,17 @@
 //! Workload generators: the paper's three synthetic model families (§6),
 //! the dynamic-churn traces motivating the method (§1), the multi-tenant
-//! traffic traces driving the sharded coordinator, and the
-//! image-denoising MRF used by the end-to-end example.
+//! traffic traces driving the sharded coordinator, the statistical
+//! validation scenario zoo ([`scenarios`]), and the image-denoising MRF
+//! used by the end-to-end example.
 
 mod churn;
 mod denoise;
+pub mod scenarios;
 mod tenants;
 
 pub use churn::{ChurnOp, ChurnTrace};
 pub use denoise::{accuracy, denoise_mrf, noisy_image, render, synthetic_image, DenoiseConfig};
+pub use scenarios::{Regime, Scenario};
 pub use tenants::{TenantEvent, TenantTrace, TenantTraceConfig};
 
 use crate::graph::{FactorGraph, PairFactor};

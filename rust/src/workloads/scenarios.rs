@@ -1,0 +1,320 @@
+//! The statistical-validation scenario zoo: small exactly-solvable models
+//! spanning every regime the paper argues about, each with a documented
+//! autocorrelation-time bound so the exactness gates
+//! ([`crate::validation`]) can thin correctly.
+//!
+//! Coverage axes:
+//!
+//! * **Coupling strength** — the paper's method is pitched at *weakly
+//!   coupled* models; every topology appears at β below, at, and/or
+//!   above the 2D-Ising critical coupling `β_c = ln(1+√2)/2 ≈ 0.44`
+//!   (the natural "weak coupling boundary" for these Ising-table
+//!   workloads). Above it the PD chain still targets the exact
+//!   stationary distribution — it just mixes slower, which the gates
+//!   absorb through larger [`Scenario::tau`] bounds.
+//! * **Topology** — chains (sparse, 2-colorable), a 3×3 grid (the
+//!   paper's §6 grid family in miniature), a triangle (smallest odd
+//!   cycle), and dense `K_n` models where the chromatic number equals
+//!   `n` — the no-small-coloring motivation (Fig 2b) where chromatic
+//!   Gibbs degenerates to sequential.
+//! * **Churn** — op sequences crossing the engine's degree-6
+//!   x-table-cache cap in both directions, so the gates also certify
+//!   the post-churn distribution (a stale cached conditional is exactly
+//!   the bug class bit-identity tests cannot see).
+//!
+//! `tau` bounds were precomputed by measuring the PD sampler's
+//! integrated autocorrelation time of magnetization (the slowest
+//! monitored statistic) on each model and doubling it; the PD sampler is
+//! the slowest-mixing path the zoo drives (the paper's "inferior mixing"
+//! trade-off), so its bound covers every other path. The derivation is
+//! documented in `docs/TESTING.md`.
+
+use crate::graph::{FactorGraph, PairFactor};
+use crate::workloads::{ChurnOp, ChurnTrace};
+
+/// 2D-Ising critical coupling `ln(1+√2)/2` — the zoo's "weak coupling
+/// boundary" reference point.
+pub const BETA_CRITICAL: f64 = 0.44068679350977147;
+
+/// Where a scenario's coupling sits relative to [`BETA_CRITICAL`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regime {
+    /// Comfortably weak coupling (fast mixing; the paper's home turf).
+    Below,
+    /// At the critical boundary.
+    At,
+    /// Strong coupling (slow but still exact mixing).
+    Above,
+}
+
+/// One validation scenario: a base model, optional churn, and the gate
+/// parameters precomputed for it.
+pub struct Scenario {
+    /// Stable identifier used in reports and test names.
+    pub name: &'static str,
+    /// Coupling regime relative to [`BETA_CRITICAL`].
+    pub regime: Regime,
+    /// The base model every path starts from.
+    pub graph: FactorGraph,
+    /// Churn applied mid-run (empty = static scenario). Ops follow the
+    /// tenant live-list convention: the list indexed by
+    /// [`ChurnOp::RemoveLive`] starts as the base graph's factors in
+    /// iteration order.
+    pub churn: Vec<ChurnOp>,
+    /// Precomputed integrated-autocorrelation-time bound (in sweeps) of
+    /// the slowest path on the *final* model — the harness's thinning
+    /// stride.
+    pub tau: usize,
+}
+
+impl Scenario {
+    /// The model the paths sample *after* churn — what the gates compare
+    /// against. Identical to the base graph for static scenarios.
+    pub fn final_graph(&self) -> FactorGraph {
+        let mut g = self.graph.clone();
+        let mut live: Vec<usize> = g.factors().map(|(id, _)| id).collect();
+        for op in &self.churn {
+            ChurnTrace::apply(&mut g, &mut live, op);
+        }
+        g
+    }
+
+    /// Whether every factor (of the final graph) is ferromagnetic Ising —
+    /// the applicability condition of Swendsen–Wang.
+    pub fn is_ferromagnetic(&self) -> bool {
+        self.final_graph()
+            .factors()
+            .all(|(_, f)| crate::duality::sw::ising_w_from_table(&f.table).is_some())
+    }
+}
+
+/// An `n`-variable Ising chain (path graph) with uniform coupling and
+/// field — the sparsest zoo topology. A named view of the degenerate
+/// 1-row [`crate::workloads::ising_grid`] (same variables, same factor
+/// ids, same couplings).
+pub fn ising_chain(n: usize, beta: f64, h: f64) -> FactorGraph {
+    crate::workloads::ising_grid(1, n, beta, h)
+}
+
+/// The 3-variable triangle — the smallest odd cycle (3-chromatic, the
+/// smallest model a 2-coloring cannot serve).
+pub fn triangle(beta: f64, h: f64) -> FactorGraph {
+    let mut g = FactorGraph::new(3);
+    for v in 0..3 {
+        g.set_unary(v, h);
+    }
+    g.add_factor(PairFactor::ising(0, 1, beta));
+    g.add_factor(PairFactor::ising(1, 2, beta));
+    g.add_factor(PairFactor::ising(0, 2, beta));
+    g
+}
+
+/// The hub-edge additions shared by both churn scenarios: six factors on
+/// variable 0 of an 8-variable chain, driving its degree from 1 to 7 —
+/// across the engine's degree-6 x-table-cache cap.
+fn hub_adds() -> Vec<ChurnOp> {
+    vec![
+        ChurnOp::Add { v1: 0, v2: 2, beta: 0.20 },
+        ChurnOp::Add { v1: 0, v2: 3, beta: 0.18 },
+        ChurnOp::Add { v1: 0, v2: 4, beta: 0.15 },
+        ChurnOp::Add { v1: 0, v2: 5, beta: 0.12 },
+        ChurnOp::Add { v1: 0, v2: 6, beta: 0.10 },
+        ChurnOp::Add { v1: 0, v2: 7, beta: 0.08 },
+    ]
+}
+
+/// The full scenario zoo, in a stable order.
+pub fn zoo() -> Vec<Scenario> {
+    let mut scenarios = vec![
+        Scenario {
+            name: "chain8-below",
+            regime: Regime::Below,
+            graph: ising_chain(8, 0.2, 0.1),
+            churn: Vec::new(),
+            tau: 8,
+        },
+        Scenario {
+            name: "chain8-at",
+            regime: Regime::At,
+            graph: ising_chain(8, BETA_CRITICAL, 0.05),
+            churn: Vec::new(),
+            tau: 20,
+        },
+        Scenario {
+            name: "chain8-above",
+            regime: Regime::Above,
+            graph: ising_chain(8, 0.7, 0.05),
+            churn: Vec::new(),
+            tau: 48,
+        },
+        Scenario {
+            name: "grid3x3-below",
+            regime: Regime::Below,
+            graph: crate::workloads::ising_grid(3, 3, 0.25, 0.1),
+            churn: Vec::new(),
+            tau: 16,
+        },
+        Scenario {
+            name: "grid3x3-at",
+            regime: Regime::At,
+            graph: crate::workloads::ising_grid(3, 3, BETA_CRITICAL, 0.05),
+            churn: Vec::new(),
+            tau: 64,
+        },
+        Scenario {
+            name: "triangle-above",
+            regime: Regime::Above,
+            graph: triangle(1.0, 0.2),
+            churn: Vec::new(),
+            tau: 200,
+        },
+        // K₁₀ with jittered couplings: chromatic number 10 (no small
+        // coloring — the paper's Fig-2b motivation) and, per Flach
+        // (2013), *varying* couplings also break the dense poly-time
+        // special case. Per-site coupling mass ≈ 9·0.08 keeps it weak.
+        Scenario {
+            name: "kn10-dense",
+            regime: Regime::Below,
+            graph: crate::workloads::fully_connected_jittered(10, 0.08, 0.3, 41),
+            churn: Vec::new(),
+            tau: 20,
+        },
+        // K₁₂ in the paper's §6 uniform band β ∈ [0.01, 0.015].
+        Scenario {
+            name: "kn12-paper",
+            regime: Regime::Below,
+            graph: crate::workloads::fully_connected_ising(12, |_, _| 0.0125),
+            churn: Vec::new(),
+            tau: 4,
+        },
+    ];
+    // churn: cross the degree-6 cap upward (hub ends at degree 7, on the
+    // accumulate fallback) and also drop a mid-chain base factor (live
+    // index 3 = edge 3–4) so removal invalidation is exercised too
+    let mut up = hub_adds();
+    up.insert(0, ChurnOp::RemoveLive { index: 3 });
+    scenarios.push(Scenario {
+        name: "churn-cross-up",
+        regime: Regime::Below,
+        graph: ising_chain(8, 0.3, 0.1),
+        churn: up,
+        tau: 16,
+    });
+    // churn: cross the cap upward then back down (hub ends at degree 3,
+    // back on the cached-table path after having been above the cap).
+    // After the six adds the live list is [7 base edges, 6 hub edges];
+    // removing tail indices 12, 11, 10, 9 drops the 0–7, 0–6, 0–5, 0–4
+    // hub edges, leaving 0–2 and 0–3.
+    let mut down = hub_adds();
+    down.extend([
+        ChurnOp::RemoveLive { index: 12 },
+        ChurnOp::RemoveLive { index: 11 },
+        ChurnOp::RemoveLive { index: 10 },
+        ChurnOp::RemoveLive { index: 9 },
+    ]);
+    scenarios.push(Scenario {
+        name: "churn-cross-down",
+        regime: Regime::Below,
+        graph: ising_chain(8, 0.3, 0.1),
+        churn: down,
+        tau: 16,
+    });
+    scenarios
+}
+
+/// Look up one zoo scenario by name (panics on unknown names — the zoo
+/// is a fixed, code-reviewed set).
+pub fn by_name(name: &str) -> Scenario {
+    zoo()
+        .into_iter()
+        .find(|s| s.name == name)
+        .unwrap_or_else(|| panic!("no scenario named '{name}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::coloring;
+
+    #[test]
+    fn zoo_is_gate_compatible() {
+        // every scenario must fit the joint-tabulation cap and have sane
+        // gate parameters
+        let zoo = zoo();
+        assert!(zoo.len() >= 10, "zoo shrank to {}", zoo.len());
+        for s in &zoo {
+            let g = s.final_graph();
+            assert!(g.num_vars() >= 3 && g.num_vars() <= 14, "{}", s.name);
+            assert!(s.tau >= 1, "{}", s.name);
+            assert!(g.num_factors() > 0, "{}", s.name);
+        }
+        // names are unique
+        let mut names: Vec<_> = zoo.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), zoo.len());
+    }
+
+    #[test]
+    fn zoo_covers_all_regimes() {
+        let zoo = zoo();
+        for regime in [Regime::Below, Regime::At, Regime::Above] {
+            assert!(
+                zoo.iter().any(|s| s.regime == regime),
+                "no scenario {regime:?} the weak-coupling boundary"
+            );
+        }
+    }
+
+    #[test]
+    fn dense_scenarios_admit_no_small_coloring() {
+        // the paper's motivation: K_n needs n colors, so chromatic
+        // parallelism degenerates while PD still updates all sites at once
+        let kn = by_name("kn10-dense");
+        assert_eq!(coloring::greedy(&kn.graph).num_colors, 10);
+        let kn = by_name("kn12-paper");
+        assert_eq!(coloring::greedy(&kn.graph).num_colors, 12);
+    }
+
+    #[test]
+    fn churn_scenarios_cross_the_table_cache_cap() {
+        use crate::duality::DualModel;
+        // up: hub degree ends at 7 (> 6: no cached x-table);
+        // down: ends at 3 (≤ 6: cached again)
+        let up = by_name("churn-cross-up");
+        let g = up.final_graph();
+        assert_eq!(g.degree(0), 7);
+        assert!(DualModel::from_graph(&g).x_table(0).is_none());
+        let down = by_name("churn-cross-down");
+        let g = down.final_graph();
+        assert_eq!(g.degree(0), 3);
+        assert!(DualModel::from_graph(&g).x_table(0).is_some());
+        // the mid-chain removal in cross-up landed on edge 3–4
+        assert_eq!(up.final_graph().num_factors(), 6 + 6);
+    }
+
+    #[test]
+    fn ferromagnetic_filter_matches_sw_applicability() {
+        assert!(by_name("chain8-below").is_ferromagnetic());
+        assert!(by_name("kn10-dense").is_ferromagnetic());
+        assert!(by_name("churn-cross-up").is_ferromagnetic());
+    }
+
+    #[test]
+    fn builders_shape() {
+        let c = ising_chain(5, 0.3, -0.1);
+        assert_eq!(c.num_vars(), 5);
+        assert_eq!(c.num_factors(), 4);
+        assert_eq!(c.max_degree(), 2);
+        let t = triangle(0.5, 0.0);
+        assert_eq!(t.num_vars(), 3);
+        assert_eq!(t.num_factors(), 3);
+        assert_eq!(coloring::greedy(&t).num_colors, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "no scenario named")]
+    fn unknown_scenario_panics() {
+        by_name("does-not-exist");
+    }
+}

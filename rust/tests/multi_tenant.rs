@@ -6,7 +6,7 @@
 use pdgibbs::coordinator::{Coordinator, CoordinatorConfig, TenantConfig};
 use pdgibbs::graph::FactorGraph;
 use pdgibbs::inference::exact;
-use pdgibbs::workloads::{ChurnTrace, TenantEvent, TenantTrace, TenantTraceConfig};
+use pdgibbs::workloads::{ChurnOp, ChurnTrace, TenantEvent, TenantTrace, TenantTraceConfig};
 
 fn tenant_config(seed: u64) -> TenantConfig {
     TenantConfig {
@@ -139,5 +139,120 @@ fn suspended_tenants_survive_heavy_neighbors() {
     let m = client.marginals(10).unwrap();
     assert_eq!(m.len(), 4);
     assert!(m.iter().all(|p| (0.05..=0.95).contains(p)));
+    coord.shutdown();
+}
+
+#[test]
+fn suspend_churn_resume_answers_fresh_marginals_not_the_parked_snapshot() {
+    // lifecycle edge case: a tenant suspended mid-serving receives churn
+    // while parked. The churn shifts its target distribution, so after
+    // resume the tenant must answer marginals of the NEW topology — not
+    // keep serving the pre-suspension snapshot (which `park()`
+    // deliberately preserves for the no-churn case).
+    let mut coord = Coordinator::spawn(CoordinatorConfig {
+        shards: 2,
+        quantum: 0, // request-driven: deterministic
+        ..Default::default()
+    });
+    let client = coord.client();
+    let mut g = FactorGraph::new(2);
+    g.set_unary(0, 2.0); // var 0 biased up, var 1 free
+    client
+        .create_tenant(7, g.clone(), tenant_config(0x5C1))
+        .unwrap();
+    client.sweep(7, 300).unwrap();
+    client.reset_stats(7).unwrap();
+    client.sweep(7, 4000).unwrap();
+    let parked = client.marginals(7).unwrap();
+    assert!(
+        (parked[1] - 0.5).abs() < 0.05,
+        "uncoupled var sits near 1/2: {}",
+        parked[1]
+    );
+    client.suspend(7).unwrap();
+    assert!(client.stats(7).unwrap().suspended);
+    // while parked: couple var 1 strongly to the biased var 0
+    let op = ChurnOp::Add { v1: 0, v2: 1, beta: 1.5 };
+    client.apply(7, vec![op.clone()]).unwrap();
+    client.resume(7).unwrap();
+    client.sweep(7, 300).unwrap();
+    client.reset_stats(7).unwrap();
+    client.sweep(7, 6000).unwrap();
+    let fresh = client.marginals(7).unwrap();
+    // the mirror of the tenant's post-churn graph is the ground truth
+    let mut live = g.factors().map(|(id, _)| id).collect();
+    ChurnTrace::apply(&mut g, &mut live, &op);
+    let want = exact::enumerate(&g).marginals;
+    for v in 0..2 {
+        assert!(
+            (fresh[v] - want[v]).abs() < 0.03,
+            "v={v}: {} vs exact {}",
+            fresh[v],
+            want[v]
+        );
+    }
+    assert!(
+        (fresh[1] - parked[1]).abs() > 0.1,
+        "marginals must reflect the churn, not the parked snapshot: \
+         parked {} vs fresh {} (exact {})",
+        parked[1],
+        fresh[1],
+        want[1]
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn dropping_a_tenant_with_queued_work_neither_panics_the_shard_nor_leaks_metrics() {
+    // lifecycle edge case: drop a tenant while (a) the DRR scheduler has
+    // it enrolled and hot, and (b) more foreground work for it is already
+    // queued behind the drop. The shared shard thread must survive, the
+    // queued requests must degrade into unknown-tenant counts, the
+    // tenant's scoped metrics keys must be reclaimed, and the surviving
+    // neighbor must keep receiving background grants.
+    let mut coord = Coordinator::spawn(CoordinatorConfig {
+        shards: 1, // both tenants share one shard thread
+        quantum: 2048,
+        ..Default::default()
+    });
+    let client = coord.client();
+    client
+        .create_tenant(1, pdgibbs::workloads::ising_grid(3, 3, 0.25, 0.0), tenant_config(0xD1))
+        .unwrap();
+    client
+        .create_tenant(2, pdgibbs::workloads::ising_grid(3, 3, 0.25, 0.0), tenant_config(0xD2))
+        .unwrap();
+    // let background sweeping get hot on both tenants
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    assert!(client.stats(1).unwrap().background_sweeps > 0);
+    // queue a burst for tenant 1, then drop it, then queue MORE work for
+    // the now-dead id — all in one FIFO stream
+    client
+        .apply(1, vec![ChurnOp::Add { v1: 0, v2: 4, beta: 0.3 }])
+        .unwrap();
+    client.sweep(1, 500).unwrap();
+    assert!(client.drop_tenant(1).unwrap(), "tenant was hosted");
+    client.sweep(1, 100).unwrap(); // queued after the drop: must degrade
+    client
+        .apply(1, vec![ChurnOp::Add { v1: 1, v2: 5, beta: 0.2 }])
+        .unwrap();
+    assert!(client.stats(1).is_err(), "dropped tenant is gone");
+    // the shard thread survived: the neighbor still answers...
+    let s2 = client.stats(2).unwrap();
+    assert_eq!(s2.num_vars, 9);
+    assert_eq!(client.marginals(2).unwrap().len(), 9);
+    // ...and keeps receiving background grants after the ring shrank
+    let before = client.stats(2).unwrap().background_sweeps;
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    assert!(
+        client.stats(2).unwrap().background_sweeps > before,
+        "survivor starved after mid-hot drop"
+    );
+    // no leaked scope: tenant1.* keys reclaimed, tenant2.* still present
+    let snap = coord.metrics().snapshot().dump();
+    assert!(!snap.contains("tenant1."), "scope leaked: {snap}");
+    assert!(snap.contains("tenant2."), "survivor scope missing");
+    // post-drop requests were counted as unknown-tenant, not crashes
+    assert!(coord.metrics().counter("shard0.unknown_tenant") >= 2);
     coord.shutdown();
 }

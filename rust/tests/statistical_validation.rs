@@ -1,0 +1,291 @@
+//! Tier 3 — the statistical exactness suite: every sampling path the
+//! crate ships is gated against exact inference on the scenario zoo.
+//!
+//! PRs 2–4's bit-identity tests prove every kernel/pool/shard samples the
+//! *same* trajectory; this suite proves the trajectory targets the
+//! *right* distribution (the paper's exactness claim). Coverage per the
+//! ISSUE-5 acceptance criteria:
+//!
+//! * all 5 classical samplers (sequential, chromatic, scalar PD,
+//!   blocked-PD, Swendsen–Wang),
+//! * the lane engine under scalar + tiled kernels × pool sizes {0, 4},
+//! * `PdEnsemble` and the live coordinator tenant path,
+//! * dense `K_n` scenarios with no small coloring,
+//! * churn sequences crossing the degree-6 x-table-cache cap both ways.
+//!
+//! Everything is seed-fixed and thresholded by precomputed statistics
+//! (see `rust/src/validation/harness.rs` and `docs/TESTING.md`) —
+//! deterministic, CI-safe, no flakes. The calibration/power tests at the
+//! bottom keep the gates honest: ground-truth iid draws must pass, and
+//! deliberately biased distributions must fail.
+
+use std::sync::Arc;
+
+use pdgibbs::engine::{EngineConfig, KernelKind};
+use pdgibbs::samplers::{BlockedPd, ChromaticGibbs, PdSampler, SequentialGibbs, SwendsenWang};
+use pdgibbs::util::ThreadPool;
+use pdgibbs::validation::{
+    validate, ClassicalPath, CoordinatorPath, EnsemblePath, ExactForward, GateConfig, LanePath,
+    SamplingPath, ValidationReport,
+};
+use pdgibbs::workloads::scenarios::{self, Scenario};
+
+/// Gate a path on a static scenario; returns the report so callers can
+/// additionally assert which gates ran.
+fn check_static(path: &mut dyn SamplingPath, s: &Scenario, samples: usize) -> ValidationReport {
+    assert!(s.churn.is_empty(), "{} is a churn scenario", s.name);
+    let r = validate(path, &s.graph, s.name, &GateConfig::with_budget(samples, s.tau));
+    println!("{}", r.summary());
+    r.assert_passed();
+    r
+}
+
+/// Warm a path up on the base model, apply the scenario's churn, and gate
+/// against the materialized final graph.
+fn check_churn(path: &mut dyn SamplingPath, s: &Scenario, samples: usize) {
+    assert!(!s.churn.is_empty(), "{} is a static scenario", s.name);
+    path.advance(200);
+    assert!(path.apply_churn(&s.churn), "path must support churn");
+    let r = validate(path, &s.final_graph(), s.name, &GateConfig::with_budget(samples, s.tau));
+    println!("{}", r.summary());
+    r.assert_passed();
+}
+
+// -- classical samplers -----------------------------------------------------
+
+#[test]
+fn sequential_gibbs_passes_gates() {
+    for (name, samples) in [
+        ("chain8-below", 5000),
+        ("grid3x3-below", 4000),
+        ("triangle-above", 2000),
+    ] {
+        let s = scenarios::by_name(name);
+        let mut p = ClassicalPath::new(Box::new(SequentialGibbs::new(&s.graph)), 0x5E01);
+        check_static(&mut p, &s, samples);
+    }
+}
+
+#[test]
+fn chromatic_gibbs_passes_gates_even_where_coloring_degenerates() {
+    // kn10-dense needs 10 colors — zero within-sweep parallelism, but the
+    // kernel must stay exact
+    for (name, samples) in [("chain8-below", 5000), ("kn10-dense", 2500)] {
+        let s = scenarios::by_name(name);
+        let chrom = ChromaticGibbs::new(&s.graph);
+        if name == "kn10-dense" {
+            assert_eq!(chrom.num_colors(), 10, "K_10 admits no small coloring");
+        }
+        let mut p = ClassicalPath::new(Box::new(chrom), 0x5E02);
+        check_static(&mut p, &s, samples);
+    }
+}
+
+#[test]
+fn scalar_pd_passes_gates_across_regimes() {
+    for (name, samples) in [
+        ("chain8-below", 5000),
+        ("chain8-at", 3000),
+        ("kn12-paper", 4000),
+    ] {
+        let s = scenarios::by_name(name);
+        let mut p = ClassicalPath::new(Box::new(PdSampler::new(&s.graph)), 0x5E03);
+        check_static(&mut p, &s, samples);
+    }
+}
+
+#[test]
+fn blocked_pd_passes_gates() {
+    // on the chain the spanning tree covers every factor: blocked-PD
+    // degenerates to exact joint draws — still must pass, even above the
+    // coupling threshold
+    for (name, samples) in [("grid3x3-below", 4000), ("chain8-above", 2000)] {
+        let s = scenarios::by_name(name);
+        let mut p = ClassicalPath::new(Box::new(BlockedPd::new(&s.graph)), 0x5E04);
+        check_static(&mut p, &s, samples);
+    }
+}
+
+#[test]
+fn swendsen_wang_passes_gates() {
+    for (name, samples) in [("grid3x3-below", 4000), ("chain8-above", 2000)] {
+        let s = scenarios::by_name(name);
+        assert!(s.is_ferromagnetic(), "SW applicability");
+        let mut p = ClassicalPath::new(Box::new(SwendsenWang::new(&s.graph)), 0x5E05);
+        check_static(&mut p, &s, samples);
+    }
+}
+
+// -- lane engine: kernels × pools -------------------------------------------
+
+#[test]
+fn lane_engine_scalar_and_tiled_kernels_pass_gates_at_pool_0_and_4() {
+    let s = scenarios::by_name("grid3x3-below");
+    for kernel in [KernelKind::Scalar, KernelKind::Tiled] {
+        for pool_threads in [0usize, 4] {
+            let pool = (pool_threads > 0).then(|| Arc::new(ThreadPool::new(pool_threads)));
+            let mut p = LanePath::new(
+                s.graph.clone(),
+                EngineConfig { lanes: 64, seed: 0xA5, kernel },
+                pool,
+            );
+            check_static(&mut p, &s, 16_384);
+        }
+    }
+}
+
+#[test]
+fn lane_engine_tiled_passes_gates_at_the_coupling_threshold() {
+    // 64 chains make the high-tau "at threshold" scenarios affordable
+    for (name, samples) in [("chain8-at", 16_384), ("grid3x3-at", 8192)] {
+        let s = scenarios::by_name(name);
+        let mut p = LanePath::with_lanes(s.graph.clone(), 64, 0xA6);
+        check_static(&mut p, &s, samples);
+    }
+}
+
+#[test]
+fn lane_engine_passes_gates_on_dense_kn_without_coloring() {
+    // the paper's motivation: K_n admits no small coloring, yet the lane
+    // engine updates every site in parallel and must stay exact. Every
+    // variable's degree exceeds the x-table cap, so this pins the
+    // accumulate fallback path. Samples scale with the state space so
+    // the joint chi-square gate stays testable (expected counts clear
+    // the pooling floor) even on the 2^12-state model.
+    for name in ["kn10-dense", "kn12-paper"] {
+        let s = scenarios::by_name(name);
+        let samples = (16usize << s.graph.num_vars()).max(16_384);
+        for (kernel, pool_threads) in [(KernelKind::Tiled, 0usize), (KernelKind::Scalar, 4)] {
+            let pool = (pool_threads > 0).then(|| Arc::new(ThreadPool::new(pool_threads)));
+            let mut p = LanePath::new(
+                s.graph.clone(),
+                EngineConfig { lanes: 64, seed: 0xA7, kernel },
+                pool,
+            );
+            assert!(
+                p.engine().model().x_table(0).is_none(),
+                "dense vars must use the accumulate fallback"
+            );
+            let r = check_static(&mut p, &s, samples);
+            assert!(
+                r.chi2.is_some(),
+                "{name}: the joint chi-square gate must actually run"
+            );
+        }
+    }
+}
+
+#[test]
+fn lane_engine_stays_exact_through_churn_across_the_table_cache_cap() {
+    for name in ["churn-cross-up", "churn-cross-down"] {
+        let s = scenarios::by_name(name);
+        for kernel in [KernelKind::Tiled, KernelKind::Scalar] {
+            let mut p = LanePath::new(
+                s.graph.clone(),
+                EngineConfig { lanes: 64, seed: 0xA8, kernel },
+                None,
+            );
+            assert!(
+                p.engine().model().x_table(0).is_some(),
+                "hub starts under the cache cap"
+            );
+            check_churn(&mut p, &s, 16_384);
+            let expect_cached = name == "churn-cross-down";
+            assert_eq!(
+                p.engine().model().x_table(0).is_some(),
+                expect_cached,
+                "{name}: hub cache state after churn"
+            );
+        }
+    }
+}
+
+// -- ensemble and coordinator serving paths ---------------------------------
+
+#[test]
+fn pd_ensemble_passes_gates_including_churn() {
+    let s = scenarios::by_name("grid3x3-below");
+    let mut p = EnsemblePath::new(s.graph.clone(), 16, 0xE1, None);
+    check_static(&mut p, &s, 16_384);
+
+    let s = scenarios::by_name("churn-cross-down");
+    let mut p = EnsemblePath::new(s.graph.clone(), 16, 0xE2, None);
+    check_churn(&mut p, &s, 16_384);
+}
+
+#[test]
+fn coordinator_tenant_path_passes_marginal_gates() {
+    // the serving path exposes pooled marginals only (visit_states is
+    // unobservable), so the harness runs the tau-discounted marginal
+    // z-gate; background sweeping is off for determinism
+    let s = scenarios::by_name("grid3x3-below");
+    let mut p = CoordinatorPath::new(s.graph.clone(), 2, 0, 8, 0xC1);
+    check_static(&mut p, &s, 8192);
+}
+
+#[test]
+fn coordinator_tenant_path_stays_exact_through_churn() {
+    let s = scenarios::by_name("churn-cross-up");
+    let mut p = CoordinatorPath::new(s.graph.clone(), 2, 0, 8, 0xC2);
+    check_churn(&mut p, &s, 8192);
+}
+
+// -- gate calibration and power ---------------------------------------------
+
+#[test]
+fn exact_forward_draws_calibrate_the_gates_on_every_scenario() {
+    // ground-truth iid draws must pass every gate on the whole zoo; a
+    // failure here means the thresholds are mis-derived, independent of
+    // any sampler
+    for (i, s) in scenarios::zoo().iter().enumerate() {
+        let g = s.final_graph();
+        let mut fwd = ExactForward::new(&g, 0xF0 + i as u64);
+        // scale iid draws with the state space so every chi-square bucket
+        // clears the pooling floor even on the 2^12-state dense models
+        let samples = (16usize << g.num_vars()).max(8192);
+        let cfg = GateConfig { burn_in: 0, samples, tau: 1, ..GateConfig::default() };
+        let r = validate(&mut fwd, &g, s.name, &cfg);
+        println!("{}", r.summary());
+        r.assert_passed();
+        assert!(
+            r.tv.is_some() && r.chi2.is_some(),
+            "{}: joint gates must have run",
+            s.name
+        );
+    }
+}
+
+#[test]
+fn gates_reject_a_marginal_bias() {
+    // a sampler whose every marginal log-odds drifts by 0.5 must be
+    // caught by the z-gate (this is the "wrong conditional table" class)
+    let s = scenarios::by_name("grid3x3-below");
+    let mut fwd = ExactForward::tilted(&s.graph, 0xBAD1, 0.5);
+    let cfg = GateConfig { burn_in: 0, samples: 8192, tau: 1, ..GateConfig::default() };
+    let r = validate(&mut fwd, &s.graph, "grid3x3-below/tilted", &cfg);
+    println!("{}", r.summary());
+    assert!(!r.passed(), "biased sampler slipped through");
+    assert!(!r.max_z.passed(), "the marginal z-gate must fire");
+}
+
+#[test]
+fn gates_reject_a_joint_bias_that_marginals_cannot_see() {
+    // a parity tilt reshapes the joint while moving each marginal by
+    // < 0.005 — only the joint TV/chi-square gates can catch it (this is
+    // the "correlations wrong, marginals fine" class, e.g. a swapped
+    // endpoint pair)
+    let s = scenarios::by_name("grid3x3-below");
+    let mut fwd = ExactForward::parity_tilted(&s.graph, 0xBAD2, 0.6);
+    let cfg = GateConfig { burn_in: 0, samples: 8192, tau: 1, ..GateConfig::default() };
+    let r = validate(&mut fwd, &s.graph, "grid3x3-below/parity", &cfg);
+    println!("{}", r.summary());
+    assert!(!r.passed(), "joint-only bias slipped through");
+    assert!(
+        r.max_z.passed(),
+        "marginals alone must NOT see this bias (max_z {:.2})",
+        r.max_z.stat
+    );
+    let chi2_failed = r.chi2.as_ref().is_some_and(|(g, _)| !g.passed());
+    let tv_failed = r.tv.as_ref().is_some_and(|g| !g.passed());
+    assert!(chi2_failed || tv_failed, "a joint gate must fire");
+}
