@@ -30,6 +30,16 @@
 //! Reported: aggregate background sweeps/s across all tenants and the
 //! request latency distribution (p50/p99).
 //!
+//! `--mode server-net` measures the same coordinator through the TCP
+//! serving edge (ISSUE 6): a [`pdgibbs::coordinator::NetServer`] on an
+//! ephemeral port, driven to saturation by the closed-loop
+//! [`pdgibbs::workloads::run_net_load`] generator — tens of thousands
+//! of simulated clients with bursty pipelined arrivals multiplexed over
+//! a bounded socket pool. Reported: saturation request throughput, the
+//! client-perceived round-trip latency distribution (p50/p99/p999,
+//! queueing included), and the admission-control outcome mix
+//! (`ok` / `overloaded` / error replies) under overload.
+//!
 //! `--mode validate` runs the statistical exactness gates (ISSUE 5) on a
 //! fixed subset of the validation matrix — ground-truth forward draws,
 //! scalar PD, lane engine under both stable kernels (incl. the dense
@@ -43,14 +53,14 @@
 //! a tracked file at the repository root so the perf trajectory is
 //! diffable PR over PR: lanes mode owns `BENCH_throughput.json` (the
 //! acceptance record), full mode writes `BENCH_throughput_full.json`,
-//! server mode writes `BENCH_server.json`, validate mode writes
-//! `BENCH_validate.json`.
+//! server and server-net modes write `BENCH_server.json` (tagged with
+//! their mode), validate mode writes `BENCH_validate.json`.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use pdgibbs::bench::{time_fn, Record, Report};
-use pdgibbs::coordinator::{Coordinator, CoordinatorConfig, TenantConfig};
+use pdgibbs::coordinator::{Coordinator, CoordinatorConfig, NetConfig, NetServer, TenantConfig};
 use pdgibbs::duality::DualModel;
 use pdgibbs::engine::{KernelKind, LanePdSampler};
 use pdgibbs::rng::{Pcg64, RngCore};
@@ -64,10 +74,12 @@ fn main() {
         "full" => bench_full(),
         "lanes" => bench_lanes(),
         "server" => bench_server(),
+        "server-net" => bench_server_net(),
         "validate" => bench_validate(),
         other => {
             eprintln!(
-                "unknown mode '{other}' (usage: throughput [--mode full|lanes|server|validate])"
+                "unknown mode '{other}' \
+                 (usage: throughput [--mode full|lanes|server|server-net|validate])"
             );
             std::process::exit(2);
         }
@@ -393,6 +405,90 @@ fn bench_server() {
     );
     coord.shutdown();
     report.finish_tracked("server", "server");
+}
+
+// -- server-net mode --------------------------------------------------------
+
+fn bench_server_net() {
+    let mut report = Report::new("throughput-server-net");
+    let mut coord = Coordinator::spawn(CoordinatorConfig {
+        shards: SERVER_SHARDS,
+        pool_threads: 0,
+        quantum: 8192,
+        ..Default::default()
+    });
+    let net_config = NetConfig::default();
+    let mut server = NetServer::spawn(
+        coord.client(),
+        coord.metrics().clone(),
+        net_config.clone(),
+        "127.0.0.1:0",
+    )
+    .expect("bind the serving edge on an ephemeral port");
+    let load = workloads::NetLoadConfig {
+        addr: server.addr().to_string(),
+        ..Default::default()
+    };
+    println!(
+        "server-net mode: {} logical clients x {} requests over {} sockets \
+         against {} ({} tenants on {} shards)",
+        load.logical_clients,
+        load.requests_per_client,
+        load.connections,
+        server.addr(),
+        load.tenants,
+        SERVER_SHARDS
+    );
+    let r = workloads::run_net_load(&load).expect("net load generator");
+    let coalesced = coord.metrics().counter("net.coalesced");
+    let edge_requests = coord.metrics().counter("net.requests");
+    server.shutdown();
+    coord.shutdown();
+    assert_eq!(
+        r.parse_errors, 0,
+        "a well-formed generator must never draw a parse error"
+    );
+    assert_eq!(r.sent, r.ok + r.overloaded + r.exec_errors, "closed loop must balance");
+    let mut lat = r.latencies_s;
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (p50, p99, p999) = (
+        percentile(&lat, 0.50),
+        percentile(&lat, 0.99),
+        percentile(&lat, 0.999),
+    );
+    let rps = r.sent as f64 / r.elapsed_s;
+    report.push(
+        Record::new("serving-edge")
+            .param("logical_clients", load.logical_clients)
+            .param("connections", load.connections)
+            .param("tenants", load.tenants)
+            .param("shards", SERVER_SHARDS)
+            .param("max_tenant_depth", net_config.max_tenant_depth)
+            .param("max_shard_depth", net_config.max_shard_depth)
+            .metric("requests", r.sent as f64)
+            .metric("requests_per_s", rps)
+            .metric("ok", r.ok as f64)
+            .metric("overloaded", r.overloaded as f64)
+            .metric("exec_errors", r.exec_errors as f64)
+            .metric("coalesced", coalesced as f64)
+            .metric("edge_requests", edge_requests as f64)
+            .metric("rtt_p50_ms", p50 * 1e3)
+            .metric("rtt_p99_ms", p99 * 1e3)
+            .metric("rtt_p999_ms", p999 * 1e3)
+            .metric("elapsed_s", r.elapsed_s),
+    );
+    println!(
+        "server-net: {rps:.0} req/s saturation ({} sent, {} ok, {} overloaded, {} exec errors, \
+         {coalesced} coalesced) — rtt p50 {:.3} ms / p99 {:.3} ms / p999 {:.3} ms",
+        r.sent,
+        r.ok,
+        r.overloaded,
+        r.exec_errors,
+        p50 * 1e3,
+        p99 * 1e3,
+        p999 * 1e3
+    );
+    report.finish_tracked("server", "server-net");
 }
 
 // -- validate mode ----------------------------------------------------------

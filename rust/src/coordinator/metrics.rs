@@ -21,11 +21,79 @@ use std::time::Instant;
 use crate::util::json::Json;
 use crate::util::stats::Welford;
 
+/// Smallest histogram bucket lower bound, in seconds (1 µs).
+const HIST_BASE: f64 = 1e-6;
+/// Geometric growth factor between bucket bounds (~25 % relative error).
+const HIST_GROWTH: f64 = 1.25;
+/// Bucket count: covers 1 µs … ~4×10⁵ s.
+const HIST_BUCKETS: usize = 120;
+
+/// Log-bucketed histogram for latency quantiles (p50/p99/p999).
+///
+/// The Welford timers give mean/σ but no tails; the serving edge needs
+/// tail quantiles under overload. Buckets are geometric
+/// ([`HIST_BASE`] · [`HIST_GROWTH`]ⁱ), so any quantile is answered in
+/// O(buckets) with a fixed ~25 % relative resolution and O(1) memory —
+/// no per-sample storage on the request path.
+#[derive(Clone)]
+struct Hist {
+    counts: Vec<u64>,
+    count: u64,
+    max: f64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self {
+            counts: vec![0; HIST_BUCKETS],
+            count: 0,
+            max: 0.0,
+        }
+    }
+}
+
+impl Hist {
+    fn bucket_of(seconds: f64) -> usize {
+        if seconds <= HIST_BASE {
+            return 0;
+        }
+        let i = (seconds / HIST_BASE).ln() / HIST_GROWTH.ln();
+        (i as usize).min(HIST_BUCKETS - 1)
+    }
+
+    fn push(&mut self, seconds: f64) {
+        let v = if seconds.is_finite() { seconds.max(0.0) } else { 0.0 };
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.max = self.max.max(v);
+    }
+
+    /// Nearest-rank quantile (`q` in `[0, 1]`), reported as the geometric
+    /// midpoint of the covering bucket, clamped to the observed max.
+    fn quantile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((self.count as f64 * q.clamp(0.0, 1.0)).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let lo = HIST_BASE * HIST_GROWTH.powi(i as i32);
+                let mid = lo * HIST_GROWTH.sqrt();
+                return Some(mid.min(self.max));
+            }
+        }
+        Some(self.max)
+    }
+}
+
 #[derive(Default)]
 struct Registry {
     counters: Mutex<BTreeMap<String, u64>>,
     gauges: Mutex<BTreeMap<String, f64>>,
     timers: Mutex<BTreeMap<String, Welford>>,
+    hists: Mutex<BTreeMap<String, Hist>>,
 }
 
 /// Thread-safe metrics registry. Cloning is cheap and aliases the same
@@ -98,6 +166,41 @@ impl Metrics {
         out
     }
 
+    /// Record one observation (seconds) in the log-bucketed quantile
+    /// histogram under `name` — the serving edge's latency instrument
+    /// (tail quantiles, unlike the mean/σ-only [`Metrics::observe`]).
+    pub fn observe_hist(&self, name: &str, seconds: f64) {
+        self.inner
+            .hists
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .push(seconds);
+    }
+
+    /// Quantile (`q` in `[0, 1]`) of the histogram under `name`, in
+    /// seconds; `None` if nothing was observed. Resolution is the
+    /// bucket's ~25 % relative width.
+    pub fn hist_quantile(&self, name: &str, q: f64) -> Option<f64> {
+        self.inner
+            .hists
+            .lock()
+            .unwrap()
+            .get(name)
+            .and_then(|h| h.quantile(q))
+    }
+
+    /// Observation count of the histogram under `name`.
+    pub fn hist_count(&self, name: &str) -> u64 {
+        self.inner
+            .hists
+            .lock()
+            .unwrap()
+            .get(name)
+            .map_or(0, |h| h.count)
+    }
+
     /// A counter's current value (0 if never touched).
     pub fn counter(&self, name: &str) -> u64 {
         self.inner
@@ -131,6 +234,11 @@ impl Metrics {
             .lock()
             .unwrap()
             .retain(|k, _| !k.starts_with(&prefix));
+        self.inner
+            .hists
+            .lock()
+            .unwrap()
+            .retain(|k, _| !k.starts_with(&prefix));
     }
 
     /// Render all metrics as a JSON object.
@@ -138,6 +246,7 @@ impl Metrics {
         let counters = self.inner.counters.lock().unwrap();
         let gauges = self.inner.gauges.lock().unwrap();
         let timers = self.inner.timers.lock().unwrap();
+        let hists = self.inner.hists.lock().unwrap();
         let mut obj: Vec<(String, Json)> = Vec::new();
         for (k, v) in counters.iter() {
             obj.push((format!("counter.{k}"), Json::from(*v as f64)));
@@ -152,6 +261,18 @@ impl Metrics {
                     ("count", Json::from(w.count() as f64)),
                     ("mean_s", Json::from(w.mean())),
                     ("std_s", Json::from(w.std_dev())),
+                ]),
+            ));
+        }
+        for (k, h) in hists.iter() {
+            obj.push((
+                format!("hist.{k}"),
+                Json::obj(vec![
+                    ("count", Json::from(h.count as f64)),
+                    ("p50_s", Json::from(h.quantile(0.50).unwrap_or(0.0))),
+                    ("p99_s", Json::from(h.quantile(0.99).unwrap_or(0.0))),
+                    ("p999_s", Json::from(h.quantile(0.999).unwrap_or(0.0))),
+                    ("max_s", Json::from(h.max)),
                 ]),
             ));
         }
@@ -211,6 +332,21 @@ impl MetricsView {
     /// Time `f` and record it under the scoped name.
     pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
         self.registry.time(&self.key(name), f)
+    }
+
+    /// Record one scoped histogram observation (seconds).
+    pub fn observe_hist(&self, name: &str, seconds: f64) {
+        self.registry.observe_hist(&self.key(name), seconds);
+    }
+
+    /// Quantile of the scoped histogram — see [`Metrics::hist_quantile`].
+    pub fn hist_quantile(&self, name: &str, q: f64) -> Option<f64> {
+        self.registry.hist_quantile(&self.key(name), q)
+    }
+
+    /// Observation count of the scoped histogram.
+    pub fn hist_count(&self, name: &str) -> u64 {
+        self.registry.hist_count(&self.key(name))
     }
 
     /// A scoped counter's current value.
@@ -311,13 +447,55 @@ mod tests {
     }
 
     #[test]
+    fn hist_quantiles_track_the_tail() {
+        let m = Metrics::new();
+        // 99 fast requests at ~1 ms, one slow outlier at ~1 s
+        for _ in 0..99 {
+            m.observe_hist("lat", 1e-3);
+        }
+        m.observe_hist("lat", 1.0);
+        assert_eq!(m.hist_count("lat"), 100);
+        let p50 = m.hist_quantile("lat", 0.50).unwrap();
+        let p99 = m.hist_quantile("lat", 0.99).unwrap();
+        let p999 = m.hist_quantile("lat", 0.999).unwrap();
+        // log buckets: ~25 % relative resolution
+        assert!((0.5e-3..2e-3).contains(&p50), "p50={p50}");
+        assert!(p99 < 0.1, "p99 must still be in the fast mass: {p99}");
+        assert!((0.5..=1.0).contains(&p999), "p999 must see the outlier: {p999}");
+        assert_eq!(m.hist_quantile("missing", 0.5), None);
+        // degenerate inputs must not poison the buckets
+        m.observe_hist("weird", f64::NAN);
+        m.observe_hist("weird", -1.0);
+        m.observe_hist("weird", 0.0);
+        assert_eq!(m.hist_count("weird"), 3);
+        assert!(m.hist_quantile("weird", 0.5).unwrap() >= 0.0);
+        // snapshot carries the quantiles
+        let snap = m.snapshot();
+        let lat = snap.get("hist.lat").unwrap();
+        assert_eq!(lat.get("count").and_then(Json::as_usize), Some(100));
+        assert!(lat.get("p999_s").and_then(Json::as_f64).unwrap() > 0.4);
+    }
+
+    #[test]
+    fn scoped_hists_share_the_registry() {
+        let m = Metrics::new();
+        let edge = m.scoped("net");
+        edge.observe_hist("request_s", 0.002);
+        assert_eq!(edge.hist_count("request_s"), 1);
+        assert_eq!(m.hist_count("net.request_s"), 1);
+        assert!(edge.hist_quantile("request_s", 0.5).is_some());
+    }
+
+    #[test]
     fn remove_scope_reclaims_only_that_scope() {
         let m = Metrics::new();
         m.scoped("tenant1").inc("ops");
         m.scoped("tenant1").set_gauge("cost", 1.0);
         m.scoped("tenant1").observe("apply", 0.1);
+        m.scoped("tenant1").observe_hist("req", 0.1);
         m.scoped("tenant12").inc("ops");
         m.remove_scope("tenant1");
+        assert_eq!(m.hist_count("tenant1.req"), 0, "hist scope reclaimed");
         assert_eq!(m.counter("tenant1.ops"), 0, "scope reclaimed");
         assert_eq!(m.counter("tenant12.ops"), 1, "prefix must not over-match");
         let snap = m.snapshot().dump();

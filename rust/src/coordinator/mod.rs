@@ -48,6 +48,13 @@
 //!   accounting hook and cheap park/suspend.
 //! * [`server`] — the single-tenant compat façade ([`Server`]) over a
 //!   1-shard coordinator, preserving the PR-2 API.
+//! * [`protocol`] — the line-oriented wire language (`create` / `apply` /
+//!   `sweep` / `marginals` / `stats` / `drop` / `subscribe`) with
+//!   spanned, labeled parse diagnostics ([`crate::util::Diagnostic`]).
+//! * [`net`] — the TCP front-end: connection threads multiplex parsed
+//!   requests onto the shard queues, with per-tenant/per-shard admission
+//!   control backed by the [`Depth`] ledger (explicit `overloaded`
+//!   rejections, never unbounded queues) and edge latency histograms.
 //!
 //! Tenant lifecycle: `create` / `apply` / `sweep` / `marginals` /
 //! `mixing` / `stats` / `suspend` / `resume` / `drop`. Requests to one
@@ -58,6 +65,8 @@
 pub mod dispatch;
 pub mod ensemble;
 pub mod metrics;
+pub mod net;
+pub mod protocol;
 pub mod schedule;
 pub mod server;
 pub mod shard;
@@ -66,13 +75,17 @@ pub mod tenant;
 pub use dispatch::{DispatchDecision, DispatchPolicy};
 pub use ensemble::PdEnsemble;
 pub use metrics::{Metrics, MetricsView};
+pub use net::{NetConfig, NetServer};
+pub use protocol::{Request, Response};
 pub use schedule::DrrScheduler;
 pub use server::{Handle, Server, ServerConfig, ServerStats};
 pub use shard::ShardStats;
 pub use tenant::{Tenant, TenantConfig, TenantId, TenantStats};
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::diagnostics::MixingResult;
@@ -93,6 +106,73 @@ use shard::{shard_worker, ShardConfig, ShardRequest};
 pub fn route(tenant: TenantId, shards: usize) -> usize {
     debug_assert!(shards >= 1);
     (SplitMix64::new(tenant).next_u64() % shards as u64) as usize
+}
+
+/// Outstanding-request ledger shared by the routing [`Client`]s and the
+/// shard workers: incremented when a request is enqueued, decremented
+/// when its shard dequeues it. The network edge ([`net`]) reads it for
+/// admission control — a connection whose tenant (or target shard) is
+/// over its depth limit gets an explicit `overloaded` rejection instead
+/// of growing the queue without bound. In-process [`Client`] calls are
+/// *accounted* here but never rejected: backpressure is an edge policy.
+pub struct Depth {
+    /// Outstanding requests per shard queue.
+    shards: Vec<AtomicU64>,
+    /// Outstanding requests per tenant (entries are removed at zero so
+    /// the map tracks live traffic, not tenant-id history).
+    tenants: Mutex<HashMap<TenantId, u64>>,
+}
+
+impl Depth {
+    fn new(shards: usize) -> Self {
+        Self {
+            shards: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            tenants: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn enqueued(&self, shard: usize, tenant: Option<TenantId>) {
+        if let Some(s) = self.shards.get(shard) {
+            s.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(t) = tenant {
+            *self.tenants.lock().expect("depth lock").entry(t).or_insert(0) += 1;
+        }
+    }
+
+    /// Saturating decrement: shutdown markers are sent without accounting,
+    /// so a dequeue may have no matching enqueue.
+    fn dequeued(&self, shard: usize, tenant: Option<TenantId>) {
+        if let Some(s) = self.shards.get(shard) {
+            let _ = s.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+                d.checked_sub(1)
+            });
+        }
+        if let Some(t) = tenant {
+            let mut map = self.tenants.lock().expect("depth lock");
+            if let Some(d) = map.get_mut(&t) {
+                *d -= 1;
+                if *d == 0 {
+                    map.remove(&t);
+                }
+            }
+        }
+    }
+
+    /// Outstanding requests on `shard`'s queue (0 for unknown shards).
+    pub fn shard_depth(&self, shard: usize) -> u64 {
+        self.shards.get(shard).map_or(0, |s| s.load(Ordering::Relaxed))
+    }
+
+    /// Outstanding requests addressed to `tenant`.
+    pub fn tenant_depth(&self, tenant: TenantId) -> u64 {
+        self.tenants
+            .lock()
+            .expect("depth lock")
+            .get(&tenant)
+            .copied()
+            .unwrap_or(0)
+    }
 }
 
 /// Coordinator construction parameters.
@@ -134,6 +214,7 @@ pub struct Coordinator {
     joins: Vec<JoinHandle<()>>,
     metrics: Metrics,
     pool: Option<Arc<ThreadPool>>,
+    depth: Arc<Depth>,
 }
 
 impl Coordinator {
@@ -142,6 +223,7 @@ impl Coordinator {
         assert!(config.shards >= 1, "at least one shard");
         let metrics = Metrics::new();
         let pool = (config.pool_threads > 0).then(|| ThreadPool::shared(config.pool_threads));
+        let depth = Arc::new(Depth::new(config.shards));
         let mut txs = Vec::with_capacity(config.shards);
         let mut joins = Vec::with_capacity(config.shards);
         for shard_id in 0..config.shards {
@@ -154,7 +236,8 @@ impl Coordinator {
             };
             let m = metrics.clone();
             let p = pool.clone();
-            joins.push(std::thread::spawn(move || shard_worker(scfg, rx, m, p)));
+            let d = depth.clone();
+            joins.push(std::thread::spawn(move || shard_worker(scfg, rx, m, p, d)));
             txs.push(tx);
         }
         Coordinator {
@@ -162,6 +245,7 @@ impl Coordinator {
             joins,
             metrics,
             pool,
+            depth,
         }
     }
 
@@ -185,6 +269,7 @@ impl Coordinator {
     pub fn client(&self) -> Client {
         Client {
             txs: self.txs.clone(),
+            depth: self.depth.clone(),
         }
     }
 
@@ -212,6 +297,7 @@ impl Drop for Coordinator {
 #[derive(Clone)]
 pub struct Client {
     txs: Vec<Sender<ShardRequest>>,
+    depth: Arc<Depth>,
 }
 
 impl Client {
@@ -224,8 +310,12 @@ impl Client {
             .txs
             .get(shard)
             .ok_or_else(|| crate::err!("no shard {shard} (coordinator has {})", self.txs.len()))?;
-        tx.send(req)
-            .map_err(|_| crate::err!("shard {shard} is down"))
+        let tenant = req.tenant();
+        self.depth.enqueued(shard, tenant);
+        tx.send(req).map_err(|_| {
+            self.depth.dequeued(shard, tenant);
+            crate::err!("shard {shard} is down")
+        })
     }
 
     /// Send a query carrying a `Result` reply channel and await it.
@@ -325,6 +415,21 @@ impl Client {
     /// Number of shard workers this client can address.
     pub fn num_shards(&self) -> usize {
         self.txs.len()
+    }
+
+    /// Which shard would serve `tenant` (the pure [`route`] hash).
+    pub fn shard_for(&self, tenant: TenantId) -> usize {
+        self.shard_of(tenant)
+    }
+
+    /// Outstanding (enqueued, not yet dequeued) requests on `shard`.
+    pub fn queue_depth(&self, shard: usize) -> u64 {
+        self.depth.shard_depth(shard)
+    }
+
+    /// Outstanding requests addressed to `tenant`.
+    pub fn tenant_depth(&self, tenant: TenantId) -> u64 {
+        self.depth.tenant_depth(tenant)
     }
 }
 
@@ -450,6 +555,30 @@ mod tests {
         );
         // in sweep counts, the small tenant must far out-sweep the big one
         assert!(s1.background_sweeps > 10 * s2.background_sweeps);
+    }
+
+    #[test]
+    fn queue_depth_tracks_outstanding_and_drains_to_zero() {
+        let mut coord = Coordinator::spawn(CoordinatorConfig {
+            shards: 1,
+            quantum: 0,
+            ..Default::default()
+        });
+        let client = coord.client();
+        client
+            .create_tenant(5, FactorGraph::new(3), tcfg(5, 2))
+            .unwrap();
+        for _ in 0..8 {
+            client.sweep(5, 5).unwrap();
+        }
+        // a synchronous query is a FIFO barrier: by the time it answers,
+        // everything enqueued before it has been dequeued and accounted
+        let _ = client.stats(5).unwrap();
+        assert_eq!(client.queue_depth(0), 0);
+        assert_eq!(client.tenant_depth(5), 0);
+        // out-of-range shard reads 0, never panics
+        assert_eq!(client.queue_depth(99), 0);
+        coord.shutdown();
     }
 
     #[test]

@@ -1,0 +1,500 @@
+//! TCP front-end for the sharded coordinator: the network serving edge.
+//!
+//! One accept thread plus one thread per connection; each connection
+//! thread parses newline-framed requests ([`super::protocol`]) and
+//! multiplexes them onto the coordinator's per-shard queues through a
+//! routing [`Client`]. The edge is where serving policy lives:
+//!
+//! * **Diagnostics** — malformed input (bad syntax, oversized frames,
+//!   truncated frames) is answered with a spanned, labeled
+//!   `err parse …` line and the connection survives; only EOF or an I/O
+//!   error closes it. A frame that exceeds [`NetConfig::max_frame`] is
+//!   rejected and the reader discards bytes until the next newline, so
+//!   one runaway frame cannot wedge the stream.
+//! * **Backpressure** — before a request is enqueued, the edge consults
+//!   the coordinator's [`super::Depth`] ledger. A tenant (or shard) at
+//!   its depth limit gets an explicit `err overloaded …` rejection:
+//!   clients see overload instead of unbounded queueing, and foreground
+//!   latency stays bounded under abuse.
+//! * **Batching** — within one read burst, consecutive `apply` (resp.
+//!   `sweep`) requests to the same tenant are coalesced into one shard
+//!   message; every constituent still receives its own reply line, in
+//!   order. This collapses per-request channel overhead for chatty
+//!   clients without changing observable semantics.
+//! * **Edge metrics** — the `net.` scope counts connections, requests,
+//!   rejections, and coalesced sends, and feeds per-request latency into
+//!   the `net.request_seconds` histogram (p50/p99/p999 in snapshots).
+//!
+//! `apply` and `sweep` are acknowledged at admission (fire-and-forget
+//! into the owning shard's FIFO queue), matching the in-process
+//! [`Client`] contract; queries (`marginals`, `stats`, `create`, `drop`,
+//! `subscribe`) complete before their reply. See `docs/PROTOCOL.md`.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::graph::FactorGraph;
+use crate::util::error::{Context, Result};
+use crate::util::stats::mean_or_zero;
+use crate::workloads::ChurnOp;
+
+use super::protocol::{self, Request, Response, DEFAULT_MAX_FRAME, MAX_OPS, MAX_SWEEPS};
+use super::{Client, Metrics, MetricsView, TenantConfig, TenantId};
+
+/// How often a parked connection thread re-checks the shutdown flag.
+const READ_TICK: Duration = Duration::from_millis(50);
+
+/// Edge policy knobs for [`NetServer`].
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Per-frame byte budget; longer lines are rejected with a spanned
+    /// diagnostic and discarded up to the next newline.
+    pub max_frame: usize,
+    /// Admission bound on outstanding requests per tenant.
+    pub max_tenant_depth: u64,
+    /// Admission bound on outstanding requests per shard queue.
+    pub max_shard_depth: u64,
+    /// Coalesce consecutive same-tenant `apply`/`sweep` requests within
+    /// a read burst into one shard message.
+    pub batch: bool,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            max_frame: DEFAULT_MAX_FRAME,
+            max_tenant_depth: 64,
+            max_shard_depth: 4096,
+            batch: true,
+        }
+    }
+}
+
+/// A listening network front-end over a coordinator [`Client`].
+///
+/// Dropping (or [`NetServer::shutdown`]) stops the accept loop, wakes
+/// every parked connection thread, and joins them all — no thread
+/// outlives the server handle.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_join: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `bind` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving `client` under `config`.
+    pub fn spawn(client: Client, metrics: Metrics, config: NetConfig, bind: &str) -> Result<Self> {
+        let listener =
+            TcpListener::bind(bind).with_context(|| format!("binding serving edge to {bind}"))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_join = std::thread::spawn(move || {
+            accept_loop(listener, client, metrics, config, stop2);
+        });
+        Ok(Self {
+            addr,
+            stop,
+            accept_join: Some(accept_join),
+        })
+    }
+
+    /// The bound address (with the real port when bound to port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain connection threads, and join (idempotent).
+    pub fn shutdown(&mut self) {
+        if let Some(join) = self.accept_join.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // wake the blocking accept with a throwaway connection
+            let _ = TcpStream::connect(self.addr);
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    client: Client,
+    metrics: Metrics,
+    config: NetConfig,
+    stop: Arc<AtomicBool>,
+) {
+    let edge = metrics.scoped("net");
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            Ok(s) => {
+                edge.inc("connections");
+                let client = client.clone();
+                let edge = metrics.scoped("net");
+                let config = config.clone();
+                let stop = stop.clone();
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_connection(s, &client, &edge, &config, &stop);
+                }));
+            }
+            Err(_) => continue,
+        }
+        // reap finished connection threads so long-lived servers do not
+        // accumulate handles (finished threads need no join to free)
+        conns.retain(|h| !h.is_finished());
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+fn write_line(stream: &mut TcpStream, line: &str) -> std::io::Result<()> {
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    client: &Client,
+    edge: &MetricsView,
+    config: &NetConfig,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(READ_TICK))?;
+    let _ = stream.set_nodelay(true);
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    // true while skipping the tail of an already-rejected oversized frame
+    let mut discarding = false;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                // EOF with a partial frame buffered: the newline never
+                // arrived — report the truncation before closing
+                if !buf.is_empty() && !discarding {
+                    edge.inc("parse_errors");
+                    let reply = Response::ParseError(protocol::truncated(buf.len())).render();
+                    let _ = write_line(&mut stream, &reply);
+                }
+                return Ok(());
+            }
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                drain_frames(&mut stream, &mut buf, &mut discarding, client, edge, config)?;
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut
+                    || e.kind() == ErrorKind::Interrupted =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Extract every complete line from `buf`, serve them as one batch, and
+/// enforce the frame budget on whatever partial frame remains.
+fn drain_frames(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    discarding: &mut bool,
+    client: &Client,
+    edge: &MetricsView,
+    config: &NetConfig,
+) -> std::io::Result<()> {
+    let mut lines: Vec<String> = Vec::new();
+    let mut oversize = None;
+    loop {
+        match buf.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                let frame: Vec<u8> = buf.drain(..=pos).collect();
+                if *discarding {
+                    // tail of a frame already rejected as oversized
+                    *discarding = false;
+                } else {
+                    lines.push(String::from_utf8_lossy(&frame[..pos]).into_owned());
+                }
+            }
+            None => {
+                if !*discarding && buf.len() > config.max_frame {
+                    oversize = Some(protocol::oversized(buf.len(), config.max_frame));
+                    *discarding = true;
+                }
+                if *discarding {
+                    buf.clear();
+                }
+                break;
+            }
+        }
+    }
+    serve_batch(stream, &lines, client, edge, config)?;
+    if let Some(d) = oversize {
+        edge.inc("parse_errors");
+        write_line(stream, &Response::ParseError(d).render())?;
+    }
+    Ok(())
+}
+
+/// A fire-and-forget send being coalesced across consecutive requests;
+/// `acks` counts the constituent requests awaiting their reply line.
+enum Pending {
+    Apply {
+        tenant: TenantId,
+        ops: Vec<ChurnOp>,
+        acks: usize,
+    },
+    Sweep {
+        tenant: TenantId,
+        n: usize,
+        acks: usize,
+    },
+}
+
+/// Send a pending coalesced request and emit one reply line per
+/// constituent (replies for merged requests are identical by
+/// construction, so ordering is preserved).
+fn flush(
+    stream: &mut TcpStream,
+    pending: &mut Option<Pending>,
+    client: &Client,
+    edge: &MetricsView,
+) -> std::io::Result<()> {
+    let Some(p) = pending.take() else {
+        return Ok(());
+    };
+    let start = Instant::now();
+    let (sent, acks) = match p {
+        Pending::Apply { tenant, ops, acks } => (client.apply(tenant, ops), acks),
+        Pending::Sweep { tenant, n, acks } => (client.sweep(tenant, n), acks),
+    };
+    if acks > 1 {
+        edge.add("coalesced", (acks - 1) as u64);
+    }
+    let reply = match sent {
+        Ok(()) => Response::Ok,
+        Err(e) => {
+            edge.inc("exec_errors");
+            Response::Exec(e.to_string())
+        }
+    };
+    edge.observe_hist("request_seconds", start.elapsed().as_secs_f64());
+    let line = reply.render();
+    for _ in 0..acks {
+        write_line(stream, &line)?;
+    }
+    Ok(())
+}
+
+/// Admission control: reject (without enqueueing) when the tenant or its
+/// shard is at its outstanding-request bound.
+fn admit(client: &Client, req: &Request, config: &NetConfig) -> Option<Response> {
+    let tenant = req.tenant();
+    let depth = client.tenant_depth(tenant);
+    if depth >= config.max_tenant_depth {
+        return Some(Response::Overloaded {
+            scope: format!("tenant {tenant}"),
+            depth,
+            limit: config.max_tenant_depth,
+        });
+    }
+    let shard = client.shard_for(tenant);
+    let depth = client.queue_depth(shard);
+    if depth >= config.max_shard_depth {
+        return Some(Response::Overloaded {
+            scope: format!("shard {shard}"),
+            depth,
+            limit: config.max_shard_depth,
+        });
+    }
+    None
+}
+
+fn serve_batch(
+    stream: &mut TcpStream,
+    lines: &[String],
+    client: &Client,
+    edge: &MetricsView,
+    config: &NetConfig,
+) -> std::io::Result<()> {
+    let mut pending: Option<Pending> = None;
+    for line in lines {
+        if line.trim().is_empty() {
+            // blank frame: cheap keepalive, no reply
+            continue;
+        }
+        edge.inc("requests");
+        let req = match protocol::parse_request(line) {
+            Ok(req) => req,
+            Err(d) => {
+                flush(stream, &mut pending, client, edge)?;
+                edge.inc("parse_errors");
+                write_line(stream, &Response::ParseError(d).render())?;
+                continue;
+            }
+        };
+        if let Some(reject) = admit(client, &req, config) {
+            flush(stream, &mut pending, client, edge)?;
+            edge.inc("overloaded");
+            write_line(stream, &reject.render())?;
+            continue;
+        }
+        match req {
+            Request::Apply { tenant, ops } if config.batch => match &mut pending {
+                Some(Pending::Apply {
+                    tenant: t,
+                    ops: merged,
+                    acks,
+                }) if *t == tenant && merged.len() + ops.len() <= MAX_OPS => {
+                    merged.extend(ops);
+                    *acks += 1;
+                }
+                _ => {
+                    flush(stream, &mut pending, client, edge)?;
+                    pending = Some(Pending::Apply {
+                        tenant,
+                        ops,
+                        acks: 1,
+                    });
+                }
+            },
+            Request::Sweep { tenant, n } if config.batch => match &mut pending {
+                Some(Pending::Sweep {
+                    tenant: t,
+                    n: total,
+                    acks,
+                }) if *t == tenant && *total + n <= MAX_SWEEPS => {
+                    *total += n;
+                    *acks += 1;
+                }
+                _ => {
+                    flush(stream, &mut pending, client, edge)?;
+                    pending = Some(Pending::Sweep { tenant, n, acks: 1 });
+                }
+            },
+            Request::Subscribe {
+                tenant,
+                count,
+                every,
+            } => {
+                flush(stream, &mut pending, client, edge)?;
+                serve_subscribe(stream, client, edge, tenant, count, every)?;
+            }
+            other => {
+                flush(stream, &mut pending, client, edge)?;
+                let start = Instant::now();
+                let reply = execute(client, other);
+                edge.observe_hist("request_seconds", start.elapsed().as_secs_f64());
+                if !reply.is_ok() {
+                    edge.inc("exec_errors");
+                }
+                write_line(stream, &reply.render())?;
+            }
+        }
+    }
+    flush(stream, &mut pending, client, edge)
+}
+
+/// Execute one non-streaming request against the coordinator. `apply`
+/// and `sweep` land here when edge batching is disabled; they are still
+/// acknowledged at admission.
+pub fn execute(client: &Client, req: Request) -> Response {
+    let done = |sent: Result<()>| match sent {
+        Ok(()) => Response::Ok,
+        Err(e) => Response::Exec(e.to_string()),
+    };
+    match req {
+        Request::Create {
+            tenant,
+            vars,
+            chains,
+            seed,
+        } => done(client.create_tenant(
+            tenant,
+            FactorGraph::new(vars),
+            TenantConfig {
+                chains,
+                seed,
+                monitor_vars: Vec::new(),
+            },
+        )),
+        Request::Apply { tenant, ops } => done(client.apply(tenant, ops)),
+        Request::Sweep { tenant, n } => done(client.sweep(tenant, n)),
+        Request::Marginals { tenant } => match client.marginals(tenant) {
+            Ok(m) => Response::Marginals(m),
+            Err(e) => Response::Exec(e.to_string()),
+        },
+        Request::Stats { tenant } => match client.stats(tenant) {
+            Ok(s) => Response::Stats(Box::new(s)),
+            Err(e) => Response::Exec(e.to_string()),
+        },
+        Request::Drop { tenant } => match client.drop_tenant(tenant) {
+            Ok(existed) => Response::Dropped(existed),
+            Err(e) => Response::Exec(e.to_string()),
+        },
+        Request::Subscribe { tenant, .. } => {
+            // streaming is a connection-handler concern; a bare execute
+            // degrades to a single-event probe of current state
+            match client.stats(tenant) {
+                Ok(_) => Response::Ok,
+                Err(e) => Response::Exec(e.to_string()),
+            }
+        }
+    }
+}
+
+/// Stream `count` marginal snapshots `every` sweeps apart, then `ok`.
+/// The sweep is issued fire-and-forget and the follow-up marginals query
+/// acts as the barrier (FIFO per tenant), so each event reflects at
+/// least `every * (index + 1)` additional sweeps.
+fn serve_subscribe(
+    stream: &mut TcpStream,
+    client: &Client,
+    edge: &MetricsView,
+    tenant: TenantId,
+    count: usize,
+    every: usize,
+) -> std::io::Result<()> {
+    for index in 0..count {
+        let start = Instant::now();
+        if let Err(e) = client.sweep(tenant, every) {
+            edge.inc("exec_errors");
+            return write_line(stream, &Response::Exec(e.to_string()).render());
+        }
+        let (marginals, stats) = match client.marginals(tenant).and_then(|m| {
+            let s = client.stats(tenant)?;
+            Ok((m, s))
+        }) {
+            Ok(pair) => pair,
+            Err(e) => {
+                edge.inc("exec_errors");
+                return write_line(stream, &Response::Exec(e.to_string()).render());
+            }
+        };
+        edge.observe_hist("request_seconds", start.elapsed().as_secs_f64());
+        let event = Response::Event {
+            index,
+            sweeps_done: stats.sweeps_done,
+            mean: mean_or_zero(&marginals),
+        };
+        write_line(stream, &event.render())?;
+    }
+    write_line(stream, &Response::Ok.render())
+}

@@ -1,0 +1,661 @@
+//! Wire protocol for the network serving edge: a compact line-oriented
+//! request language with spanned, labeled diagnostics.
+//!
+//! ## Framing
+//!
+//! One request per line, LF-terminated (a trailing CR is tolerated).
+//! Replies are single lines too, except `subscribe`, which streams
+//! `event` lines before its final `ok`. Blank lines are ignored (cheap
+//! keepalive). Tokens are separated by ASCII whitespace.
+//!
+//! ## Grammar
+//!
+//! ```text
+//! request   := create | apply | sweep | marginals | stats | drop | subscribe
+//! create    := "create" tenant vars [chains] [seed]
+//! apply     := "apply" tenant op+
+//! op        := "add" v1 v2 beta | "del" index
+//! sweep     := "sweep" tenant n
+//! marginals := "marginals" tenant
+//! stats     := "stats" tenant
+//! drop      := "drop" tenant
+//! subscribe := "subscribe" tenant count every
+//! ```
+//!
+//! ## Diagnostics
+//!
+//! Malformed input never produces a bare "parse error" and never kills
+//! the connection: every failure is a [`Diagnostic`] carrying the byte
+//! span of the offending region plus an expected-token label (the
+//! rust-sitter error-reporting idiom), rendered on the wire as
+//!
+//! ```text
+//! err parse span=<start>:<end> expected=<label>; found=<found>
+//! ```
+//!
+//! Oversized and truncated frames are reported through the same shape
+//! ([`oversized`], [`truncated`]); backpressure rejections use
+//! `err overloaded …` and tenant-level failures `err exec …` — see
+//! `docs/PROTOCOL.md` for the full reply grammar and semantics.
+
+use crate::util::span::{Diagnostic, Span};
+use crate::workloads::ChurnOp;
+
+use super::dispatch::DispatchDecision;
+use super::tenant::{TenantId, TenantStats};
+
+/// Hard cap on variables accepted by `create` over the wire.
+pub const MAX_VARS: usize = 1 << 20;
+/// Hard cap on chains accepted by `create` over the wire.
+pub const MAX_CHAINS: usize = 1024;
+/// Hard cap on `sweep`/`subscribe` sweep counts per request.
+pub const MAX_SWEEPS: usize = 1_000_000;
+/// Hard cap on churn ops in one `apply` request.
+pub const MAX_OPS: usize = 4096;
+/// Default per-frame byte budget enforced by the connection handler.
+pub const DEFAULT_MAX_FRAME: usize = 16 * 1024;
+
+/// One parsed request of the wire protocol (see module grammar).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Host a new tenant with an empty `vars`-variable model.
+    Create {
+        /// Tenant id (routing key).
+        tenant: TenantId,
+        /// Variable count of the tenant's model.
+        vars: usize,
+        /// Ensemble chains (lanes).
+        chains: usize,
+        /// Per-tenant RNG root.
+        seed: u64,
+    },
+    /// Apply churn ops to a tenant (acknowledged at admission).
+    Apply {
+        /// Target tenant.
+        tenant: TenantId,
+        /// Parsed topology mutations, in request order.
+        ops: Vec<ChurnOp>,
+    },
+    /// Run foreground sweeps (acknowledged at admission).
+    Sweep {
+        /// Target tenant.
+        tenant: TenantId,
+        /// Sweep count.
+        n: usize,
+    },
+    /// Read posterior marginal estimates.
+    Marginals {
+        /// Target tenant.
+        tenant: TenantId,
+    },
+    /// Read the tenant serving snapshot.
+    Stats {
+        /// Target tenant.
+        tenant: TenantId,
+    },
+    /// Drop the tenant.
+    Drop {
+        /// Target tenant.
+        tenant: TenantId,
+    },
+    /// Stream `count` marginal snapshots, `every` sweeps apart.
+    Subscribe {
+        /// Target tenant.
+        tenant: TenantId,
+        /// Number of `event` lines to stream.
+        count: usize,
+        /// Foreground sweeps between consecutive events.
+        every: usize,
+    },
+}
+
+impl Request {
+    /// The tenant a request addresses (every verb has one) — the
+    /// admission-control key.
+    pub fn tenant(&self) -> TenantId {
+        match *self {
+            Request::Create { tenant, .. }
+            | Request::Apply { tenant, .. }
+            | Request::Sweep { tenant, .. }
+            | Request::Marginals { tenant }
+            | Request::Stats { tenant }
+            | Request::Drop { tenant }
+            | Request::Subscribe { tenant, .. } => tenant,
+        }
+    }
+}
+
+/// One reply line of the wire protocol ([`Response::render`] is the exact
+/// wire form, without the trailing newline).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Request accepted / completed.
+    Ok,
+    /// Reply to `drop`: whether the tenant existed.
+    Dropped(bool),
+    /// Reply to `marginals`.
+    Marginals(Vec<f64>),
+    /// Reply to `stats`.
+    Stats(Box<TenantStats>),
+    /// One streamed `subscribe` snapshot.
+    Event {
+        /// Zero-based event index within the subscription.
+        index: usize,
+        /// Tenant sweeps completed when the snapshot was taken.
+        sweeps_done: usize,
+        /// Mean marginal of the snapshot (NaN-safe: 0 for empty models).
+        mean: f64,
+    },
+    /// Spanned, labeled parse failure.
+    ParseError(Diagnostic),
+    /// Admission-control rejection: the named queue is at its limit.
+    Overloaded {
+        /// Which bound tripped (`"tenant <id>"` or `"shard <i>"`).
+        scope: String,
+        /// Observed queue depth.
+        depth: u64,
+        /// Configured limit.
+        limit: u64,
+    },
+    /// Execution failure (unknown tenant, dead shard, …).
+    Exec(String),
+}
+
+impl Response {
+    /// Render the single wire line for this reply (no trailing newline).
+    pub fn render(&self) -> String {
+        match self {
+            Response::Ok => "ok".to_string(),
+            Response::Dropped(existed) => format!("ok dropped={existed}"),
+            Response::Marginals(m) => {
+                let mut s = format!("ok marginals n={}", m.len());
+                for p in m {
+                    s.push(' ');
+                    s.push_str(&format!("{p:.6}"));
+                }
+                s
+            }
+            Response::Stats(t) => {
+                let dispatch = match &t.dispatch {
+                    DispatchDecision::Native => "native".to_string(),
+                    DispatchDecision::Xla(name) => format!("xla:{name}"),
+                };
+                format!(
+                    "ok stats vars={} factors={} sweeps={} background={} ops={} \
+                     stable_for={} cost={} suspended={} dispatch={dispatch}",
+                    t.num_vars,
+                    t.num_factors,
+                    t.sweeps_done,
+                    t.background_sweeps,
+                    t.ops_applied,
+                    t.stable_for,
+                    t.cost,
+                    t.suspended,
+                )
+            }
+            Response::Event {
+                index,
+                sweeps_done,
+                mean,
+            } => format!("event index={index} sweeps={sweeps_done} mean={mean:.6}"),
+            Response::ParseError(d) => format!(
+                "err parse span={}:{} expected={}; found={}",
+                d.span.start, d.span.end, d.expected, d.found
+            ),
+            Response::Overloaded { scope, depth, limit } => {
+                format!("err overloaded {scope} depth={depth} limit={limit}")
+            }
+            Response::Exec(msg) => format!("err exec {msg}"),
+        }
+    }
+
+    /// Whether this reply reports success (`ok …` / `event …`).
+    pub fn is_ok(&self) -> bool {
+        !matches!(
+            self,
+            Response::ParseError(_) | Response::Overloaded { .. } | Response::Exec(_)
+        )
+    }
+}
+
+/// Coarse classification of a reply line, for load generators and tests
+/// that only need the outcome class, not the payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplyKind {
+    /// `ok …` — request succeeded.
+    Ok,
+    /// `event …` — a streamed subscription snapshot.
+    Event,
+    /// `err parse …` — spanned diagnostic.
+    ParseError,
+    /// `err overloaded …` — admission rejection.
+    Overloaded,
+    /// `err exec …` — execution failure.
+    ExecError,
+    /// Anything else (protocol violation by the server).
+    Unknown,
+}
+
+/// Classify one reply line (without its newline).
+pub fn classify_reply(line: &str) -> ReplyKind {
+    if line == "ok" || line.starts_with("ok ") {
+        ReplyKind::Ok
+    } else if line.starts_with("event ") {
+        ReplyKind::Event
+    } else if line.starts_with("err parse ") {
+        ReplyKind::ParseError
+    } else if line.starts_with("err overloaded ") {
+        ReplyKind::Overloaded
+    } else if line.starts_with("err exec ") {
+        ReplyKind::ExecError
+    } else {
+        ReplyKind::Unknown
+    }
+}
+
+/// Diagnostic for a frame exceeding the connection's byte budget. The
+/// span covers the whole budget-sized prefix; the reader then discards
+/// until the next newline so the connection survives.
+pub fn oversized(len_so_far: usize, max: usize) -> Diagnostic {
+    Diagnostic::new(
+        Span::new(0, len_so_far),
+        format!("frame of at most {max} bytes"),
+        format!("{len_so_far}+ bytes without a newline"),
+    )
+}
+
+/// Diagnostic for a frame truncated by EOF (bytes arrived, the newline
+/// never did).
+pub fn truncated(len: usize) -> Diagnostic {
+    Diagnostic::new(
+        Span::new(0, len),
+        "newline-terminated frame",
+        format!("end of stream after {len} bytes"),
+    )
+}
+
+// -- parser -----------------------------------------------------------------
+
+/// Split `src` into whitespace-separated tokens with byte spans. ASCII
+/// whitespace bytes are always char boundaries, so the slicing is safe
+/// for arbitrary UTF-8 input.
+fn tokenize(src: &str) -> Vec<(&str, Span)> {
+    let bytes = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut start: Option<usize> = None;
+    for (i, b) in bytes.iter().enumerate() {
+        if b.is_ascii_whitespace() {
+            if let Some(s) = start.take() {
+                toks.push((&src[s..i], Span::new(s, i)));
+            }
+        } else if start.is_none() {
+            start = Some(i);
+        }
+    }
+    if let Some(s) = start {
+        toks.push((&src[s..], Span::new(s, src.len())));
+    }
+    toks
+}
+
+/// Token cursor with labeled-expectation error helpers.
+struct Cursor<'a> {
+    toks: Vec<(&'a str, Span)>,
+    next: usize,
+    /// Where "end of line" errors point (one past the last byte).
+    eol: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, expected: &str) -> Result<(&'a str, Span), Diagnostic> {
+        match self.toks.get(self.next) {
+            Some(&(tok, span)) => {
+                self.next += 1;
+                Ok((tok, span))
+            }
+            None => Err(Diagnostic::new(
+                Span::point(self.eol),
+                expected,
+                "end of line",
+            )),
+        }
+    }
+
+    fn peek(&self) -> Option<(&'a str, Span)> {
+        self.toks.get(self.next).copied()
+    }
+
+    fn parse_with<T>(
+        &mut self,
+        expected: &str,
+        parse: impl FnOnce(&str) -> Option<T>,
+    ) -> Result<(T, Span), Diagnostic> {
+        let (tok, span) = self.take(expected)?;
+        match parse(tok) {
+            Some(v) => Ok((v, span)),
+            None => Err(Diagnostic::new(span, expected, format!("\"{tok}\""))),
+        }
+    }
+
+    fn u64(&mut self, expected: &str) -> Result<(u64, Span), Diagnostic> {
+        self.parse_with(expected, |t| t.parse::<u64>().ok())
+    }
+
+    fn usize_in(
+        &mut self,
+        expected: &str,
+        lo: usize,
+        hi: usize,
+    ) -> Result<(usize, Span), Diagnostic> {
+        self.parse_with(expected, |t| {
+            t.parse::<usize>().ok().filter(|v| (lo..=hi).contains(v))
+        })
+    }
+
+    fn f64_finite(&mut self, expected: &str) -> Result<(f64, Span), Diagnostic> {
+        self.parse_with(expected, |t| t.parse::<f64>().ok().filter(|v| v.is_finite()))
+    }
+
+    fn finish(&mut self) -> Result<(), Diagnostic> {
+        match self.peek() {
+            None => Ok(()),
+            Some((tok, span)) => Err(Diagnostic::new(
+                span,
+                "end of line",
+                format!("\"{tok}\""),
+            )),
+        }
+    }
+}
+
+/// Label listing the accepted verbs, shared by the unknown-verb and
+/// empty-line diagnostics.
+const VERBS: &str = "verb create|apply|sweep|marginals|stats|drop|subscribe";
+
+/// Parse one request line (no trailing newline; a trailing CR is
+/// stripped). Errors are spanned, labeled [`Diagnostic`]s — see the
+/// module docs for the wire rendering.
+pub fn parse_request(line: &str) -> Result<Request, Diagnostic> {
+    let line = line.strip_suffix('\r').unwrap_or(line);
+    let mut c = Cursor {
+        toks: tokenize(line),
+        next: 0,
+        eol: line.len(),
+    };
+    let (verb, verb_span) = c.take(VERBS)?;
+    let req = match verb {
+        "create" => {
+            let (tenant, _) = c.u64("tenant id (u64)")?;
+            let (vars, _) = c.usize_in("variable count 1..=1048576", 1, MAX_VARS)?;
+            let chains = match c.peek() {
+                Some(_) => c.usize_in("chain count 1..=1024", 1, MAX_CHAINS)?.0,
+                None => 8,
+            };
+            let seed = match c.peek() {
+                Some(_) => c.u64("seed (u64)")?.0,
+                None => tenant ^ 0x9E37_79B9_7F4A_7C15,
+            };
+            Request::Create {
+                tenant,
+                vars,
+                chains,
+                seed,
+            }
+        }
+        "apply" => {
+            let (tenant, _) = c.u64("tenant id (u64)")?;
+            let mut ops = Vec::new();
+            loop {
+                let (op, op_span) = c.take("churn op add|del")?;
+                match op {
+                    "add" => {
+                        let (v1, _) = c.usize_in("variable index v1", 0, MAX_VARS - 1)?;
+                        let (v2, _) = c.usize_in("variable index v2", 0, MAX_VARS - 1)?;
+                        let (beta, _) = c.f64_finite("finite coupling beta (f64)")?;
+                        ops.push(ChurnOp::Add { v1, v2, beta });
+                    }
+                    "del" => {
+                        let (index, _) = c.usize_in("live-factor index", 0, usize::MAX)?;
+                        ops.push(ChurnOp::RemoveLive { index });
+                    }
+                    other => {
+                        return Err(Diagnostic::new(
+                            op_span,
+                            "churn op add|del",
+                            format!("\"{other}\""),
+                        ));
+                    }
+                }
+                if ops.len() > MAX_OPS {
+                    return Err(Diagnostic::new(
+                        Span::new(op_span.start, line.len()),
+                        format!("at most {MAX_OPS} ops per apply"),
+                        format!("{}+ ops", ops.len()),
+                    ));
+                }
+                if c.peek().is_none() {
+                    break;
+                }
+            }
+            Request::Apply { tenant, ops }
+        }
+        "sweep" => {
+            let (tenant, _) = c.u64("tenant id (u64)")?;
+            let (n, _) = c.usize_in("sweep count 1..=1000000", 1, MAX_SWEEPS)?;
+            Request::Sweep { tenant, n }
+        }
+        "marginals" => Request::Marginals {
+            tenant: c.u64("tenant id (u64)")?.0,
+        },
+        "stats" => Request::Stats {
+            tenant: c.u64("tenant id (u64)")?.0,
+        },
+        "drop" => Request::Drop {
+            tenant: c.u64("tenant id (u64)")?.0,
+        },
+        "subscribe" => {
+            let (tenant, _) = c.u64("tenant id (u64)")?;
+            let (count, _) = c.usize_in("event count 1..=10000", 1, 10_000)?;
+            let (every, _) = c.usize_in("sweeps per event 1..=1000000", 1, MAX_SWEEPS)?;
+            Request::Subscribe {
+                tenant,
+                count,
+                every,
+            }
+        }
+        other => {
+            return Err(Diagnostic::new(verb_span, VERBS, format!("\"{other}\"")));
+        }
+    };
+    c.finish()?;
+    Ok(req)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_err(line: &str) -> Diagnostic {
+        parse_request(line).expect_err("must not parse")
+    }
+
+    #[test]
+    fn round_trip_every_verb() {
+        assert_eq!(
+            parse_request("create 7 16 4 99").unwrap(),
+            Request::Create {
+                tenant: 7,
+                vars: 16,
+                chains: 4,
+                seed: 99
+            }
+        );
+        assert_eq!(
+            parse_request("create 7 16").unwrap(),
+            Request::Create {
+                tenant: 7,
+                vars: 16,
+                chains: 8,
+                seed: 7 ^ 0x9E37_79B9_7F4A_7C15
+            }
+        );
+        assert_eq!(
+            parse_request("apply 3 add 0 1 0.25 del 0 add 1 2 -0.5").unwrap(),
+            Request::Apply {
+                tenant: 3,
+                ops: vec![
+                    ChurnOp::Add {
+                        v1: 0,
+                        v2: 1,
+                        beta: 0.25
+                    },
+                    ChurnOp::RemoveLive { index: 0 },
+                    ChurnOp::Add {
+                        v1: 1,
+                        v2: 2,
+                        beta: -0.5
+                    },
+                ]
+            }
+        );
+        assert_eq!(
+            parse_request("sweep 3 200").unwrap(),
+            Request::Sweep { tenant: 3, n: 200 }
+        );
+        assert_eq!(
+            parse_request("marginals 3").unwrap(),
+            Request::Marginals { tenant: 3 }
+        );
+        assert_eq!(parse_request("stats 3").unwrap(), Request::Stats { tenant: 3 });
+        assert_eq!(parse_request("drop 3").unwrap(), Request::Drop { tenant: 3 });
+        assert_eq!(
+            parse_request("subscribe 3 5 100").unwrap(),
+            Request::Subscribe {
+                tenant: 3,
+                count: 5,
+                every: 100
+            }
+        );
+    }
+
+    #[test]
+    fn crlf_and_extra_whitespace_are_tolerated() {
+        assert_eq!(
+            parse_request("  sweep \t 3   9\r").unwrap(),
+            Request::Sweep { tenant: 3, n: 9 }
+        );
+    }
+
+    #[test]
+    fn unknown_verb_is_spanned_and_labeled() {
+        let d = parse_err("zap 1 2");
+        assert_eq!(d.span, Span::new(0, 3));
+        assert!(d.expected.contains("create|apply|sweep"), "{d}");
+        assert_eq!(d.found, "\"zap\"");
+    }
+
+    #[test]
+    fn bad_tenant_id_points_at_the_token() {
+        let d = parse_err("sweep nine 10");
+        assert_eq!(d.span, Span::new(6, 10));
+        assert!(d.expected.contains("tenant id"), "{d}");
+        assert_eq!(d.found, "\"nine\"");
+        // negative ids are not u64
+        let d = parse_err("marginals -3");
+        assert!(d.expected.contains("tenant id"), "{d}");
+    }
+
+    #[test]
+    fn missing_argument_points_past_the_end() {
+        let d = parse_err("sweep 3");
+        assert_eq!(d.span, Span::point(7));
+        assert!(d.expected.contains("sweep count"), "{d}");
+        assert_eq!(d.found, "end of line");
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let d = parse_err("marginals 3 please");
+        assert_eq!(d.expected, "end of line");
+        assert_eq!(d.found, "\"please\"");
+        assert_eq!(d.span, Span::new(12, 18));
+    }
+
+    #[test]
+    fn apply_requires_ops_and_validates_them() {
+        let d = parse_err("apply 3");
+        assert!(d.expected.contains("add|del"), "{d}");
+        assert_eq!(d.found, "end of line");
+        let d = parse_err("apply 3 mul 0 1 0.5");
+        assert!(d.expected.contains("add|del"), "{d}");
+        assert_eq!(d.found, "\"mul\"");
+        let d = parse_err("apply 3 add 0 1 not-a-float");
+        assert!(d.expected.contains("beta"), "{d}");
+        // non-finite couplings are rejected at parse time
+        let d = parse_err("apply 3 add 0 1 inf");
+        assert!(d.expected.contains("finite"), "{d}");
+    }
+
+    #[test]
+    fn out_of_range_counts_are_parse_errors() {
+        let d = parse_err("sweep 3 0");
+        assert!(d.expected.contains("1..=1000000"), "{d}");
+        let d = parse_err(&format!("create 1 {}", MAX_VARS + 1));
+        assert!(d.expected.contains("variable count"), "{d}");
+        let d = parse_err("create 1 4 0");
+        assert!(d.expected.contains("chain count"), "{d}");
+    }
+
+    #[test]
+    fn empty_line_is_a_point_diagnostic() {
+        let d = parse_err("");
+        assert_eq!(d.span, Span::point(0));
+        assert_eq!(d.found, "end of line");
+    }
+
+    #[test]
+    fn renders_are_stable_and_classified() {
+        assert_eq!(Response::Ok.render(), "ok");
+        assert_eq!(Response::Dropped(true).render(), "ok dropped=true");
+        let m = Response::Marginals(vec![0.5, 0.25]).render();
+        assert_eq!(m, "ok marginals n=2 0.500000 0.250000");
+        assert_eq!(classify_reply(&m), ReplyKind::Ok);
+        let e = Response::ParseError(parse_err("zap")).render();
+        assert!(e.starts_with("err parse span=0:3 expected="), "{e}");
+        assert_eq!(classify_reply(&e), ReplyKind::ParseError);
+        let o = Response::Overloaded {
+            scope: "tenant 3".into(),
+            depth: 9,
+            limit: 8,
+        }
+        .render();
+        assert_eq!(o, "err overloaded tenant 3 depth=9 limit=8");
+        assert_eq!(classify_reply(&o), ReplyKind::Overloaded);
+        assert_eq!(
+            classify_reply(&Response::Exec("tenant 9 not hosted".into()).render()),
+            ReplyKind::ExecError
+        );
+        assert_eq!(
+            classify_reply(
+                &Response::Event {
+                    index: 0,
+                    sweeps_done: 10,
+                    mean: 0.5
+                }
+                .render()
+            ),
+            ReplyKind::Event
+        );
+        assert_eq!(classify_reply("gibberish"), ReplyKind::Unknown);
+    }
+
+    #[test]
+    fn frame_guards_are_spanned() {
+        let d = oversized(20_000, 16_384);
+        assert_eq!(d.span, Span::new(0, 20_000));
+        assert!(d.expected.contains("16384 bytes"), "{d}");
+        let d = truncated(5);
+        assert!(d.expected.contains("newline-terminated"), "{d}");
+        assert!(d.found.contains("end of stream"), "{d}");
+    }
+}

@@ -81,6 +81,33 @@ pub(super) enum ShardRequest {
         reply: Sender<ShardStats>,
     },
     Shutdown,
+    /// Test-only fault injector: enroll a tenant id in the DRR ring
+    /// without creating it, reproducing a scheduler/registry desync (the
+    /// ghost-grant panic this module regression-tests against).
+    #[cfg(test)]
+    DebugEnroll { tenant: TenantId },
+}
+
+impl ShardRequest {
+    /// Tenant the request addresses (None for shard-wide requests) —
+    /// drives per-tenant queue-depth accounting in [`super::Depth`].
+    pub(super) fn tenant(&self) -> Option<TenantId> {
+        match self {
+            ShardRequest::Create { tenant, .. }
+            | ShardRequest::Drop { tenant, .. }
+            | ShardRequest::Apply { tenant, .. }
+            | ShardRequest::Sweep { tenant, .. }
+            | ShardRequest::ResetStats { tenant }
+            | ShardRequest::Suspend { tenant }
+            | ShardRequest::Resume { tenant }
+            | ShardRequest::Marginals { tenant, .. }
+            | ShardRequest::Mixing { tenant, .. }
+            | ShardRequest::Stats { tenant, .. } => Some(*tenant),
+            ShardRequest::ShardStats { .. } | ShardRequest::Shutdown => None,
+            #[cfg(test)]
+            ShardRequest::DebugEnroll { tenant } => Some(*tenant),
+        }
+    }
 }
 
 /// Aggregate snapshot of one shard.
@@ -118,6 +145,7 @@ pub(super) fn shard_worker(
     rx: Receiver<ShardRequest>,
     metrics: Metrics,
     pool: Option<Arc<ThreadPool>>,
+    depth: Arc<super::Depth>,
 ) {
     let shard_metrics = metrics.scoped(format!("shard{}", config.shard_id));
     let mut tenants: HashMap<TenantId, Tenant> = HashMap::new();
@@ -129,7 +157,7 @@ pub(super) fn shard_worker(
     loop {
         // With background work pending, poll; otherwise block — an idle
         // shard must not spin.
-        let req = if background && !sched.is_empty() {
+        let polled = if background && !sched.is_empty() {
             match rx.try_recv() {
                 Ok(r) => Some(r),
                 Err(TryRecvError::Empty) => None,
@@ -142,16 +170,39 @@ pub(super) fn shard_worker(
             }
         };
 
-        let Some(req) = req else {
+        let req = if let Some(r) = polled {
+            r
+        } else if let Some(slice) =
+            sched.next_slice(|id| tenants.get(&id).map_or(1, Tenant::cost))
+        {
             // idle: next fair-share background grant
-            if let Some(slice) = sched.next_slice(|id| tenants[&id].cost()) {
-                let t = tenants.get_mut(&slice.tenant).expect("scheduled tenant exists");
-                t.background_sweep(slice.sweeps);
-                background_total += slice.sweeps as u64;
+            match tenants.get_mut(&slice.tenant) {
+                Some(t) => {
+                    t.background_sweep(slice.sweeps);
+                    background_total += slice.sweeps as u64;
+                }
+                None => {
+                    // ghost grant: the ring holds a tenant the registry
+                    // does not. Withdraw it and count the desync instead
+                    // of indexing the registry (which killed the shard
+                    // thread and silenced every later request).
+                    sched.withdraw(slice.tenant);
+                    shard_metrics.inc("sched_desync");
+                }
             }
             continue;
+        } else {
+            // Enrolled tenants but no grant — only possible if sweep
+            // costs shifted between the scheduler's sizing and grant
+            // passes. Block for the next request rather than hot-spinning
+            // the try_recv/next_slice loop on one core.
+            match rx.recv() {
+                Ok(r) => r,
+                Err(_) => return,
+            }
         };
 
+        depth.dequeued(config.shard_id, req.tenant());
         requests += 1;
         shard_metrics.inc("requests");
         match req {
@@ -249,6 +300,8 @@ pub(super) fn shard_worker(
                 });
             }
             ShardRequest::Shutdown => return,
+            #[cfg(test)]
+            ShardRequest::DebugEnroll { tenant } => sched.enroll(tenant),
         }
     }
 }
@@ -257,4 +310,87 @@ fn lookup(tenants: &HashMap<TenantId, Tenant>, id: TenantId, shard: usize) -> Re
     tenants
         .get(&id)
         .ok_or_else(|| crate::err!("tenant {id} not hosted on shard {shard}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+    use std::sync::mpsc::channel;
+    use std::time::{Duration, Instant};
+
+    fn spawn(quantum: u64) -> (Sender<ShardRequest>, Metrics, std::thread::JoinHandle<()>) {
+        let metrics = Metrics::new();
+        let depth = Arc::new(super::super::Depth::new(1));
+        let (tx, rx) = channel();
+        let cfg = ShardConfig {
+            shard_id: 0,
+            quantum,
+            dispatch: DispatchPolicy::default(),
+            manifest: None,
+        };
+        let m = metrics.clone();
+        let h = std::thread::spawn(move || shard_worker(cfg, rx, m, None, depth));
+        (tx, metrics, h)
+    }
+
+    fn shard_stats(tx: &Sender<ShardRequest>) -> ShardStats {
+        let (reply, rx) = channel();
+        tx.send(ShardRequest::ShardStats { reply }).unwrap();
+        rx.recv_timeout(Duration::from_secs(10)).unwrap()
+    }
+
+    #[test]
+    fn ghost_scheduler_entry_is_withdrawn_not_a_panic() {
+        // regression: a DRR ring entry with no registry tenant used to hit
+        // `tenants[&id]` / `.expect("scheduled tenant exists")` on the
+        // first idle poll, killing the shard thread for good
+        let (tx, metrics, h) = spawn(64);
+        tx.send(ShardRequest::DebugEnroll { tenant: 42 }).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while metrics.counter("shard0.sched_desync") == 0 {
+            assert!(Instant::now() < deadline, "desync was never counted");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // the worker is still alive and serving, with an empty registry
+        let stats = shard_stats(&tx);
+        assert_eq!(stats.tenants, 0);
+        tx.send(ShardRequest::Shutdown).unwrap();
+        h.join().expect("shard thread must not have panicked");
+    }
+
+    #[test]
+    fn background_sweeping_survives_a_desync() {
+        // a ghost ring entry must not stall background service for the
+        // real tenants sharing the shard
+        let (tx, metrics, h) = spawn(4096);
+        let (reply, rrx) = channel();
+        tx.send(ShardRequest::Create {
+            tenant: 1,
+            graph: workloads::ising_grid(2, 2, 0.2, 0.0),
+            config: TenantConfig {
+                chains: 2,
+                seed: 9,
+                monitor_vars: Vec::new(),
+            },
+            reply,
+        })
+        .unwrap();
+        rrx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        tx.send(ShardRequest::DebugEnroll { tenant: 777 }).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let stats = shard_stats(&tx);
+            if stats.background_sweeps > 0 && metrics.counter("shard0.sched_desync") >= 1 {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "real tenant starved after desync: {stats:?}"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        tx.send(ShardRequest::Shutdown).unwrap();
+        h.join().expect("shard thread must not have panicked");
+    }
 }

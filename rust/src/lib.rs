@@ -15,7 +15,7 @@
 //! `docs/BENCHMARKS.md` for every bench mode/flag and the tracked
 //! `BENCH_*.json` trajectory files.
 //!
-//! ## Architecture at a glance (PRs 1–4)
+//! ## Architecture at a glance (PRs 1–6)
 //!
 //! The crate grew bottom-up, one serving layer per PR:
 //!
@@ -40,13 +40,25 @@
 //!    aligned buffers with jump-ahead RNG refill
 //!    ([`rng::Pcg64::fill_f64`]), or `core::simd` under the
 //!    `nightly-simd` feature — all bit-identical in trajectory.
-//! 5. **Statistical validation** (PR 5, this one) — bit-identity only
-//!    proves every path samples the *same* trajectory; [`validation`]
-//!    proves that trajectory targets the *right* distribution: one
+//! 5. **Statistical validation** (PR 5) — bit-identity only proves
+//!    every path samples the *same* trajectory; [`validation`] proves
+//!    that trajectory targets the *right* distribution: one
 //!    [`validation::SamplingPath`] trait over every sampler, kernel,
 //!    pool, and the live coordinator, gated against exact enumeration
 //!    with deterministic z/TV/chi-square thresholds over the scenario
 //!    zoo ([`workloads::scenarios`]).
+//! 6. **Network serving edge** (PR 6, this one) — the coordinator gets
+//!    a TCP front-end: a line-oriented wire language
+//!    ([`coordinator::protocol`]) whose every malformed frame is
+//!    answered with a spanned, labeled diagnostic
+//!    ([`util::Diagnostic`]), connection multiplexing onto the shard
+//!    queues ([`coordinator::NetServer`]), per-tenant/per-shard
+//!    admission control against the outstanding-request ledger
+//!    ([`coordinator::Depth`] — explicit `overloaded` rejections, never
+//!    unbounded queues), edge batching, latency histograms
+//!    ([`coordinator::Metrics::observe_hist`]), and a closed-loop
+//!    socket load generator ([`workloads::run_net_load`]). See
+//!    `docs/PROTOCOL.md`.
 //!
 //! ## Crate layout
 //!
@@ -76,8 +88,10 @@
 //!   a hash router over `S` shard workers, each owning a registry of
 //!   tenants (graph + lane-batched ensemble) and interleaving foreground
 //!   requests with deficit-round-robin background sweeping weighted by
-//!   per-tenant sweep cost; label-scoped metrics, dispatch policy, and a
-//!   single-tenant compat façade ([`coordinator::Server`]).
+//!   per-tenant sweep cost; label-scoped metrics, dispatch policy, a
+//!   single-tenant compat façade ([`coordinator::Server`]), and the TCP
+//!   serving edge ([`coordinator::protocol`], [`coordinator::net`]) with
+//!   spanned wire diagnostics and admission-control backpressure.
 //! * [`validation`] — the statistical correctness subsystem: one
 //!   [`validation::SamplingPath`] trait over every sampler/engine/serving
 //!   path, an exact forward sampler, and deterministic exactness gates

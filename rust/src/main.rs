@@ -11,17 +11,22 @@
 //!   pdgibbs sample --workload grid --size 16 --beta 0.3 --sweeps 2000
 //!   pdgibbs mixing --workload grid --size 50 --beta 0.2
 //!   pdgibbs serve --vars 200 --target-factors 400 --steps 500
+//!   pdgibbs serve --listen 127.0.0.1:7700 --shards 4
+//!   pdgibbs serve --listen 127.0.0.1:0 --soak-steps 80
 //!   pdgibbs denoise --artifacts artifacts
 //!   pdgibbs artifacts --artifacts artifacts
 
 use std::sync::Arc;
 
 use pdgibbs::bench_support;
-use pdgibbs::coordinator::{Server, ServerConfig};
+use pdgibbs::coordinator::{
+    Coordinator, CoordinatorConfig, NetConfig, NetServer, Server, ServerConfig,
+};
 use pdgibbs::duality::DualModel;
 use pdgibbs::rng::Pcg64;
 use pdgibbs::runtime::Runtime;
 use pdgibbs::util::cli::Cli;
+use pdgibbs::util::stats::mean_or_zero;
 use pdgibbs::util::ThreadPool;
 use pdgibbs::workloads;
 
@@ -106,7 +111,7 @@ fn cmd_sample(args: &[String]) {
         cli.get_usize("sweeps"),
     );
     let dt = t0.elapsed().as_secs_f64();
-    let mean = marg.iter().sum::<f64>() / marg.len() as f64;
+    let mean = mean_or_zero(&marg);
     let sweeps = cli.get_usize("burn-in") + cli.get_usize("sweeps");
     println!("mean marginal: {mean:.4}");
     println!(
@@ -167,9 +172,21 @@ fn cmd_serve(args: &[String]) {
             .opt("beta-max", Some("0.4"), "max coupling of churned factors")
             .opt("sweeps-per-op", Some("8"), "foreground sweeps between ops")
             .opt("chains", Some("10"), "parallel chains")
-            .opt("seed", Some("0"), "trace seed"),
+            .opt("seed", Some("0"), "trace seed")
+            .opt("listen", None, "serve the wire protocol on this TCP address")
+            .opt("shards", Some("2"), "shard threads (listen mode)")
+            .opt("quantum", Some("4096"), "DRR quantum (listen mode; 0 = off)")
+            .opt(
+                "soak-steps",
+                Some("0"),
+                "listen mode: replay this many trace steps through a real socket, then exit",
+            ),
         args,
     );
+    if cli.get("listen").is_some() {
+        serve_net(&cli);
+        return;
+    }
     let vars = cli.get_usize("vars");
     let trace = workloads::ChurnTrace::generate(
         vars,
@@ -199,13 +216,78 @@ fn cmd_serve(args: &[String]) {
         stats.num_factors,
         stats.sweeps_done
     );
-    let mean_marginal = marginals.iter().sum::<f64>() / marginals.len().max(1) as f64;
+    let mean_marginal = mean_or_zero(&marginals);
     println!(
         "final marginals: {} vars, mean {mean_marginal:.4}",
         marginals.len()
     );
     println!("metrics: {}", server.metrics.snapshot().dump());
     server.shutdown();
+}
+
+/// `serve --listen`: expose the sharded coordinator over the wire
+/// protocol on a real TCP socket. With `--soak-steps N` the process
+/// replays a generated multi-tenant trace through a client socket,
+/// verifies zero failed replies and zero scheduler desyncs, then exits
+/// (the CI soak gate). Without it, the server runs until killed.
+fn serve_net(cli: &Cli) {
+    let bind = cli.get("listen").unwrap();
+    let mut coord = Coordinator::spawn(CoordinatorConfig {
+        shards: cli.get_usize("shards").max(1),
+        quantum: cli.get_u64("quantum"),
+        ..Default::default()
+    });
+    let mut server = match NetServer::spawn(
+        coord.client(),
+        coord.metrics().clone(),
+        NetConfig::default(),
+        bind,
+    ) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve --listen failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!("serving the wire protocol on {}", server.addr());
+    let soak = cli.get_usize("soak-steps");
+    if soak == 0 {
+        loop {
+            std::thread::park();
+        }
+    }
+    let trace = workloads::TenantTrace::generate(
+        workloads::TenantTraceConfig {
+            max_tenants: 8,
+            steps: soak,
+            vars: (4, 9),
+            target_factors: 8,
+            ops_per_apply: 3,
+            sweeps_per_step: 4,
+            beta_max: cli.get_f64("beta-max"),
+        },
+        cli.get_u64("seed"),
+    );
+    let addr = server.addr().to_string();
+    let failures = match workloads::replay_trace_over_socket(&addr, &trace) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("soak replay failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    server.shutdown();
+    let desyncs: u64 = (0..coord.num_shards())
+        .map(|s| coord.metrics().counter(&format!("shard{s}.sched_desync")))
+        .sum();
+    println!(
+        "soak: {} wire events, {failures} failed replies, {desyncs} scheduler desyncs",
+        trace.events.len()
+    );
+    coord.shutdown();
+    if failures > 0 || desyncs > 0 {
+        std::process::exit(1);
+    }
 }
 
 fn cmd_denoise(args: &[String]) {

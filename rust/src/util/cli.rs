@@ -6,6 +6,8 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+use super::span::{Diagnostic, Span};
+
 /// Specification of one option/flag.
 #[derive(Clone, Debug)]
 struct OptSpec {
@@ -197,15 +199,56 @@ impl Cli {
     }
 
     /// Parse a comma-separated list of f64 (e.g. `--betas 0.1,0.2,0.3`).
+    /// Exits with a spanned diagnostic on a malformed element; library
+    /// callers should prefer [`Cli::try_f64_list`].
     pub fn get_f64_list(&self, name: &str) -> Vec<f64> {
-        self.get(name)
-            .map(|s| {
-                s.split(',')
-                    .filter(|t| !t.is_empty())
-                    .map(|t| t.trim().parse().expect("bad float in list"))
-                    .collect()
-            })
-            .unwrap_or_default()
+        self.try_f64_list(name).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        })
+    }
+
+    /// Fallible form of [`Cli::get_f64_list`]: a malformed element is
+    /// reported the same way the wire-protocol parser reports malformed
+    /// requests — a byte-spanned, labeled [`Diagnostic`] with a caret
+    /// underline of the offending characters — never a panic:
+    ///
+    /// ```text
+    /// invalid value for --betas:
+    /// 0.1,x,0.3
+    ///     ^ expected finite f64 list element, found "x"
+    /// ```
+    pub fn try_f64_list(&self, name: &str) -> Result<Vec<f64>, CliError> {
+        let Some(raw) = self.get(name) else {
+            return Ok(Vec::new());
+        };
+        let mut out = Vec::new();
+        let mut start = 0;
+        for piece in raw.split_inclusive(',') {
+            let elem = piece.strip_suffix(',').unwrap_or(piece);
+            let trimmed = elem.trim();
+            if !trimmed.is_empty() {
+                let parsed = trimmed.parse::<f64>().ok().filter(|v| v.is_finite());
+                match parsed {
+                    Some(v) => out.push(v),
+                    None => {
+                        let lead = elem.len() - elem.trim_start().len();
+                        let span = Span::new(start + lead, start + lead + trimmed.len());
+                        let d = Diagnostic::new(
+                            span,
+                            "finite f64 list element",
+                            format!("\"{trimmed}\""),
+                        );
+                        return Err(CliError(format!(
+                            "invalid value for --{name}:\n{}",
+                            d.underline(raw)
+                        )));
+                    }
+                }
+            }
+            start += piece.len();
+        }
+        Ok(out)
     }
 }
 
@@ -259,6 +302,40 @@ mod tests {
             .parse(&args(&[]))
             .unwrap();
         assert_eq!(c.get_f64_list("betas"), vec![0.1, 0.2]);
+        // empty segments and surrounding whitespace are tolerated
+        let c = Cli::new("x", "y")
+            .opt("betas", Some(" 0.5 ,, -1.0, "), "list")
+            .parse(&args(&[]))
+            .unwrap();
+        assert_eq!(c.try_f64_list("betas").unwrap(), vec![0.5, -1.0]);
+        // an unset option is an empty list, not an error
+        let c = Cli::new("x", "y").opt("betas", None, "list").parse(&args(&[])).unwrap();
+        assert_eq!(c.try_f64_list("betas").unwrap(), Vec::<f64>::new());
+    }
+
+    #[test]
+    fn malformed_float_list_is_a_spanned_diagnostic_not_a_panic() {
+        let c = Cli::new("x", "y")
+            .opt("betas", Some("0.1,x,0.3"), "list")
+            .parse(&args(&[]))
+            .unwrap();
+        let e = c.try_f64_list("betas").unwrap_err();
+        assert!(e.0.contains("--betas"), "{e}");
+        assert!(e.0.contains("0.1,x,0.3"), "source line missing: {e}");
+        assert!(
+            e.0.contains("expected finite f64 list element, found \"x\""),
+            "label missing: {e}"
+        );
+        // the caret lands under the offending element (byte offset 4)
+        let caret_line = e.0.lines().last().unwrap();
+        assert!(caret_line.starts_with("    ^"), "caret misplaced: {e}");
+        // non-finite elements are rejected too
+        let c = Cli::new("x", "y")
+            .opt("betas", Some("1.0,inf"), "list")
+            .parse(&args(&[]))
+            .unwrap();
+        let e = c.try_f64_list("betas").unwrap_err();
+        assert!(e.0.contains("found \"inf\""), "{e}");
     }
 
     #[test]

@@ -22,17 +22,22 @@
 //!   spanning forests).
 //! * [`stats`] — Welford moments and simple descriptive statistics shared
 //!   by diagnostics and the bench harness.
+//! * [`span`] — spanned, labeled parse diagnostics (byte-offset span +
+//!   expected-token label) shared by the wire-protocol parser and the
+//!   CLI list accessors.
 
 pub mod aligned;
 pub mod cli;
 pub mod error;
 pub mod json;
 pub mod proptest;
+pub mod span;
 pub mod stats;
 pub mod threadpool;
 pub mod union_find;
 
 pub use aligned::AlignedF64s;
 pub use json::Json;
+pub use span::{Diagnostic, Span};
 pub use threadpool::{balanced_ranges, ThreadPool};
 pub use union_find::UnionFind;

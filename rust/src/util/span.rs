@@ -1,0 +1,143 @@
+//! Spanned, labeled diagnostics for the crate's hand-rolled parsers.
+//!
+//! Both the wire-protocol parser ([`crate::coordinator::protocol`]) and
+//! the CLI list accessors ([`crate::util::cli`]) report malformed input
+//! the same way: a byte-offset [`Span`] into the offending source plus an
+//! *expected-token label* and what was actually found — never a bare
+//! "parse error". This follows the rust-sitter error-reporting idiom
+//! (span + label per failure) so a client, a log line, or a terminal can
+//! all render the failure precisely, including a caret underline of the
+//! offending bytes ([`Diagnostic::underline`]).
+
+use std::fmt;
+
+/// Half-open byte range `start..end` into the source being parsed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    /// First byte of the offending region.
+    pub start: usize,
+    /// One past the last byte of the offending region.
+    pub end: usize,
+}
+
+impl Span {
+    /// Span covering `start..end`.
+    pub fn new(start: usize, end: usize) -> Self {
+        Self { start, end }
+    }
+
+    /// Empty span at `at` (used for "expected more input here").
+    pub fn point(at: usize) -> Self {
+        Self { start: at, end: at }
+    }
+}
+
+impl fmt::Display for Span {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}..{}", self.start, self.end)
+    }
+}
+
+/// One spanned, labeled parse failure: where, what was expected, what was
+/// found instead.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Byte range of the offending input.
+    pub span: Span,
+    /// Label of the token/production the parser expected.
+    pub expected: String,
+    /// Description of what was actually found (token text, "end of
+    /// line", byte counts, …).
+    pub found: String,
+}
+
+impl Diagnostic {
+    /// Build a diagnostic from a span and the expected/found labels.
+    pub fn new(span: Span, expected: impl Into<String>, found: impl Into<String>) -> Self {
+        Self {
+            span,
+            expected: expected.into(),
+            found: found.into(),
+        }
+    }
+
+    /// Render the source with a caret underline of the span, for
+    /// terminal-facing reporters:
+    ///
+    /// ```text
+    /// sweep nine 10
+    ///       ^^^^ expected tenant id (u64), found "nine"
+    /// ```
+    ///
+    /// Offsets are byte-based; the caret column falls back to the byte
+    /// count if the span does not land on a character boundary.
+    pub fn underline(&self, src: &str) -> String {
+        let col = src
+            .get(..self.span.start)
+            .map_or(self.span.start, |s| s.chars().count());
+        let width = src
+            .get(self.span.start..self.span.end)
+            .map_or(self.span.end.saturating_sub(self.span.start), |s| {
+                s.chars().count()
+            })
+            .max(1);
+        format!(
+            "{src}\n{:indent$}{:^<width$} expected {}, found {}",
+            "", "", self.expected, self.found,
+            indent = col,
+            width = width,
+        )
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "at {}: expected {}, found {}",
+            self.span, self.expected, self.found
+        )
+    }
+}
+
+impl std::error::Error for Diagnostic {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_span_and_labels() {
+        let d = Diagnostic::new(Span::new(6, 10), "tenant id (u64)", "\"nine\"");
+        let s = d.to_string();
+        assert!(s.contains("6..10"), "{s}");
+        assert!(s.contains("expected tenant id (u64)"), "{s}");
+        assert!(s.contains("found \"nine\""), "{s}");
+    }
+
+    #[test]
+    fn underline_points_at_the_offending_token() {
+        let src = "sweep nine 10";
+        let d = Diagnostic::new(Span::new(6, 10), "tenant id (u64)", "\"nine\"");
+        let rendered = d.underline(src);
+        let lines: Vec<&str> = rendered.lines().collect();
+        assert_eq!(lines[0], src);
+        assert!(lines[1].starts_with("      ^^^^"), "{rendered}");
+        assert!(lines[1].contains("expected tenant id (u64)"));
+    }
+
+    #[test]
+    fn point_span_still_renders_one_caret() {
+        let d = Diagnostic::new(Span::point(5), "a value", "end of line");
+        let rendered = d.underline("--abc");
+        assert!(rendered.lines().nth(1).unwrap().contains('^'), "{rendered}");
+    }
+
+    #[test]
+    fn underline_survives_non_boundary_offsets() {
+        // multibyte input with a span that does not land on a char
+        // boundary must not panic
+        let d = Diagnostic::new(Span::new(1, 3), "x", "y");
+        let _ = d.underline("é é");
+    }
+}

@@ -110,6 +110,20 @@ impl Summary {
     }
 }
 
+/// Mean of a slice, with the empty slice mapped to 0 instead of NaN.
+///
+/// Marginal summaries for zero-variable models (a freshly `create`d
+/// tenant before any `apply`) hit the empty case on every serving path —
+/// CLI `sample`, CLI `serve`, and the wire protocol's `subscribe` events
+/// — so they all share this one guard rather than re-deriving it.
+pub fn mean_or_zero(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
 /// Linear-interpolated quantile of a pre-sorted slice.
 pub fn quantile(sorted: &[f64], q: f64) -> f64 {
     assert!(!sorted.is_empty());
@@ -183,6 +197,12 @@ mod tests {
         assert_eq!(quantile(&sorted, 0.5), 50.0);
         assert_eq!(quantile(&sorted, 1.0), 100.0);
         assert!((quantile(&sorted, 0.95) - 95.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_or_zero_guards_the_empty_slice() {
+        assert_eq!(mean_or_zero(&[]), 0.0, "empty models must not report NaN");
+        assert!((mean_or_zero(&[0.25, 0.75]) - 0.5).abs() < 1e-12);
     }
 
     #[test]

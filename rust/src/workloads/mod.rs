@@ -12,7 +12,10 @@ mod tenants;
 pub use churn::{ChurnOp, ChurnTrace};
 pub use denoise::{accuracy, denoise_mrf, noisy_image, render, synthetic_image, DenoiseConfig};
 pub use scenarios::{Regime, Scenario};
-pub use tenants::{TenantEvent, TenantTrace, TenantTraceConfig};
+pub use tenants::{
+    replay_trace_over_socket, run_net_load, NetLoadConfig, NetLoadReport, TenantEvent,
+    TenantTrace, TenantTraceConfig,
+};
 
 use crate::graph::{FactorGraph, PairFactor};
 use crate::rng::{Pcg64, RngCore};

@@ -10,8 +10,22 @@
 //! against a [`crate::coordinator::Coordinator`]. All randomness comes
 //! from one [`Pcg64`] stream, so a `(config, seed)` pair always produces
 //! the identical trace.
+//!
+//! The network serving edge adds two socket-speaking drivers: events
+//! render as wire-protocol lines ([`TenantEvent::to_wire`]) so a trace
+//! can replay through a real TCP connection
+//! ([`replay_trace_over_socket`] — the CI soak), and [`run_net_load`] is
+//! a closed-loop load generator (tens of thousands of logical clients
+//! over a bounded socket pool, seeded bursty arrivals) behind the
+//! `--mode server-net` saturation bench.
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use crate::coordinator::protocol::{classify_reply, ReplyKind};
 use crate::rng::{Pcg64, RngCore};
+use crate::util::error::{Context, Result};
 
 use super::ChurnOp;
 
@@ -33,6 +47,36 @@ pub enum TenantEvent {
     Sweep { tenant: u64, n: usize },
     /// The tenant departs.
     Drop { tenant: u64 },
+}
+
+impl TenantEvent {
+    /// Render as one wire-protocol request line (see `docs/PROTOCOL.md`);
+    /// `Create` events pin 4 chains. Couplings use `f64`'s shortest
+    /// round-tripping decimal form, so replaying the line reproduces the
+    /// event bit-exactly (the tests parse it back and compare).
+    pub fn to_wire(&self) -> String {
+        match self {
+            TenantEvent::Create { tenant, vars, seed } => {
+                format!("create {tenant} {vars} 4 {seed}")
+            }
+            TenantEvent::Apply { tenant, ops } => {
+                let mut s = format!("apply {tenant}");
+                for op in ops {
+                    match op {
+                        ChurnOp::Add { v1, v2, beta } => {
+                            s.push_str(&format!(" add {v1} {v2} {beta}"));
+                        }
+                        ChurnOp::RemoveLive { index } => {
+                            s.push_str(&format!(" del {index}"));
+                        }
+                    }
+                }
+                s
+            }
+            TenantEvent::Sweep { tenant, n } => format!("sweep {tenant} {n}"),
+            TenantEvent::Drop { tenant } => format!("drop {tenant}"),
+        }
+    }
 }
 
 /// Generation parameters for [`TenantTrace::generate`].
@@ -173,6 +217,237 @@ impl TenantTrace {
     }
 }
 
+/// Replay a [`TenantTrace`] through a real socket speaking the wire
+/// protocol, one request per event, reading each reply before sending
+/// the next. Returns the number of non-`ok` replies (0 = clean soak).
+/// Empty `Apply` events are skipped (an op-less `apply` is a parse
+/// error by design).
+pub fn replay_trace_over_socket(addr: &str, trace: &TenantTrace) -> Result<u64> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting soak client to {addr}"))?;
+    let mut reader = BufReader::new(stream.try_clone().context("cloning soak socket")?);
+    let mut failures = 0u64;
+    for event in &trace.events {
+        if matches!(event, TenantEvent::Apply { ops, .. } if ops.is_empty()) {
+            continue;
+        }
+        let line = event.to_wire();
+        stream
+            .write_all(line.as_bytes())
+            .and_then(|()| stream.write_all(b"\n"))
+            .with_context(|| format!("sending {line:?}"))?;
+        let mut reply = String::new();
+        let n = reader
+            .read_line(&mut reply)
+            .with_context(|| format!("awaiting reply to {line:?}"))?;
+        crate::ensure!(n > 0, "server closed the soak connection after {line:?}");
+        if classify_reply(reply.trim_end()) != ReplyKind::Ok {
+            failures += 1;
+        }
+    }
+    Ok(failures)
+}
+
+/// Parameters for [`run_net_load`]: a closed-loop network load with
+/// seeded bursty arrivals.
+///
+/// `logical_clients` simulated clients (each with at most one
+/// outstanding request — closed loop) are multiplexed over
+/// `connections` real sockets, because tens of thousands of fds would
+/// blow typical `ulimit -n` budgets while tens of thousands of *logical*
+/// request streams are exactly the serving story the edge must absorb.
+#[derive(Clone, Debug)]
+pub struct NetLoadConfig {
+    /// Server address (e.g. from `NetServer::addr().to_string()`).
+    pub addr: String,
+    /// Simulated concurrent clients.
+    pub logical_clients: usize,
+    /// Real sockets (one OS thread each) the clients multiplex over.
+    pub connections: usize,
+    /// Requests each logical client issues before retiring.
+    pub requests_per_client: usize,
+    /// Tenants (ids `1..=tenants`) created before the load starts;
+    /// client `i` traffics tenant `1 + i % tenants`.
+    pub tenants: u64,
+    /// Variables per tenant model.
+    pub vars: usize,
+    /// Sweeps per `sweep` request.
+    pub sweep_n: usize,
+    /// Coupling magnitude cap for generated `apply` ops.
+    pub beta_max: f64,
+    /// Burst cap: each wakeup pipelines `1..=max_burst` requests from
+    /// distinct clients before draining replies (bursty arrivals).
+    pub max_burst: usize,
+    /// Root seed for the request mix and burst sizes.
+    pub seed: u64,
+}
+
+impl Default for NetLoadConfig {
+    fn default() -> Self {
+        Self {
+            addr: String::new(),
+            logical_clients: 20_000,
+            connections: 16,
+            requests_per_client: 4,
+            tenants: 64,
+            vars: 12,
+            sweep_n: 4,
+            beta_max: 0.5,
+            max_burst: 32,
+            seed: 0,
+        }
+    }
+}
+
+/// Aggregate outcome of one [`run_net_load`] run. Latencies are
+/// round-trip seconds measured from each burst's send to each reply in
+/// it (the closed-loop client-perceived latency, queueing included).
+#[derive(Clone, Debug, Default)]
+pub struct NetLoadReport {
+    /// Requests sent (and answered — the loop is closed).
+    pub sent: u64,
+    /// `ok`/`event` replies.
+    pub ok: u64,
+    /// `err overloaded` admission rejections.
+    pub overloaded: u64,
+    /// `err parse` replies (0 for a well-formed generator).
+    pub parse_errors: u64,
+    /// `err exec` and protocol-violation replies.
+    pub exec_errors: u64,
+    /// Per-request round-trip latencies, seconds (unordered).
+    pub latencies_s: Vec<f64>,
+    /// Wall-clock seconds for the whole load (excluding tenant setup).
+    pub elapsed_s: f64,
+}
+
+/// Drive a closed-loop load against a wire-protocol server (see
+/// [`NetLoadConfig`]). Creates the tenants, runs every logical client to
+/// completion, and returns the merged report.
+pub fn run_net_load(config: &NetLoadConfig) -> Result<NetLoadReport> {
+    crate::ensure!(config.connections >= 1, "need at least one connection");
+    crate::ensure!(config.logical_clients >= 1, "need at least one client");
+    crate::ensure!(config.tenants >= 1 && config.vars >= 2, "need tenants with >= 2 vars");
+    // setup: create every tenant over a dedicated connection
+    {
+        let mut stream = TcpStream::connect(&config.addr)
+            .with_context(|| format!("connecting load setup to {}", config.addr))?;
+        let mut reader = BufReader::new(stream.try_clone().context("cloning setup socket")?);
+        let mut lines = String::new();
+        for t in 1..=config.tenants {
+            lines.push_str(&format!("create {t} {} 4 {}\n", config.vars, config.seed ^ t));
+        }
+        stream.write_all(lines.as_bytes()).context("sending creates")?;
+        for t in 1..=config.tenants {
+            let mut reply = String::new();
+            reader.read_line(&mut reply).context("awaiting create reply")?;
+            crate::ensure!(
+                classify_reply(reply.trim_end()) == ReplyKind::Ok,
+                "create tenant {t} failed: {}",
+                reply.trim_end()
+            );
+        }
+    }
+    let t0 = Instant::now();
+    let reports: Vec<Result<NetLoadReport>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..config.connections)
+            .map(|conn| s.spawn(move || drive_connection(config, conn)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(crate::err!("load connection thread panicked")))
+            })
+            .collect()
+    });
+    let mut agg = NetLoadReport {
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        ..Default::default()
+    };
+    for r in reports {
+        let r = r?;
+        agg.sent += r.sent;
+        agg.ok += r.ok;
+        agg.overloaded += r.overloaded;
+        agg.parse_errors += r.parse_errors;
+        agg.exec_errors += r.exec_errors;
+        agg.latencies_s.extend(r.latencies_s);
+    }
+    Ok(agg)
+}
+
+/// One socket's worth of the closed loop: round-robin over this
+/// connection's share of the logical clients, pipelining seeded bursts
+/// and draining every reply before the next burst.
+fn drive_connection(config: &NetLoadConfig, conn: usize) -> Result<NetLoadReport> {
+    let mut stream = TcpStream::connect(&config.addr)
+        .with_context(|| format!("connecting load socket {conn}"))?;
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone().context("cloning load socket")?);
+    let mut rng = Pcg64::seed(config.seed ^ (0xC0FFEE + conn as u64));
+    let client_ids: Vec<usize> = (0..config.logical_clients)
+        .filter(|i| i % config.connections == conn)
+        .collect();
+    let mut remaining: Vec<usize> = vec![config.requests_per_client; client_ids.len()];
+    let mut pending: usize = remaining.iter().sum();
+    let mut report = NetLoadReport::default();
+    let mut cursor = 0usize;
+    while pending > 0 {
+        let burst = 1 + rng.next_below(config.max_burst.max(1) as u64) as usize;
+        let mut lines = String::new();
+        let mut picked = 0usize;
+        let mut scanned = 0usize;
+        while picked < burst && scanned < remaining.len() {
+            let idx = cursor % remaining.len();
+            cursor += 1;
+            scanned += 1;
+            if remaining[idx] == 0 {
+                continue;
+            }
+            remaining[idx] -= 1;
+            pending -= 1;
+            picked += 1;
+            let tenant = 1 + (client_ids[idx] as u64 % config.tenants);
+            let roll = rng.next_f64();
+            let line = if roll < 0.60 {
+                format!("sweep {tenant} {}", config.sweep_n.max(1))
+            } else if roll < 0.80 {
+                let v1 = rng.next_below(config.vars as u64) as usize;
+                let mut v2 = rng.next_below(config.vars as u64) as usize;
+                if v2 == v1 {
+                    v2 = (v1 + 1) % config.vars;
+                }
+                format!("apply {tenant} add {v1} {v2} {}", config.beta_max * rng.next_f64())
+            } else if roll < 0.95 {
+                format!("marginals {tenant}")
+            } else {
+                format!("stats {tenant}")
+            };
+            lines.push_str(&line);
+            lines.push('\n');
+        }
+        if picked == 0 {
+            break;
+        }
+        let send_t = Instant::now();
+        stream.write_all(lines.as_bytes()).context("writing load burst")?;
+        for _ in 0..picked {
+            let mut reply = String::new();
+            let n = reader.read_line(&mut reply).context("reading load reply")?;
+            crate::ensure!(n > 0, "server closed connection {conn} mid-burst");
+            report.sent += 1;
+            report.latencies_s.push(send_t.elapsed().as_secs_f64());
+            match classify_reply(reply.trim_end()) {
+                ReplyKind::Ok | ReplyKind::Event => report.ok += 1,
+                ReplyKind::Overloaded => report.overloaded += 1,
+                ReplyKind::ParseError => report.parse_errors += 1,
+                ReplyKind::ExecError | ReplyKind::Unknown => report.exec_errors += 1,
+            }
+        }
+    }
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,6 +506,45 @@ mod tests {
         let mut want = trace.survivors();
         want.sort_unstable();
         assert_eq!(survivors, want);
+    }
+
+    #[test]
+    fn wire_rendering_round_trips_through_the_protocol_parser() {
+        use crate::coordinator::protocol::{parse_request, Request};
+        let trace = TenantTrace::generate(TenantTraceConfig::default(), 9);
+        assert!(trace.events.len() > 100);
+        for e in &trace.events {
+            let line = e.to_wire();
+            let req = parse_request(&line).unwrap_or_else(|d| panic!("{line:?}: {d}"));
+            match (e, req) {
+                (
+                    TenantEvent::Create { tenant, vars, seed },
+                    Request::Create {
+                        tenant: t,
+                        vars: v,
+                        chains,
+                        seed: s,
+                    },
+                ) => {
+                    assert_eq!((*tenant, *vars, 4, *seed), (t, v, chains, s));
+                }
+                (
+                    TenantEvent::Apply { tenant, ops },
+                    Request::Apply { tenant: t, ops: o },
+                ) => {
+                    assert_eq!(*tenant, t);
+                    // couplings survive the decimal round trip bit-exactly
+                    assert_eq!(*ops, o);
+                }
+                (TenantEvent::Sweep { tenant, n }, Request::Sweep { tenant: t, n: m }) => {
+                    assert_eq!((*tenant, *n), (t, m));
+                }
+                (TenantEvent::Drop { tenant }, Request::Drop { tenant: t }) => {
+                    assert_eq!(*tenant, t);
+                }
+                (e, r) => panic!("event/request kind mismatch: {e:?} vs {r:?}"),
+            }
+        }
     }
 
     #[test]

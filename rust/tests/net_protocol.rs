@@ -1,0 +1,260 @@
+//! Malformed-input integration tests for the network serving edge, over
+//! real TCP sockets: every hostile frame (bad syntax, truncated frames,
+//! oversized payloads, unknown verbs, bad tenant ids) must come back as
+//! a spanned, labeled `err parse …` / `err exec …` reply — and neither
+//! the connection handler nor the shard threads may die. Backpressure
+//! must surface as explicit `err overloaded …` rejections, never as
+//! unbounded queueing or dropped connections.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream};
+use std::time::{Duration, Instant};
+
+use pdgibbs::coordinator::{Coordinator, CoordinatorConfig, NetConfig, NetServer};
+
+fn spawn_edge(net: NetConfig, shards: usize, quantum: u64) -> (Coordinator, NetServer) {
+    let coord = Coordinator::spawn(CoordinatorConfig {
+        shards,
+        quantum,
+        ..Default::default()
+    });
+    let server = NetServer::spawn(coord.client(), coord.metrics().clone(), net, "127.0.0.1:0")
+        .expect("bind test server on an ephemeral port");
+    (coord, server)
+}
+
+/// A line-oriented wire client for the tests.
+struct Wire {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Wire {
+    fn connect(server: &NetServer) -> Wire {
+        let stream = TcpStream::connect(server.addr()).expect("connect to test server");
+        let reader = BufReader::new(stream.try_clone().expect("clone socket"));
+        Wire { stream, reader }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.stream.write_all(line.as_bytes()).expect("send");
+        self.stream.write_all(b"\n").expect("send newline");
+    }
+
+    fn recv(&mut self) -> String {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("read reply");
+        assert!(n > 0, "server closed the connection unexpectedly");
+        line.trim_end().to_string()
+    }
+
+    fn roundtrip(&mut self, line: &str) -> String {
+        self.send(line);
+        self.recv()
+    }
+}
+
+#[test]
+fn every_malformed_request_is_a_spanned_labeled_diagnostic() {
+    let (mut coord, mut server) = spawn_edge(NetConfig::default(), 1, 0);
+    let mut wire = Wire::connect(&server);
+    // (hostile line, span fragment, expected-token label fragment)
+    let cases: &[(&str, &str, &str)] = &[
+        ("zap 1 2", "span=0:3", "create|apply|sweep"),
+        ("sweep nine 10", "span=6:10", "tenant id"),
+        ("sweep 99999999999999999999 1", "span=6:26", "tenant id"),
+        ("sweep 3", "span=7:7", "sweep count"),
+        ("sweep 3 0", "span=8:9", "1..=1000000"),
+        ("marginals 3 please", "span=12:18", "end of line"),
+        ("apply 3 mul 0 1 0.5", "span=8:11", "add|del"),
+        ("apply 3 add 0 1 inf", "span=16:19", "finite"),
+        ("create 1 4 0", "span=11:12", "chain count"),
+    ];
+    for &(line, span, label) in cases {
+        let reply = wire.roundtrip(line);
+        assert!(
+            reply.starts_with("err parse span="),
+            "{line:?}: not a spanned diagnostic: {reply}"
+        );
+        assert!(reply.contains(span), "{line:?}: wrong span in {reply}");
+        assert!(reply.contains("expected="), "{line:?}: no label in {reply}");
+        assert!(reply.contains(label), "{line:?}: wrong label in {reply}");
+        assert!(reply.contains("found="), "{line:?}: no found token in {reply}");
+    }
+    // the connection survived all of it, and so did the shard thread
+    assert_eq!(wire.roundtrip("create 1 8"), "ok");
+    assert!(wire.roundtrip("stats 1").starts_with("ok stats "));
+    // a blank line is a keepalive: no reply, next request answers first
+    wire.send("");
+    assert_eq!(wire.roundtrip("drop 42"), "ok dropped=false");
+    assert_eq!(
+        coord.metrics().counter("net.parse_errors"),
+        cases.len() as u64
+    );
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn oversized_frames_resync_and_the_connection_survives() {
+    let (mut coord, mut server) = spawn_edge(
+        NetConfig {
+            max_frame: 64,
+            ..Default::default()
+        },
+        1,
+        0,
+    );
+    let mut wire = Wire::connect(&server);
+    // 200 bytes with no newline: over budget, rejected mid-frame
+    wire.stream.write_all(&[b'x'; 200]).expect("send runaway frame");
+    let reply = wire.recv();
+    assert!(reply.starts_with("err parse span=0:"), "{reply}");
+    assert!(reply.contains("frame of at most 64 bytes"), "{reply}");
+    assert!(reply.contains("bytes without a newline"), "{reply}");
+    // everything up to the runaway frame's eventual newline is discarded
+    // without further replies; the stream then resyncs and the next
+    // request is served normally
+    wire.send("");
+    assert_eq!(wire.roundtrip("drop 7"), "ok dropped=false");
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn truncated_frames_report_eof_before_the_connection_closes() {
+    let (mut coord, mut server) = spawn_edge(NetConfig::default(), 1, 0);
+    let mut wire = Wire::connect(&server);
+    // bytes arrive, the newline never does: half-close the write side
+    wire.stream.write_all(b"sweep 1").expect("send partial frame");
+    wire.stream.shutdown(Shutdown::Write).expect("half-close");
+    let reply = wire.recv();
+    assert_eq!(
+        reply,
+        "err parse span=0:7 expected=newline-terminated frame; \
+         found=end of stream after 7 bytes"
+    );
+    // after the diagnostic the server closes the connection cleanly
+    let mut rest = String::new();
+    assert_eq!(wire.reader.read_line(&mut rest).expect("read EOF"), 0);
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn bad_tenant_ids_degrade_to_exec_errors_and_the_shard_survives() {
+    let (mut coord, mut server) = spawn_edge(NetConfig::default(), 2, 0);
+    let mut wire = Wire::connect(&server);
+    // queries on a tenant nobody created: execution errors, not crashes
+    assert!(wire.roundtrip("marginals 404").starts_with("err exec "));
+    assert!(wire.roundtrip("stats 404").starts_with("err exec "));
+    assert_eq!(wire.roundtrip("drop 404"), "ok dropped=false");
+    // fire-and-forget verbs are acked at admission; the shard absorbs
+    // the unknown-tenant request without dying
+    assert_eq!(wire.roundtrip("sweep 404 5"), "ok");
+    assert_eq!(wire.roundtrip("apply 404 add 0 1 0.5"), "ok");
+    // both shards still serve real traffic afterwards
+    assert_eq!(wire.roundtrip("create 404 6 4 9"), "ok");
+    assert!(wire.roundtrip("stats 404").starts_with("ok stats vars=6 "));
+    assert!(wire.roundtrip("marginals 404").starts_with("ok marginals n=6 "));
+    for shard in 0..2 {
+        assert_eq!(
+            coord.metrics().counter(&format!("shard{shard}.sched_desync")),
+            0,
+            "shard {shard} desynced"
+        );
+    }
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_with_explicit_overloaded_replies() {
+    // tiny admission bound, batching off so every sweep is its own
+    // shard message, background sweeping off for determinism
+    let (mut coord, mut server) = spawn_edge(
+        NetConfig {
+            max_tenant_depth: 1,
+            batch: false,
+            ..Default::default()
+        },
+        1,
+        0,
+    );
+    let mut wire = Wire::connect(&server);
+    assert_eq!(wire.roundtrip("create 9 32 8 7"), "ok");
+    assert_eq!(wire.roundtrip("apply 9 add 0 1 0.3 add 1 2 0.3"), "ok");
+    // each sweep request is acked at admission but takes the shard tens
+    // of milliseconds to execute, so a fast closed loop outruns it and
+    // piles depth onto the tenant queue
+    let (mut ok, mut overloaded) = (0u64, 0u64);
+    for _ in 0..64 {
+        let reply = wire.roundtrip("sweep 9 20000");
+        if reply == "ok" {
+            ok += 1;
+        } else {
+            assert!(
+                reply.starts_with("err overloaded tenant 9 depth="),
+                "unexpected reply under load: {reply}"
+            );
+            assert!(reply.ends_with("limit=1"), "{reply}");
+            overloaded += 1;
+        }
+    }
+    assert!(ok >= 1, "no sweep was ever admitted");
+    assert!(
+        overloaded >= 1,
+        "64 back-to-back sweeps never tripped the depth=1 bound"
+    );
+    assert!(coord.metrics().counter("net.overloaded") >= overloaded);
+    // rejected clients retry and eventually get through once the shard
+    // drains — overload is explicit and transient, not a dead connection
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let reply = wire.roundtrip("marginals 9");
+        if reply.starts_with("ok marginals n=32 ") {
+            break;
+        }
+        assert!(
+            reply.starts_with("err overloaded "),
+            "retry loop saw a non-overload failure: {reply}"
+        );
+        assert!(Instant::now() < deadline, "shard never drained its backlog");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn subscribe_streams_events_then_ok() {
+    let (mut coord, mut server) = spawn_edge(NetConfig::default(), 1, 0);
+    let mut wire = Wire::connect(&server);
+    assert_eq!(wire.roundtrip("create 2 4 8 5"), "ok");
+    wire.send("subscribe 2 3 10");
+    let mut last_sweeps = 0usize;
+    for index in 0..3 {
+        let event = wire.recv();
+        assert!(
+            event.starts_with(&format!("event index={index} sweeps=")),
+            "event {index}: {event}"
+        );
+        let sweeps: usize = event
+            .split("sweeps=")
+            .nth(1)
+            .and_then(|s| s.split_whitespace().next())
+            .and_then(|s| s.parse().ok())
+            .expect("sweeps field");
+        assert!(
+            sweeps >= last_sweeps + 10,
+            "event {index} reflects too few sweeps: {event}"
+        );
+        last_sweeps = sweeps;
+        assert!(event.contains("mean="), "{event}");
+    }
+    assert_eq!(wire.recv(), "ok");
+    // a subscription to a ghost tenant degrades into one exec error
+    assert!(wire.roundtrip("subscribe 404 2 5").starts_with("err exec "));
+    server.shutdown();
+    coord.shutdown();
+}
