@@ -40,6 +40,17 @@
 //! queueing included), and the admission-control outcome mix
 //! (`ok` / `overloaded` / error replies) under overload.
 //!
+//! `--mode minibatch` measures degree-sublinear minibatched sweeps on a
+//! heavy-tailed power-law tenant (default 10⁶ variables, 8·10⁶ edges,
+//! zipf(1.8) endpoints, degree-scaled couplings): the same engine sweeps
+//! the same graph under the exact full-incidence policy and under
+//! `SweepPolicy::Minibatch` (Poisson-thinned MIN-Gibbs site updates plus
+//! strided θ refresh), and the tracked `speedup` metric is the ratio.
+//! Acceptance (ISSUE 7): ≥ 5× vs the full-incidence path with the
+//! minibatch lane paths passing the tier-3 exactness gates. Flags:
+//! `--mb-vars`, `--mb-edges`, `--mb-threshold`, `--mb-stride`,
+//! `--kernel` (single kernel, default tiled).
+//!
 //! `--mode validate` runs the statistical exactness gates (ISSUE 5) on a
 //! fixed subset of the validation matrix — ground-truth forward draws,
 //! scalar PD, lane engine under both stable kernels (incl. the dense
@@ -54,15 +65,16 @@
 //! diffable PR over PR: lanes mode owns `BENCH_throughput.json` (the
 //! acceptance record), full mode writes `BENCH_throughput_full.json`,
 //! server and server-net modes write `BENCH_server.json` (tagged with
-//! their mode), validate mode writes `BENCH_validate.json`.
+//! their mode), validate mode writes `BENCH_validate.json`, minibatch
+//! mode writes `BENCH_throughput_minibatch.json`.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use pdgibbs::bench::{time_fn, Record, Report};
 use pdgibbs::coordinator::{Coordinator, CoordinatorConfig, NetConfig, NetServer, TenantConfig};
-use pdgibbs::duality::DualModel;
-use pdgibbs::engine::{KernelKind, LanePdSampler};
+use pdgibbs::duality::{DualModel, MinibatchPolicy};
+use pdgibbs::engine::{EngineConfig, KernelKind, LanePdSampler, SweepPolicy};
 use pdgibbs::rng::{Pcg64, RngCore};
 use pdgibbs::runtime::Runtime;
 use pdgibbs::samplers::{ChromaticGibbs, PdSampler, Sampler, SequentialGibbs};
@@ -75,11 +87,12 @@ fn main() {
         "lanes" => bench_lanes(),
         "server" => bench_server(),
         "server-net" => bench_server_net(),
+        "minibatch" => bench_minibatch(),
         "validate" => bench_validate(),
         other => {
             eprintln!(
                 "unknown mode '{other}' \
-                 (usage: throughput [--mode full|lanes|server|server-net|validate])"
+                 (usage: throughput [--mode full|lanes|server|server-net|minibatch|validate])"
             );
             std::process::exit(2);
         }
@@ -96,7 +109,8 @@ fn parse_arg(name: &str) -> Option<String> {
         .and_then(|i| args.get(i + 1).cloned())
 }
 
-/// `--mode <full|lanes|server|validate>`, default `full`.
+/// `--mode <full|lanes|server|server-net|minibatch|validate>`, default
+/// `full`.
 fn parse_mode() -> String {
     parse_arg("mode").unwrap_or_else(|| "full".to_string())
 }
@@ -345,7 +359,7 @@ fn bench_server() {
                 TenantConfig {
                     chains: SERVER_LANES,
                     seed: 0xBEEF ^ t,
-                    monitor_vars: Vec::new(),
+                    ..TenantConfig::default()
                 },
             )
             .expect("create tenant");
@@ -491,6 +505,110 @@ fn bench_server_net() {
     report.finish_tracked("server", "server-net");
 }
 
+// -- minibatch mode ---------------------------------------------------------
+
+/// `--<name> <usize>` with a default.
+fn parse_usize(name: &str, default: usize) -> usize {
+    parse_arg(name).map_or(default, |v| {
+        v.parse().unwrap_or_else(|_| panic!("--{name} wants an unsigned integer, got '{v}'"))
+    })
+}
+
+/// `--mode minibatch`: one heavy-tailed power-law tenant, exact
+/// full-incidence sweeps vs `SweepPolicy::Minibatch` on the same graph,
+/// same kernel, same lane count. The tracked `speedup` metric is the
+/// acceptance number (target ≥ 5×); both absolute sweep rates ride along
+/// so "interactive rates at 10⁶ variables" stays a diffable claim rather
+/// than a ratio that could be met by slowing the baseline.
+fn bench_minibatch() {
+    let vars = parse_usize("mb-vars", 1_000_000);
+    let edges = parse_usize("mb-edges", 8 * vars);
+    let threshold = parse_usize("mb-threshold", MinibatchPolicy::default().degree_threshold);
+    let stride = parse_usize("mb-stride", 16);
+    let kernel = match parse_arg("kernel") {
+        None => KernelKind::default(),
+        Some(a) => KernelKind::parse(&a).unwrap_or_else(|| {
+            eprintln!("unknown kernel '{a}' (--kernel scalar|tiled|nightly-simd)");
+            std::process::exit(2);
+        }),
+    };
+    let lanes = 64usize;
+    let policy = MinibatchPolicy {
+        degree_threshold: threshold,
+        theta_stride: stride,
+        ..MinibatchPolicy::default()
+    };
+
+    let mut report = Report::new("throughput-minibatch");
+    println!(
+        "minibatch mode: building power-law graph ({vars} vars, {edges} edges, \
+         zipf(1.8) endpoints, degree-scaled couplings)..."
+    );
+    let t0 = Instant::now();
+    let g = workloads::power_law_graph(vars, edges, 1.8, 0.8, 0xBEEF);
+    let build_s = t0.elapsed().as_secs_f64();
+    let hub_degree = g.degree(0);
+    println!("graph built in {build_s:.1}s, hub degree {hub_degree}");
+
+    let sweep_once = |eng: &mut LanePdSampler| {
+        let times = time_fn(1, 3, || eng.sweep());
+        mean(&times)
+    };
+
+    let mut exact = LanePdSampler::with_config(
+        &g,
+        EngineConfig { lanes, seed: 0xBEEF, kernel, ..EngineConfig::default() },
+    );
+    let exact_cost = exact.cost();
+    let exact_s = sweep_once(&mut exact);
+    drop(exact);
+
+    let mut mb = LanePdSampler::with_config(
+        &g,
+        EngineConfig { lanes, seed: 0xBEEF, kernel, sweep: SweepPolicy::Minibatch(policy) },
+    );
+    let planned = (0..vars).filter(|&v| mb.model().mb_plan(v).is_some()).count();
+    let mb_cost = mb.cost();
+    let mb_s = sweep_once(&mut mb);
+
+    let speedup = exact_s / mb_s;
+    report.push(
+        Record::new("minibatch-vs-exact")
+            .param("workload", "power-law")
+            .param("vars", vars)
+            .param("edges", edges)
+            .param("hub_degree", hub_degree)
+            .param("planned_sites", planned)
+            .param("kernel", kernel.name())
+            .param("lanes", lanes)
+            .param("degree_threshold", threshold)
+            .param("theta_stride", stride)
+            .metric("exact_sweep_s", exact_s)
+            .metric("minibatch_sweep_s", mb_s)
+            .metric("exact_sweeps_per_s", 1.0 / exact_s)
+            .metric("minibatch_sweeps_per_s", 1.0 / mb_s)
+            .metric(
+                "minibatch_chain_sweeps_per_s",
+                lanes as f64 / mb_s,
+            )
+            .metric("speedup", speedup)
+            .metric("cost_ratio", exact_cost as f64 / mb_cost as f64)
+            .metric("graph_build_s", build_s),
+    );
+    println!(
+        "minibatch ({}) on {vars} vars / {edges} edges: exact {exact_s:.3} s/sweep, \
+         minibatch {mb_s:.3} s/sweep ({:.1} sweeps/s) -> {speedup:.2}x \
+         (target >= 5x; {planned} sites planned, scheduler cost ratio {:.2})",
+        kernel.name(),
+        1.0 / mb_s,
+        exact_cost as f64 / mb_cost as f64
+    );
+    if speedup < 5.0 {
+        println!("WARNING: minibatch speedup below the 5x acceptance target");
+    }
+    report.finish_tracked("throughput_minibatch", "minibatch");
+}
+
 // -- validate mode ----------------------------------------------------------
 
 /// Statistical exactness gates as a tracked bench artifact: a fixed
@@ -557,7 +675,12 @@ fn bench_validate() {
         let s = scenarios::by_name(scenario);
         let mut p = LanePath::new(
             s.graph.clone(),
-            pdgibbs::engine::EngineConfig { lanes: 64, seed: 0xB003, kernel },
+            pdgibbs::engine::EngineConfig {
+                lanes: 64,
+                seed: 0xB003,
+                kernel,
+                ..Default::default()
+            },
             None,
         );
         let t0 = Instant::now();

@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use crate::diagnostics::{mixing_time_multi, MixingResult};
 use crate::duality::DualModel;
-use crate::engine::LanePdSampler;
+use crate::engine::{EngineConfig, LanePdSampler, SweepPolicy};
 use crate::graph::{FactorGraph, FactorId, PairFactor};
 use crate::util::ThreadPool;
 
@@ -39,11 +39,44 @@ impl PdEnsemble {
         Self::from_model(DualModel::from_graph(graph), chains, seed)
     }
 
+    /// Build with an explicit sweep policy (the ensemble's chains all
+    /// share it — it is a property of the engine, not of a chain).
+    pub fn with_policy(
+        graph: &FactorGraph,
+        chains: usize,
+        seed: u64,
+        sweep: SweepPolicy,
+    ) -> Self {
+        Self::from_model_config(
+            DualModel::from_graph(graph),
+            EngineConfig {
+                lanes: chains,
+                seed,
+                sweep,
+                ..EngineConfig::default()
+            },
+        )
+    }
+
     /// Wrap an existing dual model (shared slot space with the graph).
     pub fn from_model(model: DualModel, chains: usize, seed: u64) -> Self {
+        Self::from_model_config(
+            model,
+            EngineConfig {
+                lanes: chains,
+                seed,
+                ..EngineConfig::default()
+            },
+        )
+    }
+
+    /// Wrap an existing dual model with full [`EngineConfig`] knobs
+    /// (`cfg.lanes` is the chain count).
+    pub fn from_model_config(model: DualModel, cfg: EngineConfig) -> Self {
+        let chains = cfg.lanes;
         assert!(chains >= 1);
         let n = model.num_vars();
-        let engine = LanePdSampler::from_model(model, chains, seed);
+        let engine = LanePdSampler::from_model_config(model, cfg);
         Self {
             engine,
             monitor: Vec::new(),
@@ -95,9 +128,16 @@ impl PdEnsemble {
     }
 
     /// Per-sweep cost in site-visits (the scheduler's fair-share unit) —
-    /// delegates to the engine's accounting hook, so it tracks churn.
+    /// delegates to the engine's accounting hook, so it tracks churn
+    /// *and* the sweep policy (minibatched hubs are charged their batch,
+    /// not their degree).
     pub fn cost(&self) -> u64 {
         self.engine.cost()
+    }
+
+    /// The sweep policy all chains share.
+    pub fn sweep_policy(&self) -> SweepPolicy {
+        self.engine.sweep_policy()
     }
 
     /// Park the ensemble: a suspended tenant keeps its sampler state

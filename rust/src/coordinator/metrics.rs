@@ -70,9 +70,12 @@ impl Hist {
 
     /// Nearest-rank quantile (`q` in `[0, 1]`), reported as the geometric
     /// midpoint of the covering bucket, clamped to the observed max.
-    fn quantile(&self, q: f64) -> Option<f64> {
+    ///
+    /// An empty histogram answers `0.0` — never a bucket edge, which would
+    /// read as a phantom ~1 µs latency on dashboards before any traffic.
+    fn quantile(&self, q: f64) -> f64 {
         if self.count == 0 {
-            return None;
+            return 0.0;
         }
         let rank = ((self.count as f64 * q.clamp(0.0, 1.0)).ceil() as u64).clamp(1, self.count);
         let mut seen = 0u64;
@@ -81,10 +84,10 @@ impl Hist {
             if seen >= rank {
                 let lo = HIST_BASE * HIST_GROWTH.powi(i as i32);
                 let mid = lo * HIST_GROWTH.sqrt();
-                return Some(mid.min(self.max));
+                return mid.min(self.max);
             }
         }
-        Some(self.max)
+        self.max
     }
 }
 
@@ -180,15 +183,16 @@ impl Metrics {
     }
 
     /// Quantile (`q` in `[0, 1]`) of the histogram under `name`, in
-    /// seconds; `None` if nothing was observed. Resolution is the
-    /// bucket's ~25 % relative width.
-    pub fn hist_quantile(&self, name: &str, q: f64) -> Option<f64> {
+    /// seconds; `0.0` if nothing was observed (empty or missing
+    /// histogram — not a bucket edge). Resolution is the bucket's ~25 %
+    /// relative width.
+    pub fn hist_quantile(&self, name: &str, q: f64) -> f64 {
         self.inner
             .hists
             .lock()
             .unwrap()
             .get(name)
-            .and_then(|h| h.quantile(q))
+            .map_or(0.0, |h| h.quantile(q))
     }
 
     /// Observation count of the histogram under `name`.
@@ -269,9 +273,9 @@ impl Metrics {
                 format!("hist.{k}"),
                 Json::obj(vec![
                     ("count", Json::from(h.count as f64)),
-                    ("p50_s", Json::from(h.quantile(0.50).unwrap_or(0.0))),
-                    ("p99_s", Json::from(h.quantile(0.99).unwrap_or(0.0))),
-                    ("p999_s", Json::from(h.quantile(0.999).unwrap_or(0.0))),
+                    ("p50_s", Json::from(h.quantile(0.50))),
+                    ("p99_s", Json::from(h.quantile(0.99))),
+                    ("p999_s", Json::from(h.quantile(0.999))),
                     ("max_s", Json::from(h.max)),
                 ]),
             ));
@@ -340,7 +344,7 @@ impl MetricsView {
     }
 
     /// Quantile of the scoped histogram — see [`Metrics::hist_quantile`].
-    pub fn hist_quantile(&self, name: &str, q: f64) -> Option<f64> {
+    pub fn hist_quantile(&self, name: &str, q: f64) -> f64 {
         self.registry.hist_quantile(&self.key(name), q)
     }
 
@@ -455,20 +459,20 @@ mod tests {
         }
         m.observe_hist("lat", 1.0);
         assert_eq!(m.hist_count("lat"), 100);
-        let p50 = m.hist_quantile("lat", 0.50).unwrap();
-        let p99 = m.hist_quantile("lat", 0.99).unwrap();
-        let p999 = m.hist_quantile("lat", 0.999).unwrap();
+        let p50 = m.hist_quantile("lat", 0.50);
+        let p99 = m.hist_quantile("lat", 0.99);
+        let p999 = m.hist_quantile("lat", 0.999);
         // log buckets: ~25 % relative resolution
         assert!((0.5e-3..2e-3).contains(&p50), "p50={p50}");
         assert!(p99 < 0.1, "p99 must still be in the fast mass: {p99}");
         assert!((0.5..=1.0).contains(&p999), "p999 must see the outlier: {p999}");
-        assert_eq!(m.hist_quantile("missing", 0.5), None);
+        assert_eq!(m.hist_quantile("missing", 0.5), 0.0);
         // degenerate inputs must not poison the buckets
         m.observe_hist("weird", f64::NAN);
         m.observe_hist("weird", -1.0);
         m.observe_hist("weird", 0.0);
         assert_eq!(m.hist_count("weird"), 3);
-        assert!(m.hist_quantile("weird", 0.5).unwrap() >= 0.0);
+        assert!(m.hist_quantile("weird", 0.5) >= 0.0);
         // snapshot carries the quantiles
         let snap = m.snapshot();
         let lat = snap.get("hist.lat").unwrap();
@@ -483,7 +487,28 @@ mod tests {
         edge.observe_hist("request_s", 0.002);
         assert_eq!(edge.hist_count("request_s"), 1);
         assert_eq!(m.hist_count("net.request_s"), 1);
-        assert!(edge.hist_quantile("request_s", 0.5).is_some());
+        assert!(edge.hist_quantile("request_s", 0.5) > 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_exactly_zero() {
+        // satellite: before any observation every quantile must be 0.0 —
+        // not the first bucket's geometric midpoint (~1.1 µs), which used
+        // to leak out as a phantom latency floor
+        let h = Hist::default();
+        for &q in &[0.0, 0.5, 0.99, 0.999, 1.0] {
+            assert_eq!(h.quantile(q), 0.0, "q={q}");
+        }
+        let first_bucket_mid = HIST_BASE * HIST_GROWTH.sqrt();
+        assert_ne!(h.quantile(0.5), first_bucket_mid);
+        // registry-level: missing key and scoped view agree
+        let m = Metrics::new();
+        assert_eq!(m.hist_quantile("never_observed", 0.999), 0.0);
+        assert_eq!(m.scoped("t9").hist_quantile("never_observed", 0.5), 0.0);
+        // snapshot of a pushed-then-empty registry still renders zeros:
+        // an entry exists only after observe_hist, so seed one elsewhere
+        m.observe_hist("other", 0.25);
+        assert_eq!(m.hist_quantile("never_observed", 0.5), 0.0);
     }
 
     #[test]

@@ -443,7 +443,7 @@ mod tests {
         TenantConfig {
             chains,
             seed,
-            monitor_vars: Vec::new(),
+            ..TenantConfig::default()
         }
     }
 

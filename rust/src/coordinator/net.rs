@@ -426,6 +426,7 @@ pub fn execute(client: &Client, req: Request) -> Response {
             vars,
             chains,
             seed,
+            sweep,
         } => done(client.create_tenant(
             tenant,
             FactorGraph::new(vars),
@@ -433,6 +434,7 @@ pub fn execute(client: &Client, req: Request) -> Response {
                 chains,
                 seed,
                 monitor_vars: Vec::new(),
+                sweep,
             },
         )),
         Request::Apply { tenant, ops } => done(client.apply(tenant, ops)),

@@ -12,7 +12,8 @@
 //!
 //! ```text
 //! request   := create | apply | sweep | marginals | stats | drop | subscribe
-//! create    := "create" tenant vars [chains] [seed]
+//! create    := "create" tenant vars [chains] [seed] [policy]
+//! policy    := "exact" | "minibatch" [":" degree [":" stride]]
 //! apply     := "apply" tenant op+
 //! op        := "add" v1 v2 beta | "del" index
 //! sweep     := "sweep" tenant n
@@ -38,6 +39,7 @@
 //! `err overloaded …` and tenant-level failures `err exec …` — see
 //! `docs/PROTOCOL.md` for the full reply grammar and semantics.
 
+use crate::engine::SweepPolicy;
 use crate::util::span::{Diagnostic, Span};
 use crate::workloads::ChurnOp;
 
@@ -68,6 +70,9 @@ pub enum Request {
         chains: usize,
         /// Per-tenant RNG root.
         seed: u64,
+        /// Sweep policy (`exact` unless the client opts into minibatched
+        /// hub updates; λ knobs stay at their defaults on the wire).
+        sweep: SweepPolicy,
     },
     /// Apply churn ops to a tenant (acknowledged at admission).
     Apply {
@@ -182,7 +187,7 @@ impl Response {
                 };
                 format!(
                     "ok stats vars={} factors={} sweeps={} background={} ops={} \
-                     stable_for={} cost={} suspended={} dispatch={dispatch}",
+                     stable_for={} cost={} suspended={} dispatch={dispatch} policy={}",
                     t.num_vars,
                     t.num_factors,
                     t.sweeps_done,
@@ -191,6 +196,7 @@ impl Response {
                     t.stable_for,
                     t.cost,
                     t.suspended,
+                    t.policy,
                 )
             }
             Response::Event {
@@ -387,19 +393,36 @@ pub fn parse_request(line: &str) -> Result<Request, Diagnostic> {
         "create" => {
             let (tenant, _) = c.u64("tenant id (u64)")?;
             let (vars, _) = c.usize_in("variable count 1..=1048576", 1, MAX_VARS)?;
-            let chains = match c.peek() {
-                Some(_) => c.usize_in("chain count 1..=1024", 1, MAX_CHAINS)?.0,
-                None => 8,
+            // the optional numeric knobs are positional; a non-numeric
+            // trailing token is the (also optional) sweep policy
+            let next_is_numeric =
+                |c: &Cursor| c.peek().is_some_and(|(t, _)| t.bytes().all(|b| b.is_ascii_digit()));
+            let chains = if next_is_numeric(&c) {
+                c.usize_in("chain count 1..=1024", 1, MAX_CHAINS)?.0
+            } else {
+                8
             };
-            let seed = match c.peek() {
-                Some(_) => c.u64("seed (u64)")?.0,
-                None => tenant ^ 0x9E37_79B9_7F4A_7C15,
+            let seed = if next_is_numeric(&c) {
+                c.u64("seed (u64)")?.0
+            } else {
+                tenant ^ 0x9E37_79B9_7F4A_7C15
+            };
+            let sweep = match c.peek() {
+                Some(_) => {
+                    c.parse_with(
+                        "sweep policy exact|minibatch[:degree[:stride]]",
+                        SweepPolicy::parse,
+                    )?
+                    .0
+                }
+                None => SweepPolicy::default(),
             };
             Request::Create {
                 tenant,
                 vars,
                 chains,
                 seed,
+                sweep,
             }
         }
         "apply" => {
@@ -487,7 +510,8 @@ mod tests {
                 tenant: 7,
                 vars: 16,
                 chains: 4,
-                seed: 99
+                seed: 99,
+                sweep: SweepPolicy::Exact,
             }
         );
         assert_eq!(
@@ -496,7 +520,8 @@ mod tests {
                 tenant: 7,
                 vars: 16,
                 chains: 8,
-                seed: 7 ^ 0x9E37_79B9_7F4A_7C15
+                seed: 7 ^ 0x9E37_79B9_7F4A_7C15,
+                sweep: SweepPolicy::Exact,
             }
         );
         assert_eq!(
@@ -536,6 +561,60 @@ mod tests {
                 every: 100
             }
         );
+    }
+
+    #[test]
+    fn create_accepts_a_policy_after_any_prefix_of_the_numeric_knobs() {
+        use crate::duality::MinibatchPolicy;
+        let mb = |degree_threshold, theta_stride| {
+            SweepPolicy::Minibatch(MinibatchPolicy {
+                degree_threshold,
+                theta_stride,
+                ..MinibatchPolicy::default()
+            })
+        };
+        // full form: tenant vars chains seed policy
+        assert_eq!(
+            parse_request("create 7 16 4 99 minibatch:128:4").unwrap(),
+            Request::Create {
+                tenant: 7,
+                vars: 16,
+                chains: 4,
+                seed: 99,
+                sweep: mb(128, 4),
+            }
+        );
+        // the policy token is non-numeric, so it can follow any prefix
+        // of the optional numeric knobs without ambiguity
+        assert_eq!(
+            parse_request("create 7 16 minibatch").unwrap(),
+            Request::Create {
+                tenant: 7,
+                vars: 16,
+                chains: 8,
+                seed: 7 ^ 0x9E37_79B9_7F4A_7C15,
+                sweep: SweepPolicy::Minibatch(MinibatchPolicy::default()),
+            }
+        );
+        assert_eq!(
+            parse_request("create 7 16 4 exact").unwrap(),
+            Request::Create {
+                tenant: 7,
+                vars: 16,
+                chains: 4,
+                seed: 7 ^ 0x9E37_79B9_7F4A_7C15,
+                sweep: SweepPolicy::Exact,
+            }
+        );
+        let d = parse_err("create 7 16 minibatch:0x8");
+        assert!(d.expected.contains("sweep policy"), "{d}");
+        assert_eq!(d.found, "\"minibatch:0x8\"");
+        // a zero stride is rejected at parse time, not divided by later
+        let d = parse_err("create 7 16 minibatch:8:0");
+        assert!(d.expected.contains("sweep policy"), "{d}");
+        // nothing may follow the policy
+        let d = parse_err("create 7 16 exact 4");
+        assert_eq!(d.expected, "end of line");
     }
 
     #[test]

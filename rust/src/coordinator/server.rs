@@ -158,6 +158,7 @@ impl Server {
                     chains: config.chains,
                     seed: config.seed,
                     monitor_vars: config.monitor_vars.clone(),
+                    ..TenantConfig::default()
                 },
             )
             .expect("freshly spawned shard hosts the façade tenant");

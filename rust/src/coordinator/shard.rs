@@ -371,7 +371,7 @@ mod tests {
             config: TenantConfig {
                 chains: 2,
                 seed: 9,
-                monitor_vars: Vec::new(),
+                ..TenantConfig::default()
             },
             reply,
         })

@@ -12,6 +12,7 @@
 use std::sync::Arc;
 
 use crate::diagnostics::MixingResult;
+use crate::engine::SweepPolicy;
 use crate::graph::{FactorGraph, FactorId, PairFactor};
 use crate::runtime::Manifest;
 use crate::util::ThreadPool;
@@ -36,6 +37,10 @@ pub struct TenantConfig {
     pub seed: u64,
     /// Variables monitored for PSRF (empty = magnetization only).
     pub monitor_vars: Vec<usize>,
+    /// Site-visit policy of the tenant's engine (exact sweeps, or
+    /// minibatched hub updates for heavy-tailed models). Per-tenant: one
+    /// tenant's policy never affects a neighbor's trajectory.
+    pub sweep: SweepPolicy,
 }
 
 impl Default for TenantConfig {
@@ -44,6 +49,7 @@ impl Default for TenantConfig {
             chains: 10,
             seed: 0xC0FFEE,
             monitor_vars: Vec::new(),
+            sweep: SweepPolicy::default(),
         }
     }
 }
@@ -70,6 +76,8 @@ pub struct TenantStats {
     pub cost: u64,
     /// Whether the tenant is excluded from background sweeping.
     pub suspended: bool,
+    /// The tenant's sweep policy (how `cost` was priced).
+    pub policy: SweepPolicy,
     /// What the dispatch policy would run the next sweep batch on, given
     /// the shard's artifact manifest and this tenant's stability.
     pub dispatch: DispatchDecision,
@@ -98,7 +106,8 @@ impl Tenant {
         pool: Option<Arc<ThreadPool>>,
         metrics: MetricsView,
     ) -> Self {
-        let mut ensemble = PdEnsemble::new(&graph, config.chains, config.seed);
+        let mut ensemble =
+            PdEnsemble::with_policy(&graph, config.chains, config.seed, config.sweep);
         if let Some(pool) = pool {
             ensemble = ensemble.with_pool(pool);
         }
@@ -242,6 +251,7 @@ impl Tenant {
             stable_for: self.stable_for,
             cost: self.cost(),
             suspended: self.suspended,
+            policy: self.ensemble.sweep_policy(),
             dispatch: policy.decide(
                 manifest,
                 self.graph.num_vars(),
@@ -264,7 +274,7 @@ mod tests {
         let cfg = TenantConfig {
             chains: 4,
             seed: 7,
-            monitor_vars: Vec::new(),
+            ..TenantConfig::default()
         };
         (Tenant::new(graph, &cfg, None, view), registry)
     }
@@ -333,6 +343,46 @@ mod tests {
         assert_eq!(stats.ops_applied, 1);
         assert_eq!(registry.counter("tenant0.ops"), 1);
         assert_eq!(registry.counter("tenant0.invalid_ops"), 3);
+    }
+
+    #[test]
+    fn minibatch_policy_reaches_stats_and_reprices_cost() {
+        use crate::duality::MinibatchPolicy;
+        let policy = SweepPolicy::Minibatch(MinibatchPolicy {
+            degree_threshold: 4,
+            lambda_scale: 0.05,
+            lambda_min: 0.5,
+            theta_stride: 4,
+        });
+        let registry = Metrics::new();
+        let mk = |sweep: SweepPolicy| {
+            let cfg = TenantConfig {
+                chains: 4,
+                seed: 7,
+                sweep,
+                ..TenantConfig::default()
+            };
+            Tenant::new(
+                workloads::fully_connected_jittered(12, 0.04, 0.01, 5),
+                &cfg,
+                None,
+                registry.scoped("t"),
+            )
+        };
+        let exact = mk(SweepPolicy::Exact);
+        let mb = mk(policy);
+        let stats = mb.stats(&DispatchPolicy::default(), None);
+        assert_eq!(stats.policy, policy, "policy must surface in stats");
+        assert_eq!(
+            exact.stats(&DispatchPolicy::default(), None).policy,
+            SweepPolicy::Exact
+        );
+        assert!(
+            stats.cost < exact.cost(),
+            "DRR must see the cheaper sweeps: {} vs {}",
+            stats.cost,
+            exact.cost()
+        );
     }
 
     #[test]

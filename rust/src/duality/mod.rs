@@ -9,7 +9,10 @@
 //!
 //! * [`factorization`] — Lemmas 2–4 + Theorem 2 (`P → (α, q, β)`).
 //! * [`model`] — [`DualModel`]: the dualized MRF with O(degree)
-//!   incremental add/remove, shared by every sampler and the XLA runtime.
+//!   incremental add/remove, shared by every sampler and the XLA runtime;
+//!   [`MinibatchPolicy`]/[`MbPlan`]: per-site factor-subsampling plans
+//!   (alias tables + Poisson/MIN-Gibbs correction constants) for
+//!   degree-sublinear hub updates, maintained under the same churn hooks.
 //! * [`csr`] — [`CsrIncidence`]: the flat incidence arena (CSR base +
 //!   delta overlay + epoch compaction) mirroring the model's nested
 //!   reference incidence for the sweep hot path; [`XTableArena`]: the
@@ -28,4 +31,4 @@ pub mod sw;
 
 pub use csr::{CsrIncidence, XTableArena};
 pub use factorization::{dualize_table, factorize_positive, DualFactor};
-pub use model::{DualEntry, DualModel};
+pub use model::{DualEntry, DualModel, MbPlan, MinibatchPolicy};

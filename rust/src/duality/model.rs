@@ -24,11 +24,146 @@
 use super::csr::{CsrIncidence, XTableArena};
 use super::factorization::{dualize_table, DualFactor};
 use crate::graph::{FactorGraph, FactorId, PairFactor, VarId};
-use crate::rng::{bernoulli_sigmoid_parts, sigmoid_fast};
+use crate::rng::{bernoulli_sigmoid_parts, sigmoid_fast, RngCore};
 
 /// Largest view length for which [`DualModel::x_table`] is materialized:
 /// `2^6 = 64` cached entries at most, indexable by a `u8` gather.
 const X_TABLE_MAX_DEG: usize = 6;
+
+/// Knobs for minibatched x-site updates (De Sa, Chen & Wong 2018: factor
+/// subsampling with a Poisson/MIN-Gibbs auxiliary correction that keeps
+/// the chain exact). Defined here rather than in `engine` because the
+/// model owns the per-site [`MbPlan`] caches rebuilt under churn; the
+/// engine wraps this in its `SweepPolicy`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MinibatchPolicy {
+    /// Sites at or below this live degree keep the exact full-incidence
+    /// update; only higher-degree sites get a subsampling plan.
+    pub degree_threshold: usize,
+    /// λ = max(`lambda_min`, `lambda_scale · L²`) where `L` is the site's
+    /// maintained total-coupling bound ([`DualModel::coupling_l1`]);
+    /// λ = Θ(L²) matches the minibatch-Gibbs guidance for mixing
+    /// comparable to the full chain. Any λ > 0 is exact.
+    pub lambda_scale: f64,
+    /// Floor for λ — keeps κ = λ/(λ+L) away from 0 on weakly-coupled hubs.
+    pub lambda_min: f64,
+    /// θ half-step refresh stride: slot `s` is refreshed on sweeps where
+    /// `s % stride == sweep % stride` (a deterministic cyclic schedule of
+    /// valid Gibbs kernels, so exactness is preserved; untouched slots
+    /// keep their state and consume no randomness, making trajectories
+    /// pool-invariant). `1` = every slot every sweep.
+    pub theta_stride: usize,
+}
+
+impl Default for MinibatchPolicy {
+    fn default() -> Self {
+        Self {
+            degree_threshold: 64,
+            lambda_scale: 1.0,
+            lambda_min: 4.0,
+            theta_stride: 8,
+        }
+    }
+}
+
+/// Subsampling plan for one high-degree site: a Vose alias table over the
+/// site's couplings `|β_j|` plus the constants of the Poisson auxiliary
+/// correction. Built (and rebuilt on churn) by [`DualModel`]; consumed by
+/// the lane engine's minibatch site update:
+///
+/// draw `N ~ Poisson(rate)` per lane, alias-pick `N` entries `∝ |β_j|`,
+/// thin each with probability `κ + (1-κ)·t_j` where `t_j ∈ {0,1}` is the
+/// deterministic bit test `θ_j ∧ x_v` (complemented for `β_j < 0`), and
+/// add `sign(β_j)·c` to the site log-odds for every kept event with
+/// `θ_j = 1`. The marginal of the resulting draw over the auxiliary
+/// counts is exactly the site conditional — validated end-to-end by the
+/// statistical harness.
+#[derive(Clone, Debug)]
+pub struct MbPlan {
+    /// Alias-method acceptance probability per entry.
+    prob: Vec<f64>,
+    /// Alias-method redirect target per entry.
+    alias: Vec<u32>,
+    /// Factor slot of each entry (plan-local index → slot id).
+    slot: Vec<u32>,
+    /// Whether the entry's β at this endpoint is negative.
+    neg: Vec<bool>,
+    /// Exact `L = Σ |β_j|` over the entries this plan was built from
+    /// (recomputed at build time, immune to incremental-counter drift —
+    /// `rate`/`kappa`/`c` below must be mutually consistent with it).
+    l1: f64,
+    /// Poisson mean per lane: `λ + L`.
+    rate: f64,
+    /// Thinning keep-probability for failed bit tests: `λ / (λ + L)`.
+    kappa: f64,
+    /// Per-kept-event log-odds magnitude: `ln(1 + L/λ)`.
+    c: f64,
+    /// Expected events per lane, rounded up — the unit the repriced
+    /// sweep cost charges instead of the full degree.
+    batch: u64,
+    /// `degree - min(degree, batch)`: this plan's contribution to
+    /// [`DualModel::mb_saved`], remembered so removal stays O(1).
+    saved: u64,
+}
+
+impl MbPlan {
+    /// Poisson mean per lane (`λ + L`).
+    #[inline]
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Thinning keep-probability `λ / (λ + L)` for events whose
+    /// deterministic bit test fails.
+    #[inline]
+    pub fn kappa(&self) -> f64 {
+        self.kappa
+    }
+
+    /// Per-kept-event log-odds magnitude `ln(1 + L/λ)`.
+    #[inline]
+    pub fn c(&self) -> f64 {
+        self.c
+    }
+
+    /// Exact total coupling `L = Σ |β_j|` the plan was built from.
+    #[inline]
+    pub fn l1(&self) -> f64 {
+        self.l1
+    }
+
+    /// Expected events per lane, rounded up.
+    #[inline]
+    pub fn batch(&self) -> u64 {
+        self.batch
+    }
+
+    /// Number of subsampled entries (the site's nonzero-β degree).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.slot.len()
+    }
+
+    /// True when the plan has no entries (never stored by the model).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.slot.is_empty()
+    }
+
+    /// Alias-pick one entry with probability `|β_j| / L`; returns its
+    /// `(factor slot, β < 0)`. Consumes exactly one uniform.
+    #[inline]
+    pub fn pick<R: RngCore>(&self, rng: &mut R) -> (u32, bool) {
+        let u = rng.next_f64() * self.prob.len() as f64;
+        let i = (u as usize).min(self.prob.len() - 1);
+        let j = if u - i as f64 < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        };
+        (self.slot[j], self.neg[j])
+    }
+}
 
 /// Dual parameters + endpoints of one live factor.
 #[derive(Clone, Copy, Debug)]
@@ -76,6 +211,22 @@ pub struct DualModel {
     /// endpoints.
     x_tables: XTableArena,
     active: usize,
+    /// Minibatch policy; `None` = every site updates over its full
+    /// incidence (the default).
+    mb: Option<MinibatchPolicy>,
+    /// Per-variable subsampling plans (empty unless `mb` is set; `None`
+    /// entries are sites below the degree threshold). Rebuilt at the same
+    /// churn points as the x-tables.
+    mb_plans: Vec<Option<Box<MbPlan>>>,
+    /// Per-variable `Σ |β|` over live incidence, maintained incrementally
+    /// under churn (O(1) per insert/remove) and re-anchored to the exact
+    /// sum whenever a plan is rebuilt. Only sizes λ and gates policy
+    /// decisions — plan exactness never depends on it.
+    coupling_l1: Vec<f64>,
+    /// `Σ_v (degree(v) - min(degree(v), batch(v)))` over planned sites:
+    /// the incidence visits the minibatch path skips per sweep, kept as a
+    /// counter so repriced sweep cost stays O(1).
+    mb_saved: u64,
 }
 
 impl DualModel {
@@ -108,6 +259,10 @@ impl DualModel {
             slot_v2: Vec::new(),
             x_tables: XTableArena::new(n),
             active: 0,
+            mb: None,
+            mb_plans: Vec::new(),
+            coupling_l1: vec![0.0; n],
+            mb_saved: 0,
         };
         for v in 0..n {
             m.rebuild_x_table(v);
@@ -139,6 +294,149 @@ impl DualModel {
     #[inline]
     pub fn sweep_cost(&self) -> u64 {
         (self.num_vars() + 2 * self.num_factors() + self.factor_slots()) as u64
+    }
+
+    /// [`DualModel::sweep_cost`] repriced for minibatched sweeps: planned
+    /// sites are charged their expected batch instead of their degree
+    /// (`mb_saved` visits dropped from the x half-step) and the θ
+    /// half-step only visits `1/stride` of the slot space per sweep.
+    /// O(1), like `sweep_cost` — the DRR scheduler calls this per grant.
+    #[inline]
+    pub fn minibatch_sweep_cost(&self, theta_stride: usize) -> u64 {
+        let x = (2 * self.num_factors() as u64).saturating_sub(self.mb_saved);
+        let theta = (self.factor_slots() as u64).div_ceil(theta_stride.max(1) as u64);
+        self.num_vars() as u64 + x + theta
+    }
+
+    /// Install (or clear, with `None`) the minibatch policy and rebuild
+    /// every site's subsampling plan against it. O(vars + incidence).
+    pub fn set_minibatch(&mut self, policy: Option<MinibatchPolicy>) {
+        self.mb = policy;
+        self.mb_plans.clear();
+        self.mb_saved = 0;
+        if self.mb.is_some() {
+            self.mb_plans.resize_with(self.num_vars(), || None);
+            for v in 0..self.num_vars() {
+                self.rebuild_mb_plan(v);
+            }
+        }
+    }
+
+    /// The installed minibatch policy, if any.
+    #[inline]
+    pub fn minibatch_policy(&self) -> Option<MinibatchPolicy> {
+        self.mb
+    }
+
+    /// `v`'s subsampling plan — `Some` only when a policy is installed
+    /// and `v`'s live degree exceeds its threshold (with nonzero total
+    /// coupling). The engine's x half-step takes this path before the
+    /// cached-table / accumulate dispatch.
+    #[inline]
+    pub fn mb_plan(&self, v: VarId) -> Option<&MbPlan> {
+        self.mb_plans.get(v).and_then(|p| p.as_deref())
+    }
+
+    /// `v`'s maintained total-coupling bound `Σ |β|` (see the field docs:
+    /// incrementally updated, re-anchored exactly on plan rebuilds).
+    #[inline]
+    pub fn coupling_l1(&self, v: VarId) -> f64 {
+        self.coupling_l1[v]
+    }
+
+    /// Per-site x half-step weight for sweep chunk balancing: `1 + deg`
+    /// for exact sites, `1 + min(deg, batch)` for planned sites (the
+    /// minibatch path's cost no longer scales with degree).
+    #[inline]
+    pub fn x_visit_weight(&self, v: VarId) -> u64 {
+        let deg = self.degree(v) as u64;
+        match self.mb_plan(v) {
+            Some(p) => 1 + deg.min(p.batch()),
+            None => 1 + deg,
+        }
+    }
+
+    /// Rebuild `v`'s subsampling plan from the live CSR view (no-op
+    /// without a policy). Called wherever `rebuild_x_table` is: the two
+    /// caches have identical invalidation points.
+    fn rebuild_mb_plan(&mut self, v: VarId) {
+        let Some(policy) = self.mb else { return };
+        if let Some(old) = self.mb_plans[v].take() {
+            self.mb_saved -= old.saved;
+        }
+        let deg = self.degree(v);
+        if deg <= policy.degree_threshold {
+            return;
+        }
+        // exact entries from the live view (base then overlay), skipping
+        // zero couplings — they can never change the conditional
+        let (slots, betas, overlay) = self.csr.view(v);
+        let mut entry_slot = Vec::with_capacity(deg);
+        let mut entry_beta = Vec::with_capacity(deg);
+        for (&s, &b) in slots.iter().zip(betas).chain(
+            overlay.iter().map(|(s, b)| (s, b)),
+        ) {
+            if b != 0.0 {
+                entry_slot.push(s);
+                entry_beta.push(b);
+            }
+        }
+        let l1: f64 = entry_beta.iter().map(|b| b.abs()).sum();
+        if l1 <= 0.0 {
+            return; // all-zero couplings: the exact path is free anyway
+        }
+        // re-anchor the incremental counter, then size λ from it
+        self.coupling_l1[v] = l1;
+        let lambda = (policy.lambda_scale * l1 * l1).max(policy.lambda_min);
+        debug_assert!(lambda > 0.0, "lambda_min must keep λ positive");
+        let rate = lambda + l1;
+        let kappa = lambda / rate;
+        let c = (l1 / lambda).ln_1p();
+        // Vose alias table over |β|
+        let ne = entry_beta.len();
+        let mut prob = vec![0.0f64; ne];
+        let mut alias = vec![0u32; ne];
+        let scale = ne as f64 / l1;
+        let mut scaled: Vec<f64> = entry_beta.iter().map(|b| b.abs() * scale).collect();
+        let mut small: Vec<usize> = Vec::new();
+        let mut large: Vec<usize> = Vec::new();
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        while !small.is_empty() && !large.is_empty() {
+            let s = small.pop().unwrap();
+            let l = *large.last().unwrap();
+            prob[s] = scaled[s];
+            alias[s] = l as u32;
+            scaled[l] = (scaled[l] + scaled[s]) - 1.0;
+            if scaled[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        for &i in small.iter().chain(large.iter()) {
+            prob[i] = 1.0; // roundoff leftovers: certain acceptance
+            alias[i] = i as u32;
+        }
+        let batch = rate.ceil() as u64;
+        let saved = (deg as u64).saturating_sub(batch);
+        self.mb_saved += saved;
+        self.mb_plans[v] = Some(Box::new(MbPlan {
+            prob,
+            alias,
+            slot: entry_slot,
+            neg: entry_beta.iter().map(|&b| b < 0.0).collect(),
+            l1,
+            rate,
+            kappa,
+            c,
+            batch,
+            saved,
+        }));
     }
 
     /// The live dual entry in `slot`, or `None` for dead/unknown slots.
@@ -277,6 +575,7 @@ impl DualModel {
         self.csr.rebuild(&self.incidence);
         for v in dirty {
             self.rebuild_x_table(v as usize);
+            self.rebuild_mb_plan(v as usize);
         }
     }
 
@@ -318,6 +617,8 @@ impl DualModel {
         });
         self.base_field[f.v1] += alpha1;
         self.base_field[f.v2] += alpha2;
+        self.coupling_l1[f.v1] += beta1.abs();
+        self.coupling_l1[f.v2] += beta2.abs();
         self.incidence[f.v1].push((slot as u32, beta1));
         self.incidence[f.v2].push((slot as u32, beta2));
         self.csr.insert(f.v1, slot as u32, beta1);
@@ -345,6 +646,8 @@ impl DualModel {
             } else {
                 self.rebuild_x_table(f.v1);
                 self.rebuild_x_table(f.v2);
+                self.rebuild_mb_plan(f.v1);
+                self.rebuild_mb_plan(f.v2);
             }
         }
     }
@@ -354,6 +657,8 @@ impl DualModel {
         let e = self.entries.get_mut(slot)?.take()?;
         self.base_field[e.v1] -= e.alpha1;
         self.base_field[e.v2] -= e.alpha2;
+        self.coupling_l1[e.v1] = (self.coupling_l1[e.v1] - e.beta1.abs()).max(0.0);
+        self.coupling_l1[e.v2] = (self.coupling_l1[e.v2] - e.beta2.abs()).max(0.0);
         for v in [e.v1, e.v2] {
             let list = &mut self.incidence[v];
             let pos = list
@@ -378,6 +683,8 @@ impl DualModel {
         } else {
             self.rebuild_x_table(e.v1);
             self.rebuild_x_table(e.v2);
+            self.rebuild_mb_plan(e.v1);
+            self.rebuild_mb_plan(e.v2);
         }
         Some(e)
     }
@@ -394,6 +701,10 @@ impl DualModel {
         self.incidence.push(Vec::new());
         self.csr.add_var();
         self.x_tables.add_var();
+        self.coupling_l1.push(0.0);
+        if self.mb.is_some() {
+            self.mb_plans.push(None); // degree 0: below any threshold
+        }
         let v = self.base_field.len() - 1;
         self.rebuild_x_table(v);
         v
@@ -801,6 +1112,148 @@ mod tests {
         m.compact_incidence();
         assert!(m.x_table(0).is_some());
         assert_eq!(m.x_table(0).unwrap().0.len(), 1 << 6);
+    }
+
+    /// 9-spoke hub (var 0) with mixed-sign couplings for the plan tests.
+    fn hub_graph() -> FactorGraph {
+        let mut g = FactorGraph::new(10);
+        for leaf in 1..10 {
+            let beta = if leaf % 2 == 0 { 0.3 } else { -0.4 } * (1.0 + leaf as f64 / 10.0);
+            g.add_factor(PairFactor::ising(0, leaf, beta));
+        }
+        g
+    }
+
+    fn test_policy() -> MinibatchPolicy {
+        MinibatchPolicy {
+            degree_threshold: 4,
+            lambda_scale: 0.25,
+            lambda_min: 1.0,
+            theta_stride: 2,
+        }
+    }
+
+    #[test]
+    fn mb_plan_built_only_above_threshold() {
+        let mut m = DualModel::from_graph(&hub_graph());
+        assert!(m.mb_plan(0).is_none(), "no plan before a policy is set");
+        m.set_minibatch(Some(test_policy()));
+        let plan = m.mb_plan(0).expect("hub degree 9 > threshold 4");
+        assert_eq!(plan.len(), 9);
+        assert!(!plan.is_empty());
+        for leaf in 1..10 {
+            assert!(m.mb_plan(leaf).is_none(), "leaf degree 1 stays exact");
+        }
+        m.set_minibatch(None);
+        assert!(m.mb_plan(0).is_none(), "clearing the policy drops plans");
+        assert_eq!(m.minibatch_policy(), None);
+    }
+
+    #[test]
+    fn mb_plan_constants_are_mutually_consistent() {
+        let mut m = DualModel::from_graph(&hub_graph());
+        let want_l1: f64 = m.incidence(0).iter().map(|&(_, b)| b.abs()).sum();
+        m.set_minibatch(Some(test_policy()));
+        let p = m.mb_plan(0).unwrap();
+        assert!((p.l1() - want_l1).abs() < 1e-12);
+        let lambda = (0.25 * want_l1 * want_l1).max(1.0);
+        assert!((p.rate() - (lambda + want_l1)).abs() < 1e-12);
+        assert!((p.kappa() - lambda / (lambda + want_l1)).abs() < 1e-12);
+        assert!((p.c() - (want_l1 / lambda).ln_1p()).abs() < 1e-12);
+        assert_eq!(p.batch(), p.rate().ceil() as u64);
+        // maintained bound was re-anchored to the exact sum
+        assert!((m.coupling_l1(0) - want_l1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mb_alias_table_tracks_coupling_weights() {
+        use crate::rng::Pcg64;
+        let mut m = DualModel::from_graph(&hub_graph());
+        m.set_minibatch(Some(test_policy()));
+        let p = m.mb_plan(0).unwrap();
+        let view: Vec<(u32, f64)> = m.incidence_csr_logical(0);
+        let mut want: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+        for &(s, b) in &view {
+            *want.entry(s).or_insert(0.0) += b.abs() / p.l1();
+        }
+        let mut rng = Pcg64::seed(77);
+        let n = 200_000;
+        let mut got: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+        for _ in 0..n {
+            let (slot, neg) = p.pick(&mut rng);
+            *got.entry(slot).or_insert(0.0) += 1.0 / n as f64;
+            // sign metadata matches the model's coupling
+            let beta = view.iter().find(|&&(s, _)| s == slot).unwrap().1;
+            assert_eq!(neg, beta < 0.0, "slot {slot}");
+        }
+        for (slot, w) in want {
+            let f = got.get(&slot).copied().unwrap_or(0.0);
+            assert!((f - w).abs() < 0.01, "slot {slot}: freq {f} vs weight {w}");
+        }
+    }
+
+    #[test]
+    fn mb_plan_follows_churn() {
+        let mut g = hub_graph();
+        let mut m = DualModel::from_graph(&g);
+        m.set_minibatch(Some(test_policy()));
+        assert!(m.mb_plan(0).is_some());
+        assert_eq!(
+            m.mb_saved,
+            m.mb_plan(0).unwrap().saved,
+            "one planned site: the counter is exactly its contribution"
+        );
+        // remove spokes until the hub falls to the threshold
+        let ids: Vec<_> = g.factors().map(|(id, _)| id).collect();
+        for &id in &ids[..5] {
+            g.remove_factor(id);
+            m.remove(id);
+        }
+        assert_eq!(m.degree(0), 4);
+        assert!(m.mb_plan(0).is_none(), "at the threshold the site is exact");
+        assert_eq!(m.mb_saved, 0);
+        // and re-adding pushes it back over
+        m.insert_at(ids[0], &PairFactor::ising(0, 1, 0.5));
+        assert!(m.mb_plan(0).is_some());
+        // maintained bound stayed in sync with the live incidence
+        let want: f64 = m.incidence(0).iter().map(|&(_, b)| b.abs()).sum();
+        assert!((m.coupling_l1(0) - want).abs() < 1e-9);
+        // compaction preserves the plan
+        m.compact_incidence();
+        assert!(m.mb_plan(0).is_some());
+    }
+
+    #[test]
+    fn minibatch_sweep_cost_discounts_hubs_and_stride() {
+        // a wide, weakly-coupled hub: L stays small, so λ bottoms out at
+        // lambda_min and the expected batch is far below the degree
+        let mut g = FactorGraph::new(41);
+        for leaf in 1..41 {
+            g.add_factor(PairFactor::ising(0, leaf, 0.05));
+        }
+        let mut m = DualModel::from_graph(&g);
+        let full = m.sweep_cost();
+        m.set_minibatch(Some(MinibatchPolicy {
+            degree_threshold: 8,
+            lambda_scale: 0.01,
+            lambda_min: 0.5,
+            theta_stride: 2,
+        }));
+        let p = m.mb_plan(0).expect("degree 40 hub is planned");
+        assert!(
+            p.batch() < m.degree(0) as u64,
+            "batch {} must undercut degree {}",
+            p.batch(),
+            m.degree(0)
+        );
+        assert!(m.mb_saved > 0);
+        // x weight for the hub is capped at its batch, leaves unchanged
+        assert_eq!(m.x_visit_weight(0), 1 + p.batch());
+        assert_eq!(m.x_visit_weight(1), 1 + m.degree(1) as u64);
+        // repriced cost undercuts the full cost even with stride 1
+        // (hub discount alone), and more with the θ stride on top
+        assert!(m.minibatch_sweep_cost(1) < full);
+        assert!(m.minibatch_sweep_cost(2) < m.minibatch_sweep_cost(1));
     }
 
     #[test]

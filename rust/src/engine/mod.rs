@@ -51,9 +51,18 @@
 //! Churn keeps working mid-run: [`LanePdSampler::add_factor`] /
 //! [`LanePdSampler::remove_factor`] apply one O(degree) update to the
 //! shared [`crate::duality::DualModel`] for all lanes at once.
+//!
+//! Heavy-tailed graphs get a second axis: [`SweepPolicy::Minibatch`]
+//! switches sites above a degree threshold to Poisson-subsampled
+//! MIN-Gibbs-corrected updates over per-site alias plans
+//! ([`crate::duality::MbPlan`]), so hubs pay O(batch) instead of
+//! O(degree) per sweep, and refreshes only `1/stride` of the θ slots per
+//! sweep. The corrected chain is a different trajectory than the exact
+//! path (same stationary law — gated by `tests/statistical_validation.rs`)
+//! but remains kernel- and pool-invariant for a fixed policy.
 
 pub mod kernels;
 mod sampler;
 
 pub use kernels::KernelKind;
-pub use sampler::{EngineConfig, LanePdSampler};
+pub use sampler::{EngineConfig, LanePdSampler, SweepPolicy};

@@ -44,24 +44,94 @@
 //!
 //! Unused high lanes of the last word are kept zero (`lanes % 64` tail).
 
+use std::fmt;
 use std::sync::Arc;
 
 use super::kernels::{KernelKind, LaneKernel, ScalarKernel, SweepBuf, TiledKernel};
-use crate::duality::DualModel;
+use crate::duality::{DualModel, MbPlan, MinibatchPolicy};
 use crate::graph::{FactorGraph, FactorId, PairFactor};
-use crate::rng::Pcg64;
+use crate::rng::{Pcg64, RngCore};
 use crate::util::threadpool::balanced_ranges_aligned;
 use crate::util::ThreadPool;
 
 #[cfg(feature = "nightly-simd")]
 use super::kernels::SimdKernel;
 
+/// How the engine visits sites per sweep.
+///
+/// Unlike the kernel choice, this is *not* trajectory-preserving — the
+/// minibatch chain is a different (still exact-stationary) Markov chain.
+/// It IS invariant across kernels and pool sizes for a fixed policy: the
+/// subsampling draws come from the same per-`(sweep, site)` streams as
+/// the exact path, and the θ stride is a pure function of
+/// `(sweep, slot)`.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum SweepPolicy {
+    /// Every site update folds its full live incidence (the default).
+    #[default]
+    Exact,
+    /// Sites above the policy's degree threshold subsample factors with
+    /// the Poisson/MIN-Gibbs correction ([`MinibatchPolicy`]); the θ
+    /// half-step refreshes `1/stride` of the slots per sweep.
+    Minibatch(MinibatchPolicy),
+}
+
+impl SweepPolicy {
+    /// The minibatch knobs, if this policy subsamples.
+    #[inline]
+    pub fn minibatch(self) -> Option<MinibatchPolicy> {
+        match self {
+            Self::Exact => None,
+            Self::Minibatch(p) => Some(p),
+        }
+    }
+
+    /// Parse the wire form: `exact`, `minibatch`,
+    /// `minibatch:<degree_threshold>` or
+    /// `minibatch:<degree_threshold>:<theta_stride>` (λ knobs stay at
+    /// their defaults on the wire). Inverse of [`SweepPolicy`]'s
+    /// `Display` for those forms.
+    pub fn parse(tok: &str) -> Option<Self> {
+        if tok == "exact" {
+            return Some(Self::Exact);
+        }
+        let mut parts = tok.split(':');
+        if parts.next()? != "minibatch" {
+            return None;
+        }
+        let mut p = MinibatchPolicy::default();
+        if let Some(deg) = parts.next() {
+            p.degree_threshold = deg.parse().ok()?;
+            if let Some(stride) = parts.next() {
+                p.theta_stride = stride.parse::<usize>().ok().filter(|&s| s >= 1)?;
+                if parts.next().is_some() {
+                    return None;
+                }
+            }
+        }
+        Some(Self::Minibatch(p))
+    }
+}
+
+impl fmt::Display for SweepPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Exact => write!(f, "exact"),
+            Self::Minibatch(p) => {
+                write!(f, "minibatch:{}:{}", p.degree_threshold, p.theta_stride)
+            }
+        }
+    }
+}
+
 /// Construction-time knobs of a [`LanePdSampler`] (lane count, stream
-/// seed, and which [`LaneKernel`] implementation runs the sweep bodies).
+/// seed, which [`LaneKernel`] implementation runs the sweep bodies, and
+/// the sweep policy).
 ///
 /// The kernel choice is a pure performance knob — every kernel samples
 /// the same trajectory bit-for-bit — so configs differing only in
-/// `kernel` are interchangeable mid-experiment.
+/// `kernel` are interchangeable mid-experiment. The sweep policy is not:
+/// see [`SweepPolicy`].
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
     /// Number of chains (any positive count; 64 are packed per word).
@@ -70,6 +140,8 @@ pub struct EngineConfig {
     pub seed: u64,
     /// Sweep-kernel implementation (default: [`KernelKind::Tiled`]).
     pub kernel: KernelKind,
+    /// Site-visit policy (default: [`SweepPolicy::Exact`]).
+    pub sweep: SweepPolicy,
 }
 
 impl Default for EngineConfig {
@@ -78,6 +150,7 @@ impl Default for EngineConfig {
             lanes: 64,
             seed: 0,
             kernel: KernelKind::default(),
+            sweep: SweepPolicy::default(),
         }
     }
 }
@@ -141,8 +214,9 @@ impl LanePdSampler {
     }
 
     /// Wrap an existing dual model with explicit [`EngineConfig`] knobs.
-    pub fn from_model_config(model: DualModel, cfg: EngineConfig) -> Self {
+    pub fn from_model_config(mut model: DualModel, cfg: EngineConfig) -> Self {
         assert!(cfg.lanes >= 1, "at least one lane");
+        model.set_minibatch(cfg.sweep.minibatch());
         let words = cfg.lanes.div_ceil(64);
         let x = vec![0u64; model.num_vars() * words];
         let theta = vec![0u64; model.factor_slots() * words];
@@ -182,6 +256,22 @@ impl LanePdSampler {
         self.kernel
     }
 
+    /// The sweep policy the engine was configured with (the model owns
+    /// the minibatch plans, so this is read back from it).
+    pub fn sweep_policy(&self) -> SweepPolicy {
+        self.model
+            .minibatch_policy()
+            .map_or(SweepPolicy::Exact, SweepPolicy::Minibatch)
+    }
+
+    /// θ-slot refresh stride of the current policy (1 = every sweep).
+    #[inline]
+    fn theta_stride(&self) -> u64 {
+        self.model
+            .minibatch_policy()
+            .map_or(1, |p| p.theta_stride.max(1) as u64)
+    }
+
     /// The dualized model all lanes share.
     pub fn model(&self) -> &DualModel {
         &self.model
@@ -208,12 +298,17 @@ impl LanePdSampler {
     }
 
     /// Accounting hook for the multi-tenant scheduler: the cost of one
-    /// sweep of this engine in site-visits ([`DualModel::sweep_cost`]).
-    /// Tracks churn — inserting/removing factors changes the next sweep's
-    /// charge.
+    /// sweep of this engine in site-visits ([`DualModel::sweep_cost`],
+    /// or [`DualModel::minibatch_sweep_cost`] under a minibatch policy —
+    /// DRR fairness then reflects the cheaper hub visits and the strided
+    /// θ half-step). Tracks churn — inserting/removing factors changes
+    /// the next sweep's charge.
     #[inline]
     pub fn cost(&self) -> u64 {
-        self.model.sweep_cost()
+        match self.model.minibatch_policy() {
+            Some(p) => self.model.minibatch_sweep_cost(p.theta_stride.max(1)),
+            None => self.model.sweep_cost(),
+        }
     }
 
     /// Packed primal state, `x[v * words_per_site() + w]`.
@@ -279,7 +374,6 @@ impl LanePdSampler {
     /// Randomize one chain's primal state from the lane-indexed init
     /// stream (`split2(0, lane)`; sweeps use sweep indices ≥ 1).
     pub fn randomize_lane(&mut self, lane: usize) {
-        use crate::rng::RngCore;
         assert!(lane < self.lanes);
         let mut rng = self.base.split2(0, lane as u64);
         let (w, mask) = (lane / 64, 1u64 << (lane % 64));
@@ -381,6 +475,7 @@ impl LanePdSampler {
             }
         }
         let slots = self.model.factor_slots();
+        let (stride, phase) = self.theta_window();
         {
             let ctx = ThetaCtx {
                 model: &self.model,
@@ -391,6 +486,9 @@ impl LanePdSampler {
                 sweep: self.sweep_count,
             };
             for slot in 0..slots {
+                if slot % stride != phase {
+                    continue; // out-of-window slot: θ keeps its state
+                }
                 ctx.site::<K>(
                     slot,
                     &mut self.theta[slot * words..(slot + 1) * words],
@@ -398,6 +496,18 @@ impl LanePdSampler {
                 );
             }
         }
+    }
+
+    /// This sweep's θ refresh window: slot `s` is resampled iff
+    /// `s % stride == phase`. A pure function of `(sweep, slot)`, so the
+    /// trajectory stays pool- and kernel-invariant; skipped live slots
+    /// keep their state and consume no RNG (their streams are keyed per
+    /// sweep, not consumed incrementally), and skipped dead slots are
+    /// already zero because `remove_factor` zeroes the row eagerly.
+    #[inline]
+    fn theta_window(&self) -> (usize, usize) {
+        let stride = self.theta_stride();
+        (stride as usize, (self.sweep_count % stride) as usize)
     }
 
     /// Alignment unit of pooled chunk bounds, in sites: the smallest
@@ -424,17 +534,20 @@ impl LanePdSampler {
     }
 
     /// Rebuild the degree-aware chunk plan for a pool of `chunks` workers:
-    /// x chunks balance `1 + degree(v)` (one RNG stream + one incidence
-    /// traversal per variable), θ chunks weight live slots over dead ones
-    /// (a dead slot is a plain memset of its lane row). Bounds are rounded
-    /// to cache-line-aligned state rows ([`LanePdSampler::row_align`]).
+    /// x chunks balance [`DualModel::x_visit_weight`] (`1 + degree(v)`,
+    /// with minibatched hubs discounted to their expected batch size),
+    /// θ chunks weight live slots over dead ones (a dead slot is a plain
+    /// memset of its lane row; out-of-window slots under a θ stride are
+    /// skipped uniformly, so relative balance is unchanged). Bounds are
+    /// rounded to cache-line-aligned state rows
+    /// ([`LanePdSampler::row_align`]).
     fn rebuild_chunk_plan(&mut self, chunks: usize) {
         let n = self.model.num_vars();
         let mut prefix = Vec::with_capacity(n + 1);
         prefix.push(0u64);
         let mut acc = 0u64;
         for v in 0..n {
-            acc += 1 + self.model.degree(v) as u64;
+            acc += self.model.x_visit_weight(v);
             prefix.push(acc);
         }
         self.x_bounds = balanced_ranges_aligned(&prefix, chunks, self.row_align());
@@ -495,11 +608,15 @@ impl LanePdSampler {
                 base: &self.base,
                 sweep: self.sweep_count,
             };
+            let (stride, phase) = self.theta_window();
             let t_ptr = SendPtr(self.theta.as_mut_ptr());
             pool.scope_ranges(&self.theta_bounds, |_, start, end| {
                 let t_ptr = &t_ptr;
                 let mut buf = SweepBuf::new();
                 for slot in start..end {
+                    if slot % stride != phase {
+                        continue; // out-of-window slot: θ keeps its state
+                    }
                     // SAFETY: chunks own disjoint slot ranges.
                     let out = unsafe {
                         std::slice::from_raw_parts_mut(t_ptr.0.add(slot * words), words)
@@ -527,6 +644,9 @@ impl XCtx<'_> {
     fn site<K: LaneKernel>(&self, v: usize, out: &mut [u64], buf: &mut SweepBuf) {
         // even site codes are x-variables, odd are θ-slots
         let mut rng = self.base.split2(self.sweep, (v as u64) << 1);
+        if let Some(plan) = self.model.mb_plan(v) {
+            return self.site_minibatch::<K>(plan, v, out, buf, &mut rng);
+        }
         let (slots, betas, overlay) = self.model.incidence_csr(v);
         match self.model.x_table(v) {
             Some((mult, thresh)) => {
@@ -569,6 +689,56 @@ impl XCtx<'_> {
                     *out_word = K::draw_logodds_word(&mut rng, &buf.acc, k, &mut buf.draw);
                 }
             }
+        }
+    }
+
+    /// Minibatched resample of `x_v`: the MIN-Gibbs correction over a
+    /// Poisson number of alias-sampled factor events instead of a full
+    /// incidence fold. Exact stationarity comes from the Poisson
+    /// auxiliary augmentation: per lane, `N ~ Poisson(λ + L)` events each
+    /// pick entry `j ∝ |β_j|` and are thinned with acceptance
+    /// `κ + (1 − κ)·t_j`, where `t_j ∈ {0, 1}` is the entry's energy bit
+    /// under the *pre-update* value of `x_v` (`t_j = θ_j ∧ x_v` for
+    /// `β_j > 0`, complemented for `β_j < 0`). Each kept event with
+    /// `θ_j = 1` shifts the log-odds by `sign(β_j)·c`,
+    /// `c = ln(1 + L/λ)`, and the final draw reuses the kernel's
+    /// log-odds word draw — so the correction composes with every
+    /// kernel unchanged.
+    ///
+    /// The RNG consumption (events, thinning uniforms, word draw) is
+    /// kernel-independent, preserving cross-kernel bit-identity, and the
+    /// per-`(sweep, site)` stream keying preserves pool-invariance.
+    fn site_minibatch<K: LaneKernel>(
+        &self,
+        plan: &MbPlan,
+        v: usize,
+        out: &mut [u64],
+        buf: &mut SweepBuf,
+        rng: &mut Pcg64,
+    ) {
+        let field = self.model.base_field(v);
+        let (rate, kappa, c) = (plan.rate(), plan.kappa(), plan.c());
+        for (w, out_word) in out.iter_mut().enumerate() {
+            let k = lanes_in_word(self.lanes, w);
+            let old = *out_word; // pre-update x_v bits of this word
+            buf.acc.0.fill(field);
+            for l in 0..k {
+                let b_old = (old >> l) & 1;
+                let events = rng.poisson(rate);
+                let mut net = 0i64;
+                for _ in 0..events {
+                    let (slot, neg) = plan.pick(rng);
+                    let tb = (self.theta[slot as usize * self.words + w] >> l) & 1;
+                    let t = if neg { 1 - (tb & b_old) } else { tb & b_old };
+                    // the uniform is consumed only when the deterministic
+                    // bit test fails — t = 1 always keeps the event
+                    if (t == 1 || rng.next_f64() < kappa) && tb == 1 {
+                        net += if neg { -1 } else { 1 };
+                    }
+                }
+                buf.acc.0[l] += c * net as f64;
+            }
+            *out_word = K::draw_logodds_word(rng, &buf.acc, k, &mut buf.draw);
         }
     }
 }
@@ -803,14 +973,203 @@ mod tests {
                 lanes: 3,
                 seed: 9,
                 kernel: KernelKind::Scalar,
+                ..EngineConfig::default()
             },
         );
         assert_eq!(eng.kernel(), KernelKind::Scalar);
         assert_eq!(eng.lanes(), 3);
+        assert_eq!(eng.sweep_policy(), SweepPolicy::Exact);
         let eng = eng.with_kernel(KernelKind::Tiled);
         assert_eq!(eng.kernel(), KernelKind::Tiled);
         // default config: tiled
         assert_eq!(LanePdSampler::new(&g, 2, 0).kernel(), KernelKind::Tiled);
+    }
+
+    /// Hub-heavy star used by the minibatch tests: degree 9 exceeds both
+    /// `X_TABLE_MAX_DEG` and the test policy's threshold.
+    fn mb_star() -> FactorGraph {
+        let mut g = FactorGraph::new(10);
+        g.set_unary(0, 0.3);
+        for leaf in 1..10 {
+            let beta = if leaf % 2 == 0 { -0.35 } else { 0.3 };
+            g.add_factor(PairFactor::ising(0, leaf, beta));
+        }
+        g
+    }
+
+    /// Aggressive subsampling so the correction (not the λ floor) does
+    /// the work: small λ makes κ small, maximizing thinning pressure.
+    fn mb_cfg(seed: u64, theta_stride: usize) -> EngineConfig {
+        EngineConfig {
+            lanes: 64,
+            seed,
+            kernel: KernelKind::default(),
+            sweep: SweepPolicy::Minibatch(MinibatchPolicy {
+                degree_threshold: 4,
+                lambda_scale: 0.25,
+                lambda_min: 1.0,
+                theta_stride,
+            }),
+        }
+    }
+
+    #[test]
+    fn minibatch_policy_builds_plans_and_reprices_cost() {
+        let g = mb_star();
+        let eng = LanePdSampler::with_config(&g, mb_cfg(13, 2));
+        assert_eq!(eng.sweep_policy(), SweepPolicy::Minibatch(MinibatchPolicy {
+            degree_threshold: 4,
+            lambda_scale: 0.25,
+            lambda_min: 1.0,
+            theta_stride: 2,
+        }));
+        assert!(eng.model().mb_plan(0).is_some(), "hub must be planned");
+        assert!(eng.model().mb_plan(1).is_none(), "leaves stay exact");
+        let exact = LanePdSampler::new(&g, 64, 13);
+        assert_eq!(exact.sweep_policy(), SweepPolicy::Exact);
+        assert!(
+            eng.cost() < exact.cost(),
+            "minibatch cost {} must undercut exact cost {}",
+            eng.cost(),
+            exact.cost()
+        );
+    }
+
+    #[test]
+    fn minibatch_matches_exact_enumeration() {
+        // the corrected chain is a *different* trajectory but the same
+        // stationary law — compare long-run marginals to the oracle
+        let g = mb_star();
+        let want = exact::enumerate(&g).marginals;
+        for stride in [1usize, 2] {
+            let mut eng = LanePdSampler::with_config(&g, mb_cfg(17, stride));
+            // stride-s θ refreshes need ~s× the sweeps to mix
+            let (burn, sweeps) = (800 * stride, 4000 * stride);
+            let got = lane_marginals(&mut eng, burn, sweeps);
+            for v in 0..10 {
+                assert!(
+                    (got[v] - want[v]).abs() < 0.02,
+                    "stride={stride} v={v}: {} vs exact {}",
+                    got[v],
+                    want[v]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn minibatch_trajectory_is_kernel_and_pool_invariant() {
+        let g = mb_star();
+        let mut reference: Option<(Vec<u64>, Vec<u64>)> = None;
+        for &kernel in KernelKind::all() {
+            for pool_size in [0usize, 3] {
+                let cfg = EngineConfig {
+                    kernel,
+                    ..mb_cfg(23, 2)
+                };
+                let mut eng = LanePdSampler::with_config(&g, cfg);
+                if pool_size > 0 {
+                    eng = eng.with_pool(Arc::new(ThreadPool::new(pool_size)));
+                }
+                for _ in 0..40 {
+                    eng.sweep();
+                }
+                let state = (eng.state_words().to_vec(), eng.theta_words().to_vec());
+                match &reference {
+                    None => reference = Some(state),
+                    Some(want) => assert_eq!(
+                        &state,
+                        want,
+                        "kernel {} pool {pool_size} diverged",
+                        kernel.name()
+                    ),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn theta_stride_skips_out_of_window_slots() {
+        // stride 3: a slot's θ word may only change on sweeps where
+        // sweep % 3 == slot % 3
+        let g = mb_star();
+        let mut eng = LanePdSampler::with_config(&g, mb_cfg(29, 3));
+        for _ in 0..5 {
+            eng.sweep(); // move off the all-zeros state
+        }
+        let slots = eng.model().factor_slots();
+        for _ in 0..12 {
+            let before = eng.theta_words().to_vec();
+            eng.sweep();
+            let phase = (eng.sweeps_done() % 3) as usize;
+            let words = eng.words_per_site();
+            for slot in 0..slots {
+                if slot % 3 != phase {
+                    assert_eq!(
+                        &eng.theta_words()[slot * words..(slot + 1) * words],
+                        &before[slot * words..(slot + 1) * words],
+                        "out-of-window slot {slot} changed on sweep {}",
+                        eng.sweeps_done()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn minibatch_tail_lanes_stay_zero() {
+        let g = mb_star();
+        let cfg = EngineConfig {
+            lanes: 5,
+            ..mb_cfg(31, 2)
+        };
+        for &kernel in KernelKind::all() {
+            let mut eng =
+                LanePdSampler::with_config(&g, EngineConfig { kernel, ..cfg });
+            for _ in 0..50 {
+                eng.sweep();
+            }
+            for &w in eng.state_words().iter().chain(eng.theta_words()) {
+                assert_eq!(w & !lane_mask(5), 0, "ghost lanes by {}", kernel.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_policy_wire_forms_round_trip() {
+        let cases = [
+            ("exact", SweepPolicy::Exact),
+            (
+                "minibatch",
+                SweepPolicy::Minibatch(MinibatchPolicy::default()),
+            ),
+            (
+                "minibatch:128",
+                SweepPolicy::Minibatch(MinibatchPolicy {
+                    degree_threshold: 128,
+                    ..MinibatchPolicy::default()
+                }),
+            ),
+            (
+                "minibatch:32:4",
+                SweepPolicy::Minibatch(MinibatchPolicy {
+                    degree_threshold: 32,
+                    theta_stride: 4,
+                    ..MinibatchPolicy::default()
+                }),
+            ),
+        ];
+        for (tok, want) in cases {
+            assert_eq!(SweepPolicy::parse(tok), Some(want), "parse {tok:?}");
+        }
+        // display round-trips through parse for every policy form
+        for (_, p) in cases {
+            assert_eq!(SweepPolicy::parse(&p.to_string()), Some(p));
+        }
+        for bad in ["", "mini", "minibatch:", "minibatch:x", "minibatch:8:0",
+                    "minibatch:8:2:9", "exact:1"] {
+            assert_eq!(SweepPolicy::parse(bad), None, "must reject {bad:?}");
+        }
     }
 
     use crate::graph::FactorGraph;

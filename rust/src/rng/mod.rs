@@ -91,6 +91,37 @@ pub trait RngCore {
             }
         }
     }
+
+    /// Poisson draw with the given mean (`mean ≥ 0`).
+    ///
+    /// Chunked Knuth multiplicative method: means above `POISSON_CHUNK` are
+    /// split into independent Poisson draws of at most `POISSON_CHUNK` each
+    /// (Poisson is additive), keeping `e^{-chunk}` well above f64 underflow.
+    /// O(mean) uniforms per draw — exactly what the minibatch sweep path
+    /// wants, since its means are the (small) per-site auxiliary rates.
+    fn poisson(&mut self, mean: f64) -> u64 {
+        /// Largest per-chunk mean; `e^{-500} ≈ 7e-218` is comfortably normal.
+        const POISSON_CHUNK: f64 = 500.0;
+        debug_assert!(mean >= 0.0 && mean.is_finite());
+        let mut remaining = mean;
+        let mut n = 0u64;
+        loop {
+            let chunk = remaining.min(POISSON_CHUNK);
+            let limit = (-chunk).exp();
+            let mut p = 1.0;
+            loop {
+                p *= self.next_f64();
+                if p < limit {
+                    break;
+                }
+                n += 1;
+            }
+            remaining -= chunk;
+            if remaining <= 0.0 {
+                return n;
+            }
+        }
+    }
 }
 
 /// Logistic sigmoid; numerically stable on both tails.
@@ -247,6 +278,51 @@ mod tests {
         let var = s2 / n as f64 - mean * mean;
         assert!(mean.abs() < 0.02, "mean={mean}");
         assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn poisson_moments_small_mean() {
+        let mut rng = Pcg64::seed(21);
+        for &mean in &[0.5, 4.0, 12.0] {
+            let n = 60_000;
+            let (mut s, mut s2) = (0.0, 0.0);
+            for _ in 0..n {
+                let k = rng.poisson(mean) as f64;
+                s += k;
+                s2 += k * k;
+            }
+            let m = s / n as f64;
+            let var = s2 / n as f64 - m * m;
+            // mean and variance of Poisson(mean) are both `mean`
+            assert!((m - mean).abs() < 0.15 * mean.max(0.5), "mean {m} vs {mean}");
+            assert!((var - mean).abs() < 0.15 * mean.max(0.5), "var {var} vs {mean}");
+        }
+    }
+
+    #[test]
+    fn poisson_chunked_large_mean() {
+        // means above the chunk size exercise the additive split
+        let mut rng = Pcg64::seed(22);
+        let mean = 1300.5;
+        let n = 4_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let k = rng.poisson(mean) as f64;
+            s += k;
+            s2 += k * k;
+        }
+        let m = s / n as f64;
+        let var = s2 / n as f64 - m * m;
+        assert!((m - mean).abs() < 3.0, "mean {m} vs {mean}");
+        assert!((var / mean - 1.0).abs() < 0.12, "var {var} vs {mean}");
+    }
+
+    #[test]
+    fn poisson_zero_mean_is_zero() {
+        let mut rng = Pcg64::seed(23);
+        for _ in 0..100 {
+            assert_eq!(rng.poisson(0.0), 0);
+        }
     }
 
     #[test]

@@ -239,7 +239,13 @@ pub fn balanced_ranges(prefix: &[u64], chunks: usize) -> Vec<usize> {
 /// `align = 1` is plain weighted chunking. Rounding and end-clamping can
 /// still make an interior chunk empty (bounds are kept non-decreasing,
 /// never reordered) — [`ThreadPool::scope_ranges`] handles empty chunks
-/// by design.
+/// by design. When nearest rounding would pull a *progressing* bound back
+/// to its predecessor, the bound rounds up instead: with a hub site
+/// holding most of the mass at the front of the range, a stalled bound
+/// keeps every later equal-share target below the hub weight and all
+/// interior bounds collapse to 0 (one worker owning the whole model).
+/// Rounding up can land an interior bound on `n` itself (off-grid); that
+/// seam coincides with the final bound, so no false sharing results.
 pub fn balanced_ranges_aligned(prefix: &[u64], chunks: usize, align: usize) -> Vec<usize> {
     let align = align.max(1);
     let n = prefix.len().saturating_sub(1);
@@ -254,9 +260,14 @@ pub fn balanced_ranges_aligned(prefix: &[u64], chunks: usize, align: usize) -> V
         // first index whose cumulative weight reaches the target, rounded
         // to the nearest grid point (monotonicity via the clamp below)
         let idx = prefix.partition_point(|&p| p < target).clamp(prev, n);
-        let idx = ((idx + align / 2) / align * align).clamp(prev, n);
-        bounds.push(idx);
-        prev = idx;
+        let mut aligned = ((idx + align / 2) / align * align).clamp(prev, n);
+        if aligned == prev && idx > prev {
+            // nearest rounding stalled a bound that had found progress —
+            // round up so a heavy hub can't absorb every later chunk
+            aligned = (idx.div_ceil(align) * align).clamp(prev, n);
+        }
+        bounds.push(aligned);
+        prev = aligned;
     }
     bounds.push(n);
     bounds
@@ -378,6 +389,66 @@ mod tests {
     }
 
     #[test]
+    fn balanced_ranges_heavy_tail_property() {
+        // satellite property test: one hub site holding > 90 % of the
+        // incidence mass (a power-law tenant's top hub). The hub's chunk is
+        // unsplittable — it owns whatever the hub weighs — but every OTHER
+        // chunk must stay within 2x the mean of the weight that is
+        // actually splittable (total minus the hub), for a spread of
+        // sizes, chunk counts, and alignments.
+        for &(n, hub_weight, chunks, align) in &[
+            (100usize, 10_000u64, 4usize, 1usize),
+            (100, 10_000, 8, 1),
+            (1000, 100_000, 8, 8),
+            (1000, 50_000, 16, 8),
+            (513, 30_000, 7, 64),
+            (64, 5_000, 4, 8),
+        ] {
+            // hub at index 0, unit-weight tail
+            let mut prefix = Vec::with_capacity(n + 1);
+            prefix.push(0u64);
+            for i in 0..n {
+                let w = if i == 0 { hub_weight } else { 1 };
+                prefix.push(prefix.last().unwrap() + w);
+            }
+            let total = *prefix.last().unwrap();
+            assert!(hub_weight as f64 > 0.9 * total as f64, "not hub-heavy");
+            let bounds = balanced_ranges_aligned(&prefix, chunks, align);
+            // well-formed
+            assert_eq!(bounds[0], 0);
+            assert_eq!(*bounds.last().unwrap(), n);
+            assert!(bounds.windows(2).all(|w| w[0] <= w[1]), "{bounds:?}");
+            // the hub is isolated: the chunk containing site 0 carries no
+            // more than the hub plus one alignment step of tail sites
+            let hub_end = bounds[1..].iter().copied().find(|&b| b > 0).unwrap_or(n);
+            let hub_chunk_weight = prefix[hub_end] - prefix[0];
+            assert!(
+                hub_chunk_weight <= hub_weight + align as u64,
+                "hub chunk dragged {hub_chunk_weight} > hub {hub_weight} + align \
+                 (n={n} chunks={chunks} align={align}: {bounds:?})"
+            );
+            // every splittable (non-hub) chunk stays <= 2x the mean of the
+            // splittable mass; alignment may add up to align/2 sites of
+            // unit weight per seam
+            let splittable = (total - hub_chunk_weight) as f64;
+            let tail_chunks = (bounds.len() - 1).saturating_sub(1).max(1);
+            let limit = 2.0 * splittable / tail_chunks as f64 + (align as f64) / 2.0;
+            for w in bounds.windows(2) {
+                let (s, e) = (w[0], w[1]);
+                if s == 0 && e == hub_end {
+                    continue; // the hub chunk, exempt where unsplittable
+                }
+                let weight = (prefix[e] - prefix[s]) as f64;
+                assert!(
+                    weight <= limit,
+                    "chunk {s}..{e} carries {weight} > limit {limit:.1} \
+                     (n={n} chunks={chunks} align={align}: {bounds:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn balanced_ranges_uniform_weights_match_even_split() {
         let prefix: Vec<u64> = (0..=100).collect();
         let bounds = balanced_ranges(&prefix, 4);
@@ -404,12 +475,13 @@ mod tests {
             balanced_ranges_aligned(&prefix, 4, 1),
             balanced_ranges(&prefix, 4)
         );
-        // the final bound is never rounded
+        // the final bound is never rounded; an interior bound may round up
+        // onto n itself (a seam shared with the final bound is harmless)
         let b = balanced_ranges_aligned(&prefix, 3, 64);
         assert_eq!(*b.last().unwrap(), 100);
         assert!(b.windows(2).all(|w| w[0] <= w[1]), "got {b:?}");
         assert!(
-            b[1..b.len() - 1].iter().all(|&x| x % 64 == 0),
+            b[1..b.len() - 1].iter().all(|&x| x % 64 == 0 || x == 100),
             "interior bounds off-grid: {b:?}"
         );
     }
@@ -418,11 +490,12 @@ mod tests {
     fn aligned_ranges_do_not_cascade_on_small_inputs() {
         // regression: down-only rounding turned n=20 / 4 chunks / align 8
         // into [0, 0, 8, 8, 20] (two empty chunks, one worker owning 12
-        // of 20 sites); nearest rounding spreads the grid points out
+        // of 20 sites); nearest rounding spreads the grid points out, and
+        // the stall-avoidance round-up puts the spare seam at the end
         let prefix: Vec<u64> = (0..=20).collect();
         assert_eq!(
             balanced_ranges_aligned(&prefix, 4, 8),
-            vec![0, 8, 16, 16, 20]
+            vec![0, 8, 16, 20, 20]
         );
         // a model smaller than one grid step degenerates to a single
         // chunk — acceptable (7 sites don't amortize 4 workers), but the

@@ -197,6 +197,7 @@ impl LanePath {
                 lanes,
                 seed,
                 kernel: KernelKind::default(),
+                ..EngineConfig::default()
             },
             None,
         )
@@ -362,7 +363,7 @@ impl CoordinatorPath {
                 TenantConfig {
                     chains,
                     seed,
-                    monitor_vars: Vec::new(),
+                    ..TenantConfig::default()
                 },
             )
             .expect("create validation tenant");

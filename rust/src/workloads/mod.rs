@@ -103,6 +103,56 @@ pub fn fully_connected_jittered(n: usize, beta: f64, jitter: f64, seed: u64) -> 
     g
 }
 
+/// Heavy-tailed power-law MRF: `edges` pair factors whose endpoints are
+/// drawn from a zipf(`gamma`) rank distribution (variable 0 is the most
+/// probable endpoint, so it becomes a massive hub), self-loops rejected
+/// by resampling. Couplings are degree-scaled in a second pass:
+/// `β_e = ±beta0 / max(deg(u), deg(v))` with a random sign, so every
+/// variable's total coupling strength `Σ_e |β_e|` stays bounded by
+/// `beta0` regardless of its degree. That bound is exactly the regime
+/// minibatched sweeps are built for: the per-site subsampling rate
+/// `λ + L` stays O(1) while hub degrees grow without limit — see
+/// [`crate::engine::SweepPolicy::Minibatch`] and
+/// `benches/throughput.rs --mode minibatch`.
+pub fn power_law_graph(n: usize, edges: usize, gamma: f64, beta0: f64, seed: u64) -> FactorGraph {
+    assert!(n >= 2, "need two variables for a pair factor");
+    let mut rng = Pcg64::seed(seed);
+    // cumulative zipf(γ) mass over ranks (variable i has rank i)
+    let mut cum = Vec::with_capacity(n);
+    let mut total = 0.0f64;
+    for i in 0..n {
+        total += ((i + 1) as f64).powf(-gamma);
+        cum.push(total);
+    }
+    let pick = |rng: &mut Pcg64| -> usize {
+        let u = rng.next_f64() * total;
+        cum.partition_point(|&c| c <= u).min(n - 1)
+    };
+    // pass 1: endpoints first, so pass 2 can see final degrees
+    let mut ends = Vec::with_capacity(edges);
+    let mut deg = vec![0u32; n];
+    for _ in 0..edges {
+        let v1 = pick(&mut rng);
+        let v2 = loop {
+            let v = pick(&mut rng);
+            if v != v1 {
+                break v;
+            }
+        };
+        deg[v1] += 1;
+        deg[v2] += 1;
+        ends.push((v1, v2));
+    }
+    // pass 2: degree-scaled mixed-sign couplings bound Σ|β| per site
+    let mut g = FactorGraph::new(n);
+    for (v1, v2) in ends {
+        let scale = deg[v1].max(deg[v2]) as f64;
+        let sign = if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+        g.add_factor(PairFactor::ising(v1, v2, sign * beta0 / scale));
+    }
+    g
+}
+
 /// A random chain/tree-structured MRF (exactly solvable; used to validate
 /// samplers and BP against enumeration on larger `n`).
 pub fn random_tree(n: usize, sigma: f64, seed: u64) -> FactorGraph {
@@ -167,6 +217,42 @@ mod tests {
         for (_, f) in g.factors() {
             let beta = f.table[0][0].ln();
             assert!(beta >= 0.012 * 0.8 - 1e-12 && beta <= 0.012 * 1.2 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn power_law_graph_is_heavy_tailed_with_bounded_coupling() {
+        let g = power_law_graph(2000, 8000, 1.8, 0.8, 5);
+        assert_eq!(g.num_vars(), 2000);
+        assert_eq!(g.num_factors(), 8000);
+        let mut deg = vec![0usize; 2000];
+        let mut l1 = vec![0.0f64; 2000];
+        let (mut pos, mut neg) = (0usize, 0usize);
+        for (_, f) in g.factors() {
+            assert_ne!(f.v1, f.v2, "self-loops must be rejected");
+            let beta = f.table[0][0].ln();
+            if beta > 0.0 {
+                pos += 1;
+            } else {
+                neg += 1;
+            }
+            deg[f.v1] += 1;
+            deg[f.v2] += 1;
+            l1[f.v1] += beta.abs();
+            l1[f.v2] += beta.abs();
+        }
+        // zipf head: variable 0 is a hub far beyond the rank-1000 tail
+        assert!(deg[0] > 1000, "hub degree {} not heavy-tailed", deg[0]);
+        assert!(deg[0] > 50 * deg[1000].max(1), "{} vs {}", deg[0], deg[1000]);
+        // degree scaling keeps every site's total coupling below beta0
+        for (v, &l) in l1.iter().enumerate() {
+            assert!(l <= 0.8 + 1e-9, "site {v}: Σ|β| = {l} exceeds β0");
+        }
+        assert!(pos > 0 && neg > 0, "signs must mix: {pos}+/{neg}-");
+        // deterministic by seed
+        let h = power_law_graph(2000, 8000, 1.8, 0.8, 5);
+        for ((_, fa), (_, fb)) in g.factors().zip(h.factors()) {
+            assert_eq!(fa, fb);
         }
     }
 

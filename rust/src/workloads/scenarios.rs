@@ -219,7 +219,39 @@ pub fn zoo() -> Vec<Scenario> {
         churn: down,
         tau: 16,
     });
+    // hub-heavy star (the power-law tenant in miniature): one degree-11
+    // hub with mixed-sign couplings plus a rim cycle edge. This is the
+    // scenario the minibatch lane paths register against — the hub sits
+    // far above any reasonable minibatch degree threshold, and the churn
+    // (remove a hub edge, re-add it with flipped sign, add a leaf-leaf
+    // edge) exercises plan invalidation under the same gates.
+    scenarios.push(Scenario {
+        name: "hub12-minibatch",
+        regime: Regime::Below,
+        graph: hub_star(),
+        churn: vec![
+            ChurnOp::RemoveLive { index: 0 },
+            ChurnOp::Add { v1: 0, v2: 1, beta: -0.18 },
+            ChurnOp::Add { v1: 1, v2: 3, beta: 0.10 },
+        ],
+        tau: 16,
+    });
     scenarios
+}
+
+/// The `hub12-minibatch` base model: an 11-leaf star with mixed-sign,
+/// varied-magnitude couplings (hub Σ|β| ≈ 1.6 — weak regime) and one rim
+/// edge closing an odd cycle through the hub.
+fn hub_star() -> FactorGraph {
+    let mut g = FactorGraph::new(12);
+    g.set_unary(0, 0.2);
+    for leaf in 1..12 {
+        let mag = 0.12 + 0.02 * (leaf % 4) as f64;
+        let beta = if leaf % 2 == 0 { -mag } else { mag };
+        g.add_factor(PairFactor::ising(0, leaf, beta));
+    }
+    g.add_factor(PairFactor::ising(1, 2, 0.15));
+    g
 }
 
 /// Look up one zoo scenario by name (panics on unknown names — the zoo
@@ -291,6 +323,29 @@ mod tests {
         assert!(DualModel::from_graph(&g).x_table(0).is_some());
         // the mid-chain removal in cross-up landed on edge 3–4
         assert_eq!(up.final_graph().num_factors(), 6 + 6);
+    }
+
+    #[test]
+    fn hub_scenario_is_hub_heavy_before_and_after_churn() {
+        let s = by_name("hub12-minibatch");
+        assert_eq!(s.graph.degree(0), 11, "base hub degree");
+        let g = s.final_graph();
+        assert_eq!(g.degree(0), 11, "churn re-adds the removed hub edge");
+        // base: 11 star edges + 1 rim; churn: −1 removal, +2 additions
+        assert_eq!(g.num_factors(), 13);
+        // mixed signs on the hub (the minibatch alias table must carry
+        // signed entries, not just magnitudes)
+        let (mut pos, mut neg) = (0, 0);
+        for (_, f) in g.factors() {
+            if f.v1 == 0 || f.v2 == 0 {
+                if f.table[0][0].ln() > 0.0 {
+                    pos += 1;
+                } else {
+                    neg += 1;
+                }
+            }
+        }
+        assert!(pos > 0 && neg > 0, "{pos}+/{neg}-");
     }
 
     #[test]

@@ -524,9 +524,11 @@ mod tests {
                         vars: v,
                         chains,
                         seed: s,
+                        sweep,
                     },
                 ) => {
                     assert_eq!((*tenant, *vars, 4, *seed), (t, v, chains, s));
+                    assert_eq!(sweep, Default::default(), "traces carry no policy");
                 }
                 (
                     TenantEvent::Apply { tenant, ops },

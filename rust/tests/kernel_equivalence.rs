@@ -50,6 +50,7 @@ fn assert_equivalent(
                     lanes,
                     seed: 0xA5A5,
                     kernel,
+                    ..EngineConfig::default()
                 },
             );
             if pool > 0 {

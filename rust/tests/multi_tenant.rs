@@ -12,7 +12,7 @@ fn tenant_config(seed: u64) -> TenantConfig {
     TenantConfig {
         chains: 8,
         seed,
-        monitor_vars: Vec::new(),
+        ..TenantConfig::default()
     }
 }
 

@@ -227,6 +227,76 @@ fn backpressure_rejects_with_explicit_overloaded_replies() {
 }
 
 #[test]
+fn dropped_tenants_queued_work_does_not_poison_a_recreated_id() {
+    // depth-ledger coverage: a tenant dropped while work is still queued
+    // must have every queued entry repaid when the shard dequeues it, so
+    // re-creating the same id cannot inherit phantom depth and be stuck
+    // behind `err overloaded` forever
+    let (mut coord, mut server) = spawn_edge(
+        NetConfig {
+            max_tenant_depth: 4,
+            batch: false,
+            ..Default::default()
+        },
+        1,
+        0,
+    );
+    let mut wire = Wire::connect(&server);
+    assert_eq!(wire.roundtrip("create 5 32 8 7"), "ok");
+    // pile admitted-but-unprocessed sweeps onto the tenant queue
+    let mut admitted = 0u64;
+    for _ in 0..16 {
+        if wire.roundtrip("sweep 5 20000") == "ok" {
+            admitted += 1;
+        }
+    }
+    assert!(admitted >= 1, "no sweep was ever admitted");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut retry = |wire: &mut Wire, req: &str, want_prefix: &str| loop {
+        let reply = wire.roundtrip(req);
+        if reply.starts_with(want_prefix) {
+            return;
+        }
+        assert!(
+            reply.starts_with("err overloaded "),
+            "{req:?}: non-overload failure: {reply}"
+        );
+        assert!(Instant::now() < deadline, "{req:?} never got through");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    // drop while the backlog is still draining, then re-create the same
+    // id with a different shape
+    retry(&mut wire, "drop 5", "ok dropped=true");
+    retry(&mut wire, "create 5 6 4 9", "ok");
+    // the recreated id must become servable — a leaked ledger entry from
+    // the dropped incarnation would trip admission on every retry
+    retry(&mut wire, "stats 5", "ok stats vars=6 ");
+    // and once the queue drains, the ledger reads zero: fully repaid
+    assert_eq!(coord.client().tenant_depth(5), 0, "depth ledger leaked");
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn create_with_minibatch_policy_surfaces_in_stats() {
+    let (mut coord, mut server) = spawn_edge(NetConfig::default(), 1, 0);
+    let mut wire = Wire::connect(&server);
+    assert_eq!(wire.roundtrip("create 11 32 4 9 minibatch:16:4"), "ok");
+    let stats = wire.roundtrip("stats 11");
+    assert!(stats.contains(" policy=minibatch:16:4"), "{stats}");
+    assert_eq!(wire.roundtrip("create 12 32 4 9"), "ok");
+    let stats = wire.roundtrip("stats 12");
+    assert!(stats.contains(" policy=exact"), "{stats}");
+    // a malformed policy is a spanned parse error, not a dead connection
+    let reply = wire.roundtrip("create 13 8 minibatch:zero");
+    assert!(reply.starts_with("err parse "), "{reply}");
+    assert!(reply.contains("sweep policy"), "{reply}");
+    assert_eq!(wire.roundtrip("drop 11"), "ok dropped=true");
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
 fn subscribe_streams_events_then_ok() {
     let (mut coord, mut server) = spawn_edge(NetConfig::default(), 1, 0);
     let mut wire = Wire::connect(&server);

@@ -21,7 +21,8 @@
 
 use std::sync::Arc;
 
-use pdgibbs::engine::{EngineConfig, KernelKind};
+use pdgibbs::duality::MinibatchPolicy;
+use pdgibbs::engine::{EngineConfig, KernelKind, SweepPolicy};
 use pdgibbs::samplers::{BlockedPd, ChromaticGibbs, PdSampler, SequentialGibbs, SwendsenWang};
 use pdgibbs::util::ThreadPool;
 use pdgibbs::validation::{
@@ -126,7 +127,7 @@ fn lane_engine_scalar_and_tiled_kernels_pass_gates_at_pool_0_and_4() {
             let pool = (pool_threads > 0).then(|| Arc::new(ThreadPool::new(pool_threads)));
             let mut p = LanePath::new(
                 s.graph.clone(),
-                EngineConfig { lanes: 64, seed: 0xA5, kernel },
+                EngineConfig { lanes: 64, seed: 0xA5, kernel, ..EngineConfig::default() },
                 pool,
             );
             check_static(&mut p, &s, 16_384);
@@ -159,7 +160,7 @@ fn lane_engine_passes_gates_on_dense_kn_without_coloring() {
             let pool = (pool_threads > 0).then(|| Arc::new(ThreadPool::new(pool_threads)));
             let mut p = LanePath::new(
                 s.graph.clone(),
-                EngineConfig { lanes: 64, seed: 0xA7, kernel },
+                EngineConfig { lanes: 64, seed: 0xA7, kernel, ..EngineConfig::default() },
                 pool,
             );
             assert!(
@@ -182,7 +183,7 @@ fn lane_engine_stays_exact_through_churn_across_the_table_cache_cap() {
         for kernel in [KernelKind::Tiled, KernelKind::Scalar] {
             let mut p = LanePath::new(
                 s.graph.clone(),
-                EngineConfig { lanes: 64, seed: 0xA8, kernel },
+                EngineConfig { lanes: 64, seed: 0xA8, kernel, ..EngineConfig::default() },
                 None,
             );
             assert!(
@@ -197,6 +198,66 @@ fn lane_engine_stays_exact_through_churn_across_the_table_cache_cap() {
                 "{name}: hub cache state after churn"
             );
         }
+    }
+}
+
+// -- minibatched sweeps: MIN-Gibbs subsampling under the same gates ---------
+
+/// An aggressive subsampling policy for the 12-var hub scenario: the λ
+/// floor keeps the acceptance correction (not excess auxiliary slack)
+/// carrying the exactness burden, and θ-stride 2 exercises the stale-θ
+/// half of the minibatch trade.
+fn hub_minibatch_policy() -> SweepPolicy {
+    SweepPolicy::Minibatch(MinibatchPolicy {
+        degree_threshold: 4,
+        lambda_scale: 0.25,
+        lambda_min: 1.0,
+        theta_stride: 2,
+    })
+}
+
+#[test]
+fn minibatch_lane_paths_pass_gates_across_kernels_and_pools() {
+    // the corrected subsampled chain must clear the same z/TV/chi-square
+    // gates as every exact path — per kernel, at pool sizes {0, 4}
+    let s = scenarios::by_name("hub12-minibatch");
+    for &kernel in KernelKind::all() {
+        for pool_threads in [0usize, 4] {
+            let pool = (pool_threads > 0).then(|| Arc::new(ThreadPool::new(pool_threads)));
+            let mut p = LanePath::new(
+                s.graph.clone(),
+                EngineConfig { lanes: 64, seed: 0xB1, kernel, sweep: hub_minibatch_policy() },
+                pool,
+            );
+            let m = p.engine().model();
+            assert!(m.mb_plan(0).is_some(), "the hub must sweep minibatched");
+            assert!(m.mb_plan(1).is_none(), "low-degree leaves stay exact");
+            let cfg = GateConfig::with_budget(16_384, s.tau);
+            let name = format!("hub12-minibatch/{}-pool{pool_threads}", kernel.name());
+            let r = validate(&mut p, &s.graph, &name, &cfg);
+            println!("{}", r.summary());
+            r.assert_passed();
+        }
+    }
+}
+
+#[test]
+fn minibatch_lane_paths_stay_exact_through_hub_churn() {
+    // churn removes a hub edge, re-adds it sign-flipped, and couples two
+    // leaves: the alias plan must rebuild and the rebuilt chain must
+    // still pass the gates against the final graph
+    let s = scenarios::by_name("hub12-minibatch");
+    for kernel in [KernelKind::Scalar, KernelKind::Tiled] {
+        let mut p = LanePath::new(
+            s.graph.clone(),
+            EngineConfig { lanes: 64, seed: 0xB2, kernel, sweep: hub_minibatch_policy() },
+            None,
+        );
+        check_churn(&mut p, &s, 16_384);
+        assert!(
+            p.engine().model().mb_plan(0).is_some(),
+            "hub plan must survive churn (degree is unchanged)"
+        );
     }
 }
 
