@@ -51,6 +51,17 @@
 //! `--mb-vars`, `--mb-edges`, `--mb-threshold`, `--mb-stride`,
 //! `--kernel` (single kernel, default tiled).
 //!
+//! `--mode blocked` measures adaptive tree-blocking on an above-critical
+//! Ising grid with mid-run churn (default 16×16 at β = 0.5 > β_c): the
+//! same engine, seed, kernel, and churn schedule run under the exact
+//! flat policy and under `SweepPolicy::Blocked`, and the tracked
+//! `speedup` metric is the ratio of **ESS/s** (effective samples of the
+//! mean-magnetization trace per wall second) — mixing-per-second, the
+//! only honest unit for a policy that deliberately spends more per
+//! sweep. Acceptance (ISSUE 8): ≥ 1.5× ESS/s vs flat PD. Flags:
+//! `--blk-rows`, `--blk-cols`, `--blk-beta`, `--blk-cap`, `--blk-epoch`,
+//! `--blk-sweeps`, `--kernel` (single kernel, default tiled).
+//!
 //! `--mode validate` runs the statistical exactness gates (ISSUE 5) on a
 //! fixed subset of the validation matrix — ground-truth forward draws,
 //! scalar PD, lane engine under both stable kernels (incl. the dense
@@ -66,15 +77,18 @@
 //! acceptance record), full mode writes `BENCH_throughput_full.json`,
 //! server and server-net modes write `BENCH_server.json` (tagged with
 //! their mode), validate mode writes `BENCH_validate.json`, minibatch
-//! mode writes `BENCH_throughput_minibatch.json`.
+//! mode writes `BENCH_throughput_minibatch.json`, blocked mode writes
+//! `BENCH_throughput_blocked.json`.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use pdgibbs::bench::{time_fn, Record, Report};
 use pdgibbs::coordinator::{Coordinator, CoordinatorConfig, NetConfig, NetServer, TenantConfig};
-use pdgibbs::duality::{DualModel, MinibatchPolicy};
+use pdgibbs::diagnostics::effective_sample_size;
+use pdgibbs::duality::{BlockPolicy, DualModel, MinibatchPolicy};
 use pdgibbs::engine::{EngineConfig, KernelKind, LanePdSampler, SweepPolicy};
+use pdgibbs::graph::PairFactor;
 use pdgibbs::rng::{Pcg64, RngCore};
 use pdgibbs::runtime::Runtime;
 use pdgibbs::samplers::{ChromaticGibbs, PdSampler, Sampler, SequentialGibbs};
@@ -88,11 +102,13 @@ fn main() {
         "server" => bench_server(),
         "server-net" => bench_server_net(),
         "minibatch" => bench_minibatch(),
+        "blocked" => bench_blocked(),
         "validate" => bench_validate(),
         other => {
             eprintln!(
                 "unknown mode '{other}' \
-                 (usage: throughput [--mode full|lanes|server|server-net|minibatch|validate])"
+                 (usage: throughput [--mode \
+                 full|lanes|server|server-net|minibatch|blocked|validate])"
             );
             std::process::exit(2);
         }
@@ -109,8 +125,8 @@ fn parse_arg(name: &str) -> Option<String> {
         .and_then(|i| args.get(i + 1).cloned())
 }
 
-/// `--mode <full|lanes|server|server-net|minibatch|validate>`, default
-/// `full`.
+/// `--mode <full|lanes|server|server-net|minibatch|blocked|validate>`,
+/// default `full`.
 fn parse_mode() -> String {
     parse_arg("mode").unwrap_or_else(|| "full".to_string())
 }
@@ -607,6 +623,131 @@ fn bench_minibatch() {
         println!("WARNING: minibatch speedup below the 5x acceptance target");
     }
     report.finish_tracked("throughput_minibatch", "minibatch");
+}
+
+// -- blocked mode ------------------------------------------------------------
+
+/// `--<name> <f64>` with a default.
+fn parse_f64(name: &str, default: f64) -> f64 {
+    parse_arg(name).map_or(default, |v| {
+        v.parse().unwrap_or_else(|_| panic!("--{name} wants a float, got '{v}'"))
+    })
+}
+
+/// `--mode blocked`: an above-critical Ising grid with mid-run churn,
+/// flat exact PD sweeps vs `SweepPolicy::Blocked` on the same graph,
+/// kernel, seed, and lane count. The tracked `speedup` metric is
+/// **ESS/s** — mixing per wall second, not sweeps per second: blocked
+/// sweeps are *slower* per sweep (joint tree draws cost more than flat
+/// site visits) and win only if each sweep buys disproportionately more
+/// effective samples. Target ≥ 1.5× on the default 16×16 β=0.5 grid.
+/// Both runs cross the same churn ops at the same sweep indices, so the
+/// adaptive re-planning path (not just a frozen plan) is on the clock.
+fn bench_blocked() {
+    let rows = parse_usize("blk-rows", 16);
+    let cols = parse_usize("blk-cols", 16);
+    let beta = parse_f64("blk-beta", 0.5);
+    let cap = parse_usize("blk-cap", BlockPolicy::default().cap);
+    let epoch = parse_usize("blk-epoch", BlockPolicy::default().epoch);
+    let sweeps = parse_usize("blk-sweeps", 4096);
+    let kernel = match parse_arg("kernel") {
+        None => KernelKind::default(),
+        Some(a) => KernelKind::parse(&a).unwrap_or_else(|| {
+            eprintln!("unknown kernel '{a}' (--kernel scalar|tiled|nightly-simd)");
+            std::process::exit(2);
+        }),
+    };
+    let lanes = 64usize;
+    let mut report = Report::new("throughput-blocked");
+    println!(
+        "blocked mode: {rows}x{cols} grid at beta={beta} (critical 0.4407), \
+         {sweeps} timed sweeps x {lanes} lanes, churn at 1/2 and 3/4..."
+    );
+
+    // one timed run: warmup, then `sweeps` sweeps tracing mean lane
+    // magnetization, with lockstep churn ops at fixed sweep indices;
+    // returns (ess, wall seconds, plan summary)
+    let run = |sweep: SweepPolicy| -> (f64, f64, (usize, usize, usize)) {
+        let mut g = workloads::ising_grid(rows, cols, beta, 0.05);
+        let n = g.num_vars();
+        let mut eng = LanePdSampler::with_config(
+            &g,
+            EngineConfig { lanes, seed: 0xB10C, kernel, sweep },
+        );
+        for _ in 0..256 {
+            eng.sweep(); // burn-in (also grows the first block plans)
+        }
+        let denom = (n * lanes) as f64;
+        let mut trace = Vec::with_capacity(sweeps);
+        let mut added: Vec<usize> = Vec::new();
+        let t0 = Instant::now();
+        for s in 0..sweeps {
+            if s == sweeps / 2 {
+                // couple opposite corners: long-range edges blocks can't
+                // absorb, forcing a re-plan under load
+                for (a, b) in [(0usize, n - 1), (cols - 1, n - cols)] {
+                    let id = g.add_factor(PairFactor::ising(a, b, beta));
+                    eng.add_factor(id, g.factor(id).unwrap());
+                    added.push(id);
+                }
+            }
+            if s == (3 * sweeps) / 4 {
+                for id in added.drain(..) {
+                    g.remove_factor(id).unwrap();
+                    eng.remove_factor(id);
+                }
+            }
+            eng.sweep();
+            let ones: u64 = eng.state_words().iter().map(|w| w.count_ones() as u64).sum();
+            trace.push(ones as f64 / denom);
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        (effective_sample_size(&trace), elapsed, eng.block_summary())
+    };
+
+    let (flat_ess, flat_s, _) = run(SweepPolicy::Exact);
+    let (blk_ess, blk_s, (blocks, blocked_vars, tree_slots)) =
+        run(SweepPolicy::Blocked(BlockPolicy { cap, epoch }));
+    let flat_rate = flat_ess / flat_s;
+    let blk_rate = blk_ess / blk_s;
+    let speedup = blk_rate / flat_rate;
+    report.push(
+        Record::new("blocked-vs-flat-pd")
+            .param("workload", "ising-grid-churn")
+            .param("rows", rows)
+            .param("cols", cols)
+            .param("beta", format!("{beta}"))
+            .param("kernel", kernel.name())
+            .param("lanes", lanes)
+            .param("cap", cap)
+            .param("epoch", epoch)
+            .param("sweeps", sweeps)
+            .param("blocks", blocks)
+            .param("blocked_vars", blocked_vars)
+            .param("tree_slots", tree_slots)
+            .metric("flat_ess", flat_ess)
+            .metric("blocked_ess", blk_ess)
+            .metric("flat_wall_s", flat_s)
+            .metric("blocked_wall_s", blk_s)
+            .metric("flat_ess_per_s", flat_rate)
+            .metric("blocked_ess_per_s", blk_rate)
+            .metric("flat_sweeps_per_s", sweeps as f64 / flat_s)
+            .metric("blocked_sweeps_per_s", sweeps as f64 / blk_s)
+            .metric("speedup", speedup),
+    );
+    println!(
+        "blocked ({}) on {rows}x{cols} beta={beta}: flat {flat_rate:.1} ESS/s \
+         ({:.0} sweeps/s), blocked {blk_rate:.1} ESS/s ({:.0} sweeps/s) \
+         -> {speedup:.2}x ESS/s (target >= 1.5x; {blocks} blocks / \
+         {blocked_vars} vars / {tree_slots} tree slots at finish)",
+        kernel.name(),
+        sweeps as f64 / flat_s,
+        sweeps as f64 / blk_s,
+    );
+    if speedup < 1.5 {
+        println!("WARNING: blocked ESS/s speedup below the 1.5x acceptance target");
+    }
+    report.finish_tracked("throughput_blocked", "blocked");
 }
 
 // -- validate mode ----------------------------------------------------------

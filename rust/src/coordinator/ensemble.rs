@@ -140,6 +140,15 @@ impl PdEnsemble {
         self.engine.sweep_policy()
     }
 
+    /// Current blocked-sweep plan summary as
+    /// `(blocks, blocked_vars, tree_slots)` — all zeros for non-blocked
+    /// policies and before the first plan forms. Surfaces in the wire
+    /// `stats` reply so operators can see whether adaptive blocking has
+    /// actually engaged for a tenant.
+    pub fn block_summary(&self) -> (usize, usize, usize) {
+        self.engine.block_summary()
+    }
+
     /// Park the ensemble: a suspended tenant keeps its sampler state
     /// (x/θ words — resuming is free) *and* its marginal sums (so
     /// [`PdEnsemble::marginals`] keeps answering with the pre-suspension

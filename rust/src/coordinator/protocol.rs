@@ -14,6 +14,7 @@
 //! request   := create | apply | sweep | marginals | stats | drop | subscribe
 //! create    := "create" tenant vars [chains] [seed] [policy]
 //! policy    := "exact" | "minibatch" [":" degree [":" stride]]
+//!            | "blocked" [":" cap [":" epoch]]
 //! apply     := "apply" tenant op+
 //! op        := "add" v1 v2 beta | "del" index
 //! sweep     := "sweep" tenant n
@@ -71,7 +72,8 @@ pub enum Request {
         /// Per-tenant RNG root.
         seed: u64,
         /// Sweep policy (`exact` unless the client opts into minibatched
-        /// hub updates; λ knobs stay at their defaults on the wire).
+        /// hub updates or adaptive tree-blocking; λ knobs stay at their
+        /// defaults on the wire).
         sweep: SweepPolicy,
     },
     /// Apply churn ops to a tenant (acknowledged at admission).
@@ -187,7 +189,8 @@ impl Response {
                 };
                 format!(
                     "ok stats vars={} factors={} sweeps={} background={} ops={} \
-                     stable_for={} cost={} suspended={} dispatch={dispatch} policy={}",
+                     stable_for={} cost={} suspended={} dispatch={dispatch} policy={} \
+                     blocks={} blocked_vars={} tree_slots={}",
                     t.num_vars,
                     t.num_factors,
                     t.sweeps_done,
@@ -197,6 +200,9 @@ impl Response {
                     t.cost,
                     t.suspended,
                     t.policy,
+                    t.blocks,
+                    t.blocked_vars,
+                    t.tree_slots,
                 )
             }
             Response::Event {
@@ -410,7 +416,7 @@ pub fn parse_request(line: &str) -> Result<Request, Diagnostic> {
             let sweep = match c.peek() {
                 Some(_) => {
                     c.parse_with(
-                        "sweep policy exact|minibatch[:degree[:stride]]",
+                        "sweep policy exact|minibatch[:degree[:stride]]|blocked[:cap[:epoch]]",
                         SweepPolicy::parse,
                     )?
                     .0
@@ -611,6 +617,33 @@ mod tests {
         assert_eq!(d.found, "\"minibatch:0x8\"");
         // a zero stride is rejected at parse time, not divided by later
         let d = parse_err("create 7 16 minibatch:8:0");
+        assert!(d.expected.contains("sweep policy"), "{d}");
+        // adaptive tree-blocking, with and without knobs
+        use crate::duality::BlockPolicy;
+        assert_eq!(
+            parse_request("create 7 16 4 99 blocked:6:4").unwrap(),
+            Request::Create {
+                tenant: 7,
+                vars: 16,
+                chains: 4,
+                seed: 99,
+                sweep: SweepPolicy::Blocked(BlockPolicy { cap: 6, epoch: 4 }),
+            }
+        );
+        assert_eq!(
+            parse_request("create 7 16 blocked").unwrap(),
+            Request::Create {
+                tenant: 7,
+                vars: 16,
+                chains: 8,
+                seed: 7 ^ 0x9E37_79B9_7F4A_7C15,
+                sweep: SweepPolicy::Blocked(BlockPolicy::default()),
+            }
+        );
+        // a cap below 2 cannot block anything — rejected at parse time
+        let d = parse_err("create 7 16 blocked:1");
+        assert!(d.expected.contains("sweep policy"), "{d}");
+        let d = parse_err("create 7 16 blocked:8:0");
         assert!(d.expected.contains("sweep policy"), "{d}");
         // nothing may follow the policy
         let d = parse_err("create 7 16 exact 4");

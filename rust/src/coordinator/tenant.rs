@@ -78,6 +78,14 @@ pub struct TenantStats {
     pub suspended: bool,
     /// The tenant's sweep policy (how `cost` was priced).
     pub policy: SweepPolicy,
+    /// Tree-blocks in the engine's current blocked-sweep plan (0 unless
+    /// the policy is `blocked` and a plan has formed).
+    pub blocks: usize,
+    /// Variables covered by those blocks.
+    pub blocked_vars: usize,
+    /// Factor slots marginalized into block trees (what the per-sweep
+    /// cost surcharge is billed on).
+    pub tree_slots: usize,
     /// What the dispatch policy would run the next sweep batch on, given
     /// the shard's artifact manifest and this tenant's stability.
     pub dispatch: DispatchDecision,
@@ -241,7 +249,11 @@ impl Tenant {
     /// Serving snapshot, including the dispatch decision the policy makes
     /// for this tenant's current size and stability.
     pub fn stats(&self, policy: &DispatchPolicy, manifest: Option<&Manifest>) -> TenantStats {
+        let (blocks, blocked_vars, tree_slots) = self.ensemble.block_summary();
         TenantStats {
+            blocks,
+            blocked_vars,
+            tree_slots,
             num_vars: self.graph.num_vars(),
             num_factors: self.graph.num_factors(),
             sweeps_done: self.ensemble.sweeps_done(),
@@ -380,6 +392,41 @@ mod tests {
         assert!(
             stats.cost < exact.cost(),
             "DRR must see the cheaper sweeps: {} vs {}",
+            stats.cost,
+            exact.cost()
+        );
+    }
+
+    #[test]
+    fn blocked_policy_reaches_stats_and_reprices_cost_upward() {
+        use crate::duality::BlockPolicy;
+        let policy = SweepPolicy::Blocked(BlockPolicy { cap: 4, epoch: 8 });
+        let registry = Metrics::new();
+        let mk = |sweep: SweepPolicy| {
+            let cfg = TenantConfig {
+                chains: 64,
+                seed: 7,
+                sweep,
+                ..TenantConfig::default()
+            };
+            Tenant::new(workloads::ising_grid(3, 3, 0.9, 0.05), &cfg, None, registry.scoped("t"))
+        };
+        let exact = mk(SweepPolicy::Exact);
+        let mut blk = mk(policy);
+        let fresh = blk.stats(&DispatchPolicy::default(), None);
+        assert_eq!(fresh.policy, policy, "policy must surface in stats");
+        assert_eq!(
+            (fresh.blocks, fresh.blocked_vars, fresh.tree_slots),
+            (0, 0, 0),
+            "no plan before any sweeps"
+        );
+        blk.sweep(64);
+        let stats = blk.stats(&DispatchPolicy::default(), None);
+        assert!(stats.blocks >= 1, "β=0.9 grid must grow blocks");
+        assert!(stats.blocked_vars >= 2 && stats.tree_slots >= 1);
+        assert!(
+            stats.cost > exact.cost(),
+            "DRR must see the joint-draw surcharge: {} vs {}",
             stats.cost,
             exact.cost()
         );

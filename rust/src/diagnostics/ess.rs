@@ -3,7 +3,18 @@
 //! ESS complements PSRF: PSRF certifies *between-chain* agreement, ESS
 //! quantifies *within-chain* information content. The benches report both
 //! (`sweeps-to-PSRF<1.01` for the paper's headline plot, ESS/sweep for the
-//! throughput-normalized comparison).
+//! throughput-normalized comparison — and ESS/s for `--mode blocked`,
+//! where it is the tracked metric and traces get long enough that the
+//! lag-capped path below matters).
+
+/// Hard ceiling on the lags [`effective_sample_size`] examines. Geyer's
+/// initial-positive-sequence estimator terminates at the first
+/// non-positive pair anyway; lags past the cutoff contribute nothing but
+/// O(n) work each, which made the old `autocorrelation(trace, n/2)` call
+/// O(n²) on long bench traces. 1024 lags bounds the integrated
+/// autocorrelation time at 2049 — far beyond any trace this crate
+/// diagnoses (an AR(1) would need φ > 0.999).
+pub const ESS_MAX_LAG: usize = 1024;
 
 /// Lag-`k` autocorrelations of one trace, up to `max_lag` (biased, FFT-free
 /// — traces in the benches are short enough for the O(n·k) loop).
@@ -12,7 +23,9 @@
 /// PSRF monitors have recorded at most one sweep) return `vec![1.0]`:
 /// ρ₀ = 1 by convention and no lag carries information, instead of
 /// panicking the caller (which on the coordinator would be a shared
-/// shard thread).
+/// shard thread). A constant trace (zero variance) follows the same
+/// convention — ρ₀ = 1, every positive lag 0 — rather than the
+/// self-contradictory all-zero vector it used to return.
 pub fn autocorrelation(trace: &[f64], max_lag: usize) -> Vec<f64> {
     let n = trace.len();
     if n < 2 {
@@ -21,7 +34,9 @@ pub fn autocorrelation(trace: &[f64], max_lag: usize) -> Vec<f64> {
     let mean = trace.iter().sum::<f64>() / n as f64;
     let var: f64 = trace.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
     if var == 0.0 {
-        return vec![0.0; max_lag.min(n - 1) + 1];
+        let mut rho = vec![0.0; max_lag.min(n - 1) + 1];
+        rho[0] = 1.0;
+        return rho;
     }
     (0..=max_lag.min(n - 1))
         .map(|k| {
@@ -36,16 +51,36 @@ pub fn autocorrelation(trace: &[f64], max_lag: usize) -> Vec<f64> {
 
 /// ESS via Geyer's initial positive sequence: sum consecutive-pair
 /// autocorrelations while the pair sums stay positive.
+///
+/// Lags are computed incrementally and on demand — capped at
+/// `min(n/2, `[`ESS_MAX_LAG`]`)` and abandoned at the first non-positive
+/// Geyer pair — so the cost is O(n · τ) for integrated autocorrelation
+/// time τ, not the O(n²) of materializing `autocorrelation(trace, n/2)`
+/// first. Equivalence with the materialized estimator is pinned by
+/// `long_trace_ess_is_lag_capped_and_matches_uncapped`.
 pub fn effective_sample_size(trace: &[f64]) -> f64 {
     let n = trace.len();
     if n < 4 {
         return n as f64;
     }
-    let rho = autocorrelation(trace, n / 2);
+    let mean = trace.iter().sum::<f64>() / n as f64;
+    let var: f64 = trace.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+    if var == 0.0 {
+        // constant trace: ρ₀ = 1, no informative lags → τ = 1
+        return n as f64;
+    }
+    let rho = |k: usize| -> f64 {
+        let mut acc = 0.0;
+        for t in 0..n - k {
+            acc += (trace[t] - mean) * (trace[t + k] - mean);
+        }
+        acc / (n as f64 * var)
+    };
+    let max_lag = (n / 2).min(ESS_MAX_LAG);
     let mut tau = 1.0; // integrated autocorrelation time ×1 (ρ₀ = 1)
     let mut k = 1;
-    while k + 1 < rho.len() {
-        let pair = rho[k] + rho[k + 1];
+    while k + 1 <= max_lag {
+        let pair = rho(k) + rho(k + 1);
         if pair <= 0.0 {
             break;
         }
@@ -100,11 +135,16 @@ mod tests {
 
     #[test]
     fn constant_trace_degenerates_gracefully() {
+        // regression: the var == 0 branch used to return all-zero ρ,
+        // contradicting both the ρ₀ = 1 convention and the n < 2 branch
         let trace = vec![2.0; 100];
         let rho = autocorrelation(&trace, 5);
-        assert!(rho.iter().all(|&r| r == 0.0));
+        assert_eq!(rho.len(), 6);
+        assert_eq!(rho[0], 1.0, "ρ₀ = 1 even for constant traces");
+        assert!(rho[1..].iter().all(|&r| r == 0.0));
+        // a constant trace carries no dependence information: τ = 1
         let ess = effective_sample_size(&trace);
-        assert!(ess <= 100.0);
+        assert_eq!(ess, 100.0);
     }
 
     #[test]
@@ -118,5 +158,66 @@ mod tests {
         assert_eq!(effective_sample_size(&[]), 0.0);
         assert_eq!(effective_sample_size(&[1.0]), 1.0);
         assert_eq!(effective_sample_size(&[1.0, 0.0, 1.0]), 3.0);
+    }
+
+    /// The materialized O(n²) estimator this module used to run: compute
+    /// every lag up to n/2 first, then apply Geyer's cutoff.
+    fn ess_materialized(trace: &[f64], max_lag: usize) -> f64 {
+        let n = trace.len();
+        if n < 4 {
+            return n as f64;
+        }
+        let rho = autocorrelation(trace, max_lag);
+        let mut tau = 1.0;
+        let mut k = 1;
+        while k + 1 < rho.len() {
+            let pair = rho[k] + rho[k + 1];
+            if pair <= 0.0 {
+                break;
+            }
+            tau += 2.0 * pair;
+            k += 2;
+        }
+        (n as f64 / tau).min(n as f64)
+    }
+
+    #[test]
+    fn long_trace_ess_is_lag_capped_and_matches_uncapped() {
+        // the incremental early-terminating path must agree with the old
+        // materialize-all-lags estimator wherever the Geyer cutoff falls
+        // below the cap — i.e. on every realistic MCMC trace — while
+        // doing O(n·τ) work instead of O(n²)
+        let phi = 0.95;
+        let mut rng = Pcg64::seed(9);
+        let n = 200_000; // n/2 lags would be 10^10 mul-adds — the old cost
+        let mut x = 0.0;
+        let trace: Vec<f64> = (0..n)
+            .map(|_| {
+                x = phi * x + rng.normal();
+                x
+            })
+            .collect();
+        let fast = effective_sample_size(&trace);
+        let slow = ess_materialized(&trace, ESS_MAX_LAG);
+        assert!(
+            (fast - slow).abs() < 1e-9 * slow.max(1.0),
+            "fast={fast} slow={slow}"
+        );
+        let expect = n as f64 * (1.0 - phi) / (1.0 + phi);
+        assert!((fast / expect - 1.0).abs() < 0.3, "ess={fast} expect≈{expect}");
+    }
+
+    #[test]
+    fn pathological_trace_stops_at_the_lag_cap() {
+        // a period-2 trace with a tiny positive drift keeps every Geyer
+        // pair positive forever; the cap must bound the work and τ
+        let n = 40_000;
+        let trace: Vec<f64> = (0..n).map(|t| (t % 2) as f64 * 1e-12 + t as f64).collect();
+        let ess = effective_sample_size(&trace);
+        // a near-linear trace is maximally autocorrelated: ESS collapses
+        // toward n/(2·max_lag+1) but the call returns (quickly) instead
+        // of scanning all n/2 lags
+        assert!(ess >= n as f64 / (2.0 * ESS_MAX_LAG as f64 + 1.0) - 1.0);
+        assert!(ess < 100.0, "ess={ess}");
     }
 }

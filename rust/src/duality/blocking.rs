@@ -1,0 +1,462 @@
+//! Adaptive tree-blocking over the dual model (ROADMAP: "adaptive
+//! dynamic blocking under churn").
+//!
+//! The paper's §5.4 shows blocking recovers most of the mixing the
+//! parallel dual construction gives up, but leaves block choice to the
+//! modeler. This module automates it in the spirit of *Dynamic Blocking
+//! and Collapsing for Gibbs Sampling* (Venugopal & Gogate, `PAPERS.md`):
+//! the engine keeps a cheap per-slot EWMA of endpoint agreement (how
+//! often `x_{v1} == x_{v2}` across lanes — a direct proxy for the edge's
+//! realized coupling strength, sign-free via `|2m − 1|`), and
+//! [`BlockPlanner::plan`] greedily grows capped spanning-tree blocks
+//! around the strongest edges using [`crate::util::UnionFind`].
+//!
+//! A planned block is resampled by one exact joint draw per sweep
+//! (forward-filter/backward-sample over the tree in the engine), with
+//! the block's tree duals marginalized out: summing a tree slot's
+//! `θ ∈ {0, 1}` leaves the pairwise log-potential
+//! `E(x₁, x₂) = softplus(q + β₁x₁ + β₂x₂)` ([`edge_table`]). Every
+//! cross-block (and in-block non-tree) factor still routes through the
+//! PD dual unchanged, so blocks never need to agree with each other
+//! within a half-step — the paper's no-coordination selling point
+//! survives blocking.
+//!
+//! Planning is deterministic and *canonical under slot renaming*:
+//! candidate edges order by `(strength desc, min endpoint, max
+//! endpoint, slot)`, so two engines whose churn histories net to the
+//! same graph (with different slot assignments) produce the same blocks
+//! over variables. Re-planning is lazy, on churn (`plan_stale`) or
+//! every `epoch` sweeps — the same epoch idiom as `CsrIncidence`
+//! compaction.
+
+use crate::duality::DualModel;
+use crate::util::UnionFind;
+
+/// Agreement-strength floor for a slot to be considered as a tree edge:
+/// `|2·ewma − 1|` must reach this. Freshly added slots start at EWMA
+/// 0.5 (strength 0), so blocks only ever grow around *observed*
+/// coupling, never around topology alone.
+pub const BLOCK_SCORE_MIN: f64 = 0.05;
+
+/// Knobs of the adaptive blocking policy (wire form
+/// `blocked[:cap[:epoch]]`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BlockPolicy {
+    /// Maximum variables per block (≥ 2; FFBS cost is linear in it).
+    pub cap: usize,
+    /// Re-plan period in sweeps (≥ 1); churn re-plans eagerly anyway.
+    pub epoch: usize,
+}
+
+impl Default for BlockPolicy {
+    fn default() -> Self {
+        Self { cap: 8, epoch: 16 }
+    }
+}
+
+/// One node of a block's spanning tree, in BFS order (`nodes[0]` is the
+/// root; every parent index precedes its children).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BlockNode {
+    /// The primal variable at this node.
+    pub v: u32,
+    /// Index of the parent node in `Block::nodes` (`u32::MAX` at root).
+    pub parent: u32,
+    /// The tree slot connecting this node to its parent (root: unused).
+    pub slot: u32,
+}
+
+/// A capped tree-block: a connected set of variables whose spanning
+/// tree is drawn jointly, tree duals marginalized.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Block {
+    /// BFS-ordered tree nodes; `nodes[0]` is the root (the block's
+    /// minimum variable id, which also keys the block's RNG stream).
+    pub nodes: Vec<BlockNode>,
+    /// The block's tree slots, sorted — excluded from the per-node dual
+    /// field during the joint draw (they are marginalized instead).
+    pub tree_slots: Vec<u32>,
+}
+
+impl Block {
+    /// The root variable (minimum var id in the block).
+    #[inline]
+    pub fn root(&self) -> u32 {
+        self.nodes[0].v
+    }
+
+    /// Whether `slot` is one of this block's marginalized tree slots.
+    #[inline]
+    pub fn is_tree_slot(&self, slot: u32) -> bool {
+        self.tree_slots.binary_search(&slot).is_ok()
+    }
+}
+
+/// One unit of the blocked x half-step. Units partition the variables,
+/// so pooled chunks over units own disjoint state rows — the same
+/// disjointness the per-variable chunks rely on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SweepUnit {
+    /// A multi-variable tree block (index into [`BlockPlan::blocks`]).
+    Block(u32),
+    /// A singleton variable swept by the ordinary per-site path.
+    Var(u32),
+}
+
+/// The planner's output: blocks plus the unit sequence that partitions
+/// all variables (emitted in ascending order of each unit's first
+/// variable, so the sequence is canonical).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BlockPlan {
+    /// The tree blocks, in ascending root-variable order.
+    pub blocks: Vec<Block>,
+    /// All sweep units: every variable appears in exactly one.
+    pub units: Vec<SweepUnit>,
+    /// Total tree slots across blocks (the FFBS surcharge driver).
+    pub tree_slots: usize,
+}
+
+impl BlockPlan {
+    /// Number of multi-variable blocks.
+    #[inline]
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Number of variables covered by blocks (vs singletons).
+    pub fn blocked_vars(&self) -> usize {
+        self.blocks.iter().map(|b| b.nodes.len()).sum()
+    }
+
+    /// Slot-renaming-invariant view for determinism tests: per block
+    /// (sorted variable ids, sorted `(min, max)` tree-edge endpoint
+    /// pairs), blocks sorted by root. Two plans over the same logical
+    /// graph compare equal here even when churn-order differences gave
+    /// the underlying slots different ids.
+    pub fn canonical(&self) -> Vec<(Vec<u32>, Vec<(u32, u32)>)> {
+        self.blocks
+            .iter()
+            .map(|b| {
+                let mut vars: Vec<u32> = b.nodes.iter().map(|n| n.v).collect();
+                vars.sort_unstable();
+                let mut edges: Vec<(u32, u32)> = b
+                    .nodes
+                    .iter()
+                    .skip(1)
+                    .map(|n| {
+                        let p = b.nodes[n.parent as usize].v;
+                        (n.v.min(p), n.v.max(p))
+                    })
+                    .collect();
+                edges.sort_unstable();
+                (vars, edges)
+            })
+            .collect()
+    }
+}
+
+/// Grows capped tree-blocks around strongly-coupled clusters. Stateless
+/// — the engine owns the agreement EWMAs and calls [`plan`](Self::plan)
+/// on its churn/epoch schedule.
+pub struct BlockPlanner;
+
+impl BlockPlanner {
+    /// Build a block plan from per-slot agreement statistics
+    /// (`stats[slot]` = EWMA of the endpoint-agreement fraction; dead
+    /// slots are skipped via the model's endpoint table).
+    ///
+    /// Deterministic: a pure function of `(model topology, stats,
+    /// policy)`, with candidate ordering canonical under slot renaming
+    /// (see module docs). Kruskal-style greedy with a component-size
+    /// cap: an edge joins two components only when both are distinct
+    /// and the merged block stays within `policy.cap` variables.
+    pub fn plan(model: &DualModel, stats: &[f64], policy: BlockPolicy) -> BlockPlan {
+        let n = model.num_vars();
+        let cap = policy.cap.max(2);
+        // (strength, min endpoint, max endpoint, slot) — strength is
+        // finite by construction, so the f64 comparison is total here
+        let mut cand: Vec<(f64, u32, u32, u32)> = Vec::new();
+        for slot in 0..model.factor_slots() {
+            let Some((v1, v2)) = model.slot_endpoints(slot) else {
+                continue;
+            };
+            if v1 == v2 {
+                continue;
+            }
+            let m = stats.get(slot).copied().unwrap_or(0.5);
+            let strength = (2.0 * m - 1.0).abs();
+            if strength >= BLOCK_SCORE_MIN {
+                cand.push((strength, v1.min(v2), v1.max(v2), slot as u32));
+            }
+        }
+        cand.sort_unstable_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap()
+                .then(a.1.cmp(&b.1))
+                .then(a.2.cmp(&b.2))
+                .then(a.3.cmp(&b.3))
+        });
+
+        let mut uf = UnionFind::new(n);
+        // accepted tree edges per variable: (neighbor, slot)
+        let mut adj: Vec<Vec<(u32, u32)>> = vec![Vec::new(); n];
+        let mut in_tree = vec![false; n];
+        for &(_, a, b, slot) in &cand {
+            let (a, b) = (a as usize, b as usize);
+            if uf.find(a) == uf.find(b) {
+                continue; // would close a cycle (or duplicate edge)
+            }
+            if uf.component_size(a) + uf.component_size(b) > cap {
+                continue;
+            }
+            uf.union(a, b);
+            adj[a].push((b as u32, slot));
+            adj[b].push((a as u32, slot));
+            in_tree[a] = true;
+            in_tree[b] = true;
+        }
+
+        // materialize blocks by BFS from each component's minimum var
+        let mut plan = BlockPlan::default();
+        let mut block_of = vec![u32::MAX; n];
+        for root in 0..n {
+            if !in_tree[root] || block_of[root] != u32::MAX {
+                continue;
+            }
+            let id = plan.blocks.len() as u32;
+            let mut nodes = vec![BlockNode { v: root as u32, parent: u32::MAX, slot: 0 }];
+            let mut tree_slots = Vec::new();
+            block_of[root] = id;
+            let mut head = 0;
+            while head < nodes.len() {
+                let (pv, pi) = (nodes[head].v as usize, head as u32);
+                // children in ascending var order for a canonical BFS
+                let mut kids: Vec<(u32, u32)> = adj[pv]
+                    .iter()
+                    .copied()
+                    .filter(|&(c, _)| block_of[c as usize] == u32::MAX)
+                    .collect();
+                kids.sort_unstable();
+                for (c, slot) in kids {
+                    block_of[c as usize] = id;
+                    nodes.push(BlockNode { v: c, parent: pi, slot });
+                    tree_slots.push(slot);
+                }
+                head += 1;
+            }
+            tree_slots.sort_unstable();
+            plan.tree_slots += tree_slots.len();
+            plan.blocks.push(Block { nodes, tree_slots });
+        }
+
+        // unit sequence: ascending first-var order partitions [0, n)
+        for v in 0..n {
+            match block_of[v] {
+                u32::MAX => plan.units.push(SweepUnit::Var(v as u32)),
+                b if plan.blocks[b as usize].root() as usize == v => {
+                    plan.units.push(SweepUnit::Block(b))
+                }
+                _ => {} // non-root member: covered by its block's unit
+            }
+        }
+        plan
+    }
+}
+
+/// Overflow-safe `softplus(z) = ln(1 + e^z)`.
+#[inline]
+pub(crate) fn softplus(z: f64) -> f64 {
+    z.max(0.0) + (-z.abs()).exp().ln_1p()
+}
+
+/// The marginalized tree-edge log-potential table for `slot`:
+/// `t[xc * 2 + xp] = softplus(q + β_child·xc + β_parent·xp)`, oriented
+/// so the child endpoint indexes the high bit regardless of which of
+/// `(v1, v2)` the child is. Lane-independent — computed once per block
+/// draw and shared by every lane's FFBS pass.
+pub(crate) fn edge_table(model: &DualModel, slot: u32, child: u32) -> [f64; 4] {
+    let e = model.entry(slot as usize).expect("tree slot must be live");
+    let (bc, bp) = if e.v1 == child as usize {
+        (e.beta1, e.beta2)
+    } else {
+        debug_assert_eq!(e.v2, child as usize, "child must be an endpoint");
+        (e.beta2, e.beta1)
+    };
+    [
+        softplus(e.q),
+        softplus(e.q + bp),
+        softplus(e.q + bc),
+        softplus(e.q + bc + bp),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{FactorGraph, PairFactor};
+    use crate::workloads;
+
+    fn model(g: &FactorGraph) -> DualModel {
+        DualModel::from_graph(g)
+    }
+
+    /// Stats vector with every live slot at agreement `a`.
+    fn flat_stats(m: &DualModel, a: f64) -> Vec<f64> {
+        vec![a; m.factor_slots()]
+    }
+
+    #[test]
+    fn neutral_stats_produce_no_blocks() {
+        let g = workloads::ising_grid(3, 3, 0.5, 0.0);
+        let m = model(&g);
+        let plan = BlockPlanner::plan(&m, &flat_stats(&m, 0.5), BlockPolicy::default());
+        assert_eq!(plan.num_blocks(), 0);
+        assert_eq!(plan.tree_slots, 0);
+        assert_eq!(plan.units.len(), m.num_vars());
+        for (v, u) in plan.units.iter().enumerate() {
+            assert_eq!(*u, SweepUnit::Var(v as u32));
+        }
+    }
+
+    #[test]
+    fn strong_stats_grow_capped_trees_partitioning_the_vars() {
+        let g = workloads::ising_grid(3, 3, 0.5, 0.0);
+        let m = model(&g);
+        for cap in [2usize, 4, 9] {
+            let policy = BlockPolicy { cap, epoch: 16 };
+            let plan = BlockPlanner::plan(&m, &flat_stats(&m, 0.95), policy);
+            assert!(plan.num_blocks() >= 1, "cap {cap}: no blocks grown");
+            let mut seen = vec![false; m.num_vars()];
+            for u in &plan.units {
+                match *u {
+                    SweepUnit::Var(v) => {
+                        assert!(!seen[v as usize]);
+                        seen[v as usize] = true;
+                    }
+                    SweepUnit::Block(b) => {
+                        let blk = &plan.blocks[b as usize];
+                        assert!(blk.nodes.len() <= cap, "cap {cap} violated");
+                        assert_eq!(blk.tree_slots.len(), blk.nodes.len() - 1, "tree edge count");
+                        for n in &blk.nodes {
+                            assert!(!seen[n.v as usize]);
+                            seen[n.v as usize] = true;
+                        }
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "cap {cap}: units must partition");
+        }
+        // uncapped-by-size (cap = n): strong stats on a connected grid
+        // grow one spanning block
+        let plan =
+            BlockPlanner::plan(&m, &flat_stats(&m, 0.95), BlockPolicy { cap: 9, epoch: 16 });
+        assert_eq!(plan.blocked_vars(), 9);
+        assert_eq!(plan.tree_slots, 8);
+    }
+
+    #[test]
+    fn bfs_order_keeps_parents_before_children() {
+        let g = workloads::ising_grid(3, 3, 0.5, 0.0);
+        let m = model(&g);
+        let plan =
+            BlockPlanner::plan(&m, &flat_stats(&m, 0.05), BlockPolicy { cap: 9, epoch: 1 });
+        for blk in &plan.blocks {
+            assert_eq!(blk.nodes[0].parent, u32::MAX);
+            assert_eq!(blk.root(), blk.nodes.iter().map(|n| n.v).min().unwrap());
+            for (i, n) in blk.nodes.iter().enumerate().skip(1) {
+                assert!((n.parent as usize) < i, "parent must precede child");
+                assert!(blk.is_tree_slot(n.slot));
+            }
+        }
+    }
+
+    #[test]
+    fn plans_are_canonical_under_slot_renaming() {
+        // same logical graph, two slot assignments: build by adding
+        // factors in different orders
+        let mk = |order: &[(usize, usize, f64)]| {
+            let mut g = FactorGraph::new(4);
+            for &(a, b, beta) in order {
+                g.add_factor(PairFactor::ising(a, b, beta));
+            }
+            model(&g)
+        };
+        let edges = [(0usize, 1usize, 0.8), (1, 2, 0.8), (2, 3, 0.8)];
+        let mut rev = edges;
+        rev.reverse();
+        let m1 = mk(&edges);
+        let m2 = mk(&rev);
+        // per-slot stats keyed by ENDPOINTS, not slot id, to model two
+        // engines that observed the same physical graph
+        let by_endpoints = |m: &DualModel| -> Vec<f64> {
+            (0..m.factor_slots())
+                .map(|s| {
+                    let (v1, v2) = m.slot_endpoints(s).unwrap();
+                    0.80 + 0.03 * v1.min(v2) as f64 // distinct per edge
+                })
+                .collect()
+        };
+        let policy = BlockPolicy { cap: 3, epoch: 16 };
+        let p1 = BlockPlanner::plan(&m1, &by_endpoints(&m1), policy);
+        let p2 = BlockPlanner::plan(&m2, &by_endpoints(&m2), policy);
+        assert_eq!(p1.canonical(), p2.canonical());
+        assert!(p1.num_blocks() >= 1);
+    }
+
+    #[test]
+    fn anti_correlated_edges_score_by_strength_not_agreement() {
+        // agreement near 0 (anti-ferromagnetic lock-step) is as strong a
+        // coupling signal as agreement near 1
+        let mut g = FactorGraph::new(2);
+        g.add_factor(PairFactor::ising(0, 1, -1.0));
+        let m = model(&g);
+        let plan = BlockPlanner::plan(&m, &[0.03], BlockPolicy::default());
+        assert_eq!(plan.num_blocks(), 1);
+        assert_eq!(plan.blocked_vars(), 2);
+    }
+
+    #[test]
+    fn dead_slots_and_weak_edges_are_skipped() {
+        let mut g = workloads::ising_grid(2, 2, 0.6, 0.0);
+        let victim = g.factors().next().unwrap().0;
+        let mut m = model(&g);
+        m.remove(victim).unwrap();
+        let mut stats = flat_stats(&m, 0.9);
+        stats[victim] = 0.9; // stale stat on a dead slot must be ignored
+        let plan = BlockPlanner::plan(&m, &stats, BlockPolicy::default());
+        for blk in &plan.blocks {
+            assert!(!blk.is_tree_slot(victim as u32));
+        }
+        // weak: strength below the floor
+        let weak = BlockPlanner::plan(&m, &flat_stats(&m, 0.51), BlockPolicy::default());
+        assert_eq!(weak.num_blocks(), 0);
+    }
+
+    #[test]
+    fn edge_table_orients_child_and_parent_consistently() {
+        let mut g = FactorGraph::new(2);
+        g.add_factor(PairFactor::ising(0, 1, 0.7));
+        let m = model(&g);
+        let e = m.entry(0).unwrap();
+        let t01 = edge_table(&m, 0, e.v1 as u32); // child = v1
+        let t10 = edge_table(&m, 0, e.v2 as u32); // child = v2
+        // swapping child/parent transposes the 2×2 table
+        assert_eq!(t01[0], t10[0]);
+        assert_eq!(t01[3], t10[3]);
+        assert!((t01[1] - t10[2]).abs() < 1e-15);
+        assert!((t01[2] - t10[1]).abs() < 1e-15);
+        // and softplus is the exact θ marginalization
+        for (idx, &t) in t01.iter().enumerate() {
+            let (xc, xp) = ((idx >> 1) as f64, (idx & 1) as f64);
+            let z = e.q + e.beta1 * xc + e.beta2 * xp;
+            assert!((t - (1.0 + z.exp()).ln()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn softplus_is_overflow_safe() {
+        assert_eq!(softplus(-800.0), 0.0);
+        assert!((softplus(800.0) - 800.0).abs() < 1e-12);
+        assert!((softplus(0.0) - 2f64.ln()).abs() < 1e-15);
+    }
+}

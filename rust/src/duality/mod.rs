@@ -18,17 +18,24 @@
 //!   reference incidence for the sweep hot path; [`XTableArena`]: the
 //!   tile-aligned structure-of-arrays arena of cached x-conditional
 //!   tables the SIMD-tiled lane kernels gather from.
+//! * [`blocking`] — adaptive tree-blocking (§5.4 automated):
+//!   [`BlockPlanner`] grows capped spanning-tree blocks around
+//!   strongly-coupled slots from the engine's agreement EWMAs, re-planned
+//!   lazily on churn epochs; tree duals are marginalized into softplus
+//!   edge potentials for the engine's joint block draws.
 //! * [`encoding`] — §4.2 multi-state variables via 0–1 encoding, Potts
 //!   short-cut (order-n factor → n+1 dual states).
 //! * [`sw`] — §4.3: Swendsen–Wang / Higdon partial-SW as degenerate
 //!   decompositions of the Ising factor.
 
+pub mod blocking;
 pub mod csr;
 pub mod encoding;
 pub mod factorization;
 pub mod model;
 pub mod sw;
 
+pub use blocking::{Block, BlockPlan, BlockPlanner, BlockPolicy, SweepUnit};
 pub use csr::{CsrIncidence, XTableArena};
 pub use factorization::{dualize_table, factorize_positive, DualFactor};
 pub use model::{DualEntry, DualModel, MbPlan, MinibatchPolicy};

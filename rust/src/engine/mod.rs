@@ -60,6 +60,20 @@
 //! sweep. The corrected chain is a different trajectory than the exact
 //! path (same stationary law — gated by `tests/statistical_validation.rs`)
 //! but remains kernel- and pool-invariant for a fixed policy.
+//!
+//! Strongly-coupled graphs get the opposite lever: [`SweepPolicy::Blocked`]
+//! tracks a per-slot endpoint-agreement EWMA during normal sweeps, lets
+//! [`crate::duality::BlockPlanner`] grow capped spanning-tree blocks
+//! around the strongly-coupled clusters (re-planned lazily on churn
+//! epochs), and draws each block's tree jointly by per-lane
+//! forward-filter/backward-sample with the tree slots' duals marginalized
+//! into softplus edge potentials — cross-block factors still route
+//! through the PD dual, so the paper's coloring-free θ half-step is
+//! untouched. Joint draws cost more per sweep (DRR `cost()` carries a
+//! per-tree-slot surcharge) but buy mixing where flat PD stalls; the
+//! tracked win is ESS/s (`benches/throughput.rs --mode blocked`).
+//! Blocked trajectories are bit-identical across kernels, pool sizes,
+//! and shard counts for a fixed policy.
 
 pub mod kernels;
 mod sampler;

@@ -47,10 +47,11 @@
 use std::fmt;
 use std::sync::Arc;
 
-use super::kernels::{KernelKind, LaneKernel, ScalarKernel, SweepBuf, TiledKernel};
+use super::kernels::{lane_mask, KernelKind, LaneKernel, ScalarKernel, SweepBuf, TiledKernel};
+use crate::duality::blocking::{self, Block, BlockPlan, BlockPlanner, BlockPolicy, SweepUnit};
 use crate::duality::{DualModel, MbPlan, MinibatchPolicy};
 use crate::graph::{FactorGraph, FactorId, PairFactor};
-use crate::rng::{Pcg64, RngCore};
+use crate::rng::{bernoulli_sigmoid, Pcg64, RngCore};
 use crate::util::threadpool::balanced_ranges_aligned;
 use crate::util::ThreadPool;
 
@@ -74,6 +75,13 @@ pub enum SweepPolicy {
     /// the Poisson/MIN-Gibbs correction ([`MinibatchPolicy`]); the θ
     /// half-step refreshes `1/stride` of the slots per sweep.
     Minibatch(MinibatchPolicy),
+    /// Adaptive tree-blocking ([`BlockPolicy`]): the engine tracks
+    /// per-slot endpoint-agreement EWMAs, plans capped tree-blocks
+    /// around strongly-coupled clusters ([`BlockPlanner`]), and draws
+    /// each block's spanning tree jointly per sweep (tree duals
+    /// marginalized; everything else through the PD dual). Re-plans on
+    /// churn and every `epoch` sweeps.
+    Blocked(BlockPolicy),
 }
 
 impl SweepPolicy {
@@ -81,35 +89,60 @@ impl SweepPolicy {
     #[inline]
     pub fn minibatch(self) -> Option<MinibatchPolicy> {
         match self {
-            Self::Exact => None,
             Self::Minibatch(p) => Some(p),
+            Self::Exact | Self::Blocked(_) => None,
+        }
+    }
+
+    /// The blocking knobs, if this policy plans tree-blocks.
+    #[inline]
+    pub fn blocked(self) -> Option<BlockPolicy> {
+        match self {
+            Self::Blocked(p) => Some(p),
+            Self::Exact | Self::Minibatch(_) => None,
         }
     }
 
     /// Parse the wire form: `exact`, `minibatch`,
-    /// `minibatch:<degree_threshold>` or
+    /// `minibatch:<degree_threshold>`,
     /// `minibatch:<degree_threshold>:<theta_stride>` (λ knobs stay at
-    /// their defaults on the wire). Inverse of [`SweepPolicy`]'s
-    /// `Display` for those forms.
+    /// their defaults on the wire), `blocked`, `blocked:<cap>` or
+    /// `blocked:<cap>:<epoch>` (cap ≥ 2, epoch ≥ 1). Inverse of
+    /// [`SweepPolicy`]'s `Display` for those forms.
     pub fn parse(tok: &str) -> Option<Self> {
         if tok == "exact" {
             return Some(Self::Exact);
         }
         let mut parts = tok.split(':');
-        if parts.next()? != "minibatch" {
-            return None;
-        }
-        let mut p = MinibatchPolicy::default();
-        if let Some(deg) = parts.next() {
-            p.degree_threshold = deg.parse().ok()?;
-            if let Some(stride) = parts.next() {
-                p.theta_stride = stride.parse::<usize>().ok().filter(|&s| s >= 1)?;
-                if parts.next().is_some() {
-                    return None;
+        match parts.next()? {
+            "minibatch" => {
+                let mut p = MinibatchPolicy::default();
+                if let Some(deg) = parts.next() {
+                    p.degree_threshold = deg.parse().ok()?;
+                    if let Some(stride) = parts.next() {
+                        p.theta_stride = stride.parse::<usize>().ok().filter(|&s| s >= 1)?;
+                        if parts.next().is_some() {
+                            return None;
+                        }
+                    }
                 }
+                Some(Self::Minibatch(p))
             }
+            "blocked" => {
+                let mut p = BlockPolicy::default();
+                if let Some(cap) = parts.next() {
+                    p.cap = cap.parse::<usize>().ok().filter(|&c| c >= 2)?;
+                    if let Some(epoch) = parts.next() {
+                        p.epoch = epoch.parse::<usize>().ok().filter(|&e| e >= 1)?;
+                        if parts.next().is_some() {
+                            return None;
+                        }
+                    }
+                }
+                Some(Self::Blocked(p))
+            }
+            _ => None,
         }
-        Some(Self::Minibatch(p))
     }
 }
 
@@ -120,6 +153,7 @@ impl fmt::Display for SweepPolicy {
             Self::Minibatch(p) => {
                 write!(f, "minibatch:{}:{}", p.degree_threshold, p.theta_stride)
             }
+            Self::Blocked(p) => write!(f, "blocked:{}:{}", p.cap, p.epoch),
         }
     }
 }
@@ -174,7 +208,32 @@ pub struct LanePdSampler {
     x_bounds: Vec<usize>,
     theta_bounds: Vec<usize>,
     chunk_plan_for: usize,
+    /// The configured sweep policy (the model additionally owns the
+    /// minibatch plans when it is [`SweepPolicy::Minibatch`]).
+    policy: SweepPolicy,
+    /// Per-slot EWMA of endpoint agreement across lanes, maintained
+    /// after every sweep under a blocked policy (empty otherwise). New
+    /// and recycled slots reset to the neutral 0.5.
+    edge_stats: Vec<f64>,
+    /// The current block plan (blocked policy only; built lazily on the
+    /// first sweep and re-planned on churn/epoch — see
+    /// `ensure_block_plan`).
+    block_plan: Option<BlockPlan>,
+    /// Set by churn: the next blocked sweep re-plans eagerly instead of
+    /// waiting for the epoch boundary.
+    plan_stale: bool,
+    /// Pooled chunk bounds over the plan's sweep units (blocked policy
+    /// only) — units partition variables, so unit chunks own disjoint
+    /// x rows exactly like the per-variable chunks in `x_bounds`.
+    unit_bounds: Vec<usize>,
 }
+
+/// DRR surcharge per marginalized tree slot: a joint block draw does
+/// log-domain FFBS work (exp/ln per edge per lane) instead of a cached
+/// table gather, so blocked tenants bill more per sweep. Repriced
+/// automatically whenever the plan changes — `cost()` reads the live
+/// plan.
+const BLOCK_COST_SURCHARGE: u64 = 8;
 
 /// Number of live lanes in word `w` of a site's lane row.
 #[inline]
@@ -220,6 +279,12 @@ impl LanePdSampler {
         let words = cfg.lanes.div_ceil(64);
         let x = vec![0u64; model.num_vars() * words];
         let theta = vec![0u64; model.factor_slots() * words];
+        // agreement EWMAs start neutral; only blocked engines pay for them
+        let edge_stats = if cfg.sweep.blocked().is_some() {
+            vec![0.5; model.factor_slots()]
+        } else {
+            Vec::new()
+        };
         Self {
             model,
             lanes: cfg.lanes,
@@ -233,6 +298,11 @@ impl LanePdSampler {
             x_bounds: Vec::new(),
             theta_bounds: Vec::new(),
             chunk_plan_for: 0,
+            policy: cfg.sweep,
+            edge_stats,
+            block_plan: None,
+            plan_stale: false,
+            unit_bounds: Vec::new(),
         }
     }
 
@@ -256,12 +326,25 @@ impl LanePdSampler {
         self.kernel
     }
 
-    /// The sweep policy the engine was configured with (the model owns
-    /// the minibatch plans, so this is read back from it).
+    /// The sweep policy the engine was configured with.
     pub fn sweep_policy(&self) -> SweepPolicy {
-        self.model
-            .minibatch_policy()
-            .map_or(SweepPolicy::Exact, SweepPolicy::Minibatch)
+        self.policy
+    }
+
+    /// The current block plan, if a blocked policy has built one (plans
+    /// are built lazily on the first blocked sweep).
+    pub fn block_plan(&self) -> Option<&BlockPlan> {
+        self.block_plan.as_ref()
+    }
+
+    /// Block-plan summary for serving stats: `(blocks, blocked_vars,
+    /// tree_slots)` of the current plan — all zeros before the first
+    /// blocked sweep or under a non-blocked policy.
+    pub fn block_summary(&self) -> (usize, usize, usize) {
+        match &self.block_plan {
+            Some(p) => (p.num_blocks(), p.blocked_vars(), p.tree_slots),
+            None => (0, 0, 0),
+        }
     }
 
     /// θ-slot refresh stride of the current policy (1 = every sweep).
@@ -299,15 +382,23 @@ impl LanePdSampler {
 
     /// Accounting hook for the multi-tenant scheduler: the cost of one
     /// sweep of this engine in site-visits ([`DualModel::sweep_cost`],
-    /// or [`DualModel::minibatch_sweep_cost`] under a minibatch policy —
-    /// DRR fairness then reflects the cheaper hub visits and the strided
-    /// θ half-step). Tracks churn — inserting/removing factors changes
-    /// the next sweep's charge.
+    /// [`DualModel::minibatch_sweep_cost`] under a minibatch policy, or
+    /// the base cost plus [`BLOCK_COST_SURCHARGE`] per marginalized tree
+    /// slot under a blocked policy — DRR fairness then reflects both the
+    /// cheaper hub visits and the pricier joint block draws). Tracks
+    /// churn *and* re-planning: inserting/removing factors or a fresh
+    /// block plan changes the next sweep's charge.
     #[inline]
     pub fn cost(&self) -> u64 {
-        match self.model.minibatch_policy() {
-            Some(p) => self.model.minibatch_sweep_cost(p.theta_stride.max(1)),
-            None => self.model.sweep_cost(),
+        match self.policy {
+            SweepPolicy::Minibatch(p) => {
+                self.model.minibatch_sweep_cost(p.theta_stride.max(1))
+            }
+            SweepPolicy::Blocked(_) => {
+                let tree = self.block_plan.as_ref().map_or(0, |p| p.tree_slots) as u64;
+                self.model.sweep_cost() + BLOCK_COST_SURCHARGE * tree
+            }
+            SweepPolicy::Exact => self.model.sweep_cost(),
         }
     }
 
@@ -410,6 +501,12 @@ impl LanePdSampler {
             self.theta[id * self.words + w] = 0;
         }
         self.chunk_plan_for = 0; // degrees changed: re-plan chunks lazily
+        if self.policy.blocked().is_some() {
+            // a new (or recycled) slot starts with no observed coupling
+            self.edge_stats.resize(self.model.factor_slots(), 0.5);
+            self.edge_stats[id] = 0.5;
+            self.plan_stale = true; // churn: re-plan on the next sweep
+        }
     }
 
     /// Dynamic update: unwire a factor for all lanes. O(degree).
@@ -431,6 +528,12 @@ impl LanePdSampler {
             self.theta[id * self.words + w] = 0;
         }
         self.chunk_plan_for = 0; // degrees changed: re-plan chunks lazily
+        if self.policy.blocked().is_some() {
+            if let Some(m) = self.edge_stats.get_mut(id) {
+                *m = 0.5; // a recycled slot must not inherit the stat
+            }
+            self.plan_stale = true; // churn: re-plan on the next sweep
+        }
         true
     }
 
@@ -439,13 +542,70 @@ impl LanePdSampler {
     /// One full sweep of every lane: x half-step, then θ half-step. The
     /// trajectory depends only on the seed and the sweep index — not on
     /// whether/how a pool is attached, nor on the selected kernel.
+    /// Under a blocked policy the sweep additionally (re)builds the
+    /// block plan when due and folds the post-sweep state into the
+    /// agreement EWMAs — both deterministic functions of the trajectory,
+    /// so the kernel/pool invariance extends to the plan itself.
     pub fn sweep(&mut self) {
         self.sweep_count += 1;
+        if let SweepPolicy::Blocked(p) = self.policy {
+            self.ensure_block_plan(p);
+        }
         match self.kernel {
             KernelKind::Scalar => self.sweep_kernel::<ScalarKernel>(),
             KernelKind::Tiled => self.sweep_kernel::<TiledKernel>(),
             #[cfg(feature = "nightly-simd")]
             KernelKind::Simd => self.sweep_kernel::<SimdKernel>(),
+        }
+        if self.policy.blocked().is_some() {
+            self.update_edge_stats();
+        }
+    }
+
+    /// Lazy re-planning, the `CsrIncidence` epoch idiom: rebuild when
+    /// there is no plan yet, when churn marked the plan stale, or on the
+    /// fixed epoch phase (`(sweep − 1) % epoch == 0` — a pure function
+    /// of the sweep index, so every kernel/pool/shard replica re-plans
+    /// on the same sweep from the same EWMAs and stays bit-identical).
+    fn ensure_block_plan(&mut self, p: BlockPolicy) {
+        let epoch = p.epoch.max(1) as u64;
+        let due = (self.sweep_count - 1) % epoch == 0;
+        if self.block_plan.is_some() && !self.plan_stale && !due {
+            return;
+        }
+        self.edge_stats.resize(self.model.factor_slots(), 0.5);
+        let plan = BlockPlanner::plan(&self.model, &self.edge_stats, p);
+        if self.block_plan.as_ref() != Some(&plan) {
+            self.chunk_plan_for = 0; // unit weights changed: re-chunk
+        }
+        self.block_plan = Some(plan);
+        self.plan_stale = false;
+    }
+
+    /// Fold the post-sweep state into the per-slot agreement EWMAs:
+    /// `m += γ(a − m)` with `a` = fraction of live lanes where the
+    /// slot's endpoints agree. O(live slots × words) — one popcount per
+    /// slot word, far below the sweep's own incidence traversal.
+    fn update_edge_stats(&mut self) {
+        /// EWMA gain: ~16-sweep memory, matching the default re-plan
+        /// epoch so one epoch of observations dominates the stat.
+        const GAMMA: f64 = 0.0625;
+        let lanes = self.lanes as f64;
+        self.edge_stats.resize(self.model.factor_slots(), 0.5);
+        for slot in 0..self.model.factor_slots() {
+            let Some((v1, v2)) = self.model.slot_endpoints(slot) else {
+                continue; // dead slot: stat stays at its reset value
+            };
+            let (v1, v2) = (v1 as usize, v2 as usize);
+            let mut agree = 0u32;
+            for w in 0..self.words {
+                let k = lanes_in_word(self.lanes, w);
+                let x1 = self.x[v1 * self.words + w];
+                let x2 = self.x[v2 * self.words + w];
+                agree += (!(x1 ^ x2) & lane_mask(k)).count_ones();
+            }
+            let m = &mut self.edge_stats[slot];
+            *m += GAMMA * (agree as f64 / lanes - *m);
         }
     }
 
@@ -470,8 +630,36 @@ impl LanePdSampler {
                 base: &self.base,
                 sweep: self.sweep_count,
             };
-            for v in 0..n {
-                ctx.site::<K>(v, &mut self.x[v * words..(v + 1) * words], &mut buf);
+            match &self.block_plan {
+                Some(plan) if self.policy.blocked().is_some() => {
+                    let mut scratch = BlockScratch::default();
+                    for unit in &plan.units {
+                        match *unit {
+                            SweepUnit::Var(v) => {
+                                let v = v as usize;
+                                ctx.site::<K>(
+                                    v,
+                                    &mut self.x[v * words..(v + 1) * words],
+                                    &mut buf,
+                                );
+                            }
+                            // SAFETY: serial sweep — exclusive access to
+                            // the whole x array.
+                            SweepUnit::Block(b) => unsafe {
+                                ctx.block_site(
+                                    &plan.blocks[b as usize],
+                                    self.x.as_mut_ptr(),
+                                    &mut scratch,
+                                );
+                            },
+                        }
+                    }
+                }
+                _ => {
+                    for v in 0..n {
+                        ctx.site::<K>(v, &mut self.x[v * words..(v + 1) * words], &mut buf);
+                    }
+                }
             }
         }
         let slots = self.model.factor_slots();
@@ -565,6 +753,34 @@ impl LanePdSampler {
             tprefix.push(tacc);
         }
         self.theta_bounds = balanced_ranges_aligned(&tprefix, chunks, self.row_align());
+
+        // blocked policy: chunk the x half-step over the plan's sweep
+        // units instead (units partition the variables, so unit chunks
+        // own disjoint x rows); a block unit weighs its members plus the
+        // FFBS surcharge per tree slot. Unit rows are scattered, so
+        // cache-line alignment buys nothing — align 1.
+        if let Some(plan) = &self.block_plan {
+            if self.policy.blocked().is_some() {
+                let mut uprefix = Vec::with_capacity(plan.units.len() + 1);
+                uprefix.push(0u64);
+                let mut uacc = 0u64;
+                for unit in &plan.units {
+                    uacc += match *unit {
+                        SweepUnit::Var(v) => self.model.x_visit_weight(v as usize),
+                        SweepUnit::Block(b) => {
+                            let blk = &plan.blocks[b as usize];
+                            blk.nodes
+                                .iter()
+                                .map(|nd| self.model.x_visit_weight(nd.v as usize))
+                                .sum::<u64>()
+                                + BLOCK_COST_SURCHARGE * blk.tree_slots.len() as u64
+                        }
+                    };
+                    uprefix.push(uacc);
+                }
+                self.unit_bounds = balanced_ranges_aligned(&uprefix, chunks, 1);
+            }
+        }
         self.chunk_plan_for = chunks;
     }
 
@@ -584,19 +800,58 @@ impl LanePdSampler {
                 sweep: self.sweep_count,
             };
             let x_ptr = SendPtr(self.x.as_mut_ptr());
-            pool.scope_ranges(&self.x_bounds, |_, start, end| {
-                let x_ptr = &x_ptr;
-                // per-worker tile-major buffers, reused across the chunk
-                let mut buf = SweepBuf::new();
-                for v in start..end {
-                    // SAFETY: chunks own disjoint variable ranges, hence
-                    // disjoint `words`-sized word rows of x.
-                    let out = unsafe {
-                        std::slice::from_raw_parts_mut(x_ptr.0.add(v * words), words)
-                    };
-                    ctx.site::<K>(v, out, &mut buf);
+            match &self.block_plan {
+                Some(plan) if self.policy.blocked().is_some() => {
+                    pool.scope_ranges(&self.unit_bounds, |_, start, end| {
+                        let x_ptr = &x_ptr;
+                        let mut buf = SweepBuf::new();
+                        let mut scratch = BlockScratch::default();
+                        for unit in &plan.units[start..end] {
+                            match *unit {
+                                SweepUnit::Var(v) => {
+                                    let v = v as usize;
+                                    // SAFETY: units partition the
+                                    // variables and chunks own disjoint
+                                    // unit ranges, hence disjoint x rows.
+                                    let out = unsafe {
+                                        std::slice::from_raw_parts_mut(
+                                            x_ptr.0.add(v * words),
+                                            words,
+                                        )
+                                    };
+                                    ctx.site::<K>(v, out, &mut buf);
+                                }
+                                // SAFETY: as above — every variable of
+                                // this block belongs to this unit alone.
+                                SweepUnit::Block(b) => unsafe {
+                                    ctx.block_site(
+                                        &plan.blocks[b as usize],
+                                        x_ptr.0,
+                                        &mut scratch,
+                                    );
+                                },
+                            }
+                        }
+                    });
                 }
-            });
+                _ => {
+                    pool.scope_ranges(&self.x_bounds, |_, start, end| {
+                        let x_ptr = &x_ptr;
+                        // per-worker tile-major buffers, reused across
+                        // the chunk
+                        let mut buf = SweepBuf::new();
+                        for v in start..end {
+                            // SAFETY: chunks own disjoint variable
+                            // ranges, hence disjoint `words`-sized word
+                            // rows of x.
+                            let out = unsafe {
+                                std::slice::from_raw_parts_mut(x_ptr.0.add(v * words), words)
+                            };
+                            ctx.site::<K>(v, out, &mut buf);
+                        }
+                    });
+                }
+            }
         }
         // θ | x : chunks over factor slots write θ, read the fresh x
         {
@@ -741,6 +996,116 @@ impl XCtx<'_> {
             *out_word = K::draw_logodds_word(rng, &buf.acc, k, &mut buf.draw);
         }
     }
+
+    /// Joint draw of one tree block: per lane, forward-filter /
+    /// backward-sample over the block's spanning tree with the tree
+    /// duals marginalized out (softplus edge potentials — see
+    /// [`crate::duality::blocking`]). Cross-block and non-tree factors
+    /// enter through each node's dual field exactly as in the flat
+    /// x half-step, so blocks never coordinate within the half-step.
+    ///
+    /// Kernel-independence for free: the pass is plain per-lane scalar
+    /// code using no kernel primitive (the `site_minibatch` precedent),
+    /// and its RNG is one stream keyed by the block's ROOT variable
+    /// (`split2(sweep, root << 1)`) consumed in a fixed order — root
+    /// draw then BFS-order conditionals, lanes consecutively. Block
+    /// members are exactly the variables the singleton path skips, so
+    /// no stream is ever consumed twice in a sweep.
+    ///
+    /// # Safety
+    ///
+    /// `x` must point at the full packed x array, and the caller must
+    /// have exclusive access to every block member's `words`-sized row
+    /// (units partition the variables; see the sweep paths).
+    unsafe fn block_site(&self, block: &Block, x: *mut u64, scratch: &mut BlockScratch) {
+        let nn = block.nodes.len();
+        let mut rng = self.base.split2(self.sweep, (block.root() as u64) << 1);
+        // lane-independent per-edge tables, once per block per sweep
+        scratch.etab.clear();
+        for node in &block.nodes[1..] {
+            scratch.etab.push(blocking::edge_table(self.model, node.slot, node.v));
+        }
+        scratch.local.resize(nn, [0.0; 2]);
+        scratch.bits.resize(nn, 0);
+        for lane in 0..self.lanes {
+            let (w, bit) = (lane / 64, lane % 64);
+            // leaves→root: local[i][b] = b_i·b + Σ_children msg, where
+            // msg[pb] = logaddexp over the child's two states through
+            // the marginalized edge table t[xc·2 + xp]
+            for i in 0..nn {
+                scratch.local[i] = [0.0, self.dual_field(block, block.nodes[i].v, w, bit)];
+            }
+            for i in (1..nn).rev() {
+                let t = &scratch.etab[i - 1];
+                let li = scratch.local[i];
+                let msg0 = logaddexp(li[0] + t[0], li[1] + t[2]);
+                let msg1 = logaddexp(li[0] + t[1], li[1] + t[3]);
+                let p = block.nodes[i].parent as usize;
+                scratch.local[p][0] += msg0;
+                scratch.local[p][1] += msg1;
+            }
+            // root→leaves: exact conditional draws down the tree
+            scratch.bits[0] =
+                bernoulli_sigmoid(&mut rng, scratch.local[0][1] - scratch.local[0][0]) as u8;
+            for i in 1..nn {
+                let pb = scratch.bits[block.nodes[i].parent as usize] as usize;
+                let t = &scratch.etab[i - 1];
+                let z = (scratch.local[i][1] - scratch.local[i][0]) + (t[2 + pb] - t[pb]);
+                scratch.bits[i] = bernoulli_sigmoid(&mut rng, z) as u8;
+            }
+            let mask = 1u64 << bit;
+            for (i, node) in block.nodes.iter().enumerate() {
+                // caller guarantees exclusive access to this row;
+                // `lane < lanes` keeps ghost bits of the tail word zero
+                let word = &mut *x.add(node.v as usize * self.words + w);
+                if scratch.bits[i] == 1 {
+                    *word |= mask;
+                } else {
+                    *word &= !mask;
+                }
+            }
+        }
+    }
+
+    /// One lane's dual field at `v` with the block's tree slots skipped:
+    /// `base_field(v) + Σ_{incident live slots ∉ tree} θ_bit·β` — the
+    /// same fold as the flat accumulate path, restricted to one lane.
+    fn dual_field(&self, block: &Block, v: u32, w: usize, bit: usize) -> f64 {
+        let mut b = self.model.base_field(v as usize);
+        let (slots, betas, overlay) = self.model.incidence_csr(v as usize);
+        for (&slot, &beta) in slots.iter().zip(betas.iter()) {
+            if !block.is_tree_slot(slot)
+                && (self.theta[slot as usize * self.words + w] >> bit) & 1 == 1
+            {
+                b += beta;
+            }
+        }
+        for &(slot, beta) in overlay {
+            if !block.is_tree_slot(slot)
+                && (self.theta[slot as usize * self.words + w] >> bit) & 1 == 1
+            {
+                b += beta;
+            }
+        }
+        b
+    }
+}
+
+/// Reused scratch of the blocked joint draw: per-edge softplus tables
+/// (lane-independent), the per-node upward messages, and the current
+/// lane's drawn bits.
+#[derive(Default)]
+struct BlockScratch {
+    etab: Vec<[f64; 4]>,
+    local: Vec<[f64; 2]>,
+    bits: Vec<u8>,
+}
+
+/// Overflow-safe `ln(e^a + e^b)`.
+#[inline]
+fn logaddexp(a: f64, b: f64) -> f64 {
+    let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+    hi + (lo - hi).exp().ln_1p()
 }
 
 /// Shared read-only context of the θ half-step.
@@ -1158,6 +1523,18 @@ mod tests {
                     ..MinibatchPolicy::default()
                 }),
             ),
+            ("blocked", SweepPolicy::Blocked(BlockPolicy::default())),
+            (
+                "blocked:12",
+                SweepPolicy::Blocked(BlockPolicy {
+                    cap: 12,
+                    ..BlockPolicy::default()
+                }),
+            ),
+            (
+                "blocked:6:4",
+                SweepPolicy::Blocked(BlockPolicy { cap: 6, epoch: 4 }),
+            ),
         ];
         for (tok, want) in cases {
             assert_eq!(SweepPolicy::parse(tok), Some(want), "parse {tok:?}");
@@ -1167,9 +1544,152 @@ mod tests {
             assert_eq!(SweepPolicy::parse(&p.to_string()), Some(p));
         }
         for bad in ["", "mini", "minibatch:", "minibatch:x", "minibatch:8:0",
-                    "minibatch:8:2:9", "exact:1"] {
+                    "minibatch:8:2:9", "exact:1", "blocked:", "blocked:1",
+                    "blocked:x", "blocked:8:0", "blocked:8:2:1"] {
             assert_eq!(SweepPolicy::parse(bad), None, "must reject {bad:?}");
         }
+    }
+
+    /// Blocked config on a strongly-coupled grid: blocks must actually
+    /// form once the agreement EWMAs see the correlated lanes.
+    fn blk_cfg(seed: u64, cap: usize, epoch: usize) -> EngineConfig {
+        EngineConfig {
+            lanes: 64,
+            seed,
+            kernel: KernelKind::default(),
+            sweep: SweepPolicy::Blocked(BlockPolicy { cap, epoch }),
+        }
+    }
+
+    #[test]
+    fn blocked_policy_grows_blocks_and_reprices_cost() {
+        let g = workloads::ising_grid(3, 3, 0.9, 0.05);
+        let mut eng = LanePdSampler::with_config(&g, blk_cfg(41, 4, 8));
+        assert_eq!(
+            eng.sweep_policy(),
+            SweepPolicy::Blocked(BlockPolicy { cap: 4, epoch: 8 })
+        );
+        assert_eq!(eng.block_summary(), (0, 0, 0), "no plan before sweeping");
+        let flat_cost = eng.cost();
+        for _ in 0..64 {
+            eng.sweep();
+        }
+        let (blocks, vars, tree) = eng.block_summary();
+        assert!(blocks >= 1, "β=0.9 lanes must lock step into blocks");
+        assert!(vars >= 2 && tree >= 1);
+        assert!(
+            eng.cost() > flat_cost,
+            "joint draws must bill a surcharge: {} vs flat {flat_cost}",
+            eng.cost()
+        );
+        // every block respects the cap and units partition the vars
+        let plan = eng.block_plan().unwrap();
+        assert!(plan.blocks.iter().all(|b| b.nodes.len() <= 4));
+        let covered: usize = plan
+            .units
+            .iter()
+            .map(|u| match *u {
+                crate::duality::SweepUnit::Var(_) => 1,
+                crate::duality::SweepUnit::Block(b) => plan.blocks[b as usize].nodes.len(),
+            })
+            .sum();
+        assert_eq!(covered, g.num_vars());
+    }
+
+    #[test]
+    fn blocked_matches_exact_enumeration() {
+        // the blocked chain is a different (better-mixing) trajectory
+        // but the same stationary law — above-critical coupling where
+        // flat PD struggles most
+        let g = workloads::ising_grid(3, 3, 0.6, 0.1);
+        let want = exact::enumerate(&g).marginals;
+        let mut eng = LanePdSampler::with_config(&g, blk_cfg(43, 4, 8));
+        let got = lane_marginals(&mut eng, 600, 3000);
+        for v in 0..9 {
+            assert!(
+                (got[v] - want[v]).abs() < 0.015,
+                "v={v}: {} vs exact {}",
+                got[v],
+                want[v]
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_trajectory_is_kernel_and_pool_invariant() {
+        let g = workloads::ising_grid(3, 3, 0.8, 0.05);
+        let mut reference: Option<(Vec<u64>, Vec<u64>)> = None;
+        for &kernel in KernelKind::all() {
+            for pool_size in [0usize, 3] {
+                let cfg = EngineConfig { kernel, ..blk_cfg(47, 4, 4) };
+                let mut eng = LanePdSampler::with_config(&g, cfg);
+                if pool_size > 0 {
+                    eng = eng.with_pool(Arc::new(ThreadPool::new(pool_size)));
+                }
+                for _ in 0..40 {
+                    eng.sweep();
+                }
+                assert!(eng.block_summary().0 >= 1, "plan must engage mid-run");
+                let state = (eng.state_words().to_vec(), eng.theta_words().to_vec());
+                match &reference {
+                    None => reference = Some(state),
+                    Some(want) => assert_eq!(
+                        &state,
+                        want,
+                        "kernel {} pool {pool_size} diverged",
+                        kernel.name()
+                    ),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_tail_lanes_stay_zero() {
+        let g = workloads::ising_grid(3, 3, 0.8, 0.0);
+        for &kernel in KernelKind::all() {
+            let cfg = EngineConfig { lanes: 5, kernel, ..blk_cfg(53, 4, 4) };
+            let mut eng = LanePdSampler::with_config(&g, cfg);
+            for _ in 0..50 {
+                eng.sweep();
+            }
+            for &w in eng.state_words().iter().chain(eng.theta_words()) {
+                assert_eq!(w & !lane_mask(5), 0, "ghost lanes by {}", kernel.name());
+            }
+        }
+    }
+
+    #[test]
+    fn churn_invalidates_the_block_plan_eagerly() {
+        // a removed tree edge must leave the plan on the NEXT sweep even
+        // mid-epoch, and its recycled slot must not inherit the stat;
+        // 62 warmup sweeps put the next two sweeps strictly inside an
+        // epoch, so only churn staleness can explain a re-plan
+        let mut g = workloads::ising_grid(3, 3, 0.9, 0.0);
+        let mut eng = LanePdSampler::with_config(&g, blk_cfg(59, 9, 8));
+        for _ in 0..62 {
+            eng.sweep();
+        }
+        let plan = eng.block_plan().unwrap().clone();
+        assert!(plan.tree_slots >= 1, "need a tree edge to remove");
+        let victim = plan.blocks[0].tree_slots[0] as usize;
+        g.remove_factor(victim).unwrap();
+        assert!(eng.remove_factor(victim));
+        eng.sweep();
+        let replanned = eng.block_plan().unwrap();
+        assert!(
+            replanned.blocks.iter().all(|b| !b.is_tree_slot(victim as u32)),
+            "dead slot survived re-planning as a tree edge"
+        );
+        // re-adding reuses the slot with a neutral stat: still no tree
+        // edge through it on the immediate next plan
+        let id = g.add_factor(PairFactor::ising(0, 1, 0.9));
+        eng.add_factor(id, g.factor(id).unwrap());
+        eng.sweep();
+        assert!(
+            eng.block_plan().unwrap().blocks.iter().all(|b| !b.is_tree_slot(id as u32)),
+            "fresh slot must re-earn its block membership"
+        );
     }
 
     use crate::graph::FactorGraph;

@@ -161,6 +161,17 @@ pub fn zoo() -> Vec<Scenario> {
             churn: Vec::new(),
             tau: 64,
         },
+        // the adaptive-blocking home turf: above-critical grid where the
+        // flat PD chain's lanes lock step and mix slowly — the blocked
+        // lane paths register against this one (and the ESS/s bench's
+        // ≥ 1.5× target is pinned on its larger sibling)
+        Scenario {
+            name: "grid3x3-above",
+            regime: Regime::Above,
+            graph: crate::workloads::ising_grid(3, 3, 0.6, 0.05),
+            churn: Vec::new(),
+            tau: 160,
+        },
         Scenario {
             name: "triangle-above",
             regime: Regime::Above,

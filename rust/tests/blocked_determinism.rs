@@ -1,0 +1,171 @@
+//! Block-plan determinism: the adaptive blocking subsystem must be a
+//! pure function of (topology, trajectory, policy) — never of how the
+//! host is sized or of the order churn ops happened to arrive in.
+//!
+//! Two contracts:
+//!
+//! * **Placement invariance** — blocked tenants produce bit-identical
+//!   marginals and identical plan summaries across shard counts {1, 4} ×
+//!   pool sizes {0, 4}. The plan is re-derived from agreement EWMAs that
+//!   are themselves deterministic functions of the (placement-invariant)
+//!   trajectory, so any divergence here means a worker observed the plan
+//!   mid-rebuild or the stats were accumulated in pool-dependent order.
+//! * **Op-order invariance** — two churn batches that net to the same
+//!   graph yield the same canonical plan, even though the batches assign
+//!   different factor slots. Candidate edges are ordered by (strength,
+//!   endpoints) with the slot id only as a final tiebreaker, and recycled
+//!   slots restart at the neutral EWMA, so the plan cannot depend on
+//!   slot-assignment history.
+
+use pdgibbs::coordinator::{Coordinator, CoordinatorConfig, TenantConfig, TenantStats};
+use pdgibbs::duality::BlockPolicy;
+use pdgibbs::engine::{EngineConfig, KernelKind, LanePdSampler, SweepPolicy};
+use pdgibbs::graph::{FactorGraph, PairFactor};
+use pdgibbs::workloads::{self, ChurnOp};
+
+fn blocked(cap: usize, epoch: usize) -> SweepPolicy {
+    SweepPolicy::Blocked(BlockPolicy { cap, epoch })
+}
+
+/// Run one blocked tenant (strongly-coupled grid + mid-run churn) on a
+/// coordinator of the given shape; return its marginals and stats.
+fn serve(shards: usize, pool_threads: usize) -> (Vec<f64>, TenantStats) {
+    let mut coord = Coordinator::spawn(CoordinatorConfig {
+        shards,
+        pool_threads,
+        quantum: 0, // request-driven: sweep counts are exact
+        ..Default::default()
+    });
+    let client = coord.client();
+    let g = workloads::ising_grid(3, 3, 0.8, 0.05);
+    client
+        .create_tenant(
+            7,
+            g,
+            TenantConfig {
+                chains: 64,
+                seed: 0xB10C,
+                sweep: blocked(4, 8),
+                ..TenantConfig::default()
+            },
+        )
+        .unwrap();
+    client.sweep(7, 60).unwrap();
+    // churn mid-run: drop a live factor, add a strong cross edge
+    client
+        .apply(
+            7,
+            vec![
+                ChurnOp::RemoveLive { index: 2 },
+                ChurnOp::Add { v1: 0, v2: 4, beta: 0.8 },
+            ],
+        )
+        .unwrap();
+    client.sweep(7, 60).unwrap();
+    let m = client.marginals(7).unwrap();
+    let stats = client.stats(7).unwrap();
+    coord.shutdown();
+    (m, stats)
+}
+
+#[test]
+fn blocked_tenants_are_identical_across_shard_counts_and_pool_sizes() {
+    let (m_ref, s_ref) = serve(1, 0);
+    assert!(s_ref.blocks >= 1, "β=0.8 grid must grow blocks");
+    assert_eq!(s_ref.sweeps_done, 120);
+    for (shards, pool) in [(1usize, 4usize), (4, 0), (4, 4)] {
+        let (m, s) = serve(shards, pool);
+        assert_eq!(
+            m, m_ref,
+            "shards={shards} pool={pool}: placement changed the trajectory"
+        );
+        assert_eq!(
+            (s.blocks, s.blocked_vars, s.tree_slots),
+            (s_ref.blocks, s_ref.blocked_vars, s_ref.tree_slots),
+            "shards={shards} pool={pool}: placement changed the plan"
+        );
+        assert_eq!(s.cost, s_ref.cost, "plan repricing must match too");
+    }
+}
+
+/// A 6-variable strongly-coupled ring — every edge qualifies, so the
+/// planner has real choices to make and op-order bugs have room to show.
+fn ring6(beta: f64) -> FactorGraph {
+    let mut g = FactorGraph::new(6);
+    for v in 0..6 {
+        g.set_unary(v, 0.05);
+        g.add_factor(PairFactor::ising(v, (v + 1) % 6, beta));
+    }
+    g
+}
+
+/// Apply `ops` (lockstep graph + engine), with no sweeps interleaved.
+fn apply_ops(g: &mut FactorGraph, eng: &mut LanePdSampler, ops: &[(bool, usize, usize)]) {
+    for &(add, a, b) in ops {
+        if add {
+            let id = g.add_factor(PairFactor::ising(a, b, 0.8));
+            eng.add_factor(id, g.factor(id).unwrap());
+        } else {
+            // remove the live factor joining (a, b)
+            let id = g
+                .factors()
+                .find(|(_, f)| (f.v1.min(f.v2), f.v1.max(f.v2)) == (a.min(b), a.max(b)))
+                .map(|(id, _)| id)
+                .expect("edge to remove");
+            g.remove_factor(id).unwrap();
+            assert!(eng.remove_factor(id));
+        }
+    }
+}
+
+#[test]
+fn churn_batches_netting_the_same_graph_yield_the_same_canonical_plan() {
+    // both engines run the same warmup, then receive churn batches that
+    // net to the same topology but in different op orders — so the added
+    // factors land in different slots. The next sweep's plan must be
+    // canonically equal (same var sets, same tree edges by endpoints).
+    let cfg = EngineConfig {
+        lanes: 64,
+        seed: 0x0D0A,
+        kernel: KernelKind::default(),
+        // epoch 8 lets warmup plans form; the post-churn re-plan is
+        // triggered eagerly by staleness, not by the epoch boundary
+        sweep: blocked(3, 8),
+    };
+    let mut ga = ring6(0.8);
+    let mut gb = ring6(0.8);
+    let mut a = LanePdSampler::with_config(&ga, cfg);
+    let mut b = LanePdSampler::with_config(&gb, cfg);
+    for _ in 0..48 {
+        a.sweep();
+        b.sweep();
+    }
+    assert_eq!(a.state_words(), b.state_words(), "warmup must be identical");
+    let plan_a = a.block_plan().expect("plan formed").canonical();
+    assert_eq!(plan_a, b.block_plan().expect("plan formed").canonical());
+    assert!(!plan_a.is_empty(), "ring must have grown blocks");
+    // net effect for both: remove ring edges (0,1) and (3,4), add chords
+    // (0,3) and (1,4) — but in different orders
+    apply_ops(&mut ga, &mut a, &[
+        (false, 0, 1),
+        (true, 0, 3),
+        (false, 3, 4),
+        (true, 1, 4),
+    ]);
+    apply_ops(&mut gb, &mut b, &[
+        (true, 1, 4),
+        (false, 3, 4),
+        (true, 0, 3),
+        (false, 0, 1),
+    ]);
+    a.sweep();
+    b.sweep();
+    assert_eq!(
+        a.block_plan().unwrap().canonical(),
+        b.block_plan().unwrap().canonical(),
+        "op order leaked into the plan"
+    );
+    // the surviving ring edges kept their agreement stats, so the
+    // post-churn plan still blocks something immediately
+    assert!(a.block_summary().0 >= 1);
+}

@@ -12,7 +12,8 @@
 
 use std::sync::Arc;
 
-use pdgibbs::engine::{EngineConfig, KernelKind, LanePdSampler};
+use pdgibbs::duality::BlockPolicy;
+use pdgibbs::engine::{EngineConfig, KernelKind, LanePdSampler, SweepPolicy};
 use pdgibbs::graph::{FactorGraph, PairFactor};
 use pdgibbs::util::proptest::{check, Gen};
 use pdgibbs::util::ThreadPool;
@@ -157,6 +158,144 @@ fn kernels_bit_identical_under_churn() {
     }
     compare(&engines, "after inserts");
     // shrink it back under the cap (fallback → freshly rebuilt table)
+    for id in added {
+        g.remove_factor(id).unwrap();
+        for eng in engines.iter_mut() {
+            assert!(eng.remove_factor(id));
+        }
+    }
+    for _ in 0..10 {
+        engines.iter_mut().for_each(LanePdSampler::sweep);
+    }
+    compare(&engines, "after removals");
+}
+
+/// Blocked-policy mirror of [`assert_equivalent`]: jointly-drawn tree
+/// blocks (forward-filter/backward-sample, no kernel primitives) must
+/// not break kernel × pool bit-identity — including while plans form
+/// and re-form mid-run. Returns the final block count so callers can
+/// additionally assert the plan actually engaged.
+fn assert_equivalent_blocked(
+    g: &FactorGraph,
+    lanes: usize,
+    sweeps: usize,
+    kernels: &[(KernelKind, usize)],
+) -> usize {
+    let mut engines: Vec<LanePdSampler> = kernels
+        .iter()
+        .map(|&(kernel, pool)| {
+            let eng = LanePdSampler::with_config(
+                g,
+                EngineConfig {
+                    lanes,
+                    seed: 0xB10C,
+                    kernel,
+                    sweep: SweepPolicy::Blocked(BlockPolicy { cap: 4, epoch: 4 }),
+                },
+            );
+            if pool > 0 {
+                eng.with_pool(Arc::new(ThreadPool::new(pool)))
+            } else {
+                eng
+            }
+        })
+        .collect();
+    for sweep in 0..sweeps {
+        for eng in engines.iter_mut() {
+            eng.sweep();
+        }
+        let (first, rest) = engines.split_first().unwrap();
+        for eng in rest {
+            assert_eq!(
+                first.state_words(),
+                eng.state_words(),
+                "blocked x diverged at sweep {sweep}, lanes {lanes}: {} vs {}",
+                first.kernel().name(),
+                eng.kernel().name()
+            );
+            assert_eq!(
+                first.theta_words(),
+                eng.theta_words(),
+                "blocked theta diverged at sweep {sweep}, lanes {lanes}: {} vs {}",
+                first.kernel().name(),
+                eng.kernel().name()
+            );
+        }
+    }
+    engines[0].block_summary().0
+}
+
+#[test]
+fn blocked_kernels_bit_identical_across_awkward_lane_counts() {
+    // β = 0.8 ensures the agreement EWMAs actually grow blocks; lane
+    // counts cover the same tail-masking edge cases as the flat tests
+    let g = workloads::ising_grid(3, 3, 0.8, 0.05);
+    let combos: Vec<(KernelKind, usize)> =
+        KernelKind::all().iter().map(|&k| (k, 0)).collect();
+    for &lanes in &[1usize, 7, 63, 65, 90] {
+        let blocks = assert_equivalent_blocked(&g, lanes, 30, &combos);
+        if lanes >= 7 {
+            assert!(blocks >= 1, "lanes {lanes}: plan never engaged");
+        }
+    }
+}
+
+#[test]
+fn blocked_tiled_pooled_matches_scalar_serial() {
+    // kernel choice × pool size under the blocked policy: the pooled
+    // runs partition work by sweep *units* (blocks + singletons), a
+    // different chunking than the flat per-variable bounds
+    let g = workloads::ising_grid(3, 4, 0.8, 0.05);
+    let combos = [
+        (KernelKind::Scalar, 0usize),
+        (KernelKind::Scalar, 3),
+        (KernelKind::Tiled, 0),
+        (KernelKind::Tiled, 5),
+    ];
+    let blocks = assert_equivalent_blocked(&g, 70, 30, &combos);
+    assert!(blocks >= 1, "plan never engaged");
+}
+
+#[test]
+fn blocked_kernels_bit_identical_under_churn() {
+    // churn while blocks are live: tree slots die (eager re-plan),
+    // recycled slots restart neutral, the hub crosses the table-cache
+    // cap — trajectories must stay equal through all of it
+    let mut g = workloads::ising_grid(3, 4, 0.8, 0.05);
+    let cfg = |kernel| EngineConfig {
+        lanes: 90,
+        seed: 77,
+        kernel,
+        sweep: SweepPolicy::Blocked(BlockPolicy { cap: 4, epoch: 4 }),
+    };
+    let mut engines: Vec<LanePdSampler> = KernelKind::all()
+        .iter()
+        .map(|&k| LanePdSampler::with_config(&g, cfg(k)))
+        .collect();
+    let compare = |engines: &[LanePdSampler], stage: &str| {
+        let (first, rest) = engines.split_first().unwrap();
+        for eng in rest {
+            assert_eq!(first.state_words(), eng.state_words(), "x diverged {stage}");
+            assert_eq!(first.theta_words(), eng.theta_words(), "θ diverged {stage}");
+        }
+    };
+    for _ in 0..20 {
+        engines.iter_mut().for_each(LanePdSampler::sweep);
+    }
+    compare(&engines, "before churn");
+    assert!(engines[0].block_summary().0 >= 1, "plan must be live pre-churn");
+    let mut added = Vec::new();
+    for v in [5usize, 7, 8, 9, 10] {
+        let id = g.add_factor(PairFactor::ising(0, v, -0.2));
+        added.push(id);
+        for eng in engines.iter_mut() {
+            eng.add_factor(id, g.factor(id).unwrap());
+        }
+    }
+    for _ in 0..10 {
+        engines.iter_mut().for_each(LanePdSampler::sweep);
+    }
+    compare(&engines, "after inserts");
     for id in added {
         g.remove_factor(id).unwrap();
         for eng in engines.iter_mut() {

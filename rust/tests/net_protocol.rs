@@ -297,6 +297,46 @@ fn create_with_minibatch_policy_surfaces_in_stats() {
 }
 
 #[test]
+fn create_with_blocked_policy_surfaces_plan_in_stats() {
+    let (mut coord, mut server) = spawn_edge(NetConfig::default(), 1, 0);
+    let mut wire = Wire::connect(&server);
+    assert_eq!(wire.roundtrip("create 21 4 64 9 blocked:4:8"), "ok");
+    let stats = wire.roundtrip("stats 21");
+    assert!(stats.contains(" policy=blocked:4:8"), "{stats}");
+    assert!(stats.contains(" blocks=0 blocked_vars=0 tree_slots=0"), "{stats}");
+    // strong couplings + sweeps: the agreement EWMAs must grow a plan,
+    // and the plan summary must surface over the wire
+    assert_eq!(
+        wire.roundtrip("apply 21 add 0 1 0.9 add 1 2 0.9 add 2 3 0.9"),
+        "ok"
+    );
+    assert_eq!(wire.roundtrip("sweep 21 64"), "ok");
+    let field = |stats: &str, key: &str| -> usize {
+        stats
+            .split(&format!("{key}="))
+            .nth(1)
+            .and_then(|s| s.split_whitespace().next())
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("missing {key} in {stats}"))
+    };
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let stats = loop {
+        // sweeps are acknowledged at admission; poll until they landed
+        let stats = wire.roundtrip("stats 21");
+        if field(&stats, "sweeps") >= 64 {
+            break stats;
+        }
+        assert!(Instant::now() < deadline, "sweeps never landed: {stats}");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert!(field(&stats, "blocks") >= 1, "{stats}");
+    assert!(field(&stats, "blocked_vars") >= 2, "{stats}");
+    assert!(field(&stats, "tree_slots") >= 1, "{stats}");
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
 fn subscribe_streams_events_then_ok() {
     let (mut coord, mut server) = spawn_edge(NetConfig::default(), 1, 0);
     let mut wire = Wire::connect(&server);

@@ -11,7 +11,9 @@
 //! * the lane engine under scalar + tiled kernels × pool sizes {0, 4},
 //! * `PdEnsemble` and the live coordinator tenant path,
 //! * dense `K_n` scenarios with no small coloring,
-//! * churn sequences crossing the degree-6 x-table-cache cap both ways.
+//! * churn sequences crossing the degree-6 x-table-cache cap both ways,
+//! * minibatched and adaptively-blocked sweep policies (different
+//!   trajectories, same stationary law) per kernel × pool.
 //!
 //! Everything is seed-fixed and thresholded by precomputed statistics
 //! (see `rust/src/validation/harness.rs` and `docs/TESTING.md`) —
@@ -21,7 +23,7 @@
 
 use std::sync::Arc;
 
-use pdgibbs::duality::MinibatchPolicy;
+use pdgibbs::duality::{BlockPolicy, MinibatchPolicy};
 use pdgibbs::engine::{EngineConfig, KernelKind, SweepPolicy};
 use pdgibbs::samplers::{BlockedPd, ChromaticGibbs, PdSampler, SequentialGibbs, SwendsenWang};
 use pdgibbs::util::ThreadPool;
@@ -258,6 +260,60 @@ fn minibatch_lane_paths_stay_exact_through_hub_churn() {
             p.engine().model().mb_plan(0).is_some(),
             "hub plan must survive churn (degree is unchanged)"
         );
+    }
+}
+
+// -- blocked sweeps: adaptive tree-blocking under the same gates ------------
+
+/// A small cap with a short epoch: plans re-form often enough that the
+/// gates sample across several re-planning boundaries, not one frozen
+/// plan.
+fn blocked_policy() -> SweepPolicy {
+    SweepPolicy::Blocked(BlockPolicy { cap: 4, epoch: 8 })
+}
+
+#[test]
+fn blocked_lane_paths_pass_gates_across_kernels_and_pools() {
+    // the jointly-drawn tree blocks change the trajectory, not the law:
+    // the blocked chain must clear the same z/TV/chi-square gates as
+    // every exact path, on the above-critical grid where blocking is
+    // actually exercised — per kernel, at pool sizes {0, 4}
+    let s = scenarios::by_name("grid3x3-above");
+    for &kernel in KernelKind::all() {
+        for pool_threads in [0usize, 4] {
+            let pool = (pool_threads > 0).then(|| Arc::new(ThreadPool::new(pool_threads)));
+            let mut p = LanePath::new(
+                s.graph.clone(),
+                EngineConfig { lanes: 64, seed: 0xD1, kernel, sweep: blocked_policy() },
+                pool,
+            );
+            let cfg = GateConfig::with_budget(8192, s.tau);
+            let name = format!("grid3x3-above/{}-pool{pool_threads}", kernel.name());
+            let r = validate(&mut p, &s.graph, &name, &cfg);
+            println!("{}", r.summary());
+            r.assert_passed();
+            assert!(
+                p.engine().block_summary().0 >= 1,
+                "{name}: the above-critical grid must actually grow blocks"
+            );
+        }
+    }
+}
+
+#[test]
+fn blocked_lane_paths_stay_exact_through_churn() {
+    // churn removes a mid-chain factor and grows a hub across the table
+    // cap: the plan is invalidated eagerly, recycled slots restart with
+    // neutral stats, and the re-planned chain must still pass the gates
+    // against the final graph
+    let s = scenarios::by_name("churn-cross-up");
+    for kernel in [KernelKind::Scalar, KernelKind::Tiled] {
+        let mut p = LanePath::new(
+            s.graph.clone(),
+            EngineConfig { lanes: 64, seed: 0xD2, kernel, sweep: blocked_policy() },
+            None,
+        );
+        check_churn(&mut p, &s, 16_384);
     }
 }
 
