@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use crate::diagnostics::{mixing_time_multi, MixingResult};
 use crate::duality::DualModel;
-use crate::engine::{EngineConfig, LanePdSampler, SweepPolicy};
+use crate::engine::{EngineConfig, EngineError, LanePdSampler, SweepPolicy};
 use crate::graph::{FactorGraph, FactorId, PairFactor};
 use crate::util::ThreadPool;
 
@@ -24,10 +24,13 @@ pub struct PdEnsemble {
     engine: LanePdSampler,
     /// Variables whose per-sweep traces are recorded for PSRF.
     monitor: Vec<usize>,
-    /// `traces[0]` = magnetization; `traces[1 + k]` = monitor var k.
-    /// Layout: `traces[stat][chain][sweep]`.
+    /// `traces[0]` = magnetization (fraction of sites off state 0 — the
+    /// fraction of ones on binary models); `traces[1 + m]` = monitor
+    /// var m. Layout: `traces[stat][chain][sweep]`.
     traces: Vec<Vec<Vec<f64>>>,
-    /// Per-variable, per-chain sample sums since the last `reset_stats`.
+    /// Per-chain sample sums since the last `reset_stats`, flattened
+    /// `sums[chain][v·(k−1) + (s−1)]` for states `s ∈ 1..k` (length-n
+    /// ones counts on binary models).
     sums: Vec<Vec<f64>>,
     sweeps_done: usize,
     stat_sweeps: usize,
@@ -47,7 +50,19 @@ impl PdEnsemble {
         seed: u64,
         sweep: SweepPolicy,
     ) -> Self {
-        Self::from_model_config(
+        Self::try_with_policy(graph, chains, seed, sweep)
+            .expect("unsupported policy × cardinality combination")
+    }
+
+    /// Fallible [`PdEnsemble::with_policy`]: surfaces the engine's
+    /// policy × K rejection instead of panicking.
+    pub fn try_with_policy(
+        graph: &FactorGraph,
+        chains: usize,
+        seed: u64,
+        sweep: SweepPolicy,
+    ) -> Result<Self, EngineError> {
+        Self::try_from_model_config(
             DualModel::from_graph(graph),
             EngineConfig {
                 lanes: chains,
@@ -73,18 +88,30 @@ impl PdEnsemble {
     /// Wrap an existing dual model with full [`EngineConfig`] knobs
     /// (`cfg.lanes` is the chain count).
     pub fn from_model_config(model: DualModel, cfg: EngineConfig) -> Self {
+        Self::try_from_model_config(model, cfg).expect("unsupported engine configuration")
+    }
+
+    /// Fallible construction: rejects policy × cardinality combinations
+    /// the engine does not support (e.g. minibatched K-state sweeps)
+    /// instead of panicking — the multi-tenant serving path must turn
+    /// these into error replies, not dead shard threads.
+    pub fn try_from_model_config(
+        model: DualModel,
+        cfg: EngineConfig,
+    ) -> Result<Self, EngineError> {
         let chains = cfg.lanes;
         assert!(chains >= 1);
         let n = model.num_vars();
-        let engine = LanePdSampler::from_model_config(model, cfg);
-        Self {
+        let marg = n * (model.k() - 1);
+        let engine = LanePdSampler::try_from_model_config(model, cfg)?;
+        Ok(Self {
             engine,
             monitor: Vec::new(),
             traces: vec![vec![Vec::new(); chains]],
-            sums: vec![vec![0.0; n]; chains],
+            sums: vec![vec![0.0; marg]; chains],
             sweeps_done: 0,
             stat_sweeps: 0,
-        }
+        })
     }
 
     /// Enable pooled sweeps (the engine splits work over variables).
@@ -100,12 +127,15 @@ impl PdEnsemble {
         self.traces = vec![vec![Vec::new(); m]; 1 + self.monitor.len()];
     }
 
-    /// Overdispersed initialization: chain c starts all-0 / all-1 / random.
+    /// Overdispersed initialization: chain c starts all-0 / all-top /
+    /// random (all-0 / all-1 on binary models). Clamped sites keep
+    /// their evidence value throughout.
     pub fn init_overdispersed(&mut self) {
+        let top = (self.k() - 1) as u8;
         for c in 0..self.num_chains() {
             match c % 3 {
-                0 => self.engine.fill_lane(c, false),
-                1 => self.engine.fill_lane(c, true),
+                0 => self.engine.fill_lane_state(c, 0),
+                1 => self.engine.fill_lane_state(c, top),
                 _ => self.engine.randomize_lane(c),
             }
             self.engine.clear_theta_lane(c);
@@ -115,6 +145,36 @@ impl PdEnsemble {
     /// Number of chains (engine lanes).
     pub fn num_chains(&self) -> usize {
         self.engine.lanes()
+    }
+
+    /// States per variable of the shared model (2 = binary).
+    pub fn k(&self) -> usize {
+        self.engine.k()
+    }
+
+    /// Clamp site `v` to evidence `state` in **every** chain: its draws
+    /// are skipped while it keeps conditioning its neighbors, so the
+    /// ensemble targets the conditional law given the evidence.
+    /// Accumulated statistics are dropped — the target changed, stale
+    /// sums are biased toward the unconditioned law.
+    pub fn clamp(&mut self, v: usize, state: u8) -> Result<(), EngineError> {
+        self.engine.clamp(v, state)?;
+        self.reset_stats();
+        Ok(())
+    }
+
+    /// Release a clamped site (its last evidence value persists until
+    /// the next sweep resamples it). Statistics are dropped as for
+    /// [`PdEnsemble::clamp`].
+    pub fn unclamp(&mut self, v: usize) -> Result<(), EngineError> {
+        self.engine.unclamp(v)?;
+        self.reset_stats();
+        Ok(())
+    }
+
+    /// Number of currently clamped sites.
+    pub fn clamped_count(&self) -> usize {
+        self.engine.clamped_count()
     }
 
     /// Total sweeps performed since construction.
@@ -199,11 +259,13 @@ impl PdEnsemble {
         self.stat_sweeps += 1;
         let n = self.engine.num_vars();
         let m = self.num_chains();
+        let k = self.engine.k();
         let words = self.engine.words_per_site();
-        // one pass over the packed state updates both the per-chain sums
-        // and the magnetization counts (bit-sparse iteration per word)
         let mut mag = vec![0u32; m];
-        {
+        if k == 2 {
+            // one pass over the packed state updates both the per-chain
+            // sums and the magnetization counts (bit-sparse iteration per
+            // word; one plane per site, so rows are `words` apart)
             let state = self.engine.state_words();
             for v in 0..n {
                 for w in 0..words {
@@ -216,14 +278,24 @@ impl PdEnsemble {
                     }
                 }
             }
+        } else {
+            for (c, mg) in mag.iter_mut().enumerate() {
+                for v in 0..n {
+                    let s = self.engine.lane_value(v, c) as usize;
+                    if s > 0 {
+                        *mg += 1;
+                        self.sums[c][v * (k - 1) + (s - 1)] += 1.0;
+                    }
+                }
+            }
         }
         let nf = n as f64;
-        for (c, &ones) in mag.iter().enumerate() {
-            self.traces[0][c].push(ones as f64 / nf);
+        for (c, &off0) in mag.iter().enumerate() {
+            self.traces[0][c].push(off0 as f64 / nf);
         }
-        for (k, &v) in self.monitor.iter().enumerate() {
+        for (mi, &v) in self.monitor.iter().enumerate() {
             for c in 0..m {
-                self.traces[1 + k][c].push(self.engine.lane_bit(v, c) as f64);
+                self.traces[1 + mi][c].push(self.engine.lane_value(v, c) as f64);
             }
         }
     }
@@ -248,9 +320,11 @@ impl PdEnsemble {
     }
 
     /// Posterior marginal estimates pooled across chains since the last
-    /// `reset_stats`.
+    /// `reset_stats`, flattened `out[v·(k−1) + (s−1)] = P(x_v = s)` for
+    /// `s ∈ 1..k` — length-n `P(x_v = 1)` on binary models. Clamped
+    /// sites report their evidence state with probability exactly 1.
     pub fn marginals(&self) -> Vec<f64> {
-        let n = self.engine.num_vars();
+        let n = self.engine.num_vars() * (self.engine.k() - 1);
         let denom = (self.stat_sweeps * self.num_chains()) as f64;
         let mut out = vec![0.0; n];
         if denom == 0.0 {
@@ -389,5 +463,83 @@ mod tests {
         e.init_overdispersed();
         assert_eq!(e.chain_state(0), vec![0, 0, 0, 0]);
         assert_eq!(e.chain_state(1), vec![1, 1, 1, 1]);
+        // K-state: all-0 / all-top, and clamped sites hold their evidence
+        let mut g3 = FactorGraph::new_k(3, 4);
+        g3.add_factor(PairFactor::potts(0, 1, 0.4));
+        g3.add_factor(PairFactor::potts(1, 2, 0.4));
+        let mut e3 = PdEnsemble::new(&g3, 3, 46);
+        e3.clamp(1, 2).unwrap();
+        e3.init_overdispersed();
+        assert_eq!(e3.chain_state(0), vec![0, 2, 0]);
+        assert_eq!(e3.chain_state(1), vec![3, 2, 3]);
+        assert_eq!(e3.chain_state(2)[1], 2);
+    }
+
+    #[test]
+    fn kstate_ensemble_marginals_and_clamping() {
+        let mut g = FactorGraph::new_k(4, 3);
+        for v in 0..4 {
+            let beta = if v % 2 == 0 { 0.7 } else { -0.3 };
+            g.add_factor(PairFactor::potts(v, (v + 1) % 4, beta));
+        }
+        let mut e = PdEnsemble::new(&g, 16, 48);
+        assert_eq!(e.k(), 3);
+        e.run(300);
+        e.reset_stats();
+        e.run(8_000);
+        let got = e.marginals();
+        assert_eq!(got.len(), 4 * 2, "flattened n·(k−1) convention");
+        let want =
+            crate::validation::marginals_from_joint_k(&crate::validation::joint_probs(&g), 4, 3);
+        for (i, (&g_, &w)) in got.iter().zip(&want).enumerate() {
+            assert!((g_ - w).abs() < 0.015, "entry {i}: {g_} vs exact {w}");
+        }
+        // clamping retargets the whole ensemble to the conditional law
+        e.clamp(2, 1).unwrap();
+        assert_eq!(e.clamped_count(), 1);
+        assert!(e.clamp(2, 3).is_err(), "state ≥ k must be rejected");
+        e.run(300);
+        e.reset_stats();
+        e.run(8_000);
+        let cond = e.marginals();
+        assert_eq!(cond[2 * 2], 1.0, "clamped site reports its evidence");
+        assert_eq!(cond[2 * 2 + 1], 0.0);
+        // exact conditional marginal of the free site 0 given x_2 = 1
+        let probs = crate::validation::joint_probs(&g);
+        let (mut z, mut m0) = (0.0f64, [0.0f64; 2]);
+        for (code, &p) in probs.iter().enumerate() {
+            let (s0, s2) = (code % 3, (code / 9) % 3);
+            if s2 != 1 {
+                continue;
+            }
+            z += p;
+            if s0 > 0 {
+                m0[s0 - 1] += p;
+            }
+        }
+        for s in 0..2 {
+            let w = m0[s] / z;
+            assert!(
+                (cond[s] - w).abs() < 0.02,
+                "conditional entry {s}: {} vs exact {w}",
+                cond[s]
+            );
+        }
+        e.unclamp(2).unwrap();
+        assert_eq!(e.clamped_count(), 0);
+    }
+
+    #[test]
+    fn unsupported_policy_is_an_error_not_a_panic() {
+        use crate::duality::MinibatchPolicy;
+        let mut g = FactorGraph::new_k(3, 3);
+        g.add_factor(PairFactor::potts(0, 1, 0.3));
+        let r = PdEnsemble::try_with_policy(
+            &g,
+            4,
+            7,
+            SweepPolicy::Minibatch(MinibatchPolicy::default()),
+        );
+        assert!(r.is_err(), "minibatched K-state sweeps must be rejected");
     }
 }

@@ -56,8 +56,9 @@
 //!   control backed by the [`Depth`] ledger (explicit `overloaded`
 //!   rejections, never unbounded queues) and edge latency histograms.
 //!
-//! Tenant lifecycle: `create` / `apply` / `sweep` / `marginals` /
-//! `mixing` / `stats` / `suspend` / `resume` / `drop`. Requests to one
+//! Tenant lifecycle: `create` (binary or K-state via `k=K`) / `apply` /
+//! `sweep` / `clamp` / `unclamp` / `marginals` / `mixing` / `stats` /
+//! `suspend` / `resume` / `drop`. Requests to one
 //! tenant are FIFO (one queue per shard, one consumer); queries return
 //! [`Result`] so a dead shard or unknown tenant degrades into an error
 //! the caller can route around.
@@ -376,6 +377,28 @@ impl Client {
     /// Re-enroll a suspended tenant in background sweeping.
     pub fn resume(&self, tenant: TenantId) -> Result<()> {
         self.send(self.shard_of(tenant), ShardRequest::Resume { tenant })
+    }
+
+    /// Clamp site `v` of a tenant to evidence `state`: subsequent sweeps
+    /// target the conditional law given the evidence. Synchronous — an
+    /// out-of-range site/state or a policy that cannot clamp (minibatch,
+    /// blocked) is an error reply, not a panic.
+    pub fn clamp(&self, tenant: TenantId, v: usize, state: u8) -> Result<()> {
+        self.ask(self.shard_of(tenant), |reply| ShardRequest::Clamp {
+            tenant,
+            v,
+            state,
+            reply,
+        })
+    }
+
+    /// Release a clamped site (no-op if it was not clamped).
+    pub fn unclamp(&self, tenant: TenantId, v: usize) -> Result<()> {
+        self.ask(self.shard_of(tenant), |reply| ShardRequest::Unclamp {
+            tenant,
+            v,
+            reply,
+        })
     }
 
     /// Posterior marginal estimates.
@@ -710,6 +733,54 @@ mod tests {
         let s = client.stats(0).unwrap();
         assert_eq!(s.stable_for, 0, "churn resets stability");
         assert_eq!(s.dispatch, DispatchDecision::Native);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn kstate_tenants_and_clamping_over_the_client() {
+        use crate::graph::PairFactor;
+        let mut coord = Coordinator::spawn(CoordinatorConfig {
+            shards: 2,
+            quantum: 0,
+            ..Default::default()
+        });
+        let client = coord.client();
+        let mut g = FactorGraph::new_k(4, 3);
+        for v in 0..3 {
+            g.add_factor(PairFactor::potts(v, v + 1, 0.5));
+        }
+        client.create_tenant(7, g, tcfg(7, 4)).unwrap();
+        let s = client.stats(7).unwrap();
+        assert_eq!((s.k, s.clamped), (3, 0));
+        client.clamp(7, 0, 2).unwrap();
+        assert!(client.clamp(7, 0, 3).is_err(), "state ≥ k is an error reply");
+        assert!(client.clamp(7, 9, 0).is_err(), "unknown site likewise");
+        assert!(client.clamp(999, 0, 0).is_err(), "unknown tenant likewise");
+        client.sweep(7, 50).unwrap();
+        let s = client.stats(7).unwrap();
+        assert_eq!(s.clamped, 1);
+        let m = client.marginals(7).unwrap();
+        assert_eq!(m.len(), 4 * 2, "flattened n·(k−1) marginals on the wire");
+        assert_eq!(m[1], 1.0, "site 0 pinned to state 2");
+        client.unclamp(7, 0).unwrap();
+        assert_eq!(client.stats(7).unwrap().clamped, 0);
+        // unsupported policy × K: error reply, shard stays alive
+        let mut g2 = FactorGraph::new_k(3, 3);
+        g2.add_factor(PairFactor::potts(0, 1, 0.3));
+        let bad = TenantConfig {
+            sweep: crate::engine::SweepPolicy::Minibatch(
+                crate::duality::MinibatchPolicy::default(),
+            ),
+            ..tcfg(8, 4)
+        };
+        let err = client.create_tenant(8, g2.clone(), bad).unwrap_err();
+        assert!(
+            err.to_string().contains("create rejected"),
+            "clean rejection, got: {err}"
+        );
+        // the id is reusable after a rejected create
+        client.create_tenant(8, g2, tcfg(8, 4)).unwrap();
+        assert_eq!(client.stats(8).unwrap().k, 3);
         coord.shutdown();
     }
 

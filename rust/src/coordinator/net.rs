@@ -426,10 +426,11 @@ pub fn execute(client: &Client, req: Request) -> Response {
             vars,
             chains,
             seed,
+            k,
             sweep,
         } => done(client.create_tenant(
             tenant,
-            FactorGraph::new(vars),
+            FactorGraph::new_k(vars, k),
             TenantConfig {
                 chains,
                 seed,
@@ -439,6 +440,8 @@ pub fn execute(client: &Client, req: Request) -> Response {
         )),
         Request::Apply { tenant, ops } => done(client.apply(tenant, ops)),
         Request::Sweep { tenant, n } => done(client.sweep(tenant, n)),
+        Request::Clamp { tenant, v, state } => done(client.clamp(tenant, v, state)),
+        Request::Unclamp { tenant, v } => done(client.unclamp(tenant, v)),
         Request::Marginals { tenant } => match client.marginals(tenant) {
             Ok(m) => Response::Marginals(m),
             Err(e) => Response::Exec(e.to_string()),

@@ -11,18 +11,27 @@
 //! ## Grammar
 //!
 //! ```text
-//! request   := create | apply | sweep | marginals | stats | drop | subscribe
-//! create    := "create" tenant vars [chains] [seed] [policy]
+//! request   := create | apply | sweep | clamp | unclamp
+//!            | marginals | stats | drop | subscribe
+//! create    := "create" tenant vars [chains] [seed] ["k=" K] [policy]
 //! policy    := "exact" | "minibatch" [":" degree [":" stride]]
 //!            | "blocked" [":" cap [":" epoch]]
 //! apply     := "apply" tenant op+
 //! op        := "add" v1 v2 beta | "del" index
 //! sweep     := "sweep" tenant n
+//! clamp     := "clamp" tenant v state
+//! unclamp   := "unclamp" tenant v
 //! marginals := "marginals" tenant
 //! stats     := "stats" tenant
 //! drop      := "drop" tenant
 //! subscribe := "subscribe" tenant count every
 //! ```
+//!
+//! `k=K` hosts a K-state Potts tenant (`2 ≤ K ≤ 8`; omitted = binary);
+//! `clamp` pins a site to an evidence state so subsequent sweeps target
+//! the conditional law, `unclamp` releases it. The parser only range
+//! checks against the wire caps — whether the state fits the *tenant's*
+//! cardinality is an execution-time check that comes back as `err exec`.
 //!
 //! ## Diagnostics
 //!
@@ -41,6 +50,7 @@
 //! `docs/PROTOCOL.md` for the full reply grammar and semantics.
 
 use crate::engine::SweepPolicy;
+use crate::graph::MAX_STATES;
 use crate::util::span::{Diagnostic, Span};
 use crate::workloads::ChurnOp;
 
@@ -71,6 +81,9 @@ pub enum Request {
         chains: usize,
         /// Per-tenant RNG root.
         seed: u64,
+        /// States per variable (`k=K` on the wire; 2 = binary Ising,
+        /// larger = Potts on the indicator dual).
+        k: usize,
         /// Sweep policy (`exact` unless the client opts into minibatched
         /// hub updates or adaptive tree-blocking; λ knobs stay at their
         /// defaults on the wire).
@@ -89,6 +102,23 @@ pub enum Request {
         tenant: TenantId,
         /// Sweep count.
         n: usize,
+    },
+    /// Pin a site to an evidence state (synchronous; range/policy
+    /// violations come back as `err exec`).
+    Clamp {
+        /// Target tenant.
+        tenant: TenantId,
+        /// Site to clamp.
+        v: usize,
+        /// Evidence state (`< k` of the tenant's model).
+        state: u8,
+    },
+    /// Release a clamped site.
+    Unclamp {
+        /// Target tenant.
+        tenant: TenantId,
+        /// Site to release.
+        v: usize,
     },
     /// Read posterior marginal estimates.
     Marginals {
@@ -124,6 +154,8 @@ impl Request {
             Request::Create { tenant, .. }
             | Request::Apply { tenant, .. }
             | Request::Sweep { tenant, .. }
+            | Request::Clamp { tenant, .. }
+            | Request::Unclamp { tenant, .. }
             | Request::Marginals { tenant }
             | Request::Stats { tenant }
             | Request::Drop { tenant }
@@ -190,7 +222,7 @@ impl Response {
                 format!(
                     "ok stats vars={} factors={} sweeps={} background={} ops={} \
                      stable_for={} cost={} suspended={} dispatch={dispatch} policy={} \
-                     blocks={} blocked_vars={} tree_slots={}",
+                     blocks={} blocked_vars={} tree_slots={} clamped={} k={}",
                     t.num_vars,
                     t.num_factors,
                     t.sweeps_done,
@@ -203,6 +235,8 @@ impl Response {
                     t.blocks,
                     t.blocked_vars,
                     t.tree_slots,
+                    t.clamped,
+                    t.k,
                 )
             }
             Response::Event {
@@ -382,7 +416,7 @@ impl<'a> Cursor<'a> {
 
 /// Label listing the accepted verbs, shared by the unknown-verb and
 /// empty-line diagnostics.
-const VERBS: &str = "verb create|apply|sweep|marginals|stats|drop|subscribe";
+const VERBS: &str = "verb create|apply|sweep|clamp|unclamp|marginals|stats|drop|subscribe";
 
 /// Parse one request line (no trailing newline; a trailing CR is
 /// stripped). Errors are spanned, labeled [`Diagnostic`]s — see the
@@ -413,6 +447,19 @@ pub fn parse_request(line: &str) -> Result<Request, Diagnostic> {
             } else {
                 tenant ^ 0x9E37_79B9_7F4A_7C15
             };
+            // `k=K` is non-numeric too, so it sits unambiguously between
+            // the numeric knobs and the policy token
+            let k = match c.peek() {
+                Some((t, _)) if t.starts_with("k=") => {
+                    c.parse_with("state count k=2..=8", |t| {
+                        t.strip_prefix("k=")
+                            .and_then(|v| v.parse::<usize>().ok())
+                            .filter(|k| (2..=MAX_STATES).contains(k))
+                    })?
+                    .0
+                }
+                _ => 2,
+            };
             let sweep = match c.peek() {
                 Some(_) => {
                     c.parse_with(
@@ -428,6 +475,7 @@ pub fn parse_request(line: &str) -> Result<Request, Diagnostic> {
                 vars,
                 chains,
                 seed,
+                k,
                 sweep,
             }
         }
@@ -473,6 +521,21 @@ pub fn parse_request(line: &str) -> Result<Request, Diagnostic> {
             let (n, _) = c.usize_in("sweep count 1..=1000000", 1, MAX_SWEEPS)?;
             Request::Sweep { tenant, n }
         }
+        "clamp" => {
+            let (tenant, _) = c.u64("tenant id (u64)")?;
+            let (v, _) = c.usize_in("variable index", 0, MAX_VARS - 1)?;
+            let (state, _) = c.usize_in("evidence state 0..=7", 0, MAX_STATES - 1)?;
+            Request::Clamp {
+                tenant,
+                v,
+                state: state as u8,
+            }
+        }
+        "unclamp" => {
+            let (tenant, _) = c.u64("tenant id (u64)")?;
+            let (v, _) = c.usize_in("variable index", 0, MAX_VARS - 1)?;
+            Request::Unclamp { tenant, v }
+        }
         "marginals" => Request::Marginals {
             tenant: c.u64("tenant id (u64)")?.0,
         },
@@ -517,6 +580,7 @@ mod tests {
                 vars: 16,
                 chains: 4,
                 seed: 99,
+                k: 2,
                 sweep: SweepPolicy::Exact,
             }
         );
@@ -527,6 +591,7 @@ mod tests {
                 vars: 16,
                 chains: 8,
                 seed: 7 ^ 0x9E37_79B9_7F4A_7C15,
+                k: 2,
                 sweep: SweepPolicy::Exact,
             }
         );
@@ -587,6 +652,7 @@ mod tests {
                 vars: 16,
                 chains: 4,
                 seed: 99,
+                k: 2,
                 sweep: mb(128, 4),
             }
         );
@@ -599,6 +665,7 @@ mod tests {
                 vars: 16,
                 chains: 8,
                 seed: 7 ^ 0x9E37_79B9_7F4A_7C15,
+                k: 2,
                 sweep: SweepPolicy::Minibatch(MinibatchPolicy::default()),
             }
         );
@@ -609,6 +676,7 @@ mod tests {
                 vars: 16,
                 chains: 4,
                 seed: 7 ^ 0x9E37_79B9_7F4A_7C15,
+                k: 2,
                 sweep: SweepPolicy::Exact,
             }
         );
@@ -627,6 +695,7 @@ mod tests {
                 vars: 16,
                 chains: 4,
                 seed: 99,
+                k: 2,
                 sweep: SweepPolicy::Blocked(BlockPolicy { cap: 6, epoch: 4 }),
             }
         );
@@ -637,6 +706,7 @@ mod tests {
                 vars: 16,
                 chains: 8,
                 seed: 7 ^ 0x9E37_79B9_7F4A_7C15,
+                k: 2,
                 sweep: SweepPolicy::Blocked(BlockPolicy::default()),
             }
         );
@@ -647,6 +717,74 @@ mod tests {
         assert!(d.expected.contains("sweep policy"), "{d}");
         // nothing may follow the policy
         let d = parse_err("create 7 16 exact 4");
+        assert_eq!(d.expected, "end of line");
+    }
+
+    #[test]
+    fn kstate_create_and_clamp_round_trip() {
+        // k= after any prefix of the numeric knobs, before the policy
+        assert_eq!(
+            parse_request("create 7 9 4 99 k=3").unwrap(),
+            Request::Create {
+                tenant: 7,
+                vars: 9,
+                chains: 4,
+                seed: 99,
+                k: 3,
+                sweep: SweepPolicy::Exact,
+            }
+        );
+        assert_eq!(
+            parse_request("create 7 9 k=5 exact").unwrap(),
+            Request::Create {
+                tenant: 7,
+                vars: 9,
+                chains: 8,
+                seed: 7 ^ 0x9E37_79B9_7F4A_7C15,
+                k: 5,
+                sweep: SweepPolicy::Exact,
+            }
+        );
+        assert_eq!(
+            parse_request("clamp 3 4 2").unwrap(),
+            Request::Clamp {
+                tenant: 3,
+                v: 4,
+                state: 2
+            }
+        );
+        assert_eq!(
+            parse_request("unclamp 3 4").unwrap(),
+            Request::Unclamp { tenant: 3, v: 4 }
+        );
+    }
+
+    #[test]
+    fn malformed_kstate_frames_are_spanned_and_labeled() {
+        // out-of-range cardinality points at the k= token
+        let d = parse_err("create 1 9 k=9");
+        assert_eq!(d.span, Span::new(11, 14));
+        assert!(d.expected.contains("k=2..=8"), "{d}");
+        assert_eq!(d.found, "\"k=9\"");
+        let d = parse_err("create 1 9 k=1");
+        assert!(d.expected.contains("k=2..=8"), "{d}");
+        let d = parse_err("create 1 9 k=three");
+        assert!(d.expected.contains("k=2..=8"), "{d}");
+        // k= must precede the policy token
+        let d = parse_err("create 1 9 exact k=3");
+        assert_eq!(d.expected, "end of line");
+        assert_eq!(d.found, "\"k=3\"");
+        // clamp arity and range failures
+        let d = parse_err("clamp 3 4");
+        assert_eq!(d.span, Span::point(9));
+        assert!(d.expected.contains("evidence state"), "{d}");
+        assert_eq!(d.found, "end of line");
+        let d = parse_err("clamp 3 4 8");
+        assert_eq!(d.span, Span::new(10, 11));
+        assert!(d.expected.contains("0..=7"), "{d}");
+        let d = parse_err("unclamp 3");
+        assert!(d.expected.contains("variable index"), "{d}");
+        let d = parse_err("unclamp 3 4 5");
         assert_eq!(d.expected, "end of line");
     }
 

@@ -63,6 +63,17 @@ pub(super) enum ShardRequest {
     Resume {
         tenant: TenantId,
     },
+    Clamp {
+        tenant: TenantId,
+        v: usize,
+        state: u8,
+        reply: Sender<Result<()>>,
+    },
+    Unclamp {
+        tenant: TenantId,
+        v: usize,
+        reply: Sender<Result<()>>,
+    },
     Marginals {
         tenant: TenantId,
         reply: Sender<Result<Vec<f64>>>,
@@ -100,6 +111,8 @@ impl ShardRequest {
             | ShardRequest::ResetStats { tenant }
             | ShardRequest::Suspend { tenant }
             | ShardRequest::Resume { tenant }
+            | ShardRequest::Clamp { tenant, .. }
+            | ShardRequest::Unclamp { tenant, .. }
             | ShardRequest::Marginals { tenant, .. }
             | ShardRequest::Mixing { tenant, .. }
             | ShardRequest::Stats { tenant, .. } => Some(*tenant),
@@ -219,12 +232,24 @@ pub(super) fn shard_worker(
                     ))
                 } else {
                     let view = metrics.scoped(format!("tenant{tenant}"));
-                    tenants.insert(tenant, Tenant::new(graph, &tcfg, pool.clone(), view));
-                    if background {
-                        sched.enroll(tenant);
+                    // fallible: an unsupported policy × cardinality combo
+                    // (e.g. minibatch × K-state) must come back as an
+                    // error reply, not a dead shard thread
+                    match Tenant::try_new(graph, &tcfg, pool.clone(), view) {
+                        Ok(t) => {
+                            tenants.insert(tenant, t);
+                            if background {
+                                sched.enroll(tenant);
+                            }
+                            shard_metrics.inc("tenants_created");
+                            Ok(())
+                        }
+                        Err(e) => {
+                            metrics.remove_scope(&format!("tenant{tenant}"));
+                            shard_metrics.inc("tenants_rejected");
+                            Err(crate::err!("create rejected: {e}"))
+                        }
                     }
-                    shard_metrics.inc("tenants_created");
-                    Ok(())
                 };
                 let _ = reply.send(out);
             }
@@ -270,6 +295,35 @@ pub(super) fn shard_worker(
                 } else {
                     shard_metrics.inc("unknown_tenant");
                 }
+            }
+            ShardRequest::Clamp {
+                tenant,
+                v,
+                state,
+                reply,
+            } => {
+                let out = match tenants.get_mut(&tenant) {
+                    Some(t) => t
+                        .clamp(v, state)
+                        .map_err(|e| crate::err!("clamp rejected: {e}")),
+                    None => Err(crate::err!(
+                        "tenant {tenant} not hosted on shard {}",
+                        config.shard_id
+                    )),
+                };
+                let _ = reply.send(out);
+            }
+            ShardRequest::Unclamp { tenant, v, reply } => {
+                let out = match tenants.get_mut(&tenant) {
+                    Some(t) => t
+                        .unclamp(v)
+                        .map_err(|e| crate::err!("unclamp rejected: {e}")),
+                    None => Err(crate::err!(
+                        "tenant {tenant} not hosted on shard {}",
+                        config.shard_id
+                    )),
+                };
+                let _ = reply.send(out);
             }
             ShardRequest::Marginals { tenant, reply } => {
                 let out = lookup(&tenants, tenant, config.shard_id).map(Tenant::marginals);

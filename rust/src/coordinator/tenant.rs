@@ -12,7 +12,7 @@
 use std::sync::Arc;
 
 use crate::diagnostics::MixingResult;
-use crate::engine::SweepPolicy;
+use crate::engine::{EngineError, SweepPolicy};
 use crate::graph::{FactorGraph, FactorId, PairFactor};
 use crate::runtime::Manifest;
 use crate::util::ThreadPool;
@@ -59,6 +59,10 @@ impl Default for TenantConfig {
 pub struct TenantStats {
     /// Variables in the tenant's model.
     pub num_vars: usize,
+    /// States per variable (2 = binary Ising, K > 2 = Potts).
+    pub k: usize,
+    /// Sites currently clamped to evidence.
+    pub clamped: usize,
     /// Live factors in the tenant's model.
     pub num_factors: usize,
     /// Total sweeps (foreground + background).
@@ -114,8 +118,22 @@ impl Tenant {
         pool: Option<Arc<ThreadPool>>,
         metrics: MetricsView,
     ) -> Self {
+        Self::try_new(graph, config, pool, metrics)
+            .expect("unsupported policy × cardinality combination")
+    }
+
+    /// Fallible [`Tenant::new`]: an unsupported policy × cardinality
+    /// combination (e.g. minibatched sweeps on a K-state model) is an
+    /// error the serving edge reports to the client, never a panic on
+    /// the shard thread other tenants share.
+    pub fn try_new(
+        graph: FactorGraph,
+        config: &TenantConfig,
+        pool: Option<Arc<ThreadPool>>,
+        metrics: MetricsView,
+    ) -> Result<Self, EngineError> {
         let mut ensemble =
-            PdEnsemble::with_policy(&graph, config.chains, config.seed, config.sweep);
+            PdEnsemble::try_with_policy(&graph, config.chains, config.seed, config.sweep)?;
         if let Some(pool) = pool {
             ensemble = ensemble.with_pool(pool);
         }
@@ -124,7 +142,7 @@ impl Tenant {
         }
         ensemble.init_overdispersed();
         let live = graph.factors().map(|(id, _)| id).collect();
-        Self {
+        Ok(Self {
             graph,
             ensemble,
             live,
@@ -133,7 +151,26 @@ impl Tenant {
             background_sweeps: 0,
             stable_for: 0,
             suspended: false,
-        }
+        })
+    }
+
+    /// Clamp site `v` to evidence `state` across all chains (see
+    /// [`PdEnsemble::clamp`]). The target distribution changed, so
+    /// statistics and the dispatch stability clock both reset — evidence
+    /// is a semantic mutation, exactly like churn.
+    pub fn clamp(&mut self, v: usize, state: u8) -> Result<(), EngineError> {
+        self.ensemble.clamp(v, state)?;
+        self.stable_for = 0;
+        self.metrics.add("clamps", 1);
+        Ok(())
+    }
+
+    /// Release a clamped site (see [`PdEnsemble::unclamp`]).
+    pub fn unclamp(&mut self, v: usize) -> Result<(), EngineError> {
+        self.ensemble.unclamp(v)?;
+        self.stable_for = 0;
+        self.metrics.add("unclamps", 1);
+        Ok(())
     }
 
     /// Apply topology mutations; if anything landed, resets statistics
@@ -255,6 +292,8 @@ impl Tenant {
             blocked_vars,
             tree_slots,
             num_vars: self.graph.num_vars(),
+            k: self.graph.k(),
+            clamped: self.ensemble.clamped_count(),
             num_factors: self.graph.num_factors(),
             sweeps_done: self.ensemble.sweeps_done(),
             background_sweeps: self.background_sweeps,
@@ -429,6 +468,52 @@ mod tests {
             "DRR must see the joint-draw surcharge: {} vs {}",
             stats.cost,
             exact.cost()
+        );
+    }
+
+    #[test]
+    fn clamping_resets_stability_and_surfaces_in_stats() {
+        let (mut t, registry) = tenant(workloads::ising_grid(2, 2, 0.3, 0.0));
+        t.sweep(20);
+        t.clamp(1, 1).unwrap();
+        let stats = t.stats(&DispatchPolicy::default(), None);
+        assert_eq!(stats.stable_for, 0, "evidence is a semantic mutation");
+        assert_eq!((stats.clamped, stats.k), (1, 2));
+        assert!(t.clamp(9, 0).is_err(), "unknown site must be rejected");
+        t.sweep(100);
+        assert_eq!(t.marginals()[1], 1.0, "clamped site pins its marginal");
+        t.unclamp(1).unwrap();
+        assert_eq!(t.stats(&DispatchPolicy::default(), None).clamped, 0);
+        assert_eq!(registry.counter("tenant0.clamps"), 1);
+        assert_eq!(registry.counter("tenant0.unclamps"), 1);
+    }
+
+    #[test]
+    fn kstate_tenant_builds_and_minibatch_kstate_is_rejected() {
+        use crate::duality::MinibatchPolicy;
+        use crate::graph::PairFactor;
+        let mut g = FactorGraph::new_k(4, 3);
+        for v in 0..3 {
+            g.add_factor(PairFactor::potts(v, v + 1, 0.5));
+        }
+        let registry = Metrics::new();
+        let cfg = TenantConfig { chains: 4, seed: 7, ..TenantConfig::default() };
+        let mut t = Tenant::try_new(g.clone(), &cfg, None, registry.scoped("t"))
+            .expect("exact K-state tenants are supported");
+        let stats = t.stats(&DispatchPolicy::default(), None);
+        assert_eq!((stats.k, stats.clamped), (3, 0));
+        t.clamp(0, 2).unwrap();
+        t.sweep(50);
+        let m = t.marginals();
+        assert_eq!(m.len(), 4 * 2, "flattened n·(k−1) marginals");
+        assert_eq!(m[1], 1.0, "evidence state 2 at site 0");
+        let cfg = TenantConfig {
+            sweep: SweepPolicy::Minibatch(MinibatchPolicy::default()),
+            ..cfg
+        };
+        assert!(
+            Tenant::try_new(g, &cfg, None, registry.scoped("t2")).is_err(),
+            "minibatched K-state tenants must be a clean error"
         );
     }
 

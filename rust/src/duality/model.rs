@@ -185,7 +185,31 @@ pub struct DualEntry {
 }
 
 /// The dualized model (see module docs).
-#[derive(Clone, Debug, Default)]
+///
+/// ## K-state (Potts) duals — §4.2 indicator encoding
+///
+/// For a `k > 2` graph every factor is a Potts coupling
+/// `exp(β·1[x₁ = x₂])` (the graph enforces the convention). Writing the
+/// agreement over the 0–1 indicator encoding `z_{v,s} = 1[x_v = s]`,
+///
+/// `exp(β·1[x₁ = x₂]) = Π_{s<k} exp(β · z_{1,s} z_{2,s})`,
+///
+/// each of the `k` sub-factors is the binary-product table
+/// `[[1, 1], [1, e^β]]` over `(z_{1,s}, z_{2,s})` — strictly positive for
+/// *any* sign of β — and dualizes with its own binary auxiliary
+/// `θ_{i,s}` through the ordinary Theorem 2 factorization. All `k`
+/// sub-factors share one table, hence ONE `(q, β₁, β₂)` triple per
+/// factor (one [`DualEntry`], one cached four-sigmoid θ table), but `k`
+/// θ bit-planes per slot in the engine. The payoff is that the paper's
+/// conditional-independence structure survives: given θ, the site
+/// conditional is the softmax of `score(s) = Σ_{i ∋ v} θ_{i,s} β_{i,v}`
+/// — no x–x dependence — and `P(θ_{i,s} = 1 | x) =
+/// σ(q + β₁·1[x₁ = s] + β₂·1[x₂ = s])` reuses the binary θ draw with
+/// indicator words in place of state bits. The α base-field parts of the
+/// factorization shift every state's score equally (`Σ_s z_{v,s} = 1`),
+/// so K-state entries zero them and leave the base field untouched.
+/// Binary graphs keep the general 2×2 factorization path byte-for-byte.
+#[derive(Clone, Debug)]
 pub struct DualModel {
     base_field: Vec<f64>,
     entries: Vec<Option<DualEntry>>,
@@ -227,13 +251,24 @@ pub struct DualModel {
     /// the incidence visits the minibatch path skips per sweep, kept as a
     /// counter so repriced sweep cost stays O(1).
     mb_saved: u64,
+    /// States per primal variable (2 = binary, the general-table dual;
+    /// > 2 = Potts indicator dual with `k` θ-planes per slot, see the
+    /// struct docs).
+    k: usize,
+}
+
+impl Default for DualModel {
+    fn default() -> Self {
+        Self::new(Vec::new())
+    }
 }
 
 impl DualModel {
-    /// Dualize every factor of a graph (one factorization per factor).
+    /// Dualize every factor of a graph (one factorization per factor),
+    /// inheriting its variable cardinality.
     pub fn from_graph(g: &FactorGraph) -> Self {
         let n = g.num_vars();
-        let mut m = Self::new((0..n).map(|v| g.unary(v)).collect());
+        let mut m = Self::new_k((0..n).map(|v| g.unary(v)).collect(), g.k());
         for (id, f) in g.factors() {
             // bulk build: defer x-table refreshes and compaction — the
             // single compaction below builds each churned table once
@@ -245,8 +280,23 @@ impl DualModel {
         m
     }
 
-    /// Empty model over `n` variables with the given unary log-odds.
+    /// Empty binary model over `n` variables with the given unary log-odds.
     pub fn new(unary: Vec<f64>) -> Self {
+        Self::new_k(unary, 2)
+    }
+
+    /// Empty `k`-state model. For `k > 2` the unary log-odds must all be
+    /// zero (the graph layer enforces the same invariant).
+    pub fn new_k(unary: Vec<f64>, k: usize) -> Self {
+        assert!(
+            (2..=crate::graph::MAX_STATES).contains(&k),
+            "variable cardinality must be 2..={}, got {k}",
+            crate::graph::MAX_STATES
+        );
+        assert!(
+            k == 2 || unary.iter().all(|&u| u == 0.0),
+            "unary fields are not defined for k={k} models"
+        );
         let n = unary.len();
         let mut m = Self {
             base_field: unary,
@@ -263,11 +313,18 @@ impl DualModel {
             mb_plans: Vec::new(),
             coupling_l1: vec![0.0; n],
             mb_saved: 0,
+            k,
         };
         for v in 0..n {
             m.rebuild_x_table(v);
         }
         m
+    }
+
+    /// States per primal variable (2 = binary).
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
     }
 
     /// Number of primal variables.
@@ -311,6 +368,11 @@ impl DualModel {
     /// Install (or clear, with `None`) the minibatch policy and rebuild
     /// every site's subsampling plan against it. O(vars + incidence).
     pub fn set_minibatch(&mut self, policy: Option<MinibatchPolicy>) {
+        assert!(
+            self.k == 2 || policy.is_none(),
+            "minibatch sweeps are not supported for k={} models",
+            self.k
+        );
         self.mb = policy;
         self.mb_plans.clear();
         self.mb_saved = 0;
@@ -530,6 +592,12 @@ impl DualModel {
     /// in order over the set bits of `m` — the same fold order (and hence
     /// bit-identical draws) as the per-lane accumulate fallback.
     fn rebuild_x_table(&mut self, v: VarId) {
+        if self.k > 2 {
+            // K-state sites always take the categorical accumulate path;
+            // the binary pattern tables would be meaningless.
+            self.x_tables.clear(v);
+            return;
+        }
         let z = {
             let (_, betas, overlay) = self.csr.view(v);
             let d = betas.len() + overlay.len();
@@ -597,7 +665,21 @@ impl DualModel {
             q,
             beta1,
             beta2,
-        } = dualize_table(&f.table);
+        } = if self.k > 2 {
+            // §4.2 indicator dual (struct docs): dualize the per-state
+            // sub-factor table [[1,1],[1,e^β]] shared by all k θ-planes.
+            // The α parts shift every state's score equally (Σ_s z_{v,s}
+            // = 1 collapses them to a per-factor constant), so they are
+            // dropped and the base field stays zero.
+            let d = dualize_table(&[[1.0, 1.0], [1.0, f.potts_beta().exp()]]);
+            DualFactor {
+                alpha1: 0.0,
+                alpha2: 0.0,
+                ..d
+            }
+        } else {
+            dualize_table(&f.table)
+        };
         if slot >= self.entries.len() {
             self.entries.resize(slot + 1, None);
         } else if let Some(pos) = self.free.iter().position(|&s| s == slot) {
@@ -724,14 +806,55 @@ impl DualModel {
     }
 
     /// Log-odds of `θ_i = 1` given the primal state x (Corollary 1).
+    /// Binary models only — K > 2 slots carry `k` auxiliaries, see
+    /// [`DualModel::theta_logodds_k`].
     #[inline]
     pub fn theta_logodds(&self, e: &DualEntry, x: &[u8]) -> f64 {
+        debug_assert_eq!(self.k, 2, "use theta_logodds_k on K-state models");
         e.q + e.beta1 * x[e.v1] as f64 + e.beta2 * x[e.v2] as f64
     }
 
+    /// Log-odds of `θ_{i,s} = 1` given the primal state x on a K > 2
+    /// model (struct docs): the binary formula over the state-`s`
+    /// indicator bits of the two endpoints.
+    #[inline]
+    pub fn theta_logodds_k(&self, e: &DualEntry, x: &[u8], s: u8) -> f64 {
+        e.q + e.beta1 * f64::from(x[e.v1] == s) + e.beta2 * f64::from(x[e.v2] == s)
+    }
+
+    /// Categorical log-scores of `x_v = s` for `s ∈ 0..k` given the dual
+    /// state, written into `scores` — the K > 2 analogue of
+    /// [`DualModel::x_logodds`] (reference implementation for the lane
+    /// kernels' bit-plane path). `theta` holds `k` auxiliaries per slot,
+    /// laid out `slot·k + s`; given them the site conditional is the
+    /// softmax of `score(s) = Σ_{i ∋ v} θ_{i,s} β_{i,v}` — independent of
+    /// every other site.
+    pub fn x_scores_k(&self, v: VarId, theta: &[u8], scores: &mut [f64]) {
+        assert!(self.k > 2, "x_scores_k is the K-state path; use x_logodds");
+        assert_eq!(scores.len(), self.k);
+        scores.fill(0.0);
+        for &(slot, b) in &self.incidence[v] {
+            for (s, score) in scores.iter_mut().enumerate() {
+                *score += theta[slot as usize * self.k + s] as f64 * b;
+            }
+        }
+    }
+
     /// Unnormalized log p(x, θ) — for exactness tests and the §5.2
-    /// log-partition estimator.
+    /// log-partition estimator. On K > 2 models `theta` holds `k`
+    /// auxiliaries per slot (`slot·k + s`) and each scores
+    /// `θ_{i,s} (q + β₁·1[x₁ = s] + β₂·1[x₂ = s])`.
     pub fn log_joint_unnorm(&self, x: &[u8], theta: &[u8]) -> f64 {
+        if self.k > 2 {
+            let mut lp = 0.0;
+            for (slot, e) in self.entries() {
+                for s in 0..self.k as u8 {
+                    let th = theta[slot * self.k + s as usize] as f64;
+                    lp += th * self.theta_logodds_k(e, x, s);
+                }
+            }
+            return lp;
+        }
         let mut lp = 0.0;
         for (v, &b) in self.base_field.iter().enumerate() {
             lp += b * x[v] as f64;
@@ -889,6 +1012,148 @@ mod tests {
             assert_marginal_matches(&g);
             Ok(())
         });
+    }
+
+    /// Enumerate the K-state dual joint (k auxiliaries per live slot) and
+    /// compare its x-marginal to the graph's Potts distribution (the
+    /// K > 2 analogue of `assert_marginal_matches`).
+    fn assert_potts_marginal_matches(g: &FactorGraph) {
+        let m = DualModel::from_graph(g);
+        let (n, k) = (g.num_vars(), g.k());
+        let slots: Vec<usize> = m.entries().map(|(s, _)| s).collect();
+        let f_bits = slots.len() * k;
+        assert!(
+            k.pow(n as u32) <= 1 << 12 && f_bits <= 16,
+            "enumeration blow-up"
+        );
+        let mut scale = None;
+        for code in 0..k.pow(n as u32) {
+            let x: Vec<u8> = (0..n)
+                .map(|v| ((code / k.pow(v as u32)) % k) as u8)
+                .collect();
+            let mut theta = vec![0u8; m.factor_slots() * k];
+            let mut total = 0.0;
+            for tm in 0..1usize << f_bits {
+                for (bit, (&slot, s)) in slots
+                    .iter()
+                    .flat_map(|slot| (0..k).map(move |s| (slot, s)))
+                    .enumerate()
+                {
+                    theta[slot * k + s] = ((tm >> bit) & 1) as u8;
+                }
+                total += m.log_joint_unnorm(&x, &theta).exp();
+            }
+            let want = g.log_prob_unnorm(&x).exp();
+            let r = total / want;
+            match scale {
+                None => scale = Some(r),
+                Some(s) => assert!(
+                    (r / s - 1.0).abs() < 1e-9,
+                    "Potts marginal mismatch at {code}: ratio {r} vs {s}"
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn potts_dual_marginalizes_on_small_graphs() {
+        // triangle with mixed-sign couplings, k = 3
+        let mut g = FactorGraph::new_k(3, 3);
+        g.add_factor(PairFactor::potts(0, 1, 0.6));
+        g.add_factor(PairFactor::potts(1, 2, -0.4));
+        g.add_factor(PairFactor::potts(0, 2, 0.3));
+        assert_potts_marginal_matches(&g);
+        // chain, k = 4 (2 bit-planes)
+        let mut g = FactorGraph::new_k(3, 4);
+        g.add_factor(PairFactor::potts(0, 1, 0.8));
+        g.add_factor(PairFactor::potts(1, 2, 0.5));
+        assert_potts_marginal_matches(&g);
+        // k = 5 pair (non-power-of-two cardinality)
+        let mut g = FactorGraph::new_k(2, 5);
+        g.add_factor(PairFactor::potts(0, 1, 1.1));
+        assert_potts_marginal_matches(&g);
+    }
+
+    #[test]
+    fn potts_entry_shape_and_theta_table() {
+        use crate::rng::sigmoid_fast;
+        let beta = 0.7f64;
+        let mut g = FactorGraph::new_k(2, 3);
+        let id = g.add_factor(PairFactor::potts(0, 1, beta));
+        let m = DualModel::from_graph(&g);
+        let e = m.entry(id).unwrap();
+        // α dropped: nothing absorbed into the (zero) base field
+        assert_eq!((e.alpha1, e.alpha2), (0.0, 0.0));
+        assert_eq!(m.base_field(0), 0.0);
+        assert_eq!(m.base_field(1), 0.0);
+        // the marginalized sub-factor Σ_θ e^{θ(q+β₁z₁+β₂z₂)} = 1+e^{...}
+        // must reproduce [[1,1],[1,e^β]] up to the dropped α's, i.e. its
+        // cross-ratio (where the α's cancel) must be exactly e^β
+        let p = |z1: f64, z2: f64| (e.q + e.beta1 * z1 + e.beta2 * z2).exp().ln_1p();
+        let cross = p(0.0, 0.0) + p(1.0, 1.0) - p(1.0, 0.0) - p(0.0, 1.0);
+        assert!((cross - beta).abs() < 1e-9, "cross-ratio {cross} vs β {beta}");
+        // all four θ-table entries are live (indexed by the two
+        // state-indicator bits, one draw per θ-plane)
+        let t = m.theta_table(id);
+        assert_eq!(t[0], sigmoid_fast(e.q));
+        assert_eq!(t[1], sigmoid_fast(e.q + e.beta1));
+        assert_eq!(t[2], sigmoid_fast(e.q + e.beta2));
+        assert_eq!(t[3], sigmoid_fast(e.q + e.beta1 + e.beta2));
+        // K-state sites never use the binary pattern tables
+        assert!(m.x_table(0).is_none());
+        assert!(m.x_table(1).is_none());
+    }
+
+    #[test]
+    fn potts_conditionals_match_joint_differences() {
+        let mut g = FactorGraph::new_k(3, 3);
+        g.add_factor(PairFactor::potts(0, 1, 0.6));
+        g.add_factor(PairFactor::potts(1, 2, -0.4));
+        g.add_factor(PairFactor::potts(0, 2, 0.3));
+        let m = DualModel::from_graph(&g);
+        let k = m.k();
+        let x = [2u8, 0, 1];
+        // θ conditional: one auxiliary per (slot, state)
+        let theta0 = vec![0u8; m.factor_slots() * k];
+        for (slot, e) in m.entries() {
+            for s in 0..k as u8 {
+                let mut theta1 = theta0.clone();
+                theta1[slot * k + s as usize] = 1;
+                let want =
+                    m.log_joint_unnorm(&x, &theta1) - m.log_joint_unnorm(&x, &theta0);
+                assert!(
+                    (m.theta_logodds_k(e, &x, s) - want).abs() < 1e-12,
+                    "slot {slot} s {s}"
+                );
+            }
+        }
+        // x conditional scores against joint differences under a mixed θ
+        let mut theta = vec![0u8; m.factor_slots() * k];
+        for (i, t) in theta.iter_mut().enumerate() {
+            *t = ((i * 7 + 3) % 3 == 0) as u8;
+        }
+        let mut scores = vec![0.0; k];
+        for v in 0..3 {
+            m.x_scores_k(v, &theta, &mut scores);
+            for s in 0..k as u8 {
+                let mut xs = x;
+                xs[v] = s;
+                let mut x0 = x;
+                x0[v] = 0;
+                let want = m.log_joint_unnorm(&xs, &theta) - m.log_joint_unnorm(&x0, &theta);
+                let got = scores[s as usize] - scores[0];
+                assert!((want - got).abs() < 1e-12, "v={v} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "minibatch sweeps are not supported")]
+    fn potts_model_rejects_minibatch() {
+        let mut g = FactorGraph::new_k(2, 3);
+        g.add_factor(PairFactor::potts(0, 1, 0.5));
+        let mut m = DualModel::from_graph(&g);
+        m.set_minibatch(Some(MinibatchPolicy::default()));
     }
 
     #[test]

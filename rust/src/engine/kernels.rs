@@ -126,12 +126,82 @@ pub struct SweepBuf {
     pub idx: U8Lanes,
     /// Draw-word assembly scratch.
     pub draw: DrawScratch,
+    /// Per-state per-lane score accumulators for K > 2 sites (one
+    /// [`F64Lanes`] per state, grown lazily to the engine's `k` on first
+    /// use and reused across sites — still no per-site allocation).
+    pub cat: Vec<F64Lanes>,
 }
 
 impl SweepBuf {
     /// Fresh zeroed buffers.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Zeroed per-state score accumulators for a `k`-state site (grows
+    /// the buffer on first use, then only clears).
+    pub fn cat_scores(&mut self, k: usize) -> &mut [F64Lanes] {
+        if self.cat.len() < k {
+            self.cat.resize_with(k, F64Lanes::default);
+        }
+        for s in self.cat[..k].iter_mut() {
+            s.0.fill(0.0);
+        }
+        &mut self.cat[..k]
+    }
+}
+
+/// Draw one K-state categorical site update for a packed lane word and
+/// scatter the winning states into `planes_out` bit-planes.
+///
+/// Per live lane `l` the winner is drawn from the max-subtracted softmax
+/// of `scores[s].0[l]` (`s ∈ 0..k_states`) by inverse-CDF over one
+/// uniform: `s* = min { s : u · Σ_t e^{z_t − z_max} < Σ_{t ≤ s} … }`.
+/// Exactly `lanes` uniforms are consumed via [`Pcg64::fill_f64`] (lane
+/// order, the determinism key); ghost bits `lanes..` of every output
+/// plane are zero.
+///
+/// This helper is deliberately kernel-independent: every [`LaneKernel`]'s
+/// K-state site body accumulates into the same [`SweepBuf::cat_scores`]
+/// buffers with its own `accumulate`, then calls this one draw routine —
+/// so cross-kernel bit-identity of K-state trajectories holds by
+/// construction (the accumulate arithmetic is already pinned by the
+/// binary contract above).
+pub fn draw_categorical_planes(
+    rng: &mut Pcg64,
+    scores: &[F64Lanes],
+    lanes: usize,
+    scratch: &mut DrawScratch,
+    planes_out: &mut [u64],
+) {
+    let k_states = scores.len();
+    debug_assert!(k_states >= 2 && lanes <= LANES_PER_WORD);
+    debug_assert!(k_states <= 1 << planes_out.len());
+    planes_out.fill(0);
+    rng.fill_f64(&mut scratch.u.0, lanes);
+    for l in 0..lanes {
+        let mut zmax = scores[0].0[l];
+        for sc in &scores[1..] {
+            zmax = zmax.max(sc.0[l]);
+        }
+        let mut total = 0.0;
+        for (w, sc) in scratch.a.0[..k_states].iter_mut().zip(scores) {
+            *w = (sc.0[l] - zmax).exp();
+            total += *w;
+        }
+        let target = scratch.u.0[l] * total;
+        let mut cum = 0.0;
+        let mut win = k_states - 1;
+        for (s, &w) in scratch.a.0[..k_states].iter().enumerate() {
+            cum += w;
+            if target < cum {
+                win = s;
+                break;
+            }
+        }
+        for (p, word) in planes_out.iter_mut().enumerate() {
+            *word |= (((win >> p) & 1) as u64) << l;
+        }
     }
 }
 
@@ -767,6 +837,54 @@ mod tests {
             let w2 = TiledKernel::draw_theta_word(&mut r2, &p, x1, x2, k, &mut scratch);
             assert_eq!(w1, w2, "theta word diverged, case {case} k {k}");
             assert_eq!(r1.next_u64(), r2.next_u64(), "rng desync (theta), case {case}");
+        }
+    }
+
+    #[test]
+    fn categorical_draw_matches_sequential_reference_and_masks_ghosts() {
+        let base = Pcg64::seed(91);
+        let mut gen = Pcg64::seed(92);
+        for case in 0..60u64 {
+            let k_states = 3 + (gen.next_u64() % 6) as usize; // 3..=8
+            let planes = usize::BITS as usize - (k_states - 1).leading_zeros() as usize;
+            let lanes = 1 + (gen.next_u64() % 64) as usize;
+            let mut scores: Vec<F64Lanes> = (0..k_states).map(|_| F64Lanes::default()).collect();
+            for sc in scores.iter_mut() {
+                for z in sc.0.iter_mut() {
+                    *z = (gen.next_f64() - 0.5) * 8.0;
+                }
+            }
+            let mut scratch = DrawScratch::default();
+            let mut out = vec![u64::MAX; planes]; // stale garbage must be cleared
+            let mut rng = base.split2(case, 0);
+            draw_categorical_planes(&mut rng, &scores, lanes, &mut scratch, &mut out);
+
+            // reference: one sequential uniform per live lane, plain softmax CDF
+            let mut rref = base.split2(case, 0);
+            for l in 0..lanes {
+                let u = rref.next_f64();
+                let zmax = scores.iter().map(|s| s.0[l]).fold(f64::NEG_INFINITY, f64::max);
+                let w: Vec<f64> = scores.iter().map(|s| (s.0[l] - zmax).exp()).collect();
+                let total: f64 = w.iter().sum();
+                let target = u * total;
+                let mut cum = 0.0;
+                let mut win = k_states - 1;
+                for (s, &ws) in w.iter().enumerate() {
+                    cum += ws;
+                    if target < cum {
+                        win = s;
+                        break;
+                    }
+                }
+                let got: usize = (0..planes).map(|p| (((out[p] >> l) & 1) as usize) << p).sum();
+                assert_eq!(got, win, "case {case} lane {l}");
+            }
+            // rng advanced identically (exactly `lanes` uniforms)
+            assert_eq!(rng.next_u64(), rref.next_u64(), "rng desync, case {case}");
+            // ghost bits cleared on every plane
+            for (p, &word) in out.iter().enumerate() {
+                assert_eq!(word & !lane_mask(lanes), 0, "ghost bits, case {case} plane {p}");
+            }
         }
     }
 

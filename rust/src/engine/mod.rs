@@ -74,9 +74,20 @@
 //! tracked win is ESS/s (`benches/throughput.rs --mode blocked`).
 //! Blocked trajectories are bit-identical across kernels, pool sizes,
 //! and shard counts for a fixed policy.
+//!
+//! K-state (Potts) models generalize the packed state to `⌈log₂ k⌉`
+//! bit-planes per site and `k` θ-planes per slot (the indicator dual of
+//! [`crate::duality::DualModel`]); the site draw becomes one shared
+//! categorical CDF inversion ([`kernels::draw_categorical_planes`]) so
+//! cross-kernel bit-identity holds by construction, and `k = 2`
+//! collapses to the historical binary layout byte-for-byte. Evidence
+//! clamping ([`LanePdSampler::clamp`]) pins observed sites while their
+//! neighbors keep reading them — conditional-marginal queries on any
+//! tenant. Both are exact-policy-only; unsupported combinations are
+//! typed [`EngineError`] rejections.
 
 pub mod kernels;
 mod sampler;
 
 pub use kernels::KernelKind;
-pub use sampler::{EngineConfig, LanePdSampler, SweepPolicy};
+pub use sampler::{EngineConfig, EngineError, LanePdSampler, SweepPolicy};

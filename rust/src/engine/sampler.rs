@@ -1,11 +1,31 @@
 //! [`LanePdSampler`]: the bit-packed multi-chain primal–dual sampler.
 //!
-//! State layout (variable-major, `words = lanes.div_ceil(64)`):
+//! State layout (variable-major, `words = lanes.div_ceil(64)`). A site's
+//! state is `x_planes` bit-planes (`⌈log₂ k⌉`; 1 for binary) and a slot's
+//! dual state is `t_planes` bit-planes (1 for binary, `k` for K-state —
+//! one auxiliary per state, see the indicator dual in
+//! [`DualModel`](crate::duality::DualModel)):
 //!
 //! ```text
-//! x[v * words + w]      bit l  =  x_v of chain (w·64 + l)
-//! theta[i * words + w]  bit l  =  θ_i of chain (w·64 + l)
+//! x[(v·x_planes + p) · words + w]      bit l  =  bit p of x_v, chain (w·64 + l)
+//! theta[(i·t_planes + s) · words + w]  bit l  =  θ_{i,s} of chain (w·64 + l)
 //! ```
+//!
+//! For `k = 2` both plane counts are 1 and this is exactly the historical
+//! binary layout — every binary trajectory is preserved bit-for-bit by
+//! construction, which `tests/kernel_equivalence.rs` pins.
+//!
+//! ## Evidence clamping
+//!
+//! [`LanePdSampler::clamp`] pins a site to an observed state in every
+//! lane: the x half-step skips the site's draw entirely (its
+//! per-`(sweep, site)` RNG stream is simply never consumed, so no other
+//! site's draws shift), while the θ half-step keeps reading the clamped
+//! bits — so neighbors' conditionals see the evidence and the chain
+//! samples the conditional joint. Clamping requires
+//! [`SweepPolicy::Exact`] ([`EngineError::ClampUnsupported`] otherwise);
+//! K > 2 models likewise reject minibatch/blocked policies at
+//! construction ([`EngineError::UnsupportedPolicy`]).
 //!
 //! One sweep is the usual two half-steps, but vectorized over lanes:
 //!
@@ -47,7 +67,10 @@
 use std::fmt;
 use std::sync::Arc;
 
-use super::kernels::{lane_mask, KernelKind, LaneKernel, ScalarKernel, SweepBuf, TiledKernel};
+use super::kernels::{
+    draw_categorical_planes, lane_mask, F64Lanes, KernelKind, LaneKernel, ScalarKernel, SweepBuf,
+    TiledKernel,
+};
 use crate::duality::blocking::{self, Block, BlockPlan, BlockPlanner, BlockPolicy, SweepUnit};
 use crate::duality::{DualModel, MbPlan, MinibatchPolicy};
 use crate::graph::{FactorGraph, FactorId, PairFactor};
@@ -158,6 +181,60 @@ impl fmt::Display for SweepPolicy {
     }
 }
 
+/// Engine construction / clamping errors — every unsupported
+/// policy × cardinality combination is an explicit, typed rejection
+/// instead of a silently wrong chain.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EngineError {
+    /// The sweep policy does not support this variable cardinality
+    /// (minibatch/blocked site updates are binary-only).
+    UnsupportedPolicy {
+        /// The rejected policy.
+        policy: SweepPolicy,
+        /// The model's states-per-variable.
+        k: usize,
+    },
+    /// Clamping is only defined on the exact sweep policy (minibatch
+    /// thinning and joint block draws would bypass the clamp mask).
+    ClampUnsupported {
+        /// The engine's configured policy.
+        policy: SweepPolicy,
+    },
+    /// Clamp target out of range (unknown site or state ≥ k).
+    ClampOutOfRange {
+        /// Requested site.
+        v: usize,
+        /// Number of variables.
+        n: usize,
+        /// Requested state.
+        state: u8,
+        /// States per variable.
+        k: usize,
+    },
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Self::UnsupportedPolicy { policy, k } => write!(
+                f,
+                "sweep policy `{policy}` does not support k={k} models \
+                 (only `exact` samples K-state sites)"
+            ),
+            Self::ClampUnsupported { policy } => write!(
+                f,
+                "clamping requires the `exact` sweep policy, engine uses `{policy}`"
+            ),
+            Self::ClampOutOfRange { v, n, state, k } => write!(
+                f,
+                "clamp target out of range: site {v} (of {n}) state {state} (of {k})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
 /// Construction-time knobs of a [`LanePdSampler`] (lane count, stream
 /// seed, which [`LaneKernel`] implementation runs the sweep bodies, and
 /// the sweep policy).
@@ -195,9 +272,19 @@ pub struct LanePdSampler {
     model: DualModel,
     lanes: usize,
     words: usize,
+    /// Bit-planes per x site: `⌈log₂ k⌉` (1 for binary).
+    x_planes: usize,
+    /// θ bit-planes per factor slot: 1 for binary, `k` for K-state (one
+    /// indicator auxiliary per state — see the module docs).
+    t_planes: usize,
     kernel: KernelKind,
     x: Vec<u64>,
     theta: Vec<u64>,
+    /// Evidence mask: clamped sites skip their draw (module docs). Only
+    /// ever contains `true` under [`SweepPolicy::Exact`].
+    clamped: Vec<bool>,
+    /// Number of `true` entries in `clamped` (serving stats).
+    clamp_count: usize,
     pool: Option<Arc<ThreadPool>>,
     /// Stream root: every site's draws are keyed `split2(sweep, site)`.
     base: Pcg64,
@@ -260,6 +347,12 @@ impl LanePdSampler {
         Self::from_model_config(DualModel::from_graph(graph), cfg)
     }
 
+    /// Fallible [`LanePdSampler::with_config`]: rejects unsupported
+    /// policy × cardinality combinations instead of panicking.
+    pub fn try_with_config(graph: &FactorGraph, cfg: EngineConfig) -> Result<Self, EngineError> {
+        Self::try_from_model_config(DualModel::from_graph(graph), cfg)
+    }
+
     /// Wrap an existing dual model (shared slot space with the graph).
     pub fn from_model(model: DualModel, lanes: usize, seed: u64) -> Self {
         Self::from_model_config(
@@ -273,25 +366,54 @@ impl LanePdSampler {
     }
 
     /// Wrap an existing dual model with explicit [`EngineConfig`] knobs.
-    pub fn from_model_config(mut model: DualModel, cfg: EngineConfig) -> Self {
+    /// Panics on unsupported policy × cardinality combinations — use
+    /// [`LanePdSampler::try_from_model_config`] to get a typed error.
+    pub fn from_model_config(model: DualModel, cfg: EngineConfig) -> Self {
+        Self::try_from_model_config(model, cfg).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible [`LanePdSampler::from_model_config`]: K > 2 models only
+    /// sweep under [`SweepPolicy::Exact`] (the minibatch thinning bits
+    /// and joint tree draws are binary constructions), rejected here
+    /// with [`EngineError::UnsupportedPolicy`] *before* the model's own
+    /// minibatch assertion can fire.
+    pub fn try_from_model_config(
+        mut model: DualModel,
+        cfg: EngineConfig,
+    ) -> Result<Self, EngineError> {
         assert!(cfg.lanes >= 1, "at least one lane");
+        let k = model.k();
+        if k > 2 && cfg.sweep != SweepPolicy::Exact {
+            return Err(EngineError::UnsupportedPolicy {
+                policy: cfg.sweep,
+                k,
+            });
+        }
         model.set_minibatch(cfg.sweep.minibatch());
+        // ⌈log₂ k⌉ x planes; one θ auxiliary per state for K > 2
+        let x_planes = (usize::BITS - (k - 1).leading_zeros()) as usize;
+        let t_planes = if k == 2 { 1 } else { k };
         let words = cfg.lanes.div_ceil(64);
-        let x = vec![0u64; model.num_vars() * words];
-        let theta = vec![0u64; model.factor_slots() * words];
+        let x = vec![0u64; model.num_vars() * x_planes * words];
+        let theta = vec![0u64; model.factor_slots() * t_planes * words];
+        let clamped = vec![false; model.num_vars()];
         // agreement EWMAs start neutral; only blocked engines pay for them
         let edge_stats = if cfg.sweep.blocked().is_some() {
             vec![0.5; model.factor_slots()]
         } else {
             Vec::new()
         };
-        Self {
+        Ok(Self {
             model,
             lanes: cfg.lanes,
             words,
+            x_planes,
+            t_planes,
             kernel: cfg.kernel,
             x,
             theta,
+            clamped,
+            clamp_count: 0,
             pool: None,
             base: Pcg64::seed(cfg.seed),
             sweep_count: 0,
@@ -303,7 +425,7 @@ impl LanePdSampler {
             block_plan: None,
             plan_stale: false,
             unit_bounds: Vec::new(),
-        }
+        })
     }
 
     /// Enable variable-parallel sweeps on the given pool. Does not change
@@ -402,78 +524,181 @@ impl LanePdSampler {
         }
     }
 
-    /// Packed primal state, `x[v * words_per_site() + w]`.
+    /// States per variable (2 = binary).
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.model.k()
+    }
+
+    /// Bit-planes per x site (`⌈log₂ k⌉`; 1 for binary).
+    #[inline]
+    pub fn bit_planes(&self) -> usize {
+        self.x_planes
+    }
+
+    /// θ bit-planes per factor slot (1 for binary, `k` for K-state).
+    #[inline]
+    pub fn theta_planes(&self) -> usize {
+        self.t_planes
+    }
+
+    /// Words of one x site row (`bit_planes() · words_per_site()`).
+    #[inline]
+    fn row_words(&self) -> usize {
+        self.x_planes * self.words
+    }
+
+    /// Words of one θ slot row (`theta_planes() · words_per_site()`).
+    #[inline]
+    fn t_row(&self) -> usize {
+        self.t_planes * self.words
+    }
+
+    /// Packed primal state, `x[(v·bit_planes() + p) · words_per_site() + w]`.
     pub fn state_words(&self) -> &[u64] {
         &self.x
     }
 
-    /// Packed dual state, `theta[slot * words_per_site() + w]`.
+    /// Packed dual state,
+    /// `theta[(slot·theta_planes() + s) · words_per_site() + w]`.
     pub fn theta_words(&self) -> &[u64] {
         &self.theta
     }
 
-    /// Chain `lane`'s value of variable `v`.
+    /// Chain `lane`'s plane-0 bit of variable `v` — the full value on
+    /// binary models; see [`LanePdSampler::lane_value`] for K > 2.
     #[inline]
     pub fn lane_bit(&self, v: usize, lane: usize) -> u8 {
-        ((self.x[v * self.words + lane / 64] >> (lane % 64)) & 1) as u8
+        ((self.x[v * self.row_words() + lane / 64] >> (lane % 64)) & 1) as u8
     }
 
-    /// Number of lanes with `x_v = 1` (marginal accumulation).
+    /// Chain `lane`'s value of variable `v`, folded over all bit-planes.
+    #[inline]
+    pub fn lane_value(&self, v: usize, lane: usize) -> u8 {
+        let (w, bit) = (lane / 64, lane % 64);
+        let mut s = 0u8;
+        for p in 0..self.x_planes {
+            let word = self.x[(v * self.x_planes + p) * self.words + w];
+            s |= (((word >> bit) & 1) as u8) << p;
+        }
+        s
+    }
+
+    /// Number of lanes with `x_v = 1` (binary marginal accumulation —
+    /// plane 0 popcount; on K > 2 models use
+    /// [`LanePdSampler::popcount_state`]).
     #[inline]
     pub fn popcount_var(&self, v: usize) -> u32 {
-        self.x[v * self.words..(v + 1) * self.words]
+        let row = v * self.row_words();
+        self.x[row..row + self.words]
             .iter()
             .map(|w| w.count_ones())
             .sum()
     }
 
-    /// One chain's primal state, unpacked to bytes.
-    pub fn lane_state(&self, lane: usize) -> Vec<u8> {
-        assert!(lane < self.lanes);
-        (0..self.num_vars()).map(|v| self.lane_bit(v, lane)).collect()
+    /// Number of live lanes with `x_v = state` (K-state marginal
+    /// accumulation): one AND-of-XNORs per word over the bit-planes.
+    pub fn popcount_state(&self, v: usize, state: u8) -> u32 {
+        debug_assert!((state as usize) < self.k());
+        let mut total = 0u32;
+        for w in 0..self.words {
+            let kl = lanes_in_word(self.lanes, w);
+            let mut eq = lane_mask(kl);
+            for p in 0..self.x_planes {
+                let xp = self.x[(v * self.x_planes + p) * self.words + w];
+                eq &= if (state >> p) & 1 == 1 { xp } else { !xp };
+            }
+            total += eq.count_ones();
+        }
+        total
     }
 
-    /// Overwrite one chain's primal state (chain initialization).
+    /// One chain's primal state, unpacked to bytes (state values, not
+    /// bits, on K > 2 models).
+    pub fn lane_state(&self, lane: usize) -> Vec<u8> {
+        assert!(lane < self.lanes);
+        (0..self.num_vars())
+            .map(|v| self.lane_value(v, lane))
+            .collect()
+    }
+
+    /// Overwrite one chain's primal state (chain initialization) with
+    /// state values `< k`. Clamped sites keep their evidence value —
+    /// [`LanePdSampler::clamp`] is the only way to move them.
     pub fn set_lane_state(&mut self, lane: usize, xs: &[u8]) {
         assert!(lane < self.lanes);
         assert_eq!(xs.len(), self.num_vars());
+        let k = self.k();
         let (w, mask) = (lane / 64, 1u64 << (lane % 64));
-        for (v, &b) in xs.iter().enumerate() {
-            let word = &mut self.x[v * self.words + w];
-            if b != 0 {
-                *word |= mask;
-            } else {
-                *word &= !mask;
+        for (v, &s) in xs.iter().enumerate() {
+            assert!((s as usize) < k, "state {s} out of range for k={k}");
+            if self.clamped[v] {
+                continue;
+            }
+            for p in 0..self.x_planes {
+                let word = &mut self.x[(v * self.x_planes + p) * self.words + w];
+                if (s >> p) & 1 == 1 {
+                    *word |= mask;
+                } else {
+                    *word &= !mask;
+                }
             }
         }
     }
 
     /// Set one chain's primal state to a constant (all-0 / all-1 start).
     pub fn fill_lane(&mut self, lane: usize, value: bool) {
+        self.fill_lane_state(lane, value as u8);
+    }
+
+    /// Set one chain's primal state to a constant state value `< k`
+    /// (overdispersed K-state starts). Clamped sites keep their evidence.
+    pub fn fill_lane_state(&mut self, lane: usize, state: u8) {
         assert!(lane < self.lanes);
+        assert!((state as usize) < self.k(), "state out of range");
         let (w, mask) = (lane / 64, 1u64 << (lane % 64));
         for v in 0..self.num_vars() {
-            let word = &mut self.x[v * self.words + w];
-            if value {
-                *word |= mask;
-            } else {
-                *word &= !mask;
+            if self.clamped[v] {
+                continue;
+            }
+            for p in 0..self.x_planes {
+                let word = &mut self.x[(v * self.x_planes + p) * self.words + w];
+                if (state >> p) & 1 == 1 {
+                    *word |= mask;
+                } else {
+                    *word &= !mask;
+                }
             }
         }
     }
 
     /// Randomize one chain's primal state from the lane-indexed init
-    /// stream (`split2(0, lane)`; sweeps use sweep indices ≥ 1).
+    /// stream (`split2(0, lane)`; sweeps use sweep indices ≥ 1). Binary
+    /// models keep the historical one-bit-per-site draw stream
+    /// bit-for-bit; K > 2 models draw a state per site from the same
+    /// stream. Clamped sites consume their draw but keep their evidence
+    /// value, so clamping never shifts other sites' init draws.
     pub fn randomize_lane(&mut self, lane: usize) {
         assert!(lane < self.lanes);
+        let k = self.k() as u64;
         let mut rng = self.base.split2(0, lane as u64);
         let (w, mask) = (lane / 64, 1u64 << (lane % 64));
         for v in 0..self.num_vars() {
-            let word = &mut self.x[v * self.words + w];
-            if rng.next_u64() & 1 == 1 {
-                *word |= mask;
+            let s = if k == 2 {
+                (rng.next_u64() & 1) as u8
             } else {
-                *word &= !mask;
+                (rng.next_u64() % k) as u8
+            };
+            if self.clamped[v] {
+                continue;
+            }
+            for p in 0..self.x_planes {
+                let word = &mut self.x[(v * self.x_planes + p) * self.words + w];
+                if (s >> p) & 1 == 1 {
+                    *word |= mask;
+                } else {
+                    *word &= !mask;
+                }
             }
         }
     }
@@ -482,9 +707,68 @@ impl LanePdSampler {
     pub fn clear_theta_lane(&mut self, lane: usize) {
         assert!(lane < self.lanes);
         let (w, mask) = (lane / 64, 1u64 << (lane % 64));
-        for slot in 0..self.model.factor_slots() {
-            self.theta[slot * self.words + w] &= !mask;
+        for row in self.theta.chunks_exact_mut(self.words) {
+            row[w] &= !mask;
         }
+    }
+
+    // -- evidence clamping -------------------------------------------------
+
+    /// Clamp site `v` to `state` in every lane: the site's value is set
+    /// now and its draw is skipped on every subsequent sweep, while the
+    /// θ half-step keeps reading it — neighbors' conditionals see the
+    /// evidence (module docs). Idempotent; re-clamping to a different
+    /// state just moves the evidence. Requires [`SweepPolicy::Exact`].
+    pub fn clamp(&mut self, v: usize, state: u8) -> Result<(), EngineError> {
+        if self.policy != SweepPolicy::Exact {
+            return Err(EngineError::ClampUnsupported {
+                policy: self.policy,
+            });
+        }
+        let (n, k) = (self.num_vars(), self.k());
+        if v >= n || state as usize >= k {
+            return Err(EngineError::ClampOutOfRange { v, n, state, k });
+        }
+        // write the evidence into the live lanes of every plane (ghost
+        // bits of the tail word stay zero)
+        for p in 0..self.x_planes {
+            for w in 0..self.words {
+                let kl = lanes_in_word(self.lanes, w);
+                self.x[(v * self.x_planes + p) * self.words + w] =
+                    if (state >> p) & 1 == 1 { lane_mask(kl) } else { 0 };
+            }
+        }
+        if !self.clamped[v] {
+            self.clamped[v] = true;
+            self.clamp_count += 1;
+        }
+        Ok(())
+    }
+
+    /// Release a clamp; the site resumes sampling from its current
+    /// (evidence) value on the next sweep. No-op if not clamped.
+    pub fn unclamp(&mut self, v: usize) -> Result<(), EngineError> {
+        let (n, k) = (self.num_vars(), self.k());
+        if v >= n {
+            return Err(EngineError::ClampOutOfRange { v, n, state: 0, k });
+        }
+        if self.clamped[v] {
+            self.clamped[v] = false;
+            self.clamp_count -= 1;
+        }
+        Ok(())
+    }
+
+    /// Whether site `v` is currently clamped.
+    #[inline]
+    pub fn is_clamped(&self, v: usize) -> bool {
+        self.clamped.get(v).copied().unwrap_or(false)
+    }
+
+    /// Number of currently clamped sites.
+    #[inline]
+    pub fn clamped_count(&self) -> usize {
+        self.clamp_count
     }
 
     // -- dynamic topology --------------------------------------------------
@@ -493,13 +777,11 @@ impl LanePdSampler {
     /// no recoloring, no per-chain work beyond zeroing the new θ word.
     pub fn add_factor(&mut self, id: FactorId, f: &PairFactor) {
         self.model.insert_at(id, f);
-        let need = self.model.factor_slots() * self.words;
+        let need = self.model.factor_slots() * self.t_row();
         if self.theta.len() < need {
             self.theta.resize(need, 0);
         }
-        for w in 0..self.words {
-            self.theta[id * self.words + w] = 0;
-        }
+        self.theta[id * self.t_row()..(id + 1) * self.t_row()].fill(0);
         self.chunk_plan_for = 0; // degrees changed: re-plan chunks lazily
         if self.policy.blocked().is_some() {
             // a new (or recycled) slot starts with no observed coupling
@@ -521,12 +803,10 @@ impl LanePdSampler {
             return false;
         }
         assert!(
-            (id + 1) * self.words <= self.theta.len(),
+            (id + 1) * self.t_row() <= self.theta.len(),
             "theta state shorter than the model's slot space (slot {id})"
         );
-        for w in 0..self.words {
-            self.theta[id * self.words + w] = 0;
-        }
+        self.theta[id * self.t_row()..(id + 1) * self.t_row()].fill(0);
         self.chunk_plan_for = 0; // degrees changed: re-plan chunks lazily
         if self.policy.blocked().is_some() {
             if let Some(m) = self.edge_stats.get_mut(id) {
@@ -600,8 +880,9 @@ impl LanePdSampler {
             let mut agree = 0u32;
             for w in 0..self.words {
                 let k = lanes_in_word(self.lanes, w);
-                let x1 = self.x[v1 * self.words + w];
-                let x2 = self.x[v2 * self.words + w];
+                // blocked ⟹ binary (plane 0 is the whole value)
+                let x1 = self.x[v1 * self.row_words() + w];
+                let x2 = self.x[v2 * self.row_words() + w];
                 agree += (!(x1 ^ x2) & lane_mask(k)).count_ones();
             }
             let m = &mut self.edge_stats[slot];
@@ -618,6 +899,7 @@ impl LanePdSampler {
 
     fn sweep_serial<K: LaneKernel>(&mut self) {
         let words = self.words;
+        let (rw, tr) = (self.row_words(), self.t_row());
         let n = self.model.num_vars();
         // one set of tile-major buffers reused across every site
         let mut buf = SweepBuf::new();
@@ -629,6 +911,9 @@ impl LanePdSampler {
                 lanes: self.lanes,
                 base: &self.base,
                 sweep: self.sweep_count,
+                x_planes: self.x_planes,
+                t_planes: self.t_planes,
+                clamped: &self.clamped,
             };
             match &self.block_plan {
                 Some(plan) if self.policy.blocked().is_some() => {
@@ -637,11 +922,7 @@ impl LanePdSampler {
                         match *unit {
                             SweepUnit::Var(v) => {
                                 let v = v as usize;
-                                ctx.site::<K>(
-                                    v,
-                                    &mut self.x[v * words..(v + 1) * words],
-                                    &mut buf,
-                                );
+                                ctx.dispatch::<K>(v, &mut self.x[v * rw..(v + 1) * rw], &mut buf);
                             }
                             // SAFETY: serial sweep — exclusive access to
                             // the whole x array.
@@ -657,7 +938,7 @@ impl LanePdSampler {
                 }
                 _ => {
                     for v in 0..n {
-                        ctx.site::<K>(v, &mut self.x[v * words..(v + 1) * words], &mut buf);
+                        ctx.dispatch::<K>(v, &mut self.x[v * rw..(v + 1) * rw], &mut buf);
                     }
                 }
             }
@@ -672,16 +953,14 @@ impl LanePdSampler {
                 lanes: self.lanes,
                 base: &self.base,
                 sweep: self.sweep_count,
+                x_planes: self.x_planes,
+                t_planes: self.t_planes,
             };
             for slot in 0..slots {
                 if slot % stride != phase {
                     continue; // out-of-window slot: θ keeps its state
                 }
-                ctx.site::<K>(
-                    slot,
-                    &mut self.theta[slot * words..(slot + 1) * words],
-                    &mut buf,
-                );
+                ctx.dispatch::<K>(slot, &mut self.theta[slot * tr..(slot + 1) * tr], &mut buf);
             }
         }
     }
@@ -707,7 +986,7 @@ impl LanePdSampler {
     /// (a `Vec<u64>` base is 8/16-byte aligned, so at most one straddled
     /// line per seam remains — versus every seam row without alignment).
     #[inline]
-    fn row_align(&self) -> usize {
+    fn row_align(&self, row_words: usize) -> usize {
         fn gcd(a: usize, b: usize) -> usize {
             if b == 0 {
                 a
@@ -718,7 +997,7 @@ impl LanePdSampler {
         // u64 state words and f64 lanes are both 8 bytes, so "u64s per
         // cache line" is the same shared constant as the tile width
         const WORDS_PER_LINE: usize = crate::util::aligned::F64S_PER_CACHE_LINE;
-        WORDS_PER_LINE / gcd(self.words, WORDS_PER_LINE)
+        WORDS_PER_LINE / gcd(row_words, WORDS_PER_LINE)
     }
 
     /// Rebuild the degree-aware chunk plan for a pool of `chunks` workers:
@@ -738,7 +1017,7 @@ impl LanePdSampler {
             acc += self.model.x_visit_weight(v);
             prefix.push(acc);
         }
-        self.x_bounds = balanced_ranges_aligned(&prefix, chunks, self.row_align());
+        self.x_bounds = balanced_ranges_aligned(&prefix, chunks, self.row_align(self.row_words()));
 
         let slots = self.model.factor_slots();
         let mut tprefix = Vec::with_capacity(slots + 1);
@@ -752,7 +1031,7 @@ impl LanePdSampler {
             };
             tprefix.push(tacc);
         }
-        self.theta_bounds = balanced_ranges_aligned(&tprefix, chunks, self.row_align());
+        self.theta_bounds = balanced_ranges_aligned(&tprefix, chunks, self.row_align(self.t_row()));
 
         // blocked policy: chunk the x half-step over the plan's sweep
         // units instead (units partition the variables, so unit chunks
@@ -789,6 +1068,7 @@ impl LanePdSampler {
             self.rebuild_chunk_plan(pool.size());
         }
         let words = self.words;
+        let (rw, tr) = (self.row_words(), self.t_row());
         // x | θ : chunks over variables write x, read frozen θ
         {
             let ctx = XCtx {
@@ -798,6 +1078,9 @@ impl LanePdSampler {
                 lanes: self.lanes,
                 base: &self.base,
                 sweep: self.sweep_count,
+                x_planes: self.x_planes,
+                t_planes: self.t_planes,
+                clamped: &self.clamped,
             };
             let x_ptr = SendPtr(self.x.as_mut_ptr());
             match &self.block_plan {
@@ -814,12 +1097,9 @@ impl LanePdSampler {
                                     // variables and chunks own disjoint
                                     // unit ranges, hence disjoint x rows.
                                     let out = unsafe {
-                                        std::slice::from_raw_parts_mut(
-                                            x_ptr.0.add(v * words),
-                                            words,
-                                        )
+                                        std::slice::from_raw_parts_mut(x_ptr.0.add(v * rw), rw)
                                     };
-                                    ctx.site::<K>(v, out, &mut buf);
+                                    ctx.dispatch::<K>(v, out, &mut buf);
                                 }
                                 // SAFETY: as above — every variable of
                                 // this block belongs to this unit alone.
@@ -842,12 +1122,12 @@ impl LanePdSampler {
                         let mut buf = SweepBuf::new();
                         for v in start..end {
                             // SAFETY: chunks own disjoint variable
-                            // ranges, hence disjoint `words`-sized word
+                            // ranges, hence disjoint row-sized word
                             // rows of x.
                             let out = unsafe {
-                                std::slice::from_raw_parts_mut(x_ptr.0.add(v * words), words)
+                                std::slice::from_raw_parts_mut(x_ptr.0.add(v * rw), rw)
                             };
-                            ctx.site::<K>(v, out, &mut buf);
+                            ctx.dispatch::<K>(v, out, &mut buf);
                         }
                     });
                 }
@@ -862,6 +1142,8 @@ impl LanePdSampler {
                 lanes: self.lanes,
                 base: &self.base,
                 sweep: self.sweep_count,
+                x_planes: self.x_planes,
+                t_planes: self.t_planes,
             };
             let (stride, phase) = self.theta_window();
             let t_ptr = SendPtr(self.theta.as_mut_ptr());
@@ -874,9 +1156,9 @@ impl LanePdSampler {
                     }
                     // SAFETY: chunks own disjoint slot ranges.
                     let out = unsafe {
-                        std::slice::from_raw_parts_mut(t_ptr.0.add(slot * words), words)
+                        std::slice::from_raw_parts_mut(t_ptr.0.add(slot * tr), tr)
                     };
-                    ctx.site::<K>(slot, out, &mut buf);
+                    ctx.dispatch::<K>(slot, out, &mut buf);
                 }
             });
         }
@@ -891,9 +1173,73 @@ struct XCtx<'a> {
     lanes: usize,
     base: &'a Pcg64,
     sweep: u64,
+    /// Bit-planes per x site row (`out` spans `x_planes · words`).
+    x_planes: usize,
+    /// θ bit-planes per slot row.
+    t_planes: usize,
+    /// Evidence mask: clamped sites skip their draw entirely.
+    clamped: &'a [bool],
 }
 
 impl XCtx<'_> {
+    /// Route one site: clamped sites skip their draw (their keyed RNG
+    /// stream is never consumed, so every other site's draws are
+    /// untouched — clamp invariance across kernels/pools/shards is
+    /// structural), binary sites take the historical paths, K > 2 sites
+    /// the categorical bit-plane body.
+    fn dispatch<K: LaneKernel>(&self, v: usize, out: &mut [u64], buf: &mut SweepBuf) {
+        if self.clamped[v] {
+            return;
+        }
+        if self.x_planes == 1 {
+            self.site::<K>(v, out, buf);
+        } else {
+            self.site_k::<K>(v, out, buf);
+        }
+    }
+
+    /// Resample the K-state `x_v` in every lane. Per word: accumulate
+    /// `score(s) += β · θ_{i,s}`-words over the flat incidence view with
+    /// the same kernel primitive as the binary accumulate path, then one
+    /// shared categorical draw
+    /// ([`super::kernels::draw_categorical_planes`]) writes the winner's
+    /// bit-planes. RNG: the site's `split2(sweep, v·2)` stream consumes
+    /// exactly `lanes_in_word` uniforms per word, in word order — the
+    /// same stream discipline as the binary paths, so trajectories stay
+    /// kernel-, pool-, and shard-invariant.
+    fn site_k<K: LaneKernel>(&self, v: usize, out: &mut [u64], buf: &mut SweepBuf) {
+        let k_states = self.model.k();
+        let mut rng = self.base.split2(self.sweep, (v as u64) << 1);
+        let (slots, betas, overlay) = self.model.incidence_csr(v);
+        if buf.cat.len() < k_states {
+            buf.cat.resize_with(k_states, F64Lanes::default);
+        }
+        let SweepBuf { cat, draw, .. } = buf;
+        let cat = &mut cat[..k_states];
+        let mut planes_out = [0u64; crate::graph::MAX_STATES];
+        for w in 0..self.words {
+            let kl = lanes_in_word(self.lanes, w);
+            for sc in cat.iter_mut() {
+                sc.0.fill(0.0);
+            }
+            for (&slot, &beta) in slots
+                .iter()
+                .zip(betas.iter())
+                .chain(overlay.iter().map(|(s, b)| (s, b)))
+            {
+                let row = slot as usize * self.t_planes * self.words;
+                for (s, sc) in cat.iter_mut().enumerate() {
+                    let tw = self.theta[row + s * self.words + w];
+                    K::accumulate(sc, tw, beta);
+                }
+            }
+            draw_categorical_planes(&mut rng, cat, kl, draw, &mut planes_out[..self.x_planes]);
+            for (p, &word) in planes_out[..self.x_planes].iter().enumerate() {
+                out[p * self.words + w] = word;
+            }
+        }
+    }
+
     /// Resample `x_v` in every lane: one flat incidence traversal total,
     /// kernel bodies from `K`.
     fn site<K: LaneKernel>(&self, v: usize, out: &mut [u64], buf: &mut SweepBuf) {
@@ -1116,9 +1462,23 @@ struct ThetaCtx<'a> {
     lanes: usize,
     base: &'a Pcg64,
     sweep: u64,
+    /// Bit-planes per x site row.
+    x_planes: usize,
+    /// θ bit-planes per slot row (`out` spans `t_planes · words`).
+    t_planes: usize,
 }
 
 impl ThetaCtx<'_> {
+    /// Route one slot: binary slots take the historical single-plane
+    /// draw, K > 2 slots draw one auxiliary per state.
+    fn dispatch<K: LaneKernel>(&self, slot: usize, out: &mut [u64], buf: &mut SweepBuf) {
+        if self.t_planes == 1 {
+            self.site::<K>(slot, out, buf);
+        } else {
+            self.site_k::<K>(slot, out, buf);
+        }
+    }
+
     /// Resample `θ_slot` in every lane: the conditional takes one of four
     /// values per factor, so the model's cached four-sigmoid table serves
     /// all lanes (recomputed on churn, not per sweep).
@@ -1136,6 +1496,43 @@ impl ThetaCtx<'_> {
             let x2 = self.x[v2 * self.words + w];
             *out_word = K::draw_theta_word(&mut rng, p, x1, x2, k, &mut buf.draw);
         }
+    }
+
+    /// Resample the `k` indicator auxiliaries of one K-state slot: for
+    /// each state `s`, the conditional of `θ_{slot,s}` is the binary
+    /// four-sigmoid formula over the endpoints' state-`s` indicator
+    /// words, so the cached table and kernel θ draw are reused verbatim
+    /// — one draw per `(word, state)` in that fixed order, all from the
+    /// slot's single `split2(sweep, slot·2 + 1)` stream.
+    fn site_k<K: LaneKernel>(&self, slot: usize, out: &mut [u64], buf: &mut SweepBuf) {
+        let Some((v1, v2)) = self.model.slot_endpoints(slot) else {
+            out.fill(0); // dead slot: keep θ = 0 in every lane
+            return;
+        };
+        let p = self.model.theta_table(slot);
+        let (v1, v2) = (v1 as usize, v2 as usize);
+        let mut rng = self.base.split2(self.sweep, ((slot as u64) << 1) | 1);
+        for w in 0..self.words {
+            let k = lanes_in_word(self.lanes, w);
+            for s in 0..self.t_planes {
+                let z1 = self.eq_word(v1, s as u8, w);
+                let z2 = self.eq_word(v2, s as u8, w);
+                out[s * self.words + w] = K::draw_theta_word(&mut rng, p, z1, z2, k, &mut buf.draw);
+            }
+        }
+    }
+
+    /// Word of state-`s` indicator bits of `v` (`bit l = 1[x_v = s]` in
+    /// lane `l`): AND of per-plane XNORs against `s`'s bits. Ghost lanes
+    /// may read 1 here; every consumer masks its draw to the live lanes.
+    #[inline]
+    fn eq_word(&self, v: usize, s: u8, w: usize) -> u64 {
+        let mut eq = u64::MAX;
+        for p in 0..self.x_planes {
+            let xp = self.x[(v * self.x_planes + p) * self.words + w];
+            eq &= if (s >> p) & 1 == 1 { xp } else { !xp };
+        }
+        eq
     }
 }
 
@@ -1690,6 +2087,324 @@ mod tests {
             eng.block_plan().unwrap().blocks.iter().all(|b| !b.is_tree_slot(id as u32)),
             "fresh slot must re-earn its block membership"
         );
+    }
+
+    // -- K-state (Potts) + clamping ---------------------------------------
+
+    /// Exact per-(site, state) marginals by enumeration of the K-state
+    /// joint, optionally conditioned on evidence: `out[v][s] = P(x_v=s)`.
+    fn enumerate_k(g: &FactorGraph, evidence: &[(usize, u8)]) -> Vec<Vec<f64>> {
+        let (n, k) = (g.num_vars(), g.k());
+        let mut x = vec![0u8; n];
+        let mut acc = vec![vec![0.0f64; k]; n];
+        let mut z = 0.0f64;
+        'joint: for code in 0..k.pow(n as u32) {
+            let mut c = code;
+            for xv in x.iter_mut() {
+                *xv = (c % k) as u8;
+                c /= k;
+            }
+            for &(v, s) in evidence {
+                if x[v] != s {
+                    continue 'joint;
+                }
+            }
+            let w = g.log_prob_unnorm(&x).exp();
+            z += w;
+            for (v, &xv) in x.iter().enumerate() {
+                acc[v][xv as usize] += w;
+            }
+        }
+        for row in &mut acc {
+            for p in row.iter_mut() {
+                *p /= z;
+            }
+        }
+        acc
+    }
+
+    fn lane_marginals_k(
+        eng: &mut LanePdSampler,
+        burn: usize,
+        sweeps: usize,
+    ) -> Vec<Vec<f64>> {
+        for _ in 0..burn {
+            eng.sweep();
+        }
+        let (n, k) = (eng.num_vars(), eng.k());
+        let mut acc = vec![vec![0.0f64; k]; n];
+        for _ in 0..sweeps {
+            eng.sweep();
+            for (v, row) in acc.iter_mut().enumerate() {
+                for (s, a) in row.iter_mut().enumerate() {
+                    *a += eng.popcount_state(v, s as u8) as f64;
+                }
+            }
+        }
+        let denom = (sweeps * eng.lanes()) as f64;
+        for row in &mut acc {
+            for p in row.iter_mut() {
+                *p /= denom;
+            }
+        }
+        acc
+    }
+
+    /// Mixed-sign Potts ring: even edges attract, odd edges repel, so
+    /// both signs of β exercise the indicator dual.
+    fn potts_ring(k: usize, n: usize) -> FactorGraph {
+        let mut g = FactorGraph::new_k(n, k);
+        for v in 0..n {
+            let beta = if v % 2 == 0 { 0.6 } else { -0.4 };
+            g.add_factor(PairFactor::potts(v, (v + 1) % n, beta));
+        }
+        g
+    }
+
+    #[test]
+    fn potts_lane_marginals_match_enumeration() {
+        // k=3 ring (2 bit-planes) and k=4 chain: every (site, state)
+        // marginal must match brute-force enumeration of the Potts joint
+        let g3 = potts_ring(3, 5);
+        let mut g4 = FactorGraph::new_k(4, 4);
+        g4.add_factor(PairFactor::potts(0, 1, 0.7));
+        g4.add_factor(PairFactor::potts(1, 2, -0.5));
+        g4.add_factor(PairFactor::potts(2, 3, 0.4));
+        for g in [&g3, &g4] {
+            let want = enumerate_k(g, &[]);
+            let mut eng = LanePdSampler::new(g, 64, 19);
+            assert_eq!(eng.k(), g.k());
+            let got = lane_marginals_k(&mut eng, 600, 3000);
+            for v in 0..g.num_vars() {
+                for s in 0..g.k() {
+                    assert!(
+                        (got[v][s] - want[v][s]).abs() < 0.015,
+                        "k={} v={v} s={s}: {} vs exact {}",
+                        g.k(),
+                        got[v][s],
+                        want[v][s]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kstate_trajectory_is_kernel_and_pool_invariant() {
+        // 70 lanes forces a 6-bit tail word; a clamped site rides along
+        // to pin clamp invariance across kernels and pool sizes too
+        let g = potts_ring(3, 6);
+        let mut reference: Option<(Vec<u64>, Vec<u64>)> = None;
+        for &kernel in KernelKind::all() {
+            for pool_size in [0usize, 3] {
+                let cfg = EngineConfig {
+                    lanes: 70,
+                    seed: 67,
+                    kernel,
+                    ..EngineConfig::default()
+                };
+                let mut eng = LanePdSampler::with_config(&g, cfg);
+                eng.clamp(2, 1).unwrap();
+                if pool_size > 0 {
+                    eng = eng.with_pool(Arc::new(ThreadPool::new(pool_size)));
+                }
+                for _ in 0..40 {
+                    eng.sweep();
+                }
+                let state = (eng.state_words().to_vec(), eng.theta_words().to_vec());
+                match &reference {
+                    None => reference = Some(state),
+                    Some(want) => assert_eq!(
+                        &state,
+                        want,
+                        "kernel {} pool {pool_size} diverged",
+                        kernel.name()
+                    ),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kstate_tail_lanes_stay_zero() {
+        // 2 bit-planes (k=3) and 3 bit-planes (k=5): ghost bits of every
+        // x plane and θ plane must stay zero under sweeps and clamping
+        for k in [3usize, 5] {
+            let g = potts_ring(k, 5);
+            for &kernel in KernelKind::all() {
+                let cfg = EngineConfig {
+                    lanes: 5,
+                    seed: 71,
+                    kernel,
+                    ..EngineConfig::default()
+                };
+                let mut eng = LanePdSampler::with_config(&g, cfg);
+                eng.clamp(0, (k - 1) as u8).unwrap();
+                for _ in 0..50 {
+                    eng.sweep();
+                }
+                for &w in eng.state_words().iter().chain(eng.theta_words()) {
+                    assert_eq!(
+                        w & !lane_mask(5),
+                        0,
+                        "k={k} ghost lanes written by {}",
+                        kernel.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clamped_sites_pin_and_condition_neighbors() {
+        // clamping must freeze the site in every lane AND steer the
+        // neighbors' stationary law to the exact conditional — on a
+        // binary grid and on a k=3 ring
+        let cases: Vec<(FactorGraph, Vec<(usize, u8)>)> = vec![
+            (workloads::ising_grid(3, 3, 0.3, 0.1), vec![(4, 1)]),
+            (potts_ring(3, 5), vec![(0, 2), (2, 1)]),
+        ];
+        for (g, evidence) in cases {
+            let want = enumerate_k(&g, &evidence);
+            let mut eng = LanePdSampler::new(&g, 64, 23);
+            for &(v, s) in &evidence {
+                eng.clamp(v, s).unwrap();
+            }
+            assert_eq!(eng.clamped_count(), evidence.len());
+            let got = lane_marginals_k(&mut eng, 600, 3000);
+            for &(v, s) in &evidence {
+                // the clamp held: all mass on the evidence state
+                assert_eq!(eng.popcount_state(v, s) as usize, eng.lanes());
+                assert_eq!(got[v][s as usize], 1.0, "evidence site {v} drifted");
+            }
+            for v in 0..g.num_vars() {
+                for s in 0..g.k() {
+                    assert!(
+                        (got[v][s] - want[v][s]).abs() < 0.015,
+                        "k={} v={v} s={s}: {} vs conditional exact {}",
+                        g.k(),
+                        got[v][s],
+                        want[v][s]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clamp_survives_init_helpers_and_unclamp_resumes() {
+        let g = potts_ring(3, 5);
+        let mut eng = LanePdSampler::new(&g, 7, 29);
+        eng.clamp(1, 2).unwrap();
+        eng.clamp(1, 2).unwrap(); // idempotent
+        assert_eq!(eng.clamped_count(), 1);
+        assert!(eng.is_clamped(1) && !eng.is_clamped(0));
+        // init helpers must not move the evidence
+        eng.set_lane_state(3, &[0, 0, 0, 0, 0]);
+        eng.fill_lane_state(4, 1);
+        eng.randomize_lane(5);
+        for lane in 0..7 {
+            assert_eq!(eng.lane_value(1, lane), 2, "lane {lane} moved evidence");
+        }
+        // randomize_lane consumes the clamped site's draw, so free sites
+        // land identically with and without the clamp
+        let mut free = LanePdSampler::new(&g, 7, 29);
+        free.randomize_lane(5);
+        for v in [0usize, 2, 3, 4] {
+            assert_eq!(eng.lane_value(v, 5), free.lane_value(v, 5));
+        }
+        // re-clamping to a different state moves the evidence
+        eng.clamp(1, 0).unwrap();
+        assert_eq!(eng.clamped_count(), 1);
+        assert_eq!(eng.popcount_state(1, 0) as usize, eng.lanes());
+        // unclamp keeps the value until the next sweep resamples it
+        eng.unclamp(1).unwrap();
+        eng.unclamp(1).unwrap(); // no-op
+        assert_eq!(eng.clamped_count(), 0);
+        assert!(!eng.is_clamped(1));
+        assert_eq!(eng.popcount_state(1, 0) as usize, eng.lanes());
+        let mut moved = false;
+        for _ in 0..20 {
+            eng.sweep();
+            moved |= (eng.popcount_state(1, 0) as usize) != eng.lanes();
+        }
+        assert!(moved, "released site never resampled");
+    }
+
+    #[test]
+    fn kstate_and_clamp_reject_unsupported_policies() {
+        let g3 = potts_ring(3, 5);
+        for sweep in [
+            SweepPolicy::Minibatch(MinibatchPolicy::default()),
+            SweepPolicy::Blocked(BlockPolicy::default()),
+        ] {
+            let cfg = EngineConfig {
+                lanes: 4,
+                seed: 3,
+                kernel: KernelKind::default(),
+                sweep,
+            };
+            assert_eq!(
+                LanePdSampler::try_with_config(&g3, cfg).err(),
+                Some(EngineError::UnsupportedPolicy { policy: sweep, k: 3 }),
+                "k=3 × {sweep} must be rejected at construction"
+            );
+            // binary models still build under the policy, but clamping
+            // on them is a typed error, not a silently wrong chain
+            let g2 = mb_star();
+            let mut eng = LanePdSampler::try_with_config(&g2, cfg).unwrap();
+            assert_eq!(
+                eng.clamp(0, 1),
+                Err(EngineError::ClampUnsupported { policy: sweep })
+            );
+        }
+        // exact-policy range errors carry the full context
+        let mut eng = LanePdSampler::new(&g3, 4, 5);
+        assert_eq!(
+            eng.clamp(9, 0),
+            Err(EngineError::ClampOutOfRange { v: 9, n: 5, state: 0, k: 3 })
+        );
+        assert_eq!(
+            eng.clamp(1, 3),
+            Err(EngineError::ClampOutOfRange { v: 1, n: 5, state: 3, k: 3 })
+        );
+        assert!(eng.unclamp(9).is_err());
+        assert_eq!(eng.clamped_count(), 0, "failed clamps must not count");
+        // error strings render the offending policy / bounds
+        let msg = EngineError::UnsupportedPolicy {
+            policy: SweepPolicy::Blocked(BlockPolicy::default()),
+            k: 3,
+        }
+        .to_string();
+        assert!(msg.contains("k=3"), "{msg}");
+    }
+
+    #[test]
+    fn kstate_churn_keeps_correctness() {
+        // add + remove Potts factors mid-run: θ rows must resize per
+        // slot × k planes and the stationary law must track the new graph
+        let mut g = potts_ring(3, 5);
+        let mut eng = LanePdSampler::new(&g, 64, 31);
+        for _ in 0..100 {
+            eng.sweep();
+        }
+        let added = g.add_factor(PairFactor::potts(0, 2, 0.5));
+        eng.add_factor(added, g.factor(added).unwrap());
+        let victim = g.factors().next().unwrap().0;
+        g.remove_factor(victim).unwrap();
+        assert!(eng.remove_factor(victim));
+        let want = enumerate_k(&g, &[]);
+        let got = lane_marginals_k(&mut eng, 400, 2500);
+        for v in 0..5 {
+            for s in 0..3 {
+                assert!(
+                    (got[v][s] - want[v][s]).abs() < 0.015,
+                    "v={v} s={s}: {} vs exact {}",
+                    got[v][s],
+                    want[v][s]
+                );
+            }
+        }
     }
 
     use crate::graph::FactorGraph;

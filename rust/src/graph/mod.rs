@@ -1,4 +1,4 @@
-//! Dynamic pairwise factor graph over binary variables.
+//! Dynamic pairwise factor graph over discrete variables.
 //!
 //! The paper's motivating deployment is a *dynamic network*: factors are
 //! added and removed on a continuous basis, which makes maintaining a graph
@@ -10,6 +10,19 @@
 //! Potential convention: a factor stores the strictly positive 2×2 table
 //! `P[x1][x2] ∝ p(x_{v1}=x1, x_{v2}=x2)`; each variable additionally
 //! carries a unary log-odds `u_v` contributing `exp(u_v · x_v)`.
+//!
+//! ## K-state (Potts) graphs
+//!
+//! A graph built with [`FactorGraph::new_k`] holds `K`-state variables
+//! (`x_v ∈ 0..K`, `3 ≤ K ≤ 8`). The 2×2 table is then read under the
+//! *Potts convention*: `table[0][0]` is the agreement weight and
+//! `table[0][1]` the disagreement weight, i.e. the pair potential is
+//! `exp(β·1[x1 = x2])` with `β = ln(table[0][0] / table[0][1])` — see
+//! [`PairFactor::potts`] / [`PairFactor::potts_beta`]. Unary fields are
+//! not defined for K > 2 ([`FactorGraph::set_unary`] rejects nonzero
+//! values) and the off-convention table entries are ignored. Binary
+//! graphs (`K = 2`, the [`FactorGraph::new`] default) are completely
+//! unaffected: every table is read as the general 2×2 potential.
 
 pub mod coloring;
 
@@ -47,15 +60,49 @@ impl PairFactor {
         Self::new(v1, v2, [[hi, lo], [lo, hi]])
     }
 
+    /// Potts coupling for K-state graphs: `exp(β)` on agreement, `1`
+    /// otherwise, stored under the Potts table convention (module docs).
+    /// On a binary graph this is just a rescaled Ising table, so the same
+    /// constructor serves both.
+    pub fn potts(v1: VarId, v2: VarId, beta: f64) -> Self {
+        Self::new(v1, v2, [[beta.exp(), 1.0], [1.0, beta.exp()]])
+    }
+
+    /// The Potts coupling this table encodes:
+    /// `β = ln(table[0][0] / table[0][1])` (agreement vs disagreement
+    /// weight — exact for [`PairFactor::potts`] and
+    /// [`PairFactor::ising`]-built tables, where it reads `2β_ising`).
+    #[inline]
+    pub fn potts_beta(&self) -> f64 {
+        (self.table[0][0] / self.table[0][1]).ln()
+    }
+
     /// Log-potential of a joint assignment of the two endpoints.
     #[inline]
     pub fn log_potential(&self, x1: u8, x2: u8) -> f64 {
         self.table[x1 as usize][x2 as usize].ln()
     }
+
+    /// Log-potential under the K-state Potts convention: `β·1[x1 = x2]`
+    /// plus the constant `ln(table[0][1])` (so K = 2 Potts tables agree
+    /// with [`PairFactor::log_potential`] on agree/disagree pairs).
+    #[inline]
+    pub fn log_potential_potts(&self, x1: u8, x2: u8) -> f64 {
+        if x1 == x2 {
+            self.table[0][0].ln()
+        } else {
+            self.table[0][1].ln()
+        }
+    }
 }
 
-/// Dynamic binary pairwise MRF.
-#[derive(Clone, Debug, Default)]
+/// Largest variable cardinality a graph may carry (3 bit-planes in the
+/// lane engine's packed state).
+pub const MAX_STATES: usize = 8;
+
+/// Dynamic discrete pairwise MRF (binary by default; see module docs for
+/// the K-state Potts convention).
+#[derive(Clone, Debug)]
 pub struct FactorGraph {
     unary: Vec<f64>,
     slots: Vec<Option<PairFactor>>,
@@ -67,11 +114,30 @@ pub struct FactorGraph {
     /// Bumped on every topology mutation; consumers (compiled-artifact
     /// caches, colorings) use it to detect staleness.
     version: u64,
+    /// States per variable (2 = binary, the general-table convention).
+    k: usize,
+}
+
+impl Default for FactorGraph {
+    fn default() -> Self {
+        Self::new(0)
+    }
 }
 
 impl FactorGraph {
     /// Graph with `n` binary variables, no factors, zero unary fields.
     pub fn new(n: usize) -> Self {
+        Self::new_k(n, 2)
+    }
+
+    /// Graph with `n` `k`-state variables (`2 ≤ k ≤ 8`). For `k > 2`
+    /// every factor is read under the Potts convention and unary fields
+    /// must stay zero.
+    pub fn new_k(n: usize, k: usize) -> Self {
+        assert!(
+            (2..=MAX_STATES).contains(&k),
+            "variable cardinality must be 2..={MAX_STATES}, got {k}"
+        );
         Self {
             unary: vec![0.0; n],
             slots: Vec::new(),
@@ -79,7 +145,13 @@ impl FactorGraph {
             adj: vec![Vec::new(); n],
             active: 0,
             version: 0,
+            k,
         }
+    }
+
+    /// States per variable (2 = binary).
+    pub fn k(&self) -> usize {
+        self.k
     }
 
     /// Number of variables.
@@ -111,7 +183,15 @@ impl FactorGraph {
     }
 
     /// Overwrite `v`'s unary log-odds (bumps the topology version).
+    /// Unary fields are a binary-variable concept; K-state graphs reject
+    /// nonzero values loudly rather than silently sampling a different
+    /// model.
     pub fn set_unary(&mut self, v: VarId, logodds: f64) {
+        assert!(
+            self.k == 2 || logodds == 0.0,
+            "unary fields are not defined for k={} graphs",
+            self.k
+        );
         self.unary[v] = logodds;
         self.version += 1;
     }
@@ -193,9 +273,18 @@ impl FactorGraph {
         out
     }
 
-    /// Unnormalized log-probability of a full assignment (`x[v] ∈ {0, 1}`).
+    /// Unnormalized log-probability of a full assignment (`x[v] ∈ 0..k`).
+    /// Binary graphs use the general 2×2 table + unary convention; K > 2
+    /// graphs score every factor under the Potts convention (module docs).
     pub fn log_prob_unnorm(&self, x: &[u8]) -> f64 {
         assert_eq!(x.len(), self.num_vars());
+        if self.k > 2 {
+            debug_assert!(x.iter().all(|&xi| (xi as usize) < self.k));
+            return self
+                .factors()
+                .map(|(_, f)| f.log_potential_potts(x[f.v1], x[f.v2]))
+                .sum();
+        }
         let mut lp: f64 = x
             .iter()
             .zip(&self.unary)
@@ -227,6 +316,26 @@ impl FactorGraph {
             }
         }
         z
+    }
+
+    /// Conditional log-scores of `x_v = s` for `s ∈ 0..k` given the rest,
+    /// written into `scores` (K-state sequential Gibbs core). Under the
+    /// Potts convention each incident factor contributes `β·1[x_other = s]`,
+    /// so we accumulate `β_f` onto the neighbor's current state only.
+    /// Valid for any `k ≥ 2`; on binary graphs it matches
+    /// [`FactorGraph::conditional_logodds`] up to the shared constant.
+    pub fn conditional_scores_k(&self, v: VarId, x: &[u8], scores: &mut [f64]) {
+        assert_eq!(scores.len(), self.k);
+        scores.fill(0.0);
+        if self.k == 2 {
+            scores[1] = self.conditional_logodds(v, x);
+            return;
+        }
+        for &id in &self.adj[v] {
+            let f = self.slots[id].as_ref().unwrap();
+            let other = if f.v1 == v { x[f.v2] } else { x[f.v1] };
+            scores[other as usize] += f.potts_beta();
+        }
     }
 
     /// Maximum variable degree (drives coloring size).
@@ -312,6 +421,79 @@ mod tests {
     fn rejects_self_loops() {
         let mut g = FactorGraph::new(2);
         g.add_factor(PairFactor::ising(1, 1, 0.1));
+    }
+
+    #[test]
+    fn potts_beta_roundtrips() {
+        let f = PairFactor::potts(0, 1, 0.7);
+        assert!((f.potts_beta() - 0.7).abs() < 1e-12);
+        // Ising tables read as 2β under the Potts convention.
+        let f = PairFactor::ising(0, 1, 0.3);
+        assert!((f.potts_beta() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "variable cardinality")]
+    fn rejects_k_above_max() {
+        FactorGraph::new_k(2, 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "unary fields are not defined")]
+    fn kstate_rejects_nonzero_unary() {
+        let mut g = FactorGraph::new_k(2, 3);
+        g.set_unary(0, 0.5);
+    }
+
+    #[test]
+    fn kstate_log_prob_matches_manual_potts_sum() {
+        let mut g = FactorGraph::new_k(3, 3);
+        g.add_factor(PairFactor::potts(0, 1, 0.4));
+        g.add_factor(PairFactor::potts(1, 2, 0.9));
+        for code in 0..27usize {
+            let x = [(code % 3) as u8, ((code / 3) % 3) as u8, ((code / 9) % 3) as u8];
+            let want = 0.4 * f64::from(x[0] == x[1]) + 0.9 * f64::from(x[1] == x[2]);
+            assert!((g.log_prob_unnorm(&x) - want).abs() < 1e-12, "code={code}");
+        }
+    }
+
+    #[test]
+    fn conditional_scores_k_matches_log_prob_differences() {
+        let mut g = FactorGraph::new_k(3, 3);
+        g.add_factor(PairFactor::potts(0, 1, 0.4));
+        g.add_factor(PairFactor::potts(1, 2, 0.9));
+        g.add_factor(PairFactor::potts(0, 2, -0.3));
+        let mut scores = vec![0.0; 3];
+        for code in 0..27usize {
+            let x = [(code % 3) as u8, ((code / 3) % 3) as u8, ((code / 9) % 3) as u8];
+            for v in 0..3 {
+                g.conditional_scores_k(v, &x, &mut scores);
+                for s in 0..3u8 {
+                    let mut xs = x;
+                    xs[v] = s;
+                    let mut x0 = x;
+                    x0[v] = 0;
+                    let want = g.log_prob_unnorm(&xs) - g.log_prob_unnorm(&x0);
+                    let got = scores[s as usize] - scores[0];
+                    assert!((want - got).abs() < 1e-12, "v={v} s={s} code={code}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn binary_conditional_scores_k_matches_logodds() {
+        let (mut g, _) = tri();
+        g.set_unary(1, -0.4);
+        let mut scores = vec![0.0; 2];
+        for pattern in 0..8usize {
+            let x: Vec<u8> = (0..3).map(|v| ((pattern >> v) & 1) as u8).collect();
+            for v in 0..3 {
+                g.conditional_scores_k(v, &x, &mut scores);
+                let want = g.conditional_logodds(v, &x);
+                assert!((scores[1] - scores[0] - want).abs() < 1e-12);
+            }
+        }
     }
 
     #[test]

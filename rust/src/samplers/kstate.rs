@@ -1,0 +1,202 @@
+//! Sequential K-state (Potts) Gibbs — the classical baseline for
+//! categorical models, with evidence clamping.
+//!
+//! One site at a time, each resampled from its exact full conditional
+//! via [`crate::graph::FactorGraph::conditional_scores_k`] (softmax over
+//! the `k` states). Clamped sites are skipped but keep conditioning
+//! their neighbors — the chain then targets the conditional law given
+//! the evidence, the same contract as
+//! [`crate::engine::LanePdSampler::clamp`]. On binary models this
+//! reduces to the [`super::SequentialGibbs`] update order and law
+//! (different RNG consumption, same kernel).
+
+use crate::graph::FactorGraph;
+use crate::rng::Pcg64;
+
+use super::Sampler;
+
+/// Sequential Gibbs over `{0..k}^n` with per-site clamp masks.
+pub struct KStateGibbs<'g> {
+    graph: &'g FactorGraph,
+    x: Vec<u8>,
+    clamped: Vec<bool>,
+    scores: Vec<f64>,
+}
+
+impl<'g> KStateGibbs<'g> {
+    /// All-zeros initial state, nothing clamped.
+    pub fn new(graph: &'g FactorGraph) -> Self {
+        Self {
+            x: vec![0; graph.num_vars()],
+            clamped: vec![false; graph.num_vars()],
+            scores: vec![0.0; graph.k()],
+            graph,
+        }
+    }
+}
+
+impl Sampler for KStateGibbs<'_> {
+    fn name(&self) -> &'static str {
+        "kstate-gibbs"
+    }
+
+    fn state(&self) -> &[u8] {
+        &self.x
+    }
+
+    fn set_state(&mut self, x: &[u8]) {
+        assert_eq!(x.len(), self.x.len());
+        let k = self.graph.k();
+        for (v, (dst, &src)) in self.x.iter_mut().zip(x).enumerate() {
+            assert!((src as usize) < k, "state {src} out of range at site {v}");
+            if !self.clamped[v] {
+                *dst = src;
+            }
+        }
+    }
+
+    fn k(&self) -> usize {
+        self.graph.k()
+    }
+
+    fn clamp(&mut self, v: usize, state: u8) -> bool {
+        if v >= self.x.len() || state as usize >= self.graph.k() {
+            return false;
+        }
+        self.x[v] = state;
+        self.clamped[v] = true;
+        true
+    }
+
+    fn sweep(&mut self, rng: &mut Pcg64) {
+        let k = self.graph.k();
+        for v in 0..self.x.len() {
+            if self.clamped[v] {
+                continue;
+            }
+            self.graph.conditional_scores_k(v, &self.x, &mut self.scores);
+            let mx = self.scores.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+            let mut z = 0.0;
+            for s in self.scores.iter_mut() {
+                *s = (*s - mx).exp();
+                z += *s;
+            }
+            let u = rng.next_f64() * z;
+            let mut acc = 0.0;
+            let mut choice = k - 1; // top state absorbs rounding
+            for (s, &w) in self.scores.iter().enumerate() {
+                acc += w;
+                if u < acc {
+                    choice = s;
+                    break;
+                }
+            }
+            self.x[v] = choice as u8;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::PairFactor;
+    use crate::validation::{joint_probs, marginals_from_joint_k};
+
+    fn potts_ring(k: usize, n: usize) -> FactorGraph {
+        let mut g = FactorGraph::new_k(n, k);
+        for v in 0..n {
+            let beta = if v % 2 == 0 { 0.6 } else { -0.4 };
+            g.add_factor(PairFactor::potts(v, (v + 1) % n, beta));
+        }
+        g
+    }
+
+    fn empirical_k(
+        s: &mut KStateGibbs,
+        rng: &mut Pcg64,
+        burn: usize,
+        sweeps: usize,
+    ) -> Vec<f64> {
+        for _ in 0..burn {
+            s.sweep(rng);
+        }
+        let (n, k) = (s.state().len(), s.k());
+        let mut acc = vec![0.0f64; n * (k - 1)];
+        for _ in 0..sweeps {
+            s.sweep(rng);
+            for (v, &xv) in s.state().iter().enumerate() {
+                if xv > 0 {
+                    acc[v * (k - 1) + (xv as usize - 1)] += 1.0;
+                }
+            }
+        }
+        for a in &mut acc {
+            *a /= sweeps as f64;
+        }
+        acc
+    }
+
+    #[test]
+    fn matches_exact_potts_marginals() {
+        let g = potts_ring(3, 5);
+        let want = marginals_from_joint_k(&joint_probs(&g), 5, 3);
+        let mut s = KStateGibbs::new(&g);
+        let mut rng = Pcg64::seed(7);
+        let got = empirical_k(&mut s, &mut rng, 500, 60_000);
+        for (e, (&g_, &w)) in got.iter().zip(&want).enumerate() {
+            assert!((g_ - w).abs() < 0.01, "entry {e}: {g_} vs exact {w}");
+        }
+    }
+
+    #[test]
+    fn clamped_sites_hold_and_condition() {
+        let g = potts_ring(3, 5);
+        let mut s = KStateGibbs::new(&g);
+        assert!(s.clamp(0, 2));
+        assert!(!s.clamp(0, 3), "state ≥ k must be rejected");
+        assert!(!s.clamp(9, 0), "unknown site must be rejected");
+        // set_state must not move the evidence
+        s.set_state(&[1, 1, 1, 1, 1]);
+        assert_eq!(s.state()[0], 2);
+        // exact conditional marginals given x_0 = 2, free sites only
+        let probs = joint_probs(&g);
+        let mut cond = vec![0.0f64; 5 * 2];
+        let mut z = 0.0;
+        for (code, &p) in probs.iter().enumerate() {
+            let mut c = code;
+            let x: Vec<u8> = (0..5)
+                .map(|_| {
+                    let d = (c % 3) as u8;
+                    c /= 3;
+                    d
+                })
+                .collect();
+            if x[0] != 2 {
+                continue;
+            }
+            z += p;
+            for (v, &xv) in x.iter().enumerate() {
+                if xv > 0 {
+                    cond[v * 2 + (xv as usize - 1)] += p;
+                }
+            }
+        }
+        for c in &mut cond {
+            *c /= z;
+        }
+        let mut rng = Pcg64::seed(11);
+        let got = empirical_k(&mut s, &mut rng, 500, 60_000);
+        for (e, (&g_, &w)) in got.iter().zip(&cond).enumerate() {
+            assert!((g_ - w).abs() < 0.01, "entry {e}: {g_} vs conditional {w}");
+        }
+    }
+
+    #[test]
+    fn binary_sampler_defaults_report_no_clamping() {
+        // the trait defaults: binary baselines expose k = 2, clamp = false
+        let g = crate::workloads::ising_grid(2, 2, 0.2, 0.0);
+        let mut s = super::super::SequentialGibbs::new(&g);
+        assert_eq!(Sampler::k(&s), 2);
+        assert!(!Sampler::clamp(&mut s, 0, 1));
+    }
+}

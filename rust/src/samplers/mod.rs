@@ -8,10 +8,12 @@
 //! | [`PdSampler`]       | **all variables / all factors** | one 2×2 factorization per factor | O(1) per mutation |
 //! | [`SwendsenWang`]    | clusters | none (ferromagnetic Ising only) | trivial |
 //! | [`BlockedPd`]       | tree + off-tree duals | spanning forest | cheap refresh |
+//! | [`KStateGibbs`]     | none (K-state sequential baseline) | none | trivial |
 //!
-//! All samplers implement [`Sampler`]: a state vector in `{0,1}^n` advanced
-//! by full sweeps. RNGs are passed per sweep so multi-chain drivers control
-//! reproducibility and stream independence.
+//! All samplers implement [`Sampler`]: a state vector in `{0,1}^n`
+//! (`{0..k}^n` for K-state samplers) advanced by full sweeps. RNGs are
+//! passed per sweep so multi-chain drivers control reproducibility and
+//! stream independence.
 //!
 //! Running *many chains* of the primal–dual sampler is better served by
 //! [`crate::engine::LanePdSampler`], which bit-packs 64 chains per word
@@ -19,28 +21,47 @@
 
 mod blocked;
 mod chromatic;
+mod kstate;
 mod primal_dual;
 mod sequential;
 mod swendsen_wang;
 
 pub use blocked::BlockedPd;
 pub use chromatic::ChromaticGibbs;
+pub use kstate::KStateGibbs;
 pub use primal_dual::PdSampler;
 pub use sequential::SequentialGibbs;
 pub use swendsen_wang::SwendsenWang;
 
 use crate::rng::Pcg64;
 
-/// A Markov-chain sampler over binary states.
+/// A Markov-chain sampler over discrete states (binary unless the
+/// sampler overrides [`Sampler::k`]).
 pub trait Sampler {
     /// Human-readable name for reports.
     fn name(&self) -> &'static str;
 
-    /// Current primal state (`x[v] ∈ {0, 1}`).
+    /// Current primal state (`x[v] ∈ {0, 1}`, or `{0..k}` for K-state
+    /// samplers).
     fn state(&self) -> &[u8];
 
-    /// Overwrite the primal state (chain initialization).
+    /// Overwrite the primal state (chain initialization). Clamped sites
+    /// keep their evidence value.
     fn set_state(&mut self, x: &[u8]);
+
+    /// States per variable of the sampled model (2 = binary).
+    fn k(&self) -> usize {
+        2
+    }
+
+    /// Clamp site `v` to evidence `state`: skip its draws while it keeps
+    /// conditioning its neighbors. Returns `false` when the sampler does
+    /// not support clamping (the binary baselines) or the target is out
+    /// of range.
+    fn clamp(&mut self, v: usize, state: u8) -> bool {
+        let _ = (v, state);
+        false
+    }
 
     /// Advance one full sweep (every variable updated once, by whatever
     /// schedule the sampler defines).

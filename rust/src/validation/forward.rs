@@ -23,31 +23,58 @@ use crate::workloads::ChurnOp;
 
 use super::path::SamplingPath;
 
-/// Joint tabulation cap: `2^14` states keeps enumeration, histogramming,
-/// and chi-square pooling comfortably in cache for every zoo scenario.
+/// Joint tabulation cap: `2^14` binary states keeps enumeration,
+/// histogramming, and chi-square pooling comfortably in cache for every
+/// zoo scenario.
 pub const MAX_JOINT_VARS: usize = 14;
 
-/// Normalized probability of every state code (bit `v` of the code is
-/// `x_v`). Panics above [`MAX_JOINT_VARS`] variables.
-pub fn joint_probs(g: &FactorGraph) -> Vec<f64> {
-    let n = g.num_vars();
+/// K-state joint tabulation cap: `k^n` may not exceed `2^15` state
+/// codes (e.g. a 3×3 Potts grid at k = 3 is 3⁹ ≈ 20k codes).
+pub const MAX_JOINT_STATES: usize = 1 << 15;
+
+/// Number of joint state codes of `g` — `k^n`, gated by both tabulation
+/// caps. Codes are base-`k` and variable-minor: digit `v` of a code is
+/// `x_v`, which coincides with the historical bit codes at `k = 2`.
+pub fn num_joint_states(g: &FactorGraph) -> usize {
+    let (n, k) = (g.num_vars(), g.k());
     assert!(
         n <= MAX_JOINT_VARS,
         "joint tabulation limited to {MAX_JOINT_VARS} variables, got {n}"
     );
-    let mut x = vec![0u8; n];
-    let mut lps = Vec::with_capacity(1 << n);
-    for code in 0..1usize << n {
-        for (v, xv) in x.iter_mut().enumerate() {
-            *xv = ((code >> v) & 1) as u8;
-        }
+    k.checked_pow(n as u32)
+        .filter(|&s| s <= MAX_JOINT_STATES)
+        .unwrap_or_else(|| {
+            panic!("joint tabulation limited to {MAX_JOINT_STATES} states, got {k}^{n}")
+        })
+}
+
+/// Write the base-`k` digits of `code` into `x` (digit `v` = `x_v`).
+#[inline]
+pub(crate) fn decode_state(mut code: usize, k: usize, x: &mut [u8]) {
+    for xv in x.iter_mut() {
+        *xv = (code % k) as u8;
+        code /= k;
+    }
+}
+
+/// Normalized probability of every base-`k` state code of `g` (digit `v`
+/// of the code is `x_v`; plain bit codes when `k = 2`). Panics above the
+/// tabulation caps.
+pub fn joint_probs(g: &FactorGraph) -> Vec<f64> {
+    let states = num_joint_states(g);
+    let k = g.k();
+    let mut x = vec![0u8; g.num_vars()];
+    let mut lps = Vec::with_capacity(states);
+    for code in 0..states {
+        decode_state(code, k, &mut x);
         lps.push(g.log_prob_unnorm(&x));
     }
     let lz = log_sum_exp(&lps);
     lps.iter().map(|lp| (lp - lz).exp()).collect()
 }
 
-/// Per-variable marginals `P(x_v = 1)` of a tabulated joint.
+/// Per-variable marginals `P(x_v = 1)` of a tabulated *binary* joint
+/// (bit codes); see [`marginals_from_joint_k`] for the K-state form.
 pub fn marginals_from_joint(probs: &[f64]) -> Vec<f64> {
     assert!(probs.len().is_power_of_two());
     let n = probs.len().trailing_zeros() as usize;
@@ -62,11 +89,33 @@ pub fn marginals_from_joint(probs: &[f64]) -> Vec<f64> {
     out
 }
 
+/// Flattened non-zero-state marginals of a tabulated base-`k` joint
+/// over `n` variables: `out[v·(k−1) + (s−1)] = P(x_v = s)` for
+/// `s ∈ 1..k` — the crate-wide K-state marginal convention, which
+/// degenerates to the historical length-`n` `P(x_v = 1)` vector at
+/// `k = 2`.
+pub fn marginals_from_joint_k(probs: &[f64], n: usize, k: usize) -> Vec<f64> {
+    assert_eq!(probs.len(), k.pow(n as u32), "joint size must be k^n");
+    let mut out = vec![0.0; n * (k - 1)];
+    for (code, &p) in probs.iter().enumerate() {
+        let mut c = code;
+        for v in 0..n {
+            let s = c % k;
+            c /= k;
+            if s > 0 {
+                out[v * (k - 1) + (s - 1)] += p;
+            }
+        }
+    }
+    out
+}
+
 /// Iid sampler of a tabulated joint via CDF inversion; implements
 /// [`SamplingPath`] (one chain, one fresh state per "sweep", τ = 1).
 pub struct ExactForward {
     label: String,
     n: usize,
+    k: usize,
     cdf: Vec<f64>,
     rng: Pcg64,
     state: Vec<u8>,
@@ -76,6 +125,43 @@ impl ExactForward {
     /// Forward sampler of the model's true joint.
     pub fn new(g: &FactorGraph, seed: u64) -> Self {
         Self::perturbed(g, seed, "exact-forward", |_| 0.0)
+    }
+
+    /// Forward sampler of the joint *conditioned on evidence*: codes
+    /// violating any `(site, state)` pair get zero mass, the rest
+    /// renormalize. This is the ground truth of
+    /// [`super::validate_conditioned`] — clamped-site calibration.
+    pub fn conditioned(g: &FactorGraph, evidence: &[(usize, u8)], seed: u64) -> Self {
+        let (n, k) = (g.num_vars(), g.k());
+        for &(v, s) in evidence {
+            assert!(v < n && (s as usize) < k, "evidence ({v}, {s}) out of range");
+        }
+        let mut probs = joint_probs(g);
+        let mut x = vec![0u8; n];
+        for (code, p) in probs.iter_mut().enumerate() {
+            decode_state(code, k, &mut x);
+            if evidence.iter().any(|&(v, s)| x[v] != s) {
+                *p = 0.0;
+            }
+        }
+        let z: f64 = probs.iter().sum();
+        assert!(z > 0.0, "evidence has zero probability");
+        let mut acc = 0.0;
+        let cdf = probs
+            .iter()
+            .map(|&p| {
+                acc += p / z;
+                acc
+            })
+            .collect();
+        Self {
+            label: "exact-forward-cond".to_string(),
+            n,
+            k,
+            cdf,
+            rng: Pcg64::seed(seed),
+            state: vec![0; n],
+        }
     }
 
     /// Forward sampler of the *biased* joint `p'(x) ∝ p(x)·e^{eps·Σ_v x_v}`
@@ -128,6 +214,7 @@ impl ExactForward {
         Self {
             label: label.to_string(),
             n,
+            k: g.k(),
             cdf,
             rng: Pcg64::seed(seed),
             state: vec![0; n],
@@ -151,11 +238,13 @@ impl SamplingPath for ExactForward {
         self.n
     }
 
+    fn k(&self) -> usize {
+        self.k
+    }
+
     fn sweep(&mut self) {
         let code = self.draw_code();
-        for (v, xv) in self.state.iter_mut().enumerate() {
-            *xv = ((code >> v) & 1) as u8;
-        }
+        decode_state(code, self.k, &mut self.state);
     }
 
     fn visit_states(&self, f: &mut dyn FnMut(&[u8])) -> bool {
@@ -258,5 +347,100 @@ mod tests {
     #[should_panic(expected = "limited to 14")]
     fn joint_tabulation_caps_at_14_vars() {
         joint_probs(&FactorGraph::new(15));
+    }
+
+    #[test]
+    #[should_panic(expected = "32768 states")]
+    fn joint_tabulation_caps_at_kstate_codes() {
+        // 11 vars clears the variable cap but 3^11 > 2^15 codes
+        joint_probs(&FactorGraph::new_k(11, 3));
+    }
+
+    fn potts_chain(k: usize, n: usize) -> FactorGraph {
+        let mut g = FactorGraph::new_k(n, k);
+        for v in 0..n - 1 {
+            let beta = if v % 2 == 0 { 0.6 } else { -0.4 };
+            g.add_factor(PairFactor::potts(v, v + 1, beta));
+        }
+        g
+    }
+
+    #[test]
+    fn kstate_joint_and_marginals_match_direct_enumeration() {
+        let g = potts_chain(3, 4);
+        let probs = joint_probs(&g);
+        assert_eq!(probs.len(), 81);
+        assert!((probs.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // spot-check one code against the unnormalized ratio to code 0
+        let x0 = [0u8; 4];
+        let x = [2u8, 1, 0, 2]; // code 2 + 1·3 + 0·9 + 2·27 = 59
+        let want_ratio = (g.log_prob_unnorm(&x) - g.log_prob_unnorm(&x0)).exp();
+        assert!((probs[59] / probs[0] - want_ratio).abs() < 1e-9);
+        // flattened marginals agree with a direct sum over codes
+        let m = marginals_from_joint_k(&probs, 4, 3);
+        assert_eq!(m.len(), 8);
+        let mut want = 0.0;
+        let mut xs = [0u8; 4];
+        for (code, &p) in probs.iter().enumerate() {
+            decode_state(code, 3, &mut xs);
+            if xs[1] == 2 {
+                want += p;
+            }
+        }
+        assert!((m[3] - want).abs() < 1e-12); // entry v=1, s=2
+        // binary degeneration: marginals_from_joint_k == marginals_from_joint
+        let g2 = workloads::ising_grid(2, 3, 0.3, 0.1);
+        let p2 = joint_probs(&g2);
+        assert_eq!(marginals_from_joint_k(&p2, 6, 2), marginals_from_joint(&p2));
+    }
+
+    #[test]
+    fn conditioned_forward_matches_conditional_law() {
+        let g = potts_chain(3, 4);
+        let evidence = [(0usize, 2u8), (2usize, 1u8)];
+        let mut fwd = ExactForward::conditioned(&g, &evidence, 11);
+        assert_eq!(fwd.k(), 3);
+        // exact conditional of x_1 by direct enumeration
+        let probs = joint_probs(&g);
+        let mut cond = [0.0f64; 3];
+        let mut z = 0.0;
+        let mut xs = [0u8; 4];
+        for (code, &p) in probs.iter().enumerate() {
+            decode_state(code, 3, &mut xs);
+            if xs[0] == 2 && xs[2] == 1 {
+                z += p;
+                cond[xs[1] as usize] += p;
+            }
+        }
+        for c in &mut cond {
+            *c /= z;
+        }
+        let n = 60_000usize;
+        let mut hist = [0u64; 3];
+        for _ in 0..n {
+            fwd.sweep();
+            fwd.visit_states(&mut |x| {
+                assert_eq!(x[0], 2, "evidence site 0 moved");
+                assert_eq!(x[2], 1, "evidence site 2 moved");
+                hist[x[1] as usize] += 1;
+            });
+        }
+        for s in 0..3 {
+            let emp = hist[s] as f64 / n as f64;
+            let se = (cond[s] * (1.0 - cond[s]) / n as f64).sqrt();
+            assert!(
+                (emp - cond[s]).abs() < 5.0 * se + 1e-9,
+                "s={s}: {emp} vs {}",
+                cond[s]
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "zero probability")]
+    fn impossible_evidence_is_rejected() {
+        // a conflicting double-clamp of the same site has zero mass
+        let g = potts_chain(3, 3);
+        ExactForward::conditioned(&g, &[(0, 1), (0, 2)], 1);
     }
 }

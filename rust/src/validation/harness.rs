@@ -37,10 +37,23 @@
 //! endpoint) land far outside them — see the power tests in
 //! `tests/statistical_validation.rs`, which verify that deliberately
 //! perturbed distributions *fail*.
+//!
+//! ## K-state joints and evidence
+//!
+//! Every gate generalizes to K-state models: joints tabulate over
+//! base-`k` codes (capped at [`MAX_JOINT_STATES`]), and the z-gate runs
+//! per flattened `(site, state)` marginal entry, `n·(k−1)` tests
+//! Bonferroni-split alongside the two joint tests. Clamped-evidence runs
+//! go through [`validate_conditioned`]: the reference joint is the
+//! conditional law over the *free* sites, observed states must hold the
+//! evidence exactly (a dedicated gate counts violations), and in
+//! marginal mode the deterministic evidence entries must match to within
+//! rounding.
 
 use crate::graph::FactorGraph;
+use crate::inference::exact::log_sum_exp;
 
-use super::forward::{joint_probs, marginals_from_joint, MAX_JOINT_VARS};
+use super::forward::{marginals_from_joint_k, MAX_JOINT_STATES, MAX_JOINT_VARS};
 use super::path::SamplingPath;
 use super::stats::{chi2_quantile, pooled_chi2, total_variation, z_critical};
 
@@ -175,11 +188,70 @@ pub fn validate(
     scenario: &str,
     cfg: &GateConfig,
 ) -> ValidationReport {
-    let n = target.num_vars();
+    validate_conditioned(path, target, &[], scenario, cfg)
+}
+
+/// Conditioned joint over the free variables' base-`k` codes (digit `i`
+/// of a code is `x_{free[i]}`), with the evidence sites held fixed.
+fn conditioned_joint(g: &FactorGraph, evidence: &[(usize, u8)], free: &[usize]) -> Vec<f64> {
+    let k = g.k();
+    let states = k
+        .checked_pow(free.len() as u32)
+        .filter(|&s| s <= MAX_JOINT_STATES)
+        .unwrap_or_else(|| {
+            panic!(
+                "conditioned joint limited to {MAX_JOINT_STATES} states, got {k}^{}",
+                free.len()
+            )
+        });
+    let mut x = vec![0u8; g.num_vars()];
+    for &(v, s) in evidence {
+        x[v] = s;
+    }
+    let mut lps = Vec::with_capacity(states);
+    for code in 0..states {
+        let mut c = code;
+        for &v in free {
+            x[v] = (c % k) as u8;
+            c /= k;
+        }
+        lps.push(g.log_prob_unnorm(&x));
+    }
+    let lz = log_sum_exp(&lps);
+    lps.iter().map(|lp| (lp - lz).exp()).collect()
+}
+
+/// [`validate`] against the *conditional* joint given `evidence`
+/// `(site, state)` pairs — the ground truth check for clamped tenants.
+/// The path must already hold the same evidence (e.g. via
+/// [`SamplingPath::clamp`]): any observed state off the evidence fails a
+/// dedicated gate. The joint gates run over the free variables' base-`k`
+/// codes; in marginal mode the comparison spans the full flattened
+/// marginal vector, with the deterministic evidence entries required to
+/// match exactly.
+pub fn validate_conditioned(
+    path: &mut dyn SamplingPath,
+    target: &FactorGraph,
+    evidence: &[(usize, u8)],
+    scenario: &str,
+    cfg: &GateConfig,
+) -> ValidationReport {
+    let (n, k) = (target.num_vars(), target.k());
     assert!(n >= 1 && n <= MAX_JOINT_VARS, "validate needs 1..={MAX_JOINT_VARS} vars");
     assert_eq!(path.num_vars(), n, "path and target graph disagree on size");
-    let probs = joint_probs(target);
-    let exact_marg = marginals_from_joint(&probs);
+    assert_eq!(path.k(), k, "path and target graph disagree on cardinality");
+    let mut clamp_state: Vec<Option<u8>> = vec![None; n];
+    for &(v, s) in evidence {
+        assert!(v < n && (s as usize) < k, "evidence ({v}, {s}) out of range");
+        assert!(
+            clamp_state[v].replace(s).is_none(),
+            "duplicate evidence for site {v}"
+        );
+    }
+    let free: Vec<usize> = (0..n).filter(|&v| clamp_state[v].is_none()).collect();
+    assert!(!free.is_empty(), "evidence must leave at least one free variable");
+    let probs = conditioned_joint(target, evidence, &free);
+    let exact_free = marginals_from_joint_k(&probs, free.len(), k);
     let tau = cfg.tau.max(1);
 
     path.advance(cfg.burn_in);
@@ -188,51 +260,99 @@ pub fn validate(
     let obs_sweeps = cfg.samples.div_ceil(chains);
     let observable = path.visit_states(&mut |_| {});
 
-    let tests = (n + 2) as f64;
+    let m_tests = if observable { free.len() } else { n } * (k - 1);
+    let tests = (m_tests + 2) as f64;
     let a = cfg.alpha / tests;
     let z_crit = z_critical(a) * cfg.safety;
     let mut failures = Vec::new();
 
-    let (emp_marg, total, hist) = if observable {
-        // state mode: thin by tau, histogram the joint
-        let mut hist = vec![0u64; 1 << n];
+    let (emp_marg, exact_marg, total, hist, violations) = if observable {
+        // state mode: thin by tau, histogram the free variables' joint
+        let mut hist = vec![0u64; probs.len()];
         let mut total = 0u64;
+        let mut violations = 0u64;
         for _ in 0..obs_sweeps {
             path.advance(tau);
             path.visit_states(&mut |x| {
                 let mut code = 0usize;
-                for (v, &b) in x.iter().enumerate() {
-                    code |= ((b & 1) as usize) << v;
+                let mut mul = 1usize;
+                for &v in &free {
+                    code += (x[v] as usize).min(k - 1) * mul;
+                    mul *= k;
                 }
                 hist[code] += 1;
                 total += 1;
+                for (v, cs) in clamp_state.iter().enumerate() {
+                    if cs.is_some_and(|s| x[v] != s) {
+                        violations += 1;
+                    }
+                }
             });
         }
-        let emp = marginals_from_joint(
+        let emp = marginals_from_joint_k(
             &hist
                 .iter()
                 .map(|&c| c as f64 / total as f64)
                 .collect::<Vec<_>>(),
+            free.len(),
+            k,
         );
-        (emp, total, Some(hist))
+        (emp, exact_free, total, Some(hist), violations)
     } else {
-        // marginal mode: observe every sweep, discount the count by tau
+        // marginal mode: observe every sweep, discount the count by tau;
+        // the serving vector spans every site, evidence entries included
+        let mut exact_full = vec![0.0; n * (k - 1)];
+        for (fi, &v) in free.iter().enumerate() {
+            exact_full[v * (k - 1)..(v + 1) * (k - 1)]
+                .copy_from_slice(&exact_free[fi * (k - 1)..(fi + 1) * (k - 1)]);
+        }
+        for (v, cs) in clamp_state.iter().enumerate() {
+            if let Some(s) = cs {
+                if *s > 0 {
+                    exact_full[v * (k - 1) + (*s as usize - 1)] = 1.0;
+                }
+            }
+        }
         let emp = path.estimate_marginals(obs_sweeps * tau);
-        (emp, (obs_sweeps * chains) as u64, None)
+        (emp, exact_full, (obs_sweeps * chains) as u64, None, 0)
     };
+    if violations > 0 {
+        failures.push(format!(
+            "evidence gate: {violations} observed states moved a clamped site"
+        ));
+    }
 
-    // 1. marginal z-gate
+    // 1. marginal z-gate (free entries in state mode, every site's
+    //    entries in marginal mode; deterministic evidence entries must
+    //    match exactly — their binomial se is 0)
+    assert_eq!(
+        emp_marg.len(),
+        exact_marg.len(),
+        "path marginal vector has the wrong arity for k={k}"
+    );
     let nf = total as f64;
     let mut max_z = 0.0f64;
-    let mut worst_var = 0usize;
-    for (v, (&p_hat, &p)) in emp_marg.iter().zip(&exact_marg).enumerate() {
+    let mut worst_entry = 0usize;
+    for (e, (&p_hat, &p)) in emp_marg.iter().zip(&exact_marg).enumerate() {
         let se = (p * (1.0 - p) / nf).sqrt();
-        let z = if se > 0.0 { (p_hat - p).abs() / se } else { 0.0 };
+        let z = if se > 0.0 {
+            (p_hat - p).abs() / se
+        } else if (p_hat - p).abs() > 1e-9 {
+            f64::INFINITY // a deterministic (evidence) entry drifted
+        } else {
+            0.0
+        };
         if z > max_z {
             max_z = z;
-            worst_var = v;
+            worst_entry = e;
         }
     }
+    // map the worst flattened entry back to its variable for the report
+    let worst_var = if observable {
+        free[worst_entry / (k - 1)]
+    } else {
+        worst_entry / (k - 1)
+    };
     let z_gate = Gate {
         stat: max_z,
         threshold: z_crit,
@@ -241,7 +361,7 @@ pub fn validate(
         failures.push(format!(
             "marginal z-gate: var {worst_var} z={max_z:.2} > {z_crit:.2} \
              (empirical {:.4} vs exact {:.4}, N={total})",
-            emp_marg[worst_var], exact_marg[worst_var]
+            emp_marg[worst_entry], exact_marg[worst_entry]
         ));
     }
 
@@ -336,6 +456,38 @@ mod tests {
         let s = r.summary();
         assert!(s.contains("exact-forward"));
         assert!(s.contains("PASS") || s.contains("FAIL"));
+    }
+
+    #[test]
+    fn kstate_and_conditioned_calibration_and_power() {
+        use crate::graph::{FactorGraph, PairFactor};
+        let mut g = FactorGraph::new_k(5, 3);
+        for v in 0..4 {
+            let beta = if v % 2 == 0 { 0.5 } else { -0.4 };
+            g.add_factor(PairFactor::potts(v, v + 1, beta));
+        }
+        let cfg = GateConfig { burn_in: 0, samples: 20_000, tau: 1, ..GateConfig::default() };
+        // calibration: iid K-state ground-truth draws pass every gate
+        let mut fwd = ExactForward::new(&g, 42);
+        let r = validate(&mut fwd, &g, "potts-chain5", &cfg);
+        r.assert_passed();
+        assert!(r.tv.is_some() && r.chi2.is_some(), "joint gates must run");
+        // calibration under evidence: the conditional forward sampler
+        // passes the conditioned gates
+        let evidence = [(0usize, 2u8), (3usize, 0u8)];
+        let mut cond = ExactForward::conditioned(&g, &evidence, 43);
+        let r = validate_conditioned(&mut cond, &g, &evidence, "chain5-evidence", &cfg);
+        r.assert_passed();
+        // power: the unconditioned sampler must fail the conditioned
+        // gates — and specifically trip the evidence gate
+        let mut un = ExactForward::new(&g, 44);
+        let r = validate_conditioned(&mut un, &g, &evidence, "chain5-evidence", &cfg);
+        assert!(!r.passed(), "unconditioned draws slipped through");
+        assert!(
+            r.failures.iter().any(|f| f.contains("evidence gate")),
+            "expected the evidence gate to fire: {:?}",
+            r.failures
+        );
     }
 
     #[test]

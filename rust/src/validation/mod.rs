@@ -16,13 +16,16 @@
 //!   pool), [`crate::coordinator::PdEnsemble`], and the live coordinator
 //!   tenant path, so one harness drives them all.
 //! * [`forward`] — [`ExactForward`], iid ground-truth draws by joint-CDF
-//!   inversion (≤ 14 variables) plus deliberately biased variants that
-//!   calibrate the gates' power.
+//!   inversion (≤ 14 variables, ≤ 2¹⁵ base-`k` state codes) plus
+//!   deliberately biased variants that calibrate the gates' power and a
+//!   [`ExactForward::conditioned`] variant for evidence scenarios.
 //! * [`stats`] — quantile functions, total variation, pooled chi-square.
 //! * [`harness`] — [`validate`]: burn in, thin by the scenario's
 //!   autocorrelation bound, and gate empirical marginals (z-tests,
-//!   Bonferroni-corrected) and the empirical joint (TV + chi-square)
-//!   against exact enumeration. Deterministic: fixed seeds, precomputed
+//!   Bonferroni-corrected, one per `(site, state)` entry on K-state
+//!   models) and the empirical joint (TV + chi-square) against exact
+//!   enumeration; [`validate_conditioned`] gates against the clamped
+//!   conditional law instead. Deterministic: fixed seeds, precomputed
 //!   thresholds, no flakes.
 //!
 //! The scenario zoo the suite runs over lives in
@@ -35,7 +38,10 @@ pub mod harness;
 pub mod path;
 pub mod stats;
 
-pub use forward::{joint_probs, marginals_from_joint, ExactForward, MAX_JOINT_VARS};
-pub use harness::{validate, Gate, GateConfig, ValidationReport};
+pub use forward::{
+    joint_probs, marginals_from_joint, marginals_from_joint_k, ExactForward, MAX_JOINT_STATES,
+    MAX_JOINT_VARS,
+};
+pub use harness::{validate, validate_conditioned, Gate, GateConfig, ValidationReport};
 pub use path::{ClassicalPath, CoordinatorPath, EnsemblePath, LanePath, SamplingPath};
 pub use stats::{chi2_quantile, inv_norm_cdf, pooled_chi2, total_variation, z_critical};

@@ -48,6 +48,21 @@ pub trait SamplingPath {
     /// Number of primal variables of the current model.
     fn num_vars(&self) -> usize;
 
+    /// States per variable of the current model (2 = binary). Marginal
+    /// vectors are flattened v-major over the non-zero states,
+    /// `num_vars · (k − 1)` entries.
+    fn k(&self) -> usize {
+        2
+    }
+
+    /// Clamp site `v` to evidence `state`: the site stops being
+    /// resampled but keeps conditioning its neighbors. Returns `false`
+    /// when the path cannot clamp (immutable baselines, frozen joints).
+    fn clamp(&mut self, v: usize, state: u8) -> bool {
+        let _ = (v, state);
+        false
+    }
+
     /// Independent chains advanced per [`SamplingPath::sweep`] call.
     fn chains(&self) -> usize {
         1
@@ -70,20 +85,24 @@ pub trait SamplingPath {
     /// [`SamplingPath::estimate_marginals`].
     fn visit_states(&self, f: &mut dyn FnMut(&[u8])) -> bool;
 
-    /// Pooled `P(x_v = 1)` estimate over `sweeps` further sweeps of all
-    /// chains (every sweep observed, no thinning). Default accumulates
-    /// through [`SamplingPath::visit_states`]; marginal-only paths
-    /// override it with their serving query.
+    /// Pooled flattened marginal estimate over `sweeps` further sweeps
+    /// of all chains (every sweep observed, no thinning):
+    /// `out[v·(k−1) + (s−1)] = P̂(x_v = s)` for `s ∈ 1..k`, the plain
+    /// `P̂(x_v = 1)` vector on binary models. Default accumulates through
+    /// [`SamplingPath::visit_states`]; marginal-only paths override it
+    /// with their serving query.
     fn estimate_marginals(&mut self, sweeps: usize) -> Vec<f64> {
-        let n = self.num_vars();
-        let mut acc = vec![0.0f64; n];
+        let (n, k) = (self.num_vars(), self.k());
+        let mut acc = vec![0.0f64; n * (k - 1)];
         let mut count = 0u64;
         for _ in 0..sweeps {
             self.sweep();
             self.visit_states(&mut |x| {
                 count += 1;
-                for (a, &b) in acc.iter_mut().zip(x) {
-                    *a += b as f64;
+                for (v, &s) in x.iter().enumerate() {
+                    if s > 0 {
+                        acc[v * (k - 1) + (s as usize - 1)] += 1.0;
+                    }
                 }
             });
         }
@@ -145,6 +164,14 @@ impl SamplingPath for ClassicalPath<'_> {
 
     fn num_vars(&self) -> usize {
         self.sampler.state().len()
+    }
+
+    fn k(&self) -> usize {
+        self.sampler.k()
+    }
+
+    fn clamp(&mut self, v: usize, state: u8) -> bool {
+        self.sampler.clamp(v, state)
     }
 
     fn sweep(&mut self) {
@@ -216,6 +243,14 @@ impl SamplingPath for LanePath {
 
     fn num_vars(&self) -> usize {
         self.engine.num_vars()
+    }
+
+    fn k(&self) -> usize {
+        self.engine.k()
+    }
+
+    fn clamp(&mut self, v: usize, state: u8) -> bool {
+        self.engine.clamp(v, state).is_ok()
     }
 
     fn chains(&self) -> usize {
@@ -290,6 +325,14 @@ impl SamplingPath for EnsemblePath {
         self.graph.num_vars()
     }
 
+    fn k(&self) -> usize {
+        self.graph.k()
+    }
+
+    fn clamp(&mut self, v: usize, state: u8) -> bool {
+        self.ensemble.clamp(v, state).is_ok()
+    }
+
     fn chains(&self) -> usize {
         self.ensemble.num_chains()
     }
@@ -334,6 +377,7 @@ pub struct CoordinatorPath {
     tenant: u64,
     chains: usize,
     vars: usize,
+    k: usize,
     label: String,
 }
 
@@ -356,6 +400,7 @@ impl CoordinatorPath {
         let client = coord.client();
         let tenant = 1u64;
         let vars = graph.num_vars();
+        let k = graph.k();
         client
             .create_tenant(
                 tenant,
@@ -374,6 +419,7 @@ impl CoordinatorPath {
             tenant,
             chains,
             vars,
+            k,
         }
     }
 }
@@ -385,6 +431,14 @@ impl SamplingPath for CoordinatorPath {
 
     fn num_vars(&self) -> usize {
         self.vars
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn clamp(&mut self, v: usize, state: u8) -> bool {
+        self.client.clamp(self.tenant, v, state).is_ok()
     }
 
     fn chains(&self) -> usize {
@@ -478,6 +532,32 @@ mod tests {
             lane.graph.factors().map(|(id, _)| id).collect::<Vec<_>>(),
             ens.graph.factors().map(|(id, _)| id).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn every_adapter_reports_cardinality_and_clamps_uniformly() {
+        use crate::graph::PairFactor;
+        let mut g = FactorGraph::new_k(4, 3);
+        for v in 0..3 {
+            g.add_factor(PairFactor::potts(v, v + 1, 0.4));
+        }
+        let mut lane = LanePath::with_lanes(g.clone(), 5, 3);
+        let mut ens = EnsemblePath::new(g.clone(), 4, 3, None);
+        let mut coord = CoordinatorPath::new(g.clone(), 1, 0, 4, 3);
+        let mut classical =
+            ClassicalPath::new(Box::new(crate::samplers::KStateGibbs::new(&g)), 3);
+        let paths: [&mut dyn SamplingPath; 4] =
+            [&mut lane, &mut ens, &mut coord, &mut classical];
+        for p in paths {
+            assert_eq!(p.k(), 3, "{}", p.name());
+            assert!(p.clamp(1, 2), "{}", p.name());
+            assert!(!p.clamp(1, 3), "{}: state ≥ k must be refused", p.name());
+            p.advance(5);
+            let m = p.estimate_marginals(30);
+            assert_eq!(m.len(), 4 * 2, "{}", p.name());
+            // entry v=1, s=2 of the flattened n·(k−1) layout
+            assert_eq!(m[3], 1.0, "{}: clamped entry pins", p.name());
+        }
     }
 
     #[test]

@@ -41,6 +41,49 @@ pub fn ising_grid(rows: usize, cols: usize, beta: f64, h: f64) -> FactorGraph {
     g
 }
 
+/// K-state Potts grid: `rows × cols` variables of cardinality `k` with
+/// uniform Potts coupling `beta` (agreement bonus `e^β` on the diagonal)
+/// on the 4-neighbor lattice. K-state models carry no unary terms — the
+/// indicator dual keeps the base field zero
+/// ([`crate::duality::DualModel`] docs).
+pub fn potts_grid(rows: usize, cols: usize, k: usize, beta: f64) -> FactorGraph {
+    let mut g = FactorGraph::new_k(rows * cols, k);
+    let idx = |r: usize, c: usize| r * cols + c;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                g.add_factor(PairFactor::potts(idx(r, c), idx(r, c + 1), beta));
+            }
+            if r + 1 < rows {
+                g.add_factor(PairFactor::potts(idx(r, c), idx(r + 1, c), beta));
+            }
+        }
+    }
+    g
+}
+
+/// Seeded evidence set: `count` distinct sites of an `n`-variable,
+/// `k`-state model, each clamped to a uniformly drawn state. The serving
+/// scenario in miniature — every user request conditions a shared tenant
+/// model on a different evidence set.
+pub fn evidence_set(n: usize, k: usize, count: usize, seed: u64) -> Vec<(usize, u8)> {
+    assert!(count <= n, "cannot clamp {count} of {n} sites");
+    let mut rng = Pcg64::seed(seed);
+    let mut taken = vec![false; n];
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let v = loop {
+            let v = rng.next_below(n as u64) as usize;
+            if !taken[v] {
+                break v;
+            }
+        };
+        taken[v] = true;
+        out.push((v, rng.next_below(k as u64) as u8));
+    }
+    out
+}
+
 /// §6 model 2: random graph with `n` variables and `k·n` factors; unary and
 /// pairwise log-potentials drawn `N(0, σ²)` with `σ = 1` in the paper.
 ///
@@ -182,6 +225,31 @@ mod tests {
         assert_eq!(g.num_vars(), 2500);
         assert_eq!(g.num_factors(), 2 * 50 * 49); // 4900
         assert_eq!(g.max_degree(), 4);
+    }
+
+    #[test]
+    fn potts_grid_counts_and_cardinality() {
+        let g = potts_grid(3, 3, 3, 0.8);
+        assert_eq!(g.num_vars(), 9);
+        assert_eq!(g.k(), 3);
+        assert_eq!(g.num_factors(), 12);
+        assert_eq!(g.max_degree(), 4);
+        for (_, f) in g.factors() {
+            assert!((f.potts_beta() - 0.8).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn evidence_set_is_distinct_in_range_and_seeded() {
+        let ev = evidence_set(9, 3, 4, 17);
+        assert_eq!(ev.len(), 4);
+        let mut sites: Vec<_> = ev.iter().map(|&(v, _)| v).collect();
+        sites.sort_unstable();
+        sites.dedup();
+        assert_eq!(sites.len(), 4, "sites must be distinct");
+        assert!(ev.iter().all(|&(v, s)| v < 9 && s < 3));
+        assert_eq!(ev, evidence_set(9, 3, 4, 17), "seeded determinism");
+        assert_ne!(ev, evidence_set(9, 3, 4, 18));
     }
 
     #[test]

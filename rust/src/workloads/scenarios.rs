@@ -21,6 +21,11 @@
 //!   x-table-cache cap in both directions, so the gates also certify
 //!   the post-churn distribution (a stale cached conditional is exactly
 //!   the bug class bit-identity tests cannot see).
+//! * **Cardinality and evidence** — K-state Potts grids below and above
+//!   the 3-state critical coupling `ln(1+√3) ≈ 1.005` exercise the
+//!   indicator dual, and a clamped-endpoints chain gates every path
+//!   against the *conditional* law (the serving scenario: each request
+//!   is an evidence set on a shared tenant).
 //!
 //! `tau` bounds were precomputed by measuring the PD sampler's
 //! integrated autocorrelation time of magnetization (the slowest
@@ -65,6 +70,13 @@ pub struct Scenario {
     /// the slowest path on the *final* model — the harness's thinning
     /// stride.
     pub tau: usize,
+    /// States per variable (2 = binary Ising; matches `graph.k()`).
+    pub k: usize,
+    /// Evidence `(site, state)` pairs every path clamps before the gates
+    /// run (empty = unconditioned scenario). Conditioned scenarios are
+    /// gated against the clamped conditional law via
+    /// [`crate::validation::validate_conditioned`].
+    pub evidence: Vec<(usize, u8)>,
 }
 
 impl Scenario {
@@ -79,12 +91,16 @@ impl Scenario {
         g
     }
 
-    /// Whether every factor (of the final graph) is ferromagnetic Ising —
-    /// the applicability condition of Swendsen–Wang.
+    /// Whether every factor (of the final graph) is ferromagnetic
+    /// *binary* Ising — the applicability condition of Swendsen–Wang.
+    /// K-state Potts tables share the agreement-bonus shape but not the
+    /// binary state space, so `k > 2` scenarios are excluded.
     pub fn is_ferromagnetic(&self) -> bool {
-        self.final_graph()
-            .factors()
-            .all(|(_, f)| crate::duality::sw::ising_w_from_table(&f.table).is_some())
+        self.k == 2
+            && self
+                .final_graph()
+                .factors()
+                .all(|(_, f)| crate::duality::sw::ising_w_from_table(&f.table).is_some())
     }
 }
 
@@ -131,6 +147,8 @@ pub fn zoo() -> Vec<Scenario> {
             regime: Regime::Below,
             graph: ising_chain(8, 0.2, 0.1),
             churn: Vec::new(),
+            k: 2,
+            evidence: Vec::new(),
             tau: 8,
         },
         Scenario {
@@ -138,6 +156,8 @@ pub fn zoo() -> Vec<Scenario> {
             regime: Regime::At,
             graph: ising_chain(8, BETA_CRITICAL, 0.05),
             churn: Vec::new(),
+            k: 2,
+            evidence: Vec::new(),
             tau: 20,
         },
         Scenario {
@@ -145,6 +165,8 @@ pub fn zoo() -> Vec<Scenario> {
             regime: Regime::Above,
             graph: ising_chain(8, 0.7, 0.05),
             churn: Vec::new(),
+            k: 2,
+            evidence: Vec::new(),
             tau: 48,
         },
         Scenario {
@@ -152,6 +174,8 @@ pub fn zoo() -> Vec<Scenario> {
             regime: Regime::Below,
             graph: crate::workloads::ising_grid(3, 3, 0.25, 0.1),
             churn: Vec::new(),
+            k: 2,
+            evidence: Vec::new(),
             tau: 16,
         },
         Scenario {
@@ -159,6 +183,8 @@ pub fn zoo() -> Vec<Scenario> {
             regime: Regime::At,
             graph: crate::workloads::ising_grid(3, 3, BETA_CRITICAL, 0.05),
             churn: Vec::new(),
+            k: 2,
+            evidence: Vec::new(),
             tau: 64,
         },
         // the adaptive-blocking home turf: above-critical grid where the
@@ -170,6 +196,8 @@ pub fn zoo() -> Vec<Scenario> {
             regime: Regime::Above,
             graph: crate::workloads::ising_grid(3, 3, 0.6, 0.05),
             churn: Vec::new(),
+            k: 2,
+            evidence: Vec::new(),
             tau: 160,
         },
         Scenario {
@@ -177,6 +205,8 @@ pub fn zoo() -> Vec<Scenario> {
             regime: Regime::Above,
             graph: triangle(1.0, 0.2),
             churn: Vec::new(),
+            k: 2,
+            evidence: Vec::new(),
             tau: 200,
         },
         // K₁₀ with jittered couplings: chromatic number 10 (no small
@@ -188,6 +218,8 @@ pub fn zoo() -> Vec<Scenario> {
             regime: Regime::Below,
             graph: crate::workloads::fully_connected_jittered(10, 0.08, 0.3, 41),
             churn: Vec::new(),
+            k: 2,
+            evidence: Vec::new(),
             tau: 20,
         },
         // K₁₂ in the paper's §6 uniform band β ∈ [0.01, 0.015].
@@ -196,6 +228,8 @@ pub fn zoo() -> Vec<Scenario> {
             regime: Regime::Below,
             graph: crate::workloads::fully_connected_ising(12, |_, _| 0.0125),
             churn: Vec::new(),
+            k: 2,
+            evidence: Vec::new(),
             tau: 4,
         },
     ];
@@ -209,6 +243,8 @@ pub fn zoo() -> Vec<Scenario> {
         regime: Regime::Below,
         graph: ising_chain(8, 0.3, 0.1),
         churn: up,
+        k: 2,
+        evidence: Vec::new(),
         tau: 16,
     });
     // churn: cross the cap upward then back down (hub ends at degree 3,
@@ -228,6 +264,8 @@ pub fn zoo() -> Vec<Scenario> {
         regime: Regime::Below,
         graph: ising_chain(8, 0.3, 0.1),
         churn: down,
+        k: 2,
+        evidence: Vec::new(),
         tau: 16,
     });
     // hub-heavy star (the power-law tenant in miniature): one degree-11
@@ -245,7 +283,45 @@ pub fn zoo() -> Vec<Scenario> {
             ChurnOp::Add { v1: 0, v2: 1, beta: -0.18 },
             ChurnOp::Add { v1: 1, v2: 3, beta: 0.10 },
         ],
+        k: 2,
+        evidence: Vec::new(),
         tau: 16,
+    });
+    // K-state Potts: the §6 grid family at k = 3, below and above the
+    // 3-state Potts critical coupling β_c = ln(1+√3) ≈ 1.005 — the
+    // indicator-dual generalization under the same gates (3⁹ ≈ 20k
+    // joint codes, inside the tabulation cap).
+    scenarios.push(Scenario {
+        name: "potts3-grid3x3-below",
+        regime: Regime::Below,
+        graph: crate::workloads::potts_grid(3, 3, 3, 0.5),
+        churn: Vec::new(),
+        k: 3,
+        evidence: Vec::new(),
+        tau: 16,
+    });
+    scenarios.push(Scenario {
+        name: "potts3-grid3x3-above",
+        regime: Regime::Above,
+        graph: crate::workloads::potts_grid(3, 3, 3, 1.3),
+        churn: Vec::new(),
+        k: 3,
+        evidence: Vec::new(),
+        tau: 120,
+    });
+    // evidence clamping: the weak chain conditioned on both endpoints —
+    // every path clamps x₀ = 1 and x₇ = 0 and is gated against the
+    // conditional law over the six free sites. Conditioning shortens
+    // correlations (the clamped ends act as boundary fields), so the
+    // unconditioned chain8 tau bound is already conservative.
+    scenarios.push(Scenario {
+        name: "chain8-evidence",
+        regime: Regime::Below,
+        graph: ising_chain(8, 0.3, 0.1),
+        churn: Vec::new(),
+        k: 2,
+        evidence: vec![(0, 1), (7, 0)],
+        tau: 8,
     });
     scenarios
 }
@@ -364,6 +440,38 @@ mod tests {
         assert!(by_name("chain8-below").is_ferromagnetic());
         assert!(by_name("kn10-dense").is_ferromagnetic());
         assert!(by_name("churn-cross-up").is_ferromagnetic());
+        // Potts tables have the agreement-bonus shape, but SW is binary
+        assert!(!by_name("potts3-grid3x3-below").is_ferromagnetic());
+    }
+
+    #[test]
+    fn kstate_and_evidence_scenarios_are_consistent() {
+        for s in &zoo() {
+            assert_eq!(s.k, s.graph.k(), "{}: k field drifted", s.name);
+            assert_eq!(s.k, s.final_graph().k(), "{}: churn changed k", s.name);
+            let states = (s.k as f64).powi(s.graph.num_vars() as i32);
+            assert!(states <= 32768.0, "{} exceeds the joint cap", s.name);
+            let mut seen = vec![false; s.graph.num_vars()];
+            for &(v, st) in &s.evidence {
+                assert!(
+                    v < s.graph.num_vars() && (st as usize) < s.k,
+                    "{}: evidence ({v}, {st}) out of range",
+                    s.name
+                );
+                assert!(!seen[v], "{} clamps site {v} twice", s.name);
+                seen[v] = true;
+            }
+            assert!(
+                s.evidence.len() < s.graph.num_vars(),
+                "{}: no free site left",
+                s.name
+            );
+        }
+        let p = by_name("potts3-grid3x3-above");
+        assert_eq!(p.k, 3);
+        assert_eq!(p.graph.num_factors(), 12);
+        let e = by_name("chain8-evidence");
+        assert_eq!(e.evidence, vec![(0, 1), (7, 0)]);
     }
 
     #[test]

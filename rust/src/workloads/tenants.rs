@@ -524,10 +524,12 @@ mod tests {
                         vars: v,
                         chains,
                         seed: s,
+                        k,
                         sweep,
                     },
                 ) => {
                     assert_eq!((*tenant, *vars, 4, *seed), (t, v, chains, s));
+                    assert_eq!(k, 2, "traces carry no cardinality");
                     assert_eq!(sweep, Default::default(), "traces carry no policy");
                 }
                 (

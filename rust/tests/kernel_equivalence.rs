@@ -327,6 +327,150 @@ fn tiled_keeps_ghost_lanes_zero() {
     }
 }
 
+/// K-state mirror of [`mixed_path_graph`]: a Potts grid (cached x-tables)
+/// plus an appended hub past the degree-6 cache cap (per-lane score
+/// fallback), with mixed-sign couplings. K-state graphs carry no unary
+/// fields, so the hub is added neutral.
+fn mixed_path_potts(k: usize) -> FactorGraph {
+    let mut g = workloads::potts_grid(3, 3, k, 0.35);
+    let hub = g.add_var(0.0);
+    for (i, v) in (0..9).enumerate() {
+        let beta = if i % 2 == 0 { 0.3 } else { -0.25 };
+        g.add_factor(PairFactor::potts(hub, v, beta));
+    }
+    g
+}
+
+#[test]
+fn kstate_kernels_bit_identical_across_lane_counts_and_bit_planes() {
+    // one cardinality per bit-plane count b ∈ {1, 2, 3}, plus the k that
+    // exactly fills each plane budget; the lane sweep reuses the binary
+    // suite's tail-masking edge cases (partial tile, word ± 1, two words
+    // plus one)
+    for &(k, planes) in &[(2usize, 1usize), (3, 2), (4, 2), (5, 3), (8, 3)] {
+        let g = mixed_path_potts(k);
+        let probe = LanePdSampler::new(&g, 1, 0);
+        assert_eq!(probe.k(), k);
+        assert_eq!(probe.bit_planes(), planes, "k={k}: wrong plane count");
+        for &lanes in &[1usize, 7, 63, 65, 127, 129] {
+            assert_equivalent(&g, lanes, 10, &all_serial());
+        }
+    }
+}
+
+#[test]
+fn kstate_tiled_pooled_matches_scalar_serial() {
+    // kernel × pool under 3 bit-planes: the pooled runs chunk per-variable
+    // work that now spans multiple x-planes per site
+    let g = mixed_path_potts(5);
+    let combos = [
+        (KernelKind::Scalar, 0usize),
+        (KernelKind::Scalar, 3),
+        (KernelKind::Tiled, 0),
+        (KernelKind::Tiled, 5),
+    ];
+    assert_equivalent(&g, 70, 20, &combos);
+}
+
+#[test]
+fn kstate_kernels_bit_identical_under_churn_and_clamping() {
+    // k = 3 grid churned past the degree-6 cache cap while a site holds
+    // evidence: trajectories must stay equal across kernels AND the
+    // clamped site must never move in any lane through inserts, removals,
+    // and the table ↔ fallback transitions they trigger
+    let mut g = workloads::potts_grid(3, 4, 3, 0.3);
+    let mut engines: Vec<LanePdSampler> = KernelKind::all()
+        .iter()
+        .map(|&k| LanePdSampler::new(&g, 90, 77).with_kernel(k))
+        .collect();
+    for eng in engines.iter_mut() {
+        eng.clamp(3, 2).unwrap();
+    }
+    let compare = |engines: &[LanePdSampler], stage: &str| {
+        let (first, rest) = engines.split_first().unwrap();
+        for eng in rest {
+            assert_eq!(first.state_words(), eng.state_words(), "x diverged {stage}");
+            assert_eq!(first.theta_words(), eng.theta_words(), "θ diverged {stage}");
+        }
+        for eng in engines {
+            for lane in [0usize, 63, 64, 89] {
+                assert_eq!(eng.lane_value(3, lane), 2, "evidence moved {stage}");
+            }
+        }
+    };
+    for _ in 0..10 {
+        engines.iter_mut().for_each(LanePdSampler::sweep);
+    }
+    compare(&engines, "before churn");
+    // grow var 0 (grid degree 2) to degree 7 — past the cache cap
+    let mut added = Vec::new();
+    for v in [5usize, 7, 8, 9, 10] {
+        let id = g.add_factor(PairFactor::potts(0, v, -0.2));
+        added.push(id);
+        for eng in engines.iter_mut() {
+            eng.add_factor(id, g.factor(id).unwrap());
+        }
+    }
+    for _ in 0..10 {
+        engines.iter_mut().for_each(LanePdSampler::sweep);
+    }
+    compare(&engines, "after inserts");
+    for id in added {
+        g.remove_factor(id).unwrap();
+        for eng in engines.iter_mut() {
+            assert!(eng.remove_factor(id));
+        }
+    }
+    for _ in 0..10 {
+        engines.iter_mut().for_each(LanePdSampler::sweep);
+    }
+    compare(&engines, "after removals");
+}
+
+#[test]
+fn k2_trajectories_pinned_across_construction_paths() {
+    // the K-state generalization must be layout-invisible at k = 2: a
+    // graph built through the pre-existing binary constructor and one
+    // built through `new_k(n, 2)` with identical topology drive engines
+    // whose packed words agree sweep for sweep, in the single-plane
+    // binary layout (one x-plane, one θ-plane, `n · words` rows)
+    let gb = mixed_path_graph();
+    let mut gk = FactorGraph::new_k(9, 2);
+    for v in 0..9 {
+        gk.set_unary(v, gb.unary(v));
+    }
+    let hub = gk.add_var(gb.unary(9));
+    assert_eq!(hub, 9);
+    // replay the binary graph's factors in slot order (no removals, so
+    // ids are dense)
+    for id in 0..gb.num_factors() {
+        gk.add_factor(gb.factor(id).unwrap().clone());
+    }
+    for &lanes in &[1usize, 65, 129] {
+        let words = lanes.div_ceil(64);
+        let mut binary = LanePdSampler::new(&gb, lanes, 0x2B1D);
+        let mut kstate = LanePdSampler::new(&gk, lanes, 0x2B1D);
+        assert_eq!(kstate.k(), 2);
+        assert_eq!(kstate.bit_planes(), 1);
+        assert_eq!(kstate.theta_planes(), 1);
+        assert_eq!(kstate.state_words().len(), 10 * words);
+        for sweep in 0..20 {
+            binary.sweep();
+            kstate.sweep();
+            assert_eq!(
+                binary.state_words(),
+                kstate.state_words(),
+                "k=2 x diverged from the binary layout at sweep {sweep}, lanes {lanes}"
+            );
+            assert_eq!(
+                binary.theta_words(),
+                kstate.theta_words(),
+                "k=2 θ diverged from the binary layout at sweep {sweep}, lanes {lanes}"
+            );
+        }
+    }
+}
+
 #[test]
 fn prop_kernel_equivalence_random_graphs_lanes_and_churn() {
     check("scalar ≡ tiled on random models", 12, |gn: &mut Gen| {

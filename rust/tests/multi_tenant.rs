@@ -3,9 +3,14 @@
 //! coordinator, with per-tenant correctness checked against exact
 //! enumeration and shard-count invariance of the final answers.
 
+use std::sync::Arc;
+
 use pdgibbs::coordinator::{Coordinator, CoordinatorConfig, TenantConfig};
-use pdgibbs::graph::FactorGraph;
+use pdgibbs::engine::{KernelKind, LanePdSampler};
+use pdgibbs::graph::{FactorGraph, PairFactor};
 use pdgibbs::inference::exact;
+use pdgibbs::util::proptest::{check, Gen};
+use pdgibbs::util::ThreadPool;
 use pdgibbs::workloads::{ChurnOp, ChurnTrace, TenantEvent, TenantTrace, TenantTraceConfig};
 
 fn tenant_config(seed: u64) -> TenantConfig {
@@ -199,6 +204,135 @@ fn suspend_churn_resume_answers_fresh_marginals_not_the_parked_snapshot() {
         fresh[1],
         want[1]
     );
+    coord.shutdown();
+}
+
+#[test]
+fn prop_clamped_sites_never_flip_under_churn_and_clamp_interleavings() {
+    // evidence is inviolable: whatever interleaving of clamp, unclamp,
+    // churn, and sweeps a tenant's lifetime throws at the engine — on any
+    // kernel, with or without a pool — a clamped site holds its evidence
+    // state in every lane until the moment it is unclamped
+    #[derive(Clone)]
+    enum Op {
+        Clamp(usize, u8),
+        Unclamp(usize),
+        Churn(usize, usize, f64),
+        Sweep,
+    }
+    check("evidence is inviolable", 8, |gn: &mut Gen| {
+        let k = gn.usize_in(2..=5);
+        let n = gn.usize_in(4..=8);
+        let mut base = FactorGraph::new_k(n, k);
+        for _ in 0..gn.usize_in(2..=8) {
+            let v1 = gn.usize_in(0..=n - 1);
+            let mut v2 = gn.usize_in(0..=n - 1);
+            if v1 == v2 {
+                v2 = (v2 + 1) % n;
+            }
+            base.add_factor(PairFactor::potts(v1, v2, gn.f64_in(-0.6, 0.9)));
+        }
+        let lanes = gn.usize_in(1..=96);
+        let seed = gn.u64();
+        // script the interleaving once, then replay it on every
+        // kernel × pool combination so all runs see the same lifetime
+        let mut script = Vec::new();
+        for _ in 0..14 {
+            script.push(match gn.usize_in(0..=4) {
+                0 => Op::Clamp(gn.usize_in(0..=n - 1), gn.usize_in(0..=k - 1) as u8),
+                1 => Op::Unclamp(gn.usize_in(0..=n - 1)),
+                2 => {
+                    let v1 = gn.usize_in(0..=n - 1);
+                    let v2 = (v1 + 1 + gn.usize_in(0..=n - 2)) % n;
+                    Op::Churn(v1, v2, gn.f64_in(-0.5, 0.8))
+                }
+                _ => Op::Sweep,
+            });
+        }
+        for &kernel in KernelKind::all() {
+            for &pool in &[0usize, 3] {
+                let mut g = base.clone();
+                let mut eng = LanePdSampler::new(&g, lanes, seed).with_kernel(kernel);
+                if pool > 0 {
+                    eng = eng.with_pool(Arc::new(ThreadPool::new(pool)));
+                }
+                let mut evidence = std::collections::HashMap::new();
+                for op in &script {
+                    match op {
+                        Op::Clamp(v, s) => {
+                            eng.clamp(*v, *s).unwrap();
+                            evidence.insert(*v, *s);
+                        }
+                        Op::Unclamp(v) => {
+                            eng.unclamp(*v).unwrap();
+                            evidence.remove(v);
+                        }
+                        Op::Churn(v1, v2, beta) => {
+                            let id = g.add_factor(PairFactor::potts(*v1, *v2, *beta));
+                            eng.add_factor(id, g.factor(id).unwrap());
+                        }
+                        Op::Sweep => eng.sweep(),
+                    }
+                    for (&v, &s) in &evidence {
+                        for lane in [0, lanes / 2, lanes - 1] {
+                            if eng.lane_value(v, lane) != s {
+                                return Err(format!(
+                                    "site {v} flipped off evidence {s} \
+                                     ({} pool {pool}, lanes {lanes}, k {k})",
+                                    kernel.name()
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn clamping_commutes_with_suspend_resume() {
+    // same evidence, three orderings — clamp→suspend→resume, clamp while
+    // parked, and clamp after the park/unpark cycle — must leave three
+    // same-seeded tenants in identical states: suspend parks trace
+    // buffers, never sampler state, so evidence survives it untouched
+    let mut coord = Coordinator::spawn(CoordinatorConfig {
+        shards: 2,
+        quantum: 0, // request-driven: deterministic
+        ..Default::default()
+    });
+    let client = coord.client();
+    let g = pdgibbs::workloads::potts_grid(2, 2, 3, 0.4);
+    for t in [1u64, 2, 3] {
+        client.create_tenant(t, g.clone(), tenant_config(0xC0FFEE)).unwrap();
+    }
+    client.clamp(1, 0, 2).unwrap();
+    client.suspend(1).unwrap();
+    client.resume(1).unwrap();
+    client.suspend(2).unwrap();
+    client.clamp(2, 0, 2).unwrap(); // lands while parked
+    client.resume(2).unwrap();
+    client.suspend(3).unwrap();
+    client.resume(3).unwrap();
+    client.clamp(3, 0, 2).unwrap();
+    let mut answers = Vec::new();
+    for t in [1u64, 2, 3] {
+        let s = client.stats(t).unwrap();
+        assert_eq!((s.clamped, s.k), (1, 3), "tenant {t}");
+        client.sweep(t, 200).unwrap();
+        client.reset_stats(t).unwrap();
+        client.sweep(t, 4000).unwrap();
+        answers.push(client.marginals(t).unwrap());
+    }
+    for m in &answers {
+        // evidence entries of site 0 in the flattened n·(k−1) layout:
+        // P(x₀=1) = 0 and P(x₀=2) = 1 exactly, every sweep, every chain
+        assert_eq!(m[0], 0.0);
+        assert_eq!(m[1], 1.0);
+    }
+    assert_eq!(answers[0], answers[1], "clamp-then-park diverged from clamp-while-parked");
+    assert_eq!(answers[1], answers[2], "clamp-while-parked diverged from clamp-after-resume");
     coord.shutdown();
 }
 

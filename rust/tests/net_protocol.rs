@@ -337,6 +337,97 @@ fn create_with_blocked_policy_surfaces_plan_in_stats() {
 }
 
 #[test]
+fn kstate_create_clamp_and_unclamp_over_the_wire() {
+    let (mut coord, mut server) = spawn_edge(NetConfig::default(), 2, 0);
+    let mut wire = Wire::connect(&server);
+    // k=3 tenant: stats advertises cardinality and live evidence count
+    assert_eq!(wire.roundtrip("create 31 4 8 7 k=3"), "ok");
+    let stats = wire.roundtrip("stats 31");
+    assert!(stats.contains(" k=3"), "{stats}");
+    assert!(stats.contains(" clamped=0"), "{stats}");
+    // agreement couplings (`add` acts as a Potts bonus on K-state
+    // tenants) + evidence, then serve conditional marginals: requests are
+    // FIFO per shard, so the marginals read runs after the sweeps
+    assert_eq!(
+        wire.roundtrip("apply 31 add 0 1 0.4 add 1 2 0.4 add 2 3 0.4"),
+        "ok"
+    );
+    assert_eq!(wire.roundtrip("clamp 31 0 2"), "ok");
+    assert!(wire.roundtrip("stats 31").contains(" clamped=1"));
+    assert_eq!(wire.roundtrip("sweep 31 50"), "ok");
+    let m = wire.roundtrip("marginals 31");
+    assert!(m.starts_with("ok marginals n=8 "), "{m}");
+    let vals: Vec<f64> = m
+        .split_whitespace()
+        .skip(3)
+        .map(|t| t.parse().expect("marginal value"))
+        .collect();
+    assert_eq!(vals.len(), 8, "4 vars × (k−1) states: {m}");
+    // evidence is exact on the wire: P(x₀=1) = 0, P(x₀=2) = 1
+    assert_eq!(vals[0], 0.0, "{m}");
+    assert_eq!(vals[1], 1.0, "{m}");
+    assert_eq!(wire.roundtrip("unclamp 31 0"), "ok");
+    assert!(wire.roundtrip("stats 31").contains(" clamped=0"));
+    // execution-time rejections: parse-legal states that exceed the
+    // tenant's cardinality, out-of-graph sites, ghost tenants — all
+    // `err exec`, never a dead connection
+    assert!(
+        wire.roundtrip("clamp 31 0 5").starts_with("err exec clamp rejected: "),
+        "state 5 on a k=3 tenant must be an exec error"
+    );
+    assert!(
+        wire.roundtrip("clamp 31 9 0").starts_with("err exec clamp rejected: "),
+        "site 9 of a 4-var tenant must be an exec error"
+    );
+    assert!(wire.roundtrip("clamp 404 0 0").starts_with("err exec "));
+    assert!(wire.roundtrip("unclamp 404 0").starts_with("err exec "));
+    // unsupported policy × cardinality: rejected at create, id reusable
+    assert!(
+        wire.roundtrip("create 32 8 4 7 k=4 minibatch:16:4")
+            .starts_with("err exec create rejected: "),
+        "minibatch × K>2 must be refused"
+    );
+    assert_eq!(wire.roundtrip("create 32 8 4 7 k=4"), "ok");
+    assert!(wire.roundtrip("stats 32").contains(" k=4"));
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn malformed_kstate_frames_are_spanned_over_the_wire() {
+    let (mut coord, mut server) = spawn_edge(NetConfig::default(), 1, 0);
+    let mut wire = Wire::connect(&server);
+    // (hostile line, span fragment, expected-token label fragment)
+    let cases: &[(&str, &str, &str)] = &[
+        ("create 1 9 k=9", "span=11:14", "k=2..=8"),
+        ("create 1 9 k=one", "span=11:16", "k=2..=8"),
+        ("clamp 3 4", "span=9:9", "evidence state"),
+        ("clamp 3 4 8", "span=10:11", "0..=7"),
+        ("unclamp 3", "span=9:9", "variable index"),
+        ("unclamp 3 4 5", "span=12:13", "end of line"),
+    ];
+    for &(line, span, label) in cases {
+        let reply = wire.roundtrip(line);
+        assert!(
+            reply.starts_with("err parse span="),
+            "{line:?}: not a spanned diagnostic: {reply}"
+        );
+        assert!(reply.contains(span), "{line:?}: wrong span in {reply}");
+        assert!(reply.contains(label), "{line:?}: wrong label in {reply}");
+        assert!(reply.contains("found="), "{line:?}: no found token in {reply}");
+    }
+    // the connection and the shard both survived the abuse
+    assert_eq!(wire.roundtrip("create 1 4 k=3"), "ok");
+    assert!(wire.roundtrip("stats 1").contains(" k=3"));
+    assert_eq!(
+        coord.metrics().counter("net.parse_errors"),
+        cases.len() as u64
+    );
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
 fn subscribe_streams_events_then_ok() {
     let (mut coord, mut server) = spawn_edge(NetConfig::default(), 1, 0);
     let mut wire = Wire::connect(&server);

@@ -13,7 +13,11 @@
 //! * dense `K_n` scenarios with no small coloring,
 //! * churn sequences crossing the degree-6 x-table-cache cap both ways,
 //! * minibatched and adaptively-blocked sweep policies (different
-//!   trajectories, same stationary law) per kernel × pool.
+//!   trajectories, same stationary law) per kernel × pool,
+//! * K-state Potts scenarios below and above the critical coupling, and
+//!   evidence scenarios gated against the exact *conditional* law, on
+//!   the classical, lane (kernel × pool), ensemble, and coordinator
+//!   paths.
 //!
 //! Everything is seed-fixed and thresholded by precomputed statistics
 //! (see `rust/src/validation/harness.rs` and `docs/TESTING.md`) —
@@ -25,11 +29,13 @@ use std::sync::Arc;
 
 use pdgibbs::duality::{BlockPolicy, MinibatchPolicy};
 use pdgibbs::engine::{EngineConfig, KernelKind, SweepPolicy};
-use pdgibbs::samplers::{BlockedPd, ChromaticGibbs, PdSampler, SequentialGibbs, SwendsenWang};
+use pdgibbs::samplers::{
+    BlockedPd, ChromaticGibbs, KStateGibbs, PdSampler, SequentialGibbs, SwendsenWang,
+};
 use pdgibbs::util::ThreadPool;
 use pdgibbs::validation::{
-    validate, ClassicalPath, CoordinatorPath, EnsemblePath, ExactForward, GateConfig, LanePath,
-    SamplingPath, ValidationReport,
+    validate, validate_conditioned, ClassicalPath, CoordinatorPath, EnsemblePath, ExactForward,
+    GateConfig, LanePath, SamplingPath, ValidationReport,
 };
 use pdgibbs::workloads::scenarios::{self, Scenario};
 
@@ -347,6 +353,80 @@ fn coordinator_tenant_path_stays_exact_through_churn() {
     check_churn(&mut p, &s, 8192);
 }
 
+// -- K-state Potts and evidence: conditional exactness end to end -----------
+
+/// Gate a path on a K-state and/or evidence scenario: push the
+/// scenario's evidence through the path's own clamp API, then validate
+/// against the exact *conditional* law. (For evidence-free Potts
+/// scenarios this degenerates to the unconditional gates over base-k
+/// joint codes.)
+fn check_kstate(path: &mut dyn SamplingPath, s: &Scenario, samples: usize, name: &str) {
+    assert!(s.churn.is_empty(), "{} is a churn scenario", s.name);
+    assert_eq!(path.k(), s.k, "{name}: path cardinality");
+    for &(v, st) in &s.evidence {
+        assert!(path.clamp(v, st), "{name}: clamp ({v}, {st}) refused");
+    }
+    let cfg = GateConfig::with_budget(samples, s.tau);
+    let r = validate_conditioned(path, &s.graph, &s.evidence, name, &cfg);
+    println!("{}", r.summary());
+    r.assert_passed();
+}
+
+/// The three cardinality/evidence scenarios with per-path sample
+/// budgets: the above-critical Potts grid mixes slowly (tau 120), so it
+/// leans on the tau-discounted thresholds rather than a bigger budget.
+const KSTATE_SCENARIOS: [(&str, usize); 3] = [
+    ("potts3-grid3x3-below", 8192),
+    ("potts3-grid3x3-above", 8192),
+    ("chain8-evidence", 5000),
+];
+
+#[test]
+fn classical_kstate_gibbs_passes_gates_on_potts_and_evidence_scenarios() {
+    // KStateGibbs is the classical reference for every cardinality — on
+    // the k=2 evidence chain it degenerates to sequential binary Gibbs
+    for (name, samples) in KSTATE_SCENARIOS {
+        let s = scenarios::by_name(name);
+        let mut p = ClassicalPath::new(Box::new(KStateGibbs::new(&s.graph)), 0x5E06);
+        check_kstate(&mut p, &s, samples, name);
+    }
+}
+
+#[test]
+fn lane_engine_kstate_and_evidence_pass_gates_across_kernels_and_pools() {
+    // the tentpole claim end to end: bit-plane sweeps target the right
+    // (conditional) law on every kernel, with and without a pool
+    for (name, samples) in KSTATE_SCENARIOS {
+        let s = scenarios::by_name(name);
+        for kernel in [KernelKind::Scalar, KernelKind::Tiled] {
+            for pool_threads in [0usize, 4] {
+                let pool = (pool_threads > 0).then(|| Arc::new(ThreadPool::new(pool_threads)));
+                let mut p = LanePath::new(
+                    s.graph.clone(),
+                    EngineConfig { lanes: 64, seed: 0xEA, kernel, ..EngineConfig::default() },
+                    pool,
+                );
+                let label = format!("{name}/{}-pool{pool_threads}", kernel.name());
+                check_kstate(&mut p, &s, samples.max(16_384), &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn ensemble_and_coordinator_kstate_evidence_pass_marginal_gates() {
+    // the serving paths expose pooled marginals only: the harness runs
+    // the flattened n·(k−1) marginal z-gate against exact enumeration,
+    // with the deterministic evidence entries required to match exactly
+    for (name, samples) in KSTATE_SCENARIOS {
+        let s = scenarios::by_name(name);
+        let mut p = EnsemblePath::new(s.graph.clone(), 16, 0xE3, None);
+        check_kstate(&mut p, &s, samples.max(16_384), &format!("{name}/ensemble"));
+        let mut p = CoordinatorPath::new(s.graph.clone(), 2, 0, 8, 0xC3);
+        check_kstate(&mut p, &s, samples, &format!("{name}/coordinator"));
+    }
+}
+
 // -- gate calibration and power ---------------------------------------------
 
 #[test]
@@ -357,9 +437,10 @@ fn exact_forward_draws_calibrate_the_gates_on_every_scenario() {
     for (i, s) in scenarios::zoo().iter().enumerate() {
         let g = s.final_graph();
         let mut fwd = ExactForward::new(&g, 0xF0 + i as u64);
-        // scale iid draws with the state space so every chi-square bucket
-        // clears the pooling floor even on the 2^12-state dense models
-        let samples = (16usize << g.num_vars()).max(8192);
+        // scale iid draws with the state space (k^n, not 2^n) so every
+        // chi-square bucket clears the pooling floor even on the densest
+        // models
+        let samples = (16 * g.k().pow(g.num_vars() as u32)).max(8192);
         let cfg = GateConfig { burn_in: 0, samples, tau: 1, ..GateConfig::default() };
         let r = validate(&mut fwd, &g, s.name, &cfg);
         println!("{}", r.summary());
@@ -369,6 +450,15 @@ fn exact_forward_draws_calibrate_the_gates_on_every_scenario() {
             "{}: joint gates must have run",
             s.name
         );
+        // evidence scenarios additionally calibrate the conditional
+        // gates: iid draws from the exact conditional must pass them
+        if !s.evidence.is_empty() {
+            let mut fwd = ExactForward::conditioned(&g, &s.evidence, 0x1F0 + i as u64);
+            let name = format!("{}/conditioned", s.name);
+            let r = validate_conditioned(&mut fwd, &g, &s.evidence, &name, &cfg);
+            println!("{}", r.summary());
+            r.assert_passed();
+        }
     }
 }
 
