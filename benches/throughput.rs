@@ -48,7 +48,9 @@
 //! strided θ refresh), and the tracked `speedup` metric is the ratio.
 //! Acceptance (ISSUE 7): ≥ 5× vs the full-incidence path with the
 //! minibatch lane paths passing the tier-3 exactness gates. Flags:
-//! `--mb-vars`, `--mb-edges`, `--mb-threshold`, `--mb-stride`,
+//! `--mb-vars`, `--mb-edges`, `--mb-threshold`, `--mb-stride`, `--k`
+//! (variable cardinality, default 2 — k > 2 builds the same power-law
+//! edge set over Potts tables and writes a `-k{k}`-suffixed record),
 //! `--kernel` (single kernel, default tiled).
 //!
 //! `--mode blocked` measures adaptive tree-blocking on an above-critical
@@ -60,7 +62,9 @@
 //! only honest unit for a policy that deliberately spends more per
 //! sweep. Acceptance (ISSUE 8): ≥ 1.5× ESS/s vs flat PD. Flags:
 //! `--blk-rows`, `--blk-cols`, `--blk-beta`, `--blk-cap`, `--blk-epoch`,
-//! `--blk-sweeps`, `--kernel` (single kernel, default tiled).
+//! `--blk-sweeps`, `--k` (variable cardinality, default 2 — k > 2 runs
+//! a Potts grid just above its critical coupling and writes a
+//! `-k{k}`-suffixed record), `--kernel` (single kernel, default tiled).
 //!
 //! `--mode validate` runs the statistical exactness gates (ISSUE 5) on a
 //! fixed subset of the validation matrix — ground-truth forward draws,
@@ -535,12 +539,18 @@ fn parse_usize(name: &str, default: usize) -> usize {
 /// same kernel, same lane count. The tracked `speedup` metric is the
 /// acceptance number (target ≥ 5×); both absolute sweep rates ride along
 /// so "interactive rates at 10⁶ variables" stays a diffable claim rather
-/// than a ratio that could be met by slowing the baseline.
+/// than a ratio that could be met by slowing the baseline. `--k` (default
+/// 2) selects the variable cardinality: `k > 2` sweeps the Potts sibling
+/// of the same power-law edge set through the per-state thinned path and
+/// writes a `-k{k}`-suffixed record so cardinalities stay diffable side
+/// by side.
 fn bench_minibatch() {
     let vars = parse_usize("mb-vars", 1_000_000);
     let edges = parse_usize("mb-edges", 8 * vars);
     let threshold = parse_usize("mb-threshold", MinibatchPolicy::default().degree_threshold);
     let stride = parse_usize("mb-stride", 16);
+    let k = parse_usize("k", 2);
+    assert!((2..=8).contains(&k), "--k wants 2..=8, got {k}");
     let kernel = match parse_arg("kernel") {
         None => KernelKind::default(),
         Some(a) => KernelKind::parse(&a).unwrap_or_else(|| {
@@ -557,11 +567,11 @@ fn bench_minibatch() {
 
     let mut report = Report::new("throughput-minibatch");
     println!(
-        "minibatch mode: building power-law graph ({vars} vars, {edges} edges, \
+        "minibatch mode: building power-law graph ({vars} vars, {edges} edges, k={k}, \
          zipf(1.8) endpoints, degree-scaled couplings)..."
     );
     let t0 = Instant::now();
-    let g = workloads::power_law_graph(vars, edges, 1.8, 0.8, 0xBEEF);
+    let g = workloads::power_law_graph_k(vars, edges, 1.8, 0.8, k, 0xBEEF);
     let build_s = t0.elapsed().as_secs_f64();
     let hub_degree = g.degree(0);
     println!("graph built in {build_s:.1}s, hub degree {hub_degree}");
@@ -588,9 +598,17 @@ fn bench_minibatch() {
     let mb_s = sweep_once(&mut mb);
 
     let speedup = exact_s / mb_s;
+    // k > 2 gets its own record name so the binary acceptance row's
+    // PR-over-PR diff is never polluted by a cardinality sweep
+    let record = if k == 2 {
+        "minibatch-vs-exact".to_string()
+    } else {
+        format!("minibatch-vs-exact-k{k}")
+    };
     report.push(
-        Record::new("minibatch-vs-exact")
+        Record::new(record)
             .param("workload", "power-law")
+            .param("k", k)
             .param("vars", vars)
             .param("edges", edges)
             .param("hub_degree", hub_degree)
@@ -634,19 +652,28 @@ fn parse_f64(name: &str, default: f64) -> f64 {
     })
 }
 
-/// `--mode blocked`: an above-critical Ising grid with mid-run churn,
-/// flat exact PD sweeps vs `SweepPolicy::Blocked` on the same graph,
-/// kernel, seed, and lane count. The tracked `speedup` metric is
-/// **ESS/s** — mixing per wall second, not sweeps per second: blocked
-/// sweeps are *slower* per sweep (joint tree draws cost more than flat
-/// site visits) and win only if each sweep buys disproportionately more
+/// `--mode blocked`: an above-critical grid with mid-run churn, flat
+/// exact PD sweeps vs `SweepPolicy::Blocked` on the same graph, kernel,
+/// seed, and lane count. The tracked `speedup` metric is **ESS/s** —
+/// mixing per wall second, not sweeps per second: blocked sweeps are
+/// *slower* per sweep (joint tree draws cost more than flat site
+/// visits) and win only if each sweep buys disproportionately more
 /// effective samples. Target ≥ 1.5× on the default 16×16 β=0.5 grid.
 /// Both runs cross the same churn ops at the same sweep indices, so the
 /// adaptive re-planning path (not just a frozen plan) is on the clock.
+///
+/// `--k` (default 2) swaps the Ising grid for a K-state Potts grid with
+/// Potts churn factors; the default β then scales to 1.1·ln(1+√k) —
+/// just above the Potts critical coupling, where blocking pays. Records
+/// for k > 2 get a `-k{k}` name suffix so the binary acceptance row's
+/// PR-over-PR diff stays clean.
 fn bench_blocked() {
     let rows = parse_usize("blk-rows", 16);
     let cols = parse_usize("blk-cols", 16);
-    let beta = parse_f64("blk-beta", 0.5);
+    let k = parse_usize("k", 2);
+    assert!((2..=8).contains(&k), "--k wants 2..=8, got {k}");
+    let default_beta = if k == 2 { 0.5 } else { 1.1 * (1.0 + (k as f64).sqrt()).ln() };
+    let beta = parse_f64("blk-beta", default_beta);
     let cap = parse_usize("blk-cap", BlockPolicy::default().cap);
     let epoch = parse_usize("blk-epoch", BlockPolicy::default().epoch);
     let sweeps = parse_usize("blk-sweeps", 4096);
@@ -659,16 +686,23 @@ fn bench_blocked() {
     };
     let lanes = 64usize;
     let mut report = Report::new("throughput-blocked");
+    let critical = if k == 2 { 0.4407 } else { (1.0 + (k as f64).sqrt()).ln() };
     println!(
-        "blocked mode: {rows}x{cols} grid at beta={beta} (critical 0.4407), \
+        "blocked mode: {rows}x{cols} k={k} grid at beta={beta:.4} (critical {critical:.4}), \
          {sweeps} timed sweeps x {lanes} lanes, churn at 1/2 and 3/4..."
     );
 
     // one timed run: warmup, then `sweeps` sweeps tracing mean lane
-    // magnetization, with lockstep churn ops at fixed sweep indices;
-    // returns (ess, wall seconds, plan summary)
+    // magnetization (k = 2) or the state-0 occupation fraction (k > 2;
+    // ESS is invariant under that affine relabeling), with lockstep
+    // churn ops at fixed sweep indices; returns (ess, wall seconds,
+    // plan summary)
     let run = |sweep: SweepPolicy| -> (f64, f64, (usize, usize, usize)) {
-        let mut g = workloads::ising_grid(rows, cols, beta, 0.05);
+        let mut g = if k == 2 {
+            workloads::ising_grid(rows, cols, beta, 0.05)
+        } else {
+            workloads::potts_grid(rows, cols, k, beta)
+        };
         let n = g.num_vars();
         let mut eng = LanePdSampler::with_config(
             &g,
@@ -686,7 +720,12 @@ fn bench_blocked() {
                 // couple opposite corners: long-range edges blocks can't
                 // absorb, forcing a re-plan under load
                 for (a, b) in [(0usize, n - 1), (cols - 1, n - cols)] {
-                    let id = g.add_factor(PairFactor::ising(a, b, beta));
+                    let f = if k == 2 {
+                        PairFactor::ising(a, b, beta)
+                    } else {
+                        PairFactor::potts(a, b, beta)
+                    };
+                    let id = g.add_factor(f);
                     eng.add_factor(id, g.factor(id).unwrap());
                     added.push(id);
                 }
@@ -698,7 +737,11 @@ fn bench_blocked() {
                 }
             }
             eng.sweep();
-            let ones: u64 = eng.state_words().iter().map(|w| w.count_ones() as u64).sum();
+            let ones: u64 = if k == 2 {
+                eng.state_words().iter().map(|w| w.count_ones() as u64).sum()
+            } else {
+                (0..n).map(|v| u64::from(eng.popcount_state(v, 0))).sum()
+            };
             trace.push(ones as f64 / denom);
         }
         let elapsed = t0.elapsed().as_secs_f64();
@@ -711,11 +754,18 @@ fn bench_blocked() {
     let flat_rate = flat_ess / flat_s;
     let blk_rate = blk_ess / blk_s;
     let speedup = blk_rate / flat_rate;
+    let record = if k == 2 {
+        "blocked-vs-flat-pd".to_string()
+    } else {
+        format!("blocked-vs-flat-pd-k{k}")
+    };
+    let workload = if k == 2 { "ising-grid-churn" } else { "potts-grid-churn" };
     report.push(
-        Record::new("blocked-vs-flat-pd")
-            .param("workload", "ising-grid-churn")
+        Record::new(record)
+            .param("workload", workload)
             .param("rows", rows)
             .param("cols", cols)
+            .param("k", k)
             .param("beta", format!("{beta}"))
             .param("kernel", kernel.name())
             .param("lanes", lanes)
@@ -736,7 +786,7 @@ fn bench_blocked() {
             .metric("speedup", speedup),
     );
     println!(
-        "blocked ({}) on {rows}x{cols} beta={beta}: flat {flat_rate:.1} ESS/s \
+        "blocked ({}) on {rows}x{cols} k={k} beta={beta:.4}: flat {flat_rate:.1} ESS/s \
          ({:.0} sweeps/s), blocked {blk_rate:.1} ESS/s ({:.0} sweeps/s) \
          -> {speedup:.2}x ESS/s (target >= 1.5x; {blocks} blocks / \
          {blocked_vars} vars / {tree_slots} tree slots at finish)",

@@ -1,16 +1,28 @@
-//! End-to-end driver: binary image denoising through ALL THREE LAYERS.
+//! End-to-end driver: binary image denoising through ALL THREE LAYERS,
+//! plus K-state label segmentation through the native engine under every
+//! sweep policy.
 //!
 //!     make artifacts && cargo run --release --example image_denoise
 //!
-//! Pipeline: synthetic 50×50 image → flip noise → posterior Ising MRF →
-//! Theorem-2 dualization → dense operands → **AOT-compiled JAX model whose
-//! x-update is the Pallas kernel, executed from Rust via PJRT** → pooled
-//! marginals → thresholding → pixel accuracy. A native-sampler run of the
-//! same posterior cross-checks the XLA path (both must land on the same
-//! marginals up to Monte-Carlo noise). Results are recorded in
-//! EXPERIMENTS.md §E2E.
+//! Binary pipeline: synthetic 50×50 image → flip noise → posterior Ising
+//! MRF → Theorem-2 dualization → dense operands → **AOT-compiled JAX
+//! model whose x-update is the Pallas kernel, executed from Rust via
+//! PJRT** → pooled marginals → thresholding → pixel accuracy. A
+//! native-sampler run of the same posterior cross-checks the XLA path
+//! (both must land on the same marginals up to Monte-Carlo noise).
+//!
+//! K-state pipeline: synthetic 4-label image → symmetric channel noise →
+//! clamped segmentation MRF (observation sites held as evidence) →
+//! native lane engine under Exact, Minibatch, AND Blocked sweeps →
+//! posterior argmax → label accuracy. All three policies target the same
+//! clamped conditional law, so their accuracies must agree.
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
 
 use pdgibbs::bench_support::denoise_e2e;
+use pdgibbs::duality::{BlockPolicy, MinibatchPolicy};
+use pdgibbs::engine::{EngineConfig, KernelKind, LanePdSampler, SweepPolicy};
+use pdgibbs::workloads;
 
 fn main() {
     let artifacts = std::env::args()
@@ -26,6 +38,7 @@ fn main() {
             );
             let native = denoise_e2e(&artifacts, 0.12, 0.35, 40, 0, true, true).unwrap();
             report("native", &native);
+            kstate_segmentation();
             return;
         }
     };
@@ -40,6 +53,8 @@ fn main() {
     println!("\nbackend agreement: |Δaccuracy| = {gap:.4}");
     assert!(gap < 0.02, "XLA and native backends disagree");
     assert!(xla.denoised_accuracy > xla.noisy_accuracy + 0.03);
+
+    kstate_segmentation();
     println!("image_denoise OK");
 }
 
@@ -52,4 +67,89 @@ fn report(name: &str, r: &pdgibbs::bench_support::DenoiseResult) {
         r.seconds,
         r.sweeps as f64 / r.seconds
     );
+}
+
+/// K-state segmentation: the same posterior-denoising task at k = 4,
+/// sampled under every sweep policy the engine serves. Observations are
+/// clamped evidence sites, so this also drives the cardinality ×
+/// evidence × policy composition end to end.
+fn kstate_segmentation() {
+    let (rows, cols, k, rho, coupling) = (24usize, 24usize, 4usize, 0.2, 0.6);
+    let clean = workloads::synthetic_labels(rows, cols, k);
+    let noisy = workloads::noisy_labels(&clean, k, rho, 11);
+    let (g, evidence) = workloads::segmentation_mrf(rows, cols, k, coupling, rho, &noisy);
+    let noisy_acc = workloads::label_accuracy(&clean, &noisy);
+    println!("\n== K-state segmentation (k = {k}, {rows}x{cols}, channel noise {rho}) ==");
+    println!("{}", workloads::render_labels(&noisy, rows, cols));
+
+    // interior pixels have degree 5 (4 grid edges + the channel), so a
+    // threshold-4 minibatch policy actually subsamples them
+    let policies: [(&str, SweepPolicy); 3] = [
+        ("exact", SweepPolicy::Exact),
+        (
+            "minibatch",
+            SweepPolicy::Minibatch(MinibatchPolicy {
+                degree_threshold: 4,
+                ..MinibatchPolicy::default()
+            }),
+        ),
+        ("blocked", SweepPolicy::Blocked(BlockPolicy { cap: 6, epoch: 16 })),
+    ];
+    let n = rows * cols;
+    let (burn, measure) = (150usize, 250usize);
+    let mut accs = Vec::new();
+    for (name, sweep) in policies {
+        let mut eng = LanePdSampler::with_config(
+            &g,
+            EngineConfig { lanes: 128, seed: 0x5E6, kernel: KernelKind::default(), sweep },
+        );
+        for &(site, lbl) in &evidence {
+            eng.clamp(site, lbl).unwrap();
+        }
+        for _ in 0..burn {
+            eng.sweep();
+        }
+        let mut counts = vec![0u64; n * k];
+        for _ in 0..measure {
+            eng.sweep();
+            for v in 0..n {
+                for s in 0..k {
+                    counts[v * k + s] += u64::from(eng.popcount_state(v, s as u8));
+                }
+            }
+        }
+        let map: Vec<u8> = (0..n)
+            .map(|v| {
+                (0..k)
+                    .max_by_key(|&s| counts[v * k + s])
+                    .unwrap() as u8
+            })
+            .collect();
+        let acc = workloads::label_accuracy(&clean, &map);
+        let extra = match eng.sweep_policy() {
+            SweepPolicy::Minibatch(_) => {
+                let planned = (0..n).filter(|&v| eng.model().mb_plan(v).is_some()).count();
+                format!(" | {planned} pixel sites minibatched")
+            }
+            SweepPolicy::Blocked(_) => {
+                let (blocks, vars, _) = eng.block_summary();
+                format!(" | {blocks} blocks over {vars} sites")
+            }
+            _ => String::new(),
+        };
+        println!("[segmentation/{name}] accuracy {noisy_acc:.4} -> {acc:.4}{extra}");
+        assert!(
+            acc > noisy_acc + 0.02,
+            "{name}: posterior argmax must beat the noisy observation"
+        );
+        accs.push(acc);
+    }
+    // same clamped conditional law, three trajectories: accuracies agree
+    for w in accs.windows(2) {
+        assert!(
+            (w[0] - w[1]).abs() < 0.05,
+            "policies disagree on the segmentation posterior: {accs:?}"
+        );
+    }
+    println!("kstate segmentation OK");
 }

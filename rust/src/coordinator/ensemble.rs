@@ -51,11 +51,12 @@ impl PdEnsemble {
         sweep: SweepPolicy,
     ) -> Self {
         Self::try_with_policy(graph, chains, seed, sweep)
-            .expect("unsupported policy × cardinality combination")
+            .expect("degenerate sweep-policy knobs")
     }
 
     /// Fallible [`PdEnsemble::with_policy`]: surfaces the engine's
-    /// policy × K rejection instead of panicking.
+    /// degenerate-knob rejection ([`EngineError::InvalidPolicy`])
+    /// instead of panicking.
     pub fn try_with_policy(
         graph: &FactorGraph,
         chains: usize,
@@ -91,10 +92,11 @@ impl PdEnsemble {
         Self::try_from_model_config(model, cfg).expect("unsupported engine configuration")
     }
 
-    /// Fallible construction: rejects policy × cardinality combinations
-    /// the engine does not support (e.g. minibatched K-state sweeps)
-    /// instead of panicking — the multi-tenant serving path must turn
-    /// these into error replies, not dead shard threads.
+    /// Fallible construction: every sweep policy hosts every cardinality
+    /// `2 ≤ k ≤ 8` (and clamping), but degenerate policy knobs are
+    /// rejected ([`EngineError::InvalidPolicy`]) instead of panicking —
+    /// the multi-tenant serving path must turn these into error
+    /// replies, not dead shard threads.
     pub fn try_from_model_config(
         model: DualModel,
         cfg: EngineConfig,
@@ -530,16 +532,26 @@ mod tests {
     }
 
     #[test]
-    fn unsupported_policy_is_an_error_not_a_panic() {
-        use crate::duality::MinibatchPolicy;
+    fn invalid_policy_is_an_error_not_a_panic() {
+        use crate::duality::{BlockPolicy, MinibatchPolicy};
         let mut g = FactorGraph::new_k(3, 3);
         g.add_factor(PairFactor::potts(0, 1, 0.3));
+        // degenerate knobs: a typed error, never a panic
         let r = PdEnsemble::try_with_policy(
             &g,
             4,
             7,
-            SweepPolicy::Minibatch(MinibatchPolicy::default()),
+            SweepPolicy::Blocked(BlockPolicy { cap: 1, epoch: 16 }),
         );
-        assert!(r.is_err(), "minibatched K-state sweeps must be rejected");
+        assert!(r.is_err(), "cap=1 blocking must be rejected");
+        // formerly rejected: every policy now hosts K-state models
+        for sweep in [
+            SweepPolicy::Minibatch(MinibatchPolicy::default()),
+            SweepPolicy::Blocked(BlockPolicy::default()),
+        ] {
+            let e = PdEnsemble::try_with_policy(&g, 4, 7, sweep)
+                .unwrap_or_else(|err| panic!("{sweep} × k=3 must build: {err}"));
+            assert_eq!(e.k(), 3);
+        }
     }
 }

@@ -764,13 +764,14 @@ mod tests {
         assert_eq!(m[1], 1.0, "site 0 pinned to state 2");
         client.unclamp(7, 0).unwrap();
         assert_eq!(client.stats(7).unwrap().clamped, 0);
-        // unsupported policy × K: error reply, shard stays alive
+        // degenerate policy knobs: error reply, shard stays alive
         let mut g2 = FactorGraph::new_k(3, 3);
         g2.add_factor(PairFactor::potts(0, 1, 0.3));
         let bad = TenantConfig {
-            sweep: crate::engine::SweepPolicy::Minibatch(
-                crate::duality::MinibatchPolicy::default(),
-            ),
+            sweep: crate::engine::SweepPolicy::Blocked(crate::duality::BlockPolicy {
+                cap: 1,
+                epoch: 16,
+            }),
             ..tcfg(8, 4)
         };
         let err = client.create_tenant(8, g2.clone(), bad).unwrap_err();
@@ -778,9 +779,17 @@ mod tests {
             err.to_string().contains("create rejected"),
             "clean rejection, got: {err}"
         );
-        // the id is reusable after a rejected create
-        client.create_tenant(8, g2, tcfg(8, 4)).unwrap();
-        assert_eq!(client.stats(8).unwrap().k, 3);
+        // the id is reusable after a rejected create — and the formerly
+        // rejected minibatch × K-state combination now hosts cleanly
+        let mb = TenantConfig {
+            sweep: crate::engine::SweepPolicy::Minibatch(
+                crate::duality::MinibatchPolicy::default(),
+            ),
+            ..tcfg(8, 4)
+        };
+        client.create_tenant(8, g2, mb.clone()).unwrap();
+        let s = client.stats(8).unwrap();
+        assert_eq!((s.k, s.policy), (3, mb.sweep));
         coord.shutdown();
     }
 

@@ -232,9 +232,9 @@ pub(super) fn shard_worker(
                     ))
                 } else {
                     let view = metrics.scoped(format!("tenant{tenant}"));
-                    // fallible: an unsupported policy × cardinality combo
-                    // (e.g. minibatch × K-state) must come back as an
-                    // error reply, not a dead shard thread
+                    // fallible: degenerate sweep-policy knobs must come
+                    // back as an error reply, not a dead shard thread —
+                    // the refused id stays reusable
                     match Tenant::try_new(graph, &tcfg, pool.clone(), view) {
                         Ok(t) => {
                             tenants.insert(tenant, t);

@@ -119,11 +119,12 @@ impl Tenant {
         metrics: MetricsView,
     ) -> Self {
         Self::try_new(graph, config, pool, metrics)
-            .expect("unsupported policy × cardinality combination")
+            .expect("degenerate sweep-policy knobs")
     }
 
-    /// Fallible [`Tenant::new`]: an unsupported policy × cardinality
-    /// combination (e.g. minibatched sweeps on a K-state model) is an
+    /// Fallible [`Tenant::new`]: every sweep policy hosts every
+    /// cardinality `2 ≤ k ≤ 8` and clamping, so what remains fallible
+    /// is degenerate policy knobs ([`EngineError::InvalidPolicy`]) — an
     /// error the serving edge reports to the client, never a panic on
     /// the shard thread other tenants share.
     pub fn try_new(
@@ -489,31 +490,48 @@ mod tests {
     }
 
     #[test]
-    fn kstate_tenant_builds_and_minibatch_kstate_is_rejected() {
-        use crate::duality::MinibatchPolicy;
+    fn kstate_tenant_builds_under_every_policy_with_clamping() {
+        use crate::duality::{BlockPolicy, MinibatchPolicy};
         use crate::graph::PairFactor;
         let mut g = FactorGraph::new_k(4, 3);
         for v in 0..3 {
             g.add_factor(PairFactor::potts(v, v + 1, 0.5));
         }
         let registry = Metrics::new();
-        let cfg = TenantConfig { chains: 4, seed: 7, ..TenantConfig::default() };
-        let mut t = Tenant::try_new(g.clone(), &cfg, None, registry.scoped("t"))
-            .expect("exact K-state tenants are supported");
-        let stats = t.stats(&DispatchPolicy::default(), None);
-        assert_eq!((stats.k, stats.clamped), (3, 0));
-        t.clamp(0, 2).unwrap();
-        t.sweep(50);
-        let m = t.marginals();
-        assert_eq!(m.len(), 4 * 2, "flattened n·(k−1) marginals");
-        assert_eq!(m[1], 1.0, "evidence state 2 at site 0");
+        let base = TenantConfig { chains: 4, seed: 7, ..TenantConfig::default() };
+        for (i, sweep) in [
+            SweepPolicy::Exact,
+            SweepPolicy::Minibatch(MinibatchPolicy {
+                degree_threshold: 1,
+                ..MinibatchPolicy::default()
+            }),
+            SweepPolicy::Blocked(BlockPolicy { cap: 4, epoch: 8 }),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let cfg = TenantConfig { sweep, ..base.clone() };
+            let mut t =
+                Tenant::try_new(g.clone(), &cfg, None, registry.scoped(&format!("t{i}")))
+                    .unwrap_or_else(|e| panic!("{sweep} × k=3 tenant must build: {e}"));
+            let stats = t.stats(&DispatchPolicy::default(), None);
+            assert_eq!((stats.k, stats.clamped, stats.policy), (3, 0, sweep));
+            t.clamp(0, 2).unwrap();
+            t.sweep(50);
+            let m = t.marginals();
+            assert_eq!(m.len(), 4 * 2, "flattened n·(k−1) marginals");
+            assert_eq!(m[1], 1.0, "{sweep}: evidence state 2 at site 0");
+            let stats = t.stats(&DispatchPolicy::default(), None);
+            assert_eq!(stats.clamped, 1, "{sweep}: clamp must surface in stats");
+        }
+        // degenerate knobs stay a clean error, never a shard panic
         let cfg = TenantConfig {
-            sweep: SweepPolicy::Minibatch(MinibatchPolicy::default()),
-            ..cfg
+            sweep: SweepPolicy::Blocked(BlockPolicy { cap: 1, epoch: 8 }),
+            ..base.clone()
         };
         assert!(
-            Tenant::try_new(g, &cfg, None, registry.scoped("t2")).is_err(),
-            "minibatched K-state tenants must be a clean error"
+            Tenant::try_new(g, &cfg, None, registry.scoped("bad")).is_err(),
+            "cap=1 blocking must be a clean error"
         );
     }
 

@@ -166,13 +166,23 @@ impl BlockPlanner {
     /// slots are skipped via the model's endpoint table).
     ///
     /// Deterministic: a pure function of `(model topology, stats,
-    /// policy)`, with candidate ordering canonical under slot renaming
-    /// (see module docs). Kruskal-style greedy with a component-size
-    /// cap: an edge joins two components only when both are distinct
-    /// and the merged block stays within `policy.cap` variables.
-    pub fn plan(model: &DualModel, stats: &[f64], policy: BlockPolicy) -> BlockPlan {
+    /// policy, clamped)`, with candidate ordering canonical under slot
+    /// renaming (see module docs). Kruskal-style greedy with a
+    /// component-size cap: an edge joins two components only when both
+    /// are distinct and the merged block stays within `policy.cap`
+    /// variables. Clamped sites never enter a block — evidence is a
+    /// fixed boundary condition, so a joint tree draw over it would
+    /// waste FFBS work (and its agreement EWMAs are neutral-reset by
+    /// the engine anyway); an empty `clamped` slice means no evidence.
+    pub fn plan(
+        model: &DualModel,
+        stats: &[f64],
+        policy: BlockPolicy,
+        clamped: &[bool],
+    ) -> BlockPlan {
         let n = model.num_vars();
         let cap = policy.cap.max(2);
+        let is_clamped = |v: usize| clamped.get(v).copied().unwrap_or(false);
         // (strength, min endpoint, max endpoint, slot) — strength is
         // finite by construction, so the f64 comparison is total here
         let mut cand: Vec<(f64, u32, u32, u32)> = Vec::new();
@@ -180,7 +190,7 @@ impl BlockPlanner {
             let Some((v1, v2)) = model.slot_endpoints(slot) else {
                 continue;
             };
-            if v1 == v2 {
+            if v1 == v2 || is_clamped(v1 as usize) || is_clamped(v2 as usize) {
                 continue;
             }
             let m = stats.get(slot).copied().unwrap_or(0.5);
@@ -290,6 +300,24 @@ pub(crate) fn edge_table(model: &DualModel, slot: u32, child: u32) -> [f64; 4] {
     ]
 }
 
+/// The marginalized K-state tree-edge log-potential for `slot`. Under
+/// the Potts convention the slot carries one indicator dual per state
+/// (`θ_s` fires on `x_c = s ∧ x_p = s`), so summing all k of them out
+/// leaves `E(x_c, x_p) = Σ_s softplus(q + β₁·1[x_c = s] + β₂·1[x_p = s])`
+/// — which collapses to two values: `E_eq` when the endpoints agree
+/// (one state sees both betas, the other `k − 1` see neither) and
+/// `E_ne` when they differ (each endpoint's state sees its own beta).
+/// Both are symmetric in `(β₁, β₂)`, so unlike the binary
+/// [`edge_table`] no child orientation is needed. Returned as
+/// `(E_eq, E_ne)`; lane-independent, computed once per block draw.
+pub(crate) fn edge_table_k(model: &DualModel, slot: u32, k: usize) -> (f64, f64) {
+    let e = model.entry(slot as usize).expect("tree slot must be live");
+    let eq = softplus(e.q + e.beta1 + e.beta2) + (k - 1) as f64 * softplus(e.q);
+    let ne =
+        softplus(e.q + e.beta1) + softplus(e.q + e.beta2) + (k - 2) as f64 * softplus(e.q);
+    (eq, ne)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -309,7 +337,7 @@ mod tests {
     fn neutral_stats_produce_no_blocks() {
         let g = workloads::ising_grid(3, 3, 0.5, 0.0);
         let m = model(&g);
-        let plan = BlockPlanner::plan(&m, &flat_stats(&m, 0.5), BlockPolicy::default());
+        let plan = BlockPlanner::plan(&m, &flat_stats(&m, 0.5), BlockPolicy::default(), &[]);
         assert_eq!(plan.num_blocks(), 0);
         assert_eq!(plan.tree_slots, 0);
         assert_eq!(plan.units.len(), m.num_vars());
@@ -324,7 +352,7 @@ mod tests {
         let m = model(&g);
         for cap in [2usize, 4, 9] {
             let policy = BlockPolicy { cap, epoch: 16 };
-            let plan = BlockPlanner::plan(&m, &flat_stats(&m, 0.95), policy);
+            let plan = BlockPlanner::plan(&m, &flat_stats(&m, 0.95), policy, &[]);
             assert!(plan.num_blocks() >= 1, "cap {cap}: no blocks grown");
             let mut seen = vec![false; m.num_vars()];
             for u in &plan.units {
@@ -349,7 +377,7 @@ mod tests {
         // uncapped-by-size (cap = n): strong stats on a connected grid
         // grow one spanning block
         let plan =
-            BlockPlanner::plan(&m, &flat_stats(&m, 0.95), BlockPolicy { cap: 9, epoch: 16 });
+            BlockPlanner::plan(&m, &flat_stats(&m, 0.95), BlockPolicy { cap: 9, epoch: 16 }, &[]);
         assert_eq!(plan.blocked_vars(), 9);
         assert_eq!(plan.tree_slots, 8);
     }
@@ -359,7 +387,7 @@ mod tests {
         let g = workloads::ising_grid(3, 3, 0.5, 0.0);
         let m = model(&g);
         let plan =
-            BlockPlanner::plan(&m, &flat_stats(&m, 0.05), BlockPolicy { cap: 9, epoch: 1 });
+            BlockPlanner::plan(&m, &flat_stats(&m, 0.05), BlockPolicy { cap: 9, epoch: 1 }, &[]);
         for blk in &plan.blocks {
             assert_eq!(blk.nodes[0].parent, u32::MAX);
             assert_eq!(blk.root(), blk.nodes.iter().map(|n| n.v).min().unwrap());
@@ -397,8 +425,8 @@ mod tests {
                 .collect()
         };
         let policy = BlockPolicy { cap: 3, epoch: 16 };
-        let p1 = BlockPlanner::plan(&m1, &by_endpoints(&m1), policy);
-        let p2 = BlockPlanner::plan(&m2, &by_endpoints(&m2), policy);
+        let p1 = BlockPlanner::plan(&m1, &by_endpoints(&m1), policy, &[]);
+        let p2 = BlockPlanner::plan(&m2, &by_endpoints(&m2), policy, &[]);
         assert_eq!(p1.canonical(), p2.canonical());
         assert!(p1.num_blocks() >= 1);
     }
@@ -410,7 +438,7 @@ mod tests {
         let mut g = FactorGraph::new(2);
         g.add_factor(PairFactor::ising(0, 1, -1.0));
         let m = model(&g);
-        let plan = BlockPlanner::plan(&m, &[0.03], BlockPolicy::default());
+        let plan = BlockPlanner::plan(&m, &[0.03], BlockPolicy::default(), &[]);
         assert_eq!(plan.num_blocks(), 1);
         assert_eq!(plan.blocked_vars(), 2);
     }
@@ -423,12 +451,12 @@ mod tests {
         m.remove(victim).unwrap();
         let mut stats = flat_stats(&m, 0.9);
         stats[victim] = 0.9; // stale stat on a dead slot must be ignored
-        let plan = BlockPlanner::plan(&m, &stats, BlockPolicy::default());
+        let plan = BlockPlanner::plan(&m, &stats, BlockPolicy::default(), &[]);
         for blk in &plan.blocks {
             assert!(!blk.is_tree_slot(victim as u32));
         }
         // weak: strength below the floor
-        let weak = BlockPlanner::plan(&m, &flat_stats(&m, 0.51), BlockPolicy::default());
+        let weak = BlockPlanner::plan(&m, &flat_stats(&m, 0.51), BlockPolicy::default(), &[]);
         assert_eq!(weak.num_blocks(), 0);
     }
 
@@ -450,6 +478,53 @@ mod tests {
             let (xc, xp) = ((idx >> 1) as f64, (idx & 1) as f64);
             let z = e.q + e.beta1 * xc + e.beta2 * xp;
             assert!((t - (1.0 + z.exp()).ln()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn clamped_sites_are_excluded_from_blocks() {
+        let g = workloads::ising_grid(3, 3, 0.5, 0.0);
+        let m = model(&g);
+        // center clamped: no block may contain var 4, but the border
+        // ring can still form blocks
+        let mut clamped = vec![false; 9];
+        clamped[4] = true;
+        let plan = BlockPlanner::plan(&m, &flat_stats(&m, 0.95), BlockPolicy::default(), &clamped);
+        assert!(plan.num_blocks() >= 1, "border must still block");
+        for blk in &plan.blocks {
+            assert!(blk.nodes.iter().all(|n| n.v != 4), "clamped site entered a block");
+        }
+        // every site clamped: no blocks at all
+        let none = BlockPlanner::plan(&m, &flat_stats(&m, 0.95), BlockPolicy::default(), &[true; 9]);
+        assert_eq!(none.num_blocks(), 0);
+        assert_eq!(none.units.len(), 9);
+    }
+
+    #[test]
+    fn edge_table_k_matches_the_explicit_marginalization() {
+        let mut g = FactorGraph::new_k(2, 3);
+        g.add_factor(PairFactor::potts(0, 1, 0.7));
+        let m = model(&g);
+        let e = m.entry(0).unwrap();
+        for k in [3usize, 5, 8] {
+            let (eq, ne) = edge_table_k(&m, 0, k);
+            // explicit Σ_s softplus(q + β₁·1[xc=s] + β₂·1[xp=s])
+            let explicit = |xc: usize, xp: usize| -> f64 {
+                (0..k)
+                    .map(|s| {
+                        let z = e.q
+                            + if xc == s { e.beta1 } else { 0.0 }
+                            + if xp == s { e.beta2 } else { 0.0 };
+                        softplus(z)
+                    })
+                    .sum()
+            };
+            assert!((eq - explicit(0, 0)).abs() < 1e-12, "k={k} E_eq");
+            assert!((ne - explicit(0, 1)).abs() < 1e-12, "k={k} E_ne");
+            // symmetry: any agreeing pair gives E_eq, any differing E_ne
+            assert!((explicit(2, 2) - eq).abs() < 1e-12);
+            assert!((explicit(2, 1) - ne).abs() < 1e-12);
+            assert!((explicit(1, 2) - ne).abs() < 1e-12);
         }
     }
 

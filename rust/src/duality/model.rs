@@ -367,12 +367,11 @@ impl DualModel {
 
     /// Install (or clear, with `None`) the minibatch policy and rebuild
     /// every site's subsampling plan against it. O(vars + incidence).
+    /// Cardinality-agnostic: the plan geometry (alias tables, rates,
+    /// acceptance constants) depends only on the incidence `|β|` mass,
+    /// so one plan serves the binary and the per-state K > 2 thinning
+    /// paths alike.
     pub fn set_minibatch(&mut self, policy: Option<MinibatchPolicy>) {
-        assert!(
-            self.k == 2 || policy.is_none(),
-            "minibatch sweeps are not supported for k={} models",
-            self.k
-        );
         self.mb = policy;
         self.mb_plans.clear();
         self.mb_saved = 0;
@@ -1148,12 +1147,25 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "minibatch sweeps are not supported")]
-    fn potts_model_rejects_minibatch() {
-        let mut g = FactorGraph::new_k(2, 3);
-        g.add_factor(PairFactor::potts(0, 1, 0.5));
+    fn potts_model_accepts_minibatch_plans() {
+        // K > 2 models build the same alias plans as binary ones: the
+        // plan geometry is a function of |β| mass only
+        let mut g = FactorGraph::new_k(6, 3);
+        for v in 1..6 {
+            g.add_factor(PairFactor::potts(0, v, if v % 2 == 0 { 0.4 } else { -0.3 }));
+        }
         let mut m = DualModel::from_graph(&g);
-        m.set_minibatch(Some(MinibatchPolicy::default()));
+        m.set_minibatch(Some(MinibatchPolicy {
+            degree_threshold: 3,
+            lambda_scale: 0.5,
+            lambda_min: 1.0,
+            theta_stride: 2,
+        }));
+        let plan = m.mb_plan(0).expect("hub exceeds the degree threshold");
+        assert_eq!(plan.len(), 5);
+        assert!((plan.l1() - (0.4 * 2.0 + 0.3 * 3.0)).abs() < 1e-12);
+        assert!(m.mb_plan(1).is_none(), "leaves stay exact");
+        assert!(m.minibatch_sweep_cost(2) < m.sweep_cost());
     }
 
     #[test]

@@ -22,10 +22,13 @@
 //! per-`(sweep, site)` RNG stream is simply never consumed, so no other
 //! site's draws shift), while the θ half-step keeps reading the clamped
 //! bits — so neighbors' conditionals see the evidence and the chain
-//! samples the conditional joint. Clamping requires
-//! [`SweepPolicy::Exact`] ([`EngineError::ClampUnsupported`] otherwise);
-//! K > 2 models likewise reject minibatch/blocked policies at
-//! construction ([`EngineError::UnsupportedPolicy`]).
+//! samples the conditional joint. Clamping composes with every sweep
+//! policy: minibatched sites skip their thinning pass entirely when
+//! clamped (the dispatch skip precedes the plan lookup), and under a
+//! blocked policy a clamp/unclamp is a semantic mutation — incident
+//! agreement EWMAs neutral-reset and the block plan rebuilds eagerly on
+//! the next sweep, with clamped sites excluded from planner candidates
+//! so evidence never sits inside a joint tree draw.
 //!
 //! One sweep is the usual two half-steps, but vectorized over lanes:
 //!
@@ -181,26 +184,63 @@ impl fmt::Display for SweepPolicy {
     }
 }
 
-/// Engine construction / clamping errors — every unsupported
-/// policy × cardinality combination is an explicit, typed rejection
-/// instead of a silently wrong chain.
+/// Knob validation shared by the fallible constructors: `Some(reason)`
+/// when the policy's knobs define a degenerate chain. The wire parser
+/// already blocks these forms, so this guards the programmatic API —
+/// [`MinibatchPolicy`]'s λ knobs in particular never cross the wire.
+fn validate_policy(policy: SweepPolicy) -> Option<&'static str> {
+    match policy {
+        SweepPolicy::Exact => None,
+        SweepPolicy::Minibatch(p) => {
+            if p.theta_stride == 0 {
+                Some("theta_stride must be >= 1 (0 would never refresh any slot)")
+            } else if !(p.lambda_min > 0.0) || !p.lambda_min.is_finite() {
+                Some("lambda_min must be a positive finite float (the λ floor keeps κ > 0)")
+            } else if !(p.lambda_scale >= 0.0) || !p.lambda_scale.is_finite() {
+                Some("lambda_scale must be a non-negative finite float")
+            } else {
+                None
+            }
+        }
+        SweepPolicy::Blocked(p) => {
+            if p.cap < 2 {
+                Some("cap must be >= 2 (a 1-variable block cannot block anything)")
+            } else if p.epoch == 0 {
+                Some("epoch must be >= 1 (0 would never re-plan)")
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// Engine construction / clamping errors — every invalid request is an
+/// explicit, typed rejection instead of a silently wrong chain. Every
+/// sweep policy now supports every cardinality `2 ≤ k ≤ 8` and clamping
+/// (the former policy × K and policy × clamp rejections are gone), so
+/// what remains fallible is degenerate policy knobs and out-of-range
+/// targets.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum EngineError {
-    /// The sweep policy does not support this variable cardinality
-    /// (minibatch/blocked site updates are binary-only).
-    UnsupportedPolicy {
+    /// A sweep policy with degenerate knobs (zero/non-finite λ floor,
+    /// negative λ scale, zero θ stride, blocking cap below 2, zero
+    /// epoch): the chain such knobs define is not a valid Gibbs kernel,
+    /// rejected at construction so serving paths return error replies
+    /// instead of hosting a silently wrong tenant.
+    InvalidPolicy {
         /// The rejected policy.
         policy: SweepPolicy,
-        /// The model's states-per-variable.
-        k: usize,
+        /// Which knob is degenerate and why.
+        reason: &'static str,
     },
-    /// Clamping is only defined on the exact sweep policy (minibatch
-    /// thinning and joint block draws would bypass the clamp mask).
-    ClampUnsupported {
-        /// The engine's configured policy.
-        policy: SweepPolicy,
+    /// Clamp/unclamp site index out of range (unknown site).
+    SiteOutOfRange {
+        /// Requested site.
+        v: usize,
+        /// Number of variables.
+        n: usize,
     },
-    /// Clamp target out of range (unknown site or state ≥ k).
+    /// Clamp evidence state out of range (`state ≥ k`).
     ClampOutOfRange {
         /// Requested site.
         v: usize,
@@ -216,15 +256,12 @@ pub enum EngineError {
 impl fmt::Display for EngineError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match *self {
-            Self::UnsupportedPolicy { policy, k } => write!(
-                f,
-                "sweep policy `{policy}` does not support k={k} models \
-                 (only `exact` samples K-state sites)"
-            ),
-            Self::ClampUnsupported { policy } => write!(
-                f,
-                "clamping requires the `exact` sweep policy, engine uses `{policy}`"
-            ),
+            Self::InvalidPolicy { policy, reason } => {
+                write!(f, "invalid sweep policy `{policy}`: {reason}")
+            }
+            Self::SiteOutOfRange { v, n } => {
+                write!(f, "site {v} out of range (model has {n} variables)")
+            }
             Self::ClampOutOfRange { v, n, state, k } => write!(
                 f,
                 "clamp target out of range: site {v} (of {n}) state {state} (of {k})"
@@ -280,8 +317,9 @@ pub struct LanePdSampler {
     kernel: KernelKind,
     x: Vec<u64>,
     theta: Vec<u64>,
-    /// Evidence mask: clamped sites skip their draw (module docs). Only
-    /// ever contains `true` under [`SweepPolicy::Exact`].
+    /// Evidence mask: clamped sites skip their draw (module docs) under
+    /// every sweep policy — minibatch plans are bypassed by the dispatch
+    /// skip and the block planner excludes clamped sites.
     clamped: Vec<bool>,
     /// Number of `true` entries in `clamped` (serving stats).
     clamp_count: usize,
@@ -366,27 +404,27 @@ impl LanePdSampler {
     }
 
     /// Wrap an existing dual model with explicit [`EngineConfig`] knobs.
-    /// Panics on unsupported policy × cardinality combinations — use
+    /// Panics on degenerate policy knobs — use
     /// [`LanePdSampler::try_from_model_config`] to get a typed error.
     pub fn from_model_config(model: DualModel, cfg: EngineConfig) -> Self {
         Self::try_from_model_config(model, cfg).unwrap_or_else(|e| panic!("{e}"))
     }
 
-    /// Fallible [`LanePdSampler::from_model_config`]: K > 2 models only
-    /// sweep under [`SweepPolicy::Exact`] (the minibatch thinning bits
-    /// and joint tree draws are binary constructions), rejected here
-    /// with [`EngineError::UnsupportedPolicy`] *before* the model's own
-    /// minibatch assertion can fire.
+    /// Fallible [`LanePdSampler::from_model_config`]: every sweep policy
+    /// hosts every cardinality `2 ≤ k ≤ 8`, but degenerate policy knobs
+    /// (which would define a chain that is not a valid Gibbs kernel) are
+    /// rejected here with [`EngineError::InvalidPolicy`] so serving
+    /// paths can turn them into error replies instead of dead shards.
     pub fn try_from_model_config(
         mut model: DualModel,
         cfg: EngineConfig,
     ) -> Result<Self, EngineError> {
         assert!(cfg.lanes >= 1, "at least one lane");
         let k = model.k();
-        if k > 2 && cfg.sweep != SweepPolicy::Exact {
-            return Err(EngineError::UnsupportedPolicy {
+        if let Some(reason) = validate_policy(cfg.sweep) {
+            return Err(EngineError::InvalidPolicy {
                 policy: cfg.sweep,
-                k,
+                reason,
             });
         }
         model.set_minibatch(cfg.sweep.minibatch());
@@ -718,17 +756,20 @@ impl LanePdSampler {
     /// now and its draw is skipped on every subsequent sweep, while the
     /// θ half-step keeps reading it — neighbors' conditionals see the
     /// evidence (module docs). Idempotent; re-clamping to a different
-    /// state just moves the evidence. Requires [`SweepPolicy::Exact`].
+    /// state just moves the evidence. Composes with every sweep policy:
+    /// minibatched plans are simply never consumed for a clamped site,
+    /// and under a blocked policy the clamp is a semantic mutation —
+    /// incident agreement EWMAs neutral-reset and the plan rebuilds
+    /// eagerly on the next sweep (clamped sites leave the candidate set).
     pub fn clamp(&mut self, v: usize, state: u8) -> Result<(), EngineError> {
-        if self.policy != SweepPolicy::Exact {
-            return Err(EngineError::ClampUnsupported {
-                policy: self.policy,
-            });
-        }
         let (n, k) = (self.num_vars(), self.k());
-        if v >= n || state as usize >= k {
+        if v >= n {
+            return Err(EngineError::SiteOutOfRange { v, n });
+        }
+        if state as usize >= k {
             return Err(EngineError::ClampOutOfRange { v, n, state, k });
         }
+        let moved = !self.clamped[v] || self.lane_value(v, 0) != state;
         // write the evidence into the live lanes of every plane (ghost
         // bits of the tail word stay zero)
         for p in 0..self.x_planes {
@@ -742,21 +783,53 @@ impl LanePdSampler {
             self.clamped[v] = true;
             self.clamp_count += 1;
         }
+        if moved {
+            self.note_evidence_mutation(v);
+        }
         Ok(())
     }
 
     /// Release a clamp; the site resumes sampling from its current
-    /// (evidence) value on the next sweep. No-op if not clamped.
+    /// (evidence) value on the next sweep. No-op if not clamped. Like
+    /// [`LanePdSampler::clamp`], a release is a semantic mutation under
+    /// a blocked policy: EWMAs reset and the plan rebuilds eagerly.
     pub fn unclamp(&mut self, v: usize) -> Result<(), EngineError> {
-        let (n, k) = (self.num_vars(), self.k());
+        let n = self.num_vars();
         if v >= n {
-            return Err(EngineError::ClampOutOfRange { v, n, state: 0, k });
+            return Err(EngineError::SiteOutOfRange { v, n });
         }
         if self.clamped[v] {
             self.clamped[v] = false;
             self.clamp_count -= 1;
+            self.note_evidence_mutation(v);
         }
         Ok(())
+    }
+
+    /// Clamp/unclamp changed the conditional law around `v`. Under a
+    /// blocked policy that invalidates everything the planner learned
+    /// near the evidence: the incident slots' agreement EWMAs reflect
+    /// the *old* law (a clamped endpoint drags agreement toward a
+    /// constant), so they neutral-reset to 0.5, and the plan is marked
+    /// stale so [`LanePdSampler::sweep`] rebuilds it eagerly *before*
+    /// the next x half-step — a stale plan could otherwise joint-draw a
+    /// freshly clamped site.
+    fn note_evidence_mutation(&mut self, v: usize) {
+        if self.policy.blocked().is_none() {
+            return;
+        }
+        let (slots, _, overlay) = self.model.incidence_csr(v);
+        let incident: Vec<u32> = slots
+            .iter()
+            .copied()
+            .chain(overlay.iter().map(|&(s, _)| s))
+            .collect();
+        for slot in incident {
+            if let Some(m) = self.edge_stats.get_mut(slot as usize) {
+                *m = 0.5;
+            }
+        }
+        self.plan_stale = true;
     }
 
     /// Whether site `v` is currently clamped.
@@ -854,7 +927,7 @@ impl LanePdSampler {
             return;
         }
         self.edge_stats.resize(self.model.factor_slots(), 0.5);
-        let plan = BlockPlanner::plan(&self.model, &self.edge_stats, p);
+        let plan = BlockPlanner::plan(&self.model, &self.edge_stats, p, &self.clamped);
         if self.block_plan.as_ref() != Some(&plan) {
             self.chunk_plan_for = 0; // unit weights changed: re-chunk
         }
@@ -864,8 +937,12 @@ impl LanePdSampler {
 
     /// Fold the post-sweep state into the per-slot agreement EWMAs:
     /// `m += γ(a − m)` with `a` = fraction of live lanes where the
-    /// slot's endpoints agree. O(live slots × words) — one popcount per
-    /// slot word, far below the sweep's own incidence traversal.
+    /// slot's endpoints agree *in state* — an AND over the `⌈log₂k⌉`
+    /// bit-planes of per-plane XNOR words, popcounted. At `k = 2` the
+    /// single plane makes this arithmetic-identical to the historical
+    /// binary XNOR, so binary blocked trajectories are unchanged.
+    /// O(live slots × words × planes) — far below the sweep's own
+    /// incidence traversal.
     fn update_edge_stats(&mut self) {
         /// EWMA gain: ~16-sweep memory, matching the default re-plan
         /// epoch so one epoch of observations dominates the stat.
@@ -880,10 +957,13 @@ impl LanePdSampler {
             let mut agree = 0u32;
             for w in 0..self.words {
                 let k = lanes_in_word(self.lanes, w);
-                // blocked ⟹ binary (plane 0 is the whole value)
-                let x1 = self.x[v1 * self.row_words() + w];
-                let x2 = self.x[v2 * self.row_words() + w];
-                agree += (!(x1 ^ x2) & lane_mask(k)).count_ones();
+                let mut eq = lane_mask(k);
+                for p in 0..self.x_planes {
+                    let x1 = self.x[(v1 * self.x_planes + p) * self.words + w];
+                    let x2 = self.x[(v2 * self.x_planes + p) * self.words + w];
+                    eq &= !(x1 ^ x2);
+                }
+                agree += eq.count_ones();
             }
             let m = &mut self.edge_stats[slot];
             *m += GAMMA * (agree as f64 / lanes - *m);
@@ -1210,6 +1290,9 @@ impl XCtx<'_> {
     fn site_k<K: LaneKernel>(&self, v: usize, out: &mut [u64], buf: &mut SweepBuf) {
         let k_states = self.model.k();
         let mut rng = self.base.split2(self.sweep, (v as u64) << 1);
+        if let Some(plan) = self.model.mb_plan(v) {
+            return self.site_minibatch_k(plan, v, out, buf, &mut rng);
+        }
         let (slots, betas, overlay) = self.model.incidence_csr(v);
         if buf.cat.len() < k_states {
             buf.cat.resize_with(k_states, F64Lanes::default);
@@ -1343,6 +1426,76 @@ impl XCtx<'_> {
         }
     }
 
+    /// Minibatched resample of a K-state `x_v`: the binary Poisson /
+    /// MIN-Gibbs correction run once per state plane. Per lane, each
+    /// state `s` runs its own thinning pass against the pre-update
+    /// indicator `1[x_v = s]` (the per-`(factor, state)` auxiliary
+    /// counts factorize across states, so the passes are independent),
+    /// with entry `j`'s energy bit read from θ's state-`s` plane:
+    /// `t_{j,s} = θ_{j,s} ∧ 1[x_v = s]`, complemented for `β_j < 0`.
+    /// Each kept event with the θ-bit set shifts `score(s)` by
+    /// `sign(β_j)·c`, and the corrected scores finish through the same
+    /// categorical bit-plane draw as the exact K-state path. At `k = 2`
+    /// the engine stays on [`Self::site_minibatch`] (one plane, base
+    /// field folded in), so binary trajectories are untouched.
+    ///
+    /// RNG order: per word, per lane, state planes in ascending order —
+    /// events, picks, and thinning uniforms for plane `s` before plane
+    /// `s + 1` — then the word's categorical draw consumes exactly
+    /// `lanes_in_word` uniforms. All of it is kernel-independent scalar
+    /// code, preserving cross-kernel bit-identity.
+    fn site_minibatch_k(
+        &self,
+        plan: &MbPlan,
+        v: usize,
+        out: &mut [u64],
+        buf: &mut SweepBuf,
+        rng: &mut Pcg64,
+    ) {
+        let _ = v; // K > 2 sites have no base field to look up
+        let k_states = self.model.k();
+        let (rate, kappa, c) = (plan.rate(), plan.kappa(), plan.c());
+        if buf.cat.len() < k_states {
+            buf.cat.resize_with(k_states, F64Lanes::default);
+        }
+        let SweepBuf { cat, draw, .. } = buf;
+        let cat = &mut cat[..k_states];
+        let mut planes_out = [0u64; crate::graph::MAX_STATES];
+        for w in 0..self.words {
+            let kl = lanes_in_word(self.lanes, w);
+            for sc in cat.iter_mut() {
+                sc.0.fill(0.0);
+            }
+            for l in 0..kl {
+                // pre-update state of this lane from the packed planes
+                let mut s_old = 0usize;
+                for p in 0..self.x_planes {
+                    s_old |= (((out[p * self.words + w] >> l) & 1) as usize) << p;
+                }
+                for (s, sc) in cat.iter_mut().enumerate() {
+                    let z_old = (s_old == s) as u64;
+                    let events = rng.poisson(rate);
+                    let mut net = 0i64;
+                    for _ in 0..events {
+                        let (slot, neg) = plan.pick(rng);
+                        let row = (slot as usize * self.t_planes + s) * self.words;
+                        let tb = (self.theta[row + w] >> l) & 1;
+                        let t = if neg { 1 - (tb & z_old) } else { tb & z_old };
+                        // uniform consumed only when the bit test fails
+                        if (t == 1 || rng.next_f64() < kappa) && tb == 1 {
+                            net += if neg { -1 } else { 1 };
+                        }
+                    }
+                    sc.0[l] += c * net as f64;
+                }
+            }
+            draw_categorical_planes(rng, cat, kl, draw, &mut planes_out[..self.x_planes]);
+            for (p, &word) in planes_out[..self.x_planes].iter().enumerate() {
+                out[p * self.words + w] = word;
+            }
+        }
+    }
+
     /// Joint draw of one tree block: per lane, forward-filter /
     /// backward-sample over the block's spanning tree with the tree
     /// duals marginalized out (softplus edge potentials — see
@@ -1364,6 +1517,20 @@ impl XCtx<'_> {
     /// have exclusive access to every block member's `words`-sized row
     /// (units partition the variables; see the sweep paths).
     unsafe fn block_site(&self, block: &Block, x: *mut u64, scratch: &mut BlockScratch) {
+        if self.x_planes == 1 {
+            self.block_site_bin(block, x, scratch);
+        } else {
+            self.block_site_k(block, x, scratch);
+        }
+    }
+
+    /// Binary body of [`Self::block_site`]: two-state FFBS over the
+    /// orientation-sensitive four-entry edge tables.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`Self::block_site`].
+    unsafe fn block_site_bin(&self, block: &Block, x: *mut u64, scratch: &mut BlockScratch) {
         let nn = block.nodes.len();
         let mut rng = self.base.split2(self.sweep, (block.root() as u64) << 1);
         // lane-independent per-edge tables, once per block per sweep
@@ -1435,6 +1602,138 @@ impl XCtx<'_> {
         }
         b
     }
+
+    /// K-state body of [`Self::block_site`]: FFBS with k-vector upward
+    /// messages. The marginalized K-state tree-edge potential is Potts
+    /// by symmetry — it takes one value when child and parent states
+    /// agree and one when they differ (see
+    /// [`crate::duality::blocking::edge_table_k`]) — so upward messages
+    /// fold each child's k local scores through a two-value table:
+    /// `msg[ps] = logsumexp_cs(local[cs] + E(cs, ps))`. Root and
+    /// downward draws use the scalar categorical draw
+    /// ([`draw_cat_scalar`], the per-lane mirror of the exact path's
+    /// plane draw), consuming exactly one uniform per node per lane —
+    /// the same stream count as the binary body, keyed by the block's
+    /// root. Non-tree factors enter through the per-state dual field
+    /// ([`Self::dual_field_k`]).
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`Self::block_site`]: exclusive access to every
+    /// block member's `x_planes · words` row.
+    unsafe fn block_site_k(&self, block: &Block, x: *mut u64, scratch: &mut BlockScratch) {
+        let nn = block.nodes.len();
+        let k = self.model.k();
+        let mut rng = self.base.split2(self.sweep, (block.root() as u64) << 1);
+        // lane-independent per-edge (E_eq, E_ne) tables, once per sweep
+        scratch.etab_k.clear();
+        for node in &block.nodes[1..] {
+            scratch
+                .etab_k
+                .push(blocking::edge_table_k(self.model, node.slot, k));
+        }
+        scratch.local_k.resize(nn * k, 0.0);
+        scratch.states.resize(nn, 0);
+        let mut scores = [0.0f64; crate::graph::MAX_STATES];
+        for lane in 0..self.lanes {
+            let (w, bit) = (lane / 64, lane % 64);
+            for (i, node) in block.nodes.iter().enumerate() {
+                self.dual_field_k(block, node.v, w, bit, &mut scratch.local_k[i * k..(i + 1) * k]);
+            }
+            // leaves→root: msg[ps] = logsumexp_cs(local[cs] + E(cs, ps))
+            for i in (1..nn).rev() {
+                let (eq, ne) = scratch.etab_k[i - 1];
+                for ps in 0..k {
+                    let mut m = f64::NEG_INFINITY;
+                    for cs in 0..k {
+                        let e = if cs == ps { eq } else { ne };
+                        m = logaddexp(m, scratch.local_k[i * k + cs] + e);
+                    }
+                    scores[ps] = m;
+                }
+                let p = block.nodes[i].parent as usize;
+                for (ps, &m) in scores[..k].iter().enumerate() {
+                    scratch.local_k[p * k + ps] += m;
+                }
+            }
+            // root→leaves: exact conditional categorical draws
+            scores[..k].copy_from_slice(&scratch.local_k[..k]);
+            scratch.states[0] = draw_cat_scalar(&mut rng, &scores[..k]);
+            for i in 1..nn {
+                let ps = scratch.states[block.nodes[i].parent as usize] as usize;
+                let (eq, ne) = scratch.etab_k[i - 1];
+                for (cs, sc) in scores[..k].iter_mut().enumerate() {
+                    *sc = scratch.local_k[i * k + cs] + if cs == ps { eq } else { ne };
+                }
+                scratch.states[i] = draw_cat_scalar(&mut rng, &scores[..k]);
+            }
+            let mask = 1u64 << bit;
+            for (i, node) in block.nodes.iter().enumerate() {
+                let s = scratch.states[i] as usize;
+                for p in 0..self.x_planes {
+                    // caller guarantees exclusive access to this row
+                    let word =
+                        &mut *x.add((node.v as usize * self.x_planes + p) * self.words + w);
+                    if (s >> p) & 1 == 1 {
+                        *word |= mask;
+                    } else {
+                        *word &= !mask;
+                    }
+                }
+            }
+        }
+    }
+
+    /// One lane's per-state dual scores at a K-state `v` with the
+    /// block's tree slots skipped: `score[s] = Σ_{incident ∉ tree}
+    /// θ_{slot,s}·β`, the [`Self::site_k`] fold restricted to one lane
+    /// (K > 2 sites have no base field).
+    fn dual_field_k(&self, block: &Block, v: u32, w: usize, bit: usize, scores: &mut [f64]) {
+        scores.fill(0.0);
+        let (slots, betas, overlay) = self.model.incidence_csr(v as usize);
+        for (&slot, &beta) in slots
+            .iter()
+            .zip(betas.iter())
+            .chain(overlay.iter().map(|(s, b)| (s, b)))
+        {
+            if block.is_tree_slot(slot) {
+                continue;
+            }
+            let row = slot as usize * self.t_planes * self.words;
+            for (s, sc) in scores.iter_mut().enumerate() {
+                if (self.theta[row + s * self.words + w] >> bit) & 1 == 1 {
+                    *sc += beta;
+                }
+            }
+        }
+    }
+}
+
+/// One categorical draw from unnormalized log-scores, consuming exactly
+/// one uniform — the scalar mirror of
+/// [`super::kernels::draw_categorical_planes`]'s per-lane body
+/// (max-subtract, exp, inverse-CDF scan, last state on fp underflow),
+/// used by the blocked K-state tree draws.
+fn draw_cat_scalar(rng: &mut Pcg64, scores: &[f64]) -> u8 {
+    let mut zmax = scores[0];
+    for &z in &scores[1..] {
+        zmax = zmax.max(z);
+    }
+    let mut total = 0.0;
+    let mut weights = [0.0f64; crate::graph::MAX_STATES];
+    for (wt, &z) in weights.iter_mut().zip(scores) {
+        *wt = (z - zmax).exp();
+        total += *wt;
+    }
+    let target = rng.next_f64() * total;
+    let mut cum = 0.0;
+    for (s, &wt) in weights[..scores.len()].iter().enumerate() {
+        cum += wt;
+        if target < cum {
+            return s as u8;
+        }
+    }
+    (scores.len() - 1) as u8
 }
 
 /// Reused scratch of the blocked joint draw: per-edge softplus tables
@@ -1445,6 +1744,12 @@ struct BlockScratch {
     etab: Vec<[f64; 4]>,
     local: Vec<[f64; 2]>,
     bits: Vec<u8>,
+    /// K-state per-edge `(E_eq, E_ne)` Potts tables.
+    etab_k: Vec<(f64, f64)>,
+    /// K-state upward messages, flat `nodes × k`.
+    local_k: Vec<f64>,
+    /// K-state drawn states of the current lane.
+    states: Vec<u8>,
 }
 
 /// Overflow-safe `ln(e^a + e^b)`.
@@ -2331,52 +2636,275 @@ mod tests {
         assert!(moved, "released site never resampled");
     }
 
-    #[test]
-    fn kstate_and_clamp_reject_unsupported_policies() {
-        let g3 = potts_ring(3, 5);
-        for sweep in [
-            SweepPolicy::Minibatch(MinibatchPolicy::default()),
-            SweepPolicy::Blocked(BlockPolicy::default()),
-        ] {
-            let cfg = EngineConfig {
-                lanes: 4,
-                seed: 3,
-                kernel: KernelKind::default(),
-                sweep,
-            };
-            assert_eq!(
-                LanePdSampler::try_with_config(&g3, cfg).err(),
-                Some(EngineError::UnsupportedPolicy { policy: sweep, k: 3 }),
-                "k=3 × {sweep} must be rejected at construction"
-            );
-            // binary models still build under the policy, but clamping
-            // on them is a typed error, not a silently wrong chain
-            let g2 = mb_star();
-            let mut eng = LanePdSampler::try_with_config(&g2, cfg).unwrap();
-            assert_eq!(
-                eng.clamp(0, 1),
-                Err(EngineError::ClampUnsupported { policy: sweep })
-            );
+    /// Hub-heavy K-state star: the hub's degree exceeds the minibatch
+    /// test policies' thresholds, both β signs exercised (no unary —
+    /// K > 2 forbids it).
+    fn potts_star(k: usize, n: usize) -> FactorGraph {
+        let mut g = FactorGraph::new_k(n, k);
+        for leaf in 1..n {
+            let beta = if leaf % 2 == 0 { -0.35 } else { 0.3 };
+            g.add_factor(PairFactor::potts(0, leaf, beta));
         }
-        // exact-policy range errors carry the full context
-        let mut eng = LanePdSampler::new(&g3, 4, 5);
-        assert_eq!(
-            eng.clamp(9, 0),
-            Err(EngineError::ClampOutOfRange { v: 9, n: 5, state: 0, k: 3 })
+        g
+    }
+
+    #[test]
+    fn minibatch_kstate_matches_exact_enumeration() {
+        // the per-state Poisson/MIN-Gibbs correction is a different
+        // trajectory but the same stationary K-state law
+        let g = potts_star(3, 8);
+        let want = enumerate_k(&g, &[]);
+        for stride in [1usize, 2] {
+            let mut eng = LanePdSampler::with_config(&g, mb_cfg(17, stride));
+            assert!(eng.model().mb_plan(0).is_some(), "hub must be planned");
+            assert!(eng.model().mb_plan(1).is_none(), "leaves stay exact");
+            let got = lane_marginals_k(&mut eng, 800 * stride, 4000 * stride);
+            for v in 0..g.num_vars() {
+                for s in 0..3 {
+                    assert!(
+                        (got[v][s] - want[v][s]).abs() < 0.02,
+                        "stride={stride} v={v} s={s}: {} vs exact {}",
+                        got[v][s],
+                        want[v][s]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_kstate_matches_exact_enumeration() {
+        // strongly-coupled k=3 grid: blocks must engage and the joint
+        // FFBS draws must leave the Potts law invariant
+        let g = workloads::potts_grid(2, 3, 3, 0.8);
+        let want = enumerate_k(&g, &[]);
+        let mut eng = LanePdSampler::with_config(&g, blk_cfg(43, 4, 8));
+        let got = lane_marginals_k(&mut eng, 600, 3000);
+        assert!(eng.block_summary().0 >= 1, "plan must engage on β=0.8");
+        for v in 0..g.num_vars() {
+            for s in 0..3 {
+                assert!(
+                    (got[v][s] - want[v][s]).abs() < 0.015,
+                    "v={v} s={s}: {} vs exact {}",
+                    got[v][s],
+                    want[v][s]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn clamped_sites_condition_neighbors_under_minibatch_and_blocked() {
+        // clamping composes with both lifted policies, binary and k=3:
+        // the free sites' stationary law must match the exact
+        // conditional and the evidence must never drift
+        let cases: Vec<(FactorGraph, EngineConfig, Vec<(usize, u8)>, usize, usize)> = vec![
+            (mb_star(), mb_cfg(37, 1), vec![(4, 1)], 800, 4000),
+            (potts_star(3, 8), mb_cfg(39, 1), vec![(1, 2)], 800, 4000),
+            (
+                workloads::ising_grid(3, 3, 0.6, 0.1),
+                blk_cfg(41, 4, 8),
+                vec![(4, 1)],
+                600,
+                3000,
+            ),
+            (workloads::potts_grid(2, 3, 3, 0.8), blk_cfg(43, 4, 8), vec![(0, 1)], 600, 3000),
+        ];
+        for (g, cfg, evidence, burn, sweeps) in cases {
+            let want = enumerate_k(&g, &evidence);
+            let mut eng = LanePdSampler::with_config(&g, cfg);
+            for &(v, s) in &evidence {
+                eng.clamp(v, s).unwrap();
+            }
+            let got = lane_marginals_k(&mut eng, burn, sweeps);
+            for &(v, s) in &evidence {
+                assert_eq!(eng.popcount_state(v, s) as usize, eng.lanes());
+                assert_eq!(got[v][s as usize], 1.0, "evidence site {v} drifted");
+            }
+            if let Some(plan) = eng.block_plan() {
+                for blk in &plan.blocks {
+                    for node in &blk.nodes {
+                        assert!(
+                            !eng.is_clamped(node.v as usize),
+                            "clamped site {} entered a block",
+                            node.v
+                        );
+                    }
+                }
+            }
+            for v in 0..g.num_vars() {
+                for s in 0..g.k() {
+                    assert!(
+                        (got[v][s] - want[v][s]).abs() < 0.02,
+                        "k={} {:?} v={v} s={s}: {} vs conditional exact {}",
+                        g.k(),
+                        cfg_policy_name(&eng),
+                        got[v][s],
+                        want[v][s]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Short policy tag for assertion messages.
+    fn cfg_policy_name(eng: &LanePdSampler) -> &'static str {
+        match eng.sweep_policy() {
+            SweepPolicy::Exact => "exact",
+            SweepPolicy::Minibatch(_) => "minibatch",
+            SweepPolicy::Blocked(_) => "blocked",
+        }
+    }
+
+    #[test]
+    fn kstate_policy_trajectories_are_kernel_and_pool_invariant() {
+        // the new K-state minibatch / blocked draw paths are scalar code
+        // with kernel-independent RNG order — pin it, tail word included
+        let star = potts_star(3, 8);
+        let grid = workloads::potts_grid(2, 3, 3, 0.8);
+        let cases: Vec<(&FactorGraph, EngineConfig)> = vec![
+            (&star, EngineConfig { lanes: 70, ..mb_cfg(61, 2) }),
+            (&grid, EngineConfig { lanes: 70, ..blk_cfg(67, 4, 4) }),
+        ];
+        for (g, cfg) in cases {
+            let mut reference: Option<(Vec<u64>, Vec<u64>)> = None;
+            for &kernel in KernelKind::all() {
+                for pool_size in [0usize, 3] {
+                    let mut eng =
+                        LanePdSampler::with_config(g, EngineConfig { kernel, ..cfg });
+                    eng.clamp(2, 1).unwrap();
+                    if pool_size > 0 {
+                        eng = eng.with_pool(Arc::new(ThreadPool::new(pool_size)));
+                    }
+                    for _ in 0..40 {
+                        eng.sweep();
+                    }
+                    let state = (eng.state_words().to_vec(), eng.theta_words().to_vec());
+                    match &reference {
+                        None => reference = Some(state),
+                        Some(want) => assert_eq!(
+                            &state,
+                            want,
+                            "kernel {} pool {pool_size} diverged",
+                            kernel.name()
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kstate_policy_tail_lanes_stay_zero() {
+        let star = potts_star(5, 6);
+        let grid = workloads::potts_grid(2, 3, 5, 0.8);
+        let cases: Vec<(&FactorGraph, EngineConfig)> = vec![
+            (&star, EngineConfig { lanes: 5, ..mb_cfg(71, 2) }),
+            (&grid, EngineConfig { lanes: 5, ..blk_cfg(73, 4, 4) }),
+        ];
+        for (g, cfg) in cases {
+            for &kernel in KernelKind::all() {
+                let mut eng = LanePdSampler::with_config(g, EngineConfig { kernel, ..cfg });
+                for _ in 0..50 {
+                    eng.sweep();
+                }
+                for &w in eng.state_words().iter().chain(eng.theta_words()) {
+                    assert_eq!(w & !lane_mask(5), 0, "ghost lanes by {}", kernel.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clamp_mid_epoch_rebuilds_the_block_plan() {
+        // a clamp is a semantic mutation: the plan must shed the clamped
+        // site on the NEXT sweep even strictly mid-epoch, and an unclamp
+        // must make the site re-earn membership from neutral EWMAs
+        let g = workloads::ising_grid(3, 3, 0.9, 0.0);
+        let mut eng = LanePdSampler::with_config(&g, blk_cfg(59, 9, 8));
+        for _ in 0..62 {
+            eng.sweep();
+        }
+        let plan = eng.block_plan().unwrap().clone();
+        let victim = plan.blocks[0].nodes[0].v as usize;
+        eng.clamp(victim, 1).unwrap();
+        eng.sweep(); // sweeps 63, 64: strictly inside the epoch window
+        let replanned = eng.block_plan().unwrap();
+        assert!(
+            replanned.blocks.iter().all(|b| b.nodes.iter().all(|n| n.v as usize != victim)),
+            "clamped site survived re-planning inside a block"
         );
+        eng.unclamp(victim).unwrap();
+        eng.sweep();
+        assert!(
+            eng.block_plan()
+                .unwrap()
+                .blocks
+                .iter()
+                .all(|b| b.nodes.iter().all(|n| n.v as usize != victim)),
+            "released site must re-earn membership from neutral EWMAs"
+        );
+    }
+
+    #[test]
+    fn range_and_policy_errors_carry_context() {
+        let g3 = potts_ring(3, 5);
+        let mut eng = LanePdSampler::new(&g3, 4, 5);
+        // out-of-range SITE is its own variant for clamp AND unclamp —
+        // no phantom `state: 0` in the unclamp diagnostic
+        assert_eq!(eng.clamp(9, 0), Err(EngineError::SiteOutOfRange { v: 9, n: 5 }));
+        assert_eq!(eng.unclamp(9), Err(EngineError::SiteOutOfRange { v: 9, n: 5 }));
         assert_eq!(
             eng.clamp(1, 3),
             Err(EngineError::ClampOutOfRange { v: 1, n: 5, state: 3, k: 3 })
         );
-        assert!(eng.unclamp(9).is_err());
         assert_eq!(eng.clamped_count(), 0, "failed clamps must not count");
-        // error strings render the offending policy / bounds
-        let msg = EngineError::UnsupportedPolicy {
-            policy: SweepPolicy::Blocked(BlockPolicy::default()),
-            k: 3,
+        // degenerate policy knobs are typed errors at construction
+        let bad = [
+            SweepPolicy::Minibatch(MinibatchPolicy {
+                theta_stride: 0,
+                ..MinibatchPolicy::default()
+            }),
+            SweepPolicy::Minibatch(MinibatchPolicy {
+                lambda_min: 0.0,
+                ..MinibatchPolicy::default()
+            }),
+            SweepPolicy::Minibatch(MinibatchPolicy {
+                lambda_scale: -1.0,
+                ..MinibatchPolicy::default()
+            }),
+            SweepPolicy::Blocked(BlockPolicy { cap: 1, epoch: 16 }),
+            SweepPolicy::Blocked(BlockPolicy { cap: 8, epoch: 0 }),
+        ];
+        for sweep in bad {
+            let cfg = EngineConfig { lanes: 4, seed: 3, kernel: KernelKind::default(), sweep };
+            match LanePdSampler::try_with_config(&g3, cfg).err() {
+                Some(EngineError::InvalidPolicy { policy, reason }) => {
+                    assert_eq!(policy, sweep);
+                    assert!(!reason.is_empty());
+                }
+                other => panic!("{sweep} must be an InvalidPolicy error, got {other:?}"),
+            }
         }
-        .to_string();
-        assert!(msg.contains("k=3"), "{msg}");
+        // non-finite knobs reject too (not comparable by eq above)
+        let nan = SweepPolicy::Minibatch(MinibatchPolicy {
+            lambda_min: f64::NAN,
+            ..MinibatchPolicy::default()
+        });
+        assert!(matches!(
+            LanePdSampler::try_with_config(
+                &g3,
+                EngineConfig { lanes: 4, seed: 3, kernel: KernelKind::default(), sweep: nan }
+            )
+            .err(),
+            Some(EngineError::InvalidPolicy { .. })
+        ));
+        // error strings render the offending context
+        let msg = EngineError::SiteOutOfRange { v: 9, n: 5 }.to_string();
+        assert!(msg.contains("site 9") && msg.contains('5'), "{msg}");
+        let msg =
+            EngineError::ClampOutOfRange { v: 1, n: 5, state: 3, k: 3 }.to_string();
+        assert!(msg.contains("state 3"), "{msg}");
     }
 
     #[test]

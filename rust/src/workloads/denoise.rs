@@ -1,13 +1,22 @@
-//! Binary image denoising MRF — the end-to-end example workload.
+//! Image denoising MRFs — the end-to-end example workloads.
 //!
-//! Classic Geman–Geman setup: a binary image corrupted by iid flip noise;
-//! the posterior over the clean image is an Ising grid whose unary fields
-//! are the per-pixel noise likelihood ratios. This is exactly the vision
-//! workload the paper's introduction motivates, and it exercises the full
-//! stack (dualization → PD sampling via the XLA runtime → marginals →
-//! thresholding) on a real small task.
+//! Two flavors:
+//!
+//! * **Binary** (classic Geman–Geman): a binary image corrupted by iid
+//!   flip noise; the posterior over the clean image is an Ising grid
+//!   whose unary fields are the per-pixel noise likelihood ratios.
+//! * **K-state segmentation**: a label image corrupted by a symmetric
+//!   channel. K-state graphs carry no unary fields, so the observation
+//!   enters as *evidence*: each pixel gets a companion observation site
+//!   tied to it by a channel Potts factor, and the observation sites are
+//!   clamped to the noisy labels. The posterior over the pixel sites is
+//!   then the clamped conditional law — the same composition
+//!   (cardinality × evidence × any sweep policy) the engine serves.
+//!
+//! Both exercise the full stack (dualization → PD sampling → marginals →
+//! argmax) on a real small task.
 
-use crate::graph::FactorGraph;
+use crate::graph::{FactorGraph, PairFactor};
 use crate::rng::{Pcg64, RngCore};
 
 use super::ising_grid;
@@ -97,6 +106,114 @@ pub fn render(img: &[bool], rows: usize, cols: usize) -> String {
     s
 }
 
+/// A deterministic K-label test image: nested disks over a striped
+/// background, cycling through all `k` labels (so every state appears
+/// and region boundaries run both with and against the grid axes).
+pub fn synthetic_labels(rows: usize, cols: usize, k: usize) -> Vec<u8> {
+    assert!(k >= 2);
+    let (cr, cc) = (rows as f64 / 2.0, cols as f64 / 2.0);
+    let radius = rows.min(cols) as f64 / 3.0;
+    let mut img = vec![0u8; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            let dr = r as f64 - cr;
+            let dc = c as f64 - cc;
+            let d = (dr * dr + dc * dc).sqrt();
+            img[r * cols + c] = if d <= radius {
+                // concentric rings cycle through the non-zero labels
+                (1 + (d * (k - 1) as f64 / (radius + 1e-9)) as usize % (k - 1)) as u8
+            } else {
+                // diagonal background stripes cycle through ALL labels
+                ((r / 3 + c / 3) % k) as u8
+            };
+        }
+    }
+    img
+}
+
+/// Corrupt a label image with a symmetric channel: each pixel keeps its
+/// label with probability `1 − rho`, otherwise becomes one of the `k − 1`
+/// other labels uniformly.
+pub fn noisy_labels(clean: &[u8], k: usize, rho: f64, seed: u64) -> Vec<u8> {
+    assert!(k >= 2 && rho > 0.0 && rho < (k - 1) as f64 / k as f64);
+    let mut rng = Pcg64::seed(seed);
+    clean
+        .iter()
+        .map(|&lbl| {
+            if rng.bernoulli(rho) {
+                let other = (rng.next_u64() % (k as u64 - 1)) as u8;
+                if other < lbl { other } else { other + 1 }
+            } else {
+                lbl
+            }
+        })
+        .collect()
+}
+
+/// Segmentation posterior `p(x | y)` as a clamped K-state MRF.
+///
+/// Sites `0..n` are the pixels (Potts smoothness `coupling` on grid
+/// edges); sites `n..2n` are per-pixel observation sites, each tied to
+/// its pixel by a channel factor with agreement bonus
+/// `β_obs = ln((1−ρ)(k−1)/ρ)` — exactly the symmetric-channel likelihood
+/// ratio, since `p(y=x)/p(y≠x) = (1−ρ)/(ρ/(k−1))`. Returns the graph and
+/// the evidence list clamping each observation site to its noisy label;
+/// push the evidence through any engine's clamp API and the pixel-site
+/// marginals are the segmentation posterior.
+pub fn segmentation_mrf(
+    rows: usize,
+    cols: usize,
+    k: usize,
+    coupling: f64,
+    rho: f64,
+    observed: &[u8],
+) -> (FactorGraph, Vec<(usize, u8)>) {
+    let n = rows * cols;
+    assert_eq!(observed.len(), n);
+    assert!(k >= 2 && rho > 0.0 && rho < (k - 1) as f64 / k as f64);
+    assert!(observed.iter().all(|&y| (y as usize) < k));
+    let mut g = FactorGraph::new_k(2 * n, k);
+    for r in 0..rows {
+        for c in 0..cols {
+            let v = r * cols + c;
+            if c + 1 < cols {
+                g.add_factor(PairFactor::potts(v, v + 1, coupling));
+            }
+            if r + 1 < rows {
+                g.add_factor(PairFactor::potts(v, v + cols, coupling));
+            }
+        }
+    }
+    let beta_obs = ((1.0 - rho) * (k - 1) as f64 / rho).ln();
+    let mut evidence = Vec::with_capacity(n);
+    for (v, &y) in observed.iter().enumerate() {
+        g.add_factor(PairFactor::potts(v, n + v, beta_obs));
+        evidence.push((n + v, y));
+    }
+    (g, evidence)
+}
+
+/// Pixel accuracy between two label images.
+pub fn label_accuracy(a: &[u8], b: &[u8]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let same = a.iter().zip(b).filter(|(x, y)| x == y).count();
+    same as f64 / a.len() as f64
+}
+
+/// Render a label image as unicode rows, one glyph per label (visual
+/// spot-check in examples; supports the full `k ≤ 8` range).
+pub fn render_labels(img: &[u8], rows: usize, cols: usize) -> String {
+    const GLYPHS: [char; 8] = ['·', '█', '▒', '░', '▓', '○', '●', '◆'];
+    let mut s = String::with_capacity(rows * (cols + 1));
+    for r in 0..rows {
+        for c in 0..cols {
+            s.push(GLYPHS[img[r * cols + c] as usize % GLYPHS.len()]);
+        }
+        s.push('\n');
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +255,54 @@ mod tests {
     fn render_dimensions() {
         let img = synthetic_image(5, 7);
         let s = render(&img, 5, 7);
+        assert_eq!(s.lines().count(), 5);
+        assert!(s.lines().all(|l| l.chars().count() == 7));
+    }
+
+    #[test]
+    fn label_images_cover_every_state_and_channel_noise_hits_its_rate() {
+        for k in [3usize, 5, 8] {
+            let clean = synthetic_labels(24, 24, k);
+            assert_eq!(clean.len(), 576);
+            for s in 0..k as u8 {
+                assert!(clean.contains(&s), "k={k}: label {s} unused");
+            }
+            let noisy = noisy_labels(&clean, k, 0.15, 7);
+            assert!(noisy.iter().all(|&y| (y as usize) < k));
+            let acc = label_accuracy(&clean, &noisy);
+            assert!((acc - 0.85).abs() < 0.04, "k={k}: acc={acc}");
+        }
+    }
+
+    #[test]
+    fn segmentation_mrf_shape_and_channel_strength() {
+        let (rows, cols, k, rho) = (4usize, 5usize, 3usize, 0.2);
+        let y = noisy_labels(&synthetic_labels(rows, cols, k), k, rho, 3);
+        let (g, evidence) = segmentation_mrf(rows, cols, k, 0.4, rho, &y);
+        let n = rows * cols;
+        assert_eq!(g.num_vars(), 2 * n);
+        assert_eq!(g.k(), k);
+        // grid smoothness edges + one channel factor per pixel
+        assert_eq!(g.num_factors(), (rows * (cols - 1) + (rows - 1) * cols) + n);
+        // evidence clamps exactly the observation sites, to the noisy labels
+        assert_eq!(evidence.len(), n);
+        for (i, &(site, lbl)) in evidence.iter().enumerate() {
+            assert_eq!((site, lbl), (n + i, y[i]));
+        }
+        // the channel factor carries the symmetric-channel likelihood ratio
+        let beta_obs = ((1.0 - rho) * (k - 1) as f64 / rho).ln();
+        let channel = g
+            .factors()
+            .find(|(_, f)| (f.v1, f.v2) == (0, n))
+            .expect("pixel 0 channel factor")
+            .1;
+        assert!((channel.potts_beta() - beta_obs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_labels_dimensions() {
+        let img = synthetic_labels(5, 7, 4);
+        let s = render_labels(&img, 5, 7);
         assert_eq!(s.lines().count(), 5);
         assert!(s.lines().all(|l| l.chars().count() == 7));
     }

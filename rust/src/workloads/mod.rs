@@ -10,7 +10,10 @@ pub mod scenarios;
 mod tenants;
 
 pub use churn::{ChurnOp, ChurnTrace};
-pub use denoise::{accuracy, denoise_mrf, noisy_image, render, synthetic_image, DenoiseConfig};
+pub use denoise::{
+    accuracy, denoise_mrf, label_accuracy, noisy_image, noisy_labels, render, render_labels,
+    segmentation_mrf, synthetic_image, synthetic_labels, DenoiseConfig,
+};
 pub use scenarios::{Regime, Scenario};
 pub use tenants::{
     replay_trace_over_socket, run_net_load, NetLoadConfig, NetLoadReport, TenantEvent,
@@ -158,6 +161,23 @@ pub fn fully_connected_jittered(n: usize, beta: f64, jitter: f64, seed: u64) -> 
 /// [`crate::engine::SweepPolicy::Minibatch`] and
 /// `benches/throughput.rs --mode minibatch`.
 pub fn power_law_graph(n: usize, edges: usize, gamma: f64, beta0: f64, seed: u64) -> FactorGraph {
+    power_law_graph_k(n, edges, gamma, beta0, 2, seed)
+}
+
+/// K-state sibling of [`power_law_graph`]: the same zipf endpoint draw
+/// and degree-scaled mixed-sign couplings over `k`-state variables, with
+/// Potts factors for `k > 2` and the original Ising tables at `k = 2`
+/// (identical RNG consumption either way, so the edge set is
+/// seed-stable across cardinalities). This is the tenant the `--k` flag
+/// of `benches/throughput.rs --mode minibatch` sweeps.
+pub fn power_law_graph_k(
+    n: usize,
+    edges: usize,
+    gamma: f64,
+    beta0: f64,
+    k: usize,
+    seed: u64,
+) -> FactorGraph {
     assert!(n >= 2, "need two variables for a pair factor");
     let mut rng = Pcg64::seed(seed);
     // cumulative zipf(γ) mass over ranks (variable i has rank i)
@@ -187,11 +207,16 @@ pub fn power_law_graph(n: usize, edges: usize, gamma: f64, beta0: f64, seed: u64
         ends.push((v1, v2));
     }
     // pass 2: degree-scaled mixed-sign couplings bound Σ|β| per site
-    let mut g = FactorGraph::new(n);
+    let mut g = FactorGraph::new_k(n, k);
     for (v1, v2) in ends {
         let scale = deg[v1].max(deg[v2]) as f64;
         let sign = if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
-        g.add_factor(PairFactor::ising(v1, v2, sign * beta0 / scale));
+        let beta = sign * beta0 / scale;
+        if k == 2 {
+            g.add_factor(PairFactor::ising(v1, v2, beta));
+        } else {
+            g.add_factor(PairFactor::potts(v1, v2, beta));
+        }
     }
     g
 }
@@ -321,6 +346,27 @@ mod tests {
         let h = power_law_graph(2000, 8000, 1.8, 0.8, 5);
         for ((_, fa), (_, fb)) in g.factors().zip(h.factors()) {
             assert_eq!(fa, fb);
+        }
+    }
+
+    #[test]
+    fn power_law_graph_k_shares_the_edge_set_across_cardinalities() {
+        let g2 = power_law_graph(300, 900, 1.8, 0.8, 5);
+        for k in [3usize, 8] {
+            let gk = power_law_graph_k(300, 900, 1.8, 0.8, k, 5);
+            assert_eq!(gk.k(), k);
+            assert_eq!(gk.num_factors(), 900);
+            let mut l1 = vec![0.0f64; 300];
+            for ((_, f2), (_, fk)) in g2.factors().zip(gk.factors()) {
+                assert_eq!((f2.v1, f2.v2), (fk.v1, fk.v2), "edge set drifted");
+                // same signed coupling magnitude, Potts-encoded
+                assert!((fk.potts_beta() - f2.table[0][0].ln()).abs() < 1e-12);
+                l1[fk.v1] += fk.potts_beta().abs();
+                l1[fk.v2] += fk.potts_beta().abs();
+            }
+            for (v, &l) in l1.iter().enumerate() {
+                assert!(l <= 0.8 + 1e-9, "site {v}: Σ|β| = {l} exceeds β0");
+            }
         }
     }
 

@@ -323,7 +323,92 @@ pub fn zoo() -> Vec<Scenario> {
         evidence: vec![(0, 1), (7, 0)],
         tau: 8,
     });
+    // K-state × policy coverage: the minibatch lane paths register
+    // against these hub-heavy Potts stars (one per bit-plane count
+    // b ∈ {2, 3}), and the blocked lane paths against the above-critical
+    // Potts models further down. Stars stay weakly coupled (hub Σ|β|
+    // well under 1), so the chain8/hub12 tau scale carries over.
+    // potts3-hub9: 8 mixed-sign hub edges + rim edge; churn mirrors
+    // hub12-minibatch (drop a hub edge, re-add flipped, add leaf-leaf)
+    // so K-state plan invalidation runs under the same gates.
+    scenarios.push(Scenario {
+        name: "potts3-hub9-minibatch",
+        regime: Regime::Below,
+        graph: potts_star(9, 3),
+        churn: vec![
+            ChurnOp::RemoveLive { index: 0 },
+            ChurnOp::Add { v1: 0, v2: 1, beta: -0.14 },
+            ChurnOp::Add { v1: 1, v2: 3, beta: 0.10 },
+        ],
+        k: 3,
+        evidence: Vec::new(),
+        tau: 16,
+    });
+    // potts5-hub6 holds evidence on a leaf: the *conditioned* minibatch
+    // gate — corrected per-state fields must target the clamped
+    // conditional law, not the free one.
+    scenarios.push(Scenario {
+        name: "potts5-hub6-minibatch",
+        regime: Regime::Below,
+        graph: potts_star(6, 5),
+        churn: Vec::new(),
+        k: 5,
+        evidence: vec![(3, 4)],
+        tau: 16,
+    });
+    // potts8-hub5: the full 3-bit-plane budget (8 = 2³) on the smallest
+    // star whose hub (degree 4) still clears a threshold-3 plan;
+    // 8⁵ = 32768 sits exactly at the joint-tabulation cap.
+    scenarios.push(Scenario {
+        name: "potts8-hub5-minibatch",
+        regime: Regime::Below,
+        graph: potts_star(5, 8),
+        churn: Vec::new(),
+        k: 8,
+        evidence: Vec::new(),
+        tau: 16,
+    });
+    // above-critical K-state models for the blocked paths: k = 5 and
+    // k = 8 Potts critical couplings are ln(1+√5) ≈ 1.18 and
+    // ln(1+√8) ≈ 1.34; these sit above, where joint tree draws matter.
+    scenarios.push(Scenario {
+        name: "potts5-grid2x3-above",
+        regime: Regime::Above,
+        graph: crate::workloads::potts_grid(2, 3, 5, 1.3),
+        churn: Vec::new(),
+        k: 5,
+        evidence: Vec::new(),
+        tau: 120,
+    });
+    // the conditioned blocked gate: a strongly-coupled 8-state chain
+    // clamped at one end — FFBS tree draws must respect evidence both
+    // as a dropped planner candidate and as a frozen boundary site.
+    scenarios.push(Scenario {
+        name: "potts8-chain5-above",
+        regime: Regime::Above,
+        graph: crate::workloads::potts_grid(1, 5, 8, 1.5),
+        churn: Vec::new(),
+        k: 8,
+        evidence: vec![(0, 5)],
+        tau: 96,
+    });
     scenarios
+}
+
+/// An `n`-variable K-state Potts star: hub 0 with mixed-sign,
+/// varied-magnitude couplings to every leaf, plus one rim edge closing
+/// an odd cycle through the hub (so the topology is not a tree). Hub
+/// Σ|β| < 1 keeps every cardinality in the weak regime; K-state graphs
+/// carry no unary fields.
+pub fn potts_star(n: usize, k: usize) -> FactorGraph {
+    let mut g = FactorGraph::new_k(n, k);
+    for leaf in 1..n {
+        let mag = 0.10 + 0.02 * (leaf % 4) as f64;
+        let beta = if leaf % 2 == 0 { -mag } else { mag };
+        g.add_factor(PairFactor::potts(0, leaf, beta));
+    }
+    g.add_factor(PairFactor::potts(1, 2, 0.15));
+    g
 }
 
 /// The `hub12-minibatch` base model: an 11-leaf star with mixed-sign,

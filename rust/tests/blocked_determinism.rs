@@ -169,3 +169,81 @@ fn churn_batches_netting_the_same_graph_yield_the_same_canonical_plan() {
     // post-churn plan still blocks something immediately
     assert!(a.block_summary().0 >= 1);
 }
+
+#[test]
+fn clamp_mid_epoch_is_an_eager_order_invariant_plan_mutation() {
+    // Clamping evidence is a semantic mutation on par with factor churn:
+    // the very next sweep must run a fresh plan that excludes the clamped
+    // site, even strictly inside an epoch window, and the plan must not
+    // depend on whether the clamp landed before or after concurrent churn.
+    let cfg = EngineConfig {
+        lanes: 64,
+        seed: 0xC1A3,
+        kernel: KernelKind::default(),
+        sweep: blocked(3, 8),
+    };
+    let mut ga = ring6(0.9);
+    let mut gb = ring6(0.9);
+    let mut a = LanePdSampler::with_config(&ga, cfg);
+    let mut b = LanePdSampler::with_config(&gb, cfg);
+    // 45 sweeps with epoch 8 stops three short of the next boundary, so
+    // every re-plan observed below is eager, not epoch-driven
+    for _ in 0..45 {
+        a.sweep();
+        b.sweep();
+    }
+    let plan = a.block_plan().expect("warmup plan").clone();
+    assert_eq!(plan.canonical(), b.block_plan().expect("warmup plan").canonical());
+    let victim = plan.blocks[0].nodes[0].v as usize;
+    // same net mutation, opposite interleavings: clamp-then-churn vs
+    // churn-then-clamp
+    a.clamp(victim, 1).unwrap();
+    apply_ops(&mut ga, &mut a, &[(true, 0, 3)]);
+    apply_ops(&mut gb, &mut b, &[(true, 0, 3)]);
+    b.clamp(victim, 1).unwrap();
+    a.sweep(); // sweep 46: strictly mid-epoch for both engines
+    b.sweep();
+    assert_eq!(a.state_words(), b.state_words(), "interleaving changed the trajectory");
+    let pa = a.block_plan().expect("eager re-plan").canonical();
+    assert_eq!(
+        pa,
+        b.block_plan().expect("eager re-plan").canonical(),
+        "clamp/churn interleaving leaked into the plan"
+    );
+    assert!(
+        a.block_plan()
+            .unwrap()
+            .blocks
+            .iter()
+            .all(|blk| blk.nodes.iter().all(|n| n.v as usize != victim)),
+        "clamped site survived an in-epoch re-plan"
+    );
+    // releasing the evidence is the same kind of mutation: the re-plan is
+    // eager again, and the site restarts from neutral EWMAs rather than
+    // inheriting its pre-clamp agreement history
+    a.unclamp(victim).unwrap();
+    b.unclamp(victim).unwrap();
+    a.sweep();
+    b.sweep();
+    assert_eq!(
+        a.block_plan().unwrap().canonical(),
+        b.block_plan().unwrap().canonical()
+    );
+    assert!(
+        a.block_plan()
+            .unwrap()
+            .blocks
+            .iter()
+            .all(|blk| blk.nodes.iter().all(|n| n.v as usize != victim)),
+        "released site must re-earn membership from neutral EWMAs"
+    );
+    // after a couple of epoch boundaries the β=0.9 coupling pulls the
+    // released site's agreement back above threshold: the plan keeps
+    // blocking, and every var (victim included) is once again a planner
+    // candidate — sweeps stay well-defined either way
+    for _ in 0..24 {
+        a.sweep();
+    }
+    assert!(a.block_summary().0 >= 1, "plan must keep blocking after release");
+    assert_eq!(a.clamped_count(), 0);
+}

@@ -12,7 +12,7 @@
 
 use std::sync::Arc;
 
-use pdgibbs::duality::BlockPolicy;
+use pdgibbs::duality::{BlockPolicy, MinibatchPolicy};
 use pdgibbs::engine::{EngineConfig, KernelKind, LanePdSampler, SweepPolicy};
 use pdgibbs::graph::{FactorGraph, PairFactor};
 use pdgibbs::util::proptest::{check, Gen};
@@ -403,6 +403,261 @@ fn kstate_kernels_bit_identical_under_churn_and_clamping() {
     }
     compare(&engines, "before churn");
     // grow var 0 (grid degree 2) to degree 7 — past the cache cap
+    let mut added = Vec::new();
+    for v in [5usize, 7, 8, 9, 10] {
+        let id = g.add_factor(PairFactor::potts(0, v, -0.2));
+        added.push(id);
+        for eng in engines.iter_mut() {
+            eng.add_factor(id, g.factor(id).unwrap());
+        }
+    }
+    for _ in 0..10 {
+        engines.iter_mut().for_each(LanePdSampler::sweep);
+    }
+    compare(&engines, "after inserts");
+    for id in added {
+        g.remove_factor(id).unwrap();
+        for eng in engines.iter_mut() {
+            assert!(eng.remove_factor(id));
+        }
+    }
+    for _ in 0..10 {
+        engines.iter_mut().for_each(LanePdSampler::sweep);
+    }
+    compare(&engines, "after removals");
+}
+
+/// Policy-parameterized mirror of [`assert_equivalent`]: same lockstep
+/// bit-identity contract, but every engine runs under `sweep` instead of
+/// the Exact default. Used by the minibatch × K suites below.
+fn assert_equivalent_policy(
+    g: &FactorGraph,
+    lanes: usize,
+    sweeps: usize,
+    kernels: &[(KernelKind, usize)],
+    sweep_policy: SweepPolicy,
+) {
+    let mut engines: Vec<LanePdSampler> = kernels
+        .iter()
+        .map(|&(kernel, pool)| {
+            let eng = LanePdSampler::with_config(
+                g,
+                EngineConfig { lanes, seed: 0xA5A5, kernel, sweep: sweep_policy },
+            );
+            if pool > 0 {
+                eng.with_pool(Arc::new(ThreadPool::new(pool)))
+            } else {
+                eng
+            }
+        })
+        .collect();
+    for sweep in 0..sweeps {
+        for eng in engines.iter_mut() {
+            eng.sweep();
+        }
+        let (first, rest) = engines.split_first().unwrap();
+        for eng in rest {
+            assert_eq!(
+                first.state_words(),
+                eng.state_words(),
+                "x diverged at sweep {sweep}, lanes {lanes}: {} vs {}",
+                first.kernel().name(),
+                eng.kernel().name()
+            );
+            assert_eq!(
+                first.theta_words(),
+                eng.theta_words(),
+                "theta diverged at sweep {sweep}, lanes {lanes}: {} vs {}",
+                first.kernel().name(),
+                eng.kernel().name()
+            );
+        }
+    }
+}
+
+/// A minibatch policy the 9-degree hub of [`mixed_path_potts`] actually
+/// crosses: threshold 4 plans the hub, stride 2 keeps θ refreshes dense
+/// enough that thinning correctness shows up within a short run.
+fn mb4() -> SweepPolicy {
+    SweepPolicy::Minibatch(MinibatchPolicy {
+        degree_threshold: 4,
+        lambda_scale: 1.0,
+        lambda_min: 4.0,
+        theta_stride: 2,
+    })
+}
+
+#[test]
+fn minibatch_kstate_kernels_bit_identical_across_lane_counts() {
+    // per-state thinned fields feed a categorical draw: the Poisson event
+    // loop and the plane-packed writeback must mask tails identically in
+    // every kernel, for every bit-plane count b ∈ {2, 3}
+    for &k in &[3usize, 5, 8] {
+        let g = mixed_path_potts(k);
+        let probe = LanePdSampler::with_config(
+            &g,
+            EngineConfig { lanes: 1, seed: 0, kernel: KernelKind::default(), sweep: mb4() },
+        );
+        assert!(
+            probe.model().mb_plan(9).is_some(),
+            "k={k}: the hub must carry a minibatch plan"
+        );
+        for &lanes in &[1usize, 63, 65, 129] {
+            assert_equivalent_policy(&g, lanes, 10, &all_serial(), mb4());
+        }
+    }
+}
+
+#[test]
+fn minibatch_kstate_tiled_pooled_matches_scalar_serial() {
+    // kernel × pool under thinned K-state updates: pooled runs chunk
+    // per-variable bounds while the hub's Poisson/thinning stream must
+    // stay keyed by (sweep, site) alone
+    let g = mixed_path_potts(5);
+    let combos = [
+        (KernelKind::Scalar, 0usize),
+        (KernelKind::Scalar, 4),
+        (KernelKind::Tiled, 0),
+        (KernelKind::Tiled, 4),
+    ];
+    assert_equivalent_policy(&g, 65, 15, &combos, mb4());
+}
+
+#[test]
+fn minibatch_kstate_kernels_bit_identical_under_churn_and_clamping() {
+    // churn drives var 0 across the degree threshold AND the table-cache
+    // cap, so minibatch plans appear then vanish mid-run while a clamped
+    // site holds evidence — trajectories must stay equal throughout and
+    // the evidence must never move
+    let mut g = workloads::potts_grid(3, 4, 3, 0.3);
+    let cfg = |kernel| EngineConfig { lanes: 90, seed: 77, kernel, sweep: mb4() };
+    let mut engines: Vec<LanePdSampler> = KernelKind::all()
+        .iter()
+        .map(|&k| LanePdSampler::with_config(&g, cfg(k)))
+        .collect();
+    for eng in engines.iter_mut() {
+        eng.clamp(3, 2).unwrap();
+    }
+    assert!(engines[0].model().mb_plan(0).is_none(), "grid degrees sit under the threshold");
+    let compare = |engines: &[LanePdSampler], stage: &str| {
+        let (first, rest) = engines.split_first().unwrap();
+        for eng in rest {
+            assert_eq!(first.state_words(), eng.state_words(), "x diverged {stage}");
+            assert_eq!(first.theta_words(), eng.theta_words(), "θ diverged {stage}");
+        }
+        for eng in engines {
+            for lane in [0usize, 63, 64, 89] {
+                assert_eq!(eng.lane_value(3, lane), 2, "evidence moved {stage}");
+            }
+        }
+    };
+    for _ in 0..10 {
+        engines.iter_mut().for_each(LanePdSampler::sweep);
+    }
+    compare(&engines, "before churn");
+    // grow var 0 (grid degree 2) to degree 7: plan forms, cache cap crossed
+    let mut added = Vec::new();
+    for v in [5usize, 7, 8, 9, 10] {
+        let id = g.add_factor(PairFactor::potts(0, v, -0.2));
+        added.push(id);
+        for eng in engines.iter_mut() {
+            eng.add_factor(id, g.factor(id).unwrap());
+        }
+    }
+    assert!(engines[0].model().mb_plan(0).is_some(), "degree 7 must be planned");
+    for _ in 0..10 {
+        engines.iter_mut().for_each(LanePdSampler::sweep);
+    }
+    compare(&engines, "after inserts");
+    for id in added {
+        g.remove_factor(id).unwrap();
+        for eng in engines.iter_mut() {
+            assert!(eng.remove_factor(id));
+        }
+    }
+    assert!(engines[0].model().mb_plan(0).is_none(), "plan must retire with the degree");
+    for _ in 0..10 {
+        engines.iter_mut().for_each(LanePdSampler::sweep);
+    }
+    compare(&engines, "after removals");
+}
+
+#[test]
+fn blocked_kstate_kernels_bit_identical_across_lane_counts() {
+    // K-state FFBS blocks: k-vector upward messages and categorical
+    // root/downward draws replace the binary bernoulli path, but the
+    // kernel choice must stay invisible — and low chance agreement
+    // (≈ 1/k) means the agreement EWMAs engage blocks readily
+    for &k in &[3usize, 5, 8] {
+        let g = workloads::potts_grid(3, 3, k, 0.8);
+        for &lanes in &[1usize, 63, 65, 129] {
+            let blocks = assert_equivalent_blocked(&g, lanes, 20, &all_serial());
+            if lanes >= 7 {
+                assert!(blocks >= 1, "k={k} lanes {lanes}: plan never engaged");
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_kstate_tiled_pooled_matches_scalar_serial() {
+    // kernel × pool with jointly-drawn K-state tree blocks: pooled runs
+    // partition by sweep units, and every block draw consumes exactly one
+    // uniform per node per lane regardless of kernel
+    let g = workloads::potts_grid(3, 4, 5, 0.8);
+    let combos = [
+        (KernelKind::Scalar, 0usize),
+        (KernelKind::Scalar, 4),
+        (KernelKind::Tiled, 0),
+        (KernelKind::Tiled, 4),
+    ];
+    let blocks = assert_equivalent_blocked(&g, 65, 25, &combos);
+    assert!(blocks >= 1, "plan never engaged");
+}
+
+#[test]
+fn blocked_kstate_kernels_bit_identical_under_churn_and_clamping() {
+    // churn while K-state blocks are live, with evidence held: tree slots
+    // die (eager re-plan), the clamped site leaves the candidate set, and
+    // the hub crosses the table-cache cap — all kernels in lockstep
+    let mut g = workloads::potts_grid(3, 4, 3, 0.8);
+    let cfg = |kernel| EngineConfig {
+        lanes: 90,
+        seed: 77,
+        kernel,
+        sweep: SweepPolicy::Blocked(BlockPolicy { cap: 4, epoch: 4 }),
+    };
+    let mut engines: Vec<LanePdSampler> = KernelKind::all()
+        .iter()
+        .map(|&k| LanePdSampler::with_config(&g, cfg(k)))
+        .collect();
+    for eng in engines.iter_mut() {
+        eng.clamp(3, 2).unwrap();
+    }
+    let compare = |engines: &[LanePdSampler], stage: &str| {
+        let (first, rest) = engines.split_first().unwrap();
+        for eng in rest {
+            assert_eq!(first.state_words(), eng.state_words(), "x diverged {stage}");
+            assert_eq!(first.theta_words(), eng.theta_words(), "θ diverged {stage}");
+        }
+        for eng in engines {
+            for lane in [0usize, 63, 64, 89] {
+                assert_eq!(eng.lane_value(3, lane), 2, "evidence moved {stage}");
+            }
+            assert!(
+                eng.block_plan().map_or(true, |p| p
+                    .blocks
+                    .iter()
+                    .all(|b| b.nodes.iter().all(|n| n.v != 3))),
+                "clamped site entered a block {stage}"
+            );
+        }
+    };
+    for _ in 0..20 {
+        engines.iter_mut().for_each(LanePdSampler::sweep);
+    }
+    compare(&engines, "before churn");
+    assert!(engines[0].block_summary().0 >= 1, "plan must be live pre-churn");
     let mut added = Vec::new();
     for v in [5usize, 7, 8, 9, 10] {
         let id = g.add_factor(PairFactor::potts(0, v, -0.2));

@@ -381,14 +381,51 @@ fn kstate_create_clamp_and_unclamp_over_the_wire() {
     );
     assert!(wire.roundtrip("clamp 404 0 0").starts_with("err exec "));
     assert!(wire.roundtrip("unclamp 404 0").starts_with("err exec "));
-    // unsupported policy × cardinality: rejected at create, id reusable
-    assert!(
-        wire.roundtrip("create 32 8 4 7 k=4 minibatch:16:4")
-            .starts_with("err exec create rejected: "),
-        "minibatch × K>2 must be refused"
-    );
-    assert_eq!(wire.roundtrip("create 32 8 4 7 k=4"), "ok");
-    assert!(wire.roundtrip("stats 32").contains(" k=4"));
+    // formerly rejected: minibatched K-state tenants now host cleanly,
+    // stats advertising both the policy and the cardinality
+    assert_eq!(wire.roundtrip("create 32 8 4 7 k=4 minibatch:16:4"), "ok");
+    let stats = wire.roundtrip("stats 32");
+    assert!(stats.contains(" k=4"), "{stats}");
+    assert!(stats.contains(" policy=minibatch:16:4"), "{stats}");
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn every_policy_cardinality_clamp_combo_hosts_on_a_reusable_id() {
+    // regression for the create-reject-recreate lifecycle: one tenant id
+    // cycles through every policy × k × clamp combination — each create
+    // must succeed, serve evidence, and leave the id reusable after the
+    // drop; a duplicate create and a degenerate policy both refuse the
+    // id WITHOUT consuming it
+    let (mut coord, mut server) = spawn_edge(NetConfig::default(), 2, 0);
+    let mut wire = Wire::connect(&server);
+    for policy in ["minibatch:2:2", "blocked:4:8"] {
+        for k in [3usize, 5, 8] {
+            let create = format!("create 77 6 8 7 k={k} {policy}");
+            assert_eq!(wire.roundtrip(&create), "ok", "{create}");
+            // duplicate id: refused, but the hosted tenant is untouched
+            assert!(
+                wire.roundtrip(&create).starts_with("err exec "),
+                "duplicate create must be refused"
+            );
+            assert_eq!(
+                wire.roundtrip("apply 77 add 0 1 0.4 add 1 2 0.4 add 2 3 -0.3"),
+                "ok"
+            );
+            assert_eq!(wire.roundtrip(&format!("clamp 77 1 {}", k - 1)), "ok");
+            assert_eq!(wire.roundtrip("sweep 77 8"), "ok");
+            let stats = wire.roundtrip("stats 77");
+            assert!(stats.contains(&format!(" k={k}")), "{stats}");
+            assert!(stats.contains(&format!(" policy={policy}")), "{stats}");
+            assert!(stats.contains(" clamped=1"), "{stats}");
+            assert_eq!(wire.roundtrip("drop 77"), "ok dropped=true");
+        }
+    }
+    // after six host/drop cycles and six refused duplicates, the id is
+    // still fully reusable — no rejection consumed it
+    assert_eq!(wire.roundtrip("create 77 6 8 7 k=3 exact"), "ok");
+    assert!(wire.roundtrip("stats 77").contains(" policy=exact"));
     server.shutdown();
     coord.shutdown();
 }

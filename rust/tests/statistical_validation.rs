@@ -427,6 +427,122 @@ fn ensemble_and_coordinator_kstate_evidence_pass_marginal_gates() {
     }
 }
 
+// -- K-state × policy: minibatch and blocked sweeps on Potts scenarios ------
+
+/// The K-state hub stars' subsampling policy: threshold 3 plans every
+/// star hub down to the degree-4 `potts8-hub5` one, and the λ floor +
+/// θ-stride mirror the binary hub policy so the acceptance correction
+/// carries the burden per state plane.
+fn kstate_minibatch_policy() -> SweepPolicy {
+    SweepPolicy::Minibatch(MinibatchPolicy {
+        degree_threshold: 3,
+        lambda_scale: 0.25,
+        lambda_min: 1.0,
+        theta_stride: 2,
+    })
+}
+
+#[test]
+fn minibatch_kstate_lane_paths_pass_gates_across_kernels_and_pools() {
+    // the lifted rejection, gated: per-state corrected fields feeding the
+    // categorical draw must target the right (conditional) law for every
+    // bit-plane count — k ∈ {3, 5, 8} hub stars, per kernel × pool
+    // {0, 4}; potts5-hub6 holds leaf evidence, so the minibatch policy
+    // also clears a `validate_conditioned` gate
+    for name in [
+        "potts3-hub9-minibatch",
+        "potts5-hub6-minibatch",
+        "potts8-hub5-minibatch",
+    ] {
+        let mut s = scenarios::by_name(name);
+        // potts3-hub9 carries churn for the dedicated churn gate below;
+        // here every cardinality is gated statically on its base graph
+        s.churn.clear();
+        for kernel in [KernelKind::Scalar, KernelKind::Tiled] {
+            for pool_threads in [0usize, 4] {
+                let pool = (pool_threads > 0).then(|| Arc::new(ThreadPool::new(pool_threads)));
+                let mut p = LanePath::new(
+                    s.graph.clone(),
+                    EngineConfig {
+                        lanes: 64,
+                        seed: 0xB3,
+                        kernel,
+                        sweep: kstate_minibatch_policy(),
+                    },
+                    pool,
+                );
+                let m = p.engine().model();
+                assert!(m.mb_plan(0).is_some(), "{name}: the hub must sweep minibatched");
+                assert!(m.mb_plan(2).is_none(), "{name}: low-degree leaves stay exact");
+                let label = format!("{name}/{}-pool{pool_threads}", kernel.name());
+                check_kstate(&mut p, &s, 16_384, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn minibatch_kstate_lane_paths_stay_exact_through_hub_churn() {
+    // K-state plan invalidation under the gates: drop a hub edge, re-add
+    // it sign-flipped, couple two leaves — the rebuilt per-state plan
+    // must still pass against the final graph
+    let s = scenarios::by_name("potts3-hub9-minibatch");
+    for kernel in [KernelKind::Scalar, KernelKind::Tiled] {
+        let mut p = LanePath::new(
+            s.graph.clone(),
+            EngineConfig { lanes: 64, seed: 0xB4, kernel, sweep: kstate_minibatch_policy() },
+            None,
+        );
+        check_churn(&mut p, &s, 16_384);
+        assert!(
+            p.engine().model().mb_plan(0).is_some(),
+            "hub plan must survive churn (degree is unchanged)"
+        );
+    }
+}
+
+#[test]
+fn blocked_kstate_lane_paths_pass_gates_across_kernels_and_pools() {
+    // the other lifted rejection, gated: K-state FFBS tree draws
+    // (k-vector upward messages, categorical root/downward draws) must
+    // target the right (conditional) law above the critical coupling —
+    // k ∈ {3, 5, 8}, per kernel × pool {0, 4}; potts8-chain5 clamps an
+    // endpoint, so the blocked policy also clears a
+    // `validate_conditioned` gate with the evidence site dropped from
+    // the planner's candidate set
+    for (name, samples) in [
+        ("potts3-grid3x3-above", 8192),
+        ("potts5-grid2x3-above", 8192),
+        ("potts8-chain5-above", 8192),
+    ] {
+        let s = scenarios::by_name(name);
+        for kernel in [KernelKind::Scalar, KernelKind::Tiled] {
+            for pool_threads in [0usize, 4] {
+                let pool = (pool_threads > 0).then(|| Arc::new(ThreadPool::new(pool_threads)));
+                let mut p = LanePath::new(
+                    s.graph.clone(),
+                    EngineConfig { lanes: 64, seed: 0xD3, kernel, sweep: blocked_policy() },
+                    pool,
+                );
+                let label = format!("{name}/{}-pool{pool_threads}", kernel.name());
+                check_kstate(&mut p, &s, samples, &label);
+                assert!(
+                    p.engine().block_summary().0 >= 1,
+                    "{label}: the above-critical model must actually grow blocks"
+                );
+                if let Some(plan) = p.engine().block_plan() {
+                    for &(v, _) in &s.evidence {
+                        assert!(
+                            plan.blocks.iter().all(|b| b.nodes.iter().all(|n| n.v as usize != v)),
+                            "{label}: evidence site {v} entered a block"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
 // -- gate calibration and power ---------------------------------------------
 
 #[test]
